@@ -1,0 +1,85 @@
+//! Batch-graphs scenario: the paper's second motivating workload —
+//! "batch graphs computing, in which the adjacency matrices are usually
+//! integrated into a large-scale super-matrix, with only the sub-graphs
+//! being internally connected".
+//!
+//! Builds a block-diagonal super-matrix of several molecule graphs and
+//! shows that (a) naive whole-matrix mapping wastes quadratically more
+//! crossbar area as the batch grows, (b) the DP-oracle / vanilla / RL-free
+//! diagonal partitions recover the per-graph structure automatically after
+//! Cuthill-McKee, and (c) the evaluation machinery quantifies the gap.
+//!
+//! Run: `cargo run --release --example batch_graphs` (no artifacts needed)
+
+use autogmap::baselines::{self, oracle};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::{evaluate, RewardWeights, Scheme};
+
+fn main() -> anyhow::Result<()> {
+    let w = RewardWeights::new(0.8);
+    println!(
+        "{:<8} {:>6} {:>8} | {:>14} {:>14} {:>14} {:>18}",
+        "batch", "dim", "nnz", "full-map A", "vanilla-8 A/C", "graphsar A", "DP-oracle A (C=1)"
+    );
+    for batch in [1usize, 2, 4, 8, 16] {
+        let graphs: Vec<_> = (0..batch)
+            .map(|i| synth::qm7_like(5828 + i as u64))
+            .collect();
+        let sm = synth::batch_supermatrix(&graphs);
+        let r = reorder(&sm, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 2);
+
+        // naive: one giant crossbar for the whole super-matrix
+        let full = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let e_full = evaluate(&full, &g, w);
+
+        // vanilla fixed blocks (8 matrix units = 4 grid cells)
+        let v = baselines::vanilla(g.n, 4);
+        let e_v = evaluate(&v, &g, w);
+
+        // sparsity-aware whole-matrix partition
+        let sar = baselines::graphsar(&g, 8);
+        let e_sar = autogmap::scheme::eval::evaluate_rects(&sar, &g, w);
+
+        // optimal diagonal-only complete coverage: should track the
+        // per-graph diagonal structure (area ~ 1/batch of the full map)
+        let orc = oracle::optimal_diagonal(&g).expect("oracle");
+        let e_orc = evaluate(&orc, &g, w);
+        assert_eq!(e_orc.coverage_ratio, 1.0);
+
+        println!(
+            "{:<8} {:>6} {:>8} | {:>14.3} {:>8.3}/{:<5.3} {:>14.3} {:>10.3} ({} blocks)",
+            batch,
+            sm.rows,
+            sm.nnz(),
+            e_full.area_ratio,
+            e_v.area_ratio,
+            e_v.coverage_ratio,
+            e_sar.area_ratio,
+            e_orc.area_ratio,
+            orc.diag_len.len(),
+        );
+    }
+    println!(
+        "\nThe full-map area ratio is constant (=1) but its absolute cell count grows \
+         quadratically with batch size;\nthe oracle's per-graph blocks keep absolute cost \
+         linear — the utilization argument of the paper's introduction."
+    );
+
+    // absolute-cell view for the largest batch
+    let graphs: Vec<_> = (0..16).map(|i| synth::qm7_like(5828 + i as u64)).collect();
+    let sm = synth::batch_supermatrix(&graphs);
+    let r = reorder(&sm, Reordering::CuthillMckee);
+    let g = GridSummary::new(&r.matrix, 2);
+    let orc = oracle::optimal_diagonal(&g).unwrap();
+    let e = evaluate(&orc, &g, w);
+    let full_cells = (sm.rows * sm.rows) as f64;
+    println!(
+        "batch 16: full map {} cells vs oracle {} cells — {:.1}× saving at complete coverage",
+        full_cells,
+        e.covered_area_units,
+        full_cells / e.covered_area_units as f64
+    );
+    Ok(())
+}

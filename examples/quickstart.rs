@@ -1,0 +1,85 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! Loads the QM7-5828-like molecule graph, Cuthill-McKee-reorders it,
+//! trains the LSTM+RL+Dynamic-fill agent for a few thousand epochs, and
+//! prints the best complete-coverage mapping scheme next to the baselines.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use autogmap::baselines;
+use autogmap::coordinator::config::{Dataset, ExperimentConfig};
+use autogmap::coordinator::{run_experiment, RunnerOptions};
+use autogmap::graph::GridSummary;
+use autogmap::reorder::Reordering;
+use autogmap::runtime::Runtime;
+use autogmap::scheme::{evaluate, FillRule, RewardWeights};
+use autogmap::viz;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the workload: a 22×22 molecule adjacency (sparsity 0.868)
+    let cfg = ExperimentConfig {
+        name: "quickstart".into(),
+        dataset: Dataset::Qm7 { seed: 5828 },
+        grid: 2,
+        reordering: Reordering::CuthillMckee,
+        controller: "qm7_dyn4".into(),
+        fill_rule: FillRule::Dynamic { grades: 4 },
+        reward_a: 0.75,
+        lr: 0.015,
+        ent_coef: 0.002,
+        baseline_decay: 0.95,
+        epochs: 3000,
+        seed: 42,
+        log_every: 100,
+    };
+
+    // 2. the runtime: AOT artifacts compiled once by `make artifacts`
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT: {}", rt.platform());
+
+    // 3. train (two PJRT calls per epoch: sample rollout + REINFORCE step)
+    let result = run_experiment(&rt, &cfg, &RunnerOptions::default())?;
+    println!(
+        "\ntrained {} epochs in {:.1}s ({:.0} epochs/s)",
+        cfg.epochs,
+        result.wall_seconds,
+        cfg.epochs as f64 / result.wall_seconds
+    );
+
+    // 4. inspect the best complete-coverage scheme
+    let grid = &result.workload.grid;
+    let best = result.best.as_ref().expect("agent found no complete scheme");
+    println!(
+        "best scheme: diagonal blocks {:?} (matrix units), fill {:?} (grid cells)",
+        best.scheme.diag_sizes_units(grid),
+        best.scheme.fill_len
+    );
+    println!(
+        "coverage {:.3}  area {:.3}  sparsity {:.3}",
+        best.eval.coverage_ratio, best.eval.area_ratio, best.eval.sparsity
+    );
+    println!(
+        "\n{}",
+        viz::ascii_scheme(&result.workload.reordered.matrix, grid, &best.scheme)
+    );
+
+    // 5. compare with the static baselines on the same (reordered) matrix
+    let w = RewardWeights::new(cfg.reward_a);
+    let g1 = GridSummary::new(&result.workload.reordered.matrix, 1);
+    for block in [4, 6, 8] {
+        let s = baselines::vanilla(22, block);
+        let e = evaluate(&s, &g1, w);
+        println!(
+            "vanilla block {block}: coverage {:.3} area {:.3}",
+            e.coverage_ratio, e.area_ratio
+        );
+    }
+    if let Some(oracle) = baselines::oracle::optimal_diagonal(grid) {
+        let e = evaluate(&oracle, grid, w);
+        println!(
+            "DP oracle (diagonal-only complete coverage): area {:.3}",
+            e.area_ratio
+        );
+    }
+    Ok(())
+}

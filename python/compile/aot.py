@@ -1,0 +1,193 @@
+"""AOT lowering: JAX → HLO **text** → artifacts/ for the Rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the xla crate's XLA (xla_extension
+0.5.1) rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids, so
+text round-trips cleanly. See /opt/xla-example/README.md.
+
+Per controller configuration this emits three executables:
+  rollout_<name>.hlo.txt  (params.., key u32[2]) -> (d, f, logp, entropy)
+  greedy_<name>.hlo.txt   (params..)             -> (d, f, logp, entropy)
+  train_<name>.hlo.txt    (params.., m.., v.., t, d, f, adv, lr, ent)
+                           -> (params'.., m'.., v'.., t', loss, mean_logp)
+plus one blocked-MVM executable per crossbar geometry, and a
+`manifest.json` describing every artifact's ABI for the Rust loader.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--only name]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.block_mvm import block_mvm
+
+# ---------------------------------------------------------------------------
+# experiment configurations (single source of truth; the Rust coordinator
+# reads these back from manifest.json)
+
+CONTROLLER_CONFIGS = [
+    # QM7-5828 (22x22), grid 2 -> N = 11 grid cells, T = 10 (Table II)
+    model.ControllerConfig("qm7_diag", n=11, hidden=10, fill_classes=0, batch=8),
+    model.ControllerConfig("qm7_fill", n=11, hidden=10, fill_classes=2, batch=8),
+    model.ControllerConfig(
+        "qm7_fill_bilstm", n=11, hidden=10, fill_classes=2, batch=8, bilstm=True
+    ),
+    model.ControllerConfig("qm7_dyn4", n=11, hidden=10, fill_classes=4, batch=8),
+    model.ControllerConfig("qm7_dyn6", n=11, hidden=10, fill_classes=6, batch=8),
+    # batched-throughput variant (perf ablation, EXPERIMENTS.md §Perf):
+    # 4x the episodes per PJRT call at the same per-epoch overhead
+    model.ControllerConfig("qm7_dyn4_b32", n=11, hidden=10, fill_classes=4, batch=32),
+    # qh882 (882x882), grid 32 -> N = 28, T = 27 (Table IV)
+    model.ControllerConfig("qh882_dyn4", n=28, hidden=10, fill_classes=4, batch=8),
+    model.ControllerConfig("qh882_dyn6", n=28, hidden=10, fill_classes=6, batch=8),
+    # qh1484 (1484x1484), grid 32 -> N = 47, T = 46 (Table IV)
+    model.ControllerConfig("qh1484_dyn4", n=47, hidden=10, fill_classes=4, batch=8),
+    model.ControllerConfig("qh1484_dyn6", n=47, hidden=10, fill_classes=6, batch=8),
+]
+
+# blocked-MVM geometries: (name, tile side K, max tiles NB, row segments NR)
+MVM_CONFIGS = [
+    ("mvm_qm7", 2, 128, 11),       # 22x22, grid/tile 2
+    ("mvm_qh882", 32, 256, 28),    # 882x882, tile 32
+    ("mvm_qh1484", 32, 512, 47),   # 1484x1484, tile 32
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def lower_controller(cfg: model.ControllerConfig, out_dir: str) -> dict:
+    """Lower rollout/greedy/train for one config; return manifest entry."""
+    spec = model.param_spec(cfg)
+    pshapes = [f32(shape) for _, shape in spec]
+    B, T = cfg.batch, cfg.steps
+
+    rollout = jax.jit(model.rollout_flat(cfg))
+    rollout_hlo = to_hlo_text(rollout.lower(*pshapes, u32((2,))))
+
+    greedy = jax.jit(model.greedy_flat(cfg))
+    greedy_hlo = to_hlo_text(greedy.lower(*pshapes))
+
+    train = jax.jit(model.train_flat(cfg))
+    train_hlo = to_hlo_text(
+        train.lower(
+            *pshapes,          # params
+            *pshapes,          # adam m
+            *pshapes,          # adam v
+            i32(()),           # adam t
+            i32((B, T)),       # d_actions
+            i32((B, T)),       # f_actions
+            f32((B,)),         # advantage
+            f32(()),           # lr
+            f32(()),           # ent_coef
+        )
+    )
+
+    files = {}
+    for kind, text in [
+        ("rollout", rollout_hlo),
+        ("greedy", greedy_hlo),
+        ("train", train_hlo),
+    ]:
+        fname = f"{kind}_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+
+    return {
+        "n": cfg.n,
+        "hidden": cfg.hidden,
+        "fill_classes": cfg.fill_classes,
+        "batch": cfg.batch,
+        "bilstm": cfg.bilstm,
+        "steps": T,
+        "params": [{"name": name, "shape": list(shape)} for name, shape in spec],
+        "artifacts": files,
+    }
+
+
+def lower_mvm(name: str, k: int, nb: int, nr: int, out_dir: str) -> dict:
+    fn = jax.jit(lambda tiles, x, onehot: (block_mvm(tiles, x, onehot),))
+    hlo = to_hlo_text(fn.lower(f32((nb, k, k)), f32((nb, k)), f32((nb, nr))))
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+    return {"k": k, "nb": nb, "nr": nr, "artifact": fname}
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, recorded in the manifest so `make
+    artifacts` can skip when nothing changed."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, names in sorted(os.walk(base)):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                with open(os.path.join(root, n), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single config by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"fingerprint": source_fingerprint(), "configs": {}, "mvm": {}}
+    for cfg in CONTROLLER_CONFIGS:
+        if args.only and cfg.name != args.only:
+            continue
+        print(f"lowering controller {cfg.name} (T={cfg.steps}, B={cfg.batch}, "
+              f"F={cfg.fill_classes}, bilstm={cfg.bilstm})", flush=True)
+        manifest["configs"][cfg.name] = lower_controller(cfg, args.out_dir)
+    for name, k, nb, nr in MVM_CONFIGS:
+        if args.only and name != args.only:
+            continue
+        print(f"lowering {name} (K={k}, NB={nb}, NR={nr})", flush=True)
+        manifest["mvm"][name] = lower_mvm(name, k, nb, nr, args.out_dir)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    # merge with an existing manifest when --only is used
+    if args.only and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old["configs"].update(manifest["configs"])
+        old["mvm"].update(manifest["mvm"])
+        old["fingerprint"] = manifest["fingerprint"]
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

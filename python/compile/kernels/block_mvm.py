@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: blocked crossbar matrix-vector multiply.
+
+The digital twin of the paper's analog compute path (Fig. 5): each mapped
+block is a small crossbar tile; a tile computes ``y_tile = A_tile @ x_tile``
+(Ohm's law multiply + Kirchhoff current sum), and tiles in the same block
+row accumulate into the same output segment ("blocks in the same row are
+connected").
+
+Layout:
+  tiles:    [NB, K, K]  tile conductance matrices (zero-padded at edges)
+  x_tiles:  [NB, K]     per-tile input sub-vector (x' sliced by block cols)
+  row_onehot: [NB, NR]  tile -> output-row-segment assignment (one-hot);
+                        scatter expressed as a matmul so the whole
+                        accumulation runs on the MXU instead of serial
+                        scatter-adds.
+
+  out:      [NR, K]     accumulated output segments.
+
+Grid: one Pallas program per tile (grid=(NB,)); each step loads one K×K
+tile into VMEM (K ≤ 128 ⇒ 64 KiB), computes the K-vector product, and
+accumulates ``outer(row_onehot[nb], y_tile)`` into the [NR, K] accumulator,
+which stays VMEM-resident across the whole grid (index_map returns the same
+block for every step).
+
+``interpret=True`` as everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_mvm_kernel(tiles_ref, x_ref, onehot_ref, out_ref):
+    nb = pl.program_id(0)
+
+    @pl.when(nb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # y_tile[k] = sum_j tiles[nb, k, j] * x[nb, j]  -- one crossbar pass
+    y_tile = jnp.dot(
+        tiles_ref[0], x_ref[0][:, None], preferred_element_type=jnp.float32
+    )[:, 0]
+    # scatter-by-matmul: out[r, :] += onehot[nb, r] * y_tile
+    out_ref[...] += onehot_ref[0][:, None] * y_tile[None, :]
+
+
+def block_mvm(tiles, x_tiles, row_onehot):
+    """Crossbar-blocked MVM.
+
+    Args:
+      tiles:      [NB, K, K] float32.
+      x_tiles:    [NB, K]    float32.
+      row_onehot: [NB, NR]   float32 one-hot row assignment.
+
+    Returns:
+      [NR, K] accumulated row segments.
+    """
+    nb, k, _ = tiles.shape
+    nr = row_onehot.shape[1]
+    return pl.pallas_call(
+        _block_mvm_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, k, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, nr), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((nr, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, k), jnp.float32),
+        interpret=True,
+    )(
+        tiles.astype(jnp.float32),
+        x_tiles.astype(jnp.float32),
+        row_onehot.astype(jnp.float32),
+    )

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: fused LSTM cell (Eqs. 9-14 of the paper).
+
+The controller's per-decision-point compute hot-spot. All four gates are
+computed from a single MXU-shaped matmul ``[B, I+H] @ [I+H, 4H]`` followed by
+fused elementwise gate math, mirroring how the analog crossbar fuses
+multiply (Ohm) and accumulate (Kirchhoff) in one array pass:
+
+    z = [x, h_prev] @ W + b            # one matmul, 4H output lanes
+    f, i, g, o = split(z, 4)           # forget/input/cell/output gates
+    c = sigmoid(f) * c_prev + sigmoid(i) * tanh(g)
+    h = sigmoid(o) * tanh(c)
+
+Gate packing order is (f, i, g, o) — ``ref.py`` and the Rust mirror
+(`agent::lstm`) must agree.
+
+The kernel keeps the whole ``[B, I+H]`` activation tile and the
+``[I+H, 4H]`` weight tile VMEM-resident (controller sizes: H ≤ 64,
+B ≤ 256 ⇒ ≤ 0.6 MiB at f32, far under the ~16 MiB VMEM budget), so the
+BlockSpec is a single block; the HBM↔VMEM schedule is one load per step.
+
+``interpret=True`` always: CPU PJRT cannot execute Mosaic custom-calls; the
+real-TPU mapping is an estimate documented in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(xh_ref, w_ref, b_ref, c_prev_ref, h_ref, c_ref):
+    """Fused gates: one matmul + elementwise, all VMEM-resident."""
+    z = jnp.dot(xh_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...][None, :]
+    hidden = c_prev_ref.shape[-1]
+    f = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    i = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+    c = f * c_prev_ref[...] + i * g
+    h_ref[...] = o * jnp.tanh(c)
+    c_ref[...] = c
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lstm_cell(x, h_prev, c_prev, w, b):
+    """One LSTM step.
+
+    Args:
+      x:      [B, I]  input at this decision point.
+      h_prev: [B, H]  previous hidden state.
+      c_prev: [B, H]  previous cell state.
+      w:      [I+H, 4H] packed gate weights (f,i,g,o).
+      b:      [4H]    packed gate biases.
+
+    Returns:
+      (h, c): both [B, H].
+    """
+    batch, _ = x.shape
+    hidden = h_prev.shape[-1]
+    xh = jnp.concatenate([x, h_prev], axis=-1)
+    out_shape = (
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+        jax.ShapeDtypeStruct((batch, hidden), jnp.float32),
+    )
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(xh.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32),
+      c_prev.astype(jnp.float32))

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every kernel in this package must match its oracle to float32 tolerance
+across the hypothesis sweep in python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h_prev, c_prev, w, b):
+    """Reference LSTM cell, gate packing (f, i, g, o) — Eqs. (9)-(14)."""
+    xh = jnp.concatenate([x, h_prev], axis=-1)
+    z = xh @ w + b[None, :]
+    hidden = h_prev.shape[-1]
+    f = jax.nn.sigmoid(z[:, 0 * hidden : 1 * hidden])
+    i = jax.nn.sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o = jax.nn.sigmoid(z[:, 3 * hidden : 4 * hidden])
+    c = f * c_prev + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def block_mvm_ref(tiles, x_tiles, row_onehot):
+    """Reference blocked MVM: per-tile matvec + one-hot row accumulation."""
+    y_tiles = jnp.einsum("nkj,nj->nk", tiles, x_tiles)
+    return jnp.einsum("nr,nk->rk", row_onehot, y_tiles)

@@ -1,0 +1,374 @@
+"""L2: the AutoGMap controller (LSTM + per-step FC heads) in JAX.
+
+Implements Algo. 1 (sampling rollout) and Algo. 2 (REINFORCE with baseline,
+here with the Adam update fused in) as two pure functions that
+``python/compile/aot.py`` lowers to HLO text for the Rust coordinator:
+
+  rollout(params, key)   -> d_actions [B,T] i32, f_actions [B,T] i32,
+                            logp [B] f32, entropy [B] f32
+  train_step(params, opt, d_actions, f_actions, advantage, lr, ent_coef)
+                         -> params', opt', loss, mean_logp
+
+Model structure (paper §V-A):
+  - input at decision point t is the previous LSTM *output* (Algo. 1
+    line 9: ``inputs <- output``), so input size I = hidden size H; the
+    initial input x0 is a learned parameter;
+  - per-decision-point FC heads ("the ith diagonal fcs output"), stacked
+    as [T, ...] arrays and indexed by the scan step;
+  - the fill decision runs a *second* LSTM step whose input is the
+    diagonal step's output, exactly Algo. 1 lines 11-18; the fill branch
+    is always computed and masked by ``d == 0`` (semantically identical to
+    the paper's conditional, but fixed-shape for AOT);
+  - optional BiLSTM ablation: a second LSTM consumes learned per-step
+    embeddings in *reverse* order (the only causal reading of the paper's
+    BiLSTM — see DESIGN.md §5) and its hidden state is concatenated before
+    each head.
+
+The sampling rollout calls the L1 Pallas kernel (kernels.lstm_cell); the
+train step recomputes log-probs with the numerically identical pure-jnp
+cell (kernels.ref.lstm_cell_ref) because pallas_call has no AD rule — the
+two are asserted allclose in python/tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.ref import lstm_cell_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Static shape configuration for one experiment."""
+
+    name: str
+    #: grid cells on the diagonal; T = n - 1 decision points.
+    n: int
+    #: LSTM hidden size (paper Table III: H = 10).
+    hidden: int
+    #: fill-head classes: 0 = no fill head, 2 = fixed fill (binary),
+    #: >2 = dynamic fill with `fill_classes` grades.
+    fill_classes: int
+    #: episodes sampled per rollout call (batched REINFORCE, Eq. 20 M).
+    batch: int
+    #: BiLSTM ablation.
+    bilstm: bool = False
+
+    @property
+    def steps(self) -> int:
+        return self.n - 1
+
+    @property
+    def head_in(self) -> int:
+        return 2 * self.hidden if self.bilstm else self.hidden
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+
+def param_spec(cfg: ControllerConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the AOT ABI with the Rust side."""
+    H, T, F = cfg.hidden, cfg.steps, cfg.fill_classes
+    spec = [
+        ("x0", (H,)),
+        ("lstm_w", (2 * H, 4 * H)),
+        ("lstm_b", (4 * H,)),
+    ]
+    if cfg.bilstm:
+        spec += [
+            ("bwd_emb", (T, H)),
+            ("bwd_w", (2 * H, 4 * H)),
+            ("bwd_b", (4 * H,)),
+        ]
+    spec += [
+        ("fc_d_w", (T, cfg.head_in, 2)),
+        ("fc_d_b", (T, 2)),
+    ]
+    if F > 0:
+        spec += [
+            ("fc_f_w", (T, cfg.head_in, F)),
+            ("fc_f_b", (T, F)),
+        ]
+    return spec
+
+
+def init_params(cfg: ControllerConfig, key) -> dict:
+    """Uniform(-0.1, 0.1) init, matching the classic NAS-controller setup."""
+    params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.uniform(sub, shape, jnp.float32, -0.1, 0.1)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared forward machinery
+
+
+def _backward_states(cfg: ControllerConfig, params, batch: int, cell):
+    """BiLSTM auxiliary pass: backward LSTM over learned embeddings.
+
+    Returns hb [T, B, H] where hb[t] is the backward hidden state aligned
+    with decision point t.
+    """
+    H = cfg.hidden
+    emb = params["bwd_emb"]  # [T, H]
+
+    def step(carry, e):
+        h, c = carry
+        x = jnp.broadcast_to(e[None, :], (batch, H))
+        h, c = cell(x, h, c, params["bwd_w"], params["bwd_b"])
+        return (h, c), h
+
+    init = (jnp.zeros((batch, H)), jnp.zeros((batch, H)))
+    # consume embeddings in reverse order; outputs come back reversed
+    _, hb_rev = jax.lax.scan(step, init, emb[::-1])
+    return hb_rev[::-1]  # [T, B, H]
+
+
+def _controller_scan(cfg: ControllerConfig, params, cell, choose_d, choose_f):
+    """Core double-step scan shared by rollout (sampling) and train
+    (teacher forcing).
+
+    ``choose_d(t, logsm) -> action [B] i32`` and likewise ``choose_f``.
+
+    Returns (d_actions [T,B], f_actions [T,B], logp [B], entropy [B]).
+    """
+    H, T, B, F = cfg.hidden, cfg.steps, cfg.batch, cfg.fill_classes
+
+    hb = (
+        _backward_states(cfg, params, B, cell)
+        if cfg.bilstm
+        else jnp.zeros((T, B, 0))
+    )
+
+    xs = {
+        "t": jnp.arange(T),
+        "fc_d_w": params["fc_d_w"],
+        "fc_d_b": params["fc_d_b"],
+        "hb": hb,
+    }
+    if F > 0:
+        xs["fc_f_w"] = params["fc_f_w"]
+        xs["fc_f_b"] = params["fc_f_b"]
+
+    def head(h, w, b, hb_t):
+        inp = jnp.concatenate([h, hb_t], axis=-1) if cfg.bilstm else h
+        return inp @ w + b[None, :]
+
+    def step(carry, x_t):
+        x, h, c, logp, ent = carry
+        t = x_t["t"]
+
+        # --- diagonal decision (Algo. 1 lines 3-9)
+        h1, c1 = cell(x, h, c, params["lstm_w"], params["lstm_b"])
+        logits_d = head(h1, x_t["fc_d_w"], x_t["fc_d_b"], x_t["hb"])
+        logsm_d = jax.nn.log_softmax(logits_d, axis=-1)
+        d = choose_d(t, logsm_d)  # [B] int32
+        logp = logp + jnp.take_along_axis(logsm_d, d[:, None], axis=-1)[:, 0]
+        ent = ent - jnp.sum(jnp.exp(logsm_d) * logsm_d, axis=-1)
+
+        if F > 0:
+            # --- fill decision (Algo. 1 lines 10-18), masked by d == 0
+            h2, c2 = cell(h1, h1, c1, params["lstm_w"], params["lstm_b"])
+            logits_f = head(h2, x_t["fc_f_w"], x_t["fc_f_b"], x_t["hb"])
+            logsm_f = jax.nn.log_softmax(logits_f, axis=-1)
+            f = choose_f(t, logsm_f)  # [B] int32
+            mask = (d == 0).astype(jnp.float32)
+            logp_f = jnp.take_along_axis(logsm_f, f[:, None], axis=-1)[:, 0]
+            logp = logp + mask * logp_f
+            ent = ent - mask * jnp.sum(jnp.exp(logsm_f) * logsm_f, axis=-1)
+            mb = mask[:, None]
+            h_next = mb * h2 + (1.0 - mb) * h1
+            c_next = mb * c2 + (1.0 - mb) * c1
+        else:
+            f = jnp.zeros_like(d)
+            h_next, c_next = h1, c1
+
+        # Algo. 1 line 9/18: inputs <- output of the last executed step
+        x_next = h_next
+        return (x_next, h_next, c_next, logp, ent), (d, f)
+
+    x0 = jnp.broadcast_to(params["x0"][None, :], (B, H))
+    init = (
+        x0,
+        jnp.zeros((B, H)),
+        jnp.zeros((B, H)),
+        jnp.zeros((B,)),
+        jnp.zeros((B,)),
+    )
+    (_, _, _, logp, ent), (d_seq, f_seq) = jax.lax.scan(step, init, xs)
+    return d_seq, f_seq, logp, ent
+
+
+# ---------------------------------------------------------------------------
+# rollout (sampling) — Algo. 1
+
+
+def rollout(cfg: ControllerConfig, params, key):
+    """Sample B episodes. Returns (d [B,T] i32, f [B,T] i32, logp [B],
+    entropy [B])."""
+    T = cfg.steps
+    kd, kf = jax.random.split(key)
+    kds = jax.random.split(kd, T)
+    kfs = jax.random.split(kf, T)
+
+    def choose_d(t, logsm):
+        return jax.random.categorical(kds[t], logsm, axis=-1).astype(jnp.int32)
+
+    def choose_f(t, logsm):
+        return jax.random.categorical(kfs[t], logsm, axis=-1).astype(jnp.int32)
+
+    d_seq, f_seq, logp, ent = _controller_scan(
+        cfg, params, lstm_cell, choose_d, choose_f
+    )
+    return (
+        jnp.transpose(d_seq).astype(jnp.int32),
+        jnp.transpose(f_seq).astype(jnp.int32),
+        logp,
+        ent,
+    )
+
+
+def greedy_rollout(cfg: ControllerConfig, params):
+    """Deterministic argmax decode (evaluation mode)."""
+
+    def choose(_, logsm):
+        return jnp.argmax(logsm, axis=-1).astype(jnp.int32)
+
+    d_seq, f_seq, logp, ent = _controller_scan(cfg, params, lstm_cell, choose, choose)
+    return jnp.transpose(d_seq), jnp.transpose(f_seq), logp, ent
+
+
+# ---------------------------------------------------------------------------
+# teacher-forced log-prob + REINFORCE/Adam train step — Algo. 2
+
+
+def teacher_logp(cfg: ControllerConfig, params, d_actions, f_actions):
+    """Log-probability (and entropy) of given action sequences.
+
+    d_actions/f_actions: [B, T] int32. Uses the jnp reference cell so the
+    whole computation is differentiable.
+    """
+    d_t = jnp.transpose(d_actions)  # [T, B]
+    f_t = jnp.transpose(f_actions)
+
+    def choose_d(t, _):
+        return d_t[t]
+
+    def choose_f(t, _):
+        return f_t[t]
+
+    _, _, logp, ent = _controller_scan(cfg, params, lstm_cell_ref, choose_d, choose_f)
+    return logp, ent
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def train_step(cfg: ControllerConfig, params, opt, d_actions, f_actions, advantage, lr, ent_coef):
+    """One REINFORCE step: loss = -mean(adv · logp) - ent_coef · mean(H).
+
+    The advantage (reward - EMA baseline, Algo. 2 lines 1-2) is computed by
+    the Rust environment and passed in. Returns (params', opt', loss,
+    mean_logp).
+    """
+
+    def loss_fn(p):
+        logp, ent = teacher_logp(cfg, p, d_actions, f_actions)
+        loss = -jnp.mean(advantage * logp) - ent_coef * jnp.mean(ent)
+        return loss, jnp.mean(logp)
+
+    (loss, mean_logp), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    t = opt["t"] + 1
+    tf = t.astype(jnp.float32)
+
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+
+    def apply(p, m_, v_):
+        mhat = m_ / (1 - b1**tf)
+        vhat = v_ / (1 - b2**tf)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_params = jax.tree_util.tree_map(apply, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}, loss, mean_logp
+
+
+# ---------------------------------------------------------------------------
+# flat ABI used by aot.py (params as an ordered list of arrays)
+
+
+def params_to_list(cfg: ControllerConfig, params: dict) -> list:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def params_from_list(cfg: ControllerConfig, flat) -> dict:
+    names = [name for name, _ in param_spec(cfg)]
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+def rollout_flat(cfg: ControllerConfig):
+    """Flat-ABI rollout: (param_0..param_k, key u32[2]) -> 4 outputs."""
+
+    def fn(*args):
+        *flat, key = args
+        params = params_from_list(cfg, list(flat))
+        return rollout(cfg, params, key)
+
+    return fn
+
+
+def greedy_flat(cfg: ControllerConfig):
+    """Flat-ABI greedy decode: (param_0..param_k) -> 4 outputs."""
+
+    def fn(*args):
+        params = params_from_list(cfg, list(args))
+        return greedy_rollout(cfg, params)
+
+    return fn
+
+
+def train_flat(cfg: ControllerConfig):
+    """Flat-ABI train step:
+    (param_0.., m_0.., v_0.., t, d, f, adv, lr, ent) ->
+    (param'_0.., m'_0.., v'_0.., t', loss, mean_logp)."""
+    k = len(param_spec(cfg))
+
+    def fn(*args):
+        p = params_from_list(cfg, list(args[:k]))
+        m = params_from_list(cfg, list(args[k : 2 * k]))
+        v = params_from_list(cfg, list(args[2 * k : 3 * k]))
+        t, d_actions, f_actions, advantage, lr, ent_coef = args[3 * k :]
+        opt = {"m": m, "v": v, "t": t}
+        new_p, new_opt, loss, mean_logp = train_step(
+            cfg, p, opt, d_actions, f_actions, advantage, lr, ent_coef
+        )
+        if cfg.fill_classes == 0:
+            # f_actions is semantically unused for diagonal-only configs;
+            # anchor it so XLA does not drop the parameter and change the
+            # call ABI (Rust always passes the full input list).
+            loss = loss + 0.0 * jnp.sum(f_actions.astype(jnp.float32))
+        return (
+            *params_to_list(cfg, new_p),
+            *params_to_list(cfg, new_opt["m"]),
+            *params_to_list(cfg, new_opt["v"]),
+            new_opt["t"],
+            loss,
+            mean_logp,
+        )
+
+    return fn

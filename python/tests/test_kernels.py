@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py
+is the core correctness signal for everything the artifacts compute.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.block_mvm import block_mvm
+from compile.kernels.lstm_cell import lstm_cell
+from compile.kernels.ref import block_mvm_ref, lstm_cell_ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# lstm_cell
+
+
+@hypothesis.given(
+    batch=st.integers(1, 16),
+    inp=st.integers(1, 24),
+    hidden=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_cell_matches_ref(batch, inp, hidden, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = rand(ks[0], (batch, inp))
+    h = rand(ks[1], (batch, hidden))
+    c = rand(ks[2], (batch, hidden))
+    w = rand(ks[3], (inp + hidden, 4 * hidden), 0.5)
+    b = rand(ks[4], (4 * hidden,), 0.5)
+    h2, c2 = lstm_cell(x, h, c, w, b)
+    hr, cr = lstm_cell_ref(x, h, c, w, b)
+    assert_allclose(np.asarray(h2), np.asarray(hr), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(c2), np.asarray(cr), rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_cell_state_bounds():
+    # h = o * tanh(c) is bounded in (-1, 1)
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = rand(ks[0], (8, 10), 10.0)
+    h = rand(ks[1], (8, 10), 10.0)
+    c = rand(ks[2], (8, 10), 10.0)
+    w = rand(ks[3], (20, 40), 10.0)
+    b = rand(ks[4], (40,), 10.0)
+    h2, c2 = lstm_cell(x, h, c, w, b)
+    assert np.all(np.abs(np.asarray(h2)) <= 1.0)
+    assert np.all(np.isfinite(np.asarray(c2)))
+
+
+def test_lstm_cell_zero_weights_decay():
+    # zero weights/biases: f=i=o=sigmoid(0)=0.5, g=tanh(0)=0 -> c' = c/2
+    b_ = jnp.zeros((12,))
+    w = jnp.zeros((6, 12))
+    x = jnp.ones((2, 3))
+    h = jnp.ones((2, 3))
+    c = jnp.ones((2, 3))
+    h2, c2 = lstm_cell(x, h, c, w, b_)
+    assert_allclose(np.asarray(c2), 0.5 * np.ones((2, 3)), rtol=1e-6)
+    assert_allclose(np.asarray(h2), 0.5 * np.tanh(0.5) * np.ones((2, 3)), rtol=1e-6)
+
+
+def test_lstm_cell_jit_and_scan_compose():
+    # the exact composition used by the L2 scan must be traceable
+    def step(carry, _):
+        h, c = carry
+        h, c = lstm_cell(h, h, c, w, b)
+        return (h, c), h
+
+    w = rand(jax.random.PRNGKey(1), (8, 16), 0.3)
+    b = rand(jax.random.PRNGKey(2), (16,), 0.3)
+    h0 = rand(jax.random.PRNGKey(3), (4, 4))
+    c0 = jnp.zeros((4, 4))
+    (_, _), hs = jax.jit(
+        lambda h, c: jax.lax.scan(step, (h, c), None, length=5)
+    )(h0, c0)
+    assert hs.shape == (5, 4, 4)
+    assert np.all(np.isfinite(np.asarray(hs)))
+
+
+# ---------------------------------------------------------------------------
+# block_mvm
+
+
+@hypothesis.given(
+    nb=st.integers(1, 12),
+    k=st.integers(1, 16),
+    nr=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_mvm_matches_ref(nb, k, nr, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    tiles = rand(ks[0], (nb, k, k))
+    x = rand(ks[1], (nb, k))
+    rows = jax.random.randint(ks[2], (nb,), 0, nr)
+    onehot = jax.nn.one_hot(rows, nr, dtype=jnp.float32)
+    out = block_mvm(tiles, x, onehot)
+    ref = block_mvm_ref(tiles, x, onehot)
+    assert out.shape == (nr, k)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_block_mvm_reconstructs_dense_spmv():
+    # tiling a dense matrix into K-blocks and accumulating must equal A @ x
+    rng = np.random.default_rng(0)
+    dim, k = 12, 4
+    a = rng.standard_normal((dim, dim)).astype(np.float32)
+    x = rng.standard_normal(dim).astype(np.float32)
+    nseg = dim // k
+    tiles, xt, rows = [], [], []
+    for ri in range(nseg):
+        for ci in range(nseg):
+            tiles.append(a[ri * k : (ri + 1) * k, ci * k : (ci + 1) * k])
+            xt.append(x[ci * k : (ci + 1) * k])
+            rows.append(ri)
+    tiles = jnp.asarray(np.stack(tiles))
+    xt = jnp.asarray(np.stack(xt))
+    onehot = jax.nn.one_hot(jnp.asarray(rows), nseg, dtype=jnp.float32)
+    out = np.asarray(block_mvm(tiles, xt, onehot)).reshape(-1)
+    assert_allclose(out, a @ x, rtol=1e-4, atol=1e-5)
+
+
+def test_block_mvm_zero_padding_tiles_are_noops():
+    tiles = jnp.zeros((3, 4, 4))
+    x = jnp.ones((3, 4))
+    onehot = jax.nn.one_hot(jnp.asarray([0, 1, 1]), 2, dtype=jnp.float32)
+    out = block_mvm(tiles, x, onehot)
+    assert np.all(np.asarray(out) == 0.0)

@@ -1,0 +1,151 @@
+"""L2 controller correctness: rollout/teacher-forcing/train invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def small_cfg(**kw):
+    defaults = dict(name="t", n=6, hidden=8, fill_classes=4, batch=4, bilstm=False)
+    defaults.update(kw)
+    return model.ControllerConfig(**defaults)
+
+
+CFGS = [
+    small_cfg(),
+    small_cfg(fill_classes=0),
+    small_cfg(fill_classes=2),
+    small_cfg(bilstm=True),
+]
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"F{c.fill_classes}_bi{c.bilstm}")
+def test_rollout_shapes_and_ranges(cfg):
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    d, f, logp, ent = jax.jit(lambda p, k: model.rollout(cfg, p, k))(
+        params, jax.random.PRNGKey(1)
+    )
+    B, T = cfg.batch, cfg.steps
+    assert d.shape == (B, T) and f.shape == (B, T)
+    assert logp.shape == (B,) and ent.shape == (B,)
+    assert np.all((np.asarray(d) == 0) | (np.asarray(d) == 1))
+    if cfg.fill_classes:
+        assert np.all(np.asarray(f) >= 0)
+        assert np.all(np.asarray(f) < cfg.fill_classes)
+    assert np.all(np.asarray(logp) < 0.0)  # proper distribution
+    assert np.all(np.asarray(ent) > 0.0)
+
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: f"F{c.fill_classes}_bi{c.bilstm}")
+def test_teacher_logp_matches_rollout_logp(cfg):
+    """Recomputing the log-prob of sampled actions must reproduce the
+    rollout's log-prob — this is the core sampling/training consistency
+    invariant (rollout uses the Pallas cell, teacher forcing uses ref)."""
+    params = model.init_params(cfg, jax.random.PRNGKey(2))
+    d, f, logp, _ = model.rollout(cfg, params, jax.random.PRNGKey(3))
+    tlogp, tent = model.teacher_logp(cfg, params, d, f)
+    assert_allclose(np.asarray(tlogp), np.asarray(logp), rtol=1e-4, atol=1e-5)
+    assert np.all(np.asarray(tent) > 0)
+
+
+def test_rollout_is_deterministic_in_key():
+    cfg = small_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(4))
+    d1, f1, l1, _ = model.rollout(cfg, params, jax.random.PRNGKey(7))
+    d2, f2, l2, _ = model.rollout(cfg, params, jax.random.PRNGKey(7))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+    d3, _, _, _ = model.rollout(cfg, params, jax.random.PRNGKey(8))
+    # different key should (overwhelmingly) differ somewhere
+    assert not np.array_equal(np.asarray(d1), np.asarray(d3))
+
+
+def test_train_step_increases_logp_of_positive_advantage():
+    """REINFORCE sanity: repeating updates with a fixed positive advantage
+    on fixed actions must raise their log-probability."""
+    cfg = small_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(5))
+    opt = model.adam_init(params)
+    d, f, logp0, _ = model.rollout(cfg, params, jax.random.PRNGKey(6))
+    adv = jnp.ones((cfg.batch,))
+    lr = jnp.float32(0.02)
+    ent = jnp.float32(0.0)
+    step = jax.jit(
+        lambda p, o: model.train_step(cfg, p, o, d, f, adv, lr, ent)
+    )
+    for _ in range(30):
+        params, opt, loss, mean_logp = step(params, opt)
+    tlogp, _ = model.teacher_logp(cfg, params, d, f)
+    assert np.mean(np.asarray(tlogp)) > np.mean(np.asarray(logp0)) + 0.5
+    assert int(opt["t"]) == 30
+
+
+def test_train_step_respects_advantage_sign():
+    """Negative-advantage actions must become less likely."""
+    cfg = small_cfg(fill_classes=0)
+    params = model.init_params(cfg, jax.random.PRNGKey(8))
+    opt = model.adam_init(params)
+    d, f, logp0, _ = model.rollout(cfg, params, jax.random.PRNGKey(9))
+    adv = -jnp.ones((cfg.batch,))
+    step = jax.jit(
+        lambda p, o: model.train_step(
+            cfg, p, o, d, f, adv, jnp.float32(0.02), jnp.float32(0.0)
+        )
+    )
+    for _ in range(20):
+        params, opt, _, _ = step(params, opt)
+    tlogp, _ = model.teacher_logp(cfg, params, d, f)
+    assert np.mean(np.asarray(tlogp)) < np.mean(np.asarray(logp0))
+
+
+def test_grads_flow_to_all_params():
+    cfg = small_cfg(bilstm=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(10))
+    d, f, _, _ = model.rollout(cfg, params, jax.random.PRNGKey(11))
+    adv = jnp.ones((cfg.batch,))
+
+    def loss_fn(p):
+        logp, ent = model.teacher_logp(cfg, p, d, f)
+        return -jnp.mean(adv * logp) - 0.01 * jnp.mean(ent)
+
+    grads = jax.grad(loss_fn)(params)
+    for name, g in grads.items():
+        assert np.all(np.isfinite(np.asarray(g))), name
+        assert np.any(np.asarray(g) != 0.0), f"zero grad for {name}"
+
+
+def test_param_spec_shapes_match_init():
+    for cfg in CFGS:
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        for name, shape in model.param_spec(cfg):
+            assert params[name].shape == shape
+        flat = model.params_to_list(cfg, params)
+        back = model.params_from_list(cfg, flat)
+        assert set(back.keys()) == set(params.keys())
+
+
+def test_fill_masking_zeroes_fill_contribution():
+    """When every diagonal action is 'extend' (1), fill log-probs must not
+    contribute: logp equals the diagonal-only logp."""
+    cfg = small_cfg(fill_classes=4)
+    params = model.init_params(cfg, jax.random.PRNGKey(12))
+    B, T = cfg.batch, cfg.steps
+    d = jnp.ones((B, T), jnp.int32)
+    f0 = jnp.zeros((B, T), jnp.int32)
+    f3 = 3 * jnp.ones((B, T), jnp.int32)
+    l0, _ = model.teacher_logp(cfg, params, d, f0)
+    l3, _ = model.teacher_logp(cfg, params, d, f3)
+    assert_allclose(np.asarray(l0), np.asarray(l3), rtol=1e-6)
+
+
+def test_greedy_rollout_is_deterministic():
+    cfg = small_cfg()
+    params = model.init_params(cfg, jax.random.PRNGKey(13))
+    d1, f1, _, _ = model.greedy_rollout(cfg, params)
+    d2, f2, _, _ = model.greedy_rollout(cfg, params)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))

@@ -1,0 +1,40 @@
+//! Bench: baseline partitioners (Vanilla / GraphSAR-like / GraphR-like /
+//! DP-oracle / exhaustive) — the comparison set behind Table II.
+
+use autogmap::baselines::{self, exhaustive, oracle};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::RewardWeights;
+use autogmap::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let qm7 = reorder(&synth::qm7_like(5828), Reordering::CuthillMckee).matrix;
+    let qh882 = reorder(&synth::qh882_like(882), Reordering::CuthillMckee).matrix;
+    let g_qm7 = GridSummary::new(&qm7, 1);
+    let g_qm7g2 = GridSummary::new(&qm7, 2);
+    let g_qh = GridSummary::new(&qh882, 32);
+
+    b.bench("vanilla/qm7", || baselines::vanilla(22, 4));
+    b.bench("vanilla_fill/qm7", || baselines::vanilla_fill(22, 6, 6));
+    b.bench("graphsar/qm7", || baselines::graphsar(&g_qm7, 8));
+    b.bench("graphsar/qh882_g32", || baselines::graphsar(&g_qh, 8));
+    b.bench("graphr/qh882_g32", || baselines::graphr(&g_qh, 8));
+    b.bench("dp_oracle/qm7_g2 (N=11)", || {
+        oracle::optimal_diagonal(&g_qm7g2)
+    });
+    b.bench("dp_oracle/qh882_g32 (N=28)", || {
+        oracle::optimal_diagonal(&g_qh)
+    });
+    b.bench("exhaustive/qm7_g2 (2^10 schemes)", || {
+        black_box(exhaustive::best_diagonal(&g_qm7g2, RewardWeights::new(0.8)))
+    });
+    // DP scales to grids far beyond the exhaustive horizon
+    let big = GridSummary::new(
+        &reorder(&synth::banded_like(8192, 0.999, 3), Reordering::CuthillMckee).matrix,
+        64,
+    );
+    b.bench("dp_oracle/synth8k_g64 (N=128)", || {
+        oracle::optimal_diagonal(&big)
+    });
+}

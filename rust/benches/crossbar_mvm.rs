@@ -1,0 +1,38 @@
+//! Bench: crossbar simulator MVM throughput — the deployment-side compute
+//! (Fig. 5) — plus the programming models (quantization / variation).
+
+use autogmap::crossbar::{place, program};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::Scheme;
+use autogmap::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    for (name, m, grid) in [
+        ("qm7_g2", synth::qm7_like(5828), 2usize),
+        ("qh882_g32", synth::qh882_like(882), 32),
+        ("qh1484_g32", synth::qh1484_like(1484), 32),
+    ] {
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, grid);
+        // a realistic trained-scheme stand-in: unit diagonal + unit fills
+        let scheme = Scheme {
+            diag_len: vec![1; g.n],
+            fill_len: vec![1; g.n - 1],
+        };
+        let arr = place(&r.matrix, &g, &scheme).unwrap();
+        let x: Vec<f64> = (0..g.dim).map(|i| (i as f64 * 0.1).sin()).collect();
+        b.bench(&format!("place/{name}"), || {
+            place(&r.matrix, &g, &scheme).unwrap()
+        });
+        b.bench(&format!("mvm/{name} ({} tiles)", arr.tiles.len()), || {
+            black_box(arr.mvm(&x))
+        });
+        b.bench(&format!("spmv_ref/{name}"), || black_box(r.matrix.spmv(&x)));
+        b.bench(&format!("quantize8/{name}"), || program::quantize(&arr, 8));
+        b.bench(&format!("perturb/{name}"), || {
+            program::perturb(&arr, 0.05, 1)
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Bench: full training epochs end-to-end — one bench per paper table's
+//! workload class. `epochs/s` here × the paper's 40k-epoch budget gives
+//! the full-reproduction wall time quoted in EXPERIMENTS.md.
+//!
+//!   Table II  → qm7  (grid 2,  N=11)
+//!   Table IV  → qh882 (grid 32, N=28) and qh1484 (grid 32, N=47)
+
+use autogmap::agent::{TrainOptions, Trainer};
+use autogmap::coordinator::config::Dataset;
+use autogmap::coordinator::dataset::load_matrix;
+use autogmap::graph::GridSummary;
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::Runtime;
+use autogmap::scheme::{FillRule, RewardWeights};
+use autogmap::util::bench::Bencher;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP end_to_end bench: {e}");
+            return;
+        }
+    };
+    if rt.manifest().is_err() {
+        println!("SKIP end_to_end bench: no manifest (run `make artifacts`)");
+        return;
+    }
+    let manifest = rt.manifest().unwrap();
+    let mut b = Bencher::new();
+    let specs: [(&str, Dataset, usize, &str, FillRule); 4] = [
+        (
+            "table2_qm7_epoch",
+            Dataset::Qm7 { seed: 5828 },
+            2,
+            "qm7_dyn4",
+            FillRule::Dynamic { grades: 4 },
+        ),
+        (
+            "table2_qm7_epoch_B32",
+            Dataset::Qm7 { seed: 5828 },
+            2,
+            "qm7_dyn4_b32",
+            FillRule::Dynamic { grades: 4 },
+        ),
+        (
+            "table4_qh882_epoch",
+            Dataset::Qh882 { seed: 882 },
+            32,
+            "qh882_dyn6",
+            FillRule::Dynamic { grades: 6 },
+        ),
+        (
+            "table4_qh1484_epoch",
+            Dataset::Qh1484 { seed: 1484 },
+            32,
+            "qh1484_dyn6",
+            FillRule::Dynamic { grades: 6 },
+        ),
+    ];
+    for (name, ds, grid_size, controller, rule) in specs {
+        let m = load_matrix(&ds).unwrap();
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let grid = GridSummary::new(&r.matrix, grid_size);
+        let entry = manifest.config(controller).unwrap().clone();
+        let opts = TrainOptions {
+            weights: RewardWeights::new(0.8),
+            fill_rule: rule,
+            ..Default::default()
+        };
+        let batch = entry.batch;
+        let mut trainer = Trainer::new(&rt, entry, opts).unwrap();
+        let stats = b.bench(name, || trainer.epoch(&grid).unwrap());
+        println!(
+            "  -> {:.0} epochs/s ({:.0} episodes/s); paper's 40k-epoch budget ≈ {:.0}s at this rate",
+            1.0 / stats.median_s,
+            batch as f64 / stats.median_s,
+            40_000.0 * stats.median_s
+        );
+    }
+}

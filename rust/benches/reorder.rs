@@ -1,0 +1,35 @@
+//! Bench: Cuthill-McKee / RCM reordering throughput (the pre-processing
+//! stage of every experiment; paper §VI "the matrices are reordered … as
+//! the pre-processing").
+
+use autogmap::graph::synth;
+use autogmap::reorder::{cuthill_mckee, reorder, reverse_cuthill_mckee, Reordering};
+use autogmap::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let qm7 = synth::qm7_like(5828);
+    let qh882 = synth::qh882_like(882);
+    let qh1484 = synth::qh1484_like(1484);
+    let pl = synth::power_law(2000, 3, 1);
+
+    b.bench("cm/qm7_22", || cuthill_mckee(&qm7));
+    b.bench("cm/qh882", || cuthill_mckee(&qh882));
+    b.bench("cm/qh1484", || cuthill_mckee(&qh1484));
+    b.bench("cm/power_law_2000", || cuthill_mckee(&pl));
+    b.bench("rcm/qh882", || reverse_cuthill_mckee(&qh882));
+    b.bench("reorder_full/qh1484 (perm+permute+bw)", || {
+        reorder(&qh1484, Reordering::CuthillMckee)
+    });
+
+    // report achieved bandwidth so the bench doubles as a quality check
+    for (name, m) in [("qm7", &qm7), ("qh882", &qh882), ("qh1484", &qh1484)] {
+        let r = reorder(m, Reordering::CuthillMckee);
+        println!(
+            "quality {name}: bandwidth {} -> {}, profile {}",
+            r.bandwidth_before,
+            r.bandwidth_after,
+            r.matrix.profile()
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Bench: PJRT artifact latency — rollout sampling, greedy decode, and the
+//! REINFORCE train step, per controller configuration. These two calls per
+//! epoch dominate end-to-end training time, so this bench is the L2-side
+//! perf ledger (EXPERIMENTS.md §Perf).
+
+use autogmap::agent::params;
+use autogmap::runtime::{literal, Runtime};
+use autogmap::util::bench::Bencher;
+
+fn main() {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP rollout bench: {e}");
+            return;
+        }
+    };
+    let manifest = match rt.manifest() {
+        Ok(m) => m,
+        Err(e) => {
+            println!("SKIP rollout bench: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    let mut b = Bencher::new();
+    for name in ["qm7_diag", "qm7_dyn4", "qm7_fill_bilstm", "qh882_dyn6", "qh1484_dyn6"] {
+        let entry = manifest.config(name).unwrap().clone();
+        let p = params::init_params(&entry, 1);
+        let opt = params::AdamState::new(&entry);
+        let (bt, t) = (entry.batch, entry.steps);
+
+        let rollout = rt.load(entry.artifact("rollout").unwrap()).unwrap();
+        let mut inputs = params::to_literals(&entry, &p).unwrap();
+        inputs.push(literal::lit_u32_1d(&[1, 2]));
+        b.bench(&format!("rollout/{name} (B={bt},T={t})"), || {
+            rollout.run(&inputs).unwrap()
+        });
+
+        let greedy = rt.load(entry.artifact("greedy").unwrap()).unwrap();
+        let ginputs = params::to_literals(&entry, &p).unwrap();
+        b.bench(&format!("greedy/{name}"), || greedy.run(&ginputs).unwrap());
+
+        let train = rt.load(entry.artifact("train").unwrap()).unwrap();
+        let d = vec![0i32; bt * t];
+        let f = vec![0i32; bt * t];
+        let adv = vec![0.5f32; bt];
+        let mut tin = params::to_literals(&entry, &p).unwrap();
+        tin.extend(params::to_literals(&entry, &opt.m).unwrap());
+        tin.extend(params::to_literals(&entry, &opt.v).unwrap());
+        tin.push(literal::lit_scalar_i32(0));
+        tin.push(literal::lit_i32_2d(&d, bt, t).unwrap());
+        tin.push(literal::lit_i32_2d(&f, bt, t).unwrap());
+        tin.push(literal::lit_f32_1d(&adv));
+        tin.push(literal::lit_scalar_f32(0.01));
+        tin.push(literal::lit_scalar_f32(0.0));
+        b.bench(&format!("train_step/{name}"), || train.run(&tin).unwrap());
+    }
+
+    // blocked-MVM artifact (the L1 Pallas kernel through PJRT)
+    for name in ["mvm_qm7", "mvm_qh882"] {
+        let mv = manifest.mvm_entry(name).unwrap();
+        let exe = rt.load(&mv.artifact).unwrap();
+        let tiles = vec![0.5f32; mv.nb * mv.k * mv.k];
+        let x = vec![1.0f32; mv.nb * mv.k];
+        let onehot = {
+            let mut oh = vec![0.0f32; mv.nb * mv.nr];
+            for i in 0..mv.nb {
+                oh[i * mv.nr + (i % mv.nr)] = 1.0;
+            }
+            oh
+        };
+        let inputs = [
+            literal::lit_f32(&tiles, &[mv.nb as i64, mv.k as i64, mv.k as i64]).unwrap(),
+            literal::lit_f32(&x, &[mv.nb as i64, mv.k as i64]).unwrap(),
+            literal::lit_f32(&onehot, &[mv.nb as i64, mv.nr as i64]).unwrap(),
+        ];
+        b.bench(
+            &format!("block_mvm/{name} (NB={},K={})", mv.nb, mv.k),
+            || exe.run(&inputs).unwrap(),
+        );
+    }
+}

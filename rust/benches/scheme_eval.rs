@@ -1,0 +1,62 @@
+//! Bench: environment/reward evaluation throughput — the per-episode hot
+//! path of the L3 coordinator (Algo. 3 lines 3-7). One training epoch
+//! evaluates B=8 schemes, so eval throughput bounds epochs/s from the Rust
+//! side.
+
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::{evaluate, parse_actions, FillRule, RewardWeights};
+use autogmap::util::bench::{black_box, Bencher};
+use autogmap::util::rng::Pcg64;
+
+fn bench_dataset(b: &mut Bencher, name: &str, m: &autogmap::graph::Csr, grid: usize) {
+    let r = reorder(m, Reordering::CuthillMckee);
+    let g = GridSummary::new(&r.matrix, grid);
+    let w = RewardWeights::new(0.8);
+    let mut rng = Pcg64::seed_from_u64(1);
+    let n = g.n;
+    // pre-generate a pool of random action vectors (excluded from timing)
+    let pool: Vec<(Vec<u8>, Vec<usize>)> = (0..64)
+        .map(|_| {
+            (
+                (0..n - 1).map(|_| rng.below(2) as u8).collect(),
+                (0..n - 1).map(|_| rng.below(6) as usize).collect(),
+            )
+        })
+        .collect();
+    let mut i = 0;
+    b.bench(&format!("grid_summary/{name}"), || {
+        GridSummary::new(&r.matrix, grid)
+    });
+    b.bench(&format!("parse/{name}"), || {
+        let (d, f) = &pool[i % pool.len()];
+        i += 1;
+        parse_actions(n, d, f, FillRule::Dynamic { grades: 6 })
+    });
+    let schemes: Vec<_> = pool
+        .iter()
+        .map(|(d, f)| parse_actions(n, d, f, FillRule::Dynamic { grades: 6 }))
+        .collect();
+    let mut j = 0;
+    b.bench(&format!("evaluate/{name}"), || {
+        let s = &schemes[j % schemes.len()];
+        j += 1;
+        black_box(evaluate(s, &g, w))
+    });
+    let mut k = 0;
+    b.bench(&format!("parse+evaluate/{name}"), || {
+        let (d, f) = &pool[k % pool.len()];
+        k += 1;
+        let s = parse_actions(n, d, f, FillRule::Dynamic { grades: 6 });
+        black_box(evaluate(&s, &g, w))
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    bench_dataset(&mut b, "qm7_g2", &synth::qm7_like(5828), 2);
+    bench_dataset(&mut b, "qh882_g32", &synth::qh882_like(882), 32);
+    bench_dataset(&mut b, "qh1484_g32", &synth::qh1484_like(1484), 32);
+    // scalability stress: a 16k matrix at grid 64 (beyond the paper)
+    bench_dataset(&mut b, "synth16k_g64", &synth::banded_like(16384, 0.999, 9), 64);
+}

@@ -1,0 +1,332 @@
+//! Pure-Rust mirror of the L2 controller forward pass.
+//!
+//! Serves three purposes:
+//! 1. cross-validation: integration tests teacher-force the HLO rollout's
+//!    sampled actions through this mirror and assert the log-probs agree
+//!    to float tolerance (catching ABI drift between aot.py and the Rust
+//!    parameter layout);
+//! 2. a no-artifacts fallback (`--engine rust`) so every CLI command works
+//!    before `make artifacts`;
+//! 3. documentation-by-construction of the exact controller math
+//!    (gate packing (f,i,g,o), Algo. 1 double-step, fill masking).
+//!
+//! Mirrors `python/compile/model.py` exactly; gradient support is *not*
+//! mirrored (training always goes through the AOT train_step artifact).
+
+use crate::runtime::manifest::ControllerEntry;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Controller parameters as named row-major f32 tensors.
+pub type Params = BTreeMap<String, Vec<f32>>;
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// One fused LSTM step: returns (h, c). `xh` = [x, h_prev] concatenated,
+/// `w` is [(I+H), 4H] row-major, gate packing (f, i, g, o).
+fn lstm_step(xh: &[f32], c_prev: &[f32], w: &[f32], b: &[f32], hidden: usize) -> (Vec<f32>, Vec<f32>) {
+    let in_dim = xh.len();
+    let out_dim = 4 * hidden;
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    let mut z = b.to_vec();
+    for (i, &xi) in xh.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for (zj, wj) in z.iter_mut().zip(row.iter()) {
+            *zj += xi * wj;
+        }
+    }
+    let mut h = vec![0.0; hidden];
+    let mut c = vec![0.0; hidden];
+    for j in 0..hidden {
+        let f = sigmoid(z[j]);
+        let i = sigmoid(z[hidden + j]);
+        let g = z[2 * hidden + j].tanh();
+        let o = sigmoid(z[3 * hidden + j]);
+        c[j] = f * c_prev[j] + i * g;
+        h[j] = o * c[j].tanh();
+    }
+    (h, c)
+}
+
+fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&l| (l - max).exp()).sum::<f32>().ln() + max;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+/// Per-step FC head: logits = inp @ w_t + b_t, where `w_t` is
+/// [head_in, classes] row-major.
+fn head(inp: &[f32], w_t: &[f32], b_t: &[f32], classes: usize) -> Vec<f32> {
+    let mut out = b_t.to_vec();
+    for (i, &xi) in inp.iter().enumerate() {
+        for j in 0..classes {
+            out[j] += xi * w_t[i * classes + j];
+        }
+    }
+    out
+}
+
+/// Action selection policy for [`forward`].
+pub enum Select<'a> {
+    /// Multinomial sampling with this RNG.
+    Sample(&'a mut Pcg64),
+    /// Deterministic argmax.
+    Greedy,
+    /// Teacher-forced: score these given actions (d, f per step).
+    Teacher { d: &'a [i32], f: &'a [i32] },
+}
+
+/// One-episode rollout result.
+#[derive(Debug, Clone)]
+pub struct Episode {
+    pub d_actions: Vec<i32>,
+    pub f_actions: Vec<i32>,
+    pub logp: f32,
+    pub entropy: f32,
+}
+
+/// Run the controller for one episode (batch dim of 1 — the Rust mirror is
+/// for validation/fallback, not throughput).
+pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> Episode {
+    let hidden = entry.hidden;
+    let t_steps = entry.steps;
+    let fill = entry.fill_classes;
+    let head_in = if entry.bilstm { 2 * hidden } else { hidden };
+
+    let get = |name: &str| -> &[f32] {
+        params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    };
+    let lstm_w = get("lstm_w");
+    let lstm_b = get("lstm_b");
+
+    // BiLSTM auxiliary backward pass over learned embeddings.
+    let hb: Vec<Vec<f32>> = if entry.bilstm {
+        let emb = get("bwd_emb");
+        let bwd_w = get("bwd_w");
+        let bwd_b = get("bwd_b");
+        let mut h = vec![0.0; hidden];
+        let mut c = vec![0.0; hidden];
+        let mut rev = Vec::with_capacity(t_steps);
+        for t in (0..t_steps).rev() {
+            let x = &emb[t * hidden..(t + 1) * hidden];
+            let mut xh = x.to_vec();
+            xh.extend_from_slice(&h);
+            let (h2, c2) = lstm_step(&xh, &c, bwd_w, bwd_b, hidden);
+            h = h2;
+            c = c2;
+            rev.push(h.clone());
+        }
+        rev.reverse();
+        rev
+    } else {
+        Vec::new()
+    };
+
+    let mut x = get("x0").to_vec();
+    let mut h = vec![0.0f32; hidden];
+    let mut c = vec![0.0f32; hidden];
+    let mut logp = 0.0f32;
+    let mut entropy = 0.0f32;
+    let mut d_actions = Vec::with_capacity(t_steps);
+    let mut f_actions = Vec::with_capacity(t_steps);
+
+    let fc_d_w = get("fc_d_w");
+    let fc_d_b = get("fc_d_b");
+
+    for t in 0..t_steps {
+        // --- diagonal decision
+        let mut xh = x.clone();
+        xh.extend_from_slice(&h);
+        let (h1, c1) = lstm_step(&xh, &c, lstm_w, lstm_b, hidden);
+        let head_inp: Vec<f32> = if entry.bilstm {
+            h1.iter().chain(hb[t].iter()).cloned().collect()
+        } else {
+            h1.clone()
+        };
+        let logits_d = head(
+            &head_inp,
+            &fc_d_w[t * head_in * 2..(t + 1) * head_in * 2],
+            &fc_d_b[t * 2..(t + 1) * 2],
+            2,
+        );
+        let lsm_d = log_softmax(&logits_d);
+        let d = match &mut select {
+            Select::Sample(rng) => {
+                let w: Vec<f64> = lsm_d.iter().map(|&l| (l as f64).exp()).collect();
+                rng.multinomial(&w) as i32
+            }
+            Select::Greedy => argmax(&lsm_d),
+            Select::Teacher { d, .. } => d[t],
+        };
+        logp += lsm_d[d as usize];
+        entropy -= lsm_d.iter().map(|&l| l.exp() * l).sum::<f32>();
+        d_actions.push(d);
+
+        if fill > 0 {
+            // --- fill decision (always computed, masked by d == 0)
+            let fc_f_w = get("fc_f_w");
+            let fc_f_b = get("fc_f_b");
+            let mut xh2 = h1.clone();
+            xh2.extend_from_slice(&h1);
+            let (h2, c2) = lstm_step(&xh2, &c1, lstm_w, lstm_b, hidden);
+            let head_inp2: Vec<f32> = if entry.bilstm {
+                h2.iter().chain(hb[t].iter()).cloned().collect()
+            } else {
+                h2.clone()
+            };
+            let logits_f = head(
+                &head_inp2,
+                &fc_f_w[t * head_in * fill..(t + 1) * head_in * fill],
+                &fc_f_b[t * fill..(t + 1) * fill],
+                fill,
+            );
+            let lsm_f = log_softmax(&logits_f);
+            let f = match &mut select {
+                Select::Sample(rng) => {
+                    let w: Vec<f64> = lsm_f.iter().map(|&l| (l as f64).exp()).collect();
+                    rng.multinomial(&w) as i32
+                }
+                Select::Greedy => argmax(&lsm_f),
+                Select::Teacher { f, .. } => f[t],
+            };
+            f_actions.push(f);
+            if d == 0 {
+                logp += lsm_f[f as usize];
+                entropy -= lsm_f.iter().map(|&l| l.exp() * l).sum::<f32>();
+                h = h2;
+                c = c2;
+            } else {
+                h = h1;
+                c = c1;
+            }
+        } else {
+            f_actions.push(0);
+            h = h1;
+            c = c1;
+        }
+        x = h.clone();
+    }
+
+    Episode {
+        d_actions,
+        f_actions,
+        logp,
+        entropy,
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::params::init_params;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn entry(fill: usize, bilstm: bool) -> ControllerEntry {
+        let hidden = 6;
+        let n = 5;
+        let t = n - 1;
+        let head_in = if bilstm { 2 * hidden } else { hidden };
+        let mut params = vec![
+            ParamSpec { name: "x0".into(), shape: vec![hidden] },
+            ParamSpec { name: "lstm_w".into(), shape: vec![2 * hidden, 4 * hidden] },
+            ParamSpec { name: "lstm_b".into(), shape: vec![4 * hidden] },
+        ];
+        if bilstm {
+            params.push(ParamSpec { name: "bwd_emb".into(), shape: vec![t, hidden] });
+            params.push(ParamSpec { name: "bwd_w".into(), shape: vec![2 * hidden, 4 * hidden] });
+            params.push(ParamSpec { name: "bwd_b".into(), shape: vec![4 * hidden] });
+        }
+        params.push(ParamSpec { name: "fc_d_w".into(), shape: vec![t, head_in, 2] });
+        params.push(ParamSpec { name: "fc_d_b".into(), shape: vec![t, 2] });
+        if fill > 0 {
+            params.push(ParamSpec { name: "fc_f_w".into(), shape: vec![t, head_in, fill] });
+            params.push(ParamSpec { name: "fc_f_b".into(), shape: vec![t, fill] });
+        }
+        ControllerEntry {
+            name: "test".into(),
+            n,
+            hidden,
+            fill_classes: fill,
+            batch: 1,
+            bilstm,
+            steps: t,
+            params,
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn sample_emits_valid_actions() {
+        for (fill, bilstm) in [(0, false), (2, false), (4, false), (2, true)] {
+            let e = entry(fill, bilstm);
+            let params = init_params(&e, 42);
+            let mut rng = Pcg64::seed_from_u64(1);
+            let ep = forward(&e, &params, Select::Sample(&mut rng));
+            assert_eq!(ep.d_actions.len(), e.steps);
+            assert!(ep.d_actions.iter().all(|&d| d == 0 || d == 1));
+            if fill > 0 {
+                assert!(ep.f_actions.iter().all(|&f| (f as usize) < fill));
+            }
+            assert!(ep.logp < 0.0);
+            assert!(ep.entropy > 0.0);
+        }
+    }
+
+    #[test]
+    fn teacher_forcing_reproduces_sampled_logp() {
+        let e = entry(4, false);
+        let params = init_params(&e, 7);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let ep = forward(&e, &params, Select::Sample(&mut rng));
+        let scored = forward(
+            &e,
+            &params,
+            Select::Teacher {
+                d: &ep.d_actions,
+                f: &ep.f_actions,
+            },
+        );
+        assert!((scored.logp - ep.logp).abs() < 1e-5);
+        assert_eq!(scored.d_actions, ep.d_actions);
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let e = entry(2, true);
+        let params = init_params(&e, 9);
+        let a = forward(&e, &params, Select::Greedy);
+        let b = forward(&e, &params, Select::Greedy);
+        assert_eq!(a.d_actions, b.d_actions);
+        assert_eq!(a.f_actions, b.f_actions);
+    }
+
+    #[test]
+    fn fill_mask_excludes_fill_logp_when_all_extend() {
+        // teacher-force all-extend: fill actions must not affect logp.
+        let e = entry(4, false);
+        let params = init_params(&e, 11);
+        let d = vec![1; e.steps];
+        let f0 = vec![0; e.steps];
+        let f3 = vec![3; e.steps];
+        let a = forward(&e, &params, Select::Teacher { d: &d, f: &f0 });
+        let b = forward(&e, &params, Select::Teacher { d: &d, f: &f3 });
+        assert!((a.logp - b.logp).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,358 @@
+//! The RL agent driver: REINFORCE-with-baseline training loop (Algo. 2/3)
+//! executed against the AOT artifacts.
+//!
+//! Per epoch the coordinator makes exactly two PJRT calls:
+//!   1. `rollout_<cfg>` — samples a batch of B episodes on-device;
+//!   2. `train_<cfg>`   — teacher-forced REINFORCE + Adam update on-device;
+//! everything between (scheme parsing, the environment reward, the EMA
+//! baseline) is plain Rust on the grid prefix sums.
+
+pub mod complexity;
+pub mod lstm;
+pub mod params;
+
+use crate::graph::GridSummary;
+use crate::runtime::manifest::ControllerEntry;
+use crate::runtime::{literal, Executable, Runtime};
+use crate::scheme::{evaluate, parse_actions, EvalResult, FillRule, RewardWeights, Scheme};
+use crate::util::rng::Pcg64;
+use anyhow::{ensure, Context, Result};
+use params::{AdamState, Params};
+use std::sync::Arc;
+
+/// Training hyper-parameters (paper defaults where stated).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOptions {
+    pub lr: f32,
+    /// entropy bonus; 0 reproduces the paper exactly.
+    pub ent_coef: f32,
+    /// EMA decay of the reward baseline (Algo. 2 line 1).
+    pub baseline_decay: f64,
+    /// scalarization weights (Eq. 21).
+    pub weights: RewardWeights,
+    /// fill geometry rule (must agree with the artifact's fill_classes).
+    pub fill_rule: FillRule,
+    pub seed: u64,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            lr: 0.01,
+            ent_coef: 0.0,
+            baseline_decay: 0.95,
+            weights: RewardWeights::new(0.8),
+            fill_rule: FillRule::None,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-epoch statistics, logged by the coordinator.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_reward: f64,
+    pub max_reward: f64,
+    pub mean_coverage: f64,
+    pub mean_area: f64,
+    /// fraction of the batch reaching complete coverage
+    pub frac_complete: f64,
+    pub baseline: f64,
+    pub loss: f32,
+    pub mean_logp: f32,
+}
+
+/// Best-so-far complete-coverage solution.
+#[derive(Clone, Debug)]
+pub struct BestSolution {
+    pub scheme: Scheme,
+    pub eval: EvalResult,
+    pub epoch: usize,
+}
+
+/// REINFORCE trainer bound to one controller config + one matrix.
+pub struct Trainer {
+    pub entry: ControllerEntry,
+    rollout_exe: Arc<Executable>,
+    train_exe: Arc<Executable>,
+    greedy_exe: Option<Arc<Executable>>,
+    pub params: Params,
+    pub opt: AdamState,
+    /// Cached literal forms of params/m/v, reused as artifact inputs and
+    /// refreshed in-place from the train step's *output* literals — avoids
+    /// two Vec<f32> ↔ Literal conversions per epoch (EXPERIMENTS.md §Perf).
+    lits: Option<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)>,
+    pub baseline: f64,
+    baseline_init: bool,
+    rng: Pcg64,
+    pub opts: TrainOptions,
+    /// best *complete-coverage* solution by area (the paper's deployable pick)
+    pub best: Option<BestSolution>,
+    /// best solution by scalarized reward regardless of coverage (what the
+    /// paper's diagonal-only Table II rows report, e.g. C=0.875 A=0.438)
+    pub best_reward: Option<BestSolution>,
+    pub epoch: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, entry: ControllerEntry, opts: TrainOptions) -> Result<Trainer> {
+        validate_fill_rule(&entry, &opts.fill_rule)?;
+        let rollout_exe = rt.load(entry.artifact("rollout")?)?;
+        let train_exe = rt.load(entry.artifact("train")?)?;
+        let greedy_exe = entry
+            .artifacts
+            .get("greedy")
+            .map(|f| rt.load(f))
+            .transpose()?;
+        let params = params::init_params(&entry, opts.seed);
+        let opt = AdamState::new(&entry);
+        Ok(Trainer {
+            rng: Pcg64::seed_from_u64(opts.seed ^ 0x6167_656e_7400_0001),
+            entry,
+            rollout_exe,
+            train_exe,
+            greedy_exe,
+            params,
+            opt,
+            lits: None,
+            baseline: 0.0,
+            baseline_init: false,
+            opts,
+            best: None,
+            best_reward: None,
+            epoch: 0,
+        })
+    }
+
+    /// Restore params/opt/baseline from a checkpoint file.
+    pub fn restore(&mut self, path: &std::path::Path) -> Result<()> {
+        let (p, o, epoch, baseline) = params::load_checkpoint(path, &self.entry)?;
+        self.params = p;
+        self.opt = o;
+        self.lits = None; // invalidate cached literals
+        self.epoch = epoch;
+        self.baseline = baseline;
+        self.baseline_init = true;
+        Ok(())
+    }
+
+    /// Refresh the host-side Adam state from the cached device literals —
+    /// required before checkpointing (the hot loop keeps m/v only as
+    /// literals).
+    pub fn sync_host(&mut self) -> Result<()> {
+        if let Some((_, m_lits, v_lits)) = self.lits.as_ref() {
+            self.opt.m = params::from_literals(&self.entry, m_lits)?;
+            self.opt.v = params::from_literals(&self.entry, v_lits)?;
+        }
+        Ok(())
+    }
+
+    /// One REINFORCE epoch (Algo. 3 lines 2-8). Returns batch statistics.
+    pub fn epoch(&mut self, grid: &GridSummary) -> Result<EpochStats> {
+        let (b, t) = (self.entry.batch, self.entry.steps);
+        ensure!(
+            grid.n == self.entry.n,
+            "grid has {} cells but config {} expects {}",
+            grid.n,
+            self.entry.name,
+            self.entry.n
+        );
+
+        // --- sample B episodes on-device (param literals cached across epochs)
+        if self.lits.is_none() {
+            self.lits = Some((
+                params::to_literals(&self.entry, &self.params)?,
+                params::to_literals(&self.entry, &self.opt.m)?,
+                params::to_literals(&self.entry, &self.opt.v)?,
+            ));
+        }
+        let (p_lits, _, _) = self.lits.as_ref().unwrap();
+        let key = [self.rng.next_u32(), self.rng.next_u32()];
+        let mut inputs: Vec<&xla::Literal> = p_lits.iter().collect();
+        let key_lit = literal::lit_u32_1d(&key);
+        inputs.push(&key_lit);
+        let outs = self.rollout_exe.run_refs(&inputs)?;
+        ensure!(outs.len() == 4, "rollout returned {} outputs", outs.len());
+        let d_all = literal::to_vec_i32(&outs[0])?;
+        let f_all = literal::to_vec_i32(&outs[1])?;
+        ensure!(d_all.len() == b * t && f_all.len() == b * t);
+
+        // --- environment: parse + evaluate each episode
+        let evals = self.evaluate_batch(grid, &d_all, &f_all);
+        let rewards: Vec<f64> = evals.iter().map(|e| e.reward).collect();
+        let mean_reward = rewards.iter().sum::<f64>() / b as f64;
+        let max_reward = rewards.iter().cloned().fold(f64::MIN, f64::max);
+
+        // --- EMA baseline (Algo. 2 line 1)
+        if !self.baseline_init {
+            self.baseline = mean_reward;
+            self.baseline_init = true;
+        } else {
+            self.baseline = self.opts.baseline_decay * self.baseline
+                + (1.0 - self.opts.baseline_decay) * mean_reward;
+        }
+        let adv: Vec<f32> = rewards.iter().map(|r| (r - self.baseline) as f32).collect();
+
+        // --- track the best complete-coverage and best-reward solutions
+        for (i, e) in evals.iter().enumerate() {
+            if e.coverage_ratio >= 1.0 {
+                let better = match &self.best {
+                    None => true,
+                    Some(bst) => e.covered_area_units < bst.eval.covered_area_units,
+                };
+                if better {
+                    let scheme = self.parse_episode(grid, &d_all, &f_all, i);
+                    self.best = Some(BestSolution {
+                        scheme,
+                        eval: e.clone(),
+                        epoch: self.epoch,
+                    });
+                }
+            }
+            let better_reward = match &self.best_reward {
+                None => true,
+                Some(bst) => e.reward > bst.eval.reward,
+            };
+            if better_reward {
+                let scheme = self.parse_episode(grid, &d_all, &f_all, i);
+                self.best_reward = Some(BestSolution {
+                    scheme,
+                    eval: e.clone(),
+                    epoch: self.epoch,
+                });
+            }
+        }
+
+        // --- on-device REINFORCE + Adam step (inputs borrow the cached
+        // literals; outputs *become* the next epoch's cached literals)
+        let k = self.entry.params.len();
+        let (p_lits, m_lits, v_lits) = self.lits.as_ref().unwrap();
+        let t_lit = literal::lit_scalar_i32(self.opt.t);
+        let d_lit = literal::lit_i32_2d(&d_all, b, t)?;
+        let f_lit = literal::lit_i32_2d(&f_all, b, t)?;
+        let adv_lit = literal::lit_f32_1d(&adv);
+        let lr_lit = literal::lit_scalar_f32(self.opts.lr);
+        let ent_lit = literal::lit_scalar_f32(self.opts.ent_coef);
+        let mut tin: Vec<&xla::Literal> = Vec::with_capacity(3 * k + 6);
+        tin.extend(p_lits.iter());
+        tin.extend(m_lits.iter());
+        tin.extend(v_lits.iter());
+        tin.extend([&t_lit, &d_lit, &f_lit, &adv_lit, &lr_lit, &ent_lit]);
+        let mut touts = self.train_exe.run_refs(&tin)?;
+        ensure!(
+            touts.len() == 3 * k + 3,
+            "train returned {} outputs, expected {}",
+            touts.len(),
+            3 * k + 3
+        );
+        self.opt.t = touts[3 * k].to_vec::<i32>().context("adam t")?[0];
+        let loss = touts[3 * k + 1].to_vec::<f32>().context("loss")?[0];
+        let mean_logp = touts[3 * k + 2].to_vec::<f32>().context("mean_logp")?[0];
+        touts.truncate(3 * k);
+        let new_v: Vec<xla::Literal> = touts.split_off(2 * k);
+        let new_m: Vec<xla::Literal> = touts.split_off(k);
+        // keep the cheap Vec<f32> mirror in sync for checkpoints/inspection
+        self.params = params::from_literals(&self.entry, &touts)?;
+        self.lits = Some((touts, new_m, new_v));
+
+        let stats = EpochStats {
+            epoch: self.epoch,
+            mean_reward,
+            max_reward,
+            mean_coverage: evals.iter().map(|e| e.coverage_ratio).sum::<f64>() / b as f64,
+            mean_area: evals.iter().map(|e| e.area_ratio).sum::<f64>() / b as f64,
+            frac_complete: evals.iter().filter(|e| e.coverage_ratio >= 1.0).count() as f64
+                / b as f64,
+            baseline: self.baseline,
+            loss,
+            mean_logp,
+        };
+        self.epoch += 1;
+        Ok(stats)
+    }
+
+    /// Deterministic greedy decode with the current parameters.
+    pub fn greedy(&self, grid: &GridSummary) -> Result<(Scheme, EvalResult)> {
+        let exe = self
+            .greedy_exe
+            .as_ref()
+            .context("no greedy artifact for this config")?;
+        let inputs = params::to_literals(&self.entry, &self.params)?;
+        let outs = exe.run(&inputs)?;
+        let d_all = literal::to_vec_i32(&outs[0])?;
+        let f_all = literal::to_vec_i32(&outs[1])?;
+        let scheme = self.parse_episode(grid, &d_all, &f_all, 0);
+        let eval = evaluate(&scheme, grid, self.opts.weights);
+        Ok((scheme, eval))
+    }
+
+    fn parse_episode(
+        &self,
+        grid: &GridSummary,
+        d_all: &[i32],
+        f_all: &[i32],
+        i: usize,
+    ) -> Scheme {
+        let t = self.entry.steps;
+        let d: Vec<u8> = d_all[i * t..(i + 1) * t].iter().map(|&x| x as u8).collect();
+        let f: Vec<usize> = f_all[i * t..(i + 1) * t]
+            .iter()
+            .map(|&x| x as usize)
+            .collect();
+        parse_actions(grid.n, &d, &f, self.opts.fill_rule)
+    }
+
+    fn evaluate_batch(
+        &self,
+        grid: &GridSummary,
+        d_all: &[i32],
+        f_all: &[i32],
+    ) -> Vec<EvalResult> {
+        (0..self.entry.batch)
+            .map(|i| {
+                let s = self.parse_episode(grid, d_all, f_all, i);
+                evaluate(&s, grid, self.opts.weights)
+            })
+            .collect()
+    }
+}
+
+/// The artifact's fill head and the Rust geometry rule must agree on the
+/// number of classes.
+pub fn validate_fill_rule(entry: &ControllerEntry, rule: &FillRule) -> Result<()> {
+    let expected = rule.num_classes();
+    ensure!(
+        entry.fill_classes == expected,
+        "config {} has {} fill classes but rule {:?} implies {}",
+        entry.name,
+        entry.fill_classes,
+        rule,
+        expected
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    #[test]
+    fn fill_rule_mismatch_is_rejected() {
+        let entry = ControllerEntry {
+            name: "x".into(),
+            n: 4,
+            hidden: 2,
+            fill_classes: 4,
+            batch: 1,
+            bilstm: false,
+            steps: 3,
+            params: vec![ParamSpec { name: "x0".into(), shape: vec![2] }],
+            artifacts: Default::default(),
+        };
+        assert!(validate_fill_rule(&entry, &FillRule::None).is_err());
+        assert!(validate_fill_rule(&entry, &FillRule::Fixed { size: 1 }).is_err());
+        assert!(validate_fill_rule(&entry, &FillRule::Dynamic { grades: 4 }).is_ok());
+    }
+}

@@ -1,0 +1,270 @@
+//! Controller parameter store: initialization, flattening to the AOT ABI
+//! order, Adam state, and JSON checkpointing.
+
+pub use crate::agent::lstm::Params;
+use crate::runtime::manifest::ControllerEntry;
+use crate::util::json::{Json, num_arr, obj};
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Uniform(-0.1, 0.1) init — mirrors `model.init_params`' distribution
+/// (not its bit-stream: the seed only needs to be deterministic per run,
+/// the HLO artifacts never initialize parameters).
+pub fn init_params(entry: &ControllerEntry, seed: u64) -> Params {
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x7061_7261_6d73_0001); // "params"
+    let mut params = Params::new();
+    for spec in &entry.params {
+        let data: Vec<f32> = (0..spec.elements())
+            .map(|_| rng.uniform(-0.1, 0.1) as f32)
+            .collect();
+        params.insert(spec.name.clone(), data);
+    }
+    params
+}
+
+/// Zero-initialized tensors with the same shapes (Adam m/v).
+pub fn zeros_like(entry: &ControllerEntry) -> Params {
+    entry
+        .params
+        .iter()
+        .map(|s| (s.name.clone(), vec![0.0f32; s.elements()]))
+        .collect()
+}
+
+/// Full optimizer state (matches `model.adam_init`).
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Params,
+    pub v: Params,
+    pub t: i32,
+}
+
+impl AdamState {
+    pub fn new(entry: &ControllerEntry) -> AdamState {
+        AdamState {
+            m: zeros_like(entry),
+            v: zeros_like(entry),
+            t: 0,
+        }
+    }
+}
+
+/// Flatten params in ABI order into literals for an artifact call.
+pub fn to_literals(entry: &ControllerEntry, params: &Params) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::with_capacity(entry.params.len());
+    for spec in &entry.params {
+        let data = params
+            .get(&spec.name)
+            .with_context(|| format!("missing param {}", spec.name))?;
+        if data.len() != spec.elements() {
+            bail!(
+                "param {} has {} elements, ABI wants {:?}",
+                spec.name,
+                data.len(),
+                spec.shape
+            );
+        }
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        out.push(crate::runtime::literal::lit_f32(data, &dims)?);
+    }
+    Ok(out)
+}
+
+/// Read params back from artifact outputs (ABI order).
+pub fn from_literals(entry: &ControllerEntry, lits: &[xla::Literal]) -> Result<Params> {
+    if lits.len() < entry.params.len() {
+        bail!(
+            "expected {} param outputs, got {}",
+            entry.params.len(),
+            lits.len()
+        );
+    }
+    let mut params = Params::new();
+    for (spec, lit) in entry.params.iter().zip(lits.iter()) {
+        let data = lit
+            .to_vec::<f32>()
+            .with_context(|| format!("reading param {}", spec.name))?;
+        if data.len() != spec.elements() {
+            bail!(
+                "param {} output has {} elements, ABI wants {:?}",
+                spec.name,
+                data.len(),
+                spec.shape
+            );
+        }
+        params.insert(spec.name.clone(), data);
+    }
+    Ok(params)
+}
+
+/// Save a checkpoint (params + optimizer + bookkeeping) as JSON.
+pub fn save_checkpoint(
+    path: &Path,
+    entry: &ControllerEntry,
+    params: &Params,
+    opt: &AdamState,
+    epoch: usize,
+    baseline: f64,
+) -> Result<()> {
+    let tensors = |p: &Params| -> Json {
+        Json::Obj(
+            p.iter()
+                .map(|(k, v)| (k.clone(), num_arr(v.iter().map(|&x| x as f64))))
+                .collect(),
+        )
+    };
+    let doc = obj(vec![
+        ("config", Json::Str(entry.name.clone())),
+        ("epoch", Json::Num(epoch as f64)),
+        ("baseline", Json::Num(baseline)),
+        ("t", Json::Num(opt.t as f64)),
+        ("params", tensors(params)),
+        ("m", tensors(&opt.m)),
+        ("v", tensors(&opt.v)),
+    ]);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a checkpoint; validates shapes against the manifest entry.
+pub fn load_checkpoint(
+    path: &Path,
+    entry: &ControllerEntry,
+) -> Result<(Params, AdamState, usize, f64)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let doc = Json::parse(&text).context("checkpoint is not valid JSON")?;
+    if doc.get("config").as_str() != Some(entry.name.as_str()) {
+        bail!(
+            "checkpoint is for config {:?}, expected {:?}",
+            doc.get("config").as_str(),
+            entry.name
+        );
+    }
+    let read_tensors = |key: &str| -> Result<Params> {
+        let o = doc
+            .get(key)
+            .as_obj()
+            .with_context(|| format!("checkpoint missing {key}"))?;
+        let mut p = Params::new();
+        for spec in &entry.params {
+            let arr = o
+                .get(&spec.name)
+                .and_then(|v| v.as_arr())
+                .with_context(|| format!("checkpoint {key} missing {}", spec.name))?;
+            if arr.len() != spec.elements() {
+                bail!(
+                    "checkpoint {key}.{} has {} elements, ABI wants {:?}",
+                    spec.name,
+                    arr.len(),
+                    spec.shape
+                );
+            }
+            p.insert(
+                spec.name.clone(),
+                arr.iter()
+                    .map(|v| v.as_f64().map(|x| x as f32).context("non-number"))
+                    .collect::<Result<Vec<f32>>>()?,
+            );
+        }
+        Ok(p)
+    };
+    let params = read_tensors("params")?;
+    let opt = AdamState {
+        m: read_tensors("m")?,
+        v: read_tensors("v")?,
+        t: doc.get("t").as_i64().unwrap_or(0) as i32,
+    };
+    let epoch = doc.get("epoch").as_usize().unwrap_or(0);
+    let baseline = doc.get("baseline").as_f64().unwrap_or(0.0);
+    Ok((params, opt, epoch, baseline))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn entry() -> ControllerEntry {
+        ControllerEntry {
+            name: "ck".into(),
+            n: 4,
+            hidden: 3,
+            fill_classes: 2,
+            batch: 1,
+            bilstm: false,
+            steps: 3,
+            params: vec![
+                ParamSpec { name: "x0".into(), shape: vec![3] },
+                ParamSpec { name: "lstm_w".into(), shape: vec![6, 12] },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let e = entry();
+        let a = init_params(&e, 1);
+        let b = init_params(&e, 1);
+        assert_eq!(a, b);
+        let c = init_params(&e, 2);
+        assert_ne!(a, c);
+        for v in a.values().flatten() {
+            assert!(v.abs() <= 0.1);
+        }
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let e = entry();
+        let p = init_params(&e, 3);
+        let lits = to_literals(&e, &p).unwrap();
+        assert_eq!(lits.len(), 2);
+        let back = from_literals(&e, &lits).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let e = entry();
+        let p = init_params(&e, 4);
+        let mut opt = AdamState::new(&e);
+        opt.t = 17;
+        opt.m.get_mut("x0").unwrap()[0] = 0.5;
+        let dir = std::env::temp_dir().join("autogmap_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        save_checkpoint(&path, &e, &p, &opt, 42, 0.83).unwrap();
+        let (p2, opt2, epoch, baseline) = load_checkpoint(&path, &e).unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(opt2.t, 17);
+        assert_eq!(opt2.m["x0"][0], 0.5);
+        assert_eq!(epoch, 42);
+        assert!((baseline - 0.83).abs() < 1e-12);
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_config() {
+        let e = entry();
+        let p = init_params(&e, 5);
+        let opt = AdamState::new(&e);
+        let dir = std::env::temp_dir().join("autogmap_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        save_checkpoint(&path, &e, &p, &opt, 0, 0.0).unwrap();
+        let mut other = entry();
+        other.name = "different".into();
+        assert!(load_checkpoint(&path, &other).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let e = entry();
+        let mut p = init_params(&e, 6);
+        p.get_mut("x0").unwrap().push(0.0);
+        assert!(to_literals(&e, &p).is_err());
+    }
+}

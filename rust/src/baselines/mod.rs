@@ -1,0 +1,219 @@
+//! Baseline mapping strategies the paper compares against (Table II and
+//! §Related Work), plus two oracles used for ablations:
+//!
+//! - **Vanilla**: fixed-size diagonal blocks (GraphR/[6]-style static
+//!   partition restricted to the diagonal).
+//! - **Vanilla+Fill**: Vanilla plus a fixed-size fill block pair at every
+//!   junction (Balog et al. [6]: "a batch of diagonal-blocks and two
+//!   additional batches of blocks to fill the gap", all sizes static).
+//! - **GraphSAR-like**: sparsity-aware recursive partition (Dai et al.
+//!   [2]): tile the whole matrix in `coarse`-cell blocks; store a block
+//!   whole when its density > 0.5, otherwise subdivide into quadrants and
+//!   keep only non-empty ones (recursing down to 1 cell).
+//! - **GraphR-like**: static whole-matrix tiling keeping non-empty tiles.
+//! - **DP oracle**: *optimal* diagonal-only complete-coverage partition
+//!   (min total area such that every nnz falls inside a diagonal block) by
+//!   O(N²) dynamic programming — a lower bound for diagonal-only RL.
+//! - **Exhaustive**: brute-force over all 2^(N-1) diagonal partitions
+//!   (N ≤ 20), optionally maximizing the scalarized reward instead of
+//!   requiring complete coverage.
+
+pub mod exhaustive;
+pub mod oracle;
+
+use crate::graph::GridSummary;
+use crate::scheme::{FillRule, GridRect, Scheme};
+
+/// Vanilla fixed-size diagonal partition: blocks of `block` grid cells.
+pub fn vanilla(n: usize, block: usize) -> Scheme {
+    assert!(block >= 1 && n >= 1);
+    let mut diag_len = Vec::with_capacity(n.div_ceil(block));
+    let mut left = n;
+    while left > 0 {
+        let l = left.min(block);
+        diag_len.push(l);
+        left -= l;
+    }
+    let fills = diag_len.len() - 1;
+    Scheme {
+        diag_len,
+        fill_len: vec![0; fills],
+    }
+}
+
+/// Vanilla + fixed-size fill at *every* junction (size `fill` grid cells,
+/// clamped to the junction's neighbours like every fill in this codebase).
+pub fn vanilla_fill(n: usize, block: usize, fill: usize) -> Scheme {
+    let mut s = vanilla(n, block);
+    let rule = FillRule::Fixed { size: fill };
+    for j in 0..s.fill_len.len() {
+        s.fill_len[j] = rule.fill_len(1, s.diag_len[j], s.diag_len[j + 1]);
+    }
+    s
+}
+
+/// GraphSAR-like sparsity-aware recursive partition over the whole grid.
+/// Returns disjoint rectangles covering every non-zero (complete coverage
+/// by construction). `coarse` is the top-level tile side in grid cells.
+pub fn graphsar(g: &GridSummary, coarse: usize) -> Vec<GridRect> {
+    assert!(coarse >= 1);
+    let mut out = Vec::new();
+    let n = g.n;
+    let mut r0 = 0;
+    while r0 < n {
+        let mut c0 = 0;
+        let r1 = (r0 + coarse).min(n);
+        while c0 < n {
+            let c1 = (c0 + coarse).min(n);
+            subdivide(g, GridRect { r0, r1, c0, c1 }, &mut out);
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    out
+}
+
+fn subdivide(g: &GridSummary, rect: GridRect, out: &mut Vec<GridRect>) {
+    let nnz = rect.nnz(g);
+    if nnz == 0 {
+        return;
+    }
+    let area = rect.area_units(g);
+    let density = nnz as f64 / area as f64;
+    let h = rect.r1 - rect.r0;
+    let w = rect.c1 - rect.c0;
+    if density > 0.5 || (h <= 1 && w <= 1) {
+        out.push(rect);
+        return;
+    }
+    // quadrant split (GraphSAR's 8x8 -> 4x4 progressive partition)
+    let rm = rect.r0 + h.div_ceil(2);
+    let cm = rect.c0 + w.div_ceil(2);
+    let quads = [
+        GridRect { r0: rect.r0, r1: rm, c0: rect.c0, c1: cm },
+        GridRect { r0: rect.r0, r1: rm, c0: cm, c1: rect.c1 },
+        GridRect { r0: rm, r1: rect.r1, c0: rect.c0, c1: cm },
+        GridRect { r0: rm, r1: rect.r1, c0: cm, c1: rect.c1 },
+    ];
+    for q in quads {
+        if !q.is_empty() {
+            subdivide(g, q, out);
+        }
+    }
+}
+
+/// GraphR-like static partition: tile the matrix with `tile`-cell blocks,
+/// keep the non-empty ones.
+pub fn graphr(g: &GridSummary, tile: usize) -> Vec<GridRect> {
+    assert!(tile >= 1);
+    let mut out = Vec::new();
+    let n = g.n;
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + tile).min(n);
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + tile).min(n);
+            let rect = GridRect { r0, r1, c0, c1 };
+            if rect.nnz(g) > 0 {
+                out.push(rect);
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::scheme::{evaluate, eval::evaluate_rects, RewardWeights};
+
+    #[test]
+    fn vanilla_partitions_exactly() {
+        let s = vanilla(11, 2); // QM7 grid-2: N=11
+        assert_eq!(s.diag_len, vec![2, 2, 2, 2, 2, 1]);
+        s.validate(11).unwrap();
+        let s = vanilla(9, 3);
+        assert_eq!(s.diag_len, vec![3, 3, 3]);
+        s.validate(9).unwrap();
+    }
+
+    #[test]
+    fn vanilla_matches_paper_table2_row1() {
+        // Vanilla block 4 on QM7 (grid 1, N=22): [4,4,4,4,4,2], area 0.174.
+        let m = synth::qm7_like(5828);
+        let g = crate::graph::GridSummary::new(&m, 1);
+        let s = vanilla(22, 4);
+        assert_eq!(s.diag_len, vec![4, 4, 4, 4, 4, 2]);
+        let e = evaluate(&s, &g, RewardWeights::new(0.8));
+        let expect_area = (5.0 * 16.0 + 4.0) / 484.0;
+        assert!((e.area_ratio - expect_area).abs() < 1e-12);
+        assert!((expect_area - 0.174).abs() < 1e-3); // paper: 0.174
+    }
+
+    #[test]
+    fn vanilla_fill_clamps_at_junctions() {
+        let s = vanilla_fill(11, 3, 3);
+        assert_eq!(s.diag_len, vec![3, 3, 3, 2]);
+        // junctions: min(3,3,3)=3, min(3,3,3)=3, min(3,3,2)=2
+        assert_eq!(s.fill_len, vec![3, 3, 2]);
+        s.validate(11).unwrap();
+    }
+
+    #[test]
+    fn vanilla_fill_matches_paper_block6_row() {
+        // Vanilla+Fill block 6 fill 6 on QM7: blocks [6,6,6,4],
+        // coverage 1.0, area 0.62 (paper Table II).
+        let m = synth::qm7_like(5828);
+        let g = crate::graph::GridSummary::new(&m, 1);
+        let s = vanilla_fill(22, 6, 6);
+        assert_eq!(s.diag_len, vec![6, 6, 6, 4]);
+        assert_eq!(s.fill_len, vec![6, 6, 4]);
+        let e = evaluate(&s, &g, RewardWeights::new(0.8));
+        // area = 3·36 + 16 + 2·(36+36+16) = 300 -> 0.6198
+        assert!((e.area_ratio - 300.0 / 484.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn graphsar_complete_coverage() {
+        let m = synth::qh882_like(882);
+        let g = crate::graph::GridSummary::new(&m, 4);
+        let rects = graphsar(&g, 8);
+        let e = evaluate_rects(&rects, &g, RewardWeights::new(0.8));
+        assert_eq!(e.coverage_ratio, 1.0);
+        assert!(e.area_ratio < 1.0);
+        // disjointness
+        for i in 0..rects.len() {
+            for j in (i + 1)..rects.len() {
+                assert!(!rects[i].intersects(&rects[j]));
+            }
+        }
+    }
+
+    #[test]
+    fn graphr_keeps_only_nonempty_tiles() {
+        let m = synth::qm7_like(5828);
+        let g = crate::graph::GridSummary::new(&m, 1);
+        let rects = graphr(&g, 8);
+        let e = evaluate_rects(&rects, &g, RewardWeights::new(0.8));
+        assert_eq!(e.coverage_ratio, 1.0);
+        assert!(rects.len() <= 9); // 3x3 tiling of a 22-cell grid
+        assert!(rects.iter().all(|r| r.nnz(&g) > 0));
+    }
+
+    #[test]
+    fn graphsar_beats_graphr_area_on_sparse() {
+        // sparsity-aware subdivision must never use more area than the
+        // static tiling at the same top-level tile size.
+        let m = synth::qh882_like(7);
+        let g = crate::graph::GridSummary::new(&m, 4);
+        let sar = evaluate_rects(&graphsar(&g, 8), &g, RewardWeights::new(0.8));
+        let gr = evaluate_rects(&graphr(&g, 8), &g, RewardWeights::new(0.8));
+        assert!(sar.area_ratio <= gr.area_ratio);
+        assert_eq!(sar.coverage_ratio, 1.0);
+        assert_eq!(gr.coverage_ratio, 1.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Experiment configuration: one JSON document fully describes a run
+//! (dataset, grid, reordering, controller artifact, fill geometry, reward
+//! weights, optimizer hyper-parameters). The `reproduce` drivers build
+//! these programmatically; users can also write them by hand and pass
+//! `--config file.json`.
+
+use crate::reorder::Reordering;
+use crate::scheme::{FillRule, RewardWeights};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Which matrix to run on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dataset {
+    /// synthetic QM7-5828-like 22×22 molecule (seed)
+    Qm7 { seed: u64 },
+    /// synthetic qh882-like 882×882 (seed)
+    Qh882 { seed: u64 },
+    /// synthetic qh1484-like 1484×1484 (seed)
+    Qh1484 { seed: u64 },
+    /// batch supermatrix of `count` QM7-like graphs
+    Batch { count: usize, seed: u64 },
+    /// a MatrixMarket file on disk
+    Mtx { path: String },
+}
+
+impl Dataset {
+    pub fn parse(kind: &str, seed: u64, path: Option<&str>) -> Result<Dataset> {
+        Ok(match kind {
+            "qm7" => Dataset::Qm7 { seed },
+            "qh882" => Dataset::Qh882 { seed },
+            "qh1484" => Dataset::Qh1484 { seed },
+            "batch" => Dataset::Batch { count: 4, seed },
+            "mtx" => Dataset::Mtx {
+                path: path.context("dataset kind `mtx` needs a path")?.to_string(),
+            },
+            other => bail!("unknown dataset {other:?} (qm7|qh882|qh1484|batch|mtx)"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Dataset::Qm7 { .. } => "qm7".into(),
+            Dataset::Qh882 { .. } => "qh882".into(),
+            Dataset::Qh1484 { .. } => "qh1484".into(),
+            Dataset::Batch { count, .. } => format!("batch{count}"),
+            Dataset::Mtx { path } => Path::new(path)
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_else(|| "mtx".into()),
+        }
+    }
+}
+
+/// A full experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: Dataset,
+    /// grid cell size in matrix units
+    pub grid: usize,
+    pub reordering: Reordering,
+    /// controller config name in the AOT manifest
+    pub controller: String,
+    pub fill_rule: FillRule,
+    /// reward weight a (Eq. 21)
+    pub reward_a: f64,
+    pub lr: f32,
+    pub ent_coef: f32,
+    pub baseline_decay: f64,
+    pub epochs: usize,
+    pub seed: u64,
+    /// log metrics every N epochs (0 = only at the end)
+    pub log_every: usize,
+}
+
+impl ExperimentConfig {
+    pub fn weights(&self) -> RewardWeights {
+        RewardWeights::new(self.reward_a)
+    }
+
+    pub fn to_json(&self) -> Json {
+        use crate::util::json::obj;
+        let (ds_kind, ds_seed, ds_path, ds_count) = match &self.dataset {
+            Dataset::Qm7 { seed } => ("qm7", *seed, None, 0),
+            Dataset::Qh882 { seed } => ("qh882", *seed, None, 0),
+            Dataset::Qh1484 { seed } => ("qh1484", *seed, None, 0),
+            Dataset::Batch { count, seed } => ("batch", *seed, None, *count),
+            Dataset::Mtx { path } => ("mtx", 0, Some(path.clone()), 0),
+        };
+        let (fill_kind, fill_arg) = match self.fill_rule {
+            FillRule::None => ("none", 0usize),
+            FillRule::Fixed { size } => ("fixed", size),
+            FillRule::Dynamic { grades } => ("dynamic", grades),
+        };
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("dataset", Json::Str(ds_kind.into())),
+            ("dataset_seed", Json::Num(ds_seed as f64)),
+            ("grid", Json::Num(self.grid as f64)),
+            (
+                "reorder",
+                Json::Str(
+                    match self.reordering {
+                        Reordering::Identity => "identity",
+                        Reordering::CuthillMckee => "cm",
+                        Reordering::ReverseCuthillMckee => "rcm",
+                    }
+                    .into(),
+                ),
+            ),
+            ("controller", Json::Str(self.controller.clone())),
+            ("fill", Json::Str(fill_kind.into())),
+            ("fill_arg", Json::Num(fill_arg as f64)),
+            ("reward_a", Json::Num(self.reward_a)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("ent_coef", Json::Num(self.ent_coef as f64)),
+            ("baseline_decay", Json::Num(self.baseline_decay)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("log_every", Json::Num(self.log_every as f64)),
+        ];
+        if let Some(p) = ds_path {
+            fields.push(("dataset_path", Json::Str(p)));
+        }
+        if ds_count > 0 {
+            fields.push(("dataset_count", Json::Num(ds_count as f64)));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ExperimentConfig> {
+        let name = doc
+            .get("name")
+            .as_str()
+            .context("config missing `name`")?
+            .to_string();
+        let ds_kind = doc.get("dataset").as_str().context("config missing `dataset`")?;
+        let ds_seed = doc.get("dataset_seed").as_i64().unwrap_or(0) as u64;
+        let mut dataset = Dataset::parse(ds_kind, ds_seed, doc.get("dataset_path").as_str())?;
+        if let Dataset::Batch { ref mut count, .. } = dataset {
+            if let Some(c) = doc.get("dataset_count").as_usize() {
+                *count = c;
+            }
+        }
+        let fill_kind = doc.get("fill").as_str().unwrap_or("none");
+        let fill_arg = doc.get("fill_arg").as_usize().unwrap_or(0);
+        let fill_rule = match fill_kind {
+            "none" => FillRule::None,
+            "fixed" => FillRule::Fixed { size: fill_arg.max(1) },
+            "dynamic" => FillRule::Dynamic { grades: fill_arg.max(2) },
+            other => bail!("unknown fill kind {other:?}"),
+        };
+        let reward_a = doc.get("reward_a").as_f64().unwrap_or(0.8);
+        if !(0.0..=1.0).contains(&reward_a) {
+            bail!("reward_a must be in [0,1], got {reward_a}");
+        }
+        Ok(ExperimentConfig {
+            name,
+            dataset,
+            grid: doc.get("grid").as_usize().context("config missing `grid`")?,
+            reordering: Reordering::parse(doc.get("reorder").as_str().unwrap_or("cm"))
+                .map_err(|e| anyhow::anyhow!(e))?,
+            controller: doc
+                .get("controller")
+                .as_str()
+                .context("config missing `controller`")?
+                .to_string(),
+            fill_rule,
+            reward_a,
+            lr: doc.get("lr").as_f64().unwrap_or(0.01) as f32,
+            ent_coef: doc.get("ent_coef").as_f64().unwrap_or(0.0) as f32,
+            baseline_decay: doc.get("baseline_decay").as_f64().unwrap_or(0.95),
+            epochs: doc.get("epochs").as_usize().unwrap_or(2000),
+            seed: doc.get("seed").as_i64().unwrap_or(0) as u64,
+            log_every: doc.get("log_every").as_usize().unwrap_or(50),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("config {}: {e}", path.display()))?;
+        Self::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "qm7_dyn4_a80".into(),
+            dataset: Dataset::Qm7 { seed: 5828 },
+            grid: 2,
+            reordering: Reordering::CuthillMckee,
+            controller: "qm7_dyn4".into(),
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            reward_a: 0.8,
+            lr: 0.01,
+            ent_coef: 0.0,
+            baseline_decay: 0.95,
+            epochs: 3000,
+            seed: 1,
+            log_every: 100,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = sample();
+        let doc = cfg.to_json();
+        let back = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.grid, cfg.grid);
+        assert_eq!(back.reordering, cfg.reordering);
+        assert_eq!(back.fill_rule, cfg.fill_rule);
+        assert_eq!(back.epochs, cfg.epochs);
+        assert_eq!(back.reward_a, cfg.reward_a);
+    }
+
+    #[test]
+    fn rejects_bad_fields() {
+        let mut doc = sample().to_json();
+        if let Json::Obj(ref mut m) = doc {
+            m.insert("reward_a".into(), Json::Num(1.5));
+        }
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        assert!(ExperimentConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Dataset::parse("bogus", 0, None).is_err());
+        assert!(Dataset::parse("mtx", 0, None).is_err());
+    }
+
+    #[test]
+    fn dataset_labels() {
+        assert_eq!(Dataset::Qm7 { seed: 1 }.label(), "qm7");
+        assert_eq!(Dataset::Batch { count: 4, seed: 1 }.label(), "batch4");
+        assert_eq!(
+            Dataset::Mtx { path: "/x/y/qh882.mtx".into() }.label(),
+            "qh882"
+        );
+    }
+}

@@ -1,0 +1,217 @@
+//! Metrics logging: CSV per-epoch history + JSON run summary, written under
+//! `runs/<experiment>/`. The CSV columns feed the training-curve figures
+//! (Figs. 9/11/13) and EXPERIMENTS.md.
+
+use crate::agent::{BestSolution, EpochStats};
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub const CSV_HEADER: &str =
+    "epoch,mean_reward,max_reward,mean_coverage,mean_area,frac_complete,baseline,loss,mean_logp";
+
+/// Append-oriented CSV logger.
+pub struct MetricsLog {
+    file: std::io::BufWriter<std::fs::File>,
+    pub path: PathBuf,
+    pub rows: usize,
+}
+
+impl MetricsLog {
+    pub fn create(dir: &Path) -> Result<MetricsLog> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+        let path = dir.join("metrics.csv");
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        writeln!(file, "{CSV_HEADER}")?;
+        Ok(MetricsLog {
+            file,
+            path,
+            rows: 0,
+        })
+    }
+
+    pub fn log(&mut self, s: &EpochStats) -> Result<()> {
+        writeln!(
+            self.file,
+            "{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.6},{:.6},{:.6}",
+            s.epoch,
+            s.mean_reward,
+            s.max_reward,
+            s.mean_coverage,
+            s.mean_area,
+            s.frac_complete,
+            s.baseline,
+            s.loss,
+            s.mean_logp
+        )?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush().context("flushing metrics csv")
+    }
+}
+
+/// Parse a metrics.csv back into per-column series (figure rendering).
+pub fn read_csv(path: &Path) -> Result<Vec<(String, Vec<f64>)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty metrics csv")?;
+    let names: Vec<String> = header.split(',').map(|s| s.to_string()).collect();
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); names.len()];
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        anyhow::ensure!(
+            fields.len() == names.len(),
+            "metrics.csv line {}: {} fields, expected {}",
+            lineno + 2,
+            fields.len(),
+            names.len()
+        );
+        for (c, f) in fields.iter().enumerate() {
+            cols[c].push(f.parse().with_context(|| {
+                format!("metrics.csv line {}: bad number {f:?}", lineno + 2)
+            })?);
+        }
+    }
+    Ok(names.into_iter().zip(cols).collect())
+}
+
+/// Final run summary (JSON): best solution + last-epoch stats.
+pub fn write_summary(
+    dir: &Path,
+    experiment: &str,
+    best: Option<&BestSolution>,
+    last: Option<&EpochStats>,
+    wall_seconds: f64,
+) -> Result<PathBuf> {
+    let best_json = match best {
+        None => Json::Null,
+        Some(b) => obj(vec![
+            (
+                "diag_blocks",
+                Json::Arr(
+                    b.scheme
+                        .diag_len
+                        .iter()
+                        .map(|&l| Json::Num(l as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "fill_blocks",
+                Json::Arr(
+                    b.scheme
+                        .fill_len
+                        .iter()
+                        .map(|&l| Json::Num(l as f64))
+                        .collect(),
+                ),
+            ),
+            ("coverage_ratio", Json::Num(b.eval.coverage_ratio)),
+            ("area_ratio", Json::Num(b.eval.area_ratio)),
+            ("sparsity", Json::Num(b.eval.sparsity)),
+            ("found_at_epoch", Json::Num(b.epoch as f64)),
+        ]),
+    };
+    let last_json = match last {
+        None => Json::Null,
+        Some(s) => obj(vec![
+            ("epoch", Json::Num(s.epoch as f64)),
+            ("mean_reward", Json::Num(s.mean_reward)),
+            ("mean_coverage", Json::Num(s.mean_coverage)),
+            ("mean_area", Json::Num(s.mean_area)),
+            ("frac_complete", Json::Num(s.frac_complete)),
+        ]),
+    };
+    let doc = obj(vec![
+        ("experiment", Json::Str(experiment.to_string())),
+        ("best", best_json),
+        ("last", last_json),
+        ("wall_seconds", Json::Num(wall_seconds)),
+    ]);
+    let path = dir.join("summary.json");
+    std::fs::write(&path, doc.to_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheme::Scheme;
+
+    fn stats(epoch: usize) -> EpochStats {
+        EpochStats {
+            epoch,
+            mean_reward: 0.8,
+            max_reward: 0.9,
+            mean_coverage: 0.95,
+            mean_area: 0.4,
+            frac_complete: 0.5,
+            baseline: 0.79,
+            loss: -0.1,
+            mean_logp: -3.5,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("autogmap_metrics_test");
+        let mut log = MetricsLog::create(&dir).unwrap();
+        for e in 0..5 {
+            log.log(&stats(e)).unwrap();
+        }
+        log.flush().unwrap();
+        let cols = read_csv(&log.path).unwrap();
+        assert_eq!(cols.len(), 9);
+        assert_eq!(cols[0].0, "epoch");
+        assert_eq!(cols[0].1, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(cols[3].1[0], 0.95);
+    }
+
+    #[test]
+    fn summary_written() {
+        let dir = std::env::temp_dir().join("autogmap_summary_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let best = BestSolution {
+            scheme: Scheme {
+                diag_len: vec![4, 7],
+                fill_len: vec![2],
+            },
+            eval: crate::scheme::evaluate(
+                &Scheme { diag_len: vec![2], fill_len: vec![] },
+                &crate::graph::GridSummary::new(&crate::graph::synth::qm7_like(1), 11),
+                crate::scheme::RewardWeights::new(0.8),
+            ),
+            epoch: 12,
+        };
+        let p = write_summary(&dir, "exp", Some(&best), Some(&stats(99)), 1.5).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("experiment").as_str(), Some("exp"));
+        assert_eq!(doc.get("best").get("found_at_epoch").as_usize(), Some(12));
+        assert_eq!(doc.get("last").get("epoch").as_usize(), Some(99));
+    }
+
+    #[test]
+    fn read_csv_rejects_corrupt() {
+        let dir = std::env::temp_dir().join("autogmap_metrics_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "a,b\n1\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::write(&p, "a,b\n1,x\n").unwrap();
+        assert!(read_csv(&p).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator: configuration, dataset preparation, the experiment
+//! runner, metrics logging, and the paper-reproduction drivers.
+
+pub mod config;
+pub mod dataset;
+pub mod metrics;
+pub mod reproduce;
+pub mod runner;
+
+pub use config::{Dataset, ExperimentConfig};
+pub use runner::{run_experiment, RunnerOptions, RunResult};

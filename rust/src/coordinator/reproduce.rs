@@ -1,0 +1,572 @@
+//! Reproduction drivers: regenerate every table and figure of the paper's
+//! evaluation section (see DESIGN.md §7 for the experiment index).
+//!
+//! Each driver prints the same rows/series the paper reports, side by side
+//! with the paper's own numbers where they exist. Absolute agreement is
+//! not expected on the qh-matrices (ours are structure-matched synthetics,
+//! DESIGN.md §6) — the comparison target is the *shape*: who wins, by
+//! roughly what factor, where the trade-offs move as a/grades change.
+
+use super::config::{Dataset, ExperimentConfig};
+use super::dataset::{load_matrix, prepare};
+use super::runner::{run_experiment, RunnerOptions};
+use crate::agent::complexity::complexity;
+use crate::baselines;
+use crate::graph::GridSummary;
+use crate::reorder::{reorder, Reordering};
+use crate::runtime::Runtime;
+use crate::scheme::{evaluate, eval::evaluate_rects, EvalResult, FillRule, RewardWeights, Scheme};
+use crate::viz;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// One printed row of Table II/IV.
+struct Row {
+    method: String,
+    config: String,
+    a: Option<f64>,
+    diag: Vec<usize>,
+    fill: Vec<usize>,
+    coverage: f64,
+    area: f64,
+    sparsity: f64,
+    paper: Option<(f64, f64)>, // paper (coverage, area) for the analogous row
+}
+
+fn print_rows(title: &str, rows: &[Row]) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<26} {:<14} {:>5}  {:>8} {:>8} {:>8}  {:>8} {:>8}  {}",
+        "method", "config", "a", "C_ratio", "A_ratio", "sparsity", "paper_C", "paper_A", "blocks (diag | fill)"
+    );
+    for r in rows {
+        let (pc, pa) = r
+            .paper
+            .map(|(c, a)| (format!("{c:.3}"), format!("{a:.3}")))
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        println!(
+            "{:<26} {:<14} {:>5}  {:>8.3} {:>8.3} {:>8.3}  {:>8} {:>8}  {:?} | {:?}",
+            r.method,
+            r.config,
+            r.a.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+            r.coverage,
+            r.area,
+            r.sparsity,
+            pc,
+            pa,
+            r.diag,
+            r.fill,
+        );
+    }
+}
+
+fn eval_to_row(
+    method: &str,
+    config: &str,
+    a: Option<f64>,
+    scheme: &Scheme,
+    grid: &GridSummary,
+    eval: &EvalResult,
+    paper: Option<(f64, f64)>,
+) -> Row {
+    Row {
+        method: method.to_string(),
+        config: config.to_string(),
+        a,
+        diag: scheme.diag_sizes_units(grid),
+        fill: scheme.fill_len.clone(),
+        coverage: eval.coverage_ratio,
+        area: eval.area_ratio,
+        sparsity: eval.sparsity,
+        paper,
+    }
+}
+
+/// RL training rows share this helper: run one experiment, convert the
+/// best complete-coverage solution to a table row.
+#[allow(clippy::too_many_arguments)]
+fn rl_row(
+    rt: &Runtime,
+    method: &str,
+    dataset: Dataset,
+    grid: usize,
+    controller: &str,
+    fill_rule: FillRule,
+    a: f64,
+    epochs: usize,
+    seed: u64,
+    out_root: &Path,
+    paper: Option<(f64, f64)>,
+) -> Result<(Row, super::runner::RunResult)> {
+    let cfg = ExperimentConfig {
+        name: format!("{controller}_a{:02}_s{seed}", (a * 100.0) as u32),
+        dataset,
+        grid,
+        reordering: Reordering::CuthillMckee,
+        controller: controller.to_string(),
+        fill_rule,
+        reward_a: a,
+        lr: 0.015,
+        ent_coef: 0.002,
+        baseline_decay: 0.95,
+        epochs,
+        seed,
+        log_every: (epochs / 200).max(1),
+    };
+    let opts = RunnerOptions {
+        out_root: out_root.to_path_buf(),
+        verbose: false,
+        ..Default::default()
+    };
+    let result = run_experiment(rt, &cfg, &opts)?;
+    // Diagonal-only rows mirror the paper: the reported solution is the
+    // best-by-reward one, which may be incomplete (paper Table II shows
+    // C=0.875/0.938 for LSTM+RL). Fill rows report the best complete-
+    // coverage solution, falling back to best-by-reward.
+    let pick = if fill_rule == FillRule::None {
+        result.best_reward.as_ref().or(result.best.as_ref())
+    } else {
+        result.best.as_ref().or(result.best_reward.as_ref())
+    };
+    let row = match pick {
+        Some(b) => eval_to_row(
+            method,
+            &cfg.controller,
+            Some(a),
+            &b.scheme,
+            &result.workload.grid,
+            &b.eval,
+            paper,
+        ),
+        None => {
+            // fall back to the full block so the table always has a row
+            let w = prepare(&cfg)?;
+            let full = Scheme { diag_len: vec![w.grid.n], fill_len: vec![] };
+            let e = evaluate(&full, &w.grid, cfg.weights());
+            eval_to_row(method, &cfg.controller, Some(a), &full, &w.grid, &e, paper)
+        }
+    };
+    Ok((row, result))
+}
+
+// ---------------------------------------------------------------------------
+// Table II — QM7-5828 comparison + ablation
+
+pub fn table2(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
+    let m = load_matrix(&Dataset::Qm7 { seed: 5828 })?;
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let w = RewardWeights::new(0.8);
+    let mut rows = Vec::new();
+
+    // --- Vanilla (fixed-size diagonal blocks, matrix-unit granularity)
+    let g1 = GridSummary::new(&r.matrix, 1);
+    for (block, paper) in [(4, (0.5, 0.174)), (6, (0.531, 0.256)), (8, (0.813, 0.339))] {
+        let s = baselines::vanilla(22, block);
+        let e = evaluate(&s, &g1, w);
+        rows.push(eval_to_row(
+            "Vanilla",
+            &format!("block {block}"),
+            None,
+            &s,
+            &g1,
+            &e,
+            Some(paper),
+        ));
+    }
+    // --- Vanilla + Fill
+    for (block, fill, paper) in [(4, 4, (0.938, 0.445)), (6, 6, (1.0, 0.62))] {
+        let s = baselines::vanilla_fill(22, block, fill);
+        let e = evaluate(&s, &g1, w);
+        rows.push(eval_to_row(
+            "Vanilla+Fill",
+            &format!("block {block} fill {fill}"),
+            None,
+            &s,
+            &g1,
+            &e,
+            Some(paper),
+        ));
+    }
+
+    // --- RL rows (grid 2, like the paper's "Grid size 2")
+    let qm7 = Dataset::Qm7 { seed: 5828 };
+    let specs: Vec<(&str, &str, FillRule, f64, Option<(f64, f64)>)> = vec![
+        ("LSTM+RL", "qm7_diag", FillRule::None, 0.6, Some((0.875, 0.438))),
+        ("LSTM+RL", "qm7_diag", FillRule::None, 0.8, Some((0.938, 0.537))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 1 }, 0.8, Some((0.938, 0.455))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 2 }, 0.8, Some((0.969, 0.388))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 2 }, 0.9, Some((1.0, 0.521))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 3 }, 0.9, Some((1.0, 0.537))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 3 }, 0.8, Some((1.0, 0.455))),
+        ("LSTM+RL+Fill", "qm7_fill", FillRule::Fixed { size: 3 }, 0.7, Some((0.969, 0.438))),
+        ("BiLSTM+RL+Fill", "qm7_fill_bilstm", FillRule::Fixed { size: 2 }, 0.9, Some((1.0, 0.504))),
+        ("BiLSTM+RL+Fill", "qm7_fill_bilstm", FillRule::Fixed { size: 3 }, 0.8, Some((1.0, 0.471))),
+        ("LSTM+RL+Dynamic-fill", "qm7_dyn4", FillRule::Dynamic { grades: 4 }, 0.9, Some((1.0, 0.558))),
+        ("LSTM+RL+Dynamic-fill", "qm7_dyn4", FillRule::Dynamic { grades: 4 }, 0.8, Some((1.0, 0.558))),
+        ("LSTM+RL+Dynamic-fill", "qm7_dyn4", FillRule::Dynamic { grades: 4 }, 0.75, Some((1.0, 0.43))),
+        ("LSTM+RL+Dynamic-fill", "qm7_dyn6", FillRule::Dynamic { grades: 6 }, 0.8, Some((1.0, 0.521))),
+        ("LSTM+RL+Dynamic-fill", "qm7_dyn6", FillRule::Dynamic { grades: 6 }, 0.75, Some((0.969, 0.397))),
+    ];
+    for (method, controller, rule, a, paper) in specs {
+        let (row, _) = rl_row(
+            rt, method, qm7.clone(), 2, controller, rule, a, epochs, 5828, out_root, paper,
+        )?;
+        rows.push(row);
+    }
+
+    // --- DP oracle reference (not in the paper; tightest diagonal-only)
+    let g2 = GridSummary::new(&r.matrix, 2);
+    if let Some(s) = baselines::oracle::optimal_diagonal(&g2) {
+        let e = evaluate(&s, &g2, w);
+        rows.push(eval_to_row("DP-oracle (diag only)", "grid 2", None, &s, &g2, &e, None));
+    }
+
+    print_rows(
+        "Table II — QM7-5828 (22×22, original sparsity 0.868)",
+        &rows,
+    );
+    println!("note: paper_C/paper_A are the corresponding rows of the paper's Table II.");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table III — complexity comparison
+
+pub fn table3(rt: &Runtime) -> Result<()> {
+    let manifest = rt.manifest()?;
+    println!("\n=== Table III — computational complexity (QM7 configs) ===");
+    println!(
+        "{:<22} {:>6} {:>4} {:>4} {:>4}  {:<26} {:>10}",
+        "method", "T_eff", "I", "H", "K", "complexity", "MACs/fwd"
+    );
+    for name in ["qm7_diag", "qm7_fill", "qm7_fill_bilstm", "qm7_dyn6"] {
+        let entry = manifest.config(name)?;
+        let c = complexity(entry);
+        println!(
+            "{:<22} {:>6} {:>4} {:>4} {:>4}  {:<26} {:>10}",
+            c.method, c.t, c.i, c.h, c.k, c.formula, c.macs
+        );
+    }
+    println!("paper: O(T(4IH+4H²+3H+HK)) with T=12/36, I=1, H=10, K=1 — same asymptotic family.");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — qh882 / qh1484 with LSTM+RL+Dynamic-fill
+
+pub fn table4(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
+    let mut rows = Vec::new();
+    let specs: Vec<(Dataset, &str, usize, f64, Option<(f64, f64)>)> = vec![
+        (Dataset::Qh882 { seed: 882 }, "qh882_dyn4", 4, 0.7, Some((0.998, 0.196))),
+        (Dataset::Qh882 { seed: 882 }, "qh882_dyn4", 4, 0.8, Some((0.998, 0.204))),
+        (Dataset::Qh882 { seed: 882 }, "qh882_dyn6", 6, 0.7, Some((0.995, 0.2))),
+        (Dataset::Qh882 { seed: 882 }, "qh882_dyn6", 6, 0.8, Some((1.0, 0.225))),
+        (Dataset::Qh1484 { seed: 1484 }, "qh1484_dyn4", 4, 0.7, Some((0.992, 0.148))),
+        (Dataset::Qh1484 { seed: 1484 }, "qh1484_dyn4", 4, 0.8, Some((0.999, 0.185))),
+        (Dataset::Qh1484 { seed: 1484 }, "qh1484_dyn6", 6, 0.7, Some((0.993, 0.173))),
+        (Dataset::Qh1484 { seed: 1484 }, "qh1484_dyn6", 6, 0.8, Some((1.0, 0.171))),
+    ];
+    for (ds, controller, grades, a, paper) in specs {
+        let label = ds.label();
+        let (row, _) = rl_row(
+            rt,
+            &format!("LSTM+RL+Dynamic ({label})"),
+            ds,
+            32,
+            controller,
+            FillRule::Dynamic { grades },
+            a,
+            epochs,
+            7,
+            out_root,
+            paper,
+        )?;
+        rows.push(row);
+    }
+    print_rows(
+        "Table IV — qh882 (sparsity 0.995) and qh1484 (sparsity 0.997), grid 32",
+        &rows,
+    );
+    println!("note: qh matrices are structure-matched synthetics (DESIGN.md §6); compare shapes, not decimals.");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figures
+
+/// Fig. 2 — coverage/area of hand-built schemes (complete-but-costly vs
+/// infeasible cheaper ones).
+pub fn figure2(out_dir: &Path) -> Result<()> {
+    let m = load_matrix(&Dataset::Qm7 { seed: 5828 })?;
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let g = GridSummary::new(&r.matrix, 2);
+    let w = RewardWeights::new(0.8);
+    let schemes = [
+        ("left: one full block (complete, costly)", Scheme { diag_len: vec![g.n], fill_len: vec![] }),
+        ("middle: two blocks (cheaper, incomplete)", Scheme { diag_len: vec![6, 5], fill_len: vec![0] }),
+        ("right: unit blocks (cheapest, infeasible)", Scheme { diag_len: vec![1; g.n], fill_len: vec![0; g.n - 1] }),
+    ];
+    println!("\n=== Figure 2 — schedule schemes trade coverage vs area ===");
+    std::fs::create_dir_all(out_dir)?;
+    for (name, s) in &schemes {
+        let e = evaluate(s, &g, w);
+        println!("{name}: coverage {:.3}, area {:.3}", e.coverage_ratio, e.area_ratio);
+        println!("{}", viz::ascii_scheme(&r.matrix, &g, s));
+        let file = out_dir.join(format!(
+            "fig2_{}.svg",
+            name.split(':').next().unwrap_or("scheme")
+        ));
+        std::fs::write(&file, viz::svg_scheme(&r.matrix, &g, Some(s), name))?;
+    }
+    Ok(())
+}
+
+/// Fig. 7 — dataset spy plots.
+pub fn figure7(out_dir: &Path) -> Result<()> {
+    println!("\n=== Figure 7 — dataset visualizations ===");
+    std::fs::create_dir_all(out_dir)?;
+    for (name, ds) in [
+        ("qm7_5828", Dataset::Qm7 { seed: 5828 }),
+        ("qh882", Dataset::Qh882 { seed: 882 }),
+        ("qh1484", Dataset::Qh1484 { seed: 1484 }),
+    ] {
+        let m = load_matrix(&ds)?;
+        let r = reorder(&m, Reordering::CuthillMckee);
+        println!(
+            "{name}: {}x{}, nnz {}, sparsity {:.3}, bandwidth {} -> {} after CM",
+            m.rows,
+            m.cols,
+            m.nnz(),
+            m.sparsity(),
+            r.bandwidth_before,
+            r.bandwidth_after
+        );
+        println!("{}", viz::ascii_spy(&r.matrix, 44));
+        let g = GridSummary::new(&r.matrix, if m.rows > 100 { 32 } else { 2 });
+        std::fs::write(
+            out_dir.join(format!("fig7_{name}.svg")),
+            viz::svg_scheme(&r.matrix, &g, None, name),
+        )?;
+    }
+    Ok(())
+}
+
+/// Figs. 8 / 10 / 12 — representative mapping-scheme visualizations from a
+/// short training run per dataset.
+pub fn figure_schemes(
+    rt: &Runtime,
+    dataset: Dataset,
+    grid: usize,
+    controller: &str,
+    grades: usize,
+    epochs: usize,
+    fig: &str,
+    out_dir: &Path,
+) -> Result<()> {
+    println!("\n=== Figure {fig} — representative mapping schemes ({}) ===", dataset.label());
+    std::fs::create_dir_all(out_dir)?;
+    let mut count = 0;
+    for (i, a) in [0.7, 0.75, 0.8, 0.9].iter().enumerate() {
+        let (row, result) = rl_row(
+            rt,
+            "LSTM+RL+Dynamic",
+            dataset.clone(),
+            grid,
+            controller,
+            FillRule::Dynamic { grades },
+            *a,
+            epochs,
+            100 + i as u64,
+            out_dir,
+            None,
+        )?;
+        let Some(best) = &result.best else { continue };
+        count += 1;
+        println!(
+            "scheme {count} (a={a}): diag {:?} fill {:?}  C={:.3} A={:.3}",
+            row.diag, row.fill, row.coverage, row.area
+        );
+        if result.workload.grid.dim <= 64 {
+            println!(
+                "{}",
+                viz::ascii_scheme(&result.workload.reordered.matrix, &result.workload.grid, &best.scheme)
+            );
+        }
+        std::fs::write(
+            out_dir.join(format!("fig{fig}_scheme{count}_a{:02}.svg", (a * 100.0) as u32)),
+            viz::svg_scheme(
+                &result.workload.reordered.matrix,
+                &result.workload.grid,
+                Some(&best.scheme),
+                &format!("{} a={a} C={:.3} A={:.3}", dataset.label(), row.coverage, row.area),
+            ),
+        )?;
+    }
+    anyhow::ensure!(count > 0, "no complete-coverage schemes found for figure {fig}");
+    Ok(())
+}
+
+/// Figs. 9 / 11 / 13 — training curves (coverage, area, reward vs epoch).
+pub fn figure_curves(
+    rt: &Runtime,
+    dataset: Dataset,
+    grid: usize,
+    controller: &str,
+    grades: usize,
+    a: f64,
+    epochs: usize,
+    fig: &str,
+    out_dir: &Path,
+) -> Result<()> {
+    println!(
+        "\n=== Figure {fig} — training curves ({}, grades {grades}, a={a}) ===",
+        dataset.label()
+    );
+    let cfg = ExperimentConfig {
+        name: format!("fig{fig}_{}", dataset.label()),
+        dataset,
+        grid,
+        reordering: Reordering::CuthillMckee,
+        controller: controller.to_string(),
+        fill_rule: FillRule::Dynamic { grades },
+        reward_a: a,
+        lr: 0.015,
+        ent_coef: 0.002,
+        baseline_decay: 0.95,
+        epochs,
+        seed: 11,
+        log_every: 1,
+    };
+    let opts = RunnerOptions {
+        out_root: out_dir.to_path_buf(),
+        verbose: false,
+        ..Default::default()
+    };
+    let result = run_experiment(rt, &cfg, &opts)?;
+    println!("{}", super::runner::curves_ascii(&result.history, 78, 16));
+    println!(
+        "best: {}",
+        super::runner::describe_best(&result.best, &result.workload.grid)
+    );
+    println!(
+        "full per-epoch CSV: {}",
+        result.run_dir.join("metrics.csv").display()
+    );
+    Ok(())
+}
+
+/// Dispatch `reproduce --table N | --figure N`.
+pub fn dispatch(
+    rt: &Runtime,
+    table: Option<usize>,
+    figure: Option<usize>,
+    epochs: Option<usize>,
+    out_root: &Path,
+) -> Result<()> {
+    let figs: PathBuf = out_root.join("figures");
+    match (table, figure) {
+        (Some(2), None) => table2(rt, epochs.unwrap_or(4000), out_root),
+        (Some(3), None) => table3(rt),
+        (Some(4), None) => table4(rt, epochs.unwrap_or(2500), out_root),
+        (None, Some(2)) => figure2(&figs),
+        (None, Some(7)) => figure7(&figs),
+        (None, Some(8)) => figure_schemes(
+            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn6", 6, epochs.unwrap_or(3000), "8", &figs,
+        ),
+        (None, Some(9)) => figure_curves(
+            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn4", 4, 0.75, epochs.unwrap_or(4000), "9", &figs,
+        ),
+        (None, Some(10)) => figure_schemes(
+            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, epochs.unwrap_or(2000), "10", &figs,
+        ),
+        (None, Some(11)) => figure_curves(
+            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, 0.8, epochs.unwrap_or(2500), "11", &figs,
+        ),
+        (None, Some(12)) => figure_schemes(
+            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, epochs.unwrap_or(2000), "12", &figs,
+        ),
+        (None, Some(13)) => figure_curves(
+            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, 0.8, epochs.unwrap_or(2500), "13", &figs,
+        ),
+        _ => anyhow::bail!(
+            "pass exactly one of --table {{2,3,4}} or --figure {{2,7,8,9,10,11,12,13}}"
+        ),
+    }
+}
+
+/// Baseline comparison printout (GraphSAR/GraphR-style whole-matrix
+/// partitions vs the diagonal+fill family) — §Related-Work ablation.
+pub fn baselines_report(ds: &Dataset, grid: usize, coarse: usize) -> Result<()> {
+    let m = load_matrix(ds)?;
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let g = GridSummary::new(&r.matrix, grid);
+    let w = RewardWeights::new(0.8);
+    println!(
+        "\n=== baselines on {} (grid {grid}, coarse tile {coarse}) ===",
+        ds.label()
+    );
+    let sar = baselines::graphsar(&g, coarse);
+    let e = evaluate_rects(&sar, &g, w);
+    println!(
+        "GraphSAR-like   blocks {:>5}  C {:.3}  A {:.3}",
+        e.num_blocks, e.coverage_ratio, e.area_ratio
+    );
+    let gr = baselines::graphr(&g, coarse);
+    let e = evaluate_rects(&gr, &g, w);
+    println!(
+        "GraphR-like     blocks {:>5}  C {:.3}  A {:.3}",
+        e.num_blocks, e.coverage_ratio, e.area_ratio
+    );
+    if let Some(s) = baselines::oracle::optimal_diagonal(&g) {
+        let e = evaluate(&s, &g, w);
+        println!(
+            "DP-oracle diag  blocks {:>5}  C {:.3}  A {:.3}",
+            s.diag_len.len(),
+            e.coverage_ratio,
+            e.area_ratio
+        );
+    }
+    for block in [2, 4, 8] {
+        let s = baselines::vanilla(g.n, block);
+        let e = evaluate(&s, &g, w);
+        println!(
+            "Vanilla b={block:<2}    blocks {:>5}  C {:.3}  A {:.3}",
+            s.diag_len.len(),
+            e.coverage_ratio,
+            e.area_ratio
+        );
+    }
+    // storage-fusion view (the paper's stated future work): crossbar cells
+    // for the mapped blocks + COO bytes for the uncovered remainder
+    let sc = crate::graph::storage::storage_cost(&r.matrix, 4);
+    println!(
+        "storage: dense {} B, COO {} B, CSR {} B",
+        sc.dense_bytes, sc.coo_bytes, sc.csr_bytes
+    );
+    for block in [1usize, 2, 4] {
+        let s = baselines::vanilla(g.n, block);
+        let h = crate::graph::storage::hybrid_cost(&s, &g, 4);
+        println!(
+            "hybrid  b={block:<2}    cells {:>8}  spill_nnz {:>6}  spill_coo {:>8} B",
+            h.crossbar_cells, h.spilled_nnz, h.spill_coo_bytes
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_runs_without_runtime() {
+        let dir = std::env::temp_dir().join("autogmap_fig2_test");
+        figure2(&dir).unwrap();
+        assert!(dir.join("fig2_left.svg").exists());
+    }
+
+    #[test]
+    fn baselines_report_runs() {
+        baselines_report(&Dataset::Qm7 { seed: 5828 }, 1, 8).unwrap();
+    }
+}

@@ -1,0 +1,204 @@
+//! Experiment runner: ties dataset + trainer + metrics together for one
+//! full training run (Algo. 3's outer loop with logging/checkpointing).
+
+use super::config::ExperimentConfig;
+use super::dataset::{prepare, Workload};
+use super::metrics::{write_summary, MetricsLog};
+use crate::agent::{BestSolution, EpochStats, TrainOptions, Trainer};
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Result of a completed run.
+pub struct RunResult {
+    pub best: Option<BestSolution>,
+    /// best-by-reward regardless of coverage (paper's diag-only rows)
+    pub best_reward: Option<BestSolution>,
+    pub last: Option<EpochStats>,
+    pub history: Vec<EpochStats>,
+    pub workload: Workload,
+    pub run_dir: PathBuf,
+    pub wall_seconds: f64,
+}
+
+/// Options controlling run output.
+#[derive(Clone, Debug)]
+pub struct RunnerOptions {
+    /// directory to place runs/<name>/ under
+    pub out_root: PathBuf,
+    /// write a checkpoint every N epochs (0 = never)
+    pub checkpoint_every: usize,
+    /// echo progress lines to stdout
+    pub verbose: bool,
+    /// keep the full in-memory history (figures); CSV is always written
+    pub keep_history: bool,
+}
+
+impl Default for RunnerOptions {
+    fn default() -> Self {
+        RunnerOptions {
+            out_root: PathBuf::from("runs"),
+            checkpoint_every: 0,
+            verbose: false,
+            keep_history: true,
+        }
+    }
+}
+
+/// Execute one experiment end-to-end.
+pub fn run_experiment(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    opts: &RunnerOptions,
+) -> Result<RunResult> {
+    let manifest = rt.manifest()?;
+    let entry = manifest.config(&cfg.controller)?.clone();
+    let workload = prepare(cfg)?;
+    anyhow::ensure!(
+        workload.grid.n == entry.n,
+        "dataset {} at grid {} yields {} cells; controller {} expects {} — \
+         pick a matching controller config",
+        cfg.dataset.label(),
+        cfg.grid,
+        workload.grid.n,
+        entry.name,
+        entry.n
+    );
+
+    let run_dir = opts.out_root.join(&cfg.name);
+    std::fs::create_dir_all(&run_dir)
+        .with_context(|| format!("creating {}", run_dir.display()))?;
+    std::fs::write(run_dir.join("config.json"), cfg.to_json().to_pretty())?;
+    let mut log = MetricsLog::create(&run_dir)?;
+
+    let topts = TrainOptions {
+        lr: cfg.lr,
+        ent_coef: cfg.ent_coef,
+        baseline_decay: cfg.baseline_decay,
+        weights: cfg.weights(),
+        fill_rule: cfg.fill_rule,
+        seed: cfg.seed,
+    };
+    let mut trainer = Trainer::new(rt, entry, topts)?;
+
+    let t0 = Instant::now();
+    let mut history = Vec::new();
+    let mut last: Option<EpochStats> = None;
+    for e in 0..cfg.epochs {
+        let stats = trainer.epoch(&workload.grid)?;
+        let should_log =
+            cfg.log_every > 0 && (e % cfg.log_every == 0 || e + 1 == cfg.epochs);
+        if should_log {
+            log.log(&stats)?;
+            if opts.verbose {
+                println!(
+                    "[{}] epoch {:>6}  R̄={:.4}  C̄={:.4}  Ā={:.4}  complete={:.0}%  best_area={}",
+                    cfg.name,
+                    stats.epoch,
+                    stats.mean_reward,
+                    stats.mean_coverage,
+                    stats.mean_area,
+                    stats.frac_complete * 100.0,
+                    trainer
+                        .best
+                        .as_ref()
+                        .map(|b| format!("{:.4}", b.eval.area_ratio))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+        }
+        if opts.checkpoint_every > 0 && (e + 1) % opts.checkpoint_every == 0 {
+            trainer.sync_host()?;
+            crate::agent::params::save_checkpoint(
+                &run_dir.join("checkpoint.json"),
+                &trainer.entry,
+                &trainer.params,
+                &trainer.opt,
+                trainer.epoch,
+                trainer.baseline,
+            )?;
+        }
+        if opts.keep_history {
+            history.push(stats.clone());
+        }
+        last = Some(stats);
+    }
+    log.flush()?;
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    write_summary(
+        &run_dir,
+        &cfg.name,
+        trainer.best.as_ref(),
+        last.as_ref(),
+        wall_seconds,
+    )?;
+
+    Ok(RunResult {
+        best: trainer.best.clone(),
+        best_reward: trainer.best_reward.clone(),
+        last,
+        history,
+        workload,
+        run_dir,
+        wall_seconds,
+    })
+}
+
+/// Render the run's training curves (coverage/area/reward vs epoch) as an
+/// ASCII chart — the terminal analogue of Figs. 9/11/13.
+pub fn curves_ascii(history: &[EpochStats], width: usize, height: usize) -> String {
+    let cov: Vec<f64> = history.iter().map(|s| s.mean_coverage).collect();
+    let area: Vec<f64> = history.iter().map(|s| s.mean_area).collect();
+    let reward: Vec<f64> = history.iter().map(|s| s.mean_reward).collect();
+    crate::viz::ascii_chart(
+        &[
+            ("coverage", &cov),
+            ("area", &area),
+            ("reward", &reward),
+        ],
+        width,
+        height,
+    )
+}
+
+/// Best-solution one-line description (Table II/IV row material).
+pub fn describe_best(best: &Option<BestSolution>, grid: &crate::graph::GridSummary) -> String {
+    match best {
+        None => "no complete-coverage solution found".to_string(),
+        Some(b) => format!(
+            "diag {:?}  fill {:?}  C={:.3} A={:.3} sparsity={:.3} (epoch {})",
+            b.scheme.diag_sizes_units(grid),
+            b.scheme.fill_len,
+            b.eval.coverage_ratio,
+            b.eval.area_ratio,
+            b.eval.sparsity,
+            b.epoch
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_ascii_smoke() {
+        let h: Vec<EpochStats> = (0..50)
+            .map(|e| EpochStats {
+                epoch: e,
+                mean_reward: 0.5 + e as f64 / 100.0,
+                max_reward: 0.9,
+                mean_coverage: 0.9,
+                mean_area: 0.5 - e as f64 / 200.0,
+                frac_complete: 0.5,
+                baseline: 0.5,
+                loss: 0.0,
+                mean_logp: -3.0,
+            })
+            .collect();
+        let s = curves_ascii(&h, 40, 10);
+        assert!(s.contains("coverage"));
+        assert!(s.contains("reward"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Peripheral-circuit and energy cost model.
+//!
+//! The paper's motivation for minimizing mapped area and for keeping
+//! same-row blocks connected is peripheral cost: every mapped cell costs
+//! memristors and write energy; every block row needs ADC + accumulation
+//! wiring; every block column needs DAC drive; and scattered blocks
+//! increase "the complexity of peripheral circuits and communication
+//! between sub-crossbars". This model turns a placed [`CrossbarArray`]
+//! into those counts with standard per-component constants (ISAAC/PRIME-
+//! class numbers; the absolute values matter less than the ordering of
+//! schemes, which is what the benches compare).
+
+use super::CrossbarArray;
+
+/// Per-component cost constants. Defaults follow ISAAC-era estimates:
+/// 1T1R cell read ~ 1 pJ/op at 1.2V, 8-bit SAR ADC ~ 2 pJ/sample,
+/// DAC ~ 0.5 pJ/sample, switch crossover ~ 0.1 pJ.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub cell_read_pj: f64,
+    pub adc_sample_pj: f64,
+    pub dac_sample_pj: f64,
+    pub switch_pj: f64,
+    /// crossbar read latency per tile (analog settle + ADC), ns
+    pub tile_read_ns: f64,
+    /// tiles that can be read concurrently (array-level parallelism)
+    pub parallel_tiles: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            cell_read_pj: 1.0,
+            adc_sample_pj: 2.0,
+            dac_sample_pj: 0.5,
+            switch_pj: 0.1,
+            tile_read_ns: 100.0,
+            parallel_tiles: 64,
+        }
+    }
+}
+
+/// Cost estimate for one MVM pass over a placed array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostEstimate {
+    pub tiles: usize,
+    /// programmed memristor cells (area proxy, the paper's Area metric)
+    pub cells: u64,
+    /// ADC conversions: one per row wire per tile
+    pub adc_samples: u64,
+    /// DAC drives: one per column wire per tile
+    pub dac_samples: u64,
+    pub energy_pj: f64,
+    pub latency_ns: f64,
+    /// distinct block-row segments (accumulation wire count)
+    pub row_segments: usize,
+}
+
+impl CostModel {
+    /// Estimate one y' = A'x' pass. `switch_crossovers` comes from
+    /// [`super::switch::SwitchCircuit::crossover_count`] (0 when no
+    /// reordering is applied).
+    pub fn estimate(&self, arr: &CrossbarArray, switch_crossovers: u64) -> CostEstimate {
+        let tiles = arr.tiles.len();
+        let k = arr.k as u64;
+        let cells = arr.area_cells();
+        let adc_samples = tiles as u64 * k;
+        let dac_samples = tiles as u64 * k;
+        let energy_pj = cells as f64 * self.cell_read_pj
+            + adc_samples as f64 * self.adc_sample_pj
+            + dac_samples as f64 * self.dac_sample_pj
+            + switch_crossovers as f64 * self.switch_pj * 2.0; // in + out
+        let waves = tiles.div_ceil(self.parallel_tiles.max(1));
+        let latency_ns = waves as f64 * self.tile_read_ns;
+        CostEstimate {
+            tiles,
+            cells,
+            adc_samples,
+            dac_samples,
+            energy_pj,
+            latency_ns,
+            row_segments: arr.row_segments(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::place;
+    use crate::graph::{synth, GridSummary};
+    use crate::reorder::{reorder, Reordering};
+    use crate::scheme::{parse_actions, FillRule, Scheme};
+
+    fn placed(diag_only: bool) -> CrossbarArray {
+        let m = synth::qm7_like(5828);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 2);
+        let s = if diag_only {
+            parse_actions(g.n, &[0; 10], &[0; 10], FillRule::None)
+        } else {
+            Scheme { diag_len: vec![g.n], fill_len: vec![] }
+        };
+        place(&r.matrix, &g, &s).unwrap()
+    }
+
+    #[test]
+    fn smaller_schemes_cost_less() {
+        let model = CostModel::default();
+        let unit = model.estimate(&placed(true), 0);
+        let full = model.estimate(&placed(false), 0);
+        assert!(unit.cells < full.cells);
+        assert!(unit.energy_pj < full.energy_pj);
+        assert!(unit.tiles < full.tiles);
+    }
+
+    #[test]
+    fn counts_are_consistent() {
+        let model = CostModel::default();
+        let arr = placed(false);
+        let est = model.estimate(&arr, 0);
+        assert_eq!(est.tiles, arr.tiles.len());
+        assert_eq!(est.cells, arr.area_cells());
+        assert_eq!(est.adc_samples, (arr.tiles.len() * arr.k) as u64);
+        assert!(est.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn switch_crossovers_add_energy() {
+        let model = CostModel::default();
+        let arr = placed(true);
+        let a = model.estimate(&arr, 0);
+        let b = model.estimate(&arr, 1000);
+        assert!(b.energy_pj > a.energy_pj);
+        assert_eq!(a.cells, b.cells);
+    }
+
+    #[test]
+    fn latency_scales_with_waves() {
+        let mut model = CostModel::default();
+        let arr = placed(false); // 121 tiles
+        model.parallel_tiles = 1;
+        let serial = model.estimate(&arr, 0);
+        model.parallel_tiles = 1024;
+        let parallel = model.estimate(&arr, 0);
+        assert!(serial.latency_ns > parallel.latency_ns);
+        assert_eq!(parallel.latency_ns, model.tile_read_ns);
+    }
+}

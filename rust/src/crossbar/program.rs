@@ -1,0 +1,174 @@
+//! Device programming model: matrix values → memristor conductances.
+//!
+//! Real memristive devices hold a small number of distinguishable
+//! conductance levels and suffer programming variation; the paper lists
+//! "variation and defect" as the device non-idealities its future work
+//! targets ([54]-[56]). This module injects both so experiments can
+//! measure how a mapping scheme's *numerical* fidelity degrades:
+//!
+//! - [`quantize`]: symmetric n-bit uniform quantization of tile weights
+//!   (per-array absolute max scaling, like ex-situ programming flows);
+//! - [`perturb`]: multiplicative Gaussian variation g ← g·(1 + σ·ξ),
+//!   the standard log-normal-ish small-σ device model;
+//! - [`stuck_at_faults`]: a fraction of cells stuck at zero conductance
+//!   (SA0 defects).
+
+use super::CrossbarArray;
+use crate::util::rng::Pcg64;
+
+/// Symmetric uniform `bits`-bit quantization (int-style: levels
+/// −(2^(b−1)−1) … +(2^(b−1)−1), per-array absolute-max scaling).
+/// Returns the quantized array and the scale used.
+pub fn quantize(arr: &CrossbarArray, bits: u32) -> (CrossbarArray, f32) {
+    assert!((2..=16).contains(&bits), "bits must be 2..=16");
+    let max_abs = arr
+        .tiles
+        .iter()
+        .flat_map(|t| t.g.iter())
+        .fold(0.0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return (arr.clone(), 1.0);
+    }
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let scale = max_abs / levels;
+    let mut out = arr.clone();
+    for t in &mut out.tiles {
+        for v in &mut t.g {
+            *v = (*v / scale).round() * scale;
+        }
+    }
+    (out, scale)
+}
+
+/// Multiplicative Gaussian conductance variation: g ← g · (1 + σξ), ξ~N(0,1).
+pub fn perturb(arr: &CrossbarArray, sigma: f64, seed: u64) -> CrossbarArray {
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x7661_7269_6174_696f); // "variatio"
+    let mut out = arr.clone();
+    for t in &mut out.tiles {
+        for v in &mut t.g {
+            if *v != 0.0 {
+                *v *= 1.0 + (sigma * rng.normal()) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Stuck-at-zero faults on a fraction `rate` of *programmed* (non-zero)
+/// cells.
+pub fn stuck_at_faults(arr: &CrossbarArray, rate: f64, seed: u64) -> CrossbarArray {
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x6661_756c_7473_0001); // "faults"
+    let mut out = arr.clone();
+    for t in &mut out.tiles {
+        for v in &mut t.g {
+            if *v != 0.0 && rng.bool(rate) {
+                *v = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Relative L2 error between an ideal and a degraded MVM result.
+pub fn relative_error(ideal: &[f64], actual: &[f64]) -> f64 {
+    let num: f64 = ideal
+        .iter()
+        .zip(actual.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum();
+    let den: f64 = ideal.iter().map(|a| a * a).sum();
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::place;
+    use crate::graph::{synth, GridSummary};
+    use crate::reorder::{reorder, Reordering};
+    use crate::scheme::Scheme;
+
+    fn array() -> (crate::graph::Csr, CrossbarArray) {
+        let m = synth::qm7_like(5828);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 2);
+        let s = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let arr = place(&r.matrix, &g, &s).unwrap();
+        (r.matrix, arr)
+    }
+
+    #[test]
+    fn high_bit_quantization_is_nearly_lossless() {
+        let (m, arr) = array();
+        let (q, _) = quantize(&arr, 8);
+        let x: Vec<f64> = (0..m.rows).map(|i| 0.1 * i as f64 - 1.0).collect();
+        let err = relative_error(&m.spmv(&x), &q.mvm(&x));
+        assert!(err < 1e-2, "8-bit error {err}");
+    }
+
+    #[test]
+    fn adjacency_is_exactly_representable_at_2bits() {
+        // 0/1 adjacency values survive 2-bit (levels -1,0,+1) exactly.
+        let (m, arr) = array();
+        let (q, _) = quantize(&arr, 2);
+        let x: Vec<f64> = (0..m.rows).map(|i| (i % 5) as f64).collect();
+        let err = relative_error(&m.spmv(&x), &q.mvm(&x));
+        assert!(err < 1e-12, "binary adjacency must quantize exactly, err {err}");
+    }
+
+    #[test]
+    fn quantization_error_decreases_with_bits() {
+        // use a weighted matrix for a non-trivial quantization ladder
+        let mut coo = crate::graph::Coo::new(16, 16);
+        let mut rng = Pcg64::seed_from_u64(5);
+        for i in 0..16 {
+            for j in 0..16 {
+                if rng.bool(0.4) {
+                    coo.push(i, j, rng.uniform(-2.0, 2.0));
+                }
+            }
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 4);
+        let s = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let arr = place(&m, &g, &s).unwrap();
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.7).sin()).collect();
+        let ideal = m.spmv(&x);
+        let mut last = f64::INFINITY;
+        for bits in [2, 4, 6, 8] {
+            let (q, _) = quantize(&arr, bits);
+            let err = relative_error(&ideal, &q.mvm(&x));
+            assert!(err <= last + 1e-12, "error should shrink with bits");
+            last = err;
+        }
+        assert!(last < 5e-2);
+    }
+
+    #[test]
+    fn variation_scales_with_sigma() {
+        let (m, arr) = array();
+        let x: Vec<f64> = (0..m.rows).map(|i| 1.0 + (i % 3) as f64).collect();
+        let ideal = m.spmv(&x);
+        let e_small = relative_error(&ideal, &perturb(&arr, 0.01, 1).mvm(&x));
+        let e_big = relative_error(&ideal, &perturb(&arr, 0.2, 1).mvm(&x));
+        assert!(e_small < e_big);
+        assert!(e_small < 0.05);
+    }
+
+    #[test]
+    fn faults_drop_contributions() {
+        let (m, arr) = array();
+        let x = vec![1.0; m.rows];
+        let faulty = stuck_at_faults(&arr, 0.5, 3);
+        let sum_ideal: f64 = arr.mvm(&x).iter().sum();
+        let sum_faulty: f64 = faulty.mvm(&x).iter().sum();
+        assert!(sum_faulty < sum_ideal);
+        let none = stuck_at_faults(&arr, 0.0, 3);
+        assert_eq!(none.mvm(&x), arr.mvm(&x));
+    }
+
+    use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,133 @@
+//! The switch circuit: input/output permutation around the crossbar array
+//! (Fig. 1, Eqs. 2-6).
+//!
+//! After Cuthill-McKee reordering A' = P A Pᵀ is programmed into the
+//! crossbars; at compute time the switch circuit applies x' = P x on the
+//! way in and y = Pᵀ y' on the way out, so callers see plain y = A x.
+
+use crate::graph::sparse::perm;
+
+/// A configured switch circuit for one permutation (perm[new] = old).
+#[derive(Clone, Debug)]
+pub struct SwitchCircuit {
+    perm: Vec<usize>,
+}
+
+impl SwitchCircuit {
+    pub fn new(permutation: Vec<usize>) -> SwitchCircuit {
+        assert!(
+            perm::is_permutation(&permutation),
+            "switch circuit needs a valid permutation"
+        );
+        SwitchCircuit { perm: permutation }
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// x' = P x (Eq. 4).
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        perm::apply(&self.perm, x)
+    }
+
+    /// y = Pᵀ y' (Eq. 6).
+    pub fn inverse(&self, y: &[f64]) -> Vec<f64> {
+        perm::apply_inverse(&self.perm, y)
+    }
+
+    /// Number of crossover switch points a crossbar-style permutation
+    /// network needs (inversions of the permutation) — a peripheral-cost
+    /// proxy for how "far" the reordering scrambles the I/O wiring.
+    pub fn crossover_count(&self) -> u64 {
+        // O(n log n) inversion count via merge sort
+        fn count(xs: &mut Vec<usize>) -> u64 {
+            let n = xs.len();
+            if n <= 1 {
+                return 0;
+            }
+            let mut right = xs.split_off(n / 2);
+            let mut inv = count(xs) + count(&mut right);
+            let mut merged = Vec::with_capacity(n);
+            let (mut i, mut j) = (0, 0);
+            while i < xs.len() && j < right.len() {
+                if xs[i] <= right[j] {
+                    merged.push(xs[i]);
+                    i += 1;
+                } else {
+                    inv += (xs.len() - i) as u64;
+                    merged.push(right[j]);
+                    j += 1;
+                }
+            }
+            merged.extend_from_slice(&xs[i..]);
+            merged.extend_from_slice(&right[j..]);
+            *xs = merged;
+            inv
+        }
+        let mut xs = self.perm.clone();
+        count(&mut xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_identity() {
+        let sw = SwitchCircuit::new(vec![0, 1, 2, 3]);
+        let x = vec![4.0, 3.0, 2.0, 1.0];
+        assert_eq!(sw.forward(&x), x);
+        assert_eq!(sw.inverse(&x), x);
+        assert_eq!(sw.crossover_count(), 0);
+    }
+
+    #[test]
+    fn forward_then_inverse_is_identity_property() {
+        check("switch_roundtrip", 50, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let mut p: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut p);
+            let sw = SwitchCircuit::new(p);
+            let x: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let back = sw.inverse(&sw.forward(&x));
+            if back != x {
+                return Err("roundtrip failed".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn crossover_count_matches_brute_force() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..20 {
+            let n = 2 + rng.below(40) as usize;
+            let mut p: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut p);
+            let sw = SwitchCircuit::new(p.clone());
+            let mut brute = 0u64;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if p[i] > p[j] {
+                        brute += 1;
+                    }
+                }
+            }
+            assert_eq!(sw.crossover_count(), brute);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "valid permutation")]
+    fn rejects_non_permutation() {
+        SwitchCircuit::new(vec![0, 0, 1]);
+    }
+}

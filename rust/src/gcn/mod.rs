@@ -1,0 +1,217 @@
+//! Spectral GCN workload (Eq. 1) — the motivating application the paper
+//! opens §III with:
+//!
+//!   Z_{l+1} = σ( D̂^{-1/2} Â D̂^{-1/2} Z_l W_l ),   Â = A + I
+//!
+//! The normalized adjacency is the sparse matrix mapped onto crossbars;
+//! feature propagation is a batch of MVMs through the mapped tiles, with
+//! the switch circuit applying P / Pᵀ around the array. The dense path is
+//! the correctness oracle; `examples/gcn_inference.rs` runs both and
+//! reports agreement + crossbar cost.
+
+use crate::crossbar::switch::SwitchCircuit;
+use crate::crossbar::CrossbarArray;
+use crate::graph::{Coo, Csr};
+use crate::util::rng::Pcg64;
+use anyhow::{ensure, Result};
+
+/// Symmetric-normalized adjacency with self-loops: D̂^{-1/2}(A+I)D̂^{-1/2}.
+pub fn normalized_adjacency(a: &Csr) -> Csr {
+    assert_eq!(a.rows, a.cols, "GCN adjacency must be square");
+    let n = a.rows;
+    // Â = A + I
+    let mut coo = Coo::new(n, n);
+    for r in 0..n {
+        for (i, &c) in a.row(r).iter().enumerate() {
+            if r != c {
+                coo.push(r, c, a.row_vals(r)[i]);
+            }
+        }
+        coo.push(r, r, a.get(r, r) + 1.0);
+    }
+    let ahat = coo.to_csr();
+    // degrees
+    let deg: Vec<f64> = (0..n).map(|r| ahat.row_vals(r).iter().sum()).collect();
+    let dinv_sqrt: Vec<f64> = deg
+        .iter()
+        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+        .collect();
+    let mut out = Coo::new(n, n);
+    for r in 0..n {
+        for (i, &c) in ahat.row(r).iter().enumerate() {
+            out.push(r, c, dinv_sqrt[r] * ahat.row_vals(r)[i] * dinv_sqrt[c]);
+        }
+    }
+    out.to_csr()
+}
+
+/// One GCN layer's dense weights, row-major [in_dim, out_dim].
+#[derive(Clone, Debug)]
+pub struct GcnLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: Vec<f64>,
+    pub relu: bool,
+}
+
+impl GcnLayer {
+    pub fn random(in_dim: usize, out_dim: usize, relu: bool, seed: u64) -> GcnLayer {
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x6763_6e5f_7731_0001);
+        let scale = (2.0 / in_dim as f64).sqrt();
+        GcnLayer {
+            in_dim,
+            out_dim,
+            w: (0..in_dim * out_dim)
+                .map(|_| rng.normal() * scale)
+                .collect(),
+            relu,
+        }
+    }
+
+    /// Z W (node-feature transform), Z row-major [n, in_dim].
+    fn transform(&self, z: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n * self.out_dim];
+        for r in 0..n {
+            for i in 0..self.in_dim {
+                let zv = z[r * self.in_dim + i];
+                if zv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w[i * self.out_dim..(i + 1) * self.out_dim];
+                for (o, wv) in out[r * self.out_dim..(r + 1) * self.out_dim]
+                    .iter_mut()
+                    .zip(wrow)
+                {
+                    *o += zv * wv;
+                }
+            }
+        }
+        out
+    }
+
+    fn activate(&self, x: &mut [f64]) {
+        if self.relu {
+            for v in x.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Dense oracle: σ(A_norm (Z W)).
+    pub fn forward_dense(&self, a_norm: &Csr, z: &[f64]) -> Vec<f64> {
+        let n = a_norm.rows;
+        assert_eq!(z.len(), n * self.in_dim);
+        let zw = self.transform(z, n);
+        // propagate each output column through the sparse matrix
+        let mut out = vec![0.0; n * self.out_dim];
+        let mut col = vec![0.0; n];
+        for o in 0..self.out_dim {
+            for r in 0..n {
+                col[r] = zw[r * self.out_dim + o];
+            }
+            let prop = a_norm.spmv(&col);
+            for r in 0..n {
+                out[r * self.out_dim + o] = prop[r];
+            }
+        }
+        self.activate(&mut out);
+        out
+    }
+
+    /// Crossbar path: σ(Pᵀ(A'(P(Z W)))) per feature column, where `arr`
+    /// holds A' = P A_norm Pᵀ and `sw` is the switch circuit for P.
+    pub fn forward_crossbar(
+        &self,
+        arr: &CrossbarArray,
+        sw: &SwitchCircuit,
+        z: &[f64],
+    ) -> Result<Vec<f64>> {
+        let n = arr.dim;
+        ensure!(sw.len() == n, "switch/array size mismatch");
+        ensure!(z.len() == n * self.in_dim, "feature matrix shape mismatch");
+        let zw = self.transform(z, n);
+        let mut out = vec![0.0; n * self.out_dim];
+        let mut col = vec![0.0; n];
+        for o in 0..self.out_dim {
+            for r in 0..n {
+                col[r] = zw[r * self.out_dim + o];
+            }
+            let xp = sw.forward(&col); // x' = P x   (Eq. 4)
+            let yp = arr.mvm(&xp); //      y' = A' x' (crossbar pass)
+            let y = sw.inverse(&yp); //    y = Pᵀ y'  (Eq. 6)
+            for r in 0..n {
+                out[r * self.out_dim + o] = y[r];
+            }
+        }
+        self.activate(&mut out);
+        Ok(out)
+    }
+}
+
+/// Max absolute elementwise difference — agreement metric for the example.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::place;
+    use crate::graph::{synth, GridSummary};
+    use crate::reorder::{reorder, Reordering};
+    use crate::scheme::Scheme;
+
+    #[test]
+    fn normalization_rows_bounded() {
+        let a = synth::qm7_like(5828);
+        let nrm = normalized_adjacency(&a);
+        assert_eq!(nrm.nnz(), a.nnz() + a.rows); // self loops added
+        // spectral norm of sym-normalized adjacency is <= 1; cheap proxy:
+        // every entry within (0, 1]
+        for r in 0..nrm.rows {
+            for &v in nrm.row_vals(r) {
+                assert!(v > 0.0 && v <= 1.0 + 1e-12);
+            }
+        }
+        assert!(nrm.is_symmetric());
+    }
+
+    #[test]
+    fn crossbar_path_matches_dense_on_complete_coverage() {
+        let a = synth::qm7_like(5828);
+        let nrm = normalized_adjacency(&a);
+        let r = reorder(&nrm, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 2);
+        let scheme = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let arr = place(&r.matrix, &g, &scheme).unwrap();
+        let sw = SwitchCircuit::new(r.perm.clone());
+        let layer = GcnLayer::random(6, 4, true, 1);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let z: Vec<f64> = (0..22 * 6).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let dense = layer.forward_dense(&nrm, &z);
+        let xbar = layer.forward_crossbar(&arr, &sw, &z).unwrap();
+        let diff = max_abs_diff(&dense, &xbar);
+        assert!(diff < 1e-6, "dense vs crossbar diff {diff}");
+    }
+
+    #[test]
+    fn relu_applied() {
+        let a = synth::qm7_like(5828);
+        let nrm = normalized_adjacency(&a);
+        let layer = GcnLayer::random(3, 3, true, 7);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let z: Vec<f64> = (0..22 * 3).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let out = layer.forward_dense(&nrm, &z);
+        assert!(out.iter().all(|&v| v >= 0.0));
+        let lin = GcnLayer { relu: false, ..layer };
+        let out2 = lin.forward_dense(&nrm, &z);
+        assert!(out2.iter().any(|&v| v < 0.0));
+    }
+
+    use crate::util::rng::Pcg64;
+}

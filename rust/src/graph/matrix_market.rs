@@ -1,0 +1,237 @@
+//! MatrixMarket (.mtx) reader/writer — the interchange format for the
+//! qh882/qh1484-class datasets (originally distributed as Harwell-Boeing /
+//! MatrixMarket files). Supports `matrix coordinate real|pattern|integer
+//! general|symmetric`, which covers every file this repo produces or loads.
+
+use crate::graph::sparse::{Coo, Csr};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum MtxError {
+    Io(std::io::Error),
+    Parse { line: usize, msg: String },
+}
+
+impl std::fmt::Display for MtxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MtxError::Io(e) => write!(f, "mtx io error: {e}"),
+            MtxError::Parse { line, msg } => write!(f, "mtx parse error at line {line}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MtxError {}
+
+impl From<std::io::Error> for MtxError {
+    fn from(e: std::io::Error) -> Self {
+        MtxError::Io(e)
+    }
+}
+
+fn perr(line: usize, msg: impl Into<String>) -> MtxError {
+    MtxError::Parse {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Read a MatrixMarket coordinate file into CSR. Symmetric files are
+/// expanded (both triangles materialized), matching how the paper treats
+/// adjacency matrices.
+pub fn read(path: &Path) -> Result<Csr, MtxError> {
+    let file = std::fs::File::open(path)?;
+    read_from(std::io::BufReader::new(file))
+}
+
+pub fn read_from<R: BufRead>(reader: R) -> Result<Csr, MtxError> {
+    let mut lines = reader.lines().enumerate();
+
+    // Header line.
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| perr(1, "empty file"))
+        .and_then(|(i, l)| l.map(|l| (i, l)).map_err(MtxError::from))?;
+    let head: Vec<String> = header.split_whitespace().map(|t| t.to_lowercase()).collect();
+    if head.len() < 5 || head[0] != "%%matrixmarket" || head[1] != "matrix" {
+        return Err(perr(1, format!("bad header {header:?}")));
+    }
+    if head[2] != "coordinate" {
+        return Err(perr(1, format!("unsupported format {}", head[2])));
+    }
+    let field = head[3].as_str();
+    if !matches!(field, "real" | "pattern" | "integer") {
+        return Err(perr(1, format!("unsupported field type {field}")));
+    }
+    let symmetry = head[4].as_str();
+    if !matches!(symmetry, "general" | "symmetric") {
+        return Err(perr(1, format!("unsupported symmetry {symmetry}")));
+    }
+
+    // Size line (skipping comments).
+    let mut size_line = None;
+    for (i, line) in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some((i + 1, line));
+        break;
+    }
+    let (lineno, size) = size_line.ok_or_else(|| perr(0, "missing size line"))?;
+    let dims: Vec<usize> = size
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| perr(lineno, format!("bad size token {t:?}"))))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err(perr(lineno, "size line must be `rows cols nnz`"));
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(rows, cols);
+    let mut seen = 0usize;
+    for (i, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        let need = if field == "pattern" { 2 } else { 3 };
+        if toks.len() < need {
+            return Err(perr(i + 1, format!("expected {need} tokens, got {}", toks.len())));
+        }
+        let r: usize = toks[0]
+            .parse()
+            .map_err(|_| perr(i + 1, format!("bad row index {:?}", toks[0])))?;
+        let c: usize = toks[1]
+            .parse()
+            .map_err(|_| perr(i + 1, format!("bad col index {:?}", toks[1])))?;
+        if r == 0 || c == 0 || r > rows || c > cols {
+            return Err(perr(i + 1, format!("index ({r},{c}) out of bounds {rows}x{cols}")));
+        }
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            toks[2]
+                .parse()
+                .map_err(|_| perr(i + 1, format!("bad value {:?}", toks[2])))?
+        };
+        let (r, c) = (r - 1, c - 1); // 1-based on disk
+        if symmetry == "symmetric" {
+            if c > r {
+                return Err(perr(i + 1, "symmetric file must store lower triangle"));
+            }
+            coo.push_sym(r, c, v);
+        } else {
+            coo.push(r, c, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(perr(0, format!("expected {nnz} entries, found {seen}")));
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CSR as `coordinate real`. If `m` is symmetric, stores the lower
+/// triangle with `symmetric` tagging to halve file size (like the originals).
+pub fn write(path: &Path, m: &Csr) -> Result<(), MtxError> {
+    let sym = m.is_symmetric();
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    writeln!(
+        w,
+        "%%MatrixMarket matrix coordinate real {}",
+        if sym { "symmetric" } else { "general" }
+    )?;
+    writeln!(w, "% generated by autogmap (synthetic dataset)")?;
+    let mut entries = Vec::new();
+    for r in 0..m.rows {
+        for (i, &c) in m.row(r).iter().enumerate() {
+            if !sym || c <= r {
+                entries.push((r, c, m.row_vals(r)[i]));
+            }
+        }
+    }
+    writeln!(w, "{} {} {}", m.rows, m.cols, entries.len())?;
+    for (r, c, v) in entries {
+        writeln!(w, "{} {} {}", r + 1, c + 1, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+
+    #[test]
+    fn roundtrip_general() {
+        let mut coo = Coo::new(3, 4);
+        coo.push(0, 1, 2.5);
+        coo.push(2, 3, -1.0);
+        let m = coo.to_csr();
+        let dir = std::env::temp_dir().join("autogmap_mtx_test_gen");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.mtx");
+        write(&p, &m).unwrap();
+        let m2 = read(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn roundtrip_symmetric() {
+        let mut coo = Coo::new(5, 5);
+        coo.push_sym(0, 4, 1.0);
+        coo.push_sym(1, 2, 3.0);
+        coo.push(3, 3, 2.0);
+        let m = coo.to_csr();
+        assert!(m.is_symmetric());
+        let dir = std::env::temp_dir().join("autogmap_mtx_test_sym");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.mtx");
+        write(&p, &m).unwrap();
+        // On-disk file must be tagged symmetric and store nnz = 3 entries.
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("symmetric"));
+        let m2 = read(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn reads_pattern_files() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 3\n";
+        let m = read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(m.nnz(), 3); // (1,0),(0,1),(2,2)
+        assert_eq!(m.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn rejects_corrupt_inputs() {
+        let cases = [
+            "",                                                     // empty
+            "%%MatrixMarket matrix array real general\n2 2 0\n",    // array format
+            "%%MatrixMarket matrix coordinate real general\n2 2\n", // bad size line
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n", // oob
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n", // wrong count
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 x 1.0\n", // bad token
+            "%%MatrixMarket matrix coordinate real symmetric\n2 2 1\n1 2 1.0\n", // upper tri
+        ];
+        for text in cases {
+            assert!(
+                read_from(std::io::Cursor::new(text)).is_err(),
+                "should reject {text:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% a comment\n\n2 2 1\n% mid\n1 1 5.0\n";
+        let m = read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(m.get(0, 0), 5.0);
+    }
+}

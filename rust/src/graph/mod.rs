@@ -1,0 +1,11 @@
+//! Sparse graph substrate: matrix types, MatrixMarket IO, grid coarsening,
+//! and synthetic dataset generators.
+
+pub mod grid;
+pub mod matrix_market;
+pub mod sparse;
+pub mod storage;
+pub mod synth;
+
+pub use grid::GridSummary;
+pub use sparse::{Coo, Csr};

@@ -1,0 +1,407 @@
+//! Sparse matrix core types: COO and CSR, tailored to symmetric graph
+//! adjacency matrices (the paper's workload) but general enough for the
+//! crossbar simulator's block extraction.
+
+/// Coordinate-format sparse matrix. Entries may arrive unsorted; `to_csr`
+/// sorts and deduplicates (last write wins, mirroring typical assembly).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols, "entry out of bounds");
+        self.entries.push((r, c, v));
+    }
+
+    /// Insert both (r,c) and (c,r); for building symmetric adjacencies.
+    pub fn push_sym(&mut self, r: usize, c: usize, v: f64) {
+        self.push(r, c, v);
+        if r != c {
+            self.push(c, r, v);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn to_csr(&self) -> Csr {
+        let mut entries = self.entries.clone();
+        entries.sort_by_key(|&(r, c, _)| (r, c));
+        entries.dedup_by(|later, earlier| {
+            if later.0 == earlier.0 && later.1 == earlier.1 {
+                // keep the later value (last write wins)
+                earlier.2 = later.2;
+                true
+            } else {
+                false
+            }
+        });
+        let mut indptr = vec![0usize; self.rows + 1];
+        for &(r, _, _) in &entries {
+            indptr[r + 1] += 1;
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices = entries.iter().map(|&(_, c, _)| c).collect();
+        let data = entries.iter().map(|&(_, _, v)| v).collect();
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+}
+
+/// Compressed-sparse-row matrix; the canonical in-memory representation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Length rows+1.
+    pub indptr: Vec<usize>,
+    /// Column index per entry, sorted within each row.
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Identity adjacency of size n (used for Â = A + I normalization).
+    pub fn identity(n: usize) -> Csr {
+        Csr {
+            rows: n,
+            cols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of zero entries, the paper's "sparsity of original matrix".
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Column indices of row r (sorted).
+    pub fn row(&self, r: usize) -> &[usize] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Values of row r.
+    pub fn row_vals(&self, r: usize) -> &[f64] {
+        &self.data[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let cols = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(i) => self.data[self.indptr[r] + i],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn degree(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// True when the sparsity pattern and values are symmetric.
+    pub fn is_symmetric(&self) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for r in 0..self.rows {
+            for (i, &c) in self.row(r).iter().enumerate() {
+                let v = self.data[self.indptr[r] + i];
+                if (self.get(c, r) - v).abs() > 1e-12 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Matrix bandwidth: max |r - c| over non-zeros.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0;
+        for r in 0..self.rows {
+            for &c in self.row(r) {
+                bw = bw.max(r.abs_diff(c));
+            }
+        }
+        bw
+    }
+
+    /// Envelope/profile: Σ_r (r - min col in row r), a finer reordering
+    /// quality metric than bandwidth.
+    pub fn profile(&self) -> usize {
+        let mut p = 0;
+        for r in 0..self.rows {
+            if let Some(&c0) = self.row(r).first() {
+                p += r.saturating_sub(c0);
+            }
+        }
+        p
+    }
+
+    /// Dense row-major expansion (small matrices / tests / viz only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for (i, &c) in self.row(r).iter().enumerate() {
+                d[r * self.cols + c] = self.data[self.indptr[r] + i];
+            }
+        }
+        d
+    }
+
+    /// y = A x (reference SpMV used by tests and the dense oracle).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "spmv dimension mismatch");
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for (i, &c) in self.row(r).iter().enumerate() {
+                acc += self.data[self.indptr[r] + i] * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+
+    /// Apply a symmetric permutation: B = P A Pᵀ where `perm[new] = old`
+    /// (i.e. row `new` of B is row `perm[new]` of A). Eq. (3) of the paper.
+    pub fn permute_sym(&self, perm: &[usize]) -> Csr {
+        assert_eq!(self.rows, self.cols, "symmetric permutation needs square");
+        assert_eq!(perm.len(), self.rows);
+        // inverse: inv[old] = new
+        let mut inv = vec![0usize; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let mut coo = Coo::new(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (i, &c) in self.row(r).iter().enumerate() {
+                coo.push(inv[r], inv[c], self.data[self.indptr[r] + i]);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Extract the dense k×k block with top-left corner (r0, c0), truncated
+    /// at the matrix edge (truncated area is zero-padded). Used by the
+    /// crossbar programming path.
+    pub fn dense_block(&self, r0: usize, c0: usize, k: usize) -> Vec<f64> {
+        let mut out = vec![0.0; k * k];
+        let rend = (r0 + k).min(self.rows);
+        for r in r0..rend {
+            let cols = self.row(r);
+            let vals = self.row_vals(r);
+            // binary search the first column >= c0
+            let start = cols.partition_point(|&c| c < c0);
+            for i in start..cols.len() {
+                let c = cols[i];
+                if c >= c0 + k || c >= self.cols {
+                    break;
+                }
+                out[(r - r0) * k + (c - c0)] = vals[i];
+            }
+        }
+        out
+    }
+
+    /// Count non-zeros inside the half-open rectangle rows [r0,r1) × cols [c0,c1).
+    pub fn nnz_in_rect(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> usize {
+        let mut n = 0;
+        for r in r0..r1.min(self.rows) {
+            let cols = self.row(r);
+            let lo = cols.partition_point(|&c| c < c0);
+            let hi = cols.partition_point(|&c| c < c1);
+            n += hi - lo;
+        }
+        n
+    }
+}
+
+/// Permutation helpers (Eqs. 4 and 6: x' = P x, y = Pᵀ y').
+pub mod perm {
+    /// Apply `out[new] = x[perm[new]]` (x' = P x with perm[new]=old).
+    pub fn apply(perm: &[usize], x: &[f64]) -> Vec<f64> {
+        perm.iter().map(|&old| x[old]).collect()
+    }
+
+    /// Apply the inverse: `out[perm[new]] = y[new]` (y = Pᵀ y').
+    pub fn apply_inverse(perm: &[usize], y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; y.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            out[old] = y[new];
+        }
+        out
+    }
+
+    /// Validity check: perm is a bijection on 0..n.
+    pub fn is_permutation(perm: &[usize]) -> bool {
+        let n = perm.len();
+        let mut seen = vec![false; n];
+        for &p in perm {
+            if p >= n || seen[p] {
+                return false;
+            }
+            seen[p] = true;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csr {
+        // [[1,2,0],[0,0,3],[4,0,5]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 2, 3.0);
+        coo.push(2, 0, 4.0);
+        coo.push(2, 2, 5.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn coo_to_csr_sorts_and_counts() {
+        let m = small();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.row(0), &[0, 1]);
+        assert_eq!(m.get(2, 0), 4.0);
+        assert_eq!(m.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn coo_dedup_last_wins() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 9.0);
+        let m = coo.to_csr();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(0, 0), 9.0);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = small();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(m.spmv(&x), vec![5.0, 9.0, 19.0]);
+    }
+
+    #[test]
+    fn bandwidth_and_profile() {
+        let m = small();
+        assert_eq!(m.bandwidth(), 2);
+        // row0 min col 0 -> 0; row1 min col 2 -> 0 (saturating); row2 min col 0 -> 2
+        assert_eq!(m.profile(), 2);
+    }
+
+    #[test]
+    fn permute_sym_roundtrip() {
+        let mut coo = Coo::new(4, 4);
+        coo.push_sym(0, 3, 1.0);
+        coo.push_sym(1, 2, 2.0);
+        coo.push(2, 2, 7.0);
+        let m = coo.to_csr();
+        let perm = vec![2, 0, 3, 1];
+        let b = m.permute_sym(&perm);
+        // b[new_r][new_c] == m[perm[new_r]][perm[new_c]]
+        for nr in 0..4 {
+            for nc in 0..4 {
+                assert_eq!(b.get(nr, nc), m.get(perm[nr], perm[nc]));
+            }
+        }
+        // permuting back with the inverse recovers m
+        let mut inv = vec![0usize; 4];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        assert_eq!(b.permute_sym(&inv), m);
+    }
+
+    #[test]
+    fn perm_vector_roundtrip() {
+        let permv = vec![2, 0, 3, 1];
+        let x = vec![10.0, 11.0, 12.0, 13.0];
+        let xp = perm::apply(&permv, &x);
+        assert_eq!(xp, vec![12.0, 10.0, 13.0, 11.0]);
+        assert_eq!(perm::apply_inverse(&permv, &xp), x);
+        assert!(perm::is_permutation(&permv));
+        assert!(!perm::is_permutation(&[0, 0, 1, 2]));
+        assert!(!perm::is_permutation(&[0, 5, 1, 2]));
+    }
+
+    #[test]
+    fn spmv_commutes_with_permutation() {
+        // y' = A'x' with A' = PAPᵀ, x' = Px must satisfy y = Pᵀ y' (Eq. 5/6).
+        let mut coo = Coo::new(5, 5);
+        coo.push_sym(0, 1, 1.0);
+        coo.push_sym(1, 3, 2.0);
+        coo.push_sym(2, 4, 3.0);
+        coo.push(3, 3, 4.0);
+        let a = coo.to_csr();
+        let permv = vec![4, 2, 0, 3, 1];
+        let ap = a.permute_sym(&permv);
+        let x = vec![1.0, -2.0, 0.5, 3.0, 2.0];
+        let y = a.spmv(&x);
+        let yp = ap.spmv(&perm::apply(&permv, &x));
+        let back = perm::apply_inverse(&permv, &yp);
+        for (u, v) in y.iter().zip(back.iter()) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_block_truncates() {
+        let m = small();
+        let b = m.dense_block(1, 1, 4); // overruns the 3x3 edge
+        assert_eq!(b.len(), 16);
+        assert_eq!(b[0 * 4 + 1], 3.0); // (1,2)
+        assert_eq!(b[1 * 4 + 1], 5.0); // (2,2)
+        assert_eq!(b.iter().filter(|v| **v != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn nnz_in_rect_counts() {
+        let m = small();
+        assert_eq!(m.nnz_in_rect(0, 3, 0, 3), 5);
+        assert_eq!(m.nnz_in_rect(0, 1, 0, 2), 2);
+        assert_eq!(m.nnz_in_rect(2, 3, 0, 1), 1);
+        assert_eq!(m.nnz_in_rect(1, 2, 0, 2), 0);
+    }
+
+    #[test]
+    fn symmetry_check() {
+        let mut coo = Coo::new(3, 3);
+        coo.push_sym(0, 1, 2.0);
+        coo.push(2, 2, 1.0);
+        assert!(coo.to_csr().is_symmetric());
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 1, 2.0);
+        assert!(!coo.to_csr().is_symmetric());
+    }
+}

@@ -1,0 +1,27 @@
+//! # AutoGMap
+//!
+//! Reproduction of *"AutoGMap: Learning to Map Large-scale Sparse Graphs on
+//! Memristive Crossbars"* (Lyu et al., IEEE TNNLS 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the coordinator — RL training loop, environment,
+//!   baselines, Cuthill-McKee reordering, crossbar simulator, CLI.
+//! - **L2 (python/compile/model.py)**: the LSTM controller rollout and the
+//!   REINFORCE+Adam train step, AOT-lowered to HLO text.
+//! - **L1 (python/compile/kernels/)**: Pallas kernels (fused LSTM cell,
+//!   blocked crossbar MVM) called from L2.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L1/L2
+//! computations once; the Rust binary loads them through PJRT.
+
+pub mod agent;
+pub mod baselines;
+pub mod coordinator;
+pub mod crossbar;
+pub mod gcn;
+pub mod graph;
+pub mod reorder;
+pub mod runtime;
+pub mod scheme;
+pub mod util;
+pub mod viz;

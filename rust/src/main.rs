@@ -1,0 +1,291 @@
+//! `autogmap` — CLI for the AutoGMap reproduction.
+//!
+//! Subcommands:
+//!   train      — run one RL experiment from a JSON config or flags
+//!   eval       — greedy-decode a trained checkpoint and print the scheme
+//!   baseline   — run the non-RL baselines on a dataset
+//!   reproduce  — regenerate a paper table (--table) or figure (--figure)
+//!   gen-data   — write the synthetic datasets to data/ as .mtx
+//!   visualize  — spy-plot a dataset (ASCII + SVG)
+//!   info       — runtime + manifest summary
+
+use autogmap::coordinator::config::{Dataset, ExperimentConfig};
+use autogmap::coordinator::{reproduce, runner, RunnerOptions};
+use autogmap::reorder::Reordering;
+use autogmap::runtime::Runtime;
+use autogmap::scheme::FillRule;
+use autogmap::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+autogmap — learning to map large-scale sparse graphs on memristive crossbars
+
+USAGE: autogmap <subcommand> [options]
+
+  train      --config cfg.json | [--dataset qm7|qh882|qh1484|batch|mtx
+             --mtx-path p --grid N --controller NAME --fill none|fixed|dynamic
+             --fill-arg N --reward-a F --lr F --epochs N --seed N]
+             [--out runs] [--checkpoint-every N] [--verbose]
+  eval       --config cfg.json --checkpoint runs/<name>/checkpoint.json
+  baseline   --dataset qm7|qh882|qh1484 [--grid N] [--coarse N]
+  reproduce  --table 2|3|4 | --figure 2|7|8|9|10|11|12|13 [--epochs N] [--out runs]
+  gen-data   [--out data]
+  visualize  --dataset qm7|qh882|qh1484 [--mtx-path p] [--out figures]
+  info
+
+  global: --artifacts DIR (default: artifacts)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let value_opts = [
+        "config", "dataset", "mtx-path", "grid", "controller", "fill", "fill-arg",
+        "reward-a", "lr", "ent-coef", "epochs", "seed", "out", "checkpoint-every",
+        "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
+    ];
+    let flag_opts = ["verbose", "help"];
+    let args = Args::parse(argv, &value_opts, &flag_opts, true)
+        .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
+    if args.flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let sub = args.subcommand.clone().unwrap_or_default();
+    match sub.as_str() {
+        "train" => cmd_train(&args, &artifacts),
+        "eval" => cmd_eval(&args, &artifacts),
+        "baseline" => cmd_baseline(&args),
+        "reproduce" => cmd_reproduce(&args, &artifacts),
+        "gen-data" => cmd_gen_data(&args),
+        "visualize" => cmd_visualize(&args),
+        "info" => cmd_info(&artifacts),
+        other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn dataset_from_args(args: &Args) -> anyhow::Result<Dataset> {
+    let kind = args.get_or("dataset", "qm7");
+    let seed = args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or_else(|| match kind {
+        "qm7" => 5828,
+        "qh882" => 882,
+        "qh1484" => 1484,
+        _ => 0,
+    });
+    Dataset::parse(kind, seed, args.get("mtx-path")).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    if let Some(path) = args.get("config") {
+        let mut cfg = ExperimentConfig::load(Path::new(path))?;
+        // flag overrides
+        if let Some(e) = args.get_usize("epochs").map_err(anyhow::Error::msg)? {
+            cfg.epochs = e;
+        }
+        if let Some(s) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+            cfg.seed = s;
+        }
+        return Ok(cfg);
+    }
+    let dataset = dataset_from_args(args)?;
+    let fill_kind = args.get_or("fill", "dynamic");
+    let fill_arg = args.get_usize("fill-arg").map_err(anyhow::Error::msg)?.unwrap_or(4);
+    let fill_rule = match fill_kind {
+        "none" => FillRule::None,
+        "fixed" => FillRule::Fixed { size: fill_arg.max(1) },
+        "dynamic" => FillRule::Dynamic { grades: fill_arg.max(2) },
+        other => anyhow::bail!("unknown fill {other:?}"),
+    };
+    let default_controller = match (&dataset, &fill_rule) {
+        (Dataset::Qm7 { .. }, FillRule::None) => "qm7_diag",
+        (Dataset::Qm7 { .. }, FillRule::Fixed { .. }) => "qm7_fill",
+        (Dataset::Qm7 { .. }, FillRule::Dynamic { grades: 6 }) => "qm7_dyn6",
+        (Dataset::Qm7 { .. }, FillRule::Dynamic { .. }) => "qm7_dyn4",
+        (Dataset::Qh882 { .. }, FillRule::Dynamic { grades: 6 }) => "qh882_dyn6",
+        (Dataset::Qh882 { .. }, _) => "qh882_dyn4",
+        (Dataset::Qh1484 { .. }, FillRule::Dynamic { grades: 6 }) => "qh1484_dyn6",
+        (Dataset::Qh1484 { .. }, _) => "qh1484_dyn4",
+        _ => anyhow::bail!("pass --controller for this dataset"),
+    };
+    let controller = args.get_or("controller", default_controller).to_string();
+    let grid_default = match &dataset {
+        Dataset::Qm7 { .. } => 2,
+        _ => 32,
+    };
+    Ok(ExperimentConfig {
+        name: format!("{}_{}", controller, args.get_or("reward-a", "0.8").replace('.', "")),
+        dataset,
+        grid: args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(grid_default),
+        reordering: Reordering::parse(args.get_or("reorder", "cm")).map_err(anyhow::Error::msg)?,
+        controller,
+        fill_rule,
+        reward_a: args.get_f64("reward-a").map_err(anyhow::Error::msg)?.unwrap_or(0.8),
+        lr: args.get_f64("lr").map_err(anyhow::Error::msg)?.unwrap_or(0.015) as f32,
+        ent_coef: args.get_f64("ent-coef").map_err(anyhow::Error::msg)?.unwrap_or(0.002) as f32,
+        baseline_decay: 0.95,
+        epochs: args.get_usize("epochs").map_err(anyhow::Error::msg)?.unwrap_or(4000),
+        seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(0),
+        log_every: args.get_usize("log-every").map_err(anyhow::Error::msg)?.unwrap_or(50),
+    })
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::new(artifacts)?;
+    let opts = RunnerOptions {
+        out_root: PathBuf::from(args.get_or("out", "runs")),
+        checkpoint_every: args
+            .get_usize("checkpoint-every")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(500),
+        verbose: args.flag("verbose"),
+        keep_history: true,
+    };
+    println!("training {} on {} for {} epochs …", cfg.controller, cfg.dataset.label(), cfg.epochs);
+    let result = runner::run_experiment(&rt, &cfg, &opts)?;
+    println!("{}", runner::curves_ascii(&result.history, 78, 14));
+    println!("best: {}", runner::describe_best(&result.best, &result.workload.grid));
+    println!(
+        "wall {:.1}s  ({:.1} epochs/s)  artifacts: {}",
+        result.wall_seconds,
+        cfg.epochs as f64 / result.wall_seconds,
+        result.run_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &str) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::new(artifacts)?;
+    let manifest = rt.manifest()?;
+    let entry = manifest.config(&cfg.controller)?.clone();
+    let workload = autogmap::coordinator::dataset::prepare(&cfg)?;
+    let topts = autogmap::agent::TrainOptions {
+        lr: cfg.lr,
+        ent_coef: cfg.ent_coef,
+        baseline_decay: cfg.baseline_decay,
+        weights: cfg.weights(),
+        fill_rule: cfg.fill_rule,
+        seed: cfg.seed,
+    };
+    let mut trainer = autogmap::agent::Trainer::new(&rt, entry, topts)?;
+    if let Some(ck) = args.get("checkpoint") {
+        trainer.restore(Path::new(ck))?;
+        println!("restored checkpoint {ck} (epoch {})", trainer.epoch);
+    }
+    let (scheme, eval) = trainer.greedy(&workload.grid)?;
+    println!(
+        "greedy scheme: diag {:?} fill {:?}",
+        scheme.diag_sizes_units(&workload.grid),
+        scheme.fill_len
+    );
+    println!(
+        "coverage {:.4}  area {:.4}  sparsity {:.4}  reward {:.4}",
+        eval.coverage_ratio, eval.area_ratio, eval.sparsity, eval.reward
+    );
+    if workload.grid.dim <= 64 {
+        println!(
+            "{}",
+            autogmap::viz::ascii_scheme(&workload.reordered.matrix, &workload.grid, &scheme)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> anyhow::Result<()> {
+    let ds = dataset_from_args(args)?;
+    let grid = args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(match ds {
+        Dataset::Qm7 { .. } => 1,
+        _ => 32,
+    });
+    let coarse = args.get_usize("coarse").map_err(anyhow::Error::msg)?.unwrap_or(8);
+    reproduce::baselines_report(&ds, grid, coarse)
+}
+
+fn cmd_reproduce(args: &Args, artifacts: &str) -> anyhow::Result<()> {
+    let table = args.get_usize("table").map_err(anyhow::Error::msg)?;
+    let figure = args.get_usize("figure").map_err(anyhow::Error::msg)?;
+    let epochs = args.get_usize("epochs").map_err(anyhow::Error::msg)?;
+    let out = PathBuf::from(args.get_or("out", "runs"));
+    // figures 2 and 7 need no PJRT runtime
+    match (table, figure) {
+        (None, Some(2)) => return reproduce::figure2(&out.join("figures")),
+        (None, Some(7)) => return reproduce::figure7(&out.join("figures")),
+        _ => {}
+    }
+    let rt = Runtime::new(artifacts)?;
+    reproduce::dispatch(&rt, table, figure, epochs, &out)
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.get_or("out", "data"));
+    let stats = autogmap::coordinator::dataset::generate_all(&out)?;
+    for (name, dim, nnz) in stats {
+        println!("{}: {dim}x{dim}, nnz {nnz} -> {}", name, out.join(format!("{name}.mtx")).display());
+    }
+    Ok(())
+}
+
+fn cmd_visualize(args: &Args) -> anyhow::Result<()> {
+    let ds = dataset_from_args(args)?;
+    let m = autogmap::coordinator::dataset::load_matrix(&ds)?;
+    let r = autogmap::reorder::reorder(&m, Reordering::CuthillMckee);
+    println!(
+        "{}: {}x{}, nnz {}, sparsity {:.4}, bandwidth {} -> {} (CM)",
+        ds.label(),
+        m.rows,
+        m.cols,
+        m.nnz(),
+        m.sparsity(),
+        r.bandwidth_before,
+        r.bandwidth_after
+    );
+    println!("{}", autogmap::viz::ascii_spy(&r.matrix, 44));
+    let out = PathBuf::from(args.get_or("out", "figures"));
+    std::fs::create_dir_all(&out)?;
+    let g = autogmap::graph::GridSummary::new(&r.matrix, if m.rows > 100 { 32 } else { 2 });
+    let file = out.join(format!("{}.svg", ds.label()));
+    std::fs::write(&file, autogmap::viz::svg_scheme(&r.matrix, &g, None, &ds.label()))?;
+    println!("wrote {}", file.display());
+    Ok(())
+}
+
+fn cmd_info(artifacts: &str) -> anyhow::Result<()> {
+    println!("{}", autogmap::runtime::cpu_client_smoke()?);
+    let rt = Runtime::new(artifacts)?;
+    match rt.manifest() {
+        Ok(m) => {
+            println!("manifest fingerprint: {}", m.fingerprint);
+            println!("controller configs:");
+            for (name, c) in &m.configs {
+                println!(
+                    "  {name:<18} N={:<3} T={:<3} H={:<3} F={:<2} B={:<2} bilstm={} params={}",
+                    c.n,
+                    c.steps,
+                    c.hidden,
+                    c.fill_classes,
+                    c.batch,
+                    c.bilstm,
+                    c.total_param_elements()
+                );
+            }
+            println!("mvm geometries:");
+            for (name, v) in &m.mvm {
+                println!("  {name:<18} K={} NB={} NR={}", v.k, v.nb, v.nr);
+            }
+        }
+        Err(e) => println!("no artifacts manifest ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Conversion helpers between Rust slices and `xla::Literal`s.
+
+use anyhow::{ensure, Context, Result};
+
+/// f32 literal with arbitrary shape.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    ensure!(
+        expect as usize == data.len(),
+        "literal shape {dims:?} needs {expect} elements, got {}",
+        data.len()
+    );
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .context("reshaping f32 literal")
+}
+
+/// 1-D f32 literal.
+pub fn lit_f32_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// 1-D u32 literal (PRNG keys).
+pub fn lit_u32_1d(data: &[u32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// 2-D i32 literal (action matrices, row-major).
+pub fn lit_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    ensure!(data.len() == rows * cols, "i32 literal shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshaping i32 literal")
+}
+
+/// Scalar literals.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a Vec<f32> from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Extract a Vec<i32> from a literal.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal to i32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32_2d(&[1, 2, 3], 2, 2).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(lit_scalar_f32(2.5).to_vec::<f32>().unwrap(), vec![2.5]);
+        assert_eq!(lit_scalar_i32(-3).to_vec::<i32>().unwrap(), vec![-3]);
+    }
+}

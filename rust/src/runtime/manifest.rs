@@ -1,0 +1,242 @@
+//! Reader for `artifacts/manifest.json`, the ABI contract emitted by
+//! `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One controller parameter: name + shape, in ABI order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One controller configuration (matches `model.ControllerConfig`).
+#[derive(Clone, Debug)]
+pub struct ControllerEntry {
+    pub name: String,
+    /// grid cells on the diagonal (N); steps = N-1.
+    pub n: usize,
+    pub hidden: usize,
+    pub fill_classes: usize,
+    pub batch: usize,
+    pub bilstm: bool,
+    pub steps: usize,
+    /// ordered parameter ABI
+    pub params: Vec<ParamSpec>,
+    /// artifact kind -> file name ("rollout" / "greedy" / "train")
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ControllerEntry {
+    pub fn total_param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    pub fn artifact(&self, kind: &str) -> Result<&str> {
+        self.artifacts
+            .get(kind)
+            .map(|s| s.as_str())
+            .with_context(|| format!("config {} has no {kind} artifact", self.name))
+    }
+}
+
+/// One blocked-MVM geometry.
+#[derive(Clone, Debug)]
+pub struct MvmEntry {
+    pub name: String,
+    /// crossbar tile side
+    pub k: usize,
+    /// max tiles per call
+    pub nb: usize,
+    /// output row segments
+    pub nr: usize,
+    pub artifact: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub fingerprint: String,
+    pub configs: BTreeMap<String, ControllerEntry>,
+    pub mvm: BTreeMap<String, MvmEntry>,
+}
+
+fn req_usize(v: &Json, key: &str, ctx: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .with_context(|| format!("{ctx}: missing/invalid integer field {key:?}"))
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest is not valid JSON")?;
+        let mut configs = BTreeMap::new();
+        let Some(cfg_obj) = root.get("configs").as_obj() else {
+            bail!("manifest missing `configs` object");
+        };
+        for (name, v) in cfg_obj {
+            let mut params = Vec::new();
+            for p in v.get("params").as_arr().unwrap_or(&[]) {
+                let pname = p
+                    .get("name")
+                    .as_str()
+                    .with_context(|| format!("config {name}: param missing name"))?;
+                let shape = p
+                    .get("shape")
+                    .as_arr()
+                    .with_context(|| format!("config {name}: param {pname} missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().context("non-integer dim"))
+                    .collect::<Result<Vec<_>>>()?;
+                params.push(ParamSpec {
+                    name: pname.to_string(),
+                    shape,
+                });
+            }
+            if params.is_empty() {
+                bail!("config {name} has no params");
+            }
+            let mut artifacts = BTreeMap::new();
+            if let Some(arts) = v.get("artifacts").as_obj() {
+                for (k, f) in arts {
+                    artifacts.insert(
+                        k.clone(),
+                        f.as_str()
+                            .with_context(|| format!("config {name}: bad artifact entry {k}"))?
+                            .to_string(),
+                    );
+                }
+            }
+            let ctx = format!("config {name}");
+            configs.insert(
+                name.clone(),
+                ControllerEntry {
+                    name: name.clone(),
+                    n: req_usize(v, "n", &ctx)?,
+                    hidden: req_usize(v, "hidden", &ctx)?,
+                    fill_classes: req_usize(v, "fill_classes", &ctx)?,
+                    batch: req_usize(v, "batch", &ctx)?,
+                    bilstm: v.get("bilstm").as_bool().unwrap_or(false),
+                    steps: req_usize(v, "steps", &ctx)?,
+                    params,
+                    artifacts,
+                },
+            );
+        }
+        let mut mvm = BTreeMap::new();
+        if let Some(mvm_obj) = root.get("mvm").as_obj() {
+            for (name, v) in mvm_obj {
+                let ctx = format!("mvm {name}");
+                mvm.insert(
+                    name.clone(),
+                    MvmEntry {
+                        name: name.clone(),
+                        k: req_usize(v, "k", &ctx)?,
+                        nb: req_usize(v, "nb", &ctx)?,
+                        nr: req_usize(v, "nr", &ctx)?,
+                        artifact: v
+                            .get("artifact")
+                            .as_str()
+                            .with_context(|| format!("mvm {name}: missing artifact"))?
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            fingerprint: root.get("fingerprint").as_str().unwrap_or("").to_string(),
+            configs,
+            mvm,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ControllerEntry> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("manifest has no controller config {name:?}"))
+    }
+
+    pub fn mvm_entry(&self, name: &str) -> Result<&MvmEntry> {
+        self.mvm
+            .get(name)
+            .with_context(|| format!("manifest has no mvm config {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "abc",
+      "configs": {
+        "qm7_dyn4": {
+          "n": 11, "hidden": 10, "fill_classes": 4, "batch": 8,
+          "bilstm": false, "steps": 10,
+          "params": [
+            {"name": "x0", "shape": [10]},
+            {"name": "lstm_w", "shape": [20, 40]}
+          ],
+          "artifacts": {"rollout": "rollout_qm7_dyn4.hlo.txt"}
+        }
+      },
+      "mvm": {
+        "mvm_qm7": {"k": 2, "nb": 128, "nr": 11, "artifact": "mvm_qm7.hlo.txt"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.config("qm7_dyn4").unwrap();
+        assert_eq!(c.n, 11);
+        assert_eq!(c.params.len(), 2);
+        assert_eq!(c.params[1].elements(), 800);
+        assert_eq!(c.total_param_elements(), 810);
+        assert_eq!(c.artifact("rollout").unwrap(), "rollout_qm7_dyn4.hlo.txt");
+        assert!(c.artifact("train").is_err());
+        let mv = m.mvm_entry("mvm_qm7").unwrap();
+        assert_eq!((mv.k, mv.nb, mv.nr), (2, 128, 11));
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(
+            Manifest::parse(r#"{"configs": {"x": {"n": 1, "params": []}}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn reads_real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !p.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.configs.contains_key("qm7_dyn4"));
+        assert!(m.configs.contains_key("qh882_dyn6"));
+        assert!(m.mvm.contains_key("mvm_qm7"));
+        let c = m.config("qh1484_dyn6").unwrap();
+        assert_eq!(c.n, 47);
+        assert_eq!(c.steps, 46);
+        assert_eq!(c.fill_classes, 6);
+    }
+}

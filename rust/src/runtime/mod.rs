@@ -1,0 +1,149 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The Rust side of the three-layer AOT bridge: `python/compile/aot.py`
+//! lowers the L2 JAX computations (which embed the L1 Pallas kernels) to
+//! HLO *text*; this module loads that text, compiles it on the PJRT CPU
+//! client, and executes it from the coordinator's hot path. Python is never
+//! involved at run time.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo/ — text (not serialized
+//! proto) is the interchange format because xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id protos.
+
+pub mod literal;
+pub mod manifest;
+
+pub use literal::{lit_f32, lit_f32_1d, lit_i32_2d, lit_scalar_f32, lit_scalar_i32, lit_u32_1d};
+pub use manifest::{ControllerEntry, Manifest, MvmEntry, ParamSpec};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the raw
+    /// output is a 1-element buffer holding a tuple; this unwraps it.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = result
+            .to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))?;
+        Ok(parts)
+    }
+
+    /// Like [`Self::run`] but borrowing the input literals — lets callers
+    /// keep long-lived literals (e.g. controller parameters) across calls
+    /// without cloning them each epoch.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        result
+            .to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+}
+
+/// PJRT client + executable cache. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// CPU-backed runtime rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.into(),
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load the manifest describing every artifact's ABI.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifacts_dir.join("manifest.json"))
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&self, file_name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(file_name) {
+            return Ok(hit.clone());
+        }
+        let path = self.artifacts_dir.join(file_name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exec = std::sync::Arc::new(Executable {
+            exe,
+            name: file_name.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file_name.to_string(), exec.clone());
+        Ok(exec)
+    }
+}
+
+/// Smoke-level check that the xla crate links and a CPU client can be built.
+pub fn cpu_client_smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::new("/nonexistent_dir_autogmap").unwrap();
+        let err = rt.load("nope.hlo.txt");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn smoke_client() {
+        let s = cpu_client_smoke().unwrap();
+        assert!(s.contains("cpu"));
+    }
+}

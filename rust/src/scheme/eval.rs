@@ -1,0 +1,341 @@
+//! Scheme evaluation — the RL *environment* (Table I: Environment = the
+//! original matrix; Reward = f(p(x,z))).
+//!
+//! Implements the paper's metrics:
+//!   C_ratio  (Eq. 22) = nnz covered by mapped blocks / total nnz
+//!   A_ratio  (Eq. 23) = matrix-unit area of mapped blocks / D²
+//!   Sparsity (Eq. 24) = as *reported* by the paper: 1 − nnz/area of the
+//!                       mapped blocks (their Eq. prints a density but the
+//!                       table rows ≈0.98 on a 0.995-sparse matrix are
+//!                       unambiguously 1 − density; we reproduce the table)
+//! and the scalarized reward (Eq. 21 with the area term sign-corrected):
+//!   R = a · C_ratio + (1−a) · (1 − A_ratio).
+
+use super::parse::Scheme;
+use crate::graph::GridSummary;
+
+/// Reward scalarization weights ("Reward ratio a / 1-a" of Tables II/IV).
+#[derive(Clone, Copy, Debug)]
+pub struct RewardWeights {
+    /// Harmonic coefficient a ∈ [0,1]: weight on the coverage ratio.
+    pub a: f64,
+}
+
+impl RewardWeights {
+    pub fn new(a: f64) -> RewardWeights {
+        assert!((0.0..=1.0).contains(&a), "reward weight a must be in [0,1]");
+        RewardWeights { a }
+    }
+
+    /// Scalarize (Eq. 21, area term sign-corrected).
+    pub fn reward(&self, coverage: f64, area: f64) -> f64 {
+        self.a * coverage + (1.0 - self.a) * (1.0 - area)
+    }
+}
+
+/// Full evaluation of one scheme against one matrix.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub coverage_ratio: f64,
+    pub area_ratio: f64,
+    /// Paper's Table sparsity: 1 − covered_nnz / covered_area.
+    pub sparsity: f64,
+    pub reward: f64,
+    /// Raw counts for downstream consumers (crossbar cost model, logs).
+    pub covered_nnz: u64,
+    pub covered_area_units: u64,
+    pub total_nnz: u64,
+    pub num_blocks: usize,
+}
+
+/// Evaluate `scheme` on the grid summary of a matrix.
+///
+/// Blocks never overlap (validated schemes), so coverage is a plain sum.
+/// Each block is O(1) via 2-D prefix sums; total O(#blocks).
+pub fn evaluate(scheme: &Scheme, g: &GridSummary, w: RewardWeights) -> EvalResult {
+    let mut covered_nnz = 0u64;
+    let mut covered_area = 0u64;
+    let rects = scheme.rects();
+    for r in &rects {
+        covered_nnz += r.nnz(g);
+        covered_area += r.area_units(g);
+    }
+    let total_nnz = g.total_nnz as u64;
+    let dim2 = (g.dim as u64) * (g.dim as u64);
+    let coverage_ratio = if total_nnz == 0 {
+        1.0
+    } else {
+        covered_nnz as f64 / total_nnz as f64
+    };
+    let area_ratio = covered_area as f64 / dim2 as f64;
+    let sparsity = if covered_area == 0 {
+        0.0
+    } else {
+        1.0 - covered_nnz as f64 / covered_area as f64
+    };
+    EvalResult {
+        coverage_ratio,
+        area_ratio,
+        sparsity,
+        reward: w.reward(coverage_ratio, area_ratio),
+        covered_nnz,
+        covered_area_units: covered_area,
+        total_nnz,
+        num_blocks: rects.len(),
+    }
+}
+
+/// Evaluate an arbitrary *disjoint* rectangle set (used by the GraphSAR /
+/// GraphR baselines whose blocks are not diagonal+fill structured).
+pub fn evaluate_rects(
+    rects: &[super::GridRect],
+    g: &GridSummary,
+    w: RewardWeights,
+) -> EvalResult {
+    let mut covered_nnz = 0u64;
+    let mut covered_area = 0u64;
+    for r in rects {
+        covered_nnz += r.nnz(g);
+        covered_area += r.area_units(g);
+    }
+    let total_nnz = g.total_nnz as u64;
+    let dim2 = (g.dim as u64) * (g.dim as u64);
+    let coverage_ratio = if total_nnz == 0 {
+        1.0
+    } else {
+        covered_nnz as f64 / total_nnz as f64
+    };
+    let area_ratio = covered_area as f64 / dim2 as f64;
+    EvalResult {
+        coverage_ratio,
+        area_ratio,
+        sparsity: if covered_area == 0 {
+            0.0
+        } else {
+            1.0 - covered_nnz as f64 / covered_area as f64
+        },
+        reward: w.reward(coverage_ratio, area_ratio),
+        covered_nnz,
+        covered_area_units: covered_area,
+        total_nnz,
+        num_blocks: rects.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+    use crate::graph::synth;
+    use crate::scheme::parse::{parse_actions, FillRule};
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg64;
+
+    fn grid_of(m: &crate::graph::Csr, k: usize) -> GridSummary {
+        GridSummary::new(m, k)
+    }
+
+    #[test]
+    fn full_matrix_block_covers_everything() {
+        let m = synth::qm7_like(5828);
+        let g = grid_of(&m, 2);
+        let s = Scheme {
+            diag_len: vec![11],
+            fill_len: vec![],
+        };
+        let e = evaluate(&s, &g, RewardWeights::new(0.8));
+        assert_eq!(e.coverage_ratio, 1.0);
+        assert_eq!(e.area_ratio, 1.0);
+        // reward = 0.8*1 + 0.2*0
+        assert!((e.reward - 0.8).abs() < 1e-12);
+        // paper: "Sparsity of original matrix: 0.868"
+        assert!((e.sparsity - m.sparsity()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_band_matrix_perfect_unit_blocks() {
+        // pure diagonal matrix: unit blocks give full coverage at area N·k²/D².
+        let mut coo = Coo::new(8, 8);
+        for i in 0..8 {
+            coo.push(i, i, 1.0);
+        }
+        let m = coo.to_csr();
+        let g = grid_of(&m, 2);
+        let s = parse_actions(4, &[0, 0, 0], &[0, 0, 0], FillRule::Dynamic { grades: 4 });
+        let e = evaluate(&s, &g, RewardWeights::new(0.5));
+        assert_eq!(e.coverage_ratio, 1.0);
+        assert!((e.area_ratio - (4.0 * 4.0) / 64.0).abs() < 1e-12);
+        assert_eq!(e.num_blocks, 4);
+    }
+
+    #[test]
+    fn fill_blocks_pick_up_junction_nnz() {
+        // entry exactly at the junction corner: (1,2) with grid 1, blocks [2,2].
+        let mut coo = Coo::new(4, 4);
+        coo.push_sym(1, 2, 1.0);
+        coo.push(0, 0, 1.0);
+        coo.push(3, 3, 1.0);
+        let m = coo.to_csr();
+        let g = grid_of(&m, 1);
+        let no_fill = parse_actions(4, &[1, 0, 1], &[0, 0, 0], FillRule::None);
+        let e0 = evaluate(&no_fill, &g, RewardWeights::new(0.8));
+        assert!(e0.coverage_ratio < 1.0);
+        let with_fill = parse_actions(4, &[1, 0, 1], &[0, 1, 0], FillRule::Fixed { size: 1 });
+        let e1 = evaluate(&with_fill, &g, RewardWeights::new(0.8));
+        assert_eq!(e1.coverage_ratio, 1.0);
+        assert!(e1.area_ratio > e0.area_ratio);
+    }
+
+    #[test]
+    fn truncated_trailing_block_area() {
+        // dim 5, grid 2 -> N=3, last cell is 1 unit wide.
+        let mut coo = Coo::new(5, 5);
+        for i in 0..5 {
+            coo.push(i, i, 1.0);
+        }
+        let m = coo.to_csr();
+        let g = grid_of(&m, 2);
+        let s = parse_actions(3, &[0, 0], &[0, 0], FillRule::None);
+        let e = evaluate(&s, &g, RewardWeights::new(1.0));
+        // areas: 2² + 2² + 1² = 9 over 25
+        assert!((e.area_ratio - 9.0 / 25.0).abs() < 1e-12);
+        assert_eq!(e.coverage_ratio, 1.0);
+    }
+
+    #[test]
+    fn reward_monotonicity() {
+        let w = RewardWeights::new(0.7);
+        assert!(w.reward(1.0, 0.2) > w.reward(0.9, 0.2)); // more coverage better
+        assert!(w.reward(1.0, 0.2) > w.reward(1.0, 0.4)); // less area better
+        // a=1 ignores area
+        let w1 = RewardWeights::new(1.0);
+        assert_eq!(w1.reward(0.5, 0.1), w1.reward(0.5, 0.9));
+    }
+
+    #[test]
+    #[should_panic]
+    fn reward_weight_out_of_range_panics() {
+        RewardWeights::new(1.5);
+    }
+
+    #[test]
+    fn coverage_bounds_property() {
+        check("eval_bounds", 60, |rng| {
+            let dim = 8 + rng.below(120) as usize;
+            let grid = 1 + rng.below(8) as usize;
+            let mut coo = Coo::new(dim, dim);
+            for _ in 0..dim * 2 {
+                let a = rng.below(dim as u64) as usize;
+                let b = rng.below(dim as u64) as usize;
+                coo.push_sym(a.max(b), a.min(b), 1.0);
+            }
+            let m = coo.to_csr();
+            let g = GridSummary::new(&m, grid);
+            let n = g.n;
+            let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+            let f: Vec<usize> = (0..n - 1).map(|_| rng.below(4) as usize).collect();
+            let s = parse_actions(n, &d, &f, FillRule::Dynamic { grades: 4 });
+            s.validate(n)?;
+            let e = evaluate(&s, &g, RewardWeights::new(0.75));
+            if !(0.0..=1.0 + 1e-12).contains(&e.coverage_ratio) {
+                return Err(format!("coverage {} out of bounds", e.coverage_ratio));
+            }
+            if !(0.0..=1.0 + 1e-12).contains(&e.area_ratio) {
+                return Err(format!("area {} out of bounds", e.area_ratio));
+            }
+            // single full block must dominate any scheme's coverage
+            let full = Scheme { diag_len: vec![n], fill_len: vec![] };
+            let ef = evaluate(&full, &g, RewardWeights::new(0.75));
+            if ef.coverage_ratio < e.coverage_ratio - 1e-12 {
+                return Err("full block not max coverage".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn union_area_equals_sum_property() {
+        // blocks never overlap, so Σ area computed here must equal the area
+        // of the union measured by brute-force rasterization.
+        check("eval_union_area", 30, |rng| {
+            let dim = 6 + rng.below(40) as usize;
+            let grid = 1 + rng.below(4) as usize;
+            let mut coo = Coo::new(dim, dim);
+            coo.push(0, 0, 1.0);
+            let m = coo.to_csr();
+            let g = GridSummary::new(&m, grid);
+            let n = g.n;
+            if n < 2 {
+                return Ok(());
+            }
+            let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+            let f: Vec<usize> = (0..n - 1).map(|_| rng.below(6) as usize).collect();
+            let s = parse_actions(n, &d, &f, FillRule::Dynamic { grades: 6 });
+            let e = evaluate(&s, &g, RewardWeights::new(0.5));
+            // rasterize
+            let mut mask = vec![false; dim * dim];
+            for r in s.rects() {
+                let r0 = (r.r0 * grid).min(dim);
+                let r1 = (r.r1 * grid).min(dim);
+                let c0 = (r.c0 * grid).min(dim);
+                let c1 = (r.c1 * grid).min(dim);
+                for rr in r0..r1 {
+                    for cc in c0..c1 {
+                        if mask[rr * dim + cc] {
+                            return Err(format!("overlap at ({rr},{cc})"));
+                        }
+                        mask[rr * dim + cc] = true;
+                    }
+                }
+            }
+            let union: u64 = mask.iter().filter(|&&b| b).count() as u64;
+            if union != e.covered_area_units {
+                return Err(format!(
+                    "union {union} != sum {} (dim {dim} grid {grid})",
+                    e.covered_area_units
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn complete_coverage_schemes_cover_every_nnz_property() {
+        // any scheme whose blocks rasterize over all nnz must report C=1;
+        // conversely C=1 means every nnz lies inside some block.
+        check("eval_complete_coverage", 30, |rng| {
+            let dim = 10 + rng.below(50) as usize;
+            let mut coo = Coo::new(dim, dim);
+            for _ in 0..dim {
+                let a = rng.below(dim as u64) as usize;
+                let b = rng.below(dim as u64) as usize;
+                coo.push_sym(a.max(b), a.min(b), 1.0);
+            }
+            let m = coo.to_csr();
+            let g = GridSummary::new(&m, 2);
+            let n = g.n;
+            let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+            let s = parse_actions(n, &d, &[], FillRule::None);
+            let e = evaluate(&s, &g, RewardWeights::new(0.9));
+            // brute-force check
+            let mut covered = 0u64;
+            for r in 0..dim {
+                for &c in m.row(r) {
+                    let inside = s.rects().iter().any(|rect| {
+                        let (r0, r1) = ((rect.r0 * 2).min(dim), (rect.r1 * 2).min(dim));
+                        let (c0, c1) = ((rect.c0 * 2).min(dim), (rect.c1 * 2).min(dim));
+                        r >= r0 && r < r1 && c >= c0 && c < c1
+                    });
+                    if inside {
+                        covered += 1;
+                    }
+                }
+            }
+            let expect = covered as f64 / m.nnz() as f64;
+            if (expect - e.coverage_ratio).abs() > 1e-9 {
+                return Err(format!("coverage {} != brute {expect}", e.coverage_ratio));
+            }
+            Ok(())
+        });
+    }
+}

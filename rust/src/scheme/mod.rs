@@ -1,0 +1,80 @@
+//! Mapping schemes: the paper's core objects.
+//!
+//! A *scheme* is a set of diagonal blocks plus fill blocks at the junctions
+//! between consecutive diagonal blocks, expressed in grid units over a
+//! [`GridSummary`]. This module implements:
+//!
+//! - action parsing (`parse_d` / `parse_f` of Algo. 3): 0/1 diagonal
+//!   decisions → block sizes; fill decisions (binary or graded) → fill
+//!   block sizes, masked by the diagonal sequence;
+//! - geometry (matrix-unit rectangles, truncation at the matrix edge);
+//! - validation (the paper's four principles: complete coverage capability,
+//!   no overlap, simple coding, least area);
+//! - evaluation (Eqs. 22–24): coverage ratio, area ratio, sparsity — O(1)
+//!   per block via grid prefix sums;
+//! - the scalarized reward (Eq. 21, with the area term sign-corrected, see
+//!   DESIGN.md §3).
+
+pub mod eval;
+pub mod parse;
+
+pub use eval::{evaluate, EvalResult, RewardWeights};
+pub use parse::{parse_actions, FillRule, Scheme};
+
+use crate::graph::GridSummary;
+
+/// A rectangle in *grid* coordinates (half-open), with its matrix-unit
+/// geometry resolved against a grid summary on demand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridRect {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl GridRect {
+    pub fn square(g0: usize, len: usize) -> GridRect {
+        GridRect {
+            r0: g0,
+            r1: g0 + len,
+            c0: g0,
+            c1: g0 + len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.r0 >= self.r1 || self.c0 >= self.c1
+    }
+
+    pub fn intersects(&self, other: &GridRect) -> bool {
+        self.r0 < other.r1 && other.r0 < self.r1 && self.c0 < other.c1 && other.c0 < self.c1
+    }
+
+    /// Matrix-unit area (truncated at the matrix edge).
+    pub fn area_units(&self, g: &GridSummary) -> u64 {
+        g.rect_area(self.r0, self.r1, self.c0, self.c1)
+    }
+
+    /// Non-zeros inside the rectangle.
+    pub fn nnz(&self, g: &GridSummary) -> u64 {
+        g.nnz_rect(self.r0, self.r1, self.c0, self.c1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_basics() {
+        let a = GridRect::square(2, 3);
+        assert_eq!(a, GridRect { r0: 2, r1: 5, c0: 2, c1: 5 });
+        assert!(!a.is_empty());
+        assert!(GridRect { r0: 1, r1: 1, c0: 0, c1: 2 }.is_empty());
+        let b = GridRect { r0: 4, r1: 6, c0: 0, c1: 3 };
+        assert!(a.intersects(&b));
+        let c = GridRect { r0: 5, r1: 6, c0: 0, c1: 2 };
+        assert!(!a.intersects(&c));
+    }
+}

@@ -1,0 +1,339 @@
+//! Action-sequence parsing: the `parse_d` / `parse_f` functions of Algo. 3.
+//!
+//! Diagonal actions `x ∈ {0,1}^{N-1}`: decision point i sits at grid
+//! boundary i (between grid cell i-1 and i); 0 = "start a new block",
+//! 1 = "continue to expand the previous block" — exactly Eq. (8).
+//!
+//! Fill actions exist only at boundaries where a new block starts (masked
+//! by the diagonal sequence, Algo. 1 line 10) and choose the size of the
+//! two symmetric fill blocks straddling that junction.
+
+use super::GridRect;
+use crate::graph::GridSummary;
+
+/// Fill-block sizing rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FillRule {
+    /// No fill blocks at all ("LSTM+RL" rows of Table II).
+    None,
+    /// Fixed-size fill, binary decision (Eq. 16): action 1 places a fill of
+    /// `size` grid cells (clamped to both neighbours), action 0 places none.
+    Fixed { size: usize },
+    /// Dynamic fill (Eq. 17): `grades` classes; action z ∈ {0..grades-1}
+    /// places a fill of round(z/(grades−1) · s_prev) grid cells, clamped to
+    /// min(s_prev, s_next) — "a proportion of the current diagonal-block".
+    /// (Fig. 4: grades 6 ⇒ indices [0..5] ⇒ ratios [0, 1/5, …, 1]; Table
+    /// II/IV fill actions never exceed grades−1.)
+    Dynamic { grades: usize },
+}
+
+impl FillRule {
+    /// Number of classes the fill head must emit.
+    pub fn num_classes(&self) -> usize {
+        match self {
+            FillRule::None => 0,
+            FillRule::Fixed { .. } => 2,
+            FillRule::Dynamic { grades } => *grades,
+        }
+    }
+
+    /// Resolve a fill action into a size in grid cells at a junction
+    /// between diagonal blocks of `s_prev` and `s_next` grid cells.
+    pub fn fill_len(&self, action: usize, s_prev: usize, s_next: usize) -> usize {
+        let cap = s_prev.min(s_next);
+        match self {
+            FillRule::None => 0,
+            FillRule::Fixed { size } => {
+                if action == 0 {
+                    0
+                } else {
+                    (*size).min(cap)
+                }
+            }
+            FillRule::Dynamic { grades } => {
+                debug_assert!(*grades >= 2, "dynamic fill needs at least 2 grades");
+                debug_assert!(action < *grades);
+                let ratio = action as f64 / (*grades - 1) as f64;
+                let g = (ratio * s_prev as f64).round() as usize;
+                g.min(cap)
+            }
+        }
+    }
+}
+
+/// A parsed mapping scheme.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scheme {
+    /// Diagonal block lengths in grid cells; sums to the grid count N.
+    pub diag_len: Vec<usize>,
+    /// Fill block lengths in grid cells, one per junction
+    /// (len = diag_len.len() - 1). 0 = no fill at that junction.
+    pub fill_len: Vec<usize>,
+}
+
+impl Scheme {
+    /// Diagonal block sizes in matrix units (Table II/IV "Diagonal-blocks
+    /// size" column — trailing block truncated at the matrix edge).
+    pub fn diag_sizes_units(&self, g: &GridSummary) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.diag_len.len());
+        let mut g0 = 0;
+        for &len in &self.diag_len {
+            out.push(g.span_units(g0, len));
+            g0 += len;
+        }
+        out
+    }
+
+    /// All block rectangles in grid coordinates: diagonal blocks then the
+    /// two symmetric rectangles per non-zero fill junction.
+    pub fn rects(&self) -> Vec<GridRect> {
+        let mut rects = Vec::with_capacity(self.diag_len.len() + 2 * self.fill_len.len());
+        let mut g0 = 0;
+        let mut boundaries = Vec::with_capacity(self.fill_len.len());
+        for &len in &self.diag_len {
+            rects.push(GridRect::square(g0, len));
+            g0 += len;
+            boundaries.push(g0);
+        }
+        boundaries.pop(); // last boundary is the matrix edge, not a junction
+        for (&b, &f) in boundaries.iter().zip(self.fill_len.iter()) {
+            if f == 0 {
+                continue;
+            }
+            // upper-right square touching the junction from above...
+            rects.push(GridRect {
+                r0: b - f,
+                r1: b,
+                c0: b,
+                c1: b + f,
+            });
+            // ...and its transpose below the diagonal
+            rects.push(GridRect {
+                r0: b,
+                r1: b + f,
+                c0: b - f,
+                c1: b,
+            });
+        }
+        rects
+    }
+
+    /// Grid count N this scheme spans.
+    pub fn grid_count(&self) -> usize {
+        self.diag_len.iter().sum()
+    }
+
+    /// Validate the paper's structural principles: blocks tile the
+    /// diagonal, fills are junction-clamped, nothing exceeds the area,
+    /// nothing overlaps.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.diag_len.is_empty() || self.diag_len.iter().any(|&l| l == 0) {
+            return Err("diagonal blocks must be non-empty".into());
+        }
+        if self.grid_count() != n {
+            return Err(format!(
+                "diagonal blocks cover {} grid cells, expected {n}",
+                self.grid_count()
+            ));
+        }
+        if self.fill_len.len() != self.diag_len.len() - 1 {
+            return Err(format!(
+                "expected {} fill slots, got {}",
+                self.diag_len.len() - 1,
+                self.fill_len.len()
+            ));
+        }
+        for (j, &f) in self.fill_len.iter().enumerate() {
+            let cap = self.diag_len[j].min(self.diag_len[j + 1]);
+            if f > cap {
+                return Err(format!(
+                    "fill {f} at junction {j} exceeds neighbour cap {cap}"
+                ));
+            }
+        }
+        // no-overlap: diagonal blocks are disjoint by construction; fills
+        // are clamped to the junction's neighbours so they can only overlap
+        // a *diagonal* block if f > cap (checked above); two fills at
+        // adjacent junctions could only overlap if f_j + f_{j+1} exceeded
+        // the block between them on the same side — impossible since each
+        // is ≤ that block's length and they occupy opposite corners; we
+        // still verify pairwise as defence in depth.
+        let rects = self.rects();
+        for i in 0..rects.len() {
+            for j in (i + 1)..rects.len() {
+                if rects[i].intersects(&rects[j]) {
+                    return Err(format!("blocks {i} and {j} overlap: {:?} {:?}", rects[i], rects[j]));
+                }
+            }
+        }
+        if let Some(r) = rects.iter().find(|r| r.r1 > n || r.c1 > n) {
+            return Err(format!("block {r:?} exceeds the {n}-cell grid"));
+        }
+        Ok(())
+    }
+}
+
+/// Parse raw agent actions into a scheme.
+///
+/// `d_actions` has length N-1 (one per interior grid boundary; 0 = start a
+/// new block, 1 = extend). `f_actions` has length N-1 as well — the agent
+/// emits a slot per boundary and the parser *masks* it: only boundaries
+/// where `d == 0` consume their fill action (Algo. 1 line 10).
+pub fn parse_actions(
+    n: usize,
+    d_actions: &[u8],
+    f_actions: &[usize],
+    rule: FillRule,
+) -> Scheme {
+    assert!(n >= 1);
+    assert_eq!(d_actions.len(), n.saturating_sub(1), "need N-1 diagonal actions");
+    if rule != FillRule::None {
+        assert_eq!(f_actions.len(), n.saturating_sub(1), "need N-1 fill slots");
+    }
+
+    let mut diag_len = Vec::new();
+    let mut cur = 1usize;
+    for &d in d_actions {
+        if d == 0 {
+            diag_len.push(cur);
+            cur = 1;
+        } else {
+            cur += 1;
+        }
+    }
+    diag_len.push(cur);
+
+    // fill decisions: one per junction, i.e. per d==0 boundary, in order.
+    let mut fill_len = Vec::with_capacity(diag_len.len() - 1);
+    if rule != FillRule::None {
+        let mut junction = 0usize;
+        for (i, &d) in d_actions.iter().enumerate() {
+            if d == 0 {
+                let s_prev = diag_len[junction];
+                let s_next = diag_len[junction + 1];
+                fill_len.push(rule.fill_len(f_actions[i], s_prev, s_next));
+                junction += 1;
+            }
+        }
+    } else {
+        fill_len = vec![0; diag_len.len() - 1];
+    }
+    Scheme { diag_len, fill_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+
+    #[test]
+    fn parse_all_extend_is_single_block() {
+        let s = parse_actions(5, &[1, 1, 1, 1], &[0, 0, 0, 0], FillRule::None);
+        assert_eq!(s.diag_len, vec![5]);
+        assert_eq!(s.fill_len, vec![]);
+        s.validate(5).unwrap();
+    }
+
+    #[test]
+    fn parse_all_start_is_unit_blocks() {
+        let s = parse_actions(4, &[0, 0, 0], &[1, 1, 1], FillRule::Fixed { size: 1 });
+        assert_eq!(s.diag_len, vec![1, 1, 1, 1]);
+        assert_eq!(s.fill_len, vec![1, 1, 1]);
+        s.validate(4).unwrap();
+    }
+
+    #[test]
+    fn parse_mixed_matches_paper_example() {
+        // paper QM7 grid 2 (N=11): diagonal-blocks size [8,2,12] in matrix
+        // units = [4,1,6] grid cells -> boundaries at 4 and 5.
+        let d = [1, 1, 1, 0, 0, 1, 1, 1, 1, 1];
+        let s = parse_actions(11, &d, &[0; 10], FillRule::None);
+        assert_eq!(s.diag_len, vec![4, 1, 6]);
+    }
+
+    #[test]
+    fn fill_mask_only_consumes_at_starts() {
+        // d: boundaries 0,1 extend; boundary 2 starts (junction 0);
+        // boundary 3 starts (junction 1).
+        let d = [1, 1, 0, 0];
+        let f = [9, 9, 1, 0]; // slots 0,1 must be ignored
+        let s = parse_actions(5, &d, &f, FillRule::Fixed { size: 2 });
+        assert_eq!(s.diag_len, vec![3, 1, 1]);
+        // junction 0: cap = min(3,1) = 1 -> fill size min(2,1)=1 (action 1)
+        // junction 1: action 0 -> no fill
+        assert_eq!(s.fill_len, vec![1, 0]);
+        s.validate(5).unwrap();
+    }
+
+    #[test]
+    fn dynamic_fill_grades() {
+        let rule = FillRule::Dynamic { grades: 4 };
+        // 4 grades => ratios [0, 1/3, 2/3, 1].
+        // s_prev=6, s_next=9: z=1 -> round(6/3)=2; z=3 -> 6; z=0 -> 0
+        assert_eq!(rule.fill_len(1, 6, 9), 2);
+        assert_eq!(rule.fill_len(3, 6, 9), 6);
+        assert_eq!(rule.fill_len(0, 6, 9), 0);
+        // clamped by next: s_prev=6, s_next=2, z=3 -> min(6,2)=2
+        assert_eq!(rule.fill_len(3, 6, 2), 2);
+        assert_eq!(rule.num_classes(), 4);
+        assert_eq!(FillRule::Fixed { size: 3 }.num_classes(), 2);
+        assert_eq!(FillRule::None.num_classes(), 0);
+    }
+
+    #[test]
+    fn rects_geometry() {
+        let s = Scheme {
+            diag_len: vec![3, 2],
+            fill_len: vec![2],
+        };
+        let rects = s.rects();
+        assert_eq!(rects.len(), 4);
+        assert_eq!(rects[0], GridRect::square(0, 3));
+        assert_eq!(rects[1], GridRect::square(3, 2));
+        assert_eq!(rects[2], GridRect { r0: 1, r1: 3, c0: 3, c1: 5 });
+        assert_eq!(rects[3], GridRect { r0: 3, r1: 5, c0: 1, c1: 3 });
+        s.validate(5).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_schemes() {
+        assert!(Scheme { diag_len: vec![], fill_len: vec![] }.validate(0).is_err());
+        assert!(Scheme { diag_len: vec![2, 0], fill_len: vec![0] }.validate(2).is_err());
+        assert!(Scheme { diag_len: vec![2, 2], fill_len: vec![0] }.validate(5).is_err());
+        assert!(Scheme { diag_len: vec![2, 2], fill_len: vec![3] }.validate(4).is_err());
+        assert!(Scheme { diag_len: vec![2, 2], fill_len: vec![] }.validate(4).is_err());
+    }
+
+    #[test]
+    fn parsed_schemes_always_validate_property() {
+        check("parse_validates", 100, |rng| {
+            let n = 2 + rng.below(60) as usize;
+            let grades = 2 + rng.below(5) as usize;
+            let rule = match rng.below(3) {
+                0 => FillRule::None,
+                1 => FillRule::Fixed { size: 1 + rng.below(4) as usize },
+                _ => FillRule::Dynamic { grades },
+            };
+            let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+            let f: Vec<usize> = (0..n - 1)
+                .map(|_| rng.below(rule.num_classes().max(1) as u64) as usize)
+                .collect();
+            let s = parse_actions(n, &d, &f, rule);
+            s.validate(n).map_err(|e| format!("n={n} rule={rule:?}: {e}"))
+        });
+    }
+
+    #[test]
+    fn blocks_partition_diagonal_property() {
+        check("parse_partition", 100, |rng| {
+            let n = 2 + rng.below(100) as usize;
+            let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+            let s = parse_actions(n, &d, &[], FillRule::None);
+            if s.grid_count() == n && s.diag_len.len() == d.iter().filter(|&&x| x == 0).count() + 1 {
+                Ok(())
+            } else {
+                Err(format!("bad partition {:?} for n={n}", s.diag_len))
+            }
+        });
+    }
+}

@@ -1,0 +1,165 @@
+//! Micro-benchmark harness (no `criterion` in the vendored crate set).
+//!
+//! Measures wall-clock of a closure with warmup, adaptive iteration count,
+//! and robust statistics (median + MAD + mean ± stddev), printing one line
+//! per benchmark in a stable, grep-friendly format:
+//!
+//! `bench <name> ... median 1.234 us  (mean 1.240 ± 0.02, n=4096)`
+//!
+//! Used by every target under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    /// Median time per iteration, seconds.
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: u64,
+    pub samples: usize,
+}
+
+impl BenchStats {
+    pub fn report_line(&self) -> String {
+        format!(
+            "bench {:<44} median {:>12}  (mean {} ± {}, min {}, n={}x{})",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mean_s),
+            fmt_time(self.stddev_s),
+            fmt_time(self.min_s),
+            self.samples,
+            self.iters,
+        )
+    }
+}
+
+/// Human-readable time.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with shared config for a bench binary.
+pub struct Bencher {
+    /// Target time to spend per benchmark measuring (after warmup).
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    /// Number of measured samples to split the budget into.
+    pub samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Honor AUTOGMAP_BENCH_FAST=1 for CI smoke runs.
+        let fast = std::env::var("AUTOGMAP_BENCH_FAST").is_ok_and(|v| v == "1");
+        Bencher {
+            measure_time: Duration::from_millis(if fast { 200 } else { 1500 }),
+            warmup_time: Duration::from_millis(if fast { 50 } else { 300 }),
+            samples: if fast { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run one benchmark. The closure is invoked repeatedly; its return
+    /// value is black-boxed to keep the optimizer honest.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // Warmup + estimate cost of one call.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose iterations per sample so a sample takes measure_time/samples.
+        let sample_budget = self.measure_time.as_secs_f64() / self.samples as f64;
+        let iters = ((sample_budget / per_call.max(1e-9)) as u64).clamp(1, 10_000_000);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            median_s: median,
+            mean_s: mean,
+            stddev_s: var.sqrt(),
+            min_s: times[0],
+            max_s: *times.last().unwrap(),
+            iters,
+            samples: times.len(),
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far (for throughput summaries at the end of a bench binary).
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Opaque identity function the optimizer cannot see through.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            samples: 5,
+            results: Vec::new(),
+        };
+        let stats = b.bench("noop_sum", || (0..100u64).sum::<u64>()).clone();
+        assert!(stats.median_s > 0.0);
+        assert!(stats.median_s < 1e-3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands. Each binary declares the options it accepts; unknown
+//! options are hard errors so typos never silently fall through.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand (if declared), options, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `value_opts` lists options that take a value;
+    /// `flag_opts` lists boolean flags; `has_subcommand` consumes the first
+    /// positional as a subcommand name.
+    pub fn parse(
+        argv: &[String],
+        value_opts: &[&str],
+        flag_opts: &[&str],
+        has_subcommand: bool,
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if flag_opts.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    out.flags.push(key);
+                } else if value_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    return Err(format!("unknown option --{key}"));
+                }
+            } else if has_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(arg.clone());
+            } else {
+                out.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name} expects an integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name} expects a number, got {v:?}")))
+            .transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags_positionals() {
+        let a = Args::parse(
+            &argv("train --config cfg.json --epochs=100 --verbose data.mtx"),
+            &["config", "epochs"],
+            &["verbose"],
+            true,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("cfg.json"));
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(100));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.mtx"]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(Args::parse(&argv("--nope"), &[], &[], false).is_err());
+        assert!(Args::parse(&argv("--k"), &["k"], &[], false).is_err());
+        assert!(Args::parse(&argv("--v=1"), &[], &["v"], false).is_err());
+        let a = Args::parse(&argv("--n x"), &["n"], &[], false).unwrap();
+        assert!(a.get_usize("n").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(""), &["k"], &[], false).unwrap();
+        assert_eq!(a.get_or("k", "d"), "d");
+        assert_eq!(a.get_usize("k").unwrap(), None);
+    }
+}

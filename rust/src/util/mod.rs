@@ -1,0 +1,8 @@
+//! Utility substrates built in-repo because the offline vendored crate set
+//! contains no `rand`, `serde`, `clap`, `criterion`, or `proptest`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;

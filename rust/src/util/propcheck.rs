@@ -1,0 +1,61 @@
+//! Hand-rolled property-testing helper (no `proptest` in the vendored set).
+//!
+//! A property is a closure over a seeded [`Pcg64`]; the runner executes it
+//! for `cases` distinct deterministic seeds and reports the failing seed so
+//! a failure reproduces with `PROPCHECK_SEED=<n> cargo test <name>`.
+
+use crate::util::rng::Pcg64;
+
+/// Run `prop` for `cases` deterministic seeds. `prop` returns `Err(msg)` or
+/// panics to signal failure. Set `PROPCHECK_SEED` to re-run a single case.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("PROPCHECK_SEED") {
+        let seed: u64 = seed.parse().expect("PROPCHECK_SEED must be an integer");
+        let mut rng = Pcg64::seed_from_u64(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed for PROPCHECK_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Decorrelate case index from the seed space used elsewhere.
+        let seed = case.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property {name} failed on case {case} (PROPCHECK_SEED={seed}): {msg}"
+            ),
+            Err(_) => panic!(
+                "property {name} panicked on case {case} (PROPCHECK_SEED={seed})"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64_roundtrip", 50, |rng| {
+            let x = rng.next_u64();
+            if x.wrapping_add(1).wrapping_sub(1) == x {
+                Ok(())
+            } else {
+                Err("arithmetic broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always_fails failed")]
+    fn reports_failing_seed() {
+        check("always_fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,236 @@
+//! Visualization: spy plots with scheme overlays (Figs. 7/8/10/12) and
+//! ASCII training curves (Figs. 9/11/13).
+//!
+//! Two backends: terminal ASCII (quick inspection) and standalone SVG
+//! files (the figure artifacts recorded by `autogmap reproduce --figure N`).
+
+use crate::graph::{Csr, GridSummary};
+use crate::scheme::Scheme;
+use std::fmt::Write as _;
+
+/// ASCII spy plot of a matrix, downsampled to at most `max_side` character
+/// cells; `#` marks a cell containing at least one non-zero.
+pub fn ascii_spy(m: &Csr, max_side: usize) -> String {
+    let n = m.rows.max(1);
+    let step = n.div_ceil(max_side.max(1));
+    let side = n.div_ceil(step);
+    let mut cells = vec![false; side * side];
+    for r in 0..m.rows {
+        for &c in m.row(r) {
+            cells[(r / step) * side + c / step] = true;
+        }
+    }
+    let mut out = String::new();
+    for r in 0..side {
+        for c in 0..side {
+            out.push(if cells[r * side + c] { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// ASCII spy plot with the scheme's blocks overlaid: `#` nnz inside a
+/// block, `!` nnz OUTSIDE every block (uncovered), `+` empty block cell,
+/// `.` empty uncovered cell. One character per grid cell.
+pub fn ascii_scheme(m: &Csr, g: &GridSummary, scheme: &Scheme) -> String {
+    let n = g.n;
+    let mut in_block = vec![false; n * n];
+    for rect in scheme.rects() {
+        for r in rect.r0..rect.r1.min(n) {
+            for c in rect.c0..rect.c1.min(n) {
+                in_block[r * n + c] = true;
+            }
+        }
+    }
+    let mut out = String::new();
+    for r in 0..n {
+        for c in 0..n {
+            let nnz = g.cell_nnz[r * n + c] > 0;
+            let blk = in_block[r * n + c];
+            out.push(match (nnz, blk) {
+                (true, true) => '#',
+                (true, false) => '!',
+                (false, true) => '+',
+                (false, false) => '.',
+            });
+        }
+        out.push('\n');
+    }
+    let _ = m; // matrix-level detail intentionally reduced to grid cells
+    out
+}
+
+/// SVG spy plot with translucent scheme rectangles — the paper-figure
+/// artifact (Figs. 8/10/12 analogue).
+pub fn svg_scheme(m: &Csr, g: &GridSummary, scheme: Option<&Scheme>, title: &str) -> String {
+    let dim = m.rows as f64;
+    let size = 640.0;
+    let scale = size / dim;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{0}" height="{1}" viewBox="-2 -20 {2} {3}">"#,
+        size + 4.0,
+        size + 26.0,
+        size + 4.0,
+        size + 26.0
+    );
+    let _ = writeln!(
+        s,
+        r#"<text x="0" y="-6" font-family="monospace" font-size="12">{}</text>"#,
+        title
+    );
+    let _ = writeln!(
+        s,
+        r#"<rect x="0" y="0" width="{size}" height="{size}" fill="white" stroke="black" stroke-width="0.5"/>"#
+    );
+    // non-zeros
+    let px = (scale).max(0.75);
+    for r in 0..m.rows {
+        for &c in m.row(r) {
+            let _ = writeln!(
+                s,
+                r#"<rect x="{:.2}" y="{:.2}" width="{px:.2}" height="{px:.2}" fill="black"/>"#,
+                c as f64 * scale,
+                r as f64 * scale,
+            );
+        }
+    }
+    // scheme blocks
+    if let Some(scheme) = scheme {
+        for rect in scheme.rects() {
+            let x = (rect.c0 * g.grid) as f64 * scale;
+            let y = (rect.r0 * g.grid) as f64 * scale;
+            let w = (g.span_units(rect.c0, rect.c1 - rect.c0)) as f64 * scale;
+            let h = (g.span_units(rect.r0, rect.r1 - rect.r0)) as f64 * scale;
+            let _ = writeln!(
+                s,
+                r#"<rect x="{x:.2}" y="{y:.2}" width="{w:.2}" height="{h:.2}" fill="steelblue" fill-opacity="0.35" stroke="steelblue" stroke-width="1"/>"#
+            );
+        }
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+/// ASCII line chart for training curves: series of (label, values) drawn
+/// into a `width` x `height` character canvas with shared x (epoch) axis,
+/// one glyph per series. Values are min/max-normalized per chart.
+pub fn ascii_chart(series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    assert!(!series.is_empty());
+    let glyphs = ['*', 'o', '+', 'x', '@'];
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .filter(|v| v.is_finite())
+        .collect();
+    let (lo, hi) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+    let span = if (hi - lo).abs() < 1e-12 { 1.0 } else { hi - lo };
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, (_, vals)) in series.iter().enumerate() {
+        if vals.is_empty() {
+            continue;
+        }
+        let glyph = glyphs[si % glyphs.len()];
+        for x in 0..width {
+            let idx = x * vals.len().saturating_sub(1) / width.saturating_sub(1).max(1);
+            let v = vals[idx.min(vals.len() - 1)];
+            if !v.is_finite() {
+                continue;
+            }
+            let yf = (v - lo) / span;
+            let y = ((1.0 - yf) * (height - 1) as f64).round() as usize;
+            canvas[y.min(height - 1)][x] = glyph;
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{hi:>10.4} ┐");
+    for row in &canvas {
+        out.push_str("           │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    let _ = writeln!(out, "{lo:>10.4} ┴{}", "─".repeat(width));
+    let mut legend = String::from("            ");
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = write!(legend, "{}={}  ", glyphs[si % glyphs.len()], name);
+    }
+    out.push_str(&legend);
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::scheme::{parse_actions, FillRule};
+
+    #[test]
+    fn spy_plot_shape() {
+        let m = synth::qm7_like(5828);
+        let s = ascii_spy(&m, 22);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 22);
+        assert!(lines.iter().all(|l| l.len() == 22));
+        assert_eq!(
+            s.chars().filter(|&c| c == '#').count(),
+            m.nnz() // no downsampling at full resolution
+        );
+    }
+
+    #[test]
+    fn spy_plot_downsamples() {
+        let m = synth::qh882_like(1);
+        let s = ascii_spy(&m, 60);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines.len() <= 60);
+    }
+
+    #[test]
+    fn scheme_overlay_marks_uncovered() {
+        let m = synth::qm7_like(5828);
+        let r = crate::reorder::reorder(&m, crate::reorder::Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 2);
+        // unit blocks, no fill -> off-diagonal nnz must show as '!'
+        let scheme = parse_actions(g.n, &[0; 10], &[0; 10], FillRule::None);
+        let s = ascii_scheme(&r.matrix, &g, &scheme);
+        assert!(s.contains('!'), "uncovered nnz must be flagged:\n{s}");
+        // full block -> nothing uncovered
+        let full = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let s = ascii_scheme(&r.matrix, &g, &full);
+        assert!(!s.contains('!'));
+    }
+
+    #[test]
+    fn svg_is_wellformed_enough() {
+        let m = synth::qm7_like(5828);
+        let g = GridSummary::new(&m, 2);
+        let scheme = parse_actions(g.n, &[0; 10], &[0; 10], FillRule::None);
+        let svg = svg_scheme(&m, &g, Some(&scheme), "test");
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert!(svg.matches("<rect").count() > m.nnz());
+    }
+
+    #[test]
+    fn chart_renders_all_series() {
+        let a: Vec<f64> = (0..100).map(|i| (i as f64 / 10.0).sin()).collect();
+        let b: Vec<f64> = (0..100).map(|i| i as f64 / 100.0).collect();
+        let s = ascii_chart(&[("sin", &a), ("lin", &b)], 60, 12);
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("sin") && s.contains("lin"));
+    }
+
+    #[test]
+    fn chart_handles_constant_series() {
+        let a = vec![0.5; 10];
+        let s = ascii_chart(&[("const", &a)], 20, 5);
+        assert!(s.contains('*'));
+    }
+}

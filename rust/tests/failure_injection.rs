@@ -1,0 +1,169 @@
+//! Failure injection: every external input (files, configs, artifacts,
+//! parameter blobs) must fail loudly and descriptively, never corrupt a
+//! run silently.
+
+use autogmap::agent::params;
+use autogmap::coordinator::config::ExperimentConfig;
+use autogmap::graph::matrix_market;
+use autogmap::runtime::manifest::Manifest;
+use autogmap::runtime::Runtime;
+use autogmap::util::json::Json;
+use std::io::Write;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("autogmap_fail_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn truncated_mtx_rejected() {
+    let d = tmpdir("mtx");
+    let p = d.join("trunc.mtx");
+    // header promises 5 entries, file has 2
+    std::fs::write(
+        &p,
+        "%%MatrixMarket matrix coordinate real general\n10 10 5\n1 1 1.0\n2 2 2.0\n",
+    )
+    .unwrap();
+    let err = matrix_market::read(&p).unwrap_err();
+    assert!(format!("{err}").contains("expected 5 entries"));
+}
+
+#[test]
+fn binary_garbage_mtx_rejected() {
+    let d = tmpdir("mtx_bin");
+    let p = d.join("garbage.mtx");
+    let mut f = std::fs::File::create(&p).unwrap();
+    f.write_all(&[0u8, 159, 146, 150, 255, 254, 10, 13]).unwrap();
+    drop(f);
+    assert!(matrix_market::read(&p).is_err());
+}
+
+#[test]
+fn missing_artifact_file_reports_path() {
+    let d = tmpdir("artifacts_missing");
+    let rt = Runtime::new(&d).unwrap();
+    let err = rt.load("rollout_nope.hlo.txt").err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rollout_nope.hlo.txt"), "{msg}");
+}
+
+#[test]
+fn corrupt_hlo_text_rejected() {
+    let d = tmpdir("artifacts_corrupt");
+    std::fs::write(d.join("bad.hlo.txt"), "HloModule this is not hlo (((").unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    assert!(rt.load("bad.hlo.txt").is_err());
+}
+
+#[test]
+fn manifest_missing_and_malformed() {
+    let d = tmpdir("manifest");
+    let rt = Runtime::new(&d).unwrap();
+    assert!(rt.manifest().is_err()); // missing
+
+    std::fs::write(d.join("manifest.json"), "{ not json").unwrap();
+    assert!(rt.manifest().is_err()); // malformed
+
+    // structurally valid JSON but missing required fields
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"configs": {"x": {"n": 3, "params": [{"name": "p"}]}}}"#,
+    )
+    .unwrap();
+    assert!(rt.manifest().is_err());
+}
+
+#[test]
+fn manifest_param_shape_mismatch_rejected_at_literal_build() {
+    let text = r#"{
+      "fingerprint": "x",
+      "configs": {
+        "c": {
+          "n": 3, "hidden": 2, "fill_classes": 0, "batch": 1,
+          "bilstm": false, "steps": 2,
+          "params": [{"name": "x0", "shape": [2]}],
+          "artifacts": {}
+        }
+      },
+      "mvm": {}
+    }"#;
+    let m = Manifest::parse(text).unwrap();
+    let entry = m.config("c").unwrap();
+    // params with the wrong number of elements must be rejected
+    let mut p = params::init_params(entry, 0);
+    p.get_mut("x0").unwrap().push(1.0);
+    assert!(params::to_literals(entry, &p).is_err());
+    // missing param must be rejected
+    let mut p2 = params::init_params(entry, 0);
+    p2.remove("x0");
+    assert!(params::to_literals(entry, &p2).is_err());
+}
+
+#[test]
+fn corrupt_checkpoint_rejected() {
+    let text = r#"{
+      "fingerprint": "x",
+      "configs": {
+        "c": {
+          "n": 3, "hidden": 2, "fill_classes": 0, "batch": 1,
+          "bilstm": false, "steps": 2,
+          "params": [{"name": "x0", "shape": [2]}],
+          "artifacts": {}
+        }
+      },
+      "mvm": {}
+    }"#;
+    let m = Manifest::parse(text).unwrap();
+    let entry = m.config("c").unwrap();
+    let d = tmpdir("ckpt");
+    // not json
+    std::fs::write(d.join("ck1.json"), "garbage").unwrap();
+    assert!(params::load_checkpoint(&d.join("ck1.json"), entry).is_err());
+    // wrong shapes
+    std::fs::write(
+        d.join("ck2.json"),
+        r#"{"config":"c","params":{"x0":[1.0]},"m":{"x0":[0,0]},"v":{"x0":[0,0]},"t":0}"#,
+    )
+    .unwrap();
+    assert!(params::load_checkpoint(&d.join("ck2.json"), entry).is_err());
+}
+
+#[test]
+fn experiment_config_validation() {
+    // reward out of range
+    let bad = Json::parse(
+        r#"{"name":"x","dataset":"qm7","grid":2,"controller":"c","reward_a":2.0}"#,
+    )
+    .unwrap();
+    assert!(ExperimentConfig::from_json(&bad).is_err());
+    // unknown dataset
+    let bad = Json::parse(r#"{"name":"x","dataset":"wat","grid":2,"controller":"c"}"#).unwrap();
+    assert!(ExperimentConfig::from_json(&bad).is_err());
+    // unknown fill kind
+    let bad = Json::parse(
+        r#"{"name":"x","dataset":"qm7","grid":2,"controller":"c","fill":"maybe"}"#,
+    )
+    .unwrap();
+    assert!(ExperimentConfig::from_json(&bad).is_err());
+    // missing file
+    assert!(ExperimentConfig::load(std::path::Path::new("/nope/cfg.json")).is_err());
+}
+
+#[test]
+fn nan_rewards_cannot_enter_the_reward_path() {
+    // RewardWeights::new rejects out-of-range a; evaluate() on empty
+    // matrices defines coverage := 1 (no NaN).
+    let m = autogmap::graph::Coo::new(8, 8).to_csr();
+    let g = autogmap::graph::GridSummary::new(&m, 2);
+    let s = autogmap::scheme::Scheme {
+        diag_len: vec![4],
+        fill_len: vec![],
+    };
+    let e = autogmap::scheme::evaluate(&s, &g, autogmap::scheme::RewardWeights::new(0.5));
+    assert!(e.reward.is_finite());
+    assert_eq!(e.coverage_ratio, 1.0);
+    assert_eq!(e.sparsity, 1.0); // all-zero block: fully sparse, not NaN
+}

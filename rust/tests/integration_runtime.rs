@@ -1,0 +1,187 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a visible message) when artifacts/ is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use autogmap::agent::lstm::{forward, Select};
+use autogmap::agent::{params, TrainOptions, Trainer};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::{literal, Runtime};
+use autogmap::scheme::{FillRule, RewardWeights};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT runtime"))
+}
+
+#[test]
+fn all_artifacts_load_and_compile() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    assert!(!manifest.configs.is_empty());
+    for entry in manifest.configs.values() {
+        for file in entry.artifacts.values() {
+            rt.load(file)
+                .unwrap_or_else(|e| panic!("loading {file}: {e:#}"));
+        }
+    }
+    for mvm in manifest.mvm.values() {
+        rt.load(&mvm.artifact).unwrap();
+    }
+}
+
+#[test]
+fn rollout_artifact_produces_valid_episodes() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.config("qm7_dyn4").unwrap().clone();
+    let exe = rt.load(entry.artifact("rollout").unwrap()).unwrap();
+    let p = params::init_params(&entry, 7);
+    let mut inputs = params::to_literals(&entry, &p).unwrap();
+    inputs.push(literal::lit_u32_1d(&[1, 2]));
+    let outs = exe.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 4);
+    let d = literal::to_vec_i32(&outs[0]).unwrap();
+    let f = literal::to_vec_i32(&outs[1]).unwrap();
+    let logp = outs[2].to_vec::<f32>().unwrap();
+    let ent = outs[3].to_vec::<f32>().unwrap();
+    assert_eq!(d.len(), entry.batch * entry.steps);
+    assert!(d.iter().all(|&x| x == 0 || x == 1));
+    assert!(f.iter().all(|&x| x >= 0 && (x as usize) < entry.fill_classes));
+    assert!(logp.iter().all(|&x| x < 0.0 && x.is_finite()));
+    assert!(ent.iter().all(|&x| x > 0.0));
+    // determinism in the key
+    let outs2 = exe.run(&inputs).unwrap();
+    assert_eq!(literal::to_vec_i32(&outs2[0]).unwrap(), d);
+}
+
+#[test]
+fn hlo_rollout_logp_matches_rust_mirror() {
+    // Teacher-force the HLO rollout's sampled actions through the pure-Rust
+    // controller mirror; log-probs must agree (ABI + math cross-check).
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    for name in ["qm7_diag", "qm7_dyn4", "qm7_fill_bilstm"] {
+        let entry = manifest.config(name).unwrap().clone();
+        let exe = rt.load(entry.artifact("rollout").unwrap()).unwrap();
+        let p = params::init_params(&entry, 99);
+        let mut inputs = params::to_literals(&entry, &p).unwrap();
+        inputs.push(literal::lit_u32_1d(&[11, 22]));
+        let outs = exe.run(&inputs).unwrap();
+        let d = literal::to_vec_i32(&outs[0]).unwrap();
+        let f = literal::to_vec_i32(&outs[1]).unwrap();
+        let logp = outs[2].to_vec::<f32>().unwrap();
+        let t = entry.steps;
+        for b in 0..entry.batch {
+            let ep = forward(
+                &entry,
+                &p,
+                Select::Teacher {
+                    d: &d[b * t..(b + 1) * t],
+                    f: &f[b * t..(b + 1) * t],
+                },
+            );
+            assert!(
+                (ep.logp - logp[b]).abs() < 2e-3,
+                "{name} episode {b}: mirror logp {} vs HLO {}",
+                ep.logp,
+                logp[b]
+            );
+        }
+    }
+}
+
+#[test]
+fn trainer_improves_reward_on_qm7() {
+    // End-to-end REINFORCE smoke: 150 epochs on the QM7-like matrix must
+    // raise mean reward and find at least one complete-coverage scheme.
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.config("qm7_dyn4").unwrap().clone();
+    let m = synth::qm7_like(5828);
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let grid = GridSummary::new(&r.matrix, 2);
+    let opts = TrainOptions {
+        lr: 0.02,
+        weights: RewardWeights::new(0.8),
+        fill_rule: FillRule::Dynamic { grades: 4 },
+        seed: 3,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&rt, entry, opts).unwrap();
+    let mut first = None;
+    let mut last = None;
+    for _ in 0..150 {
+        let s = trainer.epoch(&grid).unwrap();
+        if first.is_none() {
+            first = Some(s.mean_reward);
+        }
+        last = Some(s.mean_reward);
+    }
+    let (first, last) = (first.unwrap(), last.unwrap());
+    assert!(
+        last > first - 0.02,
+        "reward regressed: {first} -> {last}"
+    );
+    let best = trainer.best.as_ref().expect("no complete-coverage scheme found");
+    assert_eq!(best.eval.coverage_ratio, 1.0);
+    assert!(best.eval.area_ratio < 1.0);
+    best.scheme.validate(grid.n).unwrap();
+}
+
+#[test]
+fn greedy_artifact_matches_rust_greedy_mirror() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.config("qm7_dyn6").unwrap().clone();
+    let exe = rt.load(entry.artifact("greedy").unwrap()).unwrap();
+    let p = params::init_params(&entry, 5);
+    let outs = exe.run(&params::to_literals(&entry, &p).unwrap()).unwrap();
+    let d = literal::to_vec_i32(&outs[0]).unwrap();
+    let f = literal::to_vec_i32(&outs[1]).unwrap();
+    let ep = forward(&entry, &p, Select::Greedy);
+    let t = entry.steps;
+    // batch rows are identical (same params, deterministic decode)
+    assert_eq!(&d[..t], ep.d_actions.as_slice());
+    assert_eq!(&f[..t], ep.f_actions.as_slice());
+}
+
+#[test]
+fn train_artifact_shifts_params_toward_positive_advantage() {
+    let Some(rt) = runtime() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.config("qm7_diag").unwrap().clone();
+    let (b, t) = (entry.batch, entry.steps);
+    let train = rt.load(entry.artifact("train").unwrap()).unwrap();
+    let p = params::init_params(&entry, 13);
+    let opt = params::AdamState::new(&entry);
+    let d = vec![0i32; b * t];
+    let f = vec![0i32; b * t];
+    let adv = vec![1.0f32; b];
+    let k = entry.params.len();
+    let mut inputs = params::to_literals(&entry, &p).unwrap();
+    inputs.extend(params::to_literals(&entry, &opt.m).unwrap());
+    inputs.extend(params::to_literals(&entry, &opt.v).unwrap());
+    inputs.push(literal::lit_scalar_i32(opt.t));
+    inputs.push(literal::lit_i32_2d(&d, b, t).unwrap());
+    inputs.push(literal::lit_i32_2d(&f, b, t).unwrap());
+    inputs.push(literal::lit_f32_1d(&adv));
+    inputs.push(literal::lit_scalar_f32(0.05));
+    inputs.push(literal::lit_scalar_f32(0.0));
+    let outs = train.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 3 * k + 3);
+    let p2 = params::from_literals(&entry, &outs[..k]).unwrap();
+    assert_ne!(p, p2, "train step must move parameters");
+    // repeating the step must raise logp of the all-zeros action sequence
+    let before = forward(&entry, &p, Select::Teacher { d: &d[..t], f: &f[..t] }).logp;
+    let after = forward(&entry, &p2, Select::Teacher { d: &d[..t], f: &f[..t] }).logp;
+    assert!(after > before, "logp {before} -> {after}");
+    let new_t = outs[3 * k].to_vec::<i32>().unwrap()[0];
+    assert_eq!(new_t, 1);
+}
