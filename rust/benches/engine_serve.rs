@@ -1,0 +1,67 @@
+//! Bench: the execution engine's serving path vs the oracle simulator.
+//!
+//! Three rungs per workload, so the report separates the two wins:
+//!   oracle_mvm   — CrossbarArray::mvm, every tile walked (the seed path)
+//!   plan_mvm     — compiled ExecPlan, single thread (zero-tile elision)
+//!   batchN_wW    — BatchExecutor, W workers over N-request batches
+//!                  (elision × request parallelism)
+
+use autogmap::crossbar::place;
+use autogmap::engine::{compile, BatchExecutor};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::Scheme;
+use autogmap::util::bench::{black_box, Bencher};
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::new();
+    for (name, m, grid) in [
+        ("qm7_g2", synth::qm7_like(5828), 2usize),
+        ("qh882_g32", synth::qh882_like(882), 32),
+        ("qh1484_g32", synth::qh1484_like(1484), 32),
+    ] {
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, grid);
+        // the full-matrix block: complete coverage with maximal dead space,
+        // i.e. the workload where compiled elision matters most
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let arr = place(&r.matrix, &g, &scheme).unwrap();
+        let plan = compile(&r.matrix, &g, &scheme).unwrap();
+        println!(
+            "{name}: {} tiles scheduled, {} placed ({:.1}% elided)",
+            plan.scheduled_tiles,
+            plan.tiles.len(),
+            plan.elision_ratio() * 100.0
+        );
+        let x: Vec<f64> = (0..g.dim).map(|i| (i as f64 * 0.1).sin()).collect();
+        b.bench(&format!("oracle_mvm/{name} ({} tiles)", arr.tiles.len()), || {
+            black_box(arr.mvm(&x))
+        });
+        b.bench(&format!("plan_mvm/{name} ({} tiles)", plan.tiles.len()), || {
+            black_box(plan.mvm(&x))
+        });
+        let plan = Arc::new(plan);
+        let batch = 32usize;
+        let xs: Vec<Vec<f64>> = (0..batch)
+            .map(|s| (0..g.dim).map(|i| ((i + s) as f64 * 0.07).cos()).collect())
+            .collect();
+        for workers in [2usize, 8] {
+            let exec = BatchExecutor::new(plan.clone(), workers);
+            exec.recycle(exec.execute_batch(xs.clone())); // warm pool
+            let stats = b
+                .bench(&format!("batch{batch}_w{workers}/{name}"), || {
+                    let ys = exec.execute_batch(xs.clone());
+                    exec.recycle(ys);
+                })
+                .clone();
+            println!(
+                "  -> {:.0} req/s through {workers} workers",
+                batch as f64 / stats.median_s
+            );
+        }
+    }
+}

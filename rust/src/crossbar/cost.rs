@@ -44,11 +44,13 @@ impl Default for CostModel {
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostEstimate {
     pub tiles: usize,
-    /// programmed memristor cells (area proxy, the paper's Area metric)
+    /// programmed memristor cells inside the matrix (clipped at the edge —
+    /// the paper's Area metric; edge-truncated tiles count their rows×cols
+    /// actually used, not the padded K²)
     pub cells: u64,
-    /// ADC conversions: one per row wire per tile
+    /// ADC conversions: one per in-matrix row wire per tile
     pub adc_samples: u64,
-    /// DAC drives: one per column wire per tile
+    /// DAC drives: one per in-matrix column wire per tile
     pub dac_samples: u64,
     pub energy_pj: f64,
     pub latency_ns: f64,
@@ -57,21 +59,28 @@ pub struct CostEstimate {
 }
 
 impl CostModel {
-    /// Estimate one y' = A'x' pass. `switch_crossovers` comes from
-    /// [`super::switch::SwitchCircuit::crossover_count`] (0 when no
-    /// reordering is applied).
-    pub fn estimate(&self, arr: &CrossbarArray, switch_crossovers: u64) -> CostEstimate {
-        let tiles = arr.tiles.len();
-        let k = arr.k as u64;
-        let cells = arr.area_cells();
-        let adc_samples = tiles as u64 * k;
-        let dac_samples = tiles as u64 * k;
+    /// Estimate from raw component counts — the shared primitive behind
+    /// [`Self::estimate`] and the engine fleet's per-bank accounting
+    /// (`crate::engine::fleet::Fleet::bank_estimates`).
+    pub fn estimate_counts(
+        &self,
+        tiles: usize,
+        cells: u64,
+        adc_samples: u64,
+        dac_samples: u64,
+        switch_crossovers: u64,
+        row_segments: usize,
+    ) -> CostEstimate {
         let energy_pj = cells as f64 * self.cell_read_pj
             + adc_samples as f64 * self.adc_sample_pj
             + dac_samples as f64 * self.dac_sample_pj
             + switch_crossovers as f64 * self.switch_pj * 2.0; // in + out
         let waves = tiles.div_ceil(self.parallel_tiles.max(1));
-        let latency_ns = waves as f64 * self.tile_read_ns;
+        let latency_ns = if tiles == 0 {
+            0.0
+        } else {
+            waves as f64 * self.tile_read_ns
+        };
         CostEstimate {
             tiles,
             cells,
@@ -79,8 +88,31 @@ impl CostModel {
             dac_samples,
             energy_pj,
             latency_ns,
-            row_segments: arr.row_segments(),
+            row_segments,
         }
+    }
+
+    /// Estimate one y' = A'x' pass. `switch_crossovers` comes from
+    /// [`super::switch::SwitchCircuit::crossover_count`] (0 when no
+    /// reordering is applied). Cell/ADC/DAC counts use clipped tile
+    /// extents: the zero-padded overhang of edge-truncated tiles draws no
+    /// read current and needs no conversions.
+    pub fn estimate(&self, arr: &CrossbarArray, switch_crossovers: u64) -> CostEstimate {
+        let mut adc_samples = 0u64;
+        let mut dac_samples = 0u64;
+        for t in &arr.tiles {
+            let (r, c) = arr.clipped_extents(t);
+            adc_samples += r as u64;
+            dac_samples += c as u64;
+        }
+        self.estimate_counts(
+            arr.tiles.len(),
+            arr.area_cells_clipped(),
+            adc_samples,
+            dac_samples,
+            switch_crossovers,
+            arr.row_segments(),
+        )
     }
 }
 
@@ -123,6 +155,43 @@ mod tests {
         assert_eq!(est.cells, arr.area_cells());
         assert_eq!(est.adc_samples, (arr.tiles.len() * arr.k) as u64);
         assert!(est.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn truncated_tiles_cost_their_clipped_extents() {
+        // qh882 at grid 32: 882 = 27*32 + 18, so edge tiles must charge
+        // for 18-unit strips, not full 32s.
+        let m = synth::qh882_like(1);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 32);
+        let s = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+        let arr = place(&r.matrix, &g, &s).unwrap();
+        let est = CostModel::default().estimate(&arr, 0);
+        assert_eq!(est.cells, arr.area_cells_clipped());
+        assert_eq!(est.cells, 882 * 882);
+        assert!(est.cells < arr.area_cells());
+        // 28 tiles per row: 27 full (32 rows) + 1 truncated (18 rows)
+        assert_eq!(est.adc_samples, 28 * (27 * 32 + 18));
+        assert_eq!(est.dac_samples, est.adc_samples);
+    }
+
+    #[test]
+    fn estimate_counts_is_the_shared_primitive() {
+        let model = CostModel::default();
+        let arr = placed(false);
+        let est = model.estimate(&arr, 0);
+        let direct = model.estimate_counts(
+            est.tiles,
+            est.cells,
+            est.adc_samples,
+            est.dac_samples,
+            0,
+            est.row_segments,
+        );
+        assert_eq!(est, direct);
+        let empty = model.estimate_counts(0, 0, 0, 0, 0, 0);
+        assert_eq!(empty.latency_ns, 0.0);
+        assert_eq!(empty.energy_pj, 0.0);
     }
 
     #[test]

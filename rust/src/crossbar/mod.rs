@@ -114,9 +114,37 @@ impl CrossbarArray {
         y
     }
 
-    /// Total programmed crossbar area in cells (Σ K²) — the paper's cost.
+    /// Total *physical* crossbar area in cells (Σ K²): every tile occupies
+    /// a full K×K array, including the zero-padded overhang of
+    /// edge-truncated tiles. For matrix-side cost accounting use
+    /// [`Self::area_cells_clipped`], which matches the scheme evaluator's
+    /// covered-area metric.
     pub fn area_cells(&self) -> u64 {
         (self.tiles.len() as u64) * (self.k as u64) * (self.k as u64)
+    }
+
+    /// Clipped extents of a tile: the (rows, cols) of it that actually lie
+    /// inside the matrix (≤ K each; smaller only for edge tiles).
+    pub fn clipped_extents(&self, tile: &Tile) -> (usize, usize) {
+        (
+            (self.dim - tile.row0).min(self.k),
+            (self.dim - tile.col0).min(self.k),
+        )
+    }
+
+    /// Programmed cells that lie inside the matrix (Σ rows·cols after edge
+    /// clipping). Unlike [`Self::area_cells`] this does not overcount
+    /// edge-truncated tiles — for 882 = 27·32 + 18, the 28th tile row and
+    /// column contribute 18-wide strips, not full 32s — so a complete
+    /// tiling's clipped area equals the scheme's covered matrix-unit area.
+    pub fn area_cells_clipped(&self) -> u64 {
+        self.tiles
+            .iter()
+            .map(|t| {
+                let (r, c) = self.clipped_extents(t);
+                (r * c) as u64
+            })
+            .sum()
     }
 
     /// Number of distinct block-row segments (peripheral accumulation
@@ -201,6 +229,32 @@ mod tests {
         // every tile is fully inside the 22x22 matrix (22 = 11*2), so the
         // placed cell area equals the scheme's covered area
         assert_eq!(arr.area_cells(), e.covered_area_units);
+        assert_eq!(arr.area_cells_clipped(), arr.area_cells());
+    }
+
+    #[test]
+    fn clipped_area_matches_scheme_area_on_truncated_edges() {
+        // 882 = 27*32 + 18: the trailing tile row/column overhangs the
+        // matrix by 14 units. area_cells counts the physical K² arrays;
+        // the clipped accessor must match the scheme evaluator exactly.
+        let m = synth::qh882_like(1);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 32);
+        let s = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let e = evaluate(&s, &g, RewardWeights::new(0.8));
+        let arr = place(&r.matrix, &g, &s).unwrap();
+        assert_eq!(arr.area_cells_clipped(), e.covered_area_units);
+        assert_eq!(arr.area_cells_clipped(), 882 * 882);
+        assert!(arr.area_cells() > arr.area_cells_clipped());
+        // per-tile extents: full tiles are 32x32, edge tiles carry the 18s
+        for t in &arr.tiles {
+            let (rr, cc) = arr.clipped_extents(t);
+            assert_eq!(rr, if t.row0 == 27 * 32 { 18 } else { 32 });
+            assert_eq!(cc, if t.col0 == 27 * 32 { 18 } else { 32 });
+        }
     }
 
     #[test]

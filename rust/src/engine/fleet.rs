@@ -1,0 +1,248 @@
+//! Crossbar fleet: N simulated crossbar banks serving one plan.
+//!
+//! A deployment programs a plan's tiles onto a *fleet* of crossbar banks
+//! that operate concurrently (GraphR-style sub-crossbar parallelism). The
+//! fleet model answers the capacity-planning questions the cost model
+//! ([`crate::crossbar::cost`]) answers for a single array: how do tiles
+//! spread over banks, what does one fleet-wide MVM cost in energy, and how
+//! long does it take when the slowest bank gates the answer?
+//!
+//! Two assignment policies:
+//! - [`AssignPolicy::RoundRobin`] — tile i → bank i mod N (static, what a
+//!   naive splitter does);
+//! - [`AssignPolicy::BalancedNnz`] — LPT greedy on tile non-zero counts
+//!   (heaviest tile first onto the lightest bank), which is what a learned
+//!   sparsity-aware scheme enables: the planner knows each tile's load.
+
+use super::plan::ExecPlan;
+use crate::crossbar::cost::{CostEstimate, CostModel};
+use anyhow::{bail, ensure, Result};
+
+/// Tile → bank assignment policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignPolicy {
+    /// tile i → bank i mod N
+    RoundRobin,
+    /// greedy longest-processing-time on per-tile nnz
+    BalancedNnz,
+}
+
+impl AssignPolicy {
+    pub fn parse(s: &str) -> Result<AssignPolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => AssignPolicy::RoundRobin,
+            "balanced" | "nnz" => AssignPolicy::BalancedNnz,
+            other => bail!("unknown assignment policy {other:?} (rr|balanced)"),
+        })
+    }
+}
+
+/// Aggregate load programmed onto one bank.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BankLoad {
+    pub tiles: usize,
+    /// non-zeros across the bank's tiles (compute load proxy)
+    pub nnz: u64,
+    /// programmed cells (clipped extents)
+    pub cells: u64,
+    /// ADC conversions per MVM: one per tile row inside the matrix
+    pub adc_samples: u64,
+    /// DAC drives per MVM: one per tile column inside the matrix
+    pub dac_samples: u64,
+}
+
+/// A plan distributed over N concurrently operating crossbar banks.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub banks: usize,
+    pub policy: AssignPolicy,
+    /// tile index (into the plan's schedule) → bank index
+    pub assignment: Vec<usize>,
+    pub loads: Vec<BankLoad>,
+}
+
+impl Fleet {
+    /// Distribute a plan's tiles over `banks` banks.
+    pub fn assign(plan: &ExecPlan, banks: usize, policy: AssignPolicy) -> Result<Fleet> {
+        ensure!(banks >= 1, "fleet needs at least one bank");
+        let prog_nnz = plan.program_nnz();
+        let tile_nnz = |i: usize| prog_nnz[plan.tiles[i].program];
+        let mut assignment = vec![0usize; plan.tiles.len()];
+        match policy {
+            AssignPolicy::RoundRobin => {
+                for (i, slot) in assignment.iter_mut().enumerate() {
+                    *slot = i % banks;
+                }
+            }
+            AssignPolicy::BalancedNnz => {
+                let mut order: Vec<usize> = (0..plan.tiles.len()).collect();
+                order.sort_by_key(|&i| std::cmp::Reverse(tile_nnz(i)));
+                let mut load = vec![0u64; banks];
+                for i in order {
+                    let mut bank = 0usize;
+                    for b in 1..banks {
+                        if load[b] < load[bank] {
+                            bank = b;
+                        }
+                    }
+                    assignment[i] = bank;
+                    // every tile costs at least one read wave, so weight
+                    // empty-looking tiles as 1 to keep counts balanced too
+                    load[bank] += tile_nnz(i).max(1);
+                }
+            }
+        }
+        let mut loads = vec![BankLoad::default(); banks];
+        for (i, t) in plan.tiles.iter().enumerate() {
+            let l = &mut loads[assignment[i]];
+            l.tiles += 1;
+            l.nnz += tile_nnz(i);
+            l.cells += (t.rows * t.cols) as u64;
+            l.adc_samples += t.rows as u64;
+            l.dac_samples += t.cols as u64;
+        }
+        Ok(Fleet {
+            banks,
+            policy,
+            assignment,
+            loads,
+        })
+    }
+
+    /// Modelled latency of one fleet-wide MVM: banks run concurrently and
+    /// each serializes its tiles in waves of `cost.parallel_tiles`, so the
+    /// most-loaded bank gates the answer.
+    pub fn mvm_latency_ns(&self, cost: &CostModel) -> f64 {
+        self.bank_estimates(cost)
+            .iter()
+            .map(|e| e.latency_ns)
+            .fold(0.0, f64::max)
+    }
+
+    /// Modelled energy of one fleet-wide MVM (sum over banks).
+    pub fn mvm_energy_pj(&self, cost: &CostModel) -> f64 {
+        self.bank_estimates(cost).iter().map(|e| e.energy_pj).sum()
+    }
+
+    /// Per-bank cost estimates from the shared peripheral-cost constants.
+    pub fn bank_estimates(&self, cost: &CostModel) -> Vec<CostEstimate> {
+        self.loads
+            .iter()
+            .map(|l| cost.estimate_counts(l.tiles, l.cells, l.adc_samples, l.dac_samples, 0, 0))
+            .collect()
+    }
+
+    /// Load imbalance: max bank nnz over mean bank nnz (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let total: u64 = self.loads.iter().map(|l| l.nnz).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.banks as f64;
+        let max = self.loads.iter().map(|l| l.nnz).max().unwrap_or(0);
+        max as f64 / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::plan::compile;
+    use crate::graph::{synth, GridSummary};
+    use crate::reorder::{reorder, Reordering};
+    use crate::scheme::Scheme;
+
+    fn qh882_plan() -> ExecPlan {
+        let m = synth::qh882_like(1);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 32);
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        compile(&r.matrix, &g, &scheme).unwrap()
+    }
+
+    #[test]
+    fn assignment_covers_every_tile_exactly_once() {
+        let plan = qh882_plan();
+        for banks in [1usize, 2, 8] {
+            for policy in [AssignPolicy::RoundRobin, AssignPolicy::BalancedNnz] {
+                let fleet = Fleet::assign(&plan, banks, policy).unwrap();
+                assert_eq!(fleet.assignment.len(), plan.tiles.len());
+                assert!(fleet.assignment.iter().all(|&b| b < banks));
+                let tiles: usize = fleet.loads.iter().map(|l| l.tiles).sum();
+                assert_eq!(tiles, plan.tiles.len());
+                let cells: u64 = fleet.loads.iter().map(|l| l.cells).sum();
+                assert_eq!(cells, plan.cells());
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_policy_meets_the_greedy_bound() {
+        // LPT greedy guarantee: when the fullest bank received its last
+        // tile it was the emptiest, so max load ≤ mean + heaviest tile.
+        let plan = qh882_plan();
+        let prog_nnz = plan.program_nnz();
+        // elision means every placed tile has nnz >= 1, so the policy's
+        // weights are exactly the raw per-tile nnz
+        let heaviest = plan.tiles.iter().map(|t| prog_nnz[t.program]).max().unwrap();
+        assert!(plan.tiles.iter().all(|t| prog_nnz[t.program] >= 1));
+        let total: u64 = plan.tiles.iter().map(|t| prog_nnz[t.program]).sum();
+        for banks in [2usize, 8] {
+            let bal = Fleet::assign(&plan, banks, AssignPolicy::BalancedNnz).unwrap();
+            let max_nnz = bal.loads.iter().map(|l| l.nnz).max().unwrap();
+            let mean = total as f64 / banks as f64;
+            assert!(
+                (max_nnz as f64) <= mean + heaviest as f64 + 1.0,
+                "banks {banks}: max {max_nnz} exceeds mean {mean} + heaviest {heaviest}"
+            );
+            assert!(bal.imbalance() >= 1.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn fleet_latency_drops_with_more_banks() {
+        let plan = qh882_plan();
+        let mut cost = CostModel::default();
+        cost.parallel_tiles = 1; // serialize within a bank to expose scaling
+        let one = Fleet::assign(&plan, 1, AssignPolicy::BalancedNnz).unwrap();
+        let eight = Fleet::assign(&plan, 8, AssignPolicy::BalancedNnz).unwrap();
+        let l1 = one.mvm_latency_ns(&cost);
+        let l8 = eight.mvm_latency_ns(&cost);
+        assert!(l8 < l1, "8 banks {l8} should beat 1 bank {l1}");
+        // energy is conserved: same tiles, same cells, just spread out
+        let e1 = one.mvm_energy_pj(&cost);
+        let e8 = eight.mvm_energy_pj(&cost);
+        assert!((e1 - e8).abs() < 1e-6 * e1.max(1.0));
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(AssignPolicy::parse("rr").unwrap(), AssignPolicy::RoundRobin);
+        assert_eq!(
+            AssignPolicy::parse("balanced").unwrap(),
+            AssignPolicy::BalancedNnz
+        );
+        assert!(AssignPolicy::parse("magic").is_err());
+    }
+
+    #[test]
+    fn empty_plan_fleet_is_sane() {
+        // a plan with zero placed tiles (all elided) still forms a fleet
+        let m = crate::graph::Coo::new(8, 8).to_csr();
+        let g = GridSummary::new(&m, 2);
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        assert_eq!(plan.tiles.len(), 0);
+        assert_eq!(plan.elided_tiles, plan.scheduled_tiles);
+        let fleet = Fleet::assign(&plan, 4, AssignPolicy::BalancedNnz).unwrap();
+        assert_eq!(fleet.imbalance(), 1.0);
+        assert_eq!(fleet.mvm_latency_ns(&CostModel::default()), 0.0);
+        assert!(Fleet::assign(&plan, 0, AssignPolicy::RoundRobin).is_err());
+    }
+}

@@ -1,0 +1,169 @@
+//! Execution engine: from trained mapping scheme to served MVM traffic.
+//!
+//! The paper ends where a scheme is chosen; this subsystem is the layer
+//! between mapping and measurement that *executes* schemes at scale. The
+//! flow is **plan → fleet → batch**:
+//!
+//! 1. **[`plan`]** — compile `Scheme + Csr + GridSummary` into an
+//!    [`ExecPlan`]: a flat tile schedule with all-zero tiles elided,
+//!    identical tile programmings deduplicated, per-tile clipped extents,
+//!    and JSON (de)serialization so plans ship as deployable artifacts.
+//! 2. **[`fleet`]** — distribute the plan's tiles over N simulated
+//!    crossbar banks ([`Fleet`]): round-robin or nnz-load-balanced
+//!    assignment, with per-bank energy/latency accounting built on
+//!    [`crate::crossbar::cost::CostModel`].
+//! 3. **[`batch`]** — serve request traffic: a std-thread worker pool
+//!    ([`BatchExecutor`]) executes batches of input vectors with pooled
+//!    output buffers, bit-identical to the
+//!    [`crate::crossbar::CrossbarArray::mvm`] oracle.
+//!
+//! The `serve-bench` CLI subcommand drives all three against synthetic
+//! request traces (this module's [`synth_trace`]) and reports throughput,
+//! latency percentiles, and the zero-tile elision ratio.
+
+pub mod batch;
+pub mod fleet;
+pub mod plan;
+
+pub use batch::BatchExecutor;
+pub use fleet::{AssignPolicy, BankLoad, Fleet};
+pub use plan::{compile, ExecPlan, TileSpec};
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+
+/// Shape of a synthetic request trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// constant batch size, dense random inputs
+    Uniform,
+    /// heavy-tailed batch sizes (exponential around the nominal size):
+    /// quiet single-request stretches punctuated by large bursts
+    Bursty,
+    /// batch-supermatrix traffic: each request targets one sub-graph's
+    /// index segment and is zero elsewhere
+    BatchGraph,
+}
+
+impl TraceKind {
+    pub fn parse(s: &str) -> Result<TraceKind> {
+        Ok(match s {
+            "uniform" => TraceKind::Uniform,
+            "bursty" => TraceKind::Bursty,
+            "batch" | "batch-graph" => TraceKind::BatchGraph,
+            other => bail!("unknown trace kind {other:?} (uniform|bursty|batch)"),
+        })
+    }
+}
+
+/// Generate a deterministic request trace: a sequence of batches of input
+/// vectors totalling exactly `requests` requests.
+///
+/// `segments` are the index ranges of the workload's sub-graphs (one
+/// `(start, end)` pair per sub-graph of a batch supermatrix; pass
+/// `&[(0, dim)]` for monolithic matrices) — only [`TraceKind::BatchGraph`]
+/// uses them.
+pub fn synth_trace(
+    kind: TraceKind,
+    dim: usize,
+    requests: usize,
+    batch: usize,
+    segments: &[(usize, usize)],
+    seed: u64,
+) -> Vec<Vec<Vec<f64>>> {
+    assert!(batch >= 1, "nominal batch size must be positive");
+    assert!(
+        !segments.is_empty() && segments.iter().all(|&(s, e)| s < e && e <= dim),
+        "segments must be non-empty ranges inside the matrix"
+    );
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x7472_6163_6500_0001); // "trace"
+    let mut batches = Vec::new();
+    let mut left = requests;
+    while left > 0 {
+        let size = match kind {
+            TraceKind::Uniform | TraceKind::BatchGraph => batch,
+            TraceKind::Bursty => {
+                // exponential with mean `batch`, clamped to [1, 8·batch]
+                let draw = -rng.f64().max(1e-12).ln() * batch as f64;
+                (draw.round() as usize).clamp(1, batch * 8)
+            }
+        }
+        .min(left);
+        let mut reqs = Vec::with_capacity(size);
+        for _ in 0..size {
+            let mut x = vec![0.0f64; dim];
+            let (s, e) = match kind {
+                TraceKind::BatchGraph => {
+                    segments[rng.below(segments.len() as u64) as usize]
+                }
+                _ => (0, dim),
+            };
+            for v in &mut x[s..e] {
+                *v = rng.uniform(-1.0, 1.0);
+            }
+            reqs.push(x);
+        }
+        left -= size;
+        batches.push(reqs);
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_kinds_parse() {
+        assert_eq!(TraceKind::parse("uniform").unwrap(), TraceKind::Uniform);
+        assert_eq!(TraceKind::parse("bursty").unwrap(), TraceKind::Bursty);
+        assert_eq!(TraceKind::parse("batch").unwrap(), TraceKind::BatchGraph);
+        assert!(TraceKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn uniform_trace_has_exact_shape() {
+        let t = synth_trace(TraceKind::Uniform, 10, 25, 8, &[(0, 10)], 1);
+        let sizes: Vec<usize> = t.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![8, 8, 8, 1]);
+        assert!(t.iter().flatten().all(|x| x.len() == 10));
+    }
+
+    #[test]
+    fn bursty_trace_totals_and_varies() {
+        let t = synth_trace(TraceKind::Bursty, 6, 300, 8, &[(0, 6)], 2);
+        let total: usize = t.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 300);
+        let sizes: Vec<usize> = t.iter().map(|b| b.len()).collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(min < max, "bursty sizes should vary, got constant {min}");
+        assert!(*max <= 64);
+    }
+
+    #[test]
+    fn batch_graph_trace_respects_segments() {
+        let segs = [(0usize, 5usize), (5, 12)];
+        let t = synth_trace(TraceKind::BatchGraph, 12, 40, 4, &segs, 3);
+        let mut seen = [false; 2];
+        for x in t.iter().flatten() {
+            let lo_active = x[..5].iter().any(|v| *v != 0.0);
+            let hi_active = x[5..].iter().any(|v| *v != 0.0);
+            assert!(
+                lo_active != hi_active,
+                "request must target exactly one segment"
+            );
+            seen[usize::from(hi_active)] = true;
+        }
+        assert!(seen[0] && seen[1], "both segments should receive traffic");
+    }
+
+    #[test]
+    fn traces_are_deterministic_in_the_seed() {
+        let a = synth_trace(TraceKind::Bursty, 8, 50, 4, &[(0, 8)], 9);
+        let b = synth_trace(TraceKind::Bursty, 8, 50, 4, &[(0, 8)], 9);
+        assert_eq!(a, b);
+        let c = synth_trace(TraceKind::Bursty, 8, 50, 4, &[(0, 8)], 10);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,519 @@
+//! Plan compilation: `Scheme + Csr + GridSummary → ExecPlan`.
+//!
+//! [`crate::crossbar::place`] materializes every K×K tile of a scheme —
+//! including tiles whose sub-block holds no non-zeros at all, which on a
+//! 0.995-sparse qh882-like matrix is the vast majority of a large block's
+//! interior. An [`ExecPlan`] is the deployable artifact a trained scheme
+//! compiles into:
+//!
+//! - **zero-tile elision**: all-zero tiles are dropped from the schedule
+//!   (they contribute exactly nothing to y' = A'x');
+//! - **programming dedup**: tiles with bit-identical conductance blocks
+//!   share one program buffer (block-diagonal batch supermatrices repeat
+//!   whole sub-graphs);
+//! - **clipped extents**: each tile records the rows×cols actually inside
+//!   the matrix, so edge tiles (882 = 27·32 + 18) neither compute nor
+//!   account for their zero-padded overhang;
+//! - **JSON serialization**: plans save/load as standalone artifacts
+//!   (manifest-style, [`crate::util::json`]), so a mapping trained once
+//!   deploys without re-running placement.
+//!
+//! Executing a plan is bit-compatible with [`CrossbarArray::mvm`]
+//! (`crate::crossbar::CrossbarArray::mvm`): tiles are scheduled in the
+//! same scheme order and each row accumulates in the same element order,
+//! so elision only removes exact zeros from the sums.
+
+use crate::graph::{Csr, GridSummary};
+use crate::scheme::Scheme;
+use crate::util::json::{num_arr, obj, Json};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One scheduled tile: geometry plus a reference into the deduplicated
+/// program table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileSpec {
+    /// top-left corner in matrix units
+    pub row0: usize,
+    pub col0: usize,
+    /// clipped extents: rows×cols actually inside the matrix (≤ K each)
+    pub rows: usize,
+    pub cols: usize,
+    /// index into [`ExecPlan::programs`]
+    pub program: usize,
+}
+
+/// A compiled, servable mapping plan: the flat tile schedule of one scheme
+/// with all-zero tiles elided and identical programmings shared.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecPlan {
+    /// physical crossbar tile side K
+    pub k: usize,
+    /// matrix dimension D
+    pub dim: usize,
+    /// tile schedule, in scheme placement order
+    pub tiles: Vec<TileSpec>,
+    /// deduplicated conductance buffers; `programs[t.program]` is
+    /// `t.rows × t.cols`, row-major with stride `t.cols`
+    pub programs: Vec<Vec<f32>>,
+    /// tiles the scheme demanded before elision
+    pub scheduled_tiles: usize,
+    /// all-zero tiles dropped from the schedule
+    pub elided_tiles: usize,
+}
+
+/// Compile a scheme against a matrix into an executable plan.
+///
+/// Tile traversal order matches [`crate::crossbar::place`] exactly, so a
+/// plan's MVM reproduces the oracle's accumulation order bit for bit.
+pub fn compile(m: &Csr, g: &GridSummary, scheme: &Scheme) -> Result<ExecPlan> {
+    ensure!(
+        m.rows == g.dim && m.cols == g.dim,
+        "matrix/grid dimension mismatch"
+    );
+    scheme
+        .validate(g.n)
+        .map_err(|e| anyhow!("cannot compile invalid scheme: {e}"))?;
+    let k = g.grid;
+    let mut tiles = Vec::new();
+    let mut programs: Vec<Vec<f32>> = Vec::new();
+    let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
+    let mut scheduled = 0usize;
+    let mut elided = 0usize;
+    for rect in scheme.rects() {
+        for gr in rect.r0..rect.r1 {
+            for gc in rect.c0..rect.c1 {
+                let row0 = gr * k;
+                let col0 = gc * k;
+                if row0 >= g.dim || col0 >= g.dim {
+                    continue; // fully outside (possible for trailing cells)
+                }
+                scheduled += 1;
+                let rows = (g.dim - row0).min(k);
+                let cols = (g.dim - col0).min(k);
+                let block = m.dense_block(row0, col0, k);
+                let mut data = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        data.push(block[r * k + c] as f32);
+                    }
+                }
+                if data.iter().all(|v| *v == 0.0) {
+                    elided += 1;
+                    continue;
+                }
+                // dedup key: extents + exact bit pattern
+                let mut key = Vec::with_capacity(data.len() + 2);
+                key.push(rows as u32);
+                key.push(cols as u32);
+                key.extend(data.iter().map(|v| v.to_bits()));
+                let program = match dedup.get(&key) {
+                    Some(&p) => p,
+                    None => {
+                        let p = programs.len();
+                        programs.push(data);
+                        dedup.insert(key, p);
+                        p
+                    }
+                };
+                tiles.push(TileSpec {
+                    row0,
+                    col0,
+                    rows,
+                    cols,
+                    program,
+                });
+            }
+        }
+    }
+    Ok(ExecPlan {
+        k,
+        dim: g.dim,
+        tiles,
+        programs,
+        scheduled_tiles: scheduled,
+        elided_tiles: elided,
+    })
+}
+
+impl ExecPlan {
+    /// y' = A'x' over the scheduled tiles, writing into a reusable output
+    /// buffer (cleared and resized to `dim`). Accumulation order matches
+    /// [`crate::crossbar::CrossbarArray::mvm`].
+    pub fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.dim, "input vector length mismatch");
+        y.clear();
+        y.resize(self.dim, 0.0);
+        for t in &self.tiles {
+            let prog = &self.programs[t.program];
+            for r in 0..t.rows {
+                let row = &prog[r * t.cols..r * t.cols + t.cols];
+                let xs = &x[t.col0..t.col0 + t.cols];
+                let mut acc = 0.0f64;
+                for (gv, xv) in row.iter().zip(xs.iter()) {
+                    acc += *gv as f64 * xv;
+                }
+                y[t.row0 + r] += acc;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::mvm_into`].
+    pub fn mvm(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.mvm_into(x, &mut y);
+        y
+    }
+
+    /// Fraction of scheduled tiles dropped because they held no non-zeros.
+    pub fn elision_ratio(&self) -> f64 {
+        if self.scheduled_tiles == 0 {
+            0.0
+        } else {
+            self.elided_tiles as f64 / self.scheduled_tiles as f64
+        }
+    }
+
+    /// Fraction of placed tiles served by a shared (deduplicated) program.
+    pub fn dedup_ratio(&self) -> f64 {
+        if self.tiles.is_empty() {
+            0.0
+        } else {
+            1.0 - self.programs.len() as f64 / self.tiles.len() as f64
+        }
+    }
+
+    /// Programmed cells inside the matrix (Σ rows·cols over the schedule).
+    pub fn cells(&self) -> u64 {
+        self.tiles
+            .iter()
+            .map(|t| (t.rows * t.cols) as u64)
+            .sum()
+    }
+
+    /// Non-zero count per program buffer (used by load-balancing policies).
+    pub fn program_nnz(&self) -> Vec<u64> {
+        self.programs
+            .iter()
+            .map(|p| p.iter().filter(|v| **v != 0.0).count() as u64)
+            .collect()
+    }
+
+    // ---- serialization ---------------------------------------------------
+
+    /// Serialize to the deployable JSON artifact format (version 1).
+    pub fn to_json(&self) -> Json {
+        let tiles = self
+            .tiles
+            .iter()
+            .map(|t| {
+                // flat [row0, col0, rows, cols, program] keeps the artifact
+                // compact; the field order is part of the format.
+                num_arr([
+                    t.row0 as f64,
+                    t.col0 as f64,
+                    t.rows as f64,
+                    t.cols as f64,
+                    t.program as f64,
+                ])
+            })
+            .collect();
+        let programs = self
+            .programs
+            .iter()
+            .map(|p| num_arr(p.iter().map(|&v| v as f64)))
+            .collect();
+        obj(vec![
+            ("version", Json::Num(1.0)),
+            ("k", Json::Num(self.k as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("scheduled_tiles", Json::Num(self.scheduled_tiles as f64)),
+            ("elided_tiles", Json::Num(self.elided_tiles as f64)),
+            ("tiles", Json::Arr(tiles)),
+            ("programs", Json::Arr(programs)),
+        ])
+    }
+
+    /// Parse and validate a plan document.
+    pub fn from_json(doc: &Json) -> Result<ExecPlan> {
+        let version = doc.get("version").as_usize().context("plan missing version")?;
+        ensure!(version == 1, "unsupported plan version {version}");
+        let k = doc.get("k").as_usize().context("plan missing k")?;
+        let dim = doc.get("dim").as_usize().context("plan missing dim")?;
+        ensure!(k >= 1 && dim >= 1, "plan has degenerate geometry");
+        let scheduled_tiles = doc
+            .get("scheduled_tiles")
+            .as_usize()
+            .context("plan missing scheduled_tiles")?;
+        let elided_tiles = doc
+            .get("elided_tiles")
+            .as_usize()
+            .context("plan missing elided_tiles")?;
+        let mut programs = Vec::new();
+        for (i, p) in doc
+            .get("programs")
+            .as_arr()
+            .context("plan missing programs")?
+            .iter()
+            .enumerate()
+        {
+            let vals = p.as_arr().with_context(|| format!("program {i} not an array"))?;
+            let mut data = Vec::with_capacity(vals.len());
+            for v in vals {
+                data.push(v.as_f64().with_context(|| format!("program {i}: non-number"))? as f32);
+            }
+            programs.push(data);
+        }
+        let mut tiles = Vec::new();
+        for (i, t) in doc
+            .get("tiles")
+            .as_arr()
+            .context("plan missing tiles")?
+            .iter()
+            .enumerate()
+        {
+            let f = t.as_arr().with_context(|| format!("tile {i} not an array"))?;
+            ensure!(f.len() == 5, "tile {i} needs 5 fields, got {}", f.len());
+            let mut nums = [0usize; 5];
+            for (slot, v) in nums.iter_mut().zip(f.iter()) {
+                *slot = v.as_usize().with_context(|| format!("tile {i}: bad field"))?;
+            }
+            let spec = TileSpec {
+                row0: nums[0],
+                col0: nums[1],
+                rows: nums[2],
+                cols: nums[3],
+                program: nums[4],
+            };
+            if spec.rows == 0 || spec.cols == 0 || spec.rows > k || spec.cols > k {
+                bail!("tile {i} has extents {}x{} outside 1..={k}", spec.rows, spec.cols);
+            }
+            if spec.row0 + spec.rows > dim || spec.col0 + spec.cols > dim {
+                bail!("tile {i} exceeds the {dim}-unit matrix");
+            }
+            let prog = programs
+                .get(spec.program)
+                .with_context(|| format!("tile {i} references missing program {}", spec.program))?;
+            if prog.len() != spec.rows * spec.cols {
+                bail!(
+                    "tile {i} is {}x{} but program {} has {} elements",
+                    spec.rows,
+                    spec.cols,
+                    spec.program,
+                    prog.len()
+                );
+            }
+            tiles.push(spec);
+        }
+        ensure!(
+            tiles.len() + elided_tiles == scheduled_tiles,
+            "plan tile accounting is inconsistent: {} placed + {} elided != {} scheduled",
+            tiles.len(),
+            elided_tiles,
+            scheduled_tiles
+        );
+        Ok(ExecPlan {
+            k,
+            dim,
+            tiles,
+            programs,
+            scheduled_tiles,
+            elided_tiles,
+        })
+    }
+
+    /// Write the plan artifact to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing plan {}", path.display()))
+    }
+
+    /// Load a plan artifact from disk.
+    pub fn load(path: &Path) -> Result<ExecPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("plan {} is not valid JSON", path.display()))?;
+        Self::from_json(&doc).with_context(|| format!("parsing plan {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crossbar::place;
+    use crate::graph::synth;
+    use crate::reorder::{reorder, Reordering};
+    use crate::scheme::{parse_actions, FillRule};
+    use crate::util::propcheck::check;
+
+    fn qh882_setup() -> (Csr, GridSummary) {
+        let m = synth::qh882_like(1);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let g = GridSummary::new(&r.matrix, 32);
+        (r.matrix, g)
+    }
+
+    #[test]
+    fn full_block_plan_elides_empty_tiles_and_matches_oracle() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let arr = place(&m, &g, &scheme).unwrap();
+        assert_eq!(plan.scheduled_tiles, arr.tiles.len());
+        assert_eq!(plan.tiles.len() + plan.elided_tiles, plan.scheduled_tiles);
+        // a CM-reordered banded matrix leaves most of the full block empty
+        assert!(
+            plan.elision_ratio() > 0.5,
+            "elision {} too low",
+            plan.elision_ratio()
+        );
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+        let y = plan.mvm(&x);
+        let want = arr.mvm(&x);
+        for (a, b) in y.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clipped_cells_match_scheme_area_on_full_block() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        // every *placed* tile's clipped extents stay inside the matrix
+        for t in &plan.tiles {
+            assert!(t.row0 + t.rows <= 882 && t.col0 + t.cols <= 882);
+            assert_eq!(plan.programs[t.program].len(), t.rows * t.cols);
+        }
+        // scheduled (pre-elision) clipped area would equal 882²; placed
+        // cells are a subset
+        assert!(plan.cells() <= 882 * 882);
+        assert!(plan.cells() > 0);
+    }
+
+    #[test]
+    fn dedup_shares_identical_programs() {
+        // batch supermatrix of identical sub-graphs: the diagonal blocks
+        // repeat, so unit-tiling them must dedup heavily.
+        let sub = synth::qm7_like(5828);
+        let m = synth::batch_supermatrix(&[sub.clone(), sub.clone(), sub.clone()]);
+        let g = GridSummary::new(&m, 22);
+        let scheme = Scheme {
+            diag_len: vec![1; g.n],
+            fill_len: vec![0; g.n - 1],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        assert_eq!(plan.tiles.len(), 3);
+        assert_eq!(plan.programs.len(), 1, "identical sub-graphs must share a program");
+        assert!(plan.dedup_ratio() > 0.6);
+        // and the shared program still computes correctly per tile position
+        let x: Vec<f64> = (0..66).map(|i| (i as f64 * 0.31).cos()).collect();
+        let y = plan.mvm(&x);
+        let want = m.spmv(&x);
+        for (a, b) in y.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_plan() {
+        let (m, g) = qh882_setup();
+        let scheme = parse_actions(
+            g.n,
+            &vec![1u8; g.n - 1],
+            &vec![0usize; g.n - 1],
+            FillRule::None,
+        );
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let doc = plan.to_json();
+        let back = ExecPlan::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let sub = synth::qm7_like(5828);
+        let g = GridSummary::new(&sub, 2);
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&sub, &g, &scheme).unwrap();
+        let dir = std::env::temp_dir().join("autogmap_engine_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        plan.save(&path).unwrap();
+        let back = ExecPlan::load(&path).unwrap();
+        assert_eq!(plan, back);
+        let x: Vec<f64> = (0..22).map(|i| i as f64 - 11.0).collect();
+        assert_eq!(plan.mvm(&x), back.mvm(&x));
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_plans() {
+        for text in [
+            "{}",
+            r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
+            // tile referencing a missing program
+            r#"{"version":1,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"programs":[]}"#,
+            // tile exceeding the matrix
+            r#"{"version":1,"k":2,"dim":3,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[2,2,2,2,0]],"programs":[[1,0,0,1]]}"#,
+            // program length mismatch
+            r#"{"version":1,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"programs":[[1,0]]}"#,
+            // inconsistent accounting
+            r#"{"version":1,"k":2,"dim":4,"scheduled_tiles":5,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"programs":[[1,0,0,1]]}"#,
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(ExecPlan::from_json(&doc).is_err(), "should reject {text}");
+        }
+    }
+
+    #[test]
+    fn compile_rejects_invalid_scheme() {
+        let (m, g) = qh882_setup();
+        let bad = Scheme {
+            diag_len: vec![g.n + 1],
+            fill_len: vec![],
+        };
+        assert!(compile(&m, &g, &bad).is_err());
+    }
+
+    #[test]
+    fn random_scheme_plans_match_oracle_property() {
+        check("engine_plan_matches_oracle", 15, |rng| {
+            let m = synth::molecule_like(30, 80, rng.next_u64());
+            let r = reorder(&m, Reordering::CuthillMckee);
+            let grid = 2 + rng.below(4) as usize;
+            let g = GridSummary::new(&r.matrix, grid);
+            if g.n < 2 {
+                return Ok(());
+            }
+            let d: Vec<u8> = (0..g.n - 1).map(|_| rng.below(2) as u8).collect();
+            let f: Vec<usize> = (0..g.n - 1).map(|_| rng.below(4) as usize).collect();
+            let s = parse_actions(g.n, &d, &f, FillRule::Dynamic { grades: 4 });
+            let plan = compile(&r.matrix, &g, &s).map_err(|e| format!("{e:#}"))?;
+            let arr = place(&r.matrix, &g, &s).map_err(|e| format!("{e:#}"))?;
+            let x: Vec<f64> = (0..g.dim).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let y = plan.mvm(&x);
+            let want = arr.mvm(&x);
+            for (i, (a, b)) in y.iter().zip(want.iter()).enumerate() {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("row {i}: plan {a} vs oracle {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -13,11 +13,25 @@
 //!
 //! Python never runs at request time: `make artifacts` lowers the L1/L2
 //! computations once; the Rust binary loads them through PJRT.
+//!
+//! ## Serving layer
+//!
+//! Training produces a mapping scheme; the [`engine`] subsystem turns it
+//! into production traffic capacity. A scheme compiles into an
+//! [`engine::ExecPlan`] (flat tile schedule, all-zero tiles elided,
+//! duplicate programmings shared, JSON-deployable), the plan's tiles are
+//! distributed over a simulated crossbar [`engine::Fleet`] for
+//! latency/energy accounting, and an [`engine::BatchExecutor`] worker pool
+//! serves batched MVM requests bit-identically to the
+//! [`crossbar::CrossbarArray::mvm`] oracle. The `serve-bench` CLI
+//! subcommand replays synthetic request traces against the engine and
+//! emits machine-readable throughput/latency reports (`BENCH_engine.json`).
 
 pub mod agent;
 pub mod baselines;
 pub mod coordinator;
 pub mod crossbar;
+pub mod engine;
 pub mod gcn;
 pub mod graph;
 pub mod reorder;

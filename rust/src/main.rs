@@ -8,6 +8,8 @@
 //!   gen-data   — write the synthetic datasets to data/ as .mtx
 //!   visualize  — spy-plot a dataset (ASCII + SVG)
 //!   info       — runtime + manifest summary
+//!   serve-bench — compile/load an execution plan and replay a synthetic
+//!                request trace against the engine (throughput, p50/p99)
 
 use autogmap::coordinator::config::{Dataset, ExperimentConfig};
 use autogmap::coordinator::{reproduce, runner, RunnerOptions};
@@ -32,8 +34,20 @@ USAGE: autogmap <subcommand> [options]
   gen-data   [--out data]
   visualize  --dataset qm7|qh882|qh1484 [--mtx-path p] [--out figures]
   info
+  serve-bench [--dataset qm7|qh882|qh1484|batch|mtx --mtx-path p --grid N]
+             [--scheme full|unit|oracle | --plan plan.json] [--save-plan p]
+             [--banks N] [--policy rr|balanced] [--workers N]
+             [--trace uniform|bursty|batch] [--batch N] [--requests N]
+             [--trace-seed N] [--bench-json BENCH_engine.json]
 
   global: --artifacts DIR (default: artifacts)
+
+  serve-bench example:
+    autogmap serve-bench --dataset qh882 --banks 8 --trace bursty \\
+        --requests 1024 --batch 64 --bench-json BENCH_engine.json
+  compiles the scheme into an ExecPlan (all-zero tiles elided), spreads it
+  over 8 simulated crossbar banks, replays the trace through the batch
+  executor, and reports throughput + p50/p99 vs the single-threaded oracle.
 ";
 
 fn main() {
@@ -53,6 +67,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "config", "dataset", "mtx-path", "grid", "controller", "fill", "fill-arg",
         "reward-a", "lr", "ent-coef", "epochs", "seed", "out", "checkpoint-every",
         "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
+        "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
+        "requests", "trace-seed", "bench-json",
     ];
     let flag_opts = ["verbose", "help"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -71,6 +87,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "gen-data" => cmd_gen_data(&args),
         "visualize" => cmd_visualize(&args),
         "info" => cmd_info(&artifacts),
+        "serve-bench" => cmd_serve_bench(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -258,6 +275,209 @@ fn cmd_visualize(args: &Args) -> anyhow::Result<()> {
     let file = out.join(format!("{}.svg", ds.label()));
     std::fs::write(&file, autogmap::viz::svg_scheme(&r.matrix, &g, None, &ds.label()))?;
     println!("wrote {}", file.display());
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use autogmap::crossbar::{cost::CostModel, place, CrossbarArray};
+    use autogmap::engine::{self, AssignPolicy, BatchExecutor, ExecPlan, Fleet, TraceKind};
+    use autogmap::graph::GridSummary;
+    use autogmap::scheme::Scheme;
+    use autogmap::util::bench;
+    use autogmap::util::json::Json;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let ds = dataset_from_args(args)?;
+    let grid = args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(match ds {
+        Dataset::Qm7 { .. } => 2,
+        Dataset::Batch { .. } => 22,
+        _ => 32,
+    });
+    let m = autogmap::coordinator::dataset::load_matrix(&ds)?;
+    let reordering =
+        Reordering::parse(args.get_or("reorder", "cm")).map_err(anyhow::Error::msg)?;
+    let r = autogmap::reorder::reorder(&m, reordering);
+    let g = GridSummary::new(&r.matrix, grid);
+
+    // --- plan: load a deployable artifact, or compile from a scheme (the
+    // latter also places the CrossbarArray oracle for the baseline loop)
+    let scheme_name;
+    let (plan, oracle): (ExecPlan, Option<CrossbarArray>) = if let Some(p) = args.get("plan") {
+        scheme_name = format!("plan:{p}");
+        let plan = ExecPlan::load(Path::new(p))?;
+        anyhow::ensure!(
+            plan.dim == g.dim && plan.k == grid,
+            "plan {p} is for dim {} grid {}, but the selected dataset is dim {} grid {grid}",
+            plan.dim,
+            plan.k,
+            g.dim
+        );
+        (plan, None)
+    } else {
+        let kind = args.get_or("scheme", "full");
+        let scheme = match kind {
+            "full" => Scheme { diag_len: vec![g.n], fill_len: vec![] },
+            "unit" => Scheme {
+                diag_len: vec![1; g.n],
+                fill_len: vec![1; g.n.saturating_sub(1)],
+            },
+            "oracle" => autogmap::baselines::oracle::optimal_diagonal(&g)
+                .context("DP oracle found no complete-coverage partition")?,
+            other => anyhow::bail!("unknown scheme {other:?} (full|unit|oracle)"),
+        };
+        scheme_name = kind.to_string();
+        let plan = engine::compile(&r.matrix, &g, &scheme)?;
+        let arr = place(&r.matrix, &g, &scheme)?;
+        (plan, Some(arr))
+    };
+    if let Some(p) = args.get("save-plan") {
+        plan.save(Path::new(p))?;
+        println!("wrote plan artifact {p}");
+    }
+
+    // --- fleet accounting (simulated banks; numerics run on the host)
+    let banks = args.get_usize("banks").map_err(anyhow::Error::msg)?.unwrap_or(8).max(1);
+    let policy = AssignPolicy::parse(args.get_or("policy", "balanced"))?;
+    let fleet = Fleet::assign(&plan, banks, policy)?;
+    let cost = CostModel::default();
+
+    // --- synthetic request trace
+    let trace_kind = TraceKind::parse(args.get_or("trace", "uniform"))?;
+    let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?.unwrap_or(64).max(1);
+    let requests =
+        args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(512).max(1);
+    // --seed selects the synthetic *dataset* (as in every other
+    // subcommand); --trace-seed varies the request traffic independently,
+    // so BENCH_engine.json stays comparable across traffic seeds.
+    let trace_seed =
+        args.get_u64("trace-seed").map_err(anyhow::Error::msg)?.unwrap_or(0x5eed);
+    let segments: Vec<(usize, usize)> = match &ds {
+        Dataset::Batch { count, .. } if *count > 0 => {
+            // index segments of the supermatrix, one per sub-graph
+            let sub = g.dim / *count;
+            (0..*count)
+                .map(|i| (i * sub, if i + 1 == *count { g.dim } else { (i + 1) * sub }))
+                .collect()
+        }
+        _ => vec![(0, g.dim)],
+    };
+    let trace = engine::synth_trace(trace_kind, g.dim, requests, batch, &segments, trace_seed);
+    let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(banks).max(1);
+
+    println!(
+        "serve-bench {}: dim {} grid {grid} (N={}), scheme {scheme_name}",
+        ds.label(),
+        g.dim,
+        g.n
+    );
+    println!(
+        "plan: {} scheduled tiles -> {} placed ({} elided, {:.1}% elision), {} unique programs ({:.1}% dedup), {} cells",
+        plan.scheduled_tiles,
+        plan.tiles.len(),
+        plan.elided_tiles,
+        plan.elision_ratio() * 100.0,
+        plan.programs.len(),
+        plan.dedup_ratio() * 100.0,
+        plan.cells()
+    );
+    println!(
+        "fleet: {} banks ({:?}), nnz imbalance {:.3}, modelled mvm latency {:.2} us, energy {:.2} nJ",
+        fleet.banks,
+        fleet.policy,
+        fleet.imbalance(),
+        fleet.mvm_latency_ns(&cost) / 1e3,
+        fleet.mvm_energy_pj(&cost) / 1e3
+    );
+
+    // --- replay the trace through the batch executor
+    let plan = Arc::new(plan);
+    let exec = BatchExecutor::new(plan.clone(), workers);
+    exec.recycle(exec.execute_batch(trace[0].clone())); // warmup, primes buffer pool
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for batch_reqs in &trace {
+        let xs = batch_reqs.clone();
+        let tb = Instant::now();
+        let ys = exec.execute_batch(xs);
+        let dt_ms = tb.elapsed().as_secs_f64() * 1e3;
+        latencies_ms.extend(std::iter::repeat(dt_ms).take(ys.len()));
+        exec.recycle(ys);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let throughput = requests as f64 / wall;
+    let p50 = bench::percentile(&latencies_ms, 50.0);
+    let p99 = bench::percentile(&latencies_ms, 99.0);
+    println!(
+        "engine: {requests} requests / {} batches ({:?} trace) in {:.3}s -> {:.0} req/s, p50 {:.3} ms, p99 {:.3} ms ({workers} workers)",
+        trace.len(),
+        trace_kind,
+        wall,
+        throughput,
+        p50,
+        p99
+    );
+
+    // --- single-threaded oracle loop over the same trace, plus a
+    // correctness spot-check of the engine against it
+    let mut oracle_rps = None;
+    if let Some(arr) = &oracle {
+        let want = arr.mvm(&trace[0][0]);
+        let got = plan.mvm(&trace[0][0]);
+        for (a, b) in got.iter().zip(want.iter()) {
+            anyhow::ensure!((a - b).abs() < 1e-9, "engine diverged from oracle: {a} vs {b}");
+        }
+        let t0 = Instant::now();
+        let mut sink = 0.0f64;
+        for x in trace.iter().flatten() {
+            sink += arr.mvm(x)[0];
+        }
+        let wall_oracle = t0.elapsed().as_secs_f64();
+        std::hint::black_box(sink);
+        let rps = requests as f64 / wall_oracle;
+        println!(
+            "oracle: single-threaded CrossbarArray::mvm -> {:.0} req/s (engine speedup {:.2}x)",
+            rps,
+            throughput / rps
+        );
+        oracle_rps = Some(rps);
+    } else {
+        println!("oracle: skipped (plan loaded from disk; no scheme to place)");
+    }
+
+    // --- machine-readable artifact for perf-trajectory tracking
+    let out = args.get_or("bench-json", "BENCH_engine.json");
+    let mut fields = vec![
+        ("bench", Json::Str("engine_serve".into())),
+        ("dataset", Json::Str(ds.label())),
+        ("dim", Json::Num(g.dim as f64)),
+        ("grid", Json::Num(grid as f64)),
+        ("scheme", Json::Str(scheme_name)),
+        ("trace", Json::Str(args.get_or("trace", "uniform").to_string())),
+        ("requests", Json::Num(requests as f64)),
+        ("nominal_batch", Json::Num(batch as f64)),
+        ("banks", Json::Num(banks as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("policy", Json::Str(format!("{:?}", fleet.policy))),
+        ("scheduled_tiles", Json::Num(plan.scheduled_tiles as f64)),
+        ("placed_tiles", Json::Num(plan.tiles.len() as f64)),
+        ("elision_ratio", Json::Num(plan.elision_ratio())),
+        ("dedup_ratio", Json::Num(plan.dedup_ratio())),
+        ("fleet_imbalance", Json::Num(fleet.imbalance())),
+        ("fleet_latency_ns", Json::Num(fleet.mvm_latency_ns(&cost))),
+        ("fleet_energy_pj", Json::Num(fleet.mvm_energy_pj(&cost))),
+        ("throughput_rps", Json::Num(throughput)),
+        ("p50_ms", Json::Num(p50)),
+        ("p99_ms", Json::Num(p99)),
+        ("wall_s", Json::Num(wall)),
+    ];
+    if let Some(rps) = oracle_rps {
+        fields.push(("oracle_rps", Json::Num(rps)));
+        fields.push(("speedup_vs_oracle", Json::Num(throughput / rps)));
+    }
+    bench::write_bench_json(Path::new(out), fields)?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -137,6 +137,29 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Nearest-rank percentile of a sample set; `p` in [0, 100]. Sorts a copy,
+/// so callers can keep their samples in arrival order.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(
+        !samples.is_empty() && (0.0..=100.0).contains(&p),
+        "percentile needs samples and p in [0,100]"
+    );
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
+/// Write a machine-readable benchmark artifact (the `BENCH_*.json`
+/// convention: one flat JSON object per bench target, committed metrics
+/// only — so successive PRs can diff the perf trajectory).
+pub fn write_bench_json(
+    path: &std::path::Path,
+    fields: Vec<(&str, crate::util::json::Json)>,
+) -> std::io::Result<()> {
+    std::fs::write(path, crate::util::json::obj(fields).to_pretty())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +176,35 @@ mod tests {
         assert!(stats.median_s > 0.0);
         assert!(stats.median_s < 1e-3);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 90.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_json_artifact_roundtrips() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join("autogmap_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_bench_json(
+            &path,
+            vec![
+                ("throughput_rps", Json::Num(1234.5)),
+                ("p50_ms", Json::Num(0.8)),
+            ],
+        )
+        .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("throughput_rps").as_f64(), Some(1234.5));
+        assert_eq!(doc.get("p50_ms").as_f64(), Some(0.8));
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Cross-module integration for the execution engine: scheme → compiled
+//! plan → JSON artifact → fleet assignment → batch-served traffic, checked
+//! against the crossbar oracle end to end.
+
+use autogmap::baselines::oracle::optimal_diagonal;
+use autogmap::crossbar::cost::CostModel;
+use autogmap::crossbar::place;
+use autogmap::engine::{
+    compile, synth_trace, AssignPolicy, BatchExecutor, ExecPlan, Fleet, TraceKind,
+};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::{evaluate, RewardWeights, Scheme};
+use std::sync::Arc;
+
+fn qh882_workload() -> (autogmap::graph::Csr, GridSummary) {
+    let m = synth::qh882_like(882);
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let g = GridSummary::new(&r.matrix, 32);
+    (r.matrix, g)
+}
+
+#[test]
+fn compiled_full_block_plan_elides_and_serves_exactly() {
+    let (m, g) = qh882_workload();
+    let scheme = Scheme {
+        diag_len: vec![g.n],
+        fill_len: vec![],
+    };
+    // complete coverage by construction
+    let e = evaluate(&scheme, &g, RewardWeights::new(0.8));
+    assert_eq!(e.coverage_ratio, 1.0);
+
+    let plan = compile(&m, &g, &scheme).unwrap();
+    let arr = place(&m, &g, &scheme).unwrap();
+    assert_eq!(plan.scheduled_tiles, arr.tiles.len());
+    assert!(plan.elision_ratio() > 0.5, "elision {}", plan.elision_ratio());
+
+    let exec = BatchExecutor::new(Arc::new(plan), 8);
+    let trace = synth_trace(TraceKind::Bursty, g.dim, 64, 8, &[(0, g.dim)], 7);
+    for batch in trace {
+        let ys = exec.execute_batch(batch.clone());
+        for (x, y) in batch.iter().zip(ys.iter()) {
+            let want = arr.mvm(x);
+            for (a, b) in y.iter().zip(want.iter()) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+        }
+        exec.recycle(ys);
+    }
+}
+
+#[test]
+fn plan_artifact_roundtrips_and_serves_identically() {
+    let (m, g) = qh882_workload();
+    let scheme = optimal_diagonal(&g).expect("DP oracle partition");
+    let plan = compile(&m, &g, &scheme).unwrap();
+
+    let dir = std::env::temp_dir().join("autogmap_it_engine");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("qh882_plan.json");
+    plan.save(&path).unwrap();
+    let loaded = ExecPlan::load(&path).unwrap();
+    assert_eq!(plan, loaded);
+
+    // the deployed artifact answers exactly like the freshly compiled plan
+    let x: Vec<f64> = (0..g.dim).map(|i| ((i * 29) % 13) as f64 - 6.0).collect();
+    assert_eq!(plan.mvm(&x), loaded.mvm(&x));
+
+    // and both match the oracle on the complete-coverage scheme
+    let arr = place(&m, &g, &scheme).unwrap();
+    let want = arr.mvm(&x);
+    for (a, b) in loaded.mvm(&x).iter().zip(want.iter()) {
+        assert!((a - b).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn fleet_accounting_is_conserved_across_policies_and_sizes() {
+    let (m, g) = qh882_workload();
+    let scheme = Scheme {
+        diag_len: vec![g.n],
+        fill_len: vec![],
+    };
+    let plan = compile(&m, &g, &scheme).unwrap();
+    let cost = CostModel::default();
+    let total_cells = plan.cells();
+    for banks in [1usize, 2, 8] {
+        for policy in [AssignPolicy::RoundRobin, AssignPolicy::BalancedNnz] {
+            let fleet = Fleet::assign(&plan, banks, policy).unwrap();
+            assert_eq!(fleet.loads.len(), banks);
+            let cells: u64 = fleet.loads.iter().map(|l| l.cells).sum();
+            assert_eq!(cells, total_cells, "{policy:?}@{banks} lost cells");
+            let tiles: usize = fleet.loads.iter().map(|l| l.tiles).sum();
+            assert_eq!(tiles, plan.tiles.len());
+            // energy is policy-independent (same tiles, different homes)
+            let energy = fleet.mvm_energy_pj(&cost);
+            let single = Fleet::assign(&plan, 1, AssignPolicy::RoundRobin)
+                .unwrap()
+                .mvm_energy_pj(&cost);
+            assert!((energy - single).abs() < 1e-6 * single.max(1.0));
+        }
+    }
+    // more banks never increase the modelled fleet latency
+    let mut serial = cost;
+    serial.parallel_tiles = 1;
+    let l1 = Fleet::assign(&plan, 1, AssignPolicy::BalancedNnz)
+        .unwrap()
+        .mvm_latency_ns(&serial);
+    let l8 = Fleet::assign(&plan, 8, AssignPolicy::BalancedNnz)
+        .unwrap()
+        .mvm_latency_ns(&serial);
+    assert!(l8 <= l1);
+}
+
+#[test]
+fn batch_graph_traffic_over_a_supermatrix_plan() {
+    // block-diagonal batch supermatrix served with per-sub-graph requests:
+    // the engine must dedup the repeated sub-graph programmings and still
+    // answer exactly.
+    let sub = synth::qm7_like(5828);
+    let m = synth::batch_supermatrix(&[sub.clone(), sub.clone(), sub.clone(), sub]);
+    let g = GridSummary::new(&m, 22);
+    let scheme = Scheme {
+        diag_len: vec![1; g.n],
+        fill_len: vec![0; g.n - 1],
+    };
+    let plan = compile(&m, &g, &scheme).unwrap();
+    assert_eq!(plan.tiles.len(), 4);
+    assert_eq!(plan.programs.len(), 1, "identical sub-graphs must share programs");
+
+    let arr = place(&m, &g, &scheme).unwrap();
+    let segments: Vec<(usize, usize)> = (0..4).map(|i| (i * 22, (i + 1) * 22)).collect();
+    let exec = BatchExecutor::new(Arc::new(plan), 4);
+    let trace = synth_trace(TraceKind::BatchGraph, 88, 48, 6, &segments, 11);
+    for batch in trace {
+        let ys = exec.execute_batch(batch.clone());
+        for (x, y) in batch.iter().zip(ys.iter()) {
+            let want = arr.mvm(x);
+            for (a, b) in y.iter().zip(want.iter()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+        exec.recycle(ys);
+    }
+}

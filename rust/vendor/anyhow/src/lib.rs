@@ -1,0 +1,204 @@
+//! Offline shim for the subset of `anyhow` this repository uses.
+//!
+//! The vendored crate set contains no registry dependencies, so this crate
+//! re-implements the `anyhow` surface the codebase relies on — `Error`,
+//! `Result`, the `Context` trait for `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with the same semantics:
+//!
+//! - `Display` prints the outermost message only;
+//! - alternate `Display` (`{:#}`) prints the whole context chain joined
+//!   with `": "` (what the CLI prints on fatal errors);
+//! - any `std::error::Error + Send + Sync + 'static` converts into
+//!   [`Error`] via `?`, capturing its `source()` chain.
+
+use std::fmt;
+
+/// Error type: an ordered context chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real `anyhow`, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps the blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or turn `None` into an error
+/// (`Option`), exactly like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_outer_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file gone");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert!(format!("{e:#}").contains("file gone"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing x");
+        assert_eq!(Some(3).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 7);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert!(format!("{}", f(7).unwrap_err()).contains("condition failed"));
+        assert!(format!("{}", f(3).unwrap_err()).contains("three"));
+        let msg = String::from("plain");
+        assert_eq!(format!("{}", anyhow!(msg)), "plain");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("file gone"));
+    }
+}
