@@ -1,0 +1,85 @@
+//! Bench: native-backend training throughput — sampling rollouts at
+//! 1/2/8 workers and full epochs (rollout + BPTT + Adam) per paper
+//! workload class. Runs on a fresh checkout (no artifacts needed); the
+//! `train-bench` CLI subcommand emits the machine-readable counterpart
+//! (BENCH_train.json).
+
+use autogmap::agent::{BackendKind, NativeBackend, TrainBackend, TrainOptions};
+use autogmap::coordinator::config::Dataset;
+use autogmap::coordinator::dataset::load_matrix;
+use autogmap::coordinator::runner::build_trainer;
+use autogmap::graph::GridSummary;
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::Manifest;
+use autogmap::scheme::{FillRule, RewardWeights};
+use autogmap::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let manifest = Manifest::builtin();
+    let specs: [(&str, Dataset, usize, &str, FillRule); 3] = [
+        (
+            "qm7",
+            Dataset::Qm7 { seed: 5828 },
+            2,
+            "qm7_dyn4",
+            FillRule::Dynamic { grades: 4 },
+        ),
+        (
+            "qh882",
+            Dataset::Qh882 { seed: 882 },
+            32,
+            "qh882_dyn6",
+            FillRule::Dynamic { grades: 6 },
+        ),
+        (
+            "qh1484",
+            Dataset::Qh1484 { seed: 1484 },
+            32,
+            "qh1484_dyn6",
+            FillRule::Dynamic { grades: 6 },
+        ),
+    ];
+    for (label, ds, grid_size, controller, rule) in specs {
+        let m = load_matrix(&ds).unwrap();
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let grid = GridSummary::new(&r.matrix, grid_size);
+        let entry = manifest.config(controller).unwrap().clone();
+        let batch = entry.batch;
+
+        // sampling-only throughput across worker counts
+        for workers in [1usize, 2, 8] {
+            let mut be = NativeBackend::new(entry.clone(), 1, workers);
+            let mut key = 0u32;
+            let stats = b.bench(
+                &format!("native_rollout/{label} (B={batch}) w={workers}"),
+                || {
+                    key = key.wrapping_add(1);
+                    be.rollout([key, 0x5eed]).unwrap()
+                },
+            );
+            println!(
+                "  -> {:.0} episodes/s",
+                batch as f64 / stats.median_s
+            );
+        }
+
+        // full epoch: rollout + environment + BPTT + Adam
+        let opts = TrainOptions {
+            weights: RewardWeights::new(0.8),
+            fill_rule: rule,
+            workers: 2,
+            ..Default::default()
+        };
+        let mut trainer = build_trainer(None, controller, opts, BackendKind::Native).unwrap();
+        let stats = b.bench(&format!("native_epoch/{label} (w=2)"), || {
+            trainer.epoch(&grid).unwrap()
+        });
+        println!(
+            "  -> {:.0} epochs/s ({:.0} episodes/s); paper's 40k-epoch budget ≈ {:.0}s at this rate",
+            1.0 / stats.median_s,
+            batch as f64 / stats.median_s,
+            40_000.0 * stats.median_s
+        );
+    }
+}

@@ -1,0 +1,280 @@
+//! Pluggable training backends behind the [`TrainBackend`] trait.
+//!
+//! The trait captures exactly what Algo. 2/3 need from the learner — sample
+//! a batch of episodes, take one REINFORCE+Adam step on them, decode
+//! greedily, and expose state for checkpointing. Everything else (scheme
+//! parsing, the environment reward, the EMA baseline, best-solution
+//! tracking) lives in [`crate::agent::Trainer`] and is backend-agnostic.
+//!
+//! Two implementations ship:
+//!
+//! - [`PjrtBackend`] — the AOT path: per epoch one `rollout_<cfg>` and one
+//!   `train_<cfg>` PJRT artifact call (requires a built `artifacts/`
+//!   directory);
+//! - [`crate::agent::native::NativeBackend`] — pure Rust: sampling through
+//!   the [`crate::agent::lstm`] mirror on a std-thread worker pool,
+//!   gradients by full backprop-through-time, Adam on the host. Needs no
+//!   artifacts at all.
+//!
+//! [`BackendKind::Auto`] resolves to PJRT when an artifacts manifest is
+//! loadable and to native otherwise, so `train` works on a fresh checkout.
+
+use crate::agent::params::{self, AdamState, Params};
+use crate::runtime::manifest::ControllerEntry;
+use crate::runtime::{literal, Executable, Runtime};
+use anyhow::{bail, ensure, Context, Result};
+use std::sync::Arc;
+
+/// Which backend executes rollouts and gradient steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when an artifacts manifest is present, native otherwise.
+    Auto,
+    /// Pure-Rust BPTT trainer (no artifacts needed).
+    Native,
+    /// AOT PJRT artifacts (requires `artifacts/`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            other => bail!("unknown backend {other:?} (native|pjrt|auto)"),
+        })
+    }
+}
+
+/// One sampled batch: row-major [B, T] action matrices.
+pub struct RolloutBatch {
+    pub d_all: Vec<i32>,
+    pub f_all: Vec<i32>,
+}
+
+/// Scalar outputs of one gradient step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub mean_logp: f32,
+}
+
+/// What a training backend must provide.
+///
+/// Contract notes: `rollout` returns `entry.batch` episodes of
+/// `entry.steps` actions each; `train_step` applies
+/// `loss = -mean(adv · logp) - ent_coef · mean(H)` (the REINFORCE
+/// objective of `model.train_step`) followed by one Adam update; `greedy`
+/// returns at least one episode, row-major, and callers read episode 0.
+pub trait TrainBackend {
+    fn name(&self) -> &'static str;
+    /// Sample `entry.batch` episodes with the given PRNG key.
+    fn rollout(&mut self, key: [u32; 2]) -> Result<RolloutBatch>;
+    /// One REINFORCE + Adam step on the sampled episodes.
+    fn train_step(
+        &mut self,
+        d_all: &[i32],
+        f_all: &[i32],
+        adv: &[f32],
+        lr: f32,
+        ent_coef: f32,
+    ) -> Result<StepStats>;
+    /// Deterministic argmax decode.
+    fn greedy(&mut self) -> Result<(Vec<i32>, Vec<i32>)>;
+    /// Host-synced copy of the current parameters.
+    fn params(&self) -> Result<Params>;
+    /// Host-synced copy of the optimizer state.
+    fn opt_state(&self) -> Result<AdamState>;
+    /// Replace parameters + optimizer state (checkpoint restore).
+    fn load_state(&mut self, params: Params, opt: AdamState) -> Result<()>;
+}
+
+/// Actionable context for a failed artifact load: the most common cause is
+/// simply that `artifacts/` was never built, and the fix is one flag away.
+fn artifact_hint(rt: &Runtime, config: &str) -> String {
+    format!(
+        "loading PJRT artifacts for config {config} from {} — if you have \
+         not built artifacts, rerun with `--backend native` (the pure-Rust \
+         trainer needs none) or build them with `make artifacts`",
+        rt.artifacts_dir().display()
+    )
+}
+
+/// The original AOT path: rollout/train/greedy HLO artifacts executed
+/// through PJRT. Parameter and Adam literals are cached across epochs and
+/// refreshed in-place from the train step's *output* literals — avoids two
+/// Vec<f32> ↔ Literal conversions per epoch (EXPERIMENTS.md §Perf).
+pub struct PjrtBackend {
+    entry: ControllerEntry,
+    rollout_exe: Arc<Executable>,
+    train_exe: Arc<Executable>,
+    greedy_exe: Option<Arc<Executable>>,
+    /// cheap host mirror, kept in sync after every train step
+    params: Params,
+    opt: AdamState,
+    /// cached literal forms of (params, m, v)
+    lits: Option<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: &Runtime, entry: ControllerEntry, seed: u64) -> Result<PjrtBackend> {
+        let rollout_exe = entry
+            .artifact("rollout")
+            .and_then(|f| rt.load(f))
+            .with_context(|| artifact_hint(rt, &entry.name))?;
+        let train_exe = entry
+            .artifact("train")
+            .and_then(|f| rt.load(f))
+            .with_context(|| artifact_hint(rt, &entry.name))?;
+        let greedy_exe = entry
+            .artifacts
+            .get("greedy")
+            .map(|f| rt.load(f))
+            .transpose()
+            .with_context(|| artifact_hint(rt, &entry.name))?;
+        let params = params::init_params(&entry, seed);
+        let opt = AdamState::new(&entry);
+        Ok(PjrtBackend {
+            entry,
+            rollout_exe,
+            train_exe,
+            greedy_exe,
+            params,
+            opt,
+            lits: None,
+        })
+    }
+
+    fn ensure_lits(&mut self) -> Result<()> {
+        if self.lits.is_none() {
+            self.lits = Some((
+                params::to_literals(&self.entry, &self.params)?,
+                params::to_literals(&self.entry, &self.opt.m)?,
+                params::to_literals(&self.entry, &self.opt.v)?,
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl TrainBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn rollout(&mut self, key: [u32; 2]) -> Result<RolloutBatch> {
+        let (b, t) = (self.entry.batch, self.entry.steps);
+        self.ensure_lits()?;
+        let (p_lits, _, _) = self.lits.as_ref().unwrap();
+        let key_lit = literal::lit_u32_1d(&key);
+        let mut inputs: Vec<&xla::Literal> = p_lits.iter().collect();
+        inputs.push(&key_lit);
+        let outs = self.rollout_exe.run_refs(&inputs)?;
+        ensure!(outs.len() == 4, "rollout returned {} outputs", outs.len());
+        let d_all = literal::to_vec_i32(&outs[0])?;
+        let f_all = literal::to_vec_i32(&outs[1])?;
+        ensure!(d_all.len() == b * t && f_all.len() == b * t);
+        Ok(RolloutBatch { d_all, f_all })
+    }
+
+    fn train_step(
+        &mut self,
+        d_all: &[i32],
+        f_all: &[i32],
+        adv: &[f32],
+        lr: f32,
+        ent_coef: f32,
+    ) -> Result<StepStats> {
+        let (b, t) = (self.entry.batch, self.entry.steps);
+        let k = self.entry.params.len();
+        self.ensure_lits()?;
+        let (p_lits, m_lits, v_lits) = self.lits.as_ref().unwrap();
+        let t_lit = literal::lit_scalar_i32(self.opt.t);
+        let d_lit = literal::lit_i32_2d(d_all, b, t)?;
+        let f_lit = literal::lit_i32_2d(f_all, b, t)?;
+        let adv_lit = literal::lit_f32_1d(adv);
+        let lr_lit = literal::lit_scalar_f32(lr);
+        let ent_lit = literal::lit_scalar_f32(ent_coef);
+        let mut tin: Vec<&xla::Literal> = Vec::with_capacity(3 * k + 6);
+        tin.extend(p_lits.iter());
+        tin.extend(m_lits.iter());
+        tin.extend(v_lits.iter());
+        tin.extend([&t_lit, &d_lit, &f_lit, &adv_lit, &lr_lit, &ent_lit]);
+        let mut touts = self.train_exe.run_refs(&tin)?;
+        ensure!(
+            touts.len() == 3 * k + 3,
+            "train returned {} outputs, expected {}",
+            touts.len(),
+            3 * k + 3
+        );
+        self.opt.t = touts[3 * k].to_vec::<i32>().context("adam t")?[0];
+        let loss = touts[3 * k + 1].to_vec::<f32>().context("loss")?[0];
+        let mean_logp = touts[3 * k + 2].to_vec::<f32>().context("mean_logp")?[0];
+        touts.truncate(3 * k);
+        let new_v: Vec<xla::Literal> = touts.split_off(2 * k);
+        let new_m: Vec<xla::Literal> = touts.split_off(k);
+        // keep the cheap Vec<f32> mirror in sync for checkpoints/inspection
+        self.params = params::from_literals(&self.entry, &touts)?;
+        self.lits = Some((touts, new_m, new_v));
+        Ok(StepStats { loss, mean_logp })
+    }
+
+    fn greedy(&mut self) -> Result<(Vec<i32>, Vec<i32>)> {
+        let exe = self
+            .greedy_exe
+            .as_ref()
+            .context("no greedy artifact for this config")?;
+        let inputs = params::to_literals(&self.entry, &self.params)?;
+        let outs = exe.run(&inputs)?;
+        Ok((
+            literal::to_vec_i32(&outs[0])?,
+            literal::to_vec_i32(&outs[1])?,
+        ))
+    }
+
+    fn params(&self) -> Result<Params> {
+        Ok(self.params.clone())
+    }
+
+    fn opt_state(&self) -> Result<AdamState> {
+        // the hot loop keeps m/v only as device literals; sync on demand
+        let mut opt = self.opt.clone();
+        if let Some((_, m_lits, v_lits)) = self.lits.as_ref() {
+            opt.m = params::from_literals(&self.entry, m_lits)?;
+            opt.v = params::from_literals(&self.entry, v_lits)?;
+        }
+        Ok(opt)
+    }
+
+    fn load_state(&mut self, params: Params, opt: AdamState) -> Result<()> {
+        self.params = params;
+        self.opt = opt;
+        self.lits = None; // invalidate cached literals
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let rt = Runtime::new("/nonexistent_dir_autogmap_backend").unwrap();
+        let entry = ControllerEntry::from_dims("qm7_dyn4", 11, 10, 4, 8, false);
+        // builtin entries have no artifact files at all -> load must fail
+        // with a message that points at the native backend
+        let err = PjrtBackend::new(&rt, entry, 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--backend native"), "unhelpful: {msg}");
+    }
+}

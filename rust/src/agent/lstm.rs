@@ -1,17 +1,24 @@
-//! Pure-Rust mirror of the L2 controller forward pass.
+//! Pure-Rust L2 controller math: fused LSTM cell, per-step FC heads,
+//! log-softmax — as reusable step/cache structs shared by the forward
+//! mirror and the native training backend.
 //!
-//! Serves three purposes:
+//! Serves four purposes:
 //! 1. cross-validation: integration tests teacher-force the HLO rollout's
 //!    sampled actions through this mirror and assert the log-probs agree
 //!    to float tolerance (catching ABI drift between aot.py and the Rust
 //!    parameter layout);
-//! 2. a no-artifacts fallback (`--engine rust`) so every CLI command works
-//!    before `make artifacts`;
+//! 2. a no-artifacts fallback so every CLI command works before
+//!    `make artifacts`;
 //! 3. documentation-by-construction of the exact controller math
-//!    (gate packing (f,i,g,o), Algo. 1 double-step, fill masking).
+//!    (gate packing (f,i,g,o), Algo. 1 double-step, fill masking);
+//! 4. the forward half of the native trainer: [`LstmCell::step_cached`]
+//!    retains per-step intermediates and [`LstmCell::backward`] /
+//!    [`head_backward`] invert them, so `agent::native::bptt` can run full
+//!    backprop-through-time over exactly this math. Gradients *are*
+//!    mirrored — training no longer requires the AOT train_step artifact
+//!    (see [`crate::agent::backend`]).
 //!
-//! Mirrors `python/compile/model.py` exactly; gradient support is *not*
-//! mirrored (training always goes through the AOT train_step artifact).
+//! Mirrors `python/compile/model.py` exactly.
 
 use crate::runtime::manifest::ControllerEntry;
 use crate::util::rng::Pcg64;
@@ -24,36 +31,149 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// One fused LSTM step: returns (h, c). `xh` = [x, h_prev] concatenated,
-/// `w` is [(I+H), 4H] row-major, gate packing (f, i, g, o).
-fn lstm_step(xh: &[f32], c_prev: &[f32], w: &[f32], b: &[f32], hidden: usize) -> (Vec<f32>, Vec<f32>) {
-    let in_dim = xh.len();
-    let out_dim = 4 * hidden;
-    debug_assert_eq!(w.len(), in_dim * out_dim);
-    let mut z = b.to_vec();
-    for (i, &xi) in xh.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
-        let row = &w[i * out_dim..(i + 1) * out_dim];
-        for (zj, wj) in z.iter_mut().zip(row.iter()) {
-            *zj += xi * wj;
-        }
-    }
-    let mut h = vec![0.0; hidden];
-    let mut c = vec![0.0; hidden];
-    for j in 0..hidden {
-        let f = sigmoid(z[j]);
-        let i = sigmoid(z[hidden + j]);
-        let g = z[2 * hidden + j].tanh();
-        let o = sigmoid(z[3 * hidden + j]);
-        c[j] = f * c_prev[j] + i * g;
-        h[j] = o * c[j].tanh();
-    }
-    (h, c)
+/// One fused LSTM cell bound to its weights: `w` is [(I+H), 4H] row-major
+/// over the concatenated input `xh = [x, h_prev]`, `b` is [4H], gate
+/// packing (f, i, g, o) — the layout `python/compile/model.py` emits.
+pub struct LstmCell<'a> {
+    pub w: &'a [f32],
+    pub b: &'a [f32],
+    pub hidden: usize,
 }
 
-fn log_softmax(logits: &[f32]) -> Vec<f32> {
+/// Intermediates of one [`LstmCell::step_cached`] call, retained for
+/// [`LstmCell::backward`]. `c` is the *new* cell state (also the next
+/// step's `c_prev`).
+#[derive(Clone, Debug)]
+pub struct LstmStepCache {
+    pub xh: Vec<f32>,
+    pub c_prev: Vec<f32>,
+    pub f: Vec<f32>,
+    pub i: Vec<f32>,
+    pub g: Vec<f32>,
+    pub o: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl<'a> LstmCell<'a> {
+    pub fn new(w: &'a [f32], b: &'a [f32], hidden: usize) -> LstmCell<'a> {
+        debug_assert_eq!(b.len(), 4 * hidden);
+        LstmCell { w, b, hidden }
+    }
+
+    /// Pre-activations z = xh @ W + b.
+    fn preact(&self, xh: &[f32]) -> Vec<f32> {
+        let out_dim = 4 * self.hidden;
+        debug_assert_eq!(self.w.len(), xh.len() * out_dim);
+        let mut z = self.b.to_vec();
+        for (r, &xi) in xh.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.w[r * out_dim..(r + 1) * out_dim];
+            for (zj, wj) in z.iter_mut().zip(row.iter()) {
+                *zj += xi * wj;
+            }
+        }
+        z
+    }
+
+    /// One step: returns (h, c).
+    pub fn step(&self, xh: &[f32], c_prev: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let z = self.preact(xh);
+        let hn = self.hidden;
+        let mut h = vec![0.0; hn];
+        let mut c = vec![0.0; hn];
+        for j in 0..hn {
+            let f = sigmoid(z[j]);
+            let i = sigmoid(z[hn + j]);
+            let g = z[2 * hn + j].tanh();
+            let o = sigmoid(z[3 * hn + j]);
+            c[j] = f * c_prev[j] + i * g;
+            h[j] = o * c[j].tanh();
+        }
+        (h, c)
+    }
+
+    /// Like [`Self::step`], but consumes its inputs into a cache for the
+    /// backward pass. Returns (h, cache); the new cell state is `cache.c`.
+    pub fn step_cached(&self, xh: Vec<f32>, c_prev: Vec<f32>) -> (Vec<f32>, LstmStepCache) {
+        let z = self.preact(&xh);
+        let hn = self.hidden;
+        let mut f = vec![0.0; hn];
+        let mut i = vec![0.0; hn];
+        let mut g = vec![0.0; hn];
+        let mut o = vec![0.0; hn];
+        let mut c = vec![0.0; hn];
+        let mut h = vec![0.0; hn];
+        for j in 0..hn {
+            f[j] = sigmoid(z[j]);
+            i[j] = sigmoid(z[hn + j]);
+            g[j] = z[2 * hn + j].tanh();
+            o[j] = sigmoid(z[3 * hn + j]);
+            c[j] = f[j] * c_prev[j] + i[j] * g[j];
+            h[j] = o[j] * c[j].tanh();
+        }
+        (
+            h,
+            LstmStepCache {
+                xh,
+                c_prev,
+                f,
+                i,
+                g,
+                o,
+                c,
+            },
+        )
+    }
+
+    /// Reverse-mode step: `dh`/`dc` are the loss gradients w.r.t. this
+    /// step's outputs (h, c). Accumulates weight/bias gradients into
+    /// `dw`/`db` and returns (dxh, dc_prev).
+    pub fn backward(
+        &self,
+        cache: &LstmStepCache,
+        dh: &[f32],
+        dc: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let hn = self.hidden;
+        let out_dim = 4 * hn;
+        let mut dz = vec![0.0f32; out_dim];
+        let mut dc_prev = vec![0.0f32; hn];
+        for j in 0..hn {
+            let (f, i, g, o) = (cache.f[j], cache.i[j], cache.g[j], cache.o[j]);
+            let tc = cache.c[j].tanh();
+            let d_o = dh[j] * tc;
+            // total cell-state gradient: downstream dc plus the h = o·tanh(c) path
+            let dcj = dc[j] + dh[j] * o * (1.0 - tc * tc);
+            dc_prev[j] = dcj * f;
+            dz[j] = dcj * cache.c_prev[j] * f * (1.0 - f);
+            dz[hn + j] = dcj * g * i * (1.0 - i);
+            dz[2 * hn + j] = dcj * i * (1.0 - g * g);
+            dz[3 * hn + j] = d_o * o * (1.0 - o);
+        }
+        let mut dxh = vec![0.0f32; cache.xh.len()];
+        for (r, &x) in cache.xh.iter().enumerate() {
+            let wrow = &self.w[r * out_dim..(r + 1) * out_dim];
+            let dwrow = &mut dw[r * out_dim..(r + 1) * out_dim];
+            let mut acc = 0.0f32;
+            for j in 0..out_dim {
+                dwrow[j] += x * dz[j];
+                acc += wrow[j] * dz[j];
+            }
+            dxh[r] = acc;
+        }
+        for (dbj, &dzj) in db.iter_mut().zip(dz.iter()) {
+            *dbj += dzj;
+        }
+        (dxh, dc_prev)
+    }
+}
+
+/// Log-softmax over one logits row.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let lse = logits.iter().map(|&l| (l - max).exp()).sum::<f32>().ln() + max;
     logits.iter().map(|&l| l - lse).collect()
@@ -61,7 +181,7 @@ fn log_softmax(logits: &[f32]) -> Vec<f32> {
 
 /// Per-step FC head: logits = inp @ w_t + b_t, where `w_t` is
 /// [head_in, classes] row-major.
-fn head(inp: &[f32], w_t: &[f32], b_t: &[f32], classes: usize) -> Vec<f32> {
+pub fn head(inp: &[f32], w_t: &[f32], b_t: &[f32], classes: usize) -> Vec<f32> {
     let mut out = b_t.to_vec();
     for (i, &xi) in inp.iter().enumerate() {
         for j in 0..classes {
@@ -69,6 +189,32 @@ fn head(inp: &[f32], w_t: &[f32], b_t: &[f32], classes: usize) -> Vec<f32> {
         }
     }
     out
+}
+
+/// Reverse-mode of [`head`]: given `dlogits`, accumulates `dw_t`/`db_t`
+/// and adds `w_t · dlogits` into `dinp`.
+pub fn head_backward(
+    inp: &[f32],
+    w_t: &[f32],
+    dlogits: &[f32],
+    dw_t: &mut [f32],
+    db_t: &mut [f32],
+    dinp: &mut [f32],
+) {
+    let classes = dlogits.len();
+    for (i, &xi) in inp.iter().enumerate() {
+        let wrow = &w_t[i * classes..(i + 1) * classes];
+        let dwrow = &mut dw_t[i * classes..(i + 1) * classes];
+        let mut acc = 0.0f32;
+        for (j, &dl) in dlogits.iter().enumerate() {
+            dwrow[j] += xi * dl;
+            acc += wrow[j] * dl;
+        }
+        dinp[i] += acc;
+    }
+    for (dbj, &dl) in db_t.iter_mut().zip(dlogits.iter()) {
+        *dbj += dl;
+    }
 }
 
 /// Action selection policy for [`forward`].
@@ -90,8 +236,8 @@ pub struct Episode {
     pub entropy: f32,
 }
 
-/// Run the controller for one episode (batch dim of 1 — the Rust mirror is
-/// for validation/fallback, not throughput).
+/// Run the controller for one episode (batch dim of 1; the native backend
+/// fans episodes out across worker threads for throughput).
 pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> Episode {
     let hidden = entry.hidden;
     let t_steps = entry.steps;
@@ -103,14 +249,12 @@ pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> 
             .get(name)
             .unwrap_or_else(|| panic!("missing param {name}"))
     };
-    let lstm_w = get("lstm_w");
-    let lstm_b = get("lstm_b");
+    let cell = LstmCell::new(get("lstm_w"), get("lstm_b"), hidden);
 
     // BiLSTM auxiliary backward pass over learned embeddings.
     let hb: Vec<Vec<f32>> = if entry.bilstm {
         let emb = get("bwd_emb");
-        let bwd_w = get("bwd_w");
-        let bwd_b = get("bwd_b");
+        let bwd_cell = LstmCell::new(get("bwd_w"), get("bwd_b"), hidden);
         let mut h = vec![0.0; hidden];
         let mut c = vec![0.0; hidden];
         let mut rev = Vec::with_capacity(t_steps);
@@ -118,7 +262,7 @@ pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> 
             let x = &emb[t * hidden..(t + 1) * hidden];
             let mut xh = x.to_vec();
             xh.extend_from_slice(&h);
-            let (h2, c2) = lstm_step(&xh, &c, bwd_w, bwd_b, hidden);
+            let (h2, c2) = bwd_cell.step(&xh, &c);
             h = h2;
             c = c2;
             rev.push(h.clone());
@@ -144,7 +288,7 @@ pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> 
         // --- diagonal decision
         let mut xh = x.clone();
         xh.extend_from_slice(&h);
-        let (h1, c1) = lstm_step(&xh, &c, lstm_w, lstm_b, hidden);
+        let (h1, c1) = cell.step(&xh, &c);
         let head_inp: Vec<f32> = if entry.bilstm {
             h1.iter().chain(hb[t].iter()).cloned().collect()
         } else {
@@ -175,7 +319,7 @@ pub fn forward(entry: &ControllerEntry, params: &Params, mut select: Select) -> 
             let fc_f_b = get("fc_f_b");
             let mut xh2 = h1.clone();
             xh2.extend_from_slice(&h1);
-            let (h2, c2) = lstm_step(&xh2, &c1, lstm_w, lstm_b, hidden);
+            let (h2, c2) = cell.step(&xh2, &c1);
             let head_inp2: Vec<f32> = if entry.bilstm {
                 h2.iter().chain(hb[t].iter()).cloned().collect()
             } else {
@@ -236,40 +380,10 @@ fn argmax(xs: &[f32]) -> i32 {
 mod tests {
     use super::*;
     use crate::agent::params::init_params;
-    use crate::runtime::manifest::ParamSpec;
 
     fn entry(fill: usize, bilstm: bool) -> ControllerEntry {
-        let hidden = 6;
-        let n = 5;
-        let t = n - 1;
-        let head_in = if bilstm { 2 * hidden } else { hidden };
-        let mut params = vec![
-            ParamSpec { name: "x0".into(), shape: vec![hidden] },
-            ParamSpec { name: "lstm_w".into(), shape: vec![2 * hidden, 4 * hidden] },
-            ParamSpec { name: "lstm_b".into(), shape: vec![4 * hidden] },
-        ];
-        if bilstm {
-            params.push(ParamSpec { name: "bwd_emb".into(), shape: vec![t, hidden] });
-            params.push(ParamSpec { name: "bwd_w".into(), shape: vec![2 * hidden, 4 * hidden] });
-            params.push(ParamSpec { name: "bwd_b".into(), shape: vec![4 * hidden] });
-        }
-        params.push(ParamSpec { name: "fc_d_w".into(), shape: vec![t, head_in, 2] });
-        params.push(ParamSpec { name: "fc_d_b".into(), shape: vec![t, 2] });
-        if fill > 0 {
-            params.push(ParamSpec { name: "fc_f_w".into(), shape: vec![t, head_in, fill] });
-            params.push(ParamSpec { name: "fc_f_b".into(), shape: vec![t, fill] });
-        }
-        ControllerEntry {
-            name: "test".into(),
-            n,
-            hidden,
-            fill_classes: fill,
-            batch: 1,
-            bilstm,
-            steps: t,
-            params,
-            artifacts: Default::default(),
-        }
+        // hidden 6, n 5 -> T = 4 decision points
+        ControllerEntry::from_dims("test", 5, 6, fill, 1, bilstm)
     }
 
     #[test]
@@ -328,5 +442,20 @@ mod tests {
         let a = forward(&e, &params, Select::Teacher { d: &d, f: &f0 });
         let b = forward(&e, &params, Select::Teacher { d: &d, f: &f3 });
         assert!((a.logp - b.logp).abs() < 1e-6);
+    }
+
+    #[test]
+    fn step_and_step_cached_agree() {
+        let e = entry(0, false);
+        let params = init_params(&e, 21);
+        let cell = LstmCell::new(&params["lstm_w"], &params["lstm_b"], e.hidden);
+        let xh: Vec<f32> = (0..2 * e.hidden).map(|i| (i as f32) * 0.05 - 0.3).collect();
+        let c_prev: Vec<f32> = (0..e.hidden).map(|i| (i as f32) * 0.1 - 0.25).collect();
+        let (h_a, c_a) = cell.step(&xh, &c_prev);
+        let (h_b, cache) = cell.step_cached(xh.clone(), c_prev.clone());
+        assert_eq!(h_a, h_b);
+        assert_eq!(c_a, cache.c);
+        assert_eq!(cache.xh, xh);
+        assert_eq!(cache.c_prev, c_prev);
     }
 }

@@ -1,24 +1,38 @@
 //! The RL agent driver: REINFORCE-with-baseline training loop (Algo. 2/3)
-//! executed against the AOT artifacts.
+//! executed against a pluggable [`TrainBackend`].
 //!
-//! Per epoch the coordinator makes exactly two PJRT calls:
-//!   1. `rollout_<cfg>` — samples a batch of B episodes on-device;
-//!   2. `train_<cfg>`   — teacher-forced REINFORCE + Adam update on-device;
+//! Per epoch the trainer makes exactly two backend calls:
+//!   1. `rollout` — sample a batch of B episodes;
+//!   2. `train_step` — teacher-forced REINFORCE + Adam update;
 //! everything between (scheme parsing, the environment reward, the EMA
-//! baseline) is plain Rust on the grid prefix sums.
+//! baseline, best-solution tracking) is plain Rust on the grid prefix sums
+//! and identical across backends.
+//!
+//! Backends (see [`backend`]):
+//! - [`backend::PjrtBackend`] runs the AOT `rollout_<cfg>` / `train_<cfg>`
+//!   HLO artifacts through PJRT (requires `artifacts/`);
+//! - [`native::NativeBackend`] is pure Rust — mirror-forward sampling on a
+//!   worker pool plus full backprop-through-time — and needs no artifacts
+//!   at all, so training works on a fresh checkout (`--backend native`, or
+//!   `auto` which picks it whenever `artifacts/` is absent).
 
+pub mod backend;
 pub mod complexity;
 pub mod lstm;
+pub mod native;
 pub mod params;
+
+pub use backend::{BackendKind, PjrtBackend, RolloutBatch, StepStats, TrainBackend};
+pub use native::NativeBackend;
 
 use crate::graph::GridSummary;
 use crate::runtime::manifest::ControllerEntry;
-use crate::runtime::{literal, Executable, Runtime};
+use crate::runtime::Runtime;
 use crate::scheme::{evaluate, parse_actions, EvalResult, FillRule, RewardWeights, Scheme};
 use crate::util::rng::Pcg64;
-use anyhow::{ensure, Context, Result};
-use params::{AdamState, Params};
-use std::sync::Arc;
+use anyhow::{ensure, Result};
+use params::Params;
+use std::path::Path;
 
 /// Training hyper-parameters (paper defaults where stated).
 #[derive(Clone, Copy, Debug)]
@@ -30,9 +44,12 @@ pub struct TrainOptions {
     pub baseline_decay: f64,
     /// scalarization weights (Eq. 21).
     pub weights: RewardWeights,
-    /// fill geometry rule (must agree with the artifact's fill_classes).
+    /// fill geometry rule (must agree with the controller's fill_classes).
     pub fill_rule: FillRule,
     pub seed: u64,
+    /// rollout/BPTT worker threads for the native backend (≥ 1; the PJRT
+    /// backend ignores it). Results are identical for any value.
+    pub workers: usize,
 }
 
 impl Default for TrainOptions {
@@ -44,6 +61,7 @@ impl Default for TrainOptions {
             weights: RewardWeights::new(0.8),
             fill_rule: FillRule::None,
             seed: 0,
+            workers: 1,
         }
     }
 }
@@ -71,18 +89,15 @@ pub struct BestSolution {
     pub epoch: usize,
 }
 
-/// REINFORCE trainer bound to one controller config + one matrix.
+/// Seed-domain separator: the trainer's epoch-key stream must differ from
+/// parameter init and every other consumer of the run seed.
+const TRAINER_RNG_SALT: u64 = 0x6167_656e_7400_0001; // "agent"
+
+/// REINFORCE trainer bound to one controller config + one matrix,
+/// delegating rollouts and gradient steps to a [`TrainBackend`].
 pub struct Trainer {
     pub entry: ControllerEntry,
-    rollout_exe: Arc<Executable>,
-    train_exe: Arc<Executable>,
-    greedy_exe: Option<Arc<Executable>>,
-    pub params: Params,
-    pub opt: AdamState,
-    /// Cached literal forms of params/m/v, reused as artifact inputs and
-    /// refreshed in-place from the train step's *output* literals — avoids
-    /// two Vec<f32> ↔ Literal conversions per epoch (EXPERIMENTS.md §Perf).
-    lits: Option<(Vec<xla::Literal>, Vec<xla::Literal>, Vec<xla::Literal>)>,
+    backend: Box<dyn TrainBackend>,
     pub baseline: f64,
     baseline_init: bool,
     rng: Pcg64,
@@ -96,26 +111,29 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// PJRT-backed trainer (requires AOT artifacts).
     pub fn new(rt: &Runtime, entry: ControllerEntry, opts: TrainOptions) -> Result<Trainer> {
+        let be = PjrtBackend::new(rt, entry.clone(), opts.seed)?;
+        Trainer::with_backend(Box::new(be), entry, opts)
+    }
+
+    /// Pure-Rust trainer (no artifacts needed).
+    pub fn native(entry: ControllerEntry, opts: TrainOptions) -> Result<Trainer> {
+        let be = NativeBackend::new(entry.clone(), opts.seed, opts.workers);
+        Trainer::with_backend(Box::new(be), entry, opts)
+    }
+
+    /// Wrap an already-constructed backend.
+    pub fn with_backend(
+        backend: Box<dyn TrainBackend>,
+        entry: ControllerEntry,
+        opts: TrainOptions,
+    ) -> Result<Trainer> {
         validate_fill_rule(&entry, &opts.fill_rule)?;
-        let rollout_exe = rt.load(entry.artifact("rollout")?)?;
-        let train_exe = rt.load(entry.artifact("train")?)?;
-        let greedy_exe = entry
-            .artifacts
-            .get("greedy")
-            .map(|f| rt.load(f))
-            .transpose()?;
-        let params = params::init_params(&entry, opts.seed);
-        let opt = AdamState::new(&entry);
         Ok(Trainer {
-            rng: Pcg64::seed_from_u64(opts.seed ^ 0x6167_656e_7400_0001),
+            rng: Pcg64::seed_from_u64(opts.seed ^ TRAINER_RNG_SALT),
             entry,
-            rollout_exe,
-            train_exe,
-            greedy_exe,
-            params,
-            opt,
-            lits: None,
+            backend,
             baseline: 0.0,
             baseline_init: false,
             opts,
@@ -125,32 +143,47 @@ impl Trainer {
         })
     }
 
-    /// Restore params/opt/baseline from a checkpoint file.
-    pub fn restore(&mut self, path: &std::path::Path) -> Result<()> {
+    /// Which backend this trainer runs on ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Host-synced copy of the current parameters.
+    pub fn params(&self) -> Result<Params> {
+        self.backend.params()
+    }
+
+    /// Save params + optimizer + bookkeeping as a JSON checkpoint.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let p = self.backend.params()?;
+        let opt = self.backend.opt_state()?;
+        params::save_checkpoint(path, &self.entry, &p, &opt, self.epoch, self.baseline)
+    }
+
+    /// Restore params/opt/baseline from a checkpoint file. The epoch-key
+    /// stream is replayed to the checkpoint's epoch, so a resumed run
+    /// draws exactly the rollouts the uninterrupted run would have drawn
+    /// and reproduces its epoch stats bit-for-bit.
+    ///
+    /// Scope: best-so-far *tracking* restarts — checkpoints do not carry
+    /// the `best`/`best_reward` schemes, so a solution found only before
+    /// the checkpoint is not re-reported by the resumed run.
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
         let (p, o, epoch, baseline) = params::load_checkpoint(path, &self.entry)?;
-        self.params = p;
-        self.opt = o;
-        self.lits = None; // invalidate cached literals
+        self.backend.load_state(p, o)?;
         self.epoch = epoch;
         self.baseline = baseline;
         self.baseline_init = true;
-        Ok(())
-    }
-
-    /// Refresh the host-side Adam state from the cached device literals —
-    /// required before checkpointing (the hot loop keeps m/v only as
-    /// literals).
-    pub fn sync_host(&mut self) -> Result<()> {
-        if let Some((_, m_lits, v_lits)) = self.lits.as_ref() {
-            self.opt.m = params::from_literals(&self.entry, m_lits)?;
-            self.opt.v = params::from_literals(&self.entry, v_lits)?;
+        self.rng = Pcg64::seed_from_u64(self.opts.seed ^ TRAINER_RNG_SALT);
+        for _ in 0..2 * epoch {
+            self.rng.next_u32();
         }
         Ok(())
     }
 
     /// One REINFORCE epoch (Algo. 3 lines 2-8). Returns batch statistics.
     pub fn epoch(&mut self, grid: &GridSummary) -> Result<EpochStats> {
-        let (b, t) = (self.entry.batch, self.entry.steps);
+        let b = self.entry.batch;
         ensure!(
             grid.n == self.entry.n,
             "grid has {} cells but config {} expects {}",
@@ -159,27 +192,12 @@ impl Trainer {
             self.entry.n
         );
 
-        // --- sample B episodes on-device (param literals cached across epochs)
-        if self.lits.is_none() {
-            self.lits = Some((
-                params::to_literals(&self.entry, &self.params)?,
-                params::to_literals(&self.entry, &self.opt.m)?,
-                params::to_literals(&self.entry, &self.opt.v)?,
-            ));
-        }
-        let (p_lits, _, _) = self.lits.as_ref().unwrap();
+        // --- sample B episodes
         let key = [self.rng.next_u32(), self.rng.next_u32()];
-        let mut inputs: Vec<&xla::Literal> = p_lits.iter().collect();
-        let key_lit = literal::lit_u32_1d(&key);
-        inputs.push(&key_lit);
-        let outs = self.rollout_exe.run_refs(&inputs)?;
-        ensure!(outs.len() == 4, "rollout returned {} outputs", outs.len());
-        let d_all = literal::to_vec_i32(&outs[0])?;
-        let f_all = literal::to_vec_i32(&outs[1])?;
-        ensure!(d_all.len() == b * t && f_all.len() == b * t);
+        let rb = self.backend.rollout(key)?;
 
         // --- environment: parse + evaluate each episode
-        let evals = self.evaluate_batch(grid, &d_all, &f_all);
+        let evals = self.evaluate_batch(grid, &rb.d_all, &rb.f_all);
         let rewards: Vec<f64> = evals.iter().map(|e| e.reward).collect();
         let mean_reward = rewards.iter().sum::<f64>() / b as f64;
         let max_reward = rewards.iter().cloned().fold(f64::MIN, f64::max);
@@ -202,7 +220,7 @@ impl Trainer {
                     Some(bst) => e.covered_area_units < bst.eval.covered_area_units,
                 };
                 if better {
-                    let scheme = self.parse_episode(grid, &d_all, &f_all, i);
+                    let scheme = self.parse_episode(grid, &rb.d_all, &rb.f_all, i);
                     self.best = Some(BestSolution {
                         scheme,
                         eval: e.clone(),
@@ -215,7 +233,7 @@ impl Trainer {
                 Some(bst) => e.reward > bst.eval.reward,
             };
             if better_reward {
-                let scheme = self.parse_episode(grid, &d_all, &f_all, i);
+                let scheme = self.parse_episode(grid, &rb.d_all, &rb.f_all, i);
                 self.best_reward = Some(BestSolution {
                     scheme,
                     eval: e.clone(),
@@ -224,37 +242,14 @@ impl Trainer {
             }
         }
 
-        // --- on-device REINFORCE + Adam step (inputs borrow the cached
-        // literals; outputs *become* the next epoch's cached literals)
-        let k = self.entry.params.len();
-        let (p_lits, m_lits, v_lits) = self.lits.as_ref().unwrap();
-        let t_lit = literal::lit_scalar_i32(self.opt.t);
-        let d_lit = literal::lit_i32_2d(&d_all, b, t)?;
-        let f_lit = literal::lit_i32_2d(&f_all, b, t)?;
-        let adv_lit = literal::lit_f32_1d(&adv);
-        let lr_lit = literal::lit_scalar_f32(self.opts.lr);
-        let ent_lit = literal::lit_scalar_f32(self.opts.ent_coef);
-        let mut tin: Vec<&xla::Literal> = Vec::with_capacity(3 * k + 6);
-        tin.extend(p_lits.iter());
-        tin.extend(m_lits.iter());
-        tin.extend(v_lits.iter());
-        tin.extend([&t_lit, &d_lit, &f_lit, &adv_lit, &lr_lit, &ent_lit]);
-        let mut touts = self.train_exe.run_refs(&tin)?;
-        ensure!(
-            touts.len() == 3 * k + 3,
-            "train returned {} outputs, expected {}",
-            touts.len(),
-            3 * k + 3
-        );
-        self.opt.t = touts[3 * k].to_vec::<i32>().context("adam t")?[0];
-        let loss = touts[3 * k + 1].to_vec::<f32>().context("loss")?[0];
-        let mean_logp = touts[3 * k + 2].to_vec::<f32>().context("mean_logp")?[0];
-        touts.truncate(3 * k);
-        let new_v: Vec<xla::Literal> = touts.split_off(2 * k);
-        let new_m: Vec<xla::Literal> = touts.split_off(k);
-        // keep the cheap Vec<f32> mirror in sync for checkpoints/inspection
-        self.params = params::from_literals(&self.entry, &touts)?;
-        self.lits = Some((touts, new_m, new_v));
+        // --- REINFORCE + Adam step
+        let step = self.backend.train_step(
+            &rb.d_all,
+            &rb.f_all,
+            &adv,
+            self.opts.lr,
+            self.opts.ent_coef,
+        )?;
 
         let stats = EpochStats {
             epoch: self.epoch,
@@ -265,24 +260,23 @@ impl Trainer {
             frac_complete: evals.iter().filter(|e| e.coverage_ratio >= 1.0).count() as f64
                 / b as f64,
             baseline: self.baseline,
-            loss,
-            mean_logp,
+            loss: step.loss,
+            mean_logp: step.mean_logp,
         };
         self.epoch += 1;
         Ok(stats)
     }
 
     /// Deterministic greedy decode with the current parameters.
-    pub fn greedy(&self, grid: &GridSummary) -> Result<(Scheme, EvalResult)> {
-        let exe = self
-            .greedy_exe
-            .as_ref()
-            .context("no greedy artifact for this config")?;
-        let inputs = params::to_literals(&self.entry, &self.params)?;
-        let outs = exe.run(&inputs)?;
-        let d_all = literal::to_vec_i32(&outs[0])?;
-        let f_all = literal::to_vec_i32(&outs[1])?;
-        let scheme = self.parse_episode(grid, &d_all, &f_all, 0);
+    pub fn greedy(&mut self, grid: &GridSummary) -> Result<(Scheme, EvalResult)> {
+        let (d, f) = self.backend.greedy()?;
+        let t = self.entry.steps;
+        ensure!(
+            d.len() >= t && f.len() >= t,
+            "greedy decode returned {} actions, need {t}",
+            d.len()
+        );
+        let scheme = self.parse_episode(grid, &d, &f, 0);
         let eval = evaluate(&scheme, grid, self.opts.weights);
         Ok((scheme, eval))
     }
@@ -318,7 +312,7 @@ impl Trainer {
     }
 }
 
-/// The artifact's fill head and the Rust geometry rule must agree on the
+/// The controller's fill head and the Rust geometry rule must agree on the
 /// number of classes.
 pub fn validate_fill_rule(entry: &ControllerEntry, rule: &FillRule) -> Result<()> {
     let expected = rule.num_classes();
@@ -336,23 +330,55 @@ pub fn validate_fill_rule(entry: &ControllerEntry, rule: &FillRule) -> Result<()
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::ParamSpec;
+    use crate::graph::synth;
+    use crate::reorder::{reorder, Reordering};
 
     #[test]
     fn fill_rule_mismatch_is_rejected() {
-        let entry = ControllerEntry {
-            name: "x".into(),
-            n: 4,
-            hidden: 2,
-            fill_classes: 4,
-            batch: 1,
-            bilstm: false,
-            steps: 3,
-            params: vec![ParamSpec { name: "x0".into(), shape: vec![2] }],
-            artifacts: Default::default(),
-        };
+        let entry = ControllerEntry::from_dims("x", 4, 2, 4, 1, false);
         assert!(validate_fill_rule(&entry, &FillRule::None).is_err());
         assert!(validate_fill_rule(&entry, &FillRule::Fixed { size: 1 }).is_err());
         assert!(validate_fill_rule(&entry, &FillRule::Dynamic { grades: 4 }).is_ok());
+    }
+
+    #[test]
+    fn native_trainer_runs_epochs_and_tracks_best() {
+        let m = synth::qm7_like(5828);
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let grid = GridSummary::new(&r.matrix, 2);
+        let entry = ControllerEntry::from_dims("qm7_dyn4", 11, 10, 4, 8, false);
+        let opts = TrainOptions {
+            lr: 0.02,
+            ent_coef: 0.002,
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            seed: 5,
+            workers: 2,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::native(entry, opts).unwrap();
+        assert_eq!(trainer.backend_name(), "native");
+        for _ in 0..20 {
+            let stats = trainer.epoch(&grid).unwrap();
+            assert!(stats.loss.is_finite());
+            assert!(stats.mean_logp < 0.0);
+            assert!((0.0..=1.0).contains(&stats.mean_coverage));
+        }
+        assert_eq!(trainer.epoch, 20);
+        // best-by-reward always exists after the first epoch
+        let br = trainer.best_reward.as_ref().unwrap();
+        br.scheme.validate(grid.n).unwrap();
+        // greedy decodes a valid scheme too
+        let (scheme, eval) = trainer.greedy(&grid).unwrap();
+        scheme.validate(grid.n).unwrap();
+        assert!(eval.reward.is_finite());
+    }
+
+    #[test]
+    fn trainer_rejects_mismatched_grid() {
+        let m = synth::qm7_like(5828);
+        let grid = GridSummary::new(&m, 1); // 22 cells, config expects 11
+        let entry = ControllerEntry::from_dims("qm7_diag", 11, 10, 0, 8, false);
+        let mut trainer = Trainer::native(entry, TrainOptions::default()).unwrap();
+        assert!(trainer.epoch(&grid).is_err());
     }
 }

@@ -1,0 +1,476 @@
+//! Backprop-through-time for the L2 controller: a teacher-forced forward
+//! pass that retains per-step caches, followed by the exact reverse-mode
+//! sweep — fused LSTM gates, per-step FC heads, log-softmax, the Algo. 1
+//! double-step with fill masking, and the optional BiLSTM auxiliary pass.
+//!
+//! The forward math is shared with the [`crate::agent::lstm`] mirror
+//! ([`LstmCell`]/[`head`]/[`log_softmax`]), so a teacher-forced
+//! [`episode_gradient`] reproduces the mirror's `logp`/`entropy` exactly;
+//! the backward sweep is validated against central finite differences of
+//! the mirror forward in this module's property tests.
+//!
+//! Loss convention (matching `model.train_step`): the caller passes the
+//! per-episode coefficients of `L_b = coef_logp · logp_b + coef_ent · H_b`
+//! — for REINFORCE with a batch of B episodes, `coef_logp = -adv_b / B`
+//! and `coef_ent = -ent_coef / B`, so summing episode gradients yields
+//! d/dθ of `-mean(adv · logp) - ent_coef · mean(H)`.
+
+use crate::agent::lstm::{head, head_backward, log_softmax, LstmCell, LstmStepCache, Params};
+use crate::agent::native::ParamLayout;
+use crate::runtime::manifest::ControllerEntry;
+
+/// Per-step retained state of the teacher-forced forward pass.
+struct StepRec {
+    cache1: LstmStepCache,
+    lsm_d: Vec<f32>,
+    inp_d: Vec<f32>,
+    /// present only when the fill branch executed (fill head exists and
+    /// the diagonal action was 0): (cache2, lsm_f, inp_f)
+    fill: Option<(LstmStepCache, Vec<f32>, Vec<f32>)>,
+}
+
+/// Gradient of `coef_logp · logp + coef_ent · entropy` for one episode,
+/// flat in ABI order, plus the forward scalars.
+pub struct EpisodeGrad {
+    pub grad: Vec<f32>,
+    pub logp: f32,
+    pub entropy: f32,
+}
+
+/// d(loss)/d(logits) for one head decision under the log-softmax policy:
+/// `d logp_a / dl_j = δ_aj − p_j` and `dH/dl_j = −p_j (log p_j + H)`.
+fn dlogits(lsm: &[f32], action: usize, coef_logp: f32, coef_ent: f32) -> Vec<f32> {
+    let h_t: f32 = -lsm.iter().map(|&l| l.exp() * l).sum::<f32>();
+    lsm.iter()
+        .enumerate()
+        .map(|(j, &l)| {
+            let p = l.exp();
+            let ind = if j == action { 1.0 } else { 0.0 };
+            coef_logp * (ind - p) - coef_ent * p * (l + h_t)
+        })
+        .collect()
+}
+
+/// Teacher-forced forward + full BPTT for one episode.
+pub fn episode_gradient(
+    entry: &ControllerEntry,
+    params: &Params,
+    layout: &ParamLayout,
+    d_actions: &[i32],
+    f_actions: &[i32],
+    coef_logp: f32,
+    coef_ent: f32,
+) -> EpisodeGrad {
+    let hn = entry.hidden;
+    let t_steps = entry.steps;
+    let fill = entry.fill_classes;
+    let head_in = if entry.bilstm { 2 * hn } else { hn };
+    assert_eq!(d_actions.len(), t_steps, "need T diagonal actions");
+    if fill > 0 {
+        assert_eq!(f_actions.len(), t_steps, "need T fill slots");
+    }
+
+    let get = |name: &str| -> &[f32] {
+        params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    };
+    let cell = LstmCell::new(get("lstm_w"), get("lstm_b"), hn);
+    let fc_d_w = get("fc_d_w");
+    let fc_d_b = get("fc_d_b");
+    let (fc_f_w, fc_f_b): (&[f32], &[f32]) = if fill > 0 {
+        (get("fc_f_w"), get("fc_f_b"))
+    } else {
+        (&[], &[])
+    };
+
+    // ---- BiLSTM auxiliary pass (processed in reverse time order) --------
+    let (hb, bwd_caches): (Vec<Vec<f32>>, Vec<LstmStepCache>) = if entry.bilstm {
+        let emb = get("bwd_emb");
+        let bwd_cell = LstmCell::new(get("bwd_w"), get("bwd_b"), hn);
+        let mut h = vec![0.0f32; hn];
+        let mut c = vec![0.0f32; hn];
+        let mut hb = vec![Vec::new(); t_steps];
+        let mut caches = Vec::with_capacity(t_steps);
+        for t in (0..t_steps).rev() {
+            let mut xh = emb[t * hn..(t + 1) * hn].to_vec();
+            xh.extend_from_slice(&h);
+            let (h2, cache) = bwd_cell.step_cached(xh, c);
+            h = h2;
+            c = cache.c.clone();
+            hb[t] = h.clone();
+            caches.push(cache);
+        }
+        caches.reverse(); // caches[t] now belongs to decision point t
+        (hb, caches)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    // ---- teacher-forced forward with caches -----------------------------
+    let mut x = get("x0").to_vec();
+    let mut h = vec![0.0f32; hn];
+    let mut c = vec![0.0f32; hn];
+    let mut logp = 0.0f32;
+    let mut entropy = 0.0f32;
+    let mut steps: Vec<StepRec> = Vec::with_capacity(t_steps);
+
+    for t in 0..t_steps {
+        let mut xh1 = x.clone();
+        xh1.extend_from_slice(&h);
+        let (h1, cache1) = cell.step_cached(xh1, c.clone());
+        let c1 = cache1.c.clone();
+        let inp_d: Vec<f32> = if entry.bilstm {
+            h1.iter().chain(hb[t].iter()).cloned().collect()
+        } else {
+            h1.clone()
+        };
+        let logits_d = head(
+            &inp_d,
+            &fc_d_w[t * head_in * 2..(t + 1) * head_in * 2],
+            &fc_d_b[t * 2..(t + 1) * 2],
+            2,
+        );
+        let lsm_d = log_softmax(&logits_d);
+        logp += lsm_d[d_actions[t] as usize];
+        entropy -= lsm_d.iter().map(|&l| l.exp() * l).sum::<f32>();
+
+        let mut rec = StepRec {
+            cache1,
+            lsm_d,
+            inp_d,
+            fill: None,
+        };
+        if fill > 0 && d_actions[t] == 0 {
+            // fill branch executes: second LSTM step fed its own output
+            let mut xh2 = h1.clone();
+            xh2.extend_from_slice(&h1);
+            let (h2, cache2) = cell.step_cached(xh2, c1);
+            let c2 = cache2.c.clone();
+            let inp_f: Vec<f32> = if entry.bilstm {
+                h2.iter().chain(hb[t].iter()).cloned().collect()
+            } else {
+                h2.clone()
+            };
+            let logits_f = head(
+                &inp_f,
+                &fc_f_w[t * head_in * fill..(t + 1) * head_in * fill],
+                &fc_f_b[t * fill..(t + 1) * fill],
+                fill,
+            );
+            let lsm_f = log_softmax(&logits_f);
+            logp += lsm_f[f_actions[t] as usize];
+            entropy -= lsm_f.iter().map(|&l| l.exp() * l).sum::<f32>();
+            rec.fill = Some((cache2, lsm_f, inp_f));
+            h = h2;
+            c = c2;
+        } else {
+            // d == 1 (or no fill head): the discarded fill step — if any —
+            // contributes neither loss nor recurrence, so it needs no cache
+            h = h1;
+            c = c1;
+        }
+        x = h.clone();
+        steps.push(rec);
+    }
+
+    // ---- reverse sweep --------------------------------------------------
+    let zeros = |n: usize| vec![0.0f32; n];
+    let mut gx0 = zeros(hn);
+    let mut glstm_w = zeros(2 * hn * 4 * hn);
+    let mut glstm_b = zeros(4 * hn);
+    let mut gfc_d_w = zeros(t_steps * head_in * 2);
+    let mut gfc_d_b = zeros(t_steps * 2);
+    let mut gfc_f_w = zeros(t_steps * head_in * fill);
+    let mut gfc_f_b = zeros(t_steps * fill);
+    let mut gbwd_emb = zeros(if entry.bilstm { t_steps * hn } else { 0 });
+    let mut gbwd_w = zeros(if entry.bilstm { 2 * hn * 4 * hn } else { 0 });
+    let mut gbwd_b = zeros(if entry.bilstm { 4 * hn } else { 0 });
+    let mut dhb: Vec<Vec<f32>> = if entry.bilstm {
+        (0..t_steps).map(|_| zeros(hn)).collect()
+    } else {
+        Vec::new()
+    };
+
+    // dh/dc: gradients w.r.t. the state after step t (both zero at t = T-1
+    // since the final state feeds nothing)
+    let mut dh = zeros(hn);
+    let mut dc = zeros(hn);
+    for (t, rec) in steps.iter().enumerate().rev() {
+        // through the fill branch first (it sits between h1 and the state)
+        let (mut dh1, dc1) = if let Some((cache2, lsm_f, inp_f)) = &rec.fill {
+            let dl_f = dlogits(lsm_f, f_actions[t] as usize, coef_logp, coef_ent);
+            let mut dinp_f = zeros(head_in);
+            head_backward(
+                inp_f,
+                &fc_f_w[t * head_in * fill..(t + 1) * head_in * fill],
+                &dl_f,
+                &mut gfc_f_w[t * head_in * fill..(t + 1) * head_in * fill],
+                &mut gfc_f_b[t * fill..(t + 1) * fill],
+                &mut dinp_f,
+            );
+            let mut dh2 = dh.clone();
+            for j in 0..hn {
+                dh2[j] += dinp_f[j];
+            }
+            if entry.bilstm {
+                for j in 0..hn {
+                    dhb[t][j] += dinp_f[hn + j];
+                }
+            }
+            let (dxh2, dc1) = cell.backward(cache2, &dh2, &dc, &mut glstm_w, &mut glstm_b);
+            // xh2 = [h1, h1]: both halves flow back into h1
+            let mut dh1 = zeros(hn);
+            for j in 0..hn {
+                dh1[j] = dxh2[j] + dxh2[hn + j];
+            }
+            (dh1, dc1)
+        } else {
+            (dh.clone(), dc.clone())
+        };
+        // diagonal head at t reads h1
+        let dl_d = dlogits(&rec.lsm_d, d_actions[t] as usize, coef_logp, coef_ent);
+        let mut dinp_d = zeros(head_in);
+        head_backward(
+            &rec.inp_d,
+            &fc_d_w[t * head_in * 2..(t + 1) * head_in * 2],
+            &dl_d,
+            &mut gfc_d_w[t * head_in * 2..(t + 1) * head_in * 2],
+            &mut gfc_d_b[t * 2..(t + 1) * 2],
+            &mut dinp_d,
+        );
+        for j in 0..hn {
+            dh1[j] += dinp_d[j];
+        }
+        if entry.bilstm {
+            for j in 0..hn {
+                dhb[t][j] += dinp_d[hn + j];
+            }
+        }
+        let (dxh1, dc_prev) = cell.backward(&rec.cache1, &dh1, &dc1, &mut glstm_w, &mut glstm_b);
+        if t == 0 {
+            // x_0 is the learned initial input; h_{-1}/c_{-1} are constants
+            for j in 0..hn {
+                gx0[j] += dxh1[j];
+            }
+            dh = zeros(hn);
+        } else {
+            // x_t = h_{t-1}: both halves of xh1 flow back into h_{t-1}
+            for j in 0..hn {
+                dh[j] = dxh1[j] + dxh1[hn + j];
+            }
+        }
+        dc = dc_prev;
+    }
+
+    // ---- BiLSTM BPTT (reverse of its reverse-time processing order) -----
+    if entry.bilstm {
+        let bwd_cell = LstmCell::new(get("bwd_w"), get("bwd_b"), hn);
+        let mut dh_b = zeros(hn);
+        let mut dc_b = zeros(hn);
+        for t in 0..t_steps {
+            for j in 0..hn {
+                dh_b[j] += dhb[t][j];
+            }
+            let (dxh, dc_prev) =
+                bwd_cell.backward(&bwd_caches[t], &dh_b, &dc_b, &mut gbwd_w, &mut gbwd_b);
+            for j in 0..hn {
+                gbwd_emb[t * hn + j] += dxh[j];
+            }
+            // the carry flows to the step processed before this one, i.e.
+            // decision point t+1
+            dh_b = dxh[hn..].to_vec();
+            dc_b = dc_prev;
+        }
+    }
+
+    // ---- flatten into ABI order -----------------------------------------
+    let mut grad = layout.zeros();
+    for spec in &entry.params {
+        let src: &[f32] = match spec.name.as_str() {
+            "x0" => &gx0,
+            "lstm_w" => &glstm_w,
+            "lstm_b" => &glstm_b,
+            "bwd_emb" => &gbwd_emb,
+            "bwd_w" => &gbwd_w,
+            "bwd_b" => &gbwd_b,
+            "fc_d_w" => &gfc_d_w,
+            "fc_d_b" => &gfc_d_b,
+            "fc_f_w" => &gfc_f_w,
+            "fc_f_b" => &gfc_f_b,
+            other => panic!("unknown param {other} in native gradient"),
+        };
+        grad[layout.range(&spec.name)].copy_from_slice(src);
+    }
+
+    EpisodeGrad {
+        grad,
+        logp,
+        entropy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::lstm::{forward, Select};
+    use crate::agent::params::init_params;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Pcg64;
+
+    /// The scalar the gradient is taken of, via the *mirror* forward pass
+    /// (an independent code path from the cached forward in this module).
+    fn loss_of(
+        entry: &ControllerEntry,
+        params: &Params,
+        d: &[i32],
+        f: &[i32],
+        coef_logp: f32,
+        coef_ent: f32,
+    ) -> f32 {
+        let ep = forward(entry, params, Select::Teacher { d, f });
+        coef_logp * ep.logp + coef_ent * ep.entropy
+    }
+
+    fn random_entry(rng: &mut Pcg64) -> ControllerEntry {
+        let n = 3 + rng.below(4) as usize; // 3..=6 grid cells -> T = 2..=5
+        let hidden = 3 + rng.below(4) as usize; // 3..=6
+        let fill = [0usize, 2, 3, 4][rng.below(4) as usize];
+        let bilstm = rng.bool(0.5);
+        ControllerEntry::from_dims("fdcheck", n, hidden, fill, 1, bilstm)
+    }
+
+    fn random_actions(rng: &mut Pcg64, entry: &ControllerEntry) -> (Vec<i32>, Vec<i32>) {
+        let d: Vec<i32> = (0..entry.steps).map(|_| rng.below(2) as i32).collect();
+        let f: Vec<i32> = (0..entry.steps)
+            .map(|_| rng.below(entry.fill_classes.max(1) as u64) as i32)
+            .collect();
+        (d, f)
+    }
+
+    #[test]
+    fn cached_forward_matches_mirror_scalars() {
+        let mut rng = Pcg64::seed_from_u64(77);
+        for _ in 0..20 {
+            let entry = random_entry(&mut rng);
+            let params = init_params(&entry, rng.next_u64());
+            let layout = ParamLayout::new(&entry);
+            let (d, f) = random_actions(&mut rng, &entry);
+            let eg = episode_gradient(&entry, &params, &layout, &d, &f, 1.0, 0.0);
+            let ep = forward(&entry, &params, Select::Teacher { d: &d, f: &f });
+            assert!(
+                (eg.logp - ep.logp).abs() < 1e-5,
+                "{}: cached logp {} vs mirror {}",
+                entry.name,
+                eg.logp,
+                ep.logp
+            );
+            assert!(
+                (eg.entropy - ep.entropy).abs() < 1e-4,
+                "cached entropy {} vs mirror {}",
+                eg.entropy,
+                ep.entropy
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference_property() {
+        // Central finite differences of the mirror forward vs the analytic
+        // BPTT gradient, over random small controllers (with and without
+        // fill heads and BiLSTM). Checks ~24 random coordinates per case.
+        check("bptt_finite_difference", 12, |rng| {
+            let entry = random_entry(rng);
+            let params = init_params(&entry, rng.next_u64());
+            let layout = ParamLayout::new(&entry);
+            let (d, f) = random_actions(rng, &entry);
+            let coef_logp = -1.0 + rng.uniform(-0.5, 0.5) as f32;
+            let coef_ent = -0.05 * rng.f32();
+            let eg = episode_gradient(&entry, &params, &layout, &d, &f, coef_logp, coef_ent);
+
+            let eps = 1e-2f32;
+            for _ in 0..24 {
+                let flat = rng.below(layout.total as u64) as usize;
+                let (name, idx) = layout.locate(flat);
+                let name = name.to_string();
+                let mut plus = params.clone();
+                plus.get_mut(&name).unwrap()[idx] += eps;
+                let mut minus = params.clone();
+                minus.get_mut(&name).unwrap()[idx] -= eps;
+                let lp = loss_of(&entry, &plus, &d, &f, coef_logp, coef_ent);
+                let lm = loss_of(&entry, &minus, &d, &f, coef_logp, coef_ent);
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = eg.grad[flat];
+                let tol = 2e-3 + 2e-2 * fd.abs().max(an.abs());
+                if (fd - an).abs() > tol {
+                    return Err(format!(
+                        "{} [{name}:{idx}] fd {fd} vs analytic {an} (tol {tol}, \
+                         hidden {}, T {}, fill {}, bilstm {})",
+                        entry.name, entry.hidden, entry.steps, entry.fill_classes, entry.bilstm
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn directional_derivative_matches_finite_difference() {
+        // Aggregate check: g·u vs the central difference along a random
+        // direction u — exercises every coordinate at once.
+        check("bptt_directional", 8, |rng| {
+            let entry = random_entry(rng);
+            let params = init_params(&entry, rng.next_u64());
+            let layout = ParamLayout::new(&entry);
+            let (d, f) = random_actions(rng, &entry);
+            let (cl, ce) = (-0.8f32, -0.01f32);
+            let eg = episode_gradient(&entry, &params, &layout, &d, &f, cl, ce);
+
+            // random unit direction in flat ABI order
+            let mut u: Vec<f32> = (0..layout.total).map(|_| rng.normal() as f32).collect();
+            let norm = u.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            for x in &mut u {
+                *x /= norm;
+            }
+            let eps = 1e-2f32;
+            let perturb = |sign: f32| -> Params {
+                let mut p = params.clone();
+                for spec in &entry.params {
+                    let r = layout.range(&spec.name);
+                    let dst = p.get_mut(&spec.name).unwrap();
+                    for (x, &du) in dst.iter_mut().zip(u[r].iter()) {
+                        *x += sign * eps * du;
+                    }
+                }
+                p
+            };
+            let lp = loss_of(&entry, &perturb(1.0), &d, &f, cl, ce);
+            let lm = loss_of(&entry, &perturb(-1.0), &d, &f, cl, ce);
+            let fd = (lp - lm) / (2.0 * eps);
+            let an: f32 = eg.grad.iter().zip(u.iter()).map(|(g, du)| g * du).sum();
+            let tol = 2e-3 + 1e-2 * fd.abs().max(an.abs());
+            if (fd - an).abs() > tol {
+                return Err(format!(
+                    "{}: directional fd {fd} vs analytic {an} (tol {tol})",
+                    entry.name
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn entropy_coefficient_changes_gradient() {
+        // the entropy term must actually flow: gradients with and without
+        // coef_ent differ
+        let entry = ControllerEntry::from_dims("ent", 5, 4, 4, 1, false);
+        let params = init_params(&entry, 3);
+        let layout = ParamLayout::new(&entry);
+        let d = vec![0, 1, 0, 1];
+        let f = vec![1, 0, 3, 2];
+        let a = episode_gradient(&entry, &params, &layout, &d, &f, -1.0, 0.0);
+        let b = episode_gradient(&entry, &params, &layout, &d, &f, -1.0, -0.1);
+        assert_ne!(a.grad, b.grad);
+        assert_eq!(a.logp, b.logp);
+    }
+}

@@ -1,0 +1,373 @@
+//! Native pure-Rust training backend: batched sampling rollouts across a
+//! std-thread [`WorkerPool`], full backprop-through-time
+//! ([`bptt::episode_gradient`]), the REINFORCE-with-baseline gradient, and
+//! a fused Adam update — no PJRT artifacts required.
+//!
+//! Determinism: results are bit-identical for a fixed seed **regardless of
+//! worker count**. Per-episode [`Pcg64`] streams are derived sequentially
+//! from the epoch key before any job is dispatched, and both action
+//! concatenation and gradient reduction happen in episode order on the
+//! caller thread, so thread scheduling never reorders a floating-point
+//! sum.
+
+pub mod bptt;
+
+use crate::agent::backend::{RolloutBatch, StepStats, TrainBackend};
+use crate::agent::lstm::{forward, Select};
+use crate::agent::params::{init_params, AdamState, Params};
+use crate::runtime::manifest::ControllerEntry;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+/// Offsets of each parameter tensor inside one flat ABI-order f32 buffer
+/// (the gradient/Adam layout).
+pub struct ParamLayout {
+    /// (name, offset, len) in ABI (manifest) order
+    spans: Vec<(String, usize, usize)>,
+    pub total: usize,
+}
+
+impl ParamLayout {
+    pub fn new(entry: &ControllerEntry) -> ParamLayout {
+        let mut spans = Vec::with_capacity(entry.params.len());
+        let mut off = 0;
+        for spec in &entry.params {
+            spans.push((spec.name.clone(), off, spec.elements()));
+            off += spec.elements();
+        }
+        ParamLayout { spans, total: off }
+    }
+
+    pub fn zeros(&self) -> Vec<f32> {
+        vec![0.0; self.total]
+    }
+
+    /// Flat range of one named tensor.
+    pub fn range(&self, name: &str) -> std::ops::Range<usize> {
+        let s = self
+            .spans
+            .iter()
+            .find(|(n, _, _)| n.as_str() == name)
+            .unwrap_or_else(|| panic!("no param {name} in layout"));
+        s.1..s.1 + s.2
+    }
+
+    /// Map a flat index back to (tensor name, index within tensor).
+    pub fn locate(&self, flat: usize) -> (&str, usize) {
+        for (name, off, len) in &self.spans {
+            if flat >= *off && flat < off + len {
+                return (name.as_str(), flat - off);
+            }
+        }
+        panic!("flat index {flat} out of range ({} total)", self.total)
+    }
+}
+
+/// Stream constant separating native rollout entropy from every other
+/// consumer of the run seed.
+const ROLLOUT_STREAM: u64 = 0x6e61_7469_7665_0001; // "native"
+
+/// The pure-Rust [`TrainBackend`].
+pub struct NativeBackend {
+    entry: Arc<ControllerEntry>,
+    layout: Arc<ParamLayout>,
+    params: Params,
+    opt: AdamState,
+    pool: WorkerPool,
+}
+
+impl NativeBackend {
+    /// Fresh backend: parameters drawn from the same Uniform(-0.1, 0.1)
+    /// init as the AOT path, with `workers` rollout/BPTT threads.
+    pub fn new(entry: ControllerEntry, seed: u64, workers: usize) -> NativeBackend {
+        let params = init_params(&entry, seed);
+        let opt = AdamState::new(&entry);
+        let layout = Arc::new(ParamLayout::new(&entry));
+        NativeBackend {
+            pool: WorkerPool::new(workers.max(1)),
+            layout,
+            entry: Arc::new(entry),
+            params,
+            opt,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Sample one batch of episodes (also the `train-bench` rollout probe).
+    pub fn sample_batch(&self, key: [u32; 2]) -> RolloutBatch {
+        let (b, t) = (self.entry.batch, self.entry.steps);
+        // derive every episode's (seed, stream) pair sequentially *before*
+        // dispatch — worker count cannot change what any episode samples
+        let mut root = Pcg64::new(((key[0] as u64) << 32) | key[1] as u64, ROLLOUT_STREAM);
+        let seeds: Vec<(u64, u64)> = (0..b).map(|_| (root.next_u64(), root.next_u64())).collect();
+        let params = Arc::new(self.params.clone());
+        let jobs: Vec<_> = seeds
+            .into_iter()
+            .map(|(seed, stream)| {
+                let params = params.clone();
+                let entry = self.entry.clone();
+                move || {
+                    let mut rng = Pcg64::new(seed, stream);
+                    forward(&entry, &params, Select::Sample(&mut rng))
+                }
+            })
+            .collect();
+        let episodes = self.pool.run(jobs);
+        let mut d_all = Vec::with_capacity(b * t);
+        let mut f_all = Vec::with_capacity(b * t);
+        for ep in &episodes {
+            d_all.extend_from_slice(&ep.d_actions);
+            f_all.extend_from_slice(&ep.f_actions);
+        }
+        RolloutBatch { d_all, f_all }
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn rollout(&mut self, key: [u32; 2]) -> Result<RolloutBatch> {
+        Ok(self.sample_batch(key))
+    }
+
+    fn train_step(
+        &mut self,
+        d_all: &[i32],
+        f_all: &[i32],
+        adv: &[f32],
+        lr: f32,
+        ent_coef: f32,
+    ) -> Result<StepStats> {
+        let (b, t) = (self.entry.batch, self.entry.steps);
+        ensure!(
+            d_all.len() == b * t && f_all.len() == b * t,
+            "train_step wants [B={b}, T={t}] actions, got {} / {}",
+            d_all.len(),
+            f_all.len()
+        );
+        ensure!(adv.len() == b, "need {b} advantages, got {}", adv.len());
+
+        // fan per-episode BPTT out; each job's gradient is pre-scaled so
+        // the in-order sum below is exactly d/dθ of
+        // -mean(adv · logp) - ent_coef · mean(H)
+        let params = Arc::new(self.params.clone());
+        let inv_b = 1.0f32 / b as f32;
+        let jobs: Vec<_> = (0..b)
+            .map(|i| {
+                let params = params.clone();
+                let entry = self.entry.clone();
+                let layout = self.layout.clone();
+                let d: Vec<i32> = d_all[i * t..(i + 1) * t].to_vec();
+                let f: Vec<i32> = f_all[i * t..(i + 1) * t].to_vec();
+                let coef_logp = -adv[i] * inv_b;
+                let coef_ent = -ent_coef * inv_b;
+                move || bptt::episode_gradient(&entry, &params, &layout, &d, &f, coef_logp, coef_ent)
+            })
+            .collect();
+        let grads = self.pool.run(jobs);
+
+        // deterministic reduction in episode order
+        let mut total = self.layout.zeros();
+        let mut loss = 0.0f32;
+        let mut sum_logp = 0.0f32;
+        for (i, g) in grads.iter().enumerate() {
+            for (acc, &x) in total.iter_mut().zip(g.grad.iter()) {
+                *acc += x;
+            }
+            loss += (-adv[i] * g.logp - ent_coef * g.entropy) * inv_b;
+            sum_logp += g.logp;
+        }
+        self.opt.apply_flat(&self.entry, &mut self.params, &total, lr)?;
+        Ok(StepStats {
+            loss,
+            mean_logp: sum_logp * inv_b,
+        })
+    }
+
+    fn greedy(&mut self) -> Result<(Vec<i32>, Vec<i32>)> {
+        let ep = forward(&self.entry, &self.params, Select::Greedy);
+        Ok((ep.d_actions, ep.f_actions))
+    }
+
+    fn params(&self) -> Result<Params> {
+        Ok(self.params.clone())
+    }
+
+    fn opt_state(&self) -> Result<AdamState> {
+        Ok(self.opt.clone())
+    }
+
+    fn load_state(&mut self, params: Params, opt: AdamState) -> Result<()> {
+        for spec in &self.entry.params {
+            match params.get(&spec.name) {
+                Some(v) if v.len() == spec.elements() => {}
+                Some(v) => bail!(
+                    "param {} has {} elements, ABI wants {:?}",
+                    spec.name,
+                    v.len(),
+                    spec.shape
+                ),
+                None => bail!("restore is missing param {}", spec.name),
+            }
+        }
+        self.params = params;
+        self.opt = opt;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::lstm::forward as mirror_forward;
+    use crate::runtime::Manifest;
+
+    fn small_entry(fill: usize, bilstm: bool) -> ControllerEntry {
+        ControllerEntry::from_dims("native_test", 6, 5, fill, 4, bilstm)
+    }
+
+    #[test]
+    fn layout_roundtrips_names_and_indices() {
+        let e = small_entry(4, true);
+        let layout = ParamLayout::new(&e);
+        assert_eq!(layout.total, e.total_param_elements());
+        let r = layout.range("lstm_w");
+        assert_eq!(r.len(), 2 * 5 * 4 * 5);
+        let (name, idx) = layout.locate(r.start + 7);
+        assert_eq!((name, idx), ("lstm_w", 7));
+        let (name, _) = layout.locate(layout.total - 1);
+        assert_eq!(name, "fc_f_b");
+    }
+
+    #[test]
+    fn rollouts_are_identical_across_worker_counts() {
+        for (fill, bilstm) in [(0, false), (4, false), (2, true)] {
+            let a = NativeBackend::new(small_entry(fill, bilstm), 9, 1);
+            let b = NativeBackend::new(small_entry(fill, bilstm), 9, 4);
+            for key in [[1u32, 2u32], [3, 4], [0xffff_ffff, 0]] {
+                let ra = a.sample_batch(key);
+                let rb = b.sample_batch(key);
+                assert_eq!(ra.d_all, rb.d_all);
+                assert_eq!(ra.f_all, rb.f_all);
+            }
+        }
+    }
+
+    #[test]
+    fn rollout_actions_are_valid_and_key_dependent() {
+        let be = NativeBackend::new(small_entry(4, false), 1, 2);
+        let r = be.sample_batch([5, 6]);
+        let e = small_entry(4, false);
+        assert_eq!(r.d_all.len(), e.batch * e.steps);
+        assert!(r.d_all.iter().all(|&d| d == 0 || d == 1));
+        assert!(r.f_all.iter().all(|&f| f >= 0 && (f as usize) < 4));
+        let r2 = be.sample_batch([5, 7]);
+        assert_ne!(
+            (&r.d_all, &r.f_all),
+            (&r2.d_all, &r2.f_all),
+            "different keys must sample different batches"
+        );
+    }
+
+    #[test]
+    fn train_step_is_deterministic_across_worker_counts() {
+        let mk = |workers| NativeBackend::new(small_entry(4, false), 42, workers);
+        let mut a = mk(1);
+        let mut b = mk(8);
+        for round in 0..5u32 {
+            let batch = a.sample_batch([round, 99]);
+            let adv = [0.5f32, -0.25, 1.0, -1.0];
+            let sa = a
+                .train_step(&batch.d_all, &batch.f_all, &adv, 0.05, 0.01)
+                .unwrap();
+            let sb = b
+                .train_step(&batch.d_all, &batch.f_all, &adv, 0.05, 0.01)
+                .unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "round {round}");
+            assert_eq!(sa.mean_logp.to_bits(), sb.mean_logp.to_bits());
+        }
+        assert_eq!(a.params().unwrap(), b.params().unwrap());
+        let oa = a.opt_state().unwrap();
+        let ob = b.opt_state().unwrap();
+        assert_eq!(oa.t, ob.t);
+        assert_eq!(oa.m, ob.m);
+        assert_eq!(oa.v, ob.v);
+    }
+
+    #[test]
+    fn positive_advantage_raises_action_logp() {
+        // the native analogue of the PJRT train-artifact test: repeating a
+        // step with adv = +1 on fixed actions must raise their log-prob
+        let entry = small_entry(4, false);
+        let (b, t) = (entry.batch, entry.steps);
+        let mut be = NativeBackend::new(entry.clone(), 13, 2);
+        let d = vec![0i32; b * t];
+        let f = vec![0i32; b * t];
+        let adv = vec![1.0f32; b];
+        let before = mirror_forward(
+            &entry,
+            &be.params().unwrap(),
+            Select::Teacher { d: &d[..t], f: &f[..t] },
+        )
+        .logp;
+        for _ in 0..5 {
+            be.train_step(&d, &f, &adv, 0.05, 0.0).unwrap();
+        }
+        let after = mirror_forward(
+            &entry,
+            &be.params().unwrap(),
+            Select::Teacher { d: &d[..t], f: &f[..t] },
+        )
+        .logp;
+        assert!(after > before, "logp {before} -> {after}");
+        assert_eq!(be.opt_state().unwrap().t, 5);
+    }
+
+    #[test]
+    fn greedy_is_deterministic_and_valid() {
+        let mut be = NativeBackend::new(small_entry(2, true), 31, 2);
+        let (d1, f1) = be.greedy().unwrap();
+        let (d2, f2) = be.greedy().unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(f1, f2);
+        assert_eq!(d1.len(), small_entry(2, true).steps);
+    }
+
+    #[test]
+    fn load_state_validates_shapes() {
+        let entry = small_entry(0, false);
+        let mut be = NativeBackend::new(entry.clone(), 1, 1);
+        let good = be.params().unwrap();
+        let opt = be.opt_state().unwrap();
+        assert!(be.load_state(good.clone(), opt.clone()).is_ok());
+        let mut bad = good.clone();
+        bad.get_mut("x0").unwrap().push(0.0);
+        assert!(be.load_state(bad, opt.clone()).is_err());
+        let mut missing = good;
+        missing.remove("lstm_b");
+        assert!(be.load_state(missing, opt).is_err());
+    }
+
+    #[test]
+    fn builtin_configs_all_train_one_step() {
+        // every paper config must run a rollout + gradient step natively
+        let m = Manifest::builtin();
+        for entry in m.configs.values() {
+            let mut be = NativeBackend::new(entry.clone(), 7, 2);
+            let batch = be.sample_batch([1, 2]);
+            let adv = vec![0.1f32; entry.batch];
+            let stats = be
+                .train_step(&batch.d_all, &batch.f_all, &adv, 0.01, 0.001)
+                .unwrap();
+            assert!(stats.loss.is_finite(), "{}: loss not finite", entry.name);
+            assert!(stats.mean_logp < 0.0, "{}: mean_logp", entry.name);
+        }
+    }
+}

@@ -48,6 +48,52 @@ impl AdamState {
             t: 0,
         }
     }
+
+    /// One fused Adam update from a flat ABI-order gradient (the native
+    /// backend's hot path). Hyper-parameters match `model.train_step`:
+    /// β₁ = 0.9, β₂ = 0.999, ε = 1e-8, bias correction with t starting
+    /// at 1.
+    pub fn apply_flat(
+        &mut self,
+        entry: &ControllerEntry,
+        params: &mut Params,
+        grad: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let total: usize = entry.params.iter().map(|s| s.elements()).sum();
+        if grad.len() != total {
+            bail!("flat gradient has {} elements, ABI wants {total}", grad.len());
+        }
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        self.t += 1;
+        let bc1 = 1.0 - b1.powi(self.t);
+        let bc2 = 1.0 - b2.powi(self.t);
+        let mut off = 0;
+        for spec in &entry.params {
+            let n = spec.elements();
+            let g = &grad[off..off + n];
+            let p = params
+                .get_mut(&spec.name)
+                .with_context(|| format!("missing param {}", spec.name))?;
+            let m = self
+                .m
+                .get_mut(&spec.name)
+                .with_context(|| format!("missing adam m for {}", spec.name))?;
+            let v = self
+                .v
+                .get_mut(&spec.name)
+                .with_context(|| format!("missing adam v for {}", spec.name))?;
+            for k in 0..n {
+                m[k] = b1 * m[k] + (1.0 - b1) * g[k];
+                v[k] = b2 * v[k] + (1.0 - b2) * g[k] * g[k];
+                let mhat = m[k] / bc1;
+                let vhat = v[k] / bc2;
+                p[k] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+            off += n;
+        }
+        Ok(())
+    }
 }
 
 /// Flatten params in ABI order into literals for an artifact call.
@@ -258,6 +304,37 @@ mod tests {
         let mut other = entry();
         other.name = "different".into();
         assert!(load_checkpoint(&path, &other).is_err());
+    }
+
+    #[test]
+    fn adam_apply_flat_matches_hand_computation() {
+        // single-tensor entry so the arithmetic is easy to follow
+        let e = ControllerEntry {
+            name: "adam".into(),
+            n: 2,
+            hidden: 1,
+            fill_classes: 0,
+            batch: 1,
+            bilstm: false,
+            steps: 1,
+            params: vec![ParamSpec { name: "w".into(), shape: vec![2] }],
+            artifacts: Default::default(),
+        };
+        let mut p: Params = [("w".to_string(), vec![1.0f32, -2.0])].into_iter().collect();
+        let mut opt = AdamState::new(&e);
+        let g = [0.5f32, -1.0];
+        opt.apply_flat(&e, &mut p, &g, 0.1).unwrap();
+        assert_eq!(opt.t, 1);
+        // t=1: m = 0.1·g, v = 0.001·g²; mhat = g, vhat = g²
+        // step = lr·g/(|g|+eps) = ±lr
+        let w = &p["w"];
+        assert!((w[0] - (1.0 - 0.1)).abs() < 1e-5, "w0 {}", w[0]);
+        assert!((w[1] - (-2.0 + 0.1)).abs() < 1e-5, "w1 {}", w[1]);
+        assert!((opt.m["w"][0] - 0.05).abs() < 1e-7);
+        assert!((opt.v["w"][1] - 0.001).abs() < 1e-7);
+        // wrong gradient length is rejected and leaves t advanced only on
+        // the successful call
+        assert!(opt.apply_flat(&e, &mut p, &[0.0], 0.1).is_err());
     }
 
     #[test]

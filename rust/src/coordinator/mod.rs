@@ -8,4 +8,4 @@ pub mod reproduce;
 pub mod runner;
 
 pub use config::{Dataset, ExperimentConfig};
-pub use runner::{run_experiment, RunnerOptions, RunResult};
+pub use runner::{build_trainer, default_workers, run_experiment, RunResult, RunnerOptions};

@@ -14,7 +14,7 @@ use crate::agent::complexity::complexity;
 use crate::baselines;
 use crate::graph::GridSummary;
 use crate::reorder::{reorder, Reordering};
-use crate::runtime::Runtime;
+use crate::runtime::{Manifest, Runtime};
 use crate::scheme::{evaluate, eval::evaluate_rects, EvalResult, FillRule, RewardWeights, Scheme};
 use crate::viz;
 use anyhow::Result;
@@ -83,10 +83,11 @@ fn eval_to_row(
 }
 
 /// RL training rows share this helper: run one experiment, convert the
-/// best complete-coverage solution to a table row.
+/// best complete-coverage solution to a table row. Backend selection and
+/// worker count ride along in `opts`.
 #[allow(clippy::too_many_arguments)]
 fn rl_row(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     method: &str,
     dataset: Dataset,
     grid: usize,
@@ -95,7 +96,7 @@ fn rl_row(
     a: f64,
     epochs: usize,
     seed: u64,
-    out_root: &Path,
+    opts: &RunnerOptions,
     paper: Option<(f64, f64)>,
 ) -> Result<(Row, super::runner::RunResult)> {
     let cfg = ExperimentConfig {
@@ -113,12 +114,7 @@ fn rl_row(
         seed,
         log_every: (epochs / 200).max(1),
     };
-    let opts = RunnerOptions {
-        out_root: out_root.to_path_buf(),
-        verbose: false,
-        ..Default::default()
-    };
-    let result = run_experiment(rt, &cfg, &opts)?;
+    let result = run_experiment(rt, &cfg, opts)?;
     // Diagonal-only rows mirror the paper: the reported solution is the
     // best-by-reward one, which may be incomplete (paper Table II shows
     // C=0.875/0.938 for LSTM+RL). Fill rows report the best complete-
@@ -152,7 +148,7 @@ fn rl_row(
 // ---------------------------------------------------------------------------
 // Table II — QM7-5828 comparison + ablation
 
-pub fn table2(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
+pub fn table2(rt: Option<&Runtime>, epochs: usize, opts: &RunnerOptions) -> Result<()> {
     let m = load_matrix(&Dataset::Qm7 { seed: 5828 })?;
     let r = reorder(&m, Reordering::CuthillMckee);
     let w = RewardWeights::new(0.8);
@@ -209,7 +205,7 @@ pub fn table2(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
     ];
     for (method, controller, rule, a, paper) in specs {
         let (row, _) = rl_row(
-            rt, method, qm7.clone(), 2, controller, rule, a, epochs, 5828, out_root, paper,
+            rt, method, qm7.clone(), 2, controller, rule, a, epochs, 5828, opts, paper,
         )?;
         rows.push(row);
     }
@@ -232,8 +228,13 @@ pub fn table2(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
 // ---------------------------------------------------------------------------
 // Table III — complexity comparison
 
-pub fn table3(rt: &Runtime) -> Result<()> {
-    let manifest = rt.manifest()?;
+pub fn table3(rt: Option<&Runtime>) -> Result<()> {
+    // the complexity model only needs controller dimensions, so the
+    // built-in configs serve when no artifacts manifest exists
+    let manifest = match rt.and_then(|r| r.manifest().ok()) {
+        Some(m) => m,
+        None => Manifest::builtin(),
+    };
     println!("\n=== Table III — computational complexity (QM7 configs) ===");
     println!(
         "{:<22} {:>6} {:>4} {:>4} {:>4}  {:<26} {:>10}",
@@ -254,7 +255,7 @@ pub fn table3(rt: &Runtime) -> Result<()> {
 // ---------------------------------------------------------------------------
 // Table IV — qh882 / qh1484 with LSTM+RL+Dynamic-fill
 
-pub fn table4(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
+pub fn table4(rt: Option<&Runtime>, epochs: usize, opts: &RunnerOptions) -> Result<()> {
     let mut rows = Vec::new();
     let specs: Vec<(Dataset, &str, usize, f64, Option<(f64, f64)>)> = vec![
         (Dataset::Qh882 { seed: 882 }, "qh882_dyn4", 4, 0.7, Some((0.998, 0.196))),
@@ -278,7 +279,7 @@ pub fn table4(rt: &Runtime, epochs: usize, out_root: &Path) -> Result<()> {
             a,
             epochs,
             7,
-            out_root,
+            opts,
             paper,
         )?;
         rows.push(row);
@@ -353,17 +354,19 @@ pub fn figure7(out_dir: &Path) -> Result<()> {
 
 /// Figs. 8 / 10 / 12 — representative mapping-scheme visualizations from a
 /// short training run per dataset.
+#[allow(clippy::too_many_arguments)]
 pub fn figure_schemes(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     dataset: Dataset,
     grid: usize,
     controller: &str,
     grades: usize,
     epochs: usize,
     fig: &str,
-    out_dir: &Path,
+    opts: &RunnerOptions,
 ) -> Result<()> {
     println!("\n=== Figure {fig} — representative mapping schemes ({}) ===", dataset.label());
+    let out_dir = opts.out_root.as_path();
     std::fs::create_dir_all(out_dir)?;
     let mut count = 0;
     for (i, a) in [0.7, 0.75, 0.8, 0.9].iter().enumerate() {
@@ -377,7 +380,7 @@ pub fn figure_schemes(
             *a,
             epochs,
             100 + i as u64,
-            out_dir,
+            opts,
             None,
         )?;
         let Some(best) = &result.best else { continue };
@@ -407,8 +410,9 @@ pub fn figure_schemes(
 }
 
 /// Figs. 9 / 11 / 13 — training curves (coverage, area, reward vs epoch).
+#[allow(clippy::too_many_arguments)]
 pub fn figure_curves(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     dataset: Dataset,
     grid: usize,
     controller: &str,
@@ -416,7 +420,7 @@ pub fn figure_curves(
     a: f64,
     epochs: usize,
     fig: &str,
-    out_dir: &Path,
+    opts: &RunnerOptions,
 ) -> Result<()> {
     println!(
         "\n=== Figure {fig} — training curves ({}, grades {grades}, a={a}) ===",
@@ -437,12 +441,7 @@ pub fn figure_curves(
         seed: 11,
         log_every: 1,
     };
-    let opts = RunnerOptions {
-        out_root: out_dir.to_path_buf(),
-        verbose: false,
-        ..Default::default()
-    };
-    let result = run_experiment(rt, &cfg, &opts)?;
+    let result = run_experiment(rt, &cfg, opts)?;
     println!("{}", super::runner::curves_ascii(&result.history, 78, 16));
     println!(
         "best: {}",
@@ -455,38 +454,45 @@ pub fn figure_curves(
     Ok(())
 }
 
-/// Dispatch `reproduce --table N | --figure N`.
+/// Dispatch `reproduce --table N | --figure N`. `opts.out_root` is the run
+/// root; figures land under `<out_root>/figures`. `opts.backend`/
+/// `opts.workers` select and size the training backend (native needs no
+/// runtime: `rt` may be `None`).
 pub fn dispatch(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     table: Option<usize>,
     figure: Option<usize>,
     epochs: Option<usize>,
-    out_root: &Path,
+    opts: &RunnerOptions,
 ) -> Result<()> {
-    let figs: PathBuf = out_root.join("figures");
+    let figs: PathBuf = opts.out_root.join("figures");
+    let fig_opts = RunnerOptions {
+        out_root: figs.clone(),
+        ..opts.clone()
+    };
     match (table, figure) {
-        (Some(2), None) => table2(rt, epochs.unwrap_or(4000), out_root),
+        (Some(2), None) => table2(rt, epochs.unwrap_or(4000), opts),
         (Some(3), None) => table3(rt),
-        (Some(4), None) => table4(rt, epochs.unwrap_or(2500), out_root),
+        (Some(4), None) => table4(rt, epochs.unwrap_or(2500), opts),
         (None, Some(2)) => figure2(&figs),
         (None, Some(7)) => figure7(&figs),
         (None, Some(8)) => figure_schemes(
-            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn6", 6, epochs.unwrap_or(3000), "8", &figs,
+            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn6", 6, epochs.unwrap_or(3000), "8", &fig_opts,
         ),
         (None, Some(9)) => figure_curves(
-            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn4", 4, 0.75, epochs.unwrap_or(4000), "9", &figs,
+            rt, Dataset::Qm7 { seed: 5828 }, 2, "qm7_dyn4", 4, 0.75, epochs.unwrap_or(4000), "9", &fig_opts,
         ),
         (None, Some(10)) => figure_schemes(
-            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, epochs.unwrap_or(2000), "10", &figs,
+            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, epochs.unwrap_or(2000), "10", &fig_opts,
         ),
         (None, Some(11)) => figure_curves(
-            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, 0.8, epochs.unwrap_or(2500), "11", &figs,
+            rt, Dataset::Qh882 { seed: 882 }, 32, "qh882_dyn6", 6, 0.8, epochs.unwrap_or(2500), "11", &fig_opts,
         ),
         (None, Some(12)) => figure_schemes(
-            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, epochs.unwrap_or(2000), "12", &figs,
+            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, epochs.unwrap_or(2000), "12", &fig_opts,
         ),
         (None, Some(13)) => figure_curves(
-            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, 0.8, epochs.unwrap_or(2500), "13", &figs,
+            rt, Dataset::Qh1484 { seed: 1484 }, 32, "qh1484_dyn6", 6, 0.8, epochs.unwrap_or(2500), "13", &fig_opts,
         ),
         _ => anyhow::bail!(
             "pass exactly one of --table {{2,3,4}} or --figure {{2,7,8,9,10,11,12,13}}"

@@ -1,11 +1,13 @@
 //! Experiment runner: ties dataset + trainer + metrics together for one
-//! full training run (Algo. 3's outer loop with logging/checkpointing).
+//! full training run (Algo. 3's outer loop with logging/checkpointing),
+//! and resolves which [`TrainBackend`](crate::agent::TrainBackend) a run
+//! trains on (see [`build_trainer`]).
 
 use super::config::ExperimentConfig;
 use super::dataset::{prepare, Workload};
 use super::metrics::{write_summary, MetricsLog};
-use crate::agent::{BestSolution, EpochStats, TrainOptions, Trainer};
-use crate::runtime::Runtime;
+use crate::agent::{BackendKind, BestSolution, EpochStats, TrainOptions, Trainer};
+use crate::runtime::{Manifest, Runtime};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::time::Instant;
@@ -22,7 +24,7 @@ pub struct RunResult {
     pub wall_seconds: f64,
 }
 
-/// Options controlling run output.
+/// Options controlling run output and backend selection.
 #[derive(Clone, Debug)]
 pub struct RunnerOptions {
     /// directory to place runs/<name>/ under
@@ -33,6 +35,12 @@ pub struct RunnerOptions {
     pub verbose: bool,
     /// keep the full in-memory history (figures); CSV is always written
     pub keep_history: bool,
+    /// which training backend to use (Auto = PJRT when an artifacts
+    /// manifest loads, native otherwise)
+    pub backend: BackendKind,
+    /// native-backend worker threads (0 = one per core, capped at 8).
+    /// Training results are identical for any value.
+    pub workers: usize,
 }
 
 impl Default for RunnerOptions {
@@ -42,28 +50,120 @@ impl Default for RunnerOptions {
             checkpoint_every: 0,
             verbose: false,
             keep_history: true,
+            backend: BackendKind::Auto,
+            workers: 0,
         }
     }
 }
 
-/// Execute one experiment end-to-end.
+/// Default native worker count: one per available core, capped at 8 (the
+/// paper's batch sizes saturate well before that).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Resolve `kind` against the (optional) runtime and build a trainer for
+/// `controller`.
+///
+/// - `Pjrt` requires a runtime with a loadable artifacts manifest; the
+///   error otherwise points at `--backend native`.
+/// - `Native` looks the controller up in the artifacts manifest when one
+///   is present (shapes may be customized there) and falls back to the
+///   built-in paper configs ([`Manifest::builtin`]).
+/// - `Auto` picks PJRT exactly when a manifest loads.
+pub fn build_trainer(
+    rt: Option<&Runtime>,
+    controller: &str,
+    topts: TrainOptions,
+    kind: BackendKind,
+) -> Result<Trainer> {
+    let manifest = rt.and_then(|rt| match rt.manifest() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            // a *corrupt* manifest must not be silently treated as absent
+            // (Auto would quietly ignore custom configs); a missing one is
+            // the normal fresh-checkout state and stays quiet
+            if rt.artifacts_dir().join("manifest.json").exists() {
+                eprintln!(
+                    "warning: artifacts manifest at {} exists but failed to load ({e:#}); \
+                     treating artifacts as absent (auto backend -> native, builtin configs)",
+                    rt.artifacts_dir().display()
+                );
+            }
+            None
+        }
+    });
+    let use_pjrt = match kind {
+        BackendKind::Pjrt => true,
+        BackendKind::Native => false,
+        BackendKind::Auto => manifest.is_some(),
+    };
+    if use_pjrt {
+        let rt = rt.context(
+            "the pjrt backend needs an artifacts runtime — pass --artifacts DIR, \
+             or rerun with `--backend native` (pure-Rust trainer, no artifacts needed)",
+        )?;
+        let manifest = rt.manifest().with_context(|| {
+            format!(
+                "no AOT manifest under {} — rerun with `--backend native` \
+                 (pure-Rust trainer, no artifacts needed) or build artifacts \
+                 with `make artifacts`",
+                rt.artifacts_dir().display()
+            )
+        })?;
+        let entry = manifest.config(controller)?.clone();
+        Trainer::new(rt, entry, topts)
+    } else {
+        let entry = match manifest.as_ref().and_then(|m| m.configs.get(controller)) {
+            Some(e) => e.clone(),
+            None => Manifest::builtin()
+                .config(controller)
+                .with_context(|| {
+                    format!(
+                        "controller {controller:?} is neither a built-in config nor \
+                         present in an artifacts manifest"
+                    )
+                })?
+                .clone(),
+        };
+        Trainer::native(entry, topts)
+    }
+}
+
+/// Execute one experiment end-to-end. `rt` may be `None` for native-only
+/// training (no artifacts directory involved at all).
 pub fn run_experiment(
-    rt: &Runtime,
+    rt: Option<&Runtime>,
     cfg: &ExperimentConfig,
     opts: &RunnerOptions,
 ) -> Result<RunResult> {
-    let manifest = rt.manifest()?;
-    let entry = manifest.config(&cfg.controller)?.clone();
+    let topts = TrainOptions {
+        lr: cfg.lr,
+        ent_coef: cfg.ent_coef,
+        baseline_decay: cfg.baseline_decay,
+        weights: cfg.weights(),
+        fill_rule: cfg.fill_rule,
+        seed: cfg.seed,
+        workers: if opts.workers == 0 {
+            default_workers()
+        } else {
+            opts.workers
+        },
+    };
+    let mut trainer = build_trainer(rt, &cfg.controller, topts, opts.backend)?;
     let workload = prepare(cfg)?;
     anyhow::ensure!(
-        workload.grid.n == entry.n,
+        workload.grid.n == trainer.entry.n,
         "dataset {} at grid {} yields {} cells; controller {} expects {} — \
          pick a matching controller config",
         cfg.dataset.label(),
         cfg.grid,
         workload.grid.n,
-        entry.name,
-        entry.n
+        trainer.entry.name,
+        trainer.entry.n
     );
 
     let run_dir = opts.out_root.join(&cfg.name);
@@ -72,15 +172,14 @@ pub fn run_experiment(
     std::fs::write(run_dir.join("config.json"), cfg.to_json().to_pretty())?;
     let mut log = MetricsLog::create(&run_dir)?;
 
-    let topts = TrainOptions {
-        lr: cfg.lr,
-        ent_coef: cfg.ent_coef,
-        baseline_decay: cfg.baseline_decay,
-        weights: cfg.weights(),
-        fill_rule: cfg.fill_rule,
-        seed: cfg.seed,
-    };
-    let mut trainer = Trainer::new(rt, entry, topts)?;
+    if opts.verbose {
+        println!(
+            "[{}] backend {} ({} workers)",
+            cfg.name,
+            trainer.backend_name(),
+            topts.workers
+        );
+    }
 
     let t0 = Instant::now();
     let mut history = Vec::new();
@@ -109,15 +208,7 @@ pub fn run_experiment(
             }
         }
         if opts.checkpoint_every > 0 && (e + 1) % opts.checkpoint_every == 0 {
-            trainer.sync_host()?;
-            crate::agent::params::save_checkpoint(
-                &run_dir.join("checkpoint.json"),
-                &trainer.entry,
-                &trainer.params,
-                &trainer.opt,
-                trainer.epoch,
-                trainer.baseline,
-            )?;
+            trainer.save_checkpoint(&run_dir.join("checkpoint.json"))?;
         }
         if opts.keep_history {
             history.push(stats.clone());
@@ -181,6 +272,7 @@ pub fn describe_best(best: &Option<BestSolution>, grid: &crate::graph::GridSumma
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheme::FillRule;
 
     #[test]
     fn curves_ascii_smoke() {
@@ -200,5 +292,41 @@ mod tests {
         let s = curves_ascii(&h, 40, 10);
         assert!(s.contains("coverage"));
         assert!(s.contains("reward"));
+    }
+
+    #[test]
+    fn auto_backend_without_runtime_is_native() {
+        let topts = TrainOptions {
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            workers: 1,
+            ..Default::default()
+        };
+        let t = build_trainer(None, "qm7_dyn4", topts, BackendKind::Auto).unwrap();
+        assert_eq!(t.backend_name(), "native");
+    }
+
+    #[test]
+    fn pjrt_backend_without_artifacts_suggests_native() {
+        let rt = Runtime::new("/nonexistent_dir_autogmap_runner").unwrap();
+        let topts = TrainOptions {
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            ..Default::default()
+        };
+        let err = build_trainer(Some(&rt), "qm7_dyn4", topts, BackendKind::Pjrt).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--backend native"), "unhelpful: {msg}");
+        // Auto with a runtime but no manifest also falls back to native
+        let topts2 = TrainOptions {
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            ..Default::default()
+        };
+        let t = build_trainer(Some(&rt), "qm7_dyn4", topts2, BackendKind::Auto).unwrap();
+        assert_eq!(t.backend_name(), "native");
+    }
+
+    #[test]
+    fn unknown_controller_is_rejected_everywhere() {
+        let topts = TrainOptions::default();
+        assert!(build_trainer(None, "no_such_cfg", topts, BackendKind::Native).is_err());
     }
 }

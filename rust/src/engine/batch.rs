@@ -1,5 +1,7 @@
-//! Batch executor: a std-thread worker pool serving MVM requests against a
-//! compiled plan.
+//! Batch executor: MVM request serving against a compiled plan, fanned out
+//! over the crate-wide [`crate::util::pool::WorkerPool`] (the same
+//! substrate the native trainer uses for rollouts/BPTT — one copy of the
+//! queue/condvar machinery, with panic propagation instead of hangs).
 //!
 //! Numerics stay on the host (the banks of a [`super::fleet::Fleet`] model
 //! latency/energy, not arithmetic): each request is executed by exactly one
@@ -14,83 +16,38 @@
 //! steady-state serving loop performs no output allocation.
 
 use super::plan::ExecPlan;
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-struct QueueState {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
-}
-
-struct Queue {
-    state: Mutex<QueueState>,
-    cv: Condvar,
-}
-
-struct BatchSink {
-    remaining: usize,
-    out: Vec<Option<Vec<f64>>>,
-}
+use crate::util::pool::WorkerPool;
+use std::sync::{Arc, Mutex};
 
 /// Thread-pool executor bound to one plan.
 pub struct BatchExecutor {
     plan: Arc<ExecPlan>,
-    queue: Arc<Queue>,
-    pool: Arc<Mutex<Vec<Vec<f64>>>>,
-    workers: Vec<JoinHandle<()>>,
+    pool: WorkerPool,
+    buffers: Arc<Mutex<Vec<Vec<f64>>>>,
 }
 
 impl BatchExecutor {
     /// Spawn `workers` worker threads serving requests against `plan`.
     pub fn new(plan: Arc<ExecPlan>, workers: usize) -> BatchExecutor {
-        assert!(workers >= 1, "executor needs at least one worker");
-        let queue = Arc::new(Queue {
-            state: Mutex::new(QueueState {
-                jobs: VecDeque::new(),
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
-        });
-        let handles = (0..workers)
-            .map(|w| {
-                let q = queue.clone();
-                std::thread::Builder::new()
-                    .name(format!("engine-worker-{w}"))
-                    .spawn(move || worker_loop(q))
-                    .expect("spawning engine worker")
-            })
-            .collect();
         BatchExecutor {
             plan,
-            queue,
-            pool: Arc::new(Mutex::new(Vec::new())),
-            workers: handles,
+            pool: WorkerPool::new(workers),
+            buffers: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.pool.workers()
     }
 
     pub fn plan(&self) -> &ExecPlan {
         &self.plan
     }
 
-    fn submit(&self, job: Job) {
-        let mut st = self.queue.state.lock().unwrap();
-        st.jobs.push_back(job);
-        drop(st);
-        self.queue.cv.notify_one();
-    }
-
     /// Execute a batch of input vectors; blocks until every request in the
     /// batch completes and returns outputs in request order.
     pub fn execute_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
-        let n = xs.len();
-        if n == 0 {
+        if xs.is_empty() {
             return Vec::new();
         }
         for (i, x) in xs.iter().enumerate() {
@@ -103,78 +60,29 @@ impl BatchExecutor {
             );
         }
         let xs = Arc::new(xs);
-        let sink = Arc::new((
-            Mutex::new(BatchSink {
-                remaining: n,
-                out: (0..n).map(|_| None).collect(),
-            }),
-            Condvar::new(),
-        ));
-        for i in 0..n {
-            let xs = xs.clone();
-            let sink = sink.clone();
-            let plan = self.plan.clone();
-            let pool = self.pool.clone();
-            self.submit(Box::new(move || {
-                let mut y = pool.lock().unwrap().pop().unwrap_or_default();
-                plan.mvm_into(&xs[i], &mut y);
-                let (lock, cv) = &*sink;
-                let mut s = lock.lock().unwrap();
-                s.out[i] = Some(y);
-                s.remaining -= 1;
-                if s.remaining == 0 {
-                    cv.notify_all();
+        let jobs: Vec<_> = (0..xs.len())
+            .map(|i| {
+                let xs = xs.clone();
+                let plan = self.plan.clone();
+                let buffers = self.buffers.clone();
+                move || {
+                    let mut y = buffers.lock().unwrap().pop().unwrap_or_default();
+                    plan.mvm_into(&xs[i], &mut y);
+                    y
                 }
-            }));
-        }
-        let (lock, cv) = &*sink;
-        let mut s = lock.lock().unwrap();
-        while s.remaining > 0 {
-            s = cv.wait(s).unwrap();
-        }
-        s.out.iter_mut().map(|o| o.take().unwrap()).collect()
+            })
+            .collect();
+        self.pool.run(jobs)
     }
 
     /// Return output buffers to the pool so later batches reuse them.
     pub fn recycle(&self, bufs: Vec<Vec<f64>>) {
-        let mut pool = self.pool.lock().unwrap();
-        pool.extend(bufs);
+        self.buffers.lock().unwrap().extend(bufs);
     }
 
     /// Buffers currently waiting in the reuse pool (observability/tests).
     pub fn pooled_buffers(&self) -> usize {
-        self.pool.lock().unwrap().len()
-    }
-}
-
-impl Drop for BatchExecutor {
-    fn drop(&mut self) {
-        {
-            let mut st = self.queue.state.lock().unwrap();
-            st.shutdown = true;
-        }
-        self.queue.cv.notify_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker_loop(q: Arc<Queue>) {
-    loop {
-        let job = {
-            let mut st = q.state.lock().unwrap();
-            loop {
-                if let Some(j) = st.jobs.pop_front() {
-                    break j;
-                }
-                if st.shutdown {
-                    return;
-                }
-                st = q.cv.wait(st).unwrap();
-            }
-        };
-        job();
+        self.buffers.lock().unwrap().len()
     }
 }
 

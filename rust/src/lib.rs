@@ -14,6 +14,27 @@
 //! Python never runs at request time: `make artifacts` lowers the L1/L2
 //! computations once; the Rust binary loads them through PJRT.
 //!
+//! ## Training backends
+//!
+//! Training runs behind the pluggable [`agent::TrainBackend`] trait with
+//! two implementations, selected per command via
+//! `--backend {native,pjrt,auto}`:
+//!
+//! - **native** ([`agent::native::NativeBackend`]) — pure Rust, no
+//!   artifacts required: sampling rollouts through the
+//!   [`agent::lstm`] mirror on a std-thread worker pool, full
+//!   backprop-through-time for the L2 controller (fused LSTM gates,
+//!   per-step FC heads, log-softmax), the REINFORCE-with-baseline
+//!   gradient, and a fused Adam step. Bit-deterministic for a fixed seed
+//!   regardless of worker count. Controller shapes come from
+//!   [`runtime::Manifest::builtin`] when no artifacts manifest exists.
+//! - **pjrt** ([`agent::backend::PjrtBackend`]) — the AOT path above
+//!   (two PJRT calls per epoch).
+//!
+//! `auto` (the default) picks pjrt exactly when `artifacts/manifest.json`
+//! is present. The `train-bench` CLI subcommand tracks native training
+//! throughput (`BENCH_train.json`) like `serve-bench` does for the engine.
+//!
 //! ## Serving layer
 //!
 //! Training produces a mapping scheme; the [`engine`] subsystem turns it

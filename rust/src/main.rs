@@ -10,7 +10,15 @@
 //!   info       — runtime + manifest summary
 //!   serve-bench — compile/load an execution plan and replay a synthetic
 //!                request trace against the engine (throughput, p50/p99)
+//!   train-bench — native-backend training throughput at 1/2/8 workers
+//!                (BENCH_train.json, the training analogue of serve-bench)
+//!
+//! Every training command takes `--backend {native,pjrt,auto}`: `native`
+//! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
+//! required), `pjrt` executes the AOT HLO artifacts, and `auto` (default)
+//! picks pjrt exactly when `artifacts/manifest.json` exists.
 
+use autogmap::agent::BackendKind;
 use autogmap::coordinator::config::{Dataset, ExperimentConfig};
 use autogmap::coordinator::{reproduce, runner, RunnerOptions};
 use autogmap::reorder::Reordering;
@@ -27,10 +35,13 @@ USAGE: autogmap <subcommand> [options]
   train      --config cfg.json | [--dataset qm7|qh882|qh1484|batch|mtx
              --mtx-path p --grid N --controller NAME --fill none|fixed|dynamic
              --fill-arg N --reward-a F --lr F --epochs N --seed N]
+             [--backend native|pjrt|auto] [--workers N]
              [--out runs] [--checkpoint-every N] [--verbose]
   eval       --config cfg.json --checkpoint runs/<name>/checkpoint.json
+             [--backend native|pjrt|auto]
   baseline   --dataset qm7|qh882|qh1484 [--grid N] [--coarse N]
-  reproduce  --table 2|3|4 | --figure 2|7|8|9|10|11|12|13 [--epochs N] [--out runs]
+  reproduce  --table 2|3|4 | --figure 2|7|8|9|10|11|12|13 [--epochs N]
+             [--backend native|pjrt|auto] [--workers N] [--out runs]
   gen-data   [--out data]
   visualize  --dataset qm7|qh882|qh1484 [--mtx-path p] [--out figures]
   info
@@ -39,8 +50,21 @@ USAGE: autogmap <subcommand> [options]
              [--banks N] [--policy rr|balanced] [--workers N]
              [--trace uniform|bursty|batch] [--batch N] [--requests N]
              [--trace-seed N] [--bench-json BENCH_engine.json]
+  train-bench [--dataset qm7|qh882|qh1484 --controller NAME --fill kind
+             --fill-arg N --epochs N --seed N]
+             [--bench-json BENCH_train.json]
 
   global: --artifacts DIR (default: artifacts)
+
+  backends: `native` trains in pure Rust (full BPTT + REINFORCE + Adam on
+  a worker pool) and needs no artifacts; `pjrt` executes the AOT HLO
+  artifacts; `auto` (default) = pjrt when artifacts/manifest.json exists,
+  native otherwise. For a fixed --seed the native trainer is bit-exact
+  regardless of --workers.
+
+  train example (fresh checkout, no artifacts):
+    autogmap train --backend native --dataset qm7 --fill dynamic \\
+        --fill-arg 4 --epochs 2000 --verbose
 
   serve-bench example:
     autogmap serve-bench --dataset qh882 --banks 8 --trace bursty \\
@@ -48,6 +72,12 @@ USAGE: autogmap <subcommand> [options]
   compiles the scheme into an ExecPlan (all-zero tiles elided), spreads it
   over 8 simulated crossbar banks, replays the trace through the batch
   executor, and reports throughput + p50/p99 vs the single-threaded oracle.
+
+  train-bench example:
+    autogmap train-bench --dataset qm7 --epochs 100 \\
+        --bench-json BENCH_train.json
+  times native epochs/sec and rollout episodes/sec at 1, 2, and 8 workers
+  so the training perf trajectory is tracked like the engine's.
 ";
 
 fn main() {
@@ -68,7 +98,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "reward-a", "lr", "ent-coef", "epochs", "seed", "out", "checkpoint-every",
         "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
         "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
-        "requests", "trace-seed", "bench-json",
+        "requests", "trace-seed", "bench-json", "backend",
     ];
     let flag_opts = ["verbose", "help"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -88,8 +118,31 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "visualize" => cmd_visualize(&args),
         "info" => cmd_info(&artifacts),
         "serve-bench" => cmd_serve_bench(&args),
+        "train-bench" => cmd_train_bench(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
+}
+
+/// Parse `--backend` and build the PJRT runtime only when that backend
+/// could actually be used: `native` never touches the artifacts dir, and
+/// `auto` resolves to native (no runtime) when no manifest exists.
+fn backend_and_runtime(
+    args: &Args,
+    artifacts: &str,
+) -> anyhow::Result<(BackendKind, Option<Runtime>)> {
+    let kind = BackendKind::parse(args.get_or("backend", "auto"))?;
+    let rt = match kind {
+        BackendKind::Native => None,
+        BackendKind::Pjrt => Some(Runtime::new(artifacts)?),
+        BackendKind::Auto => {
+            if Path::new(artifacts).join("manifest.json").exists() {
+                Some(Runtime::new(artifacts)?)
+            } else {
+                None
+            }
+        }
+    };
+    Ok((kind, rt))
 }
 
 fn dataset_from_args(args: &Args) -> anyhow::Result<Dataset> {
@@ -159,7 +212,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<ExperimentConfig> {
 
 fn cmd_train(args: &Args, artifacts: &str) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::new(artifacts)?;
+    let (backend, rt) = backend_and_runtime(args, artifacts)?;
     let opts = RunnerOptions {
         out_root: PathBuf::from(args.get_or("out", "runs")),
         checkpoint_every: args
@@ -168,9 +221,11 @@ fn cmd_train(args: &Args, artifacts: &str) -> anyhow::Result<()> {
             .unwrap_or(500),
         verbose: args.flag("verbose"),
         keep_history: true,
+        backend,
+        workers: args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(0),
     };
     println!("training {} on {} for {} epochs …", cfg.controller, cfg.dataset.label(), cfg.epochs);
-    let result = runner::run_experiment(&rt, &cfg, &opts)?;
+    let result = runner::run_experiment(rt.as_ref(), &cfg, &opts)?;
     println!("{}", runner::curves_ascii(&result.history, 78, 14));
     println!("best: {}", runner::describe_best(&result.best, &result.workload.grid));
     println!(
@@ -184,9 +239,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> anyhow::Result<()> {
 
 fn cmd_eval(args: &Args, artifacts: &str) -> anyhow::Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::new(artifacts)?;
-    let manifest = rt.manifest()?;
-    let entry = manifest.config(&cfg.controller)?.clone();
+    let (backend, rt) = backend_and_runtime(args, artifacts)?;
     let workload = autogmap::coordinator::dataset::prepare(&cfg)?;
     let topts = autogmap::agent::TrainOptions {
         lr: cfg.lr,
@@ -195,8 +248,10 @@ fn cmd_eval(args: &Args, artifacts: &str) -> anyhow::Result<()> {
         weights: cfg.weights(),
         fill_rule: cfg.fill_rule,
         seed: cfg.seed,
+        workers: 1,
     };
-    let mut trainer = autogmap::agent::Trainer::new(&rt, entry, topts)?;
+    let mut trainer = runner::build_trainer(rt.as_ref(), &cfg.controller, topts, backend)?;
+    println!("eval backend: {}", trainer.backend_name());
     if let Some(ck) = args.get("checkpoint") {
         trainer.restore(Path::new(ck))?;
         println!("restored checkpoint {ck} (epoch {})", trainer.epoch);
@@ -235,14 +290,113 @@ fn cmd_reproduce(args: &Args, artifacts: &str) -> anyhow::Result<()> {
     let figure = args.get_usize("figure").map_err(anyhow::Error::msg)?;
     let epochs = args.get_usize("epochs").map_err(anyhow::Error::msg)?;
     let out = PathBuf::from(args.get_or("out", "runs"));
-    // figures 2 and 7 need no PJRT runtime
+    // figures 2 and 7 need no training backend at all
     match (table, figure) {
         (None, Some(2)) => return reproduce::figure2(&out.join("figures")),
         (None, Some(7)) => return reproduce::figure7(&out.join("figures")),
         _ => {}
     }
-    let rt = Runtime::new(artifacts)?;
-    reproduce::dispatch(&rt, table, figure, epochs, &out)
+    let (backend, rt) = backend_and_runtime(args, artifacts)?;
+    let opts = RunnerOptions {
+        out_root: out,
+        backend,
+        workers: args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(0),
+        ..Default::default()
+    };
+    reproduce::dispatch(rt.as_ref(), table, figure, epochs, &opts)
+}
+
+/// `train-bench`: the training-side perf ledger. Times the *native*
+/// backend (the PJRT path is covered by `benches/rollout.rs`) — full
+/// epochs/sec and rollout episodes/sec at 1, 2, and 8 workers — and
+/// writes BENCH_train.json for cross-PR trajectory tracking.
+fn cmd_train_bench(args: &Args) -> anyhow::Result<()> {
+    use autogmap::agent::{NativeBackend, TrainBackend};
+    use autogmap::util::bench;
+    use autogmap::util::json::Json;
+    use std::time::Instant;
+
+    let cfg = config_from_args(args)?;
+    let fast = std::env::var("AUTOGMAP_BENCH_FAST").is_ok_and(|v| v == "1");
+    let epochs = args
+        .get_usize("epochs")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(if fast { 20 } else { 100 });
+    let workload = autogmap::coordinator::dataset::prepare(&cfg)?;
+    println!(
+        "train-bench {} on {} (grid {} -> N={}), {} epochs per worker count",
+        cfg.controller,
+        cfg.dataset.label(),
+        cfg.grid,
+        workload.grid.n,
+        epochs
+    );
+
+    let ws = [1usize, 2, 8];
+    let mut epoch_rate = [0f64; 3];
+    let mut rollout_rate = [0f64; 3];
+    let mut batch_size = 0usize;
+    for (i, &w) in ws.iter().enumerate() {
+        let topts = autogmap::agent::TrainOptions {
+            lr: cfg.lr,
+            ent_coef: cfg.ent_coef,
+            baseline_decay: cfg.baseline_decay,
+            weights: cfg.weights(),
+            fill_rule: cfg.fill_rule,
+            seed: cfg.seed,
+            workers: w,
+        };
+        let mut trainer = runner::build_trainer(
+            None,
+            &cfg.controller,
+            topts,
+            autogmap::agent::BackendKind::Native,
+        )?;
+        batch_size = trainer.entry.batch;
+        let t0 = Instant::now();
+        let mut last_reward = 0.0;
+        for _ in 0..epochs {
+            last_reward = trainer.epoch(&workload.grid)?.mean_reward;
+        }
+        epoch_rate[i] = epochs as f64 / t0.elapsed().as_secs_f64();
+
+        // rollout-only throughput (sampling without BPTT/Adam)
+        let entry = trainer.entry.clone();
+        let mut be = NativeBackend::new(entry, cfg.seed, w);
+        let rounds = epochs.max(50);
+        let t0 = Instant::now();
+        for r in 0..rounds {
+            let batch = be.rollout([r as u32, 0x5eed])?;
+            std::hint::black_box(batch.d_all.len());
+        }
+        rollout_rate[i] = (rounds * batch_size) as f64 / t0.elapsed().as_secs_f64();
+        println!(
+            "  workers {w}: {:.0} epochs/s, {:.0} rollout episodes/s (final R̄ {:.4})",
+            epoch_rate[i], rollout_rate[i], last_reward
+        );
+    }
+
+    let out = args.get_or("bench-json", "BENCH_train.json");
+    bench::write_bench_json(
+        Path::new(out),
+        vec![
+            ("bench", Json::Str("train_native".into())),
+            ("backend", Json::Str("native".into())),
+            ("dataset", Json::Str(cfg.dataset.label())),
+            ("controller", Json::Str(cfg.controller.clone())),
+            ("grid", Json::Num(cfg.grid as f64)),
+            ("batch", Json::Num(batch_size as f64)),
+            ("epochs", Json::Num(epochs as f64)),
+            ("epochs_per_sec_w1", Json::Num(epoch_rate[0])),
+            ("epochs_per_sec_w2", Json::Num(epoch_rate[1])),
+            ("epochs_per_sec_w8", Json::Num(epoch_rate[2])),
+            ("rollout_eps_w1", Json::Num(rollout_rate[0])),
+            ("rollout_eps_w2", Json::Num(rollout_rate[1])),
+            ("rollout_eps_w8", Json::Num(rollout_rate[2])),
+        ],
+    )?;
+    println!("wrote {out}");
+    Ok(())
 }
 
 fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
@@ -505,7 +659,20 @@ fn cmd_info(artifacts: &str) -> anyhow::Result<()> {
                 println!("  {name:<18} K={} NB={} NR={}", v.k, v.nb, v.nr);
             }
         }
-        Err(e) => println!("no artifacts manifest ({e}); run `make artifacts`"),
+        Err(e) => {
+            println!("no artifacts manifest ({e})");
+            println!(
+                "training still works: the native backend (`--backend native`, \
+                 or `auto`) needs no artifacts. built-in controller configs:"
+            );
+            for (name, c) in &autogmap::runtime::Manifest::builtin().configs {
+                println!(
+                    "  {name:<18} N={:<3} T={:<3} H={:<3} F={:<2} B={:<2} bilstm={}",
+                    c.n, c.steps, c.hidden, c.fill_classes, c.batch, c.bilstm
+                );
+            }
+            println!("(run `make artifacts` to enable the pjrt backend)");
+        }
     }
     Ok(())
 }

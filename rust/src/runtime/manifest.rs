@@ -37,6 +37,53 @@ pub struct ControllerEntry {
 }
 
 impl ControllerEntry {
+    /// Build an entry — including its ordered parameter ABI — from the
+    /// model dimensions alone (mirrors `model.param_spec`). No artifacts
+    /// are attached; this is how the native training backend gets a
+    /// config when `artifacts/` has never been built.
+    pub fn from_dims(
+        name: &str,
+        n: usize,
+        hidden: usize,
+        fill_classes: usize,
+        batch: usize,
+        bilstm: bool,
+    ) -> ControllerEntry {
+        assert!(n >= 2, "controller needs at least 2 grid cells");
+        let t = n - 1;
+        let head_in = if bilstm { 2 * hidden } else { hidden };
+        let mut params = vec![
+            ParamSpec { name: "x0".into(), shape: vec![hidden] },
+            ParamSpec { name: "lstm_w".into(), shape: vec![2 * hidden, 4 * hidden] },
+            ParamSpec { name: "lstm_b".into(), shape: vec![4 * hidden] },
+        ];
+        if bilstm {
+            params.push(ParamSpec { name: "bwd_emb".into(), shape: vec![t, hidden] });
+            params.push(ParamSpec { name: "bwd_w".into(), shape: vec![2 * hidden, 4 * hidden] });
+            params.push(ParamSpec { name: "bwd_b".into(), shape: vec![4 * hidden] });
+        }
+        params.push(ParamSpec { name: "fc_d_w".into(), shape: vec![t, head_in, 2] });
+        params.push(ParamSpec { name: "fc_d_b".into(), shape: vec![t, 2] });
+        if fill_classes > 0 {
+            params.push(ParamSpec {
+                name: "fc_f_w".into(),
+                shape: vec![t, head_in, fill_classes],
+            });
+            params.push(ParamSpec { name: "fc_f_b".into(), shape: vec![t, fill_classes] });
+        }
+        ControllerEntry {
+            name: name.to_string(),
+            n,
+            hidden,
+            fill_classes,
+            batch,
+            bilstm,
+            steps: t,
+            params,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
     pub fn total_param_elements(&self) -> usize {
         self.params.iter().map(|p| p.elements()).sum()
     }
@@ -165,6 +212,40 @@ impl Manifest {
         })
     }
 
+    /// The paper's controller configurations (mirrors aot.py's
+    /// `CONTROLLER_CONFIGS`), constructed from dimensions alone. This is
+    /// what the native training backend trains against when no
+    /// `artifacts/` directory exists; when a real manifest *is* present
+    /// its entries take precedence (same shapes, plus artifact files).
+    pub fn builtin() -> Manifest {
+        let specs: [(&str, usize, usize, usize, usize, bool); 10] = [
+            ("qm7_diag", 11, 10, 0, 8, false),
+            ("qm7_fill", 11, 10, 2, 8, false),
+            ("qm7_fill_bilstm", 11, 10, 2, 8, true),
+            ("qm7_dyn4", 11, 10, 4, 8, false),
+            ("qm7_dyn6", 11, 10, 6, 8, false),
+            ("qm7_dyn4_b32", 11, 10, 4, 32, false),
+            ("qh882_dyn4", 28, 10, 4, 8, false),
+            ("qh882_dyn6", 28, 10, 6, 8, false),
+            ("qh1484_dyn4", 47, 10, 4, 8, false),
+            ("qh1484_dyn6", 47, 10, 6, 8, false),
+        ];
+        let configs = specs
+            .iter()
+            .map(|&(name, n, hidden, fill, batch, bilstm)| {
+                (
+                    name.to_string(),
+                    ControllerEntry::from_dims(name, n, hidden, fill, batch, bilstm),
+                )
+            })
+            .collect();
+        Manifest {
+            fingerprint: "builtin".to_string(),
+            configs,
+            mvm: BTreeMap::new(),
+        }
+    }
+
     pub fn config(&self, name: &str) -> Result<&ControllerEntry> {
         self.configs
             .get(name)
@@ -222,6 +303,38 @@ mod tests {
         assert!(
             Manifest::parse(r#"{"configs": {"x": {"n": 1, "params": []}}}"#).is_err()
         );
+    }
+
+    #[test]
+    fn builtin_configs_match_model_param_spec() {
+        let m = Manifest::builtin();
+        // the full aot.py roster exists, with the paper's dimensions
+        for name in [
+            "qm7_diag", "qm7_fill", "qm7_fill_bilstm", "qm7_dyn4", "qm7_dyn6",
+            "qm7_dyn4_b32", "qh882_dyn4", "qh882_dyn6", "qh1484_dyn4", "qh1484_dyn6",
+        ] {
+            let c = m.config(name).unwrap();
+            assert_eq!(c.steps, c.n - 1, "{name}");
+            assert_eq!(c.hidden, 10, "{name}");
+            assert!(c.artifacts.is_empty(), "{name}: builtin has no artifacts");
+        }
+        let c = m.config("qh1484_dyn6").unwrap();
+        assert_eq!((c.n, c.steps, c.fill_classes), (47, 46, 6));
+        // ABI order and shapes mirror model.param_spec
+        let d = m.config("qm7_dyn4").unwrap();
+        let names: Vec<&str> = d.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, ["x0", "lstm_w", "lstm_b", "fc_d_w", "fc_d_b", "fc_f_w", "fc_f_b"]);
+        assert_eq!(d.params[1].shape, vec![20, 40]);
+        assert_eq!(d.params[5].shape, vec![10, 10, 4]);
+        let bi = m.config("qm7_fill_bilstm").unwrap();
+        let names: Vec<&str> = bi.params.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["x0", "lstm_w", "lstm_b", "bwd_emb", "bwd_w", "bwd_b", "fc_d_w", "fc_d_b", "fc_f_w", "fc_f_b"]
+        );
+        // bilstm heads read [h, hb] -> head_in = 2H
+        assert_eq!(bi.params[6].shape, vec![10, 20, 2]);
+        assert!(m.config("nope").is_err());
     }
 
     #[test]

@@ -6,6 +6,13 @@
 //! client, and executes it from the coordinator's hot path. Python is never
 //! involved at run time.
 //!
+//! This runtime is now *optional* for training: it backs
+//! [`crate::agent::backend::PjrtBackend`], one of two `TrainBackend`
+//! implementations — the pure-Rust
+//! [`crate::agent::native::NativeBackend`] trains without any artifacts,
+//! using [`Manifest::builtin`] for the controller shapes. Commands resolve
+//! between them via `--backend {native,pjrt,auto}`.
+//!
 //! Pattern adapted from /opt/xla-example/load_hlo/ — text (not serialized
 //! proto) is the interchange format because xla_extension 0.5.1 rejects
 //! jax≥0.5's 64-bit-id protos.

@@ -1,8 +1,11 @@
 //! Utility substrates built in-repo because the offline vendored crate set
-//! contains no `rand`, `serde`, `clap`, `criterion`, or `proptest`.
+//! contains no `rand`, `serde`, `clap`, `criterion`, `proptest`, or
+//! `rayon` ([`pool`] covers the order-preserving fan-out the trainer
+//! needs).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod propcheck;
 pub mod rng;

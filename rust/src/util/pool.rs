@@ -1,0 +1,206 @@
+//! Std-thread worker pool: the crate's shared fan-out substrate, used by
+//! the native trainer (sampling rollouts, per-episode BPTT) and the
+//! serving engine's [`crate::engine::batch::BatchExecutor`]. Jobs are
+//! type-erased closures pulled from a shared deque by persistent workers;
+//! results land in submission order, so downstream reductions are
+//! deterministic regardless of worker count or scheduling, and a
+//! panicking job is re-raised on the caller instead of hanging the run.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct Sink<T> {
+    remaining: usize,
+    out: Vec<Option<std::thread::Result<T>>>,
+}
+
+/// Persistent worker pool; threads live as long as the pool, so per-epoch
+/// dispatch costs one lock + notify per job, not a thread spawn.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        assert!(workers >= 1, "pool needs at least one worker");
+        let queue = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("pool-worker-{w}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool {
+            queue,
+            workers: handles,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run every job to completion; returns results in job order.
+    ///
+    /// A panicking job does not hang the pool: the panic is caught on the
+    /// worker, carried through the sink, and re-raised on the calling
+    /// thread once all jobs have settled.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let sink = Arc::new((
+            Mutex::new(Sink::<T> {
+                remaining: n,
+                out: (0..n).map(|_| None).collect(),
+            }),
+            Condvar::new(),
+        ));
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            for (i, job) in jobs.into_iter().enumerate() {
+                let sink = sink.clone();
+                st.jobs.push_back(Box::new(move || {
+                    let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    let (lock, cv) = &*sink;
+                    let mut s = lock.lock().unwrap();
+                    s.out[i] = Some(v);
+                    s.remaining -= 1;
+                    if s.remaining == 0 {
+                        cv.notify_all();
+                    }
+                }));
+            }
+        }
+        self.queue.cv.notify_all();
+        let (lock, cv) = &*sink;
+        let mut s = lock.lock().unwrap();
+        while s.remaining > 0 {
+            s = cv.wait(s).unwrap();
+        }
+        s.out
+            .iter_mut()
+            .map(|o| match o.take().unwrap() {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.queue.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.queue.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut st = q.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = q.cv.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_submission_order() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<_> = (0..64u64)
+            .map(|i| {
+                move || {
+                    // stagger finish times so out-of-order completion is likely
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.run(jobs);
+        let want: Vec<u64> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn empty_job_list_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        let out: Vec<u32> = pool.run(Vec::<fn() -> u32>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panicking_job_propagates_instead_of_hanging() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("job blew up")),
+            Box::new(|| 3),
+        ];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(jobs)));
+        assert!(result.is_err(), "panic must surface to the caller");
+        // the pool is still serviceable afterwards
+        let out = pool.run(vec![Box::new(|| 7u32) as Box<dyn FnOnce() -> u32 + Send>]);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn pool_survives_many_rounds() {
+        let pool = WorkerPool::new(2);
+        for round in 0..50u32 {
+            let jobs: Vec<_> = (0..8u32).map(|i| move || i + round).collect();
+            let out = pool.run(jobs);
+            assert_eq!(out.len(), 8);
+            assert_eq!(out[3], 3 + round);
+        }
+        assert_eq!(pool.workers(), 2);
+    }
+}

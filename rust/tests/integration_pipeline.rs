@@ -43,6 +43,7 @@ fn qm7_config(tmp: &std::path::Path, epochs: usize) -> (ExperimentConfig, Runner
         checkpoint_every: 50,
         verbose: false,
         keep_history: true,
+        ..Default::default()
     };
     (cfg, opts)
 }
@@ -53,7 +54,7 @@ fn full_run_writes_metrics_summary_and_checkpoint() {
     let tmp = std::env::temp_dir().join("autogmap_it_run");
     let _ = std::fs::remove_dir_all(&tmp);
     let (cfg, opts) = qm7_config(&tmp, 120);
-    let result = run_experiment(&rt, &cfg, &opts).unwrap();
+    let result = run_experiment(Some(&rt), &cfg, &opts).unwrap();
 
     // metrics CSV parses and is monotone in epoch
     let cols = read_csv(&result.run_dir.join("metrics.csv")).unwrap();
@@ -96,7 +97,7 @@ fn trained_scheme_beats_vanilla_fill_on_qm7() {
     let Some(rt) = runtime() else { return };
     let tmp = std::env::temp_dir().join("autogmap_it_claim");
     let (cfg, opts) = qm7_config(&tmp, 2500);
-    let result = run_experiment(&rt, &cfg, &opts).unwrap();
+    let result = run_experiment(Some(&rt), &cfg, &opts).unwrap();
     let best = result.best.as_ref().expect("complete coverage not reached");
     assert_eq!(best.eval.coverage_ratio, 1.0);
 
@@ -119,7 +120,7 @@ fn deployed_best_scheme_computes_y_eq_ax() {
     let Some(rt) = runtime() else { return };
     let tmp = std::env::temp_dir().join("autogmap_it_deploy");
     let (cfg, opts) = qm7_config(&tmp, 1500);
-    let result = run_experiment(&rt, &cfg, &opts).unwrap();
+    let result = run_experiment(Some(&rt), &cfg, &opts).unwrap();
     let Some(best) = &result.best else {
         panic!("no complete-coverage scheme")
     };
@@ -155,7 +156,7 @@ fn dataset_prepare_rejects_mismatched_controller() {
         seed: 0,
         log_every: 0,
     };
-    let err = run_experiment(&rt, &cfg, &RunnerOptions::default());
+    let err = run_experiment(Some(&rt), &cfg, &RunnerOptions::default());
     assert!(err.is_err());
     let msg = format!("{:#}", err.err().unwrap());
     assert!(msg.contains("expects"), "unhelpful error: {msg}");

@@ -1,0 +1,207 @@
+//! End-to-end tests of the native training backend. Unlike the PJRT
+//! integration tests, nothing here needs `artifacts/` — this is the
+//! paper's training loop running on a fresh checkout.
+
+use autogmap::agent::{BackendKind, TrainOptions, Trainer};
+use autogmap::coordinator::config::{Dataset, ExperimentConfig};
+use autogmap::coordinator::metrics::read_csv;
+use autogmap::coordinator::runner::build_trainer;
+use autogmap::coordinator::{run_experiment, RunnerOptions};
+use autogmap::graph::GridSummary;
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::Manifest;
+use autogmap::scheme::{FillRule, RewardWeights};
+
+fn qm7_cfg(name: &str, epochs: usize, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        dataset: Dataset::Qm7 { seed: 5828 },
+        grid: 2,
+        reordering: Reordering::CuthillMckee,
+        controller: "qm7_dyn4".into(),
+        fill_rule: FillRule::Dynamic { grades: 4 },
+        reward_a: 0.8,
+        lr: 0.02,
+        ent_coef: 0.002,
+        baseline_decay: 0.95,
+        epochs,
+        seed,
+        log_every: 25,
+    }
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("autogmap_it_native_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn native_backend_trains_qm7_to_complete_coverage() {
+    // The acceptance run: `train --backend native` with no artifacts/
+    // present must reach a complete-coverage scheme cheaper than the
+    // monolithic crossbar, and the reward signal must actually improve.
+    let tmp = tmp_dir("e2e");
+    let cfg = qm7_cfg("nt_e2e", 1200, 5828);
+    let opts = RunnerOptions {
+        out_root: tmp.clone(),
+        backend: BackendKind::Native,
+        workers: 2,
+        keep_history: true,
+        ..Default::default()
+    };
+    let result = run_experiment(None, &cfg, &opts).unwrap();
+
+    let best = result.best.as_ref().expect("no complete-coverage scheme found");
+    assert_eq!(best.eval.coverage_ratio, 1.0);
+    assert!(
+        best.eval.area_ratio < 1.0,
+        "best complete-coverage area must shrink below the full block, got {}",
+        best.eval.area_ratio
+    );
+    best.scheme.validate(result.workload.grid.n).unwrap();
+
+    // learning signal: last-quarter mean reward above first-quarter
+    let h = &result.history;
+    assert_eq!(h.len(), cfg.epochs);
+    assert!(h.iter().all(|s| s.loss.is_finite() && s.mean_logp.is_finite()));
+    let q = h.len() / 4;
+    let early: f64 = h[..q].iter().map(|s| s.mean_reward).sum::<f64>() / q as f64;
+    let late: f64 = h[h.len() - q..].iter().map(|s| s.mean_reward).sum::<f64>() / q as f64;
+    assert!(
+        late > early,
+        "mean reward did not improve: {early:.4} -> {late:.4}"
+    );
+
+    // run artifacts written exactly like a PJRT run
+    let cols = read_csv(&result.run_dir.join("metrics.csv")).unwrap();
+    assert!(!cols[0].1.is_empty());
+    assert!(result.run_dir.join("summary.json").exists());
+}
+
+#[test]
+fn native_training_is_deterministic_across_worker_counts() {
+    let run = |workers: usize| {
+        let cfg = qm7_cfg("nt_det", 40, 7);
+        let opts = RunnerOptions {
+            out_root: tmp_dir(&format!("det_w{workers}")),
+            backend: BackendKind::Native,
+            workers,
+            keep_history: true,
+            ..Default::default()
+        };
+        run_experiment(None, &cfg, &opts).unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(b.history.iter()) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(x.mean_reward.to_bits(), y.mean_reward.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.max_reward.to_bits(), y.max_reward.to_bits());
+        assert_eq!(x.baseline.to_bits(), y.baseline.to_bits());
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.mean_logp.to_bits(), y.mean_logp.to_bits());
+    }
+    // and the tracked best solutions agree
+    assert_eq!(
+        a.best.as_ref().map(|s| s.scheme.clone()),
+        b.best.as_ref().map(|s| s.scheme.clone())
+    );
+}
+
+#[test]
+fn resume_from_checkpoint_matches_uninterrupted_run() {
+    let m = autogmap::graph::synth::qm7_like(5828);
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let grid = GridSummary::new(&r.matrix, 2);
+    let entry = Manifest::builtin().config("qm7_dyn4").unwrap().clone();
+    let topts = TrainOptions {
+        lr: 0.02,
+        ent_coef: 0.002,
+        weights: RewardWeights::new(0.8),
+        fill_rule: FillRule::Dynamic { grades: 4 },
+        seed: 11,
+        workers: 2,
+        ..Default::default()
+    };
+
+    // uninterrupted: 12 epochs
+    let mut a = Trainer::native(entry.clone(), topts).unwrap();
+    let mut stats_a = Vec::new();
+    for _ in 0..12 {
+        stats_a.push(a.epoch(&grid).unwrap());
+    }
+
+    // interrupted: 6 epochs, checkpoint, fresh trainer, restore, 6 more
+    let dir = tmp_dir("resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("checkpoint.json");
+    let mut b = Trainer::native(entry.clone(), topts).unwrap();
+    for _ in 0..6 {
+        b.epoch(&grid).unwrap();
+    }
+    b.save_checkpoint(&ck).unwrap();
+
+    let mut c = Trainer::native(entry, topts).unwrap();
+    c.restore(&ck).unwrap();
+    assert_eq!(c.epoch, 6);
+    let mut stats_c = Vec::new();
+    for _ in 0..6 {
+        stats_c.push(c.epoch(&grid).unwrap());
+    }
+
+    // epoch stats 6..12 must be identical to the uninterrupted run's
+    for (x, y) in stats_a[6..].iter().zip(stats_c.iter()) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(x.mean_reward.to_bits(), y.mean_reward.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.baseline.to_bits(), y.baseline.to_bits());
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        assert_eq!(x.mean_logp.to_bits(), y.mean_logp.to_bits());
+    }
+    assert_eq!(a.params().unwrap(), c.params().unwrap());
+}
+
+#[test]
+fn explicit_pjrt_without_artifacts_is_an_actionable_error() {
+    // both train and reproduce route through build_trainer, so this is
+    // the error every artifact-less `--backend pjrt` invocation hits
+    let rt = autogmap::runtime::Runtime::new("/nonexistent_autogmap_artifacts").unwrap();
+    let topts = TrainOptions {
+        fill_rule: FillRule::Dynamic { grades: 4 },
+        ..Default::default()
+    };
+    let err = build_trainer(Some(&rt), "qm7_dyn4", topts, BackendKind::Pjrt).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--backend native"), "unhelpful error: {msg}");
+    assert!(msg.contains("make artifacts"), "should mention the build path: {msg}");
+}
+
+#[test]
+fn native_handles_bilstm_and_diag_only_configs_end_to_end() {
+    let m = autogmap::graph::synth::qm7_like(5828);
+    let r = reorder(&m, Reordering::CuthillMckee);
+    let grid = GridSummary::new(&r.matrix, 2);
+    for (controller, rule) in [
+        ("qm7_diag", FillRule::None),
+        ("qm7_fill_bilstm", FillRule::Fixed { size: 2 }),
+        ("qm7_dyn6", FillRule::Dynamic { grades: 6 }),
+    ] {
+        let topts = TrainOptions {
+            lr: 0.02,
+            fill_rule: rule,
+            weights: RewardWeights::new(0.8),
+            seed: 3,
+            workers: 2,
+            ..Default::default()
+        };
+        let mut trainer = build_trainer(None, controller, topts, BackendKind::Native).unwrap();
+        for _ in 0..10 {
+            let s = trainer.epoch(&grid).unwrap();
+            assert!(s.loss.is_finite(), "{controller}");
+        }
+        let (scheme, eval) = trainer.greedy(&grid).unwrap();
+        scheme.validate(grid.n).unwrap();
+        assert!(eval.reward.is_finite());
+    }
+}
