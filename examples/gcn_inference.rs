@@ -8,12 +8,15 @@
 //!   crossbar tile placement → per-layer propagation with the switch
 //!   circuit (x'=Px in, y=Pᵀy' out, Eqs. 4-6)
 //!
-//! computed twice: through the host crossbar simulator AND through the AOT
-//! `mvm_qm7` artifact (the L1 Pallas block_mvm kernel via PJRT) — both are
-//! verified against the dense oracle, and latency/throughput + the
-//! crossbar cost model are reported.
+//! computed twice: through the host crossbar simulator AND — when an
+//! `artifacts/` directory exists — through the AOT `mvm_qm7` artifact (the
+//! L1 Pallas block_mvm kernel via PJRT). Both are verified against the
+//! dense oracle, and latency/throughput + the crossbar cost model are
+//! reported.
 //!
-//! Run: `make artifacts && cargo run --release --example gcn_inference`
+//! Run: `cargo run --release --example gcn_inference`
+//! (fresh checkout: trains on the native backend and skips the PJRT
+//! section; `make artifacts` enables the AOT path end-to-end)
 
 use autogmap::coordinator::config::{Dataset, ExperimentConfig};
 use autogmap::coordinator::{run_experiment, RunnerOptions};
@@ -89,7 +92,9 @@ fn main() -> anyhow::Result<()> {
     };
     // Â has the same off-diagonal pattern as A plus the diagonal, which the
     // diagonal blocks always cover — but train on Â's own grid to be exact.
-    let result = run_experiment(&rt, &cfg, &RunnerOptions::default())?;
+    // The default `auto` backend trains through PJRT when artifacts exist
+    // and on the pure-Rust native backend otherwise.
+    let result = run_experiment(Some(&rt), &cfg, &RunnerOptions::default())?;
     let mut best = result.best.expect("no complete-coverage scheme").scheme;
     // re-validate on Â's grid (self-loops only add diagonal cells)
     let eval = autogmap::scheme::evaluate(&best, &grid, cfg.weights());
@@ -145,7 +150,19 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(diff < 1e-6, "crossbar GCN diverged from dense oracle");
 
     // AOT Pallas-kernel path for one representative propagation column
-    let manifest = rt.manifest()?;
+    // (needs built artifacts; a fresh checkout stops at the verified
+    // crossbar-simulator path above)
+    let manifest = match rt.manifest() {
+        Ok(m) => m,
+        Err(_) => {
+            println!(
+                "\nno artifacts manifest — skipping the AOT block_mvm path \
+                 (run `make artifacts` to enable it)"
+            );
+            println!("\nend-to-end OK: scheme → tiles → switch circuit → GCN verified (host sim)");
+            return Ok(());
+        }
+    };
     let mv = manifest.mvm_entry("mvm_qm7")?;
     let col: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
     let xp = sw.forward(&col);

@@ -1,17 +1,21 @@
 //! Quickstart: the 60-second tour of the public API.
 //!
 //! Loads the QM7-5828-like molecule graph, Cuthill-McKee-reorders it,
-//! trains the LSTM+RL+Dynamic-fill agent for a few thousand epochs, and
-//! prints the best complete-coverage mapping scheme next to the baselines.
+//! trains the LSTM+RL+Dynamic-fill agent for a few thousand epochs on the
+//! pure-Rust native backend, and prints the best complete-coverage mapping
+//! scheme next to the baselines.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
+//! (no artifacts needed — the native backend trains on a fresh checkout;
+//! build `make artifacts` and the default `auto` backend switches to the
+//! AOT PJRT path instead)
 
+use autogmap::agent::BackendKind;
 use autogmap::baselines;
 use autogmap::coordinator::config::{Dataset, ExperimentConfig};
 use autogmap::coordinator::{run_experiment, RunnerOptions};
 use autogmap::graph::GridSummary;
 use autogmap::reorder::Reordering;
-use autogmap::runtime::Runtime;
 use autogmap::scheme::{evaluate, FillRule, RewardWeights};
 use autogmap::viz;
 
@@ -33,20 +37,21 @@ fn main() -> anyhow::Result<()> {
         log_every: 100,
     };
 
-    // 2. the runtime: AOT artifacts compiled once by `make artifacts`
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT: {}", rt.platform());
-
-    // 3. train (two PJRT calls per epoch: sample rollout + REINFORCE step)
-    let result = run_experiment(&rt, &cfg, &RunnerOptions::default())?;
+    // 2. train on the native backend: pure Rust (sampling rollouts, full
+    // BPTT, Adam) — no artifacts directory, no PJRT
+    let opts = RunnerOptions {
+        backend: BackendKind::Native,
+        ..Default::default()
+    };
+    let result = run_experiment(None, &cfg, &opts)?;
     println!(
-        "\ntrained {} epochs in {:.1}s ({:.0} epochs/s)",
+        "\ntrained {} epochs in {:.1}s ({:.0} epochs/s, native backend)",
         cfg.epochs,
         result.wall_seconds,
         cfg.epochs as f64 / result.wall_seconds
     );
 
-    // 4. inspect the best complete-coverage scheme
+    // 3. inspect the best complete-coverage scheme
     let grid = &result.workload.grid;
     let best = result.best.as_ref().expect("agent found no complete scheme");
     println!(
@@ -63,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         viz::ascii_scheme(&result.workload.reordered.matrix, grid, &best.scheme)
     );
 
-    // 5. compare with the static baselines on the same (reordered) matrix
+    // 4. compare with the static baselines on the same (reordered) matrix
     let w = RewardWeights::new(cfg.reward_a);
     let g1 = GridSummary::new(&result.workload.reordered.matrix, 1);
     for block in [4, 6, 8] {

@@ -1,0 +1,64 @@
+//! Bench: the hierarchical mapper pipeline on R-MAT graphs.
+//!
+//! Three rungs per scale, mirroring the pipeline's stages:
+//!   map_wW        — windowing + signatures + per-unique-window inference
+//!                   at W workers (the scheme cache's amortization)
+//!   compile       — per-window plan compilation + merge + spill extraction
+//!   composite_mvm — one exact y = Ax through the merged plan + spill
+
+use autogmap::agent::params::init_params;
+use autogmap::graph::{synth, GridSummary};
+use autogmap::mapper::{self, MapperConfig};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::Manifest;
+use autogmap::scheme::{FillRule, RewardWeights};
+use autogmap::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let entry = Manifest::builtin().config("qh882_dyn4").unwrap().clone();
+    let params = init_params(&entry, 1);
+    for (name, nodes, degree) in [("rmat_10k", 10_000usize, 6usize), ("rmat_30k", 30_000, 8)] {
+        let m = synth::rmat_like(nodes, 2 * (nodes * degree / 2), 42);
+        let r = reorder(&m, Reordering::ReverseCuthillMckee);
+        let g = GridSummary::new(&r.matrix, 32);
+        let cfg_for = |workers: usize| MapperConfig {
+            infer: mapper::InferContext {
+                entry: entry.clone(),
+                params: params.clone(),
+                fill_rule: FillRule::Dynamic { grades: 4 },
+                weights: RewardWeights::new(0.8),
+                rounds: 4,
+                seed: 7,
+            },
+            overlap: 4,
+            workers,
+        };
+        for workers in [1usize, 2, 8] {
+            let cfg = cfg_for(workers);
+            b.bench(&format!("map_w{workers}/{name}"), || {
+                black_box(mapper::map_graph(&g, &cfg).unwrap())
+            });
+        }
+        let (comp, report) = mapper::map_graph(&g, &cfg_for(8)).unwrap();
+        println!(
+            "{name}: {} windows, {} unique, cache hit rate {:.1}%",
+            report.windows,
+            report.unique_windows,
+            report.cache_hit_rate * 100.0
+        );
+        b.bench(&format!("compile/{name}"), || {
+            black_box(mapper::compile_composite(&r.matrix, &g, &comp).unwrap())
+        });
+        let cplan = mapper::compile_composite(&r.matrix, &g, &comp).unwrap();
+        let x: Vec<f64> = (0..g.dim).map(|i| (i as f64 * 0.1).sin()).collect();
+        b.bench(
+            &format!(
+                "composite_mvm/{name} ({} tiles + {} spill nnz)",
+                cplan.plan.tiles.len(),
+                cplan.spilled_nnz()
+            ),
+            || black_box(cplan.mvm(&x)),
+        );
+    }
+}

@@ -69,6 +69,32 @@ impl ParamLayout {
 /// consumer of the run seed.
 const ROLLOUT_STREAM: u64 = 0x6e61_7469_7665_0001; // "native"
 
+/// Batch inference entry point on the native backend: sample
+/// `rounds × entry.batch` episodes for the given PRNG key plus one greedy
+/// decode, with no Trainer, optimizer, or worker pool attached — the
+/// caller (the [`crate::mapper`] pipeline) parallelizes across *windows*
+/// instead of across episodes, so this stays a pure function of
+/// `(entry, params, key, rounds)` and is safe to run concurrently from
+/// many threads. Episode RNG streams are derived exactly like
+/// [`NativeBackend::sample_batch`]'s, so results are reproducible and
+/// independent of the calling thread.
+pub fn infer_episodes(
+    entry: &ControllerEntry,
+    params: &crate::agent::params::Params,
+    key: [u32; 2],
+    rounds: usize,
+) -> Vec<crate::agent::lstm::Episode> {
+    let mut root = Pcg64::new(((key[0] as u64) << 32) | key[1] as u64, ROLLOUT_STREAM);
+    let mut episodes = Vec::with_capacity(rounds * entry.batch + 1);
+    for _ in 0..rounds * entry.batch {
+        let (seed, stream) = (root.next_u64(), root.next_u64());
+        let mut rng = Pcg64::new(seed, stream);
+        episodes.push(forward(entry, params, Select::Sample(&mut rng)));
+    }
+    episodes.push(forward(entry, params, Select::Greedy));
+    episodes
+}
+
 /// The pure-Rust [`TrainBackend`].
 pub struct NativeBackend {
     entry: Arc<ControllerEntry>,
@@ -258,6 +284,36 @@ mod tests {
                 assert_eq!(ra.f_all, rb.f_all);
             }
         }
+    }
+
+    #[test]
+    fn infer_episodes_is_deterministic_and_matches_sample_batch() {
+        let entry = small_entry(4, false);
+        let params = crate::agent::params::init_params(&entry, 11);
+        let a = infer_episodes(&entry, &params, [3, 4], 2);
+        let b = infer_episodes(&entry, &params, [3, 4], 2);
+        assert_eq!(a.len(), 2 * entry.batch + 1);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.d_actions, y.d_actions);
+            assert_eq!(x.f_actions, y.f_actions);
+        }
+        // the first `batch` episodes reproduce sample_batch's first batch
+        // for the same key (same stream derivation)
+        let be = NativeBackend::new(entry.clone(), 11, 2);
+        let rb = be.sample_batch([3, 4]);
+        let t = entry.steps;
+        for (i, ep) in a.iter().take(entry.batch).enumerate() {
+            assert_eq!(&ep.d_actions[..], &rb.d_all[i * t..(i + 1) * t]);
+        }
+        // last episode is the greedy decode
+        let greedy = mirror_forward(&entry, &params, Select::Greedy);
+        assert_eq!(a.last().unwrap().d_actions, greedy.d_actions);
+        // different keys sample differently
+        let c = infer_episodes(&entry, &params, [3, 5], 2);
+        assert_ne!(
+            a.iter().map(|e| e.d_actions.clone()).collect::<Vec<_>>(),
+            c.iter().map(|e| e.d_actions.clone()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

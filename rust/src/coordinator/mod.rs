@@ -3,9 +3,11 @@
 
 pub mod config;
 pub mod dataset;
+pub mod maplarge;
 pub mod metrics;
 pub mod reproduce;
 pub mod runner;
 
 pub use config::{Dataset, ExperimentConfig};
+pub use maplarge::{run_map_large, MapLargeOptions};
 pub use runner::{build_trainer, default_workers, run_experiment, RunResult, RunnerOptions};

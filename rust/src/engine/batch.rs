@@ -19,16 +19,35 @@ use super::plan::ExecPlan;
 use crate::util::pool::WorkerPool;
 use std::sync::{Arc, Mutex};
 
+/// Anything the batch executor can serve: a compiled plan with a known
+/// input dimension and an in-place MVM. [`ExecPlan`] is the engine's own
+/// shape; the mapper's `CompositePlan` (merged window plans + digital
+/// spill) implements it too, so both serve through one executor.
+pub trait ServablePlan: Send + Sync + 'static {
+    fn dim(&self) -> usize;
+    fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>);
+}
+
+impl ServablePlan for ExecPlan {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        ExecPlan::mvm_into(self, x, y)
+    }
+}
+
 /// Thread-pool executor bound to one plan.
-pub struct BatchExecutor {
-    plan: Arc<ExecPlan>,
+pub struct BatchExecutor<P: ServablePlan = ExecPlan> {
+    plan: Arc<P>,
     pool: WorkerPool,
     buffers: Arc<Mutex<Vec<Vec<f64>>>>,
 }
 
-impl BatchExecutor {
+impl<P: ServablePlan> BatchExecutor<P> {
     /// Spawn `workers` worker threads serving requests against `plan`.
-    pub fn new(plan: Arc<ExecPlan>, workers: usize) -> BatchExecutor {
+    pub fn new(plan: Arc<P>, workers: usize) -> BatchExecutor<P> {
         BatchExecutor {
             plan,
             pool: WorkerPool::new(workers),
@@ -40,7 +59,7 @@ impl BatchExecutor {
         self.pool.workers()
     }
 
-    pub fn plan(&self) -> &ExecPlan {
+    pub fn plan(&self) -> &P {
         &self.plan
     }
 
@@ -53,10 +72,10 @@ impl BatchExecutor {
         for (i, x) in xs.iter().enumerate() {
             assert_eq!(
                 x.len(),
-                self.plan.dim,
+                self.plan.dim(),
                 "request {i} has {} elements, plan expects {}",
                 x.len(),
-                self.plan.dim
+                self.plan.dim()
             );
         }
         let xs = Arc::new(xs);

@@ -2,8 +2,14 @@
 //!
 //! The paper ends where a scheme is chosen; this subsystem is the layer
 //! between mapping and measurement that *executes* schemes at scale. The
-//! flow is **plan → fleet → batch**:
+//! flow is **(mapper →) plan → fleet → batch**:
 //!
+//! 0. **[`crate::mapper`]** (optional front stage) — for matrices far
+//!    beyond the controller's native grid, the hierarchical mapper windows
+//!    the matrix, infers one scheme per window, and stitches them into a
+//!    [`crate::scheme::CompositeScheme`]; each window then compiles to its
+//!    own plan ([`compile_rects`]) and the plans merge ([`merge_plans`])
+//!    into one fleet-servable schedule with cross-window program dedup.
 //! 1. **[`plan`]** — compile `Scheme + Csr + GridSummary` into an
 //!    [`ExecPlan`]: a flat tile schedule with all-zero tiles elided,
 //!    identical tile programmings deduplicated, per-tile clipped extents,
@@ -17,17 +23,19 @@
 //!    output buffers, bit-identical to the
 //!    [`crate::crossbar::CrossbarArray::mvm`] oracle.
 //!
-//! The `serve-bench` CLI subcommand drives all three against synthetic
+//! The `serve-bench` CLI subcommand drives stages 1–3 against synthetic
 //! request traces (this module's [`synth_trace`]) and reports throughput,
-//! latency percentiles, and the zero-tile elision ratio.
+//! latency percentiles, and the zero-tile elision ratio; `map-large`
+//! drives the whole pipeline from a 100k-node graph down to served
+//! traffic (`BENCH_mapper.json`).
 
 pub mod batch;
 pub mod fleet;
 pub mod plan;
 
-pub use batch::BatchExecutor;
+pub use batch::{BatchExecutor, ServablePlan};
 pub use fleet::{AssignPolicy, BankLoad, Fleet};
-pub use plan::{compile, ExecPlan, TileSpec};
+pub use plan::{compile, compile_rects, merge_plans, ExecPlan, TileSpec};
 
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};

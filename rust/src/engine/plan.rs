@@ -24,7 +24,7 @@
 //! so elision only removes exact zeros from the sums.
 
 use crate::graph::{Csr, GridSummary};
-use crate::scheme::Scheme;
+use crate::scheme::{GridRect, Scheme};
 use crate::util::json::{num_arr, obj, Json};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
@@ -68,20 +68,35 @@ pub struct ExecPlan {
 /// Tile traversal order matches [`crate::crossbar::place`] exactly, so a
 /// plan's MVM reproduces the oracle's accumulation order bit for bit.
 pub fn compile(m: &Csr, g: &GridSummary, scheme: &Scheme) -> Result<ExecPlan> {
+    scheme
+        .validate(g.n)
+        .map_err(|e| anyhow!("cannot compile invalid scheme: {e}"))?;
+    compile_rects(m, g, &scheme.rects())
+}
+
+/// Compile an explicit (disjoint) rectangle schedule in grid coordinates —
+/// the generalized core of [`compile`]. The mapper's composite mappings
+/// produce clipped rectangles that are not expressible as one diagonal+fill
+/// scheme; this entry point compiles them directly. Callers are responsible
+/// for rectangle disjointness (overlapping rects would double-count nnz in
+/// the MVM).
+pub fn compile_rects(m: &Csr, g: &GridSummary, rects: &[GridRect]) -> Result<ExecPlan> {
     ensure!(
         m.rows == g.dim && m.cols == g.dim,
         "matrix/grid dimension mismatch"
     );
-    scheme
-        .validate(g.n)
-        .map_err(|e| anyhow!("cannot compile invalid scheme: {e}"))?;
     let k = g.grid;
     let mut tiles = Vec::new();
     let mut programs: Vec<Vec<f32>> = Vec::new();
     let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
     let mut scheduled = 0usize;
     let mut elided = 0usize;
-    for rect in scheme.rects() {
+    for rect in rects {
+        ensure!(
+            rect.r1 <= g.n && rect.c1 <= g.n,
+            "rect {rect:?} exceeds the {}-cell grid",
+            g.n
+        );
         for gr in rect.r0..rect.r1 {
             for gc in rect.c0..rect.c1 {
                 let row0 = gr * k;
@@ -130,6 +145,79 @@ pub fn compile(m: &Csr, g: &GridSummary, scheme: &Scheme) -> Result<ExecPlan> {
     Ok(ExecPlan {
         k,
         dim: g.dim,
+        tiles,
+        programs,
+        scheduled_tiles: scheduled,
+        elided_tiles: elided,
+    })
+}
+
+/// Merge several plans over the *same* matrix into one flat schedule — the
+/// multi-plan path the mapper uses: each window of a composite mapping
+/// compiles to its own [`ExecPlan`], and the merged plan is what a
+/// [`super::fleet::Fleet`] distributes and a
+/// [`super::batch::BatchExecutor`] serves. Tiles concatenate in part
+/// order (so accumulation order is the parts' order), and bit-identical
+/// programmings are re-deduplicated *across* parts — repeated window
+/// sparsity patterns share one program buffer fleet-wide.
+pub fn merge_plans(parts: &[ExecPlan]) -> Result<ExecPlan> {
+    ensure!(!parts.is_empty(), "cannot merge zero plans");
+    let k = parts[0].k;
+    let dim = parts[0].dim;
+    let mut tiles = Vec::new();
+    let mut programs: Vec<Vec<f32>> = Vec::new();
+    let mut dedup: HashMap<Vec<u32>, usize> = HashMap::new();
+    let mut scheduled = 0usize;
+    let mut elided = 0usize;
+    for (i, p) in parts.iter().enumerate() {
+        ensure!(
+            p.k == k && p.dim == dim,
+            "part {i} is {}x{} tiles over a {}-unit matrix; expected k={k}, dim={dim}",
+            p.k,
+            p.k,
+            p.dim
+        );
+        scheduled += p.scheduled_tiles;
+        elided += p.elided_tiles;
+        // dedup each part-program once (keyed by extents + bit pattern,
+        // taken from its first referencing tile — all tiles sharing a
+        // program share extents, that is what the part's compile deduped
+        // on), then remap tiles in O(1) each
+        let mut remap: Vec<Option<usize>> = vec![None; p.programs.len()];
+        for t in &p.tiles {
+            let program = match remap[t.program] {
+                Some(id) => id,
+                None => {
+                    let data = &p.programs[t.program];
+                    let mut key = Vec::with_capacity(data.len() + 2);
+                    key.push(t.rows as u32);
+                    key.push(t.cols as u32);
+                    key.extend(data.iter().map(|v| v.to_bits()));
+                    let id = match dedup.get(&key) {
+                        Some(&id) => id,
+                        None => {
+                            let id = programs.len();
+                            programs.push(data.clone());
+                            dedup.insert(key, id);
+                            id
+                        }
+                    };
+                    remap[t.program] = Some(id);
+                    id
+                }
+            };
+            tiles.push(TileSpec {
+                row0: t.row0,
+                col0: t.col0,
+                rows: t.rows,
+                cols: t.cols,
+                program,
+            });
+        }
+    }
+    Ok(ExecPlan {
+        k,
+        dim,
         tiles,
         programs,
         scheduled_tiles: scheduled,
@@ -478,6 +566,56 @@ mod tests {
             let doc = Json::parse(text).unwrap();
             assert!(ExecPlan::from_json(&doc).is_err(), "should reject {text}");
         }
+    }
+
+    #[test]
+    fn compile_rects_matches_compile_on_schemes() {
+        let (m, g) = qh882_setup();
+        let scheme = parse_actions(
+            g.n,
+            &vec![0u8; g.n - 1],
+            &vec![1usize; g.n - 1],
+            FillRule::Fixed { size: 1 },
+        );
+        let a = compile(&m, &g, &scheme).unwrap();
+        let b = compile_rects(&m, &g, &scheme.rects()).unwrap();
+        assert_eq!(a, b);
+        // out-of-grid rects are rejected
+        let bad = [crate::scheme::GridRect { r0: 0, r1: g.n + 1, c0: 0, c1: 1 }];
+        assert!(compile_rects(&m, &g, &bad).is_err());
+    }
+
+    #[test]
+    fn merge_plans_concatenates_and_dedups() {
+        let (m, g) = qh882_setup();
+        // two disjoint halves of the unit-block diagonal, merged, must equal
+        // the plan compiled from the whole diagonal at once
+        let half = g.n / 2;
+        let lo: Vec<crate::scheme::GridRect> =
+            (0..half).map(|i| crate::scheme::GridRect::square(i, 1)).collect();
+        let hi: Vec<crate::scheme::GridRect> =
+            (half..g.n).map(|i| crate::scheme::GridRect::square(i, 1)).collect();
+        let p_lo = compile_rects(&m, &g, &lo).unwrap();
+        let p_hi = compile_rects(&m, &g, &hi).unwrap();
+        let merged = merge_plans(&[p_lo.clone(), p_hi.clone()]).unwrap();
+        let whole = compile_rects(
+            &m,
+            &g,
+            &(0..g.n).map(|i| crate::scheme::GridRect::square(i, 1)).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        assert_eq!(merged.tiles.len(), whole.tiles.len());
+        assert_eq!(merged.scheduled_tiles, whole.scheduled_tiles);
+        assert_eq!(merged.elided_tiles, whole.elided_tiles);
+        assert_eq!(merged.programs.len(), whole.programs.len(), "cross-part dedup");
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
+        assert_eq!(merged.mvm(&x), whole.mvm(&x));
+        // dimension mismatches are rejected
+        let sub = synth::qm7_like(5828);
+        let gs = GridSummary::new(&sub, 2);
+        let tiny = compile_rects(&sub, &gs, &[crate::scheme::GridRect::square(0, 1)]).unwrap();
+        assert!(merge_plans(&[p_lo, tiny]).is_err());
+        assert!(merge_plans(&[]).is_err());
     }
 
     #[test]

@@ -29,6 +29,21 @@ pub struct GridSummary {
     pub last_cell: usize,
 }
 
+/// Inclusion-style 2-D prefix sums over row-major n×n cell counts:
+/// out[i][j] = Σ cells in rows [0,i) × cols [0,j), shape (n+1)×(n+1).
+fn prefix_sums(cell_nnz: &[u32], n: usize) -> Vec<u64> {
+    let mut pre = vec![0u64; (n + 1) * (n + 1)];
+    for i in 0..n {
+        for j in 0..n {
+            pre[(i + 1) * (n + 1) + (j + 1)] = cell_nnz[i * n + j] as u64
+                + pre[i * (n + 1) + (j + 1)]
+                + pre[(i + 1) * (n + 1) + j]
+                - pre[i * (n + 1) + j];
+        }
+    }
+    pre
+}
+
 impl GridSummary {
     pub fn new(m: &Csr, grid: usize) -> GridSummary {
         assert_eq!(m.rows, m.cols, "grid summary expects a square matrix");
@@ -42,15 +57,7 @@ impl GridSummary {
                 cell_nnz[gr * n + c / grid] += 1;
             }
         }
-        let mut pre = vec![0u64; (n + 1) * (n + 1)];
-        for i in 0..n {
-            for j in 0..n {
-                pre[(i + 1) * (n + 1) + (j + 1)] = cell_nnz[i * n + j] as u64
-                    + pre[i * (n + 1) + (j + 1)]
-                    + pre[(i + 1) * (n + 1) + j]
-                    - pre[i * (n + 1) + j];
-            }
-        }
+        let pre = prefix_sums(&cell_nnz, n);
         GridSummary {
             dim,
             grid,
@@ -95,6 +102,35 @@ impl GridSummary {
         let h = self.span_units(r0, r1.saturating_sub(r0)) as u64;
         let w = self.span_units(c0, c1.saturating_sub(c0)) as u64;
         h * w
+    }
+
+    /// Grid summary of the diagonal window covering grid cells
+    /// [g0, g0+len)² — what the mapper's per-window controller sees. Built
+    /// from the already-aggregated cell counts (no submatrix extraction),
+    /// it is identical to `GridSummary::new` on the extracted sub-block:
+    /// window starts are grid-aligned, so cells map one-to-one, and the
+    /// trailing cell is truncated only when the window touches the matrix
+    /// edge.
+    pub fn window(&self, g0: usize, len: usize) -> GridSummary {
+        assert!(len >= 1 && g0 + len <= self.n, "window exceeds the grid");
+        let dim = self.span_units(g0, len);
+        let mut cell_nnz = vec![0u32; len * len];
+        for i in 0..len {
+            for j in 0..len {
+                cell_nnz[i * len + j] = self.cell_nnz[(g0 + i) * self.n + (g0 + j)];
+            }
+        }
+        let pre = prefix_sums(&cell_nnz, len);
+        let total_nnz = pre[len * (len + 1) + len] as usize;
+        GridSummary {
+            dim,
+            grid: self.grid,
+            n: len,
+            cell_nnz,
+            pre,
+            total_nnz,
+            last_cell: dim - (len - 1) * self.grid,
+        }
     }
 }
 
@@ -168,6 +204,36 @@ mod tests {
         assert_eq!(g.span_units(27, 1), 882 - 27 * 32); // = 18
         assert_eq!(g.span_units(26, 2), 882 - 26 * 32); // truncated run = 50
         assert_eq!(g.block_area(27, 1), 18 * 18);
+    }
+
+    #[test]
+    fn window_matches_full_summary() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let m = random_sym(&mut rng, 70, 150); // 70 = 8*8 + 6: truncated edge
+        let g = GridSummary::new(&m, 8);
+        assert_eq!(g.n, 9);
+        for (g0, len) in [(0usize, 3usize), (2, 4), (5, 4), (0, 9)] {
+            let w = g.window(g0, len);
+            assert_eq!(w.n, len);
+            assert_eq!(w.grid, 8);
+            assert_eq!(w.dim, g.span_units(g0, len));
+            assert_eq!(
+                w.total_nnz as u64,
+                g.nnz_rect(g0, g0 + len, g0, g0 + len),
+                "window ({g0},{len}) total"
+            );
+            // every sub-rectangle agrees with the full summary
+            for r0 in 0..=len {
+                for r1 in r0..=len {
+                    assert_eq!(
+                        w.nnz_rect(r0, r1, 0, len),
+                        g.nnz_rect(g0 + r0, g0 + r1, g0, g0 + len)
+                    );
+                }
+            }
+            // areas agree too (trailing truncation included)
+            assert_eq!(w.block_area(len - 1, 1), g.block_area(g0 + len - 1, 1));
+        }
     }
 
     #[test]

@@ -43,6 +43,14 @@ pub fn storage_cost(m: &Csr, value_bytes: u64) -> StorageCost {
     }
 }
 
+/// COO byte cost of holding `nnz` spilled entries of a `dim`-dimensional
+/// matrix digitally — the composite mapper's off-window remainder
+/// ([`crate::scheme::CompositeScheme`]) uses the same per-entry pricing as
+/// [`storage_cost`].
+pub fn coo_spill_bytes(nnz: u64, dim: usize, value_bytes: u64) -> u64 {
+    nnz * (2 * idx_bytes(dim) + value_bytes)
+}
+
 /// Non-zeros NOT covered by `scheme` (the digital-spill set for a
 /// partial-coverage mapping), counted via the grid summary.
 pub fn uncovered_nnz(scheme: &Scheme, g: &GridSummary) -> u64 {
@@ -90,6 +98,16 @@ mod tests {
     fn index_width_switches_at_u16_boundary() {
         assert_eq!(idx_bytes(65_535), 2);
         assert_eq!(idx_bytes(65_536), 4);
+    }
+
+    #[test]
+    fn spill_bytes_match_coo_pricing() {
+        // 16-bit indices below 64k nodes, 32-bit above; f32 values
+        assert_eq!(coo_spill_bytes(10, 1000, 4), 10 * 8);
+        assert_eq!(coo_spill_bytes(10, 100_000, 4), 10 * 12);
+        let m = synth::qh882_like(882);
+        let c = storage_cost(&m, 4);
+        assert_eq!(coo_spill_bytes(m.nnz() as u64, 882, 4), c.coo_bytes);
     }
 
     #[test]

@@ -213,6 +213,68 @@ pub fn power_law(dim: usize, edges_per_node: usize, seed: u64) -> Csr {
     coo.to_csr()
 }
 
+/// Deterministic R-MAT-style generator (Chakrabarti et al.) for the
+/// large-scale power-law graphs the mapper pipeline targets: each edge is
+/// drawn by recursive quadrant descent with the classic skewed
+/// probabilities (a, b, c, d) = (0.57, 0.19, 0.19, 0.05), then
+/// symmetrized. No self-loops, exactly `target_nnz` non-zeros
+/// (`target_nnz` must be even — entries come in (u,v)/(v,u) pairs), fully
+/// reproducible from the seed. Intended for sparse regimes
+/// (`target_nnz ≪ n²`); the duplicate-rejection loop asserts if asked to
+/// fill a near-dense quadrant the skew cannot reach.
+pub fn rmat_like(n: usize, target_nnz: usize, seed: u64) -> Csr {
+    assert!(n >= 2, "rmat_like needs at least 2 nodes");
+    assert!(target_nnz % 2 == 0, "symmetric nnz must be even");
+    let edges = target_nnz / 2;
+    assert!(
+        edges <= n * (n - 1) / 2,
+        "cannot place {edges} undirected edges in a simple graph on {n} nodes"
+    );
+    // bits needed to index [0, n): descend one quadrant level per bit
+    let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x726d_6174_0000_0001); // "rmat"
+    let mut have = std::collections::HashSet::with_capacity(edges * 2);
+    let mut coo = Coo::new(n, n);
+    let mut placed = 0usize;
+    let mut guard = 0usize;
+    while placed < edges {
+        guard += 1;
+        assert!(
+            guard < 400 * edges + 10_000,
+            "rmat generator stalled ({placed}/{edges} edges placed) — \
+             target_nnz is too dense for the R-MAT skew"
+        );
+        let (mut r, mut c) = (0usize, 0usize);
+        for _ in 0..levels {
+            r <<= 1;
+            c <<= 1;
+            let u = rng.f64();
+            if u < 0.57 {
+                // top-left quadrant: both bits stay 0
+            } else if u < 0.76 {
+                c |= 1;
+            } else if u < 0.95 {
+                r |= 1;
+            } else {
+                r |= 1;
+                c |= 1;
+            }
+        }
+        if r >= n || c >= n || r == c {
+            continue; // out of the non-power-of-two range, or a self-loop
+        }
+        let key = (r.min(c) as u64) * n as u64 + r.max(c) as u64;
+        if !have.insert(key) {
+            continue; // duplicate edge
+        }
+        coo.push_sym(r, c, 1.0);
+        placed += 1;
+    }
+    let m = coo.to_csr();
+    debug_assert_eq!(m.nnz(), target_nnz);
+    m
+}
+
 /// Batch-graphs super-matrix: block-diagonal integration of several graphs
 /// ("the adjacency matrices are usually integrated into a large-scale
 /// super-matrix, with only the sub-graphs being internally connected").
@@ -297,6 +359,40 @@ mod tests {
         let max_deg = (0..m.rows).map(|r| m.degree(r)).max().unwrap();
         let mean_deg = m.nnz() as f64 / m.rows as f64;
         assert!(max_deg as f64 > 3.0 * mean_deg, "max {max_deg}, mean {mean_deg}");
+    }
+
+    #[test]
+    fn rmat_like_stats_and_determinism() {
+        let m = rmat_like(2000, 16_000, 7);
+        assert_eq!(m.rows, 2000);
+        assert_eq!(m.nnz(), 16_000);
+        assert!(m.is_symmetric());
+        for i in 0..m.rows {
+            assert_eq!(m.get(i, i), 0.0, "no self-loops");
+        }
+        assert_eq!(m.to_dense(), rmat_like(2000, 16_000, 7).to_dense());
+        assert_ne!(m.to_dense(), rmat_like(2000, 16_000, 8).to_dense());
+    }
+
+    #[test]
+    fn rmat_like_has_power_law_tail() {
+        let m = rmat_like(1500, 12_000, 3);
+        let max_deg = (0..m.rows).map(|r| m.degree(r)).max().unwrap();
+        let mean_deg = m.nnz() as f64 / m.rows as f64;
+        assert!(
+            max_deg as f64 > 4.0 * mean_deg,
+            "R-MAT skew should make hubs: max {max_deg}, mean {mean_deg}"
+        );
+    }
+
+    #[test]
+    fn rmat_like_non_power_of_two_dims() {
+        // 100 is not a power of two: out-of-range draws are rejected, the
+        // edge budget is still met exactly
+        let m = rmat_like(100, 600, 1);
+        assert_eq!(m.rows, 100);
+        assert_eq!(m.nnz(), 600);
+        assert!(m.is_symmetric());
     }
 
     #[test]

@@ -47,6 +47,20 @@
 //! [`crossbar::CrossbarArray::mvm`] oracle. The `serve-bench` CLI
 //! subcommand replays synthetic request traces against the engine and
 //! emits machine-readable throughput/latency reports (`BENCH_engine.json`).
+//!
+//! ## Large-scale mapping
+//!
+//! The [`mapper`] subsystem scales the method past the controller's
+//! native grid (the paper tops out at qh1484): RCM-reorder, slice the
+//! banded matrix into overlapping controller-sized windows, run
+//! trained-controller inference per *unique* window occupancy signature
+//! in parallel (scheme cache — repeated sparsity patterns are mapped
+//! once), stitch the per-window schemes into a validated
+//! [`scheme::CompositeScheme`] with off-window nnz accounted as digital
+//! spill, compile each window to an [`engine::ExecPlan`], and merge the
+//! plans into one fleet-servable schedule. The `map-large` CLI subcommand
+//! drives a 100k-node R-MAT graph end-to-end and emits
+//! `BENCH_mapper.json`.
 
 pub mod agent;
 pub mod baselines;
@@ -55,6 +69,7 @@ pub mod crossbar;
 pub mod engine;
 pub mod gcn;
 pub mod graph;
+pub mod mapper;
 pub mod reorder;
 pub mod runtime;
 pub mod scheme;

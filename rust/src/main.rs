@@ -12,6 +12,9 @@
 //!                request trace against the engine (throughput, p50/p99)
 //!   train-bench — native-backend training throughput at 1/2/8 workers
 //!                (BENCH_train.json, the training analogue of serve-bench)
+//!   map-large  — hierarchical mapper pipeline: R-MAT graph → RCM →
+//!                windowed controller inference (scheme cache) → composite
+//!                plan → fleet-sharded serving (BENCH_mapper.json)
 //!
 //! Every training command takes `--backend {native,pjrt,auto}`: `native`
 //! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
@@ -53,6 +56,11 @@ USAGE: autogmap <subcommand> [options]
   train-bench [--dataset qm7|qh882|qh1484 --controller NAME --fill kind
              --fill-arg N --epochs N --seed N]
              [--bench-json BENCH_train.json]
+  map-large  [--nodes N] [--degree N] [--grid N] [--controller NAME]
+             [--overlap N] [--rounds N] [--workers N] [--banks N]
+             [--requests N] [--batch N] [--seed N]
+             [--epochs N | --checkpoint ck.json]
+             [--bench-json BENCH_mapper.json]
 
   global: --artifacts DIR (default: artifacts)
 
@@ -78,6 +86,19 @@ USAGE: autogmap <subcommand> [options]
         --bench-json BENCH_train.json
   times native epochs/sec and rollout episodes/sec at 1, 2, and 8 workers
   so the training perf trajectory is tracked like the engine's.
+
+  map-large example (fresh checkout, no artifacts):
+    autogmap map-large --nodes 100000 --workers 8
+  synthesizes a 100k-node R-MAT graph, RCM-reorders it, slices the banded
+  matrix into overlapping controller-sized windows, runs native-backend
+  controller inference once per unique window sparsity signature (the
+  scheme cache dedups repeated patterns), stitches a globally validated
+  composite mapping (off-window nnz spills to digital COO storage),
+  compiles per-window plans merged across an 8-bank fleet, serves a
+  synthetic trace, and writes BENCH_mapper.json with mapped nnz/s at
+  1/2/8 workers, the global area ratio vs. the fixed-block baseline at
+  the same window size, and the cache hit rate. Add --epochs N to warm up
+  the controller with REINFORCE on the densest window first.
 ";
 
 fn main() {
@@ -98,7 +119,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "reward-a", "lr", "ent-coef", "epochs", "seed", "out", "checkpoint-every",
         "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
         "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
-        "requests", "trace-seed", "bench-json", "backend",
+        "requests", "trace-seed", "bench-json", "backend", "nodes", "degree", "overlap",
+        "rounds",
     ];
     let flag_opts = ["verbose", "help"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -119,6 +141,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "info" => cmd_info(&artifacts),
         "serve-bench" => cmd_serve_bench(&args),
         "train-bench" => cmd_train_bench(&args),
+        "map-large" => cmd_map_large(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -397,6 +420,60 @@ fn cmd_train_bench(args: &Args) -> anyhow::Result<()> {
     )?;
     println!("wrote {out}");
     Ok(())
+}
+
+/// `map-large`: the hierarchical mapper pipeline end-to-end — see
+/// [`autogmap::coordinator::maplarge`] for the driver.
+fn cmd_map_large(args: &Args) -> anyhow::Result<()> {
+    use autogmap::coordinator::MapLargeOptions;
+    let defaults = MapLargeOptions::default();
+    let opts = MapLargeOptions {
+        nodes: args.get_usize("nodes").map_err(anyhow::Error::msg)?.unwrap_or(defaults.nodes),
+        degree: args
+            .get_usize("degree")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.degree)
+            .max(1),
+        grid: args
+            .get_usize("grid")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.grid)
+            .max(1),
+        seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(defaults.seed),
+        controller: args.get_or("controller", &defaults.controller).to_string(),
+        overlap: args
+            .get_usize("overlap")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.overlap),
+        rounds: args
+            .get_usize("rounds")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.rounds),
+        workers: args
+            .get_usize("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.workers)
+            .max(1),
+        banks: args
+            .get_usize("banks")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.banks)
+            .max(1),
+        requests: args
+            .get_usize("requests")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.requests)
+            .max(1),
+        batch: args
+            .get_usize("batch")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.batch)
+            .max(1),
+        epochs: args.get_usize("epochs").map_err(anyhow::Error::msg)?.unwrap_or(0),
+        checkpoint: args.get("checkpoint").map(PathBuf::from),
+        bench_json: PathBuf::from(args.get_or("bench-json", "BENCH_mapper.json")),
+    };
+    autogmap::coordinator::run_map_large(&opts)
 }
 
 fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,198 @@
+//! Scheme cache keyed by a window's grid-occupancy signature.
+//!
+//! At 0.99+ sparsity most controller-sized windows of a banded matrix
+//! carry one of a handful of occupancy patterns (empty, pure-diagonal,
+//! narrow band, …), and everything the per-window mapper decides —
+//! complete-coverage feasibility, block geometry, area — depends only on
+//! *which* cells are occupied, never on the exact counts. Interning
+//! windows by their occupancy bitset therefore lets repeated patterns be
+//! mapped once: the mapper runs inference per *unique* signature and every
+//! other window is a cache hit. The full bitset is stored next to its FNV
+//! hash, so hash collisions degrade to a comparison, never to a wrong
+//! scheme.
+
+use crate::graph::GridSummary;
+use crate::scheme::Scheme;
+use std::collections::HashMap;
+
+/// A window's content signature: occupancy bitset + geometry, pre-hashed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Signature {
+    /// FNV-1a of the words below (cheap map key)
+    pub hash: u64,
+    /// n, dim (truncation), then the occupancy bitset words
+    words: Vec<u64>,
+}
+
+/// Occupancy signature of a window grid: one bit per cell (row-major),
+/// plus the cell count and matrix-unit dim so trailing-cell truncation
+/// distinguishes otherwise identical patterns.
+pub fn signature(local: &GridSummary) -> Signature {
+    let n = local.n;
+    let mut words = Vec::with_capacity(2 + (n * n).div_ceil(64));
+    words.push(n as u64);
+    words.push(local.dim as u64);
+    let mut acc = 0u64;
+    let mut bits = 0u32;
+    for &c in &local.cell_nnz {
+        acc = (acc << 1) | u64::from(c > 0);
+        bits += 1;
+        if bits == 64 {
+            words.push(acc);
+            acc = 0;
+            bits = 0;
+        }
+    }
+    if bits > 0 {
+        words.push(acc);
+    }
+    // FNV-1a over the words
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    for w in &words {
+        for b in w.to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    Signature { hash, words }
+}
+
+/// Intern-style cache: windows intern their signature (recording hit or
+/// miss), the mapper runs inference once per missed entry, and every
+/// window then reads its scheme back by entry id.
+#[derive(Default)]
+pub struct SchemeCache {
+    entries: Vec<(Signature, Option<Scheme>)>,
+    index: HashMap<u64, Vec<usize>>, // hash -> entry ids (collision chain)
+    hits: usize,
+    misses: usize,
+}
+
+impl SchemeCache {
+    pub fn new() -> SchemeCache {
+        SchemeCache::default()
+    }
+
+    /// Intern a signature; returns `(entry_id, was_hit)`.
+    pub fn intern(&mut self, sig: Signature) -> (usize, bool) {
+        let chain = self.index.entry(sig.hash).or_default();
+        for &id in chain.iter() {
+            if self.entries[id].0 == sig {
+                self.hits += 1;
+                return (id, true);
+            }
+        }
+        let id = self.entries.len();
+        chain.push(id);
+        self.entries.push((sig, None));
+        self.misses += 1;
+        (id, false)
+    }
+
+    /// Store the scheme inferred for a missed entry.
+    pub fn fill(&mut self, id: usize, scheme: Scheme) {
+        self.entries[id].1 = Some(scheme);
+    }
+
+    /// Scheme for an interned entry (panics if never filled — the mapper
+    /// fills every miss before reading).
+    pub fn scheme(&self, id: usize) -> &Scheme {
+        self.entries[id].1.as_ref().expect("cache entry not filled")
+    }
+
+    /// Entry ids still awaiting inference, in intern order.
+    pub fn unfilled(&self) -> Vec<usize> {
+        self.entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, s))| s.is_none())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn unique(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Hits over all interned lookups.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+    use crate::graph::synth;
+
+    #[test]
+    fn signature_depends_on_occupancy_not_counts() {
+        let mut a = Coo::new(8, 8);
+        a.push(0, 0, 1.0);
+        a.push_sym(3, 2, 1.0);
+        let mut b = Coo::new(8, 8);
+        b.push(0, 0, 5.0);
+        b.push(1, 1, 2.0); // same cell as (0,0) at grid 2
+        b.push_sym(3, 2, 7.0);
+        b.push_sym(2, 2, 1.0); // same cell as (3,2)/(2,3) block
+        let ga = GridSummary::new(&a.to_csr(), 2);
+        let gb = GridSummary::new(&b.to_csr(), 2);
+        assert_eq!(signature(&ga), signature(&gb));
+        // a different occupied cell changes the signature
+        let mut c = Coo::new(8, 8);
+        c.push(0, 0, 1.0);
+        c.push_sym(7, 6, 1.0);
+        let gc = GridSummary::new(&c.to_csr(), 2);
+        assert_ne!(signature(&ga), signature(&gc));
+    }
+
+    #[test]
+    fn signature_distinguishes_truncated_windows() {
+        // same occupancy bits but different matrix-unit dims (trailing
+        // truncation) must not collide
+        let m = synth::banded_like(100, 0.9, 1);
+        let g = GridSummary::new(&m, 8); // n = 13, last cell 4 units
+        let a = g.window(0, 3);
+        let b = g.window(10, 3); // touches the truncated edge
+        assert_eq!(a.n, b.n);
+        if a.cell_nnz.iter().map(|&c| c > 0).collect::<Vec<_>>()
+            == b.cell_nnz.iter().map(|&c| c > 0).collect::<Vec<_>>()
+        {
+            assert_ne!(signature(&a), signature(&b), "dim must separate them");
+        } else {
+            assert_ne!(signature(&a).words, signature(&b).words);
+        }
+    }
+
+    #[test]
+    fn cache_interns_and_reports_hit_rate() {
+        let m = synth::qh882_like(1);
+        let g = GridSummary::new(&m, 32);
+        let mut cache = SchemeCache::new();
+        let s0 = signature(&g.window(0, 4));
+        let s1 = signature(&g.window(0, 4));
+        let (id0, hit0) = cache.intern(s0);
+        let (id1, hit1) = cache.intern(s1);
+        assert!(!hit0 && hit1);
+        assert_eq!(id0, id1);
+        assert_eq!(cache.unique(), 1);
+        assert_eq!(cache.unfilled(), vec![0]);
+        cache.fill(
+            id0,
+            Scheme { diag_len: vec![4], fill_len: vec![] },
+        );
+        assert!(cache.unfilled().is_empty());
+        assert_eq!(cache.scheme(id0).diag_len, vec![4]);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,229 @@
+//! Composite execution: compile a [`CompositeScheme`] into per-window
+//! [`ExecPlan`]s, merge them into one fleet-servable schedule, and serve
+//! y = Ax exactly by adding the digital spill (the nnz outside every
+//! mapped rect) back on the host.
+//!
+//! Exactness contract: every non-zero is either inside exactly one mapped
+//! tile (rects are disjoint; all-zero tiles elide nothing but zeros) or in
+//! the spill CSR — never both, never neither — so a composite MVM equals
+//! the dense oracle up to floating-point summation order, and *exactly*
+//! (bit-identical) whenever products round to nothing, e.g. adjacency
+//! weights with integer inputs. The [`CompositeExecutor`] parallelizes
+//! across requests only (one worker per request, plan order then spill
+//! row-order inside it), so results are bit-identical for any worker
+//! count.
+
+use crate::engine::batch::ServablePlan;
+use crate::engine::plan::{compile_rects, merge_plans, ExecPlan};
+use crate::graph::{Csr, GridSummary};
+use crate::scheme::CompositeScheme;
+use anyhow::{anyhow, Result};
+
+/// A compiled composite mapping: the merged crossbar schedule plus the
+/// digital remainder.
+#[derive(Clone, Debug)]
+pub struct CompositePlan {
+    /// merged tile schedule over the full matrix (window plans
+    /// concatenated in slice order, programs deduplicated across windows)
+    pub plan: ExecPlan,
+    /// off-plan entries, served from sparse digital storage
+    pub spill: Csr,
+    /// per-window placed-tile counts (slice order), for fleet reporting
+    pub window_tiles: Vec<usize>,
+}
+
+/// Compile every slice of a composite to its own [`ExecPlan`] and merge.
+pub fn compile_composite(
+    m: &Csr,
+    g: &GridSummary,
+    comp: &CompositeScheme,
+) -> Result<CompositePlan> {
+    comp.validate(g.n).map_err(|e| anyhow!("invalid composite: {e}"))?;
+    let mut parts = Vec::with_capacity(comp.slices.len());
+    let mut window_tiles = Vec::with_capacity(comp.slices.len());
+    for s in &comp.slices {
+        let p = compile_rects(m, g, &s.rects())?;
+        window_tiles.push(p.tiles.len());
+        parts.push(p);
+    }
+    let plan = merge_plans(&parts)?;
+
+    // covered-cell bitmap over the global grid, then the spill CSR: every
+    // entry whose grid cell is not covered by any mapped rect
+    let n = g.n;
+    let mut covered = vec![false; n * n];
+    for s in &comp.slices {
+        for r in s.rects() {
+            for rr in r.r0..r.r1 {
+                covered[rr * n + r.c0..rr * n + r.c1].fill(true);
+            }
+        }
+    }
+    let k = g.grid;
+    let mut indptr = Vec::with_capacity(m.rows + 1);
+    indptr.push(0usize);
+    let mut indices = Vec::new();
+    let mut data = Vec::new();
+    for r in 0..m.rows {
+        let row_cells = (r / k) * n;
+        for (i, &c) in m.row(r).iter().enumerate() {
+            if !covered[row_cells + c / k] {
+                indices.push(c);
+                data.push(m.row_vals(r)[i]);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    let spill = Csr {
+        rows: m.rows,
+        cols: m.cols,
+        indptr,
+        indices,
+        data,
+    };
+    Ok(CompositePlan {
+        plan,
+        spill,
+        window_tiles,
+    })
+}
+
+impl CompositePlan {
+    /// y = Ax: mapped tiles in plan order, then the spill in row-major CSR
+    /// order, accumulated into the same output buffer.
+    pub fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        self.plan.mvm_into(x, y);
+        for r in 0..self.spill.rows {
+            let cols = self.spill.row(r);
+            if cols.is_empty() {
+                continue;
+            }
+            let vals = self.spill.row_vals(r);
+            let mut acc = 0.0f64;
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                acc += v * x[c];
+            }
+            y[r] += acc;
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::mvm_into`].
+    pub fn mvm(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.mvm_into(x, &mut y);
+        y
+    }
+
+    /// Non-zeros served by crossbar tiles.
+    pub fn mapped_nnz(&self) -> u64 {
+        let pn = self.plan.program_nnz();
+        self.plan.tiles.iter().map(|t| pn[t.program]).sum()
+    }
+
+    /// Non-zeros served digitally.
+    pub fn spilled_nnz(&self) -> u64 {
+        self.spill.nnz() as u64
+    }
+}
+
+impl ServablePlan for CompositePlan {
+    fn dim(&self) -> usize {
+        self.plan.dim
+    }
+
+    fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        CompositePlan::mvm_into(self, x, y)
+    }
+}
+
+/// Request-parallel executor for a composite plan: the shared
+/// [`crate::engine::BatchExecutor`] machinery (pooled output buffers,
+/// request-order results, one worker per request so results are
+/// bit-identical for any worker count) serving a [`CompositePlan`].
+pub type CompositeExecutor = crate::engine::BatchExecutor<CompositePlan>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+    use crate::scheme::{Scheme, WindowSlice};
+    use std::sync::Arc;
+
+    fn two_window_composite(n: usize, cut: usize, win: usize) -> CompositeScheme {
+        CompositeScheme {
+            n,
+            slices: vec![
+                WindowSlice {
+                    win_start: 0,
+                    win_end: win,
+                    start: 0,
+                    end: cut,
+                    scheme: Scheme { diag_len: vec![win], fill_len: vec![] },
+                    cache_hit: false,
+                },
+                WindowSlice {
+                    win_start: n - win,
+                    win_end: n,
+                    start: cut,
+                    end: n,
+                    scheme: Scheme { diag_len: vec![win], fill_len: vec![] },
+                    cache_hit: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn composite_mvm_matches_spmv_exactly_on_integer_inputs() {
+        let m = synth::banded_like(90, 0.92, 4);
+        let g = GridSummary::new(&m, 5); // n = 18
+        let comp = two_window_composite(18, 9, 12);
+        let cp = compile_composite(&m, &g, &comp).unwrap();
+        // conservation: mapped + spilled = total
+        assert_eq!(cp.mapped_nnz() + cp.spilled_nnz(), m.nnz() as u64);
+        assert!(cp.spilled_nnz() > 0, "band entries cross the cut");
+        // integer inputs: adjacency products and partial sums are exact,
+        // so any accumulation order gives the bit-identical dense answer
+        let x: Vec<f64> = (0..90).map(|i| ((i * 11) % 23) as f64 - 11.0).collect();
+        assert_eq!(cp.mvm(&x), m.spmv(&x));
+    }
+
+    #[test]
+    fn executor_is_bit_identical_across_worker_counts() {
+        let m = synth::banded_like(60, 0.9, 2);
+        let g = GridSummary::new(&m, 4); // n = 15
+        let comp = two_window_composite(15, 8, 10);
+        let cp = Arc::new(compile_composite(&m, &g, &comp).unwrap());
+        let xs: Vec<Vec<f64>> = (0..9)
+            .map(|s| (0..60).map(|i| ((i + 3 * s) % 13) as f64 - 6.0).collect())
+            .collect();
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| cp.mvm(x)).collect();
+        for workers in [1usize, 2, 8] {
+            let exec = CompositeExecutor::new(cp.clone(), workers);
+            let ys = exec.execute_batch(xs.clone());
+            assert_eq!(ys, want, "workers {workers}");
+            exec.recycle(ys);
+            let ys2 = exec.execute_batch(xs.clone());
+            assert_eq!(ys2, want, "workers {workers} with recycled buffers");
+        }
+    }
+
+    #[test]
+    fn window_tiles_account_for_every_placed_tile() {
+        let m = synth::qh882_like(5);
+        let g = GridSummary::new(&m, 32); // n = 28
+        let comp = two_window_composite(28, 14, 18);
+        let cp = compile_composite(&m, &g, &comp).unwrap();
+        assert_eq!(cp.window_tiles.len(), 2);
+        assert_eq!(cp.window_tiles.iter().sum::<usize>(), cp.plan.tiles.len());
+    }
+
+    #[test]
+    fn invalid_composite_is_rejected() {
+        let m = synth::qm7_like(5828);
+        let g = GridSummary::new(&m, 2); // n = 11
+        let mut comp = two_window_composite(11, 6, 8);
+        comp.slices[1].start = 7; // ownership gap
+        assert!(compile_composite(&m, &g, &comp).is_err());
+    }
+}

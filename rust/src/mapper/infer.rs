@@ -1,0 +1,169 @@
+//! Per-window mapping inference: controller rollouts + safety candidates.
+//!
+//! The paper's controller emits actions from a learned initial state — it
+//! takes no observation — so at inference time content-conditioning comes
+//! from *selection*: sample a batch of candidate schemes through the
+//! trained controller ([`crate::agent::native::infer_episodes`], plus the
+//! greedy decode), evaluate each against the window's grid summary, and
+//! keep the least-area complete-coverage candidate. Two deterministic
+//! safety candidates guarantee the composite principles regardless of how
+//! well the controller is trained:
+//!
+//! - the DP oracle ([`crate::baselines::oracle::optimal_diagonal`]) — the
+//!   optimal diagonal-only complete partition, the tightest no-fill bound;
+//! - the full window block — complete by construction, the worst case.
+//!
+//! Selection depends only on the window's occupancy signature (the PRNG
+//! key is derived from it), so identical windows map identically and the
+//! scheme cache stays sound.
+
+use crate::agent::native::infer_episodes;
+use crate::agent::params::Params;
+use crate::baselines::oracle;
+use crate::graph::GridSummary;
+use crate::runtime::manifest::ControllerEntry;
+use crate::scheme::{evaluate, parse_actions, FillRule, RewardWeights, Scheme};
+
+/// Everything window inference needs, shared across worker threads (and
+/// embedded in [`crate::mapper::MapperConfig`] — the mapper adds only its
+/// windowing/parallelism knobs on top).
+#[derive(Clone)]
+pub struct InferContext {
+    pub entry: ControllerEntry,
+    pub params: Params,
+    pub fill_rule: FillRule,
+    pub weights: RewardWeights,
+    /// sampling rounds per window (each `entry.batch` episodes); 0 =
+    /// greedy + safety candidates only
+    pub rounds: usize,
+    /// run seed folded into every window's rollout key
+    pub seed: u64,
+}
+
+/// Map one window: returns the selected scheme over the window grid.
+///
+/// Preference order: complete coverage first, then least mapped area, then
+/// candidate index (deterministic). The controller only runs when the
+/// window length matches its native grid; short windows (a whole graph
+/// smaller than one window) fall back to the safety candidates.
+pub fn map_window(ctx: &InferContext, local: &GridSummary, sig_hash: u64) -> Scheme {
+    let n = local.n;
+    let mut candidates: Vec<Scheme> = Vec::new();
+    if n == ctx.entry.n {
+        let key = [
+            (ctx.seed ^ sig_hash) as u32,
+            ((ctx.seed ^ sig_hash) >> 32) as u32,
+        ];
+        let t = ctx.entry.steps;
+        for ep in infer_episodes(&ctx.entry, &ctx.params, key, ctx.rounds) {
+            let d: Vec<u8> = ep.d_actions[..t].iter().map(|&x| x as u8).collect();
+            let f: Vec<usize> = ep.f_actions[..t].iter().map(|&x| x as usize).collect();
+            candidates.push(parse_actions(n, &d, &f, ctx.fill_rule));
+        }
+    }
+    // safety candidates: the DP oracle (optimal diagonal-only complete
+    // partition; always exists — the full block is feasible) and the full
+    // window block itself
+    if let Some(orc) = oracle::optimal_diagonal(local) {
+        candidates.push(orc);
+    }
+    candidates.push(Scheme { diag_len: vec![n], fill_len: vec![] });
+
+    let mut best: Option<(u64, usize)> = None; // (area, candidate index)
+    for (i, cand) in candidates.iter().enumerate() {
+        if cand.validate(n).is_err() {
+            continue;
+        }
+        let e = evaluate(cand, local, ctx.weights);
+        if e.coverage_ratio < 1.0 {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((area, _)) => e.covered_area_units < area,
+        };
+        if better {
+            best = Some((e.covered_area_units, i));
+        }
+    }
+    let (_, idx) = best.expect("full window block is always a complete candidate");
+    candidates.swap_remove(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::params::init_params;
+    use crate::graph::sparse::Coo;
+    use crate::graph::synth;
+    use crate::graph::GridSummary;
+
+    fn ctx(n: usize, fill: usize, rounds: usize) -> InferContext {
+        let entry = ControllerEntry::from_dims("infer_test", n, 5, fill, 4, false);
+        let params = init_params(&entry, 3);
+        InferContext {
+            entry,
+            params,
+            fill_rule: if fill == 0 {
+                FillRule::None
+            } else {
+                FillRule::Dynamic { grades: fill }
+            },
+            weights: RewardWeights::new(0.8),
+            rounds,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn empty_window_maps_to_unit_blocks() {
+        let m = Coo::new(12, 12).to_csr();
+        let g = GridSummary::new(&m, 2); // n = 6
+        let c = ctx(6, 4, 2);
+        let s = map_window(&c, &g, 0x1234);
+        // DP oracle: every block feasible on an empty window, unit blocks
+        // minimize area
+        assert_eq!(s.diag_len, vec![1; 6]);
+        let e = evaluate(&s, &g, c.weights);
+        assert_eq!(e.coverage_ratio, 1.0);
+    }
+
+    #[test]
+    fn selection_is_complete_and_no_worse_than_oracle_with_fills() {
+        let m = synth::banded_like(48, 0.85, 7);
+        let g = GridSummary::new(&m, 8); // n = 6
+        let c = ctx(6, 4, 3);
+        let s = map_window(&c, &g, 0xbeef);
+        let e = evaluate(&s, &g, c.weights);
+        assert_eq!(e.coverage_ratio, 1.0, "selected scheme must be complete");
+        let orc = oracle::optimal_diagonal(&g).unwrap();
+        let eo = evaluate(&orc, &g, c.weights);
+        assert!(
+            e.covered_area_units <= eo.covered_area_units,
+            "selection {} worse than its own oracle candidate {}",
+            e.covered_area_units,
+            eo.covered_area_units
+        );
+    }
+
+    #[test]
+    fn inference_is_deterministic_in_the_signature() {
+        let m = synth::banded_like(48, 0.9, 1);
+        let g = GridSummary::new(&m, 8);
+        let c = ctx(6, 4, 2);
+        assert_eq!(map_window(&c, &g, 42), map_window(&c, &g, 42));
+    }
+
+    #[test]
+    fn short_window_skips_the_controller() {
+        // grid smaller than the controller's native n: safety candidates
+        // only, still complete
+        let m = synth::qm7_like(5828);
+        let g = GridSummary::new(&m, 8); // n = 3 < controller n = 6
+        let c = ctx(6, 4, 2);
+        let s = map_window(&c, &g, 7);
+        s.validate(3).unwrap();
+        let e = evaluate(&s, &g, c.weights);
+        assert_eq!(e.coverage_ratio, 1.0);
+    }
+}

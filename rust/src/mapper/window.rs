@@ -1,0 +1,208 @@
+//! Window planning: slice a (reordered, banded) matrix's grid diagonal
+//! into overlapping controller-sized windows and choose the ownership cuts
+//! between neighbours.
+//!
+//! Windows are `n_window` grid cells wide (the controller's native grid)
+//! and advance by `n_window − overlap`; the last window is pinned to the
+//! grid's end, so it may overlap its predecessor by more. Between two
+//! adjacent windows the *ownership cut* is chosen inside their overlap at
+//! the grid boundary crossed by the fewest non-zeros (exact, via the grid
+//! prefix sums) — band entries crossing a cut are the mapper's digital
+//! spill, so the min-crossing cut is the sparsity-aware choice.
+
+use crate::graph::GridSummary;
+
+/// One diagonal window in global grid cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpan {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl WindowSpan {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Tile the grid diagonal [0, g_cells) with windows of `n_window` cells
+/// advancing by `n_window − overlap` (overlap is clamped to `n_window−1`).
+/// Starts are strictly increasing; the last window ends exactly at
+/// `g_cells`. When the whole grid fits in one window, a single (possibly
+/// short) window is returned.
+pub fn plan_windows(g_cells: usize, n_window: usize, overlap: usize) -> Vec<WindowSpan> {
+    assert!(g_cells >= 1 && n_window >= 1);
+    if g_cells <= n_window {
+        return vec![WindowSpan { start: 0, end: g_cells }];
+    }
+    let stride = n_window - overlap.min(n_window - 1);
+    let mut spans = Vec::new();
+    let mut s = 0usize;
+    loop {
+        if s + n_window >= g_cells {
+            spans.push(WindowSpan { start: g_cells - n_window, end: g_cells });
+            return spans;
+        }
+        spans.push(WindowSpan { start: s, end: s + n_window });
+        s += stride;
+    }
+}
+
+/// Non-zeros crossing the grid boundary `b` (row < b, col ≥ b; the
+/// symmetric lower triangle doubles it, but argmin does not care).
+fn crossing_nnz(g: &GridSummary, b: usize) -> u64 {
+    g.nnz_rect(0, b, b, g.n)
+}
+
+/// Choose the ownership cuts between consecutive windows: cut `i` lies in
+/// `[max(windows[i+1].start, prev_cut + 1), windows[i].end]` (a cut at the
+/// left window's end gives it its whole span — the only choice when
+/// overlap is zero) and minimizes the exact band-crossing nnz (ties break
+/// toward the smaller boundary, keeping the choice deterministic).
+/// Returns `windows.len()−1` strictly increasing cuts; the owned ranges
+/// are `[0, c_0), [c_0, c_1), …, [c_last, g_cells)`.
+pub fn choose_cuts(g: &GridSummary, windows: &[WindowSpan]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(windows.len().saturating_sub(1));
+    let mut prev = 0usize; // previous cut (exclusive lower bound)
+    for pair in windows.windows(2) {
+        let (left, right) = (pair[0], pair[1]);
+        // Bounds are always satisfiable: right.start ≤ left.end (windows
+        // abut or overlap), every non-last window ends before the grid
+        // does, and the previous cut sits at or before the previous
+        // window's end < left.end.
+        let lo = right.start.max(prev + 1);
+        let hi = left.end;
+        debug_assert!(
+            lo <= hi && hi < g.n,
+            "degenerate windows [{},{}) and [{},{}) after cut {prev}",
+            left.start,
+            left.end,
+            right.start,
+            right.end
+        );
+        let mut best = lo;
+        let mut best_cross = crossing_nnz(g, lo);
+        for b in (lo + 1)..=hi {
+            let c = crossing_nnz(g, b);
+            if c < best_cross {
+                best = b;
+                best_cross = c;
+            }
+        }
+        cuts.push(best);
+        prev = best;
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+
+    #[test]
+    fn windows_tile_small_grids_with_one_window() {
+        assert_eq!(plan_windows(5, 8, 2), vec![WindowSpan { start: 0, end: 5 }]);
+        assert_eq!(plan_windows(8, 8, 2), vec![WindowSpan { start: 0, end: 8 }]);
+    }
+
+    #[test]
+    fn windows_overlap_and_cover_the_grid() {
+        let spans = plan_windows(100, 28, 4);
+        assert_eq!(spans[0], WindowSpan { start: 0, end: 28 });
+        assert_eq!(spans.last().unwrap().end, 100);
+        for pair in spans.windows(2) {
+            assert!(pair[1].start > pair[0].start, "starts strictly increase");
+            assert!(pair[1].start < pair[0].end, "windows overlap");
+            assert_eq!(pair[0].len(), 28);
+        }
+        // stride 24 until the pinned last window
+        assert_eq!(spans[1].start, 24);
+        assert_eq!(spans.last().unwrap().start, 72);
+    }
+
+    #[test]
+    fn zero_overlap_abuts_windows() {
+        let spans = plan_windows(20, 5, 0);
+        assert_eq!(
+            spans,
+            vec![
+                WindowSpan { start: 0, end: 5 },
+                WindowSpan { start: 5, end: 10 },
+                WindowSpan { start: 10, end: 15 },
+                WindowSpan { start: 15, end: 20 },
+            ]
+        );
+    }
+
+    #[test]
+    fn cuts_prefer_the_empty_boundary() {
+        // two clusters [0,12) and [16,28) with nothing between cells 12-16:
+        // the cut inside the overlap must land on an empty boundary
+        let dim = 28;
+        let mut coo = Coo::new(dim, dim);
+        for i in 0..12 {
+            for j in i..12.min(i + 3) {
+                coo.push_sym(j, i, 1.0);
+            }
+        }
+        for i in 16..dim {
+            for j in i..dim.min(i + 3) {
+                coo.push_sym(j, i, 1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 1);
+        let windows = vec![
+            WindowSpan { start: 0, end: 18 },
+            WindowSpan { start: 10, end: 28 },
+        ];
+        let cuts = choose_cuts(&g, &windows);
+        assert_eq!(cuts.len(), 1);
+        assert!((12..=16).contains(&cuts[0]), "cut {} not in the gap", cuts[0]);
+        assert_eq!(crossing_nnz(&g, cuts[0]), 0);
+    }
+
+    #[test]
+    fn cuts_are_strictly_increasing_dense_overlaps() {
+        // dense-ish band: cuts still come back strictly increasing and
+        // inside their overlap ranges
+        let dim = 60;
+        let mut coo = Coo::new(dim, dim);
+        for i in 1..dim {
+            coo.push_sym(i, i - 1, 1.0);
+            if i >= 2 {
+                coo.push_sym(i, i - 2, 1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 2); // n = 30
+        let windows = plan_windows(g.n, 8, 3);
+        let cuts = choose_cuts(&g, &windows);
+        assert_eq!(cuts.len(), windows.len() - 1);
+        let mut prev = 0;
+        for (i, &c) in cuts.iter().enumerate() {
+            assert!(c > prev, "cut {i} not increasing");
+            assert!(c >= windows[i + 1].start && c <= windows[i].end);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn zero_overlap_cuts_fall_on_window_boundaries() {
+        let mut coo = Coo::new(40, 40);
+        for i in 1..40 {
+            coo.push_sym(i, i - 1, 1.0);
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 2); // n = 20
+        let windows = plan_windows(g.n, 5, 0);
+        let cuts = choose_cuts(&g, &windows);
+        // abutting windows leave exactly one legal cut per boundary
+        assert_eq!(cuts, vec![5, 10, 15]);
+    }
+}

@@ -1,0 +1,340 @@
+//! Composite mapping schemes: a global mapping stitched from per-window
+//! schemes — the object that takes the paper's single-rollout method to
+//! matrices far beyond the controller's native grid.
+//!
+//! A [`CompositeScheme`] is an ordered list of [`WindowSlice`]s. Each slice
+//! carries the diagonal *window* its scheme was inferred on (in global grid
+//! cells) and the *owned* sub-range the slice is responsible for; owned
+//! ranges partition the grid, while windows may overlap their neighbours.
+//! A slice contributes the geometric intersection of its scheme's blocks
+//! with its owned diagonal square — clipping guarantees the paper's
+//! principles globally:
+//!
+//! - **no overlap**: rects within one slice are disjoint (validated
+//!   schemes) and clipping keeps them inside the slice's owned square;
+//!   owned squares are pairwise disjoint, so the global rect set is too;
+//! - **complete coverage of windowed nnz**: if every slice's scheme fully
+//!   covers its window, every non-zero inside an owned square stays
+//!   covered after clipping (the covering rect's intersection with the
+//!   square still contains it). Non-zeros *outside* every owned square —
+//!   band entries crossing an ownership cut — are off-window by
+//!   construction and are accounted as digital spill
+//!   ([`crate::graph::storage`]) rather than mapped;
+//! - **least area**: clipping only shrinks rects, so a slice never costs
+//!   more than its owned square (the fixed-block bound), and the per-window
+//!   inference minimizes window area among complete candidates.
+
+use super::parse::Scheme;
+use super::GridRect;
+use crate::graph::{storage, GridSummary};
+
+/// One window's contribution to a composite mapping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowSlice {
+    /// window range in global grid cells (what the controller saw)
+    pub win_start: usize,
+    pub win_end: usize,
+    /// owned range [start, end) in global grid cells; slices' owned ranges
+    /// partition the grid
+    pub start: usize,
+    pub end: usize,
+    /// scheme over the window grid (grid_count == win_end - win_start)
+    pub scheme: Scheme,
+    /// whether the scheme came out of the mapper's signature cache
+    pub cache_hit: bool,
+}
+
+impl WindowSlice {
+    /// The slice's mapped rectangles in global grid coordinates: the
+    /// scheme's rects offset to the window origin and clipped to the owned
+    /// diagonal square.
+    pub fn rects(&self) -> Vec<GridRect> {
+        self.scheme
+            .rects()
+            .iter()
+            .filter_map(|r| {
+                let r0 = (r.r0 + self.win_start).max(self.start);
+                let r1 = (r.r1 + self.win_start).min(self.end);
+                let c0 = (r.c0 + self.win_start).max(self.start);
+                let c1 = (r.c1 + self.win_start).min(self.end);
+                if r0 < r1 && c0 < c1 {
+                    Some(GridRect { r0, r1, c0, c1 })
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+/// A globally valid mapping assembled from per-window schemes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompositeScheme {
+    /// global grid-cell count the slices partition
+    pub n: usize,
+    pub slices: Vec<WindowSlice>,
+}
+
+/// Evaluation of a composite mapping against the global grid summary —
+/// the scaled-up analogue of [`super::EvalResult`], with the paper's
+/// future-work sparse-storage axis (digital spill) made explicit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CompositeEval {
+    /// nnz inside the owned diagonal squares (what windowing can map)
+    pub windowed_nnz: u64,
+    /// nnz inside the composite's mapped rects
+    pub covered_nnz: u64,
+    /// total − covered: off-window band entries plus anything a partial
+    /// window scheme missed; served from digital sparse storage
+    pub spilled_nnz: u64,
+    pub total_nnz: u64,
+    /// matrix-unit area of the mapped rects
+    pub covered_area_units: u64,
+    /// covered area / D² (Eq. 23 at global scale)
+    pub area_ratio: f64,
+    /// covered / windowed (1.0 = the four principles hold end-to-end)
+    pub coverage_windowed: f64,
+    /// covered / total (the crossbar-served fraction of all nnz)
+    pub mapped_fraction: f64,
+    /// COO byte cost of holding the spill digitally
+    pub spill_coo_bytes: u64,
+    /// total diagonal blocks across slices (composite granularity)
+    pub num_blocks: usize,
+}
+
+impl CompositeScheme {
+    /// All mapped rectangles in global grid coordinates, slice order.
+    pub fn rects(&self) -> Vec<GridRect> {
+        self.slices.iter().flat_map(|s| s.rects()).collect()
+    }
+
+    /// Structural validation of the composite principles that do not need
+    /// the matrix: owned ranges partition [0, n) in order, each window
+    /// contains its owned range, and each slice's scheme is a valid
+    /// diagonal+fill scheme over its window.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.n != n {
+            return Err(format!("composite spans {} cells, expected {n}", self.n));
+        }
+        if self.slices.is_empty() {
+            return Err("composite has no slices".into());
+        }
+        let mut expect = 0usize;
+        for (i, s) in self.slices.iter().enumerate() {
+            if s.start != expect {
+                return Err(format!(
+                    "slice {i} owns [{}, {}) but the previous slice ended at {expect}",
+                    s.start, s.end
+                ));
+            }
+            if s.start >= s.end {
+                return Err(format!("slice {i} owns an empty range"));
+            }
+            if s.win_start > s.start || s.end > s.win_end || s.win_end > n {
+                return Err(format!(
+                    "slice {i} window [{}, {}) does not contain its owned range [{}, {})",
+                    s.win_start, s.win_end, s.start, s.end
+                ));
+            }
+            s.scheme
+                .validate(s.win_end - s.win_start)
+                .map_err(|e| format!("slice {i} scheme: {e}"))?;
+            expect = s.end;
+        }
+        if expect != n {
+            return Err(format!("slices end at {expect}, grid has {n} cells"));
+        }
+        Ok(())
+    }
+
+    /// Number of window slices (the block count is
+    /// [`CompositeEval::num_blocks`]).
+    pub fn num_windows(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// Fraction of slices served from the scheme cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.slices.is_empty() {
+            return 0.0;
+        }
+        self.slices.iter().filter(|s| s.cache_hit).count() as f64 / self.slices.len() as f64
+    }
+
+    /// Evaluate the composite against the global grid summary.
+    /// `value_bytes` prices the digital spill (4 = f32 weights, 0 =
+    /// pattern-only adjacency).
+    pub fn evaluate(&self, g: &GridSummary, value_bytes: u64) -> CompositeEval {
+        let mut covered_nnz = 0u64;
+        let mut covered_area = 0u64;
+        let mut num_blocks = 0usize;
+        for s in &self.slices {
+            num_blocks += s.scheme.diag_len.len();
+            for r in s.rects() {
+                covered_nnz += r.nnz(g);
+                covered_area += r.area_units(g);
+            }
+        }
+        let windowed_nnz: u64 = self
+            .slices
+            .iter()
+            .map(|s| g.nnz_rect(s.start, s.end, s.start, s.end))
+            .sum();
+        let total_nnz = g.total_nnz as u64;
+        let spilled_nnz = total_nnz - covered_nnz;
+        let dim2 = (g.dim as u64) * (g.dim as u64);
+        CompositeEval {
+            windowed_nnz,
+            covered_nnz,
+            spilled_nnz,
+            total_nnz,
+            covered_area_units: covered_area,
+            area_ratio: covered_area as f64 / dim2 as f64,
+            coverage_windowed: if windowed_nnz == 0 {
+                1.0
+            } else {
+                covered_nnz as f64 / windowed_nnz as f64
+            },
+            mapped_fraction: if total_nnz == 0 {
+                1.0
+            } else {
+                covered_nnz as f64 / total_nnz as f64
+            },
+            spill_coo_bytes: storage::coo_spill_bytes(spilled_nnz, g.dim, value_bytes),
+            num_blocks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sparse::Coo;
+    use crate::graph::synth;
+
+    fn slice(ws: usize, we: usize, s: usize, e: usize, scheme: Scheme) -> WindowSlice {
+        WindowSlice {
+            win_start: ws,
+            win_end: we,
+            start: s,
+            end: e,
+            scheme,
+            cache_hit: false,
+        }
+    }
+
+    fn full(n: usize) -> Scheme {
+        Scheme {
+            diag_len: vec![n],
+            fill_len: vec![],
+        }
+    }
+
+    #[test]
+    fn clipping_keeps_rects_in_owned_square() {
+        // window [0,6) owning [0,4): full block clips to the owned square
+        let s = slice(0, 6, 0, 4, full(6));
+        assert_eq!(s.rects(), vec![GridRect { r0: 0, r1: 4, c0: 0, c1: 4 }]);
+        // window [2,8) owning [4,8): fill at the window-relative junction
+        let sch = Scheme {
+            diag_len: vec![3, 3],
+            fill_len: vec![2],
+        };
+        // junction at global 5; fill rects [3,5)x[5,7) and transpose; the
+        // owned square [4,8)² keeps only their intersections
+        let s = slice(2, 8, 4, 8, sch);
+        let rects = s.rects();
+        assert!(rects.contains(&GridRect { r0: 4, r1: 5, c0: 4, c1: 5 })); // clipped diag 1
+        assert!(rects.contains(&GridRect { r0: 5, r1: 8, c0: 5, c1: 8 })); // diag 2
+        assert!(rects.contains(&GridRect { r0: 4, r1: 5, c0: 5, c1: 7 })); // clipped fill
+        assert!(rects.contains(&GridRect { r0: 5, r1: 7, c0: 4, c1: 5 })); // clipped transpose
+        assert_eq!(rects.len(), 4);
+    }
+
+    #[test]
+    fn validate_checks_partition_and_schemes() {
+        let good = CompositeScheme {
+            n: 8,
+            slices: vec![slice(0, 5, 0, 4, full(5)), slice(3, 8, 4, 8, full(5))],
+        };
+        good.validate(8).unwrap();
+        // gap in ownership
+        let gap = CompositeScheme {
+            n: 8,
+            slices: vec![slice(0, 5, 0, 3, full(5)), slice(3, 8, 4, 8, full(5))],
+        };
+        assert!(gap.validate(8).is_err());
+        // window not containing its owned range
+        let outside = CompositeScheme {
+            n: 8,
+            slices: vec![slice(0, 3, 0, 4, full(3)), slice(3, 8, 4, 8, full(5))],
+        };
+        assert!(outside.validate(8).is_err());
+        // scheme not spanning its window
+        let short = CompositeScheme {
+            n: 8,
+            slices: vec![slice(0, 5, 0, 4, full(4)), slice(3, 8, 4, 8, full(5))],
+        };
+        assert!(short.validate(8).is_err());
+        // wrong total
+        assert!(good.validate(9).is_err());
+    }
+
+    #[test]
+    fn complete_windows_cover_all_windowed_nnz() {
+        // banded matrix, two overlapping full-block windows: every nnz in
+        // an owned square stays covered; cross-cut band entries spill
+        let m = synth::banded_like(60, 0.9, 5);
+        let g = GridSummary::new(&m, 5); // n = 12
+        let comp = CompositeScheme {
+            n: 12,
+            slices: vec![slice(0, 8, 0, 6, full(8)), slice(4, 12, 6, 12, full(8))],
+        };
+        comp.validate(12).unwrap();
+        let e = comp.evaluate(&g, 4);
+        assert_eq!(e.coverage_windowed, 1.0);
+        assert_eq!(e.covered_nnz, e.windowed_nnz);
+        assert_eq!(e.covered_nnz + e.spilled_nnz, e.total_nnz);
+        // the banded matrix has entries crossing the cut at 6
+        assert!(e.spilled_nnz > 0);
+        assert_eq!(e.spill_coo_bytes, e.spilled_nnz * (2 * 2 + 4));
+        // area = two owned squares (full blocks clipped to them)
+        assert_eq!(e.covered_area_units, 30 * 30 + 30 * 30);
+    }
+
+    #[test]
+    fn composite_of_one_slice_matches_plain_evaluation() {
+        let m = synth::qm7_like(5828);
+        let g = GridSummary::new(&m, 2); // n = 11
+        let sch = Scheme {
+            diag_len: vec![4, 7],
+            fill_len: vec![2],
+        };
+        let comp = CompositeScheme {
+            n: 11,
+            slices: vec![slice(0, 11, 0, 11, sch.clone())],
+        };
+        comp.validate(11).unwrap();
+        let ce = comp.evaluate(&g, 4);
+        let pe = super::super::evaluate(&sch, &g, super::super::RewardWeights::new(0.5));
+        assert_eq!(ce.covered_nnz, pe.covered_nnz);
+        assert_eq!(ce.covered_area_units, pe.covered_area_units);
+        assert_eq!(ce.windowed_nnz, pe.total_nnz);
+        assert!((ce.area_ratio - pe.area_ratio).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix_evaluates_cleanly() {
+        let m = Coo::new(10, 10).to_csr();
+        let g = GridSummary::new(&m, 2);
+        let comp = CompositeScheme {
+            n: 5,
+            slices: vec![slice(0, 5, 0, 5, full(5))],
+        };
+        let e = comp.evaluate(&g, 4);
+        assert_eq!(e.total_nnz, 0);
+        assert_eq!(e.coverage_windowed, 1.0);
+        assert_eq!(e.mapped_fraction, 1.0);
+        assert_eq!(e.spilled_nnz, 0);
+    }
+}

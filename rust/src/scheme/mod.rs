@@ -13,11 +13,16 @@
 //! - evaluation (Eqs. 22–24): coverage ratio, area ratio, sparsity — O(1)
 //!   per block via grid prefix sums;
 //! - the scalarized reward (Eq. 21, with the area term sign-corrected, see
-//!   DESIGN.md §3).
+//!   DESIGN.md §3);
+//! - composite schemes ([`composite`]): per-window schemes stitched into a
+//!   globally valid mapping for matrices far beyond the controller's
+//!   native grid, with off-window nnz accounted as digital spill.
 
+pub mod composite;
 pub mod eval;
 pub mod parse;
 
+pub use composite::{CompositeEval, CompositeScheme, WindowSlice};
 pub use eval::{evaluate, EvalResult, RewardWeights};
 pub use parse::{parse_actions, FillRule, Scheme};
 

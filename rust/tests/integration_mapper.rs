@@ -1,0 +1,262 @@
+//! Integration tests for the hierarchical mapper pipeline: the composite
+//! principles under random windows/overlaps (propcheck), MatrixMarket
+//! round-trips at 10k+ rows, and the acceptance property — composite batch
+//! execution bit-identical to the dense oracle on a 10k-node R-MAT graph,
+//! with a global area ratio strictly better than the fixed-block baseline
+//! at the same window size.
+
+use autogmap::agent::params::init_params;
+use autogmap::baselines;
+use autogmap::graph::{matrix_market, synth, Coo, Csr, GridSummary};
+use autogmap::mapper::{self, CompositeExecutor, MapperConfig};
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::runtime::manifest::ControllerEntry;
+use autogmap::scheme::{evaluate, FillRule, RewardWeights};
+use autogmap::util::propcheck::check;
+use std::sync::Arc;
+
+fn mapper_cfg(n: usize, overlap: usize, rounds: usize, seed: u64, workers: usize) -> MapperConfig {
+    let entry = ControllerEntry::from_dims("it_mapper", n, 5, 4, 4, false);
+    let params = init_params(&entry, seed ^ 0xabcd);
+    MapperConfig {
+        infer: mapper::InferContext {
+            entry,
+            params,
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            weights: RewardWeights::new(0.8),
+            rounds,
+            seed,
+        },
+        overlap,
+        workers,
+    }
+}
+
+fn random_sym(rng: &mut autogmap::util::rng::Pcg64, dim: usize, edges: usize) -> Csr {
+    let mut coo = Coo::new(dim, dim);
+    for _ in 0..edges {
+        let a = rng.below(dim as u64) as usize;
+        let b = rng.below(dim as u64) as usize;
+        coo.push_sym(a.max(b), a.min(b), 1.0);
+    }
+    coo.to_csr()
+}
+
+/// The four scheme principles, checked globally on mapper-built composites
+/// across random matrices, window sizes, and overlaps:
+///   1. complete coverage of windowed nnz (every nnz in an owned square is
+///      inside a mapped rect),
+///   2. no overlap (rasterized),
+///   3. conservation (covered + spilled = total, no double counting),
+///   4. least-area monotonicity (the composite never costs more than one
+///      fixed block per owned range — the windowing upper bound — and its
+///      reported area equals the rasterized union).
+#[test]
+fn composite_preserves_scheme_principles_property() {
+    check("mapper_composite_principles", 20, |rng| {
+        let dim = 40 + rng.below(120) as usize;
+        let grid = 2 + rng.below(4) as usize;
+        let m = random_sym(rng, dim, dim * 2);
+        let r = reorder(&m, Reordering::ReverseCuthillMckee);
+        let g = GridSummary::new(&r.matrix, grid);
+        let n_window = 4 + rng.below(5) as usize;
+        let overlap = rng.below(n_window as u64 - 1) as usize;
+        let cfg = mapper_cfg(n_window, overlap, 1 + rng.below(2) as usize, rng.next_u64(), 2);
+        let (comp, report) = mapper::map_graph(&g, &cfg).map_err(|e| format!("{e:#}"))?;
+        comp.validate(g.n).map_err(|e| format!("validate: {e}"))?;
+        if report.windows != comp.slices.len() {
+            return Err("report/slice count mismatch".into());
+        }
+        let eval = comp.evaluate(&g, 4);
+
+        // rasterize the mapped rects over the grid
+        let n = g.n;
+        let mut covered = vec![false; n * n];
+        for rect in comp.rects() {
+            for rr in rect.r0..rect.r1 {
+                for cc in rect.c0..rect.c1 {
+                    if covered[rr * n + cc] {
+                        return Err(format!("overlap at cell ({rr},{cc})"));
+                    }
+                    covered[rr * n + cc] = true;
+                }
+            }
+        }
+        // rects stay inside their slice's owned square
+        for s in &comp.slices {
+            for rect in s.rects() {
+                if rect.r0 < s.start || rect.r1 > s.end || rect.c0 < s.start || rect.c1 > s.end {
+                    return Err(format!("rect {rect:?} escapes owned [{}, {})", s.start, s.end));
+                }
+            }
+        }
+        // brute-force nnz accounting against the rasterization
+        let (mut covered_nnz, mut windowed_nnz) = (0u64, 0u64);
+        let owner = |cell: usize| -> usize {
+            comp.slices
+                .iter()
+                .position(|s| cell >= s.start && cell < s.end)
+                .expect("ownership partitions the grid")
+        };
+        for row in 0..g.dim {
+            let rc = row / grid;
+            for &col in r.matrix.row(row) {
+                let cc = col / grid;
+                if covered[rc * n + cc] {
+                    covered_nnz += 1;
+                }
+                let in_window = owner(rc) == owner(cc);
+                if in_window {
+                    windowed_nnz += 1;
+                    // principle 1: windowed nnz must be covered
+                    if !covered[rc * n + cc] {
+                        return Err(format!(
+                            "windowed nnz at ({row},{col}) cell ({rc},{cc}) uncovered"
+                        ));
+                    }
+                }
+            }
+        }
+        if covered_nnz != eval.covered_nnz {
+            return Err(format!("covered {covered_nnz} != eval {}", eval.covered_nnz));
+        }
+        if windowed_nnz != eval.windowed_nnz {
+            return Err(format!("windowed {windowed_nnz} != eval {}", eval.windowed_nnz));
+        }
+        if eval.covered_nnz + eval.spilled_nnz != eval.total_nnz {
+            return Err("conservation violated".into());
+        }
+        if (eval.coverage_windowed - 1.0).abs() > 1e-12 {
+            return Err(format!("windowed coverage {}", eval.coverage_windowed));
+        }
+        // principle 4: area equals the rasterized union and never exceeds
+        // the one-block-per-owned-range bound
+        let union_area: u64 = (0..n * n)
+            .filter(|&i| covered[i])
+            .map(|i| {
+                let (rr, cc) = (i / n, i % n);
+                g.rect_area(rr, rr + 1, cc, cc + 1)
+            })
+            .sum();
+        if union_area != eval.covered_area_units {
+            return Err(format!(
+                "union area {union_area} != eval {}",
+                eval.covered_area_units
+            ));
+        }
+        let bound: u64 = comp
+            .slices
+            .iter()
+            .map(|s| g.rect_area(s.start, s.end, s.start, s.end))
+            .sum();
+        if eval.covered_area_units > bound {
+            return Err(format!("area {} above fixed bound {bound}", eval.covered_area_units));
+        }
+        Ok(())
+    });
+}
+
+/// In-window nnz (same owner for row and column cell) must be covered —
+/// and an nnz whose cells have different owners must be exactly the spill.
+#[test]
+fn composite_spill_is_exactly_the_uncovered_remainder() {
+    let m = synth::banded_like(500, 0.97, 11);
+    let r = reorder(&m, Reordering::ReverseCuthillMckee);
+    let g = GridSummary::new(&r.matrix, 8);
+    let cfg = mapper_cfg(8, 3, 2, 21, 2);
+    let (comp, _) = mapper::map_graph(&g, &cfg).unwrap();
+    let cplan = mapper::compile_composite(&r.matrix, &g, &comp).unwrap();
+    let eval = comp.evaluate(&g, 4);
+    assert_eq!(cplan.spilled_nnz(), eval.spilled_nnz);
+    assert_eq!(cplan.mapped_nnz(), eval.covered_nnz);
+    assert_eq!(
+        cplan.mapped_nnz() + cplan.spilled_nnz(),
+        r.matrix.nnz() as u64
+    );
+}
+
+/// Acceptance: composite batch execution on a 10k-node R-MAT graph is
+/// bit-identical to the dense oracle (integer inputs make every
+/// accumulation exact, so order cannot hide differences), for 1/2/8
+/// workers, and the global area ratio strictly beats the fixed-block
+/// baseline at the same window size.
+#[test]
+fn composite_execution_matches_dense_oracle_on_10k_rmat() {
+    let nodes = 10_000;
+    let m = synth::rmat_like(nodes, 60_000, 77);
+    let r = reorder(&m, Reordering::ReverseCuthillMckee);
+    let g = GridSummary::new(&r.matrix, 32);
+    // the paper's qh882 controller shape: N=28 windows at grid 32
+    let entry = autogmap::runtime::Manifest::builtin()
+        .config("qh882_dyn4")
+        .unwrap()
+        .clone();
+    let params = init_params(&entry, 5);
+    let cfg = MapperConfig {
+        infer: mapper::InferContext {
+            entry: entry.clone(),
+            params,
+            fill_rule: FillRule::Dynamic { grades: 4 },
+            weights: RewardWeights::new(0.8),
+            rounds: 2,
+            seed: 9,
+        },
+        overlap: 4,
+        workers: 2,
+    };
+    let (comp, report) = mapper::map_graph(&g, &cfg).unwrap();
+    assert!(report.windows > 2, "10k nodes must need several windows");
+    let eval = comp.evaluate(&g, 4);
+    assert_eq!(eval.coverage_windowed, 1.0);
+
+    // area strictly better than the fixed-block baseline at window size
+    let baseline = baselines::vanilla(g.n, entry.n);
+    let be = evaluate(&baseline, &g, RewardWeights::new(0.8));
+    assert!(
+        eval.area_ratio < be.area_ratio,
+        "composite area {} must beat fixed-block {}",
+        eval.area_ratio,
+        be.area_ratio
+    );
+
+    // bit-identical serving: integer-valued inputs -> exact arithmetic
+    let cplan = Arc::new(mapper::compile_composite(&r.matrix, &g, &comp).unwrap());
+    let xs: Vec<Vec<f64>> = (0..6)
+        .map(|s| {
+            (0..nodes)
+                .map(|i| ((i * 13 + s * 7) % 21) as f64 - 10.0)
+                .collect()
+        })
+        .collect();
+    let want: Vec<Vec<f64>> = xs.iter().map(|x| r.matrix.spmv(x)).collect();
+    assert_eq!(
+        cplan.mvm(&xs[0]),
+        want[0],
+        "single composite MVM must equal the dense oracle bit-for-bit"
+    );
+    for workers in [1usize, 2, 8] {
+        let exec = CompositeExecutor::new(cplan.clone(), workers);
+        let ys = exec.execute_batch(xs.clone());
+        assert_eq!(ys, want, "batch execution at {workers} workers");
+    }
+}
+
+/// MatrixMarket round-trip at 10k+ rows: R-MAT graphs written and re-read
+/// are identical (pattern, values, and dimensions).
+#[test]
+fn matrix_market_roundtrip_at_10k_rows_property() {
+    let dir = std::env::temp_dir().join("autogmap_mapper_mtx_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    check("mapper_mtx_roundtrip_10k", 3, |rng| {
+        let dim = 10_000 + rng.below(2_000) as usize;
+        let nnz = 2 * (dim + rng.below(2 * dim as u64) as usize);
+        let m = synth::rmat_like(dim, nnz, rng.next_u64());
+        let path = dir.join(format!("rt_{dim}.mtx"));
+        matrix_market::write(&path, &m).map_err(|e| e.to_string())?;
+        let back = matrix_market::read(&path).map_err(|e| e.to_string())?;
+        if back != m {
+            return Err(format!("round-trip mismatch at dim {dim}"));
+        }
+        Ok(())
+    });
+}
