@@ -188,7 +188,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  merged plan: {} tiles, {} programs; y=Ax bit-exact vs the dense oracle",
         cplan.plan.tiles.len(),
-        cplan.plan.programs.len()
+        cplan.plan.num_programs()
     );
     Ok(())
 }

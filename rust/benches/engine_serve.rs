@@ -1,10 +1,15 @@
 //! Bench: the execution engine's serving path vs the oracle simulator.
 //!
-//! Three rungs per workload, so the report separates the two wins:
-//!   oracle_mvm   — CrossbarArray::mvm, every tile walked (the seed path)
-//!   plan_mvm     — compiled ExecPlan, single thread (zero-tile elision)
-//!   batchN_wW    — BatchExecutor, W workers over N-request batches
-//!                  (elision × request parallelism)
+//! Rungs per workload, separating each win:
+//!   oracle_mvm     — CrossbarArray::mvm, every tile walked (the seed path)
+//!   plan_dense     — compiled ExecPlan, dense kernels forced (elision only)
+//!   plan_mvm       — compiled ExecPlan, density-adaptive kernels
+//!                    (elision × sparse CSR-within-tile kernels)
+//!   plan_batchN    — multi-RHS kernel, single thread: one arena traversal
+//!                    serves the whole batch
+//!   scalarN_wW     — BatchExecutor scalar mode, W workers over N requests
+//!   shardedN_wW    — BatchExecutor optimized mode: row bands sharded
+//!                    across W workers, multi-RHS within each span
 
 use autogmap::crossbar::place;
 use autogmap::engine::{compile, BatchExecutor};
@@ -31,35 +36,57 @@ fn main() {
         };
         let arr = place(&r.matrix, &g, &scheme).unwrap();
         let plan = compile(&r.matrix, &g, &scheme).unwrap();
+        let (dense_k, sparse_k) = plan.kernel_counts();
         println!(
-            "{name}: {} tiles scheduled, {} placed ({:.1}% elided)",
+            "{name}: {} tiles scheduled, {} placed ({:.1}% elided), {} bands, kernels {dense_k}d/{sparse_k}s",
             plan.scheduled_tiles,
             plan.tiles.len(),
-            plan.elision_ratio() * 100.0
+            plan.elision_ratio() * 100.0,
+            plan.bands().len()
         );
         let x: Vec<f64> = (0..g.dim).map(|i| (i as f64 * 0.1).sin()).collect();
         b.bench(&format!("oracle_mvm/{name} ({} tiles)", arr.tiles.len()), || {
             black_box(arr.mvm(&x))
         });
+        let mut dense_plan = plan.clone();
+        dense_plan.rekernel(0.0);
+        b.bench(&format!("plan_dense/{name} ({} tiles)", dense_plan.tiles.len()), || {
+            black_box(dense_plan.mvm(&x))
+        });
         b.bench(&format!("plan_mvm/{name} ({} tiles)", plan.tiles.len()), || {
             black_box(plan.mvm(&x))
         });
-        let plan = Arc::new(plan);
         let batch = 32usize;
         let xs: Vec<Vec<f64>> = (0..batch)
             .map(|s| (0..g.dim).map(|i| ((i + s) as f64 * 0.07).cos()).collect())
             .collect();
+        let mut ys: Vec<Vec<f64>> = Vec::new();
+        b.bench(&format!("plan_batch{batch}/{name}"), || {
+            plan.mvm_batch_into(&xs, &mut ys);
+            black_box(ys.len())
+        });
+        let plan = Arc::new(plan);
         for workers in [2usize, 8] {
             let exec = BatchExecutor::new(plan.clone(), workers);
             exec.recycle(exec.execute_batch(xs.clone())); // warm pool
             let stats = b
-                .bench(&format!("batch{batch}_w{workers}/{name}"), || {
+                .bench(&format!("scalar{batch}_w{workers}/{name}"), || {
                     let ys = exec.execute_batch(xs.clone());
                     exec.recycle(ys);
                 })
                 .clone();
             println!(
-                "  -> {:.0} req/s through {workers} workers",
+                "  -> {:.0} req/s scalar through {workers} workers",
+                batch as f64 / stats.median_s
+            );
+            let stats = b
+                .bench(&format!("sharded{batch}_w{workers}/{name}"), || {
+                    let ys = exec.execute_batch_sharded(xs.clone());
+                    exec.recycle(ys);
+                })
+                .clone();
+            println!(
+                "  -> {:.0} req/s sharded multi-RHS through {workers} workers",
                 batch as f64 / stats.median_s
             );
         }

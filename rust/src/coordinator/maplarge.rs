@@ -1,8 +1,9 @@
 //! `map-large` driver: R-MAT graph → RCM → hierarchical mapper → composite
 //! plan → fleet-sharded serving, with a machine-readable perf ledger
-//! (`BENCH_mapper.json`) tracking mapped nnz/s at 1/2/8 workers, the
-//! global area ratio against the fixed-block baseline at the same window
-//! size, and the scheme-cache hit rate.
+//! (`BENCH_mapper.json`) tracking mapped nnz/s at 1/2/8 workers, serving
+//! throughput in both executor modes (scalar per-request baseline vs
+//! band-sharded multi-RHS), the global area ratio against the fixed-block
+//! baseline at the same window size, and the scheme-cache hit rate.
 
 use crate::agent::params::{self, Params};
 use crate::agent::{TrainOptions, Trainer};
@@ -261,7 +262,7 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
          fleet {} banks, imbalance {:.3}, mvm {:.2} us / {:.2} nJ; spill {} nnz digital",
         cplan.plan.tiles.len(),
         cplan.window_tiles.len(),
-        cplan.plan.programs.len(),
+        cplan.plan.num_programs(),
         cplan.plan.elision_ratio() * 100.0,
         t0.elapsed().as_secs_f64(),
         fleet.banks,
@@ -271,7 +272,9 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
         cplan.spilled_nnz()
     );
 
-    // serve a synthetic trace through the composite executor
+    // serve a synthetic trace through the composite executor, in both
+    // modes: scalar per-request (the seed serving mode, the in-run
+    // baseline) and band-sharded multi-RHS (the optimized mode)
     let trace = engine::synth_trace(
         TraceKind::Uniform,
         g.dim,
@@ -280,14 +283,23 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
         &[(0, g.dim)],
         0x5eed,
     );
+    let (kernel_dense, kernel_sparse) = cplan.plan.kernel_counts();
     let cplan = Arc::new(cplan);
     let exec = CompositeExecutor::new(cplan.clone(), opts.workers.max(1));
     exec.recycle(exec.execute_batch(trace[0].clone())); // warmup the buffer pool
+    let t0 = Instant::now();
+    for batch_reqs in &trace {
+        let ys = exec.execute_batch(batch_reqs.clone());
+        exec.recycle(ys);
+    }
+    let scalar_wall = t0.elapsed().as_secs_f64();
+    let scalar_rps = opts.requests as f64 / scalar_wall;
+    exec.recycle(exec.execute_batch_sharded(trace[0].clone())); // warm the sharded path
     let mut latencies_ms = Vec::with_capacity(opts.requests);
     let t0 = Instant::now();
     for batch_reqs in &trace {
         let tb = Instant::now();
-        let ys = exec.execute_batch(batch_reqs.clone());
+        let ys = exec.execute_batch_sharded(batch_reqs.clone());
         let dt_ms = tb.elapsed().as_secs_f64() * 1e3;
         latencies_ms.extend(std::iter::repeat(dt_ms).take(ys.len()));
         exec.recycle(ys);
@@ -297,10 +309,13 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
     let p50 = bench::percentile(&latencies_ms, 50.0);
     let p99 = bench::percentile(&latencies_ms, 99.0);
     println!(
-        "  serve: {} requests in {:.3}s -> {:.0} req/s, p50 {:.3} ms, p99 {:.3} ms ({} workers)",
+        "  serve: {} requests, {} workers, kernels {kernel_dense} dense / {kernel_sparse} sparse: \
+         scalar {:.0} req/s; sharded multi-RHS {:.0} req/s ({:.2}x), p50 {:.3} ms, p99 {:.3} ms",
         opts.requests,
-        wall,
+        opts.workers.max(1),
+        scalar_rps,
         throughput,
+        throughput / scalar_rps.max(1e-12),
         p50,
         p99
     );
@@ -348,15 +363,25 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
         ("spilled_nnz", Json::Num(scale.eval.spilled_nnz as f64)),
         ("spill_coo_bytes", Json::Num(scale.eval.spill_coo_bytes as f64)),
         ("placed_tiles", Json::Num(cplan.plan.tiles.len() as f64)),
-        ("programs", Json::Num(cplan.plan.programs.len() as f64)),
+        ("programs", Json::Num(cplan.plan.num_programs() as f64)),
         ("elision_ratio", Json::Num(cplan.plan.elision_ratio())),
         ("banks", Json::Num(fleet.banks as f64)),
         ("fleet_imbalance", Json::Num(fleet.imbalance())),
         ("fleet_latency_ns", Json::Num(fleet.mvm_latency_ns(&cost))),
         ("fleet_energy_pj", Json::Num(fleet.mvm_energy_pj(&cost))),
+        ("kernel_dense_programs", Json::Num(kernel_dense as f64)),
+        ("kernel_sparse_programs", Json::Num(kernel_sparse as f64)),
         ("workers", Json::Num(opts.workers as f64)),
         ("requests", Json::Num(opts.requests as f64)),
+        // the baseline here is the request-parallel scalar executor at
+        // --workers (serve-bench's single-thread baseline is named
+        // scalar_rps there; this matches its parallel_scalar_rps field)
+        ("parallel_scalar_rps", Json::Num(scalar_rps)),
         ("throughput_rps", Json::Num(throughput)),
+        (
+            "serve_speedup_vs_parallel_scalar",
+            Json::Num(throughput / scalar_rps.max(1e-300)),
+        ),
         ("p50_ms", Json::Num(p50)),
         ("p99_ms", Json::Num(p99)),
     ];

@@ -4,11 +4,22 @@
 //! queue/condvar machinery, with panic propagation instead of hangs).
 //!
 //! Numerics stay on the host (the banks of a [`super::fleet::Fleet`] model
-//! latency/energy, not arithmetic): each request is executed by exactly one
-//! worker, which walks the plan's tile schedule in compile order. That
-//! makes every answer **bit-identical to the single-threaded
-//! [`crate::crossbar::CrossbarArray::mvm`] oracle** — parallelism is
-//! across requests, never inside one request's accumulation.
+//! latency/energy, not arithmetic). Two serving modes, both **bit-identical
+//! to the single-threaded scalar loop** (and therefore to the
+//! [`crate::crossbar::CrossbarArray::mvm`] oracle) for any worker count and
+//! batch size:
+//!
+//! - [`BatchExecutor::execute_batch`] — the seed mode: each request is
+//!   executed by exactly one worker, which walks the plan's tile schedule
+//!   in band order. Parallelism is across requests only.
+//! - [`BatchExecutor::execute_batch_sharded`] — the optimized mode: the
+//!   plan's disjoint row bands are partitioned into nnz-balanced spans
+//!   ([`ServablePlan::shard_spans`]), each span goes to one worker, and
+//!   that worker serves **every** request's rows for its span with the
+//!   multi-RHS kernel ([`ServablePlan::mvm_span_batch`]) — one arena
+//!   traversal per span per batch instead of per request. Each output row
+//!   is written by exactly one worker in a fixed band order, so results
+//!   carry no scheduling nondeterminism.
 //!
 //! Output buffers are pooled: a worker pops a previously returned buffer
 //! (or allocates on a cold pool), fills it in place, and hands it to the
@@ -20,12 +31,28 @@ use crate::util::pool::WorkerPool;
 use std::sync::{Arc, Mutex};
 
 /// Anything the batch executor can serve: a compiled plan with a known
-/// input dimension and an in-place MVM. [`ExecPlan`] is the engine's own
-/// shape; the mapper's `CompositePlan` (merged window plans + digital
-/// spill) implements it too, so both serve through one executor.
+/// input dimension, an in-place scalar MVM, and a span-sharded multi-RHS
+/// kernel. [`ExecPlan`] is the engine's own shape; the mapper's
+/// `CompositePlan` (merged window plans + digital spill) implements it
+/// too, so both serve through one executor.
 pub trait ServablePlan: Send + Sync + 'static {
     fn dim(&self) -> usize;
     fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>);
+
+    /// Disjoint, ordered row spans covering [0, dim()) for intra-request
+    /// sharding; the executor hands each span to one worker. Spans must
+    /// not split a row band (every output row belongs to exactly one
+    /// span). Default: a single span, i.e. no intra-request sharding.
+    fn shard_spans(&self, shards: usize) -> Vec<(usize, usize)> {
+        let _ = shards;
+        vec![(0, self.dim())]
+    }
+
+    /// Multi-RHS span kernel: fill `outs[b]` (zero-filled, length
+    /// `span.1 - span.0`) with output rows [span.0, span.1) of request
+    /// `xs[b]`. Must be bit-identical to [`Self::mvm_into`] restricted to
+    /// those rows.
+    fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]);
 }
 
 impl ServablePlan for ExecPlan {
@@ -35,6 +62,14 @@ impl ServablePlan for ExecPlan {
 
     fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
         ExecPlan::mvm_into(self, x, y)
+    }
+
+    fn shard_spans(&self, shards: usize) -> Vec<(usize, usize)> {
+        self.band_spans(shards)
+    }
+
+    fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        ExecPlan::mvm_span_batch(self, span, xs, outs)
     }
 }
 
@@ -63,12 +98,7 @@ impl<P: ServablePlan> BatchExecutor<P> {
         &self.plan
     }
 
-    /// Execute a batch of input vectors; blocks until every request in the
-    /// batch completes and returns outputs in request order.
-    pub fn execute_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
-        if xs.is_empty() {
-            return Vec::new();
-        }
+    fn check_batch(&self, xs: &[Vec<f64>]) {
         for (i, x) in xs.iter().enumerate() {
             assert_eq!(
                 x.len(),
@@ -78,6 +108,16 @@ impl<P: ServablePlan> BatchExecutor<P> {
                 self.plan.dim()
             );
         }
+    }
+
+    /// Execute a batch of input vectors; blocks until every request in the
+    /// batch completes and returns outputs in request order. One worker
+    /// per request, scalar kernels (the seed serving mode).
+    pub fn execute_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.check_batch(&xs);
         let xs = Arc::new(xs);
         let jobs: Vec<_> = (0..xs.len())
             .map(|i| {
@@ -92,6 +132,57 @@ impl<P: ServablePlan> BatchExecutor<P> {
             })
             .collect();
         self.pool.run(jobs)
+    }
+
+    /// Execute a batch in the optimized mode: row bands sharded across
+    /// workers *within* the request batch, each shard serving all
+    /// requests' rows with the multi-RHS kernel. Outputs are stitched in
+    /// fixed span order and are bit-identical to [`Self::execute_batch`]
+    /// for any worker count and batch size.
+    pub fn execute_batch_sharded(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.check_batch(&xs);
+        let spans = self.plan.shard_spans(self.pool.workers());
+        let xs = Arc::new(xs);
+        let jobs: Vec<_> = spans
+            .iter()
+            .map(|&span| {
+                let xs = xs.clone();
+                let plan = self.plan.clone();
+                move || {
+                    let rows = span.1 - span.0;
+                    let mut outs: Vec<Vec<f64>> =
+                        (0..xs.len()).map(|_| vec![0.0f64; rows]).collect();
+                    plan.mvm_span_batch(span, &xs, &mut outs);
+                    outs
+                }
+            })
+            .collect();
+        let parts = self.pool.run(jobs);
+        let batch = xs.len();
+        let mut ys: Vec<Vec<f64>> = Vec::with_capacity(batch);
+        {
+            let mut pool = self.buffers.lock().unwrap();
+            for _ in 0..batch {
+                ys.push(pool.pop().unwrap_or_default());
+            }
+        }
+        // spans are contiguous and cover [0, dim), so every element is
+        // overwritten below — only re-shape buffers that need it
+        for y in ys.iter_mut() {
+            if y.len() != self.plan.dim() {
+                y.clear();
+                y.resize(self.plan.dim(), 0.0);
+            }
+        }
+        for (span, part) in spans.iter().zip(parts) {
+            for (y, rows) in ys.iter_mut().zip(part) {
+                y[span.0..span.1].copy_from_slice(&rows);
+            }
+        }
+        ys
     }
 
     /// Return output buffers to the pool so later batches reuse them.
@@ -127,6 +218,7 @@ mod tests {
         let plan = Arc::new(compile(&m, &g, &scheme).unwrap());
         let exec = BatchExecutor::new(plan, 2);
         assert!(exec.execute_batch(Vec::new()).is_empty());
+        assert!(exec.execute_batch_sharded(Vec::new()).is_empty());
     }
 
     #[test]
@@ -144,10 +236,15 @@ mod tests {
         assert_eq!(exec.pooled_buffers(), 0);
         exec.recycle(ys);
         assert_eq!(exec.pooled_buffers(), 4);
-        let ys2 = exec.execute_batch(xs);
+        let ys2 = exec.execute_batch(xs.clone());
         // all four buffers came back out of the pool
         assert_eq!(exec.pooled_buffers(), 0);
         assert_eq!(ys2.len(), 4);
+        // the sharded mode shares the same pool
+        exec.recycle(ys2);
+        let ys3 = exec.execute_batch_sharded(xs);
+        assert_eq!(exec.pooled_buffers(), 0);
+        assert_eq!(ys3.len(), 4);
     }
 
     #[test]
@@ -172,13 +269,17 @@ mod tests {
                 assert!((a - b).abs() < 1e-9, "{a} vs {b}");
             }
         }
+        // and the sharded mode returns the identical answers
+        let ys2 = exec.execute_batch_sharded(xs);
+        assert_eq!(ys, ys2, "sharded mode must be bit-identical");
     }
 
     #[test]
     fn batch_executor_matches_oracle_property() {
         // The engine acceptance property: across random matrices, schemes,
-        // batch sizes, and fleet sizes (1, 2, 8 banks/workers), the batch
-        // executor reproduces CrossbarArray::mvm within 1e-9 everywhere.
+        // batch sizes, and fleet sizes (1, 2, 8 banks/workers), both
+        // serving modes reproduce CrossbarArray::mvm within 1e-9
+        // everywhere, and agree with each other exactly.
         check("engine_batch_matches_oracle", 10, |rng| {
             let dim = 16 + rng.below(60) as usize;
             let mut coo = Coo::new(dim, dim);
@@ -221,6 +322,10 @@ mod tests {
                             ));
                         }
                     }
+                }
+                let sharded = exec.execute_batch_sharded(xs);
+                if sharded != ys {
+                    return Err(format!("banks {banks}: sharded mode diverged"));
                 }
             }
             Ok(())

@@ -13,6 +13,9 @@
 //! - [`AssignPolicy::BalancedNnz`] — LPT greedy on tile non-zero counts
 //!   (heaviest tile first onto the lightest bank), which is what a learned
 //!   sparsity-aware scheme enables: the planner knows each tile's load.
+//!   Per-tile nnz comes from the plan arena's compile-time metadata
+//!   ([`ExecPlan::program_nnz`]), so assignment never rescans program
+//!   buffers.
 
 use super::plan::ExecPlan;
 use crate::crossbar::cost::{CostEstimate, CostModel};

@@ -11,23 +11,35 @@
 //!    own plan ([`compile_rects`]) and the plans merge ([`merge_plans`])
 //!    into one fleet-servable schedule with cross-window program dedup.
 //! 1. **[`plan`]** — compile `Scheme + Csr + GridSummary` into an
-//!    [`ExecPlan`]: a flat tile schedule with all-zero tiles elided,
-//!    identical tile programmings deduplicated, per-tile clipped extents,
-//!    and JSON (de)serialization so plans ship as deployable artifacts.
+//!    [`ExecPlan`]: a tile schedule with all-zero tiles elided, identical
+//!    tile programmings deduplicated into one contiguous f32 **program
+//!    arena** (per-program offset, extents, compile-time nnz, and kernel
+//!    kind in [`ProgramMeta`]), tiles stable-sorted into disjoint **row
+//!    bands** ([`Band`]) for write locality and intra-request sharding,
+//!    **density-adaptive kernels** (dense row-dot vs compiled
+//!    CSR-within-tile below [`plan::DEFAULT_SPARSE_THRESHOLD`]), a
+//!    **multi-RHS kernel** ([`ExecPlan::mvm_span_batch`]) that serves a
+//!    whole batch per arena traversal, and JSON (de)serialization
+//!    (version 2 artifacts; version 1 still loads).
 //! 2. **[`fleet`]** — distribute the plan's tiles over N simulated
 //!    crossbar banks ([`Fleet`]): round-robin or nnz-load-balanced
-//!    assignment, with per-bank energy/latency accounting built on
+//!    assignment (reading the arena's cached per-program nnz — no buffer
+//!    rescans), with per-bank energy/latency accounting built on
 //!    [`crate::crossbar::cost::CostModel`].
 //! 3. **[`batch`]** — serve request traffic: a std-thread worker pool
-//!    ([`BatchExecutor`]) executes batches of input vectors with pooled
-//!    output buffers, bit-identical to the
-//!    [`crate::crossbar::CrossbarArray::mvm`] oracle.
+//!    ([`BatchExecutor`]) with two modes, both bit-identical to the
+//!    [`crate::crossbar::CrossbarArray::mvm`] oracle for any worker count
+//!    and batch size — scalar per-request fan-out (the seed mode), and
+//!    the optimized mode that shards nnz-balanced row-band spans across
+//!    workers *within* a request batch, each span serving every request
+//!    through the multi-RHS kernel.
 //!
 //! The `serve-bench` CLI subcommand drives stages 1–3 against synthetic
-//! request traces (this module's [`synth_trace`]) and reports throughput,
-//! latency percentiles, and the zero-tile elision ratio; `map-large`
-//! drives the whole pipeline from a 100k-node graph down to served
-//! traffic (`BENCH_mapper.json`).
+//! request traces (this module's [`synth_trace`]), reports the
+//! scalar-baseline and optimized throughput side by side (nnz/s, p50/p99),
+//! and records both in `BENCH_engine.json`; `map-large` drives the whole
+//! pipeline from a 100k-node graph down to served traffic
+//! (`BENCH_mapper.json`).
 
 pub mod batch;
 pub mod fleet;
@@ -35,7 +47,9 @@ pub mod plan;
 
 pub use batch::{BatchExecutor, ServablePlan};
 pub use fleet::{AssignPolicy, BankLoad, Fleet};
-pub use plan::{compile, compile_rects, merge_plans, ExecPlan, TileSpec};
+pub use plan::{
+    compile, compile_rects, merge_plans, Band, ExecPlan, KernelKind, ProgramMeta, TileSpec,
+};
 
 use crate::util::rng::Pcg64;
 use anyhow::{bail, Result};

@@ -14,14 +14,34 @@
 //! - **clipped extents**: each tile records the rows×cols actually inside
 //!   the matrix, so edge tiles (882 = 27·32 + 18) neither compute nor
 //!   account for their zero-padded overhang;
+//! - **program arena**: all program buffers live in one contiguous f32
+//!   arena ([`ProgramMeta`] records offset, extents, a compile-time nnz
+//!   count, and the selected kernel), so an MVM streams one allocation
+//!   instead of chasing a `Vec<Vec<f32>>`;
+//! - **row bands**: the tile schedule is stable-sorted by `row0` into
+//!   disjoint [`Band`]s. Tiles in one band write one output row range, so
+//!   bands shard across workers *within* a request with no write
+//!   contention, and the stable sort preserves each row's accumulation
+//!   order exactly;
+//! - **density-adaptive kernels**: programs whose density falls below
+//!   [`DEFAULT_SPARSE_THRESHOLD`] execute through a compiled
+//!   CSR-within-tile kernel instead of the dense row-dot kernel
+//!   ([`KernelKind`], chosen at compile time, recorded in the artifact);
+//! - **multi-RHS batching**: [`ExecPlan::mvm_span_batch`] computes a
+//!   Y-panel = tile × X-panel, so one traversal of the arena serves a
+//!   whole batch of requests;
 //! - **JSON serialization**: plans save/load as standalone artifacts
-//!   (manifest-style, [`crate::util::json`]), so a mapping trained once
-//!   deploys without re-running placement.
+//!   (version 2: arena + per-program metadata; the version 1 nested-array
+//!   format still loads), so a mapping trained once deploys without
+//!   re-running placement.
 //!
-//! Executing a plan is bit-compatible with [`CrossbarArray::mvm`]
-//! (`crate::crossbar::CrossbarArray::mvm`): tiles are scheduled in the
-//! same scheme order and each row accumulates in the same element order,
-//! so elision only removes exact zeros from the sums.
+//! Exactness contract: for finite inputs every kernel is **bit-identical**
+//! to the seed scalar tile-at-a-time loop (and therefore to
+//! [`crate::crossbar::CrossbarArray::mvm`]): the sparse kernel only skips
+//! exact-zero products (adding ±0.0 never changes a finite accumulator),
+//! the multi-RHS kernel runs each (row, request) accumulation in the same
+//! scalar column order, and band sharding assigns each output row to
+//! exactly one worker with a fixed intra-band tile order.
 
 use crate::graph::{Csr, GridSummary};
 use crate::scheme::{GridRect, Scheme};
@@ -29,6 +49,10 @@ use crate::util::json::{num_arr, obj, Json};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+
+/// Programs whose density (nnz / rows·cols) is strictly below this execute
+/// through the compiled CSR-within-tile kernel.
+pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.25;
 
 /// One scheduled tile: geometry plus a reference into the deduplicated
 /// program table.
@@ -40,33 +64,88 @@ pub struct TileSpec {
     /// clipped extents: rows×cols actually inside the matrix (≤ K each)
     pub rows: usize,
     pub cols: usize,
-    /// index into [`ExecPlan::programs`]
+    /// index into the plan's program table
     pub program: usize,
 }
 
+/// Which compiled kernel a program executes through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// dense row-dot over the arena slice (the seed kernel)
+    Dense,
+    /// CSR-within-tile: skip exact zeros, same accumulation order
+    Sparse,
+}
+
+/// Per-program arena metadata: where the dense buffer lives, its extents,
+/// its non-zero count (cached at compile time — load balancing reads it
+/// without scanning buffers), and the selected kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgramMeta {
+    /// offset of the dense row-major buffer in the arena
+    pub offset: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// non-zeros in the buffer, counted once at compile time
+    pub nnz: u32,
+    pub kernel: KernelKind,
+    /// base into the sparse row-pointer arena (valid when `kernel` is
+    /// [`KernelKind::Sparse`]; this program owns `rows + 1` entries)
+    sp_row: usize,
+    /// base into the sparse col/val arenas
+    sp_val: usize,
+}
+
+/// A maximal run of tiles writing one disjoint output row range. Bands are
+/// ordered by `row0` and pairwise disjoint in rows, so they shard across
+/// workers within a request with no write contention.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Band {
+    /// first output row the band writes
+    pub row0: usize,
+    /// one past the last output row
+    pub row_end: usize,
+    /// tile range [tile0, tile1) in the plan's (band-sorted) schedule
+    pub tile0: usize,
+    pub tile1: usize,
+    /// non-zeros across the band's tiles (shard balancing weight)
+    pub nnz: u64,
+}
+
 /// A compiled, servable mapping plan: the flat tile schedule of one scheme
-/// with all-zero tiles elided and identical programmings shared.
+/// with all-zero tiles elided, identical programmings shared, programs
+/// packed into one arena, and tiles sorted into disjoint row bands.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecPlan {
     /// physical crossbar tile side K
     pub k: usize,
     /// matrix dimension D
     pub dim: usize,
-    /// tile schedule, in scheme placement order
+    /// tile schedule, stable-sorted by `row0` into row bands (within a
+    /// band, tiles keep their scheme placement order, so every output
+    /// row's accumulation order matches the placement oracle)
     pub tiles: Vec<TileSpec>,
-    /// deduplicated conductance buffers; `programs[t.program]` is
-    /// `t.rows × t.cols`, row-major with stride `t.cols`
-    pub programs: Vec<Vec<f32>>,
     /// tiles the scheme demanded before elision
     pub scheduled_tiles: usize,
     /// all-zero tiles dropped from the schedule
     pub elided_tiles: usize,
+    /// contiguous dense program storage; `progs[p]` slices into it
+    arena: Vec<f32>,
+    progs: Vec<ProgramMeta>,
+    /// CSR-within-tile arenas for sparse-kernel programs: per program
+    /// `rows + 1` row pointers (relative to its `sp_val` base) and the
+    /// column-ordered (col, val) entries
+    sp_rowptr: Vec<u32>,
+    sp_cols: Vec<u32>,
+    sp_vals: Vec<f32>,
+    bands: Vec<Band>,
 }
 
 /// Compile a scheme against a matrix into an executable plan.
 ///
-/// Tile traversal order matches [`crate::crossbar::place`] exactly, so a
-/// plan's MVM reproduces the oracle's accumulation order bit for bit.
+/// Tile traversal order matches [`crate::crossbar::place`] up to the
+/// band-stable sort, so a plan's MVM reproduces the oracle's per-row
+/// accumulation order bit for bit.
 pub fn compile(m: &Csr, g: &GridSummary, scheme: &Scheme) -> Result<ExecPlan> {
     scheme
         .validate(g.n)
@@ -142,14 +221,7 @@ pub fn compile_rects(m: &Csr, g: &GridSummary, rects: &[GridRect]) -> Result<Exe
             }
         }
     }
-    Ok(ExecPlan {
-        k,
-        dim: g.dim,
-        tiles,
-        programs,
-        scheduled_tiles: scheduled,
-        elided_tiles: elided,
-    })
+    Ok(ExecPlan::from_parts(k, g.dim, tiles, programs, scheduled, elided))
 }
 
 /// Merge several plans over the *same* matrix into one flat schedule — the
@@ -157,9 +229,10 @@ pub fn compile_rects(m: &Csr, g: &GridSummary, rects: &[GridRect]) -> Result<Exe
 /// compiles to its own [`ExecPlan`], and the merged plan is what a
 /// [`super::fleet::Fleet`] distributes and a
 /// [`super::batch::BatchExecutor`] serves. Tiles concatenate in part
-/// order (so accumulation order is the parts' order), and bit-identical
-/// programmings are re-deduplicated *across* parts — repeated window
-/// sparsity patterns share one program buffer fleet-wide.
+/// order before the band sort (so each output row accumulates in the
+/// parts' order), and bit-identical programmings are re-deduplicated
+/// *across* parts — repeated window sparsity patterns share one program
+/// buffer fleet-wide.
 pub fn merge_plans(parts: &[ExecPlan]) -> Result<ExecPlan> {
     ensure!(!parts.is_empty(), "cannot merge zero plans");
     let k = parts[0].k;
@@ -183,12 +256,12 @@ pub fn merge_plans(parts: &[ExecPlan]) -> Result<ExecPlan> {
         // taken from its first referencing tile — all tiles sharing a
         // program share extents, that is what the part's compile deduped
         // on), then remap tiles in O(1) each
-        let mut remap: Vec<Option<usize>> = vec![None; p.programs.len()];
+        let mut remap: Vec<Option<usize>> = vec![None; p.progs.len()];
         for t in &p.tiles {
             let program = match remap[t.program] {
                 Some(id) => id,
                 None => {
-                    let data = &p.programs[t.program];
+                    let data = p.program(t.program);
                     let mut key = Vec::with_capacity(data.len() + 2);
                     key.push(t.rows as u32);
                     key.push(t.cols as u32);
@@ -197,7 +270,7 @@ pub fn merge_plans(parts: &[ExecPlan]) -> Result<ExecPlan> {
                         Some(&id) => id,
                         None => {
                             let id = programs.len();
-                            programs.push(data.clone());
+                            programs.push(data.to_vec());
                             dedup.insert(key, id);
                             id
                         }
@@ -215,36 +288,289 @@ pub fn merge_plans(parts: &[ExecPlan]) -> Result<ExecPlan> {
             });
         }
     }
-    Ok(ExecPlan {
-        k,
-        dim,
-        tiles,
-        programs,
-        scheduled_tiles: scheduled,
-        elided_tiles: elided,
-    })
+    Ok(ExecPlan::from_parts(k, dim, tiles, programs, scheduled, elided))
 }
 
 impl ExecPlan {
+    /// Assemble a plan from a raw tile schedule and per-program dense
+    /// buffers: pack the arena, cache per-program nnz, band-sort the
+    /// schedule, and select kernels at the default density threshold.
+    fn from_parts(
+        k: usize,
+        dim: usize,
+        mut tiles: Vec<TileSpec>,
+        mut programs: Vec<Vec<f32>>,
+        scheduled_tiles: usize,
+        elided_tiles: usize,
+    ) -> ExecPlan {
+        // tiles sharing a program must share extents (the dedup key
+        // includes them); artifacts that violate this get the program
+        // duplicated per distinct extents so kernels can trust geometry
+        let mut extents: Vec<Option<(usize, usize)>> = vec![None; programs.len()];
+        let mut variants: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        for t in &mut tiles {
+            match extents[t.program] {
+                None => extents[t.program] = Some((t.rows, t.cols)),
+                Some(e) if e == (t.rows, t.cols) => {}
+                Some(_) => {
+                    let key = (t.program, t.rows, t.cols);
+                    let id = *variants.entry(key).or_insert_with(|| {
+                        let data = programs[t.program].clone();
+                        programs.push(data);
+                        extents.push(Some((t.rows, t.cols)));
+                        programs.len() - 1
+                    });
+                    t.program = id;
+                }
+            }
+        }
+        let mut arena = Vec::with_capacity(programs.iter().map(|p| p.len()).sum());
+        let mut progs = Vec::with_capacity(programs.len());
+        for (i, p) in programs.into_iter().enumerate() {
+            let (rows, cols) =
+                extents[i].unwrap_or((if p.is_empty() { 0 } else { 1 }, p.len()));
+            let nnz = p.iter().filter(|v| **v != 0.0).count() as u32;
+            progs.push(ProgramMeta {
+                offset: arena.len(),
+                rows,
+                cols,
+                nnz,
+                kernel: KernelKind::Dense,
+                sp_row: 0,
+                sp_val: 0,
+            });
+            arena.extend_from_slice(&p);
+        }
+        let mut plan = ExecPlan::assemble(k, dim, tiles, arena, progs, scheduled_tiles, elided_tiles);
+        plan.rekernel(DEFAULT_SPARSE_THRESHOLD);
+        plan
+    }
+
+    /// The invariant-establishing constructor tail shared by compile and
+    /// the artifact readers: band-sort the schedule, build the bands, and
+    /// derive the sparse arenas from the programs' current kernel flags.
+    fn assemble(
+        k: usize,
+        dim: usize,
+        mut tiles: Vec<TileSpec>,
+        arena: Vec<f32>,
+        progs: Vec<ProgramMeta>,
+        scheduled_tiles: usize,
+        elided_tiles: usize,
+    ) -> ExecPlan {
+        let bands = band_layout(&mut tiles, &progs);
+        let mut plan = ExecPlan {
+            k,
+            dim,
+            tiles,
+            scheduled_tiles,
+            elided_tiles,
+            arena,
+            progs,
+            sp_rowptr: Vec::new(),
+            sp_cols: Vec::new(),
+            sp_vals: Vec::new(),
+            bands,
+        };
+        plan.rebuild_sparse();
+        plan
+    }
+
+    /// Re-select kernels: programs with density strictly below `threshold`
+    /// get the compiled CSR-within-tile kernel, the rest the dense
+    /// row-dot kernel. `0.0` forces every program dense,
+    /// `f64::INFINITY` forces every program sparse. Results are
+    /// bit-identical either way; only the instruction mix changes.
+    pub fn rekernel(&mut self, threshold: f64) {
+        for p in &mut self.progs {
+            let cells = p.rows * p.cols;
+            p.kernel = if cells > 0 && (p.nnz as f64 / cells as f64) < threshold {
+                KernelKind::Sparse
+            } else {
+                KernelKind::Dense
+            };
+        }
+        self.rebuild_sparse();
+    }
+
+    /// Rebuild the sparse arenas from the current kernel flags (compile
+    /// and the v2 artifact reader both end here, so a loaded plan is
+    /// field-identical to the plan that was saved).
+    fn rebuild_sparse(&mut self) {
+        self.sp_rowptr.clear();
+        self.sp_cols.clear();
+        self.sp_vals.clear();
+        for p in &mut self.progs {
+            if p.kernel != KernelKind::Sparse {
+                p.sp_row = 0;
+                p.sp_val = 0;
+                continue;
+            }
+            p.sp_row = self.sp_rowptr.len();
+            p.sp_val = self.sp_vals.len();
+            let data = &self.arena[p.offset..p.offset + p.rows * p.cols];
+            let mut count = 0u32;
+            self.sp_rowptr.push(0);
+            for row in data.chunks_exact(p.cols.max(1)) {
+                for (c, &v) in row.iter().enumerate() {
+                    if v != 0.0 {
+                        self.sp_cols.push(c as u32);
+                        self.sp_vals.push(v);
+                        count += 1;
+                    }
+                }
+                self.sp_rowptr.push(count);
+            }
+        }
+    }
+
     /// y' = A'x' over the scheduled tiles, writing into a reusable output
-    /// buffer (cleared and resized to `dim`). Accumulation order matches
-    /// [`crate::crossbar::CrossbarArray::mvm`].
+    /// buffer (cleared and resized to `dim`). Per-row accumulation order
+    /// matches [`crate::crossbar::CrossbarArray::mvm`].
     pub fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.dim, "input vector length mismatch");
         y.clear();
         y.resize(self.dim, 0.0);
+        self.accumulate_tiles(x, y);
+    }
+
+    /// Scalar kernel core: run the whole schedule, accumulating into `out`
+    /// (length `dim`), dispatching each tile's compiled kernel.
+    fn accumulate_tiles(&self, x: &[f64], out: &mut [f64]) {
         for t in &self.tiles {
-            let prog = &self.programs[t.program];
-            for r in 0..t.rows {
-                let row = &prog[r * t.cols..r * t.cols + t.cols];
-                let xs = &x[t.col0..t.col0 + t.cols];
-                let mut acc = 0.0f64;
-                for (gv, xv) in row.iter().zip(xs.iter()) {
-                    acc += *gv as f64 * xv;
+            let p = &self.progs[t.program];
+            let xs = &x[t.col0..t.col0 + t.cols];
+            match p.kernel {
+                KernelKind::Dense => {
+                    let prog = &self.arena[p.offset..p.offset + t.rows * t.cols];
+                    for (r, row) in prog.chunks_exact(t.cols).enumerate() {
+                        let mut acc = 0.0f64;
+                        for (gv, xv) in row.iter().zip(xs.iter()) {
+                            acc += *gv as f64 * xv;
+                        }
+                        out[t.row0 + r] += acc;
+                    }
                 }
-                y[t.row0 + r] += acc;
+                KernelKind::Sparse => {
+                    let rp = &self.sp_rowptr[p.sp_row..p.sp_row + t.rows + 1];
+                    for (r, w) in rp.windows(2).enumerate() {
+                        let (s, e) = (w[0] as usize, w[1] as usize);
+                        let cols = &self.sp_cols[p.sp_val + s..p.sp_val + e];
+                        let vals = &self.sp_vals[p.sp_val + s..p.sp_val + e];
+                        let mut acc = 0.0f64;
+                        for (c, v) in cols.iter().zip(vals.iter()) {
+                            acc += *v as f64 * xs[*c as usize];
+                        }
+                        out[t.row0 + r] += acc;
+                    }
+                }
             }
         }
+    }
+
+    /// Multi-RHS span kernel: compute output rows [span.0, span.1) for
+    /// every request in `xs`, one traversal of the arena for the whole
+    /// batch. `outs[b]` must be zero-filled with length `span.1 - span.0`.
+    /// `span` must lie on band boundaries (anything [`Self::band_spans`]
+    /// returns does). Per (row, request) the accumulation order is exactly
+    /// [`Self::mvm_into`]'s, so results are bit-identical.
+    pub fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        assert_eq!(xs.len(), outs.len(), "request/output count mismatch");
+        let b0 = self.bands.partition_point(|b| b.row_end <= span.0);
+        let b1 = self.bands.partition_point(|b| b.row0 < span.1);
+        for band in &self.bands[b0..b1] {
+            debug_assert!(
+                band.row0 >= span.0 && band.row_end <= span.1,
+                "span {span:?} splits band at row {}",
+                band.row0
+            );
+            for t in &self.tiles[band.tile0..band.tile1] {
+                let p = &self.progs[t.program];
+                match p.kernel {
+                    KernelKind::Dense => {
+                        let prog = &self.arena[p.offset..p.offset + t.rows * t.cols];
+                        for (r, row) in prog.chunks_exact(t.cols).enumerate() {
+                            let orow = t.row0 - span.0 + r;
+                            for (x, out) in xs.iter().zip(outs.iter_mut()) {
+                                let xv = &x[t.col0..t.col0 + t.cols];
+                                let mut acc = 0.0f64;
+                                for (gv, xs_v) in row.iter().zip(xv.iter()) {
+                                    acc += *gv as f64 * xs_v;
+                                }
+                                out[orow] += acc;
+                            }
+                        }
+                    }
+                    KernelKind::Sparse => {
+                        let rp = &self.sp_rowptr[p.sp_row..p.sp_row + t.rows + 1];
+                        for (r, w) in rp.windows(2).enumerate() {
+                            let (s, e) = (w[0] as usize, w[1] as usize);
+                            let cols = &self.sp_cols[p.sp_val + s..p.sp_val + e];
+                            let vals = &self.sp_vals[p.sp_val + s..p.sp_val + e];
+                            let orow = t.row0 - span.0 + r;
+                            for (x, out) in xs.iter().zip(outs.iter_mut()) {
+                                let xv = &x[t.col0..];
+                                let mut acc = 0.0f64;
+                                for (c, v) in cols.iter().zip(vals.iter()) {
+                                    acc += *v as f64 * xv[*c as usize];
+                                }
+                                out[orow] += acc;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS convenience over the full row range: `ys` is cleared and
+    /// resized to match `xs`; each `ys[b]` is bit-identical to
+    /// `mvm_into(&xs[b], ..)`.
+    pub fn mvm_batch_into(&self, xs: &[Vec<f64>], ys: &mut Vec<Vec<f64>>) {
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.dim, "request {i} input length mismatch");
+        }
+        ys.resize_with(xs.len(), Vec::new);
+        for y in ys.iter_mut() {
+            y.clear();
+            y.resize(self.dim, 0.0);
+        }
+        self.mvm_span_batch((0, self.dim), xs, ys);
+    }
+
+    /// Partition the row bands into at most `shards` contiguous,
+    /// nnz-balanced row spans that together cover [0, dim). Span
+    /// boundaries fall on band starts, so no band is split and each
+    /// output row belongs to exactly one span.
+    pub fn band_spans(&self, shards: usize) -> Vec<(usize, usize)> {
+        let shards = shards.max(1).min(self.bands.len().max(1));
+        if self.bands.is_empty() || shards == 1 {
+            return vec![(0, self.dim)];
+        }
+        let total: u64 = self.bands.iter().map(|b| b.nnz).sum::<u64>().max(1);
+        let mut starts = vec![0usize];
+        let mut consumed = 0u64;
+        for (i, b) in self.bands.iter().enumerate() {
+            if starts.len() == shards {
+                break;
+            }
+            consumed += b.nnz;
+            let remaining_bands = self.bands.len() - i - 1;
+            if remaining_bands == 0 {
+                break;
+            }
+            let remaining_groups = shards - starts.len();
+            let target = total * starts.len() as u64 / shards as u64;
+            if consumed >= target || remaining_bands == remaining_groups {
+                starts.push(self.bands[i + 1].row0);
+            }
+        }
+        let mut spans = Vec::with_capacity(starts.len());
+        for (i, &s) in starts.iter().enumerate() {
+            let e = if i + 1 < starts.len() { starts[i + 1] } else { self.dim };
+            spans.push((s, e));
+        }
+        spans
     }
 
     /// Allocating convenience wrapper around [`Self::mvm_into`].
@@ -268,29 +594,66 @@ impl ExecPlan {
         if self.tiles.is_empty() {
             0.0
         } else {
-            1.0 - self.programs.len() as f64 / self.tiles.len() as f64
+            1.0 - self.progs.len() as f64 / self.tiles.len() as f64
         }
     }
 
     /// Programmed cells inside the matrix (Σ rows·cols over the schedule).
     pub fn cells(&self) -> u64 {
+        self.tiles.iter().map(|t| (t.rows * t.cols) as u64).sum()
+    }
+
+    /// Number of deduplicated program buffers.
+    pub fn num_programs(&self) -> usize {
+        self.progs.len()
+    }
+
+    /// Dense row-major view of one program buffer in the arena.
+    pub fn program(&self, p: usize) -> &[f32] {
+        let m = &self.progs[p];
+        &self.arena[m.offset..m.offset + m.rows * m.cols]
+    }
+
+    /// Per-program arena metadata (offset, extents, cached nnz, kernel).
+    pub fn program_meta(&self, p: usize) -> &ProgramMeta {
+        &self.progs[p]
+    }
+
+    /// Non-zero count per program buffer (used by load-balancing
+    /// policies). Counts are cached in the arena metadata at compile
+    /// time, so this never rescans program buffers.
+    pub fn program_nnz(&self) -> Vec<u64> {
+        self.progs.iter().map(|p| p.nnz as u64).collect()
+    }
+
+    /// Non-zeros served by the schedule (Σ program nnz over tiles).
+    pub fn mapped_nnz(&self) -> u64 {
         self.tiles
             .iter()
-            .map(|t| (t.rows * t.cols) as u64)
+            .map(|t| self.progs[t.program].nnz as u64)
             .sum()
     }
 
-    /// Non-zero count per program buffer (used by load-balancing policies).
-    pub fn program_nnz(&self) -> Vec<u64> {
-        self.programs
+    /// (dense, sparse) program counts under the current kernel selection.
+    pub fn kernel_counts(&self) -> (usize, usize) {
+        let sparse = self
+            .progs
             .iter()
-            .map(|p| p.iter().filter(|v| **v != 0.0).count() as u64)
-            .collect()
+            .filter(|p| p.kernel == KernelKind::Sparse)
+            .count();
+        (self.progs.len() - sparse, sparse)
+    }
+
+    /// The disjoint, ordered row bands of the schedule.
+    pub fn bands(&self) -> &[Band] {
+        &self.bands
     }
 
     // ---- serialization ---------------------------------------------------
 
-    /// Serialize to the deployable JSON artifact format (version 1).
+    /// Serialize to the deployable JSON artifact format (version 2: one
+    /// flat arena plus per-program `[offset, rows, cols, nnz, kernel]`
+    /// metadata).
     pub fn to_json(&self) -> Json {
         let tiles = self
             .tiles
@@ -307,10 +670,53 @@ impl ExecPlan {
                 ])
             })
             .collect();
-        let programs = self
-            .programs
+        let progs = self
+            .progs
             .iter()
-            .map(|p| num_arr(p.iter().map(|&v| v as f64)))
+            .map(|p| {
+                num_arr([
+                    p.offset as f64,
+                    p.rows as f64,
+                    p.cols as f64,
+                    p.nnz as f64,
+                    match p.kernel {
+                        KernelKind::Dense => 0.0,
+                        KernelKind::Sparse => 1.0,
+                    },
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(2.0)),
+            ("k", Json::Num(self.k as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("scheduled_tiles", Json::Num(self.scheduled_tiles as f64)),
+            ("elided_tiles", Json::Num(self.elided_tiles as f64)),
+            ("tiles", Json::Arr(tiles)),
+            ("arena", num_arr(self.arena.iter().map(|&v| v as f64))),
+            ("programs", Json::Arr(progs)),
+        ])
+    }
+
+    /// Serialize to the legacy version-1 format (programs as nested
+    /// arrays, no kernel metadata) — kept for compatibility testing and
+    /// rollback to pre-arena readers.
+    pub fn to_json_v1(&self) -> Json {
+        let tiles = self
+            .tiles
+            .iter()
+            .map(|t| {
+                num_arr([
+                    t.row0 as f64,
+                    t.col0 as f64,
+                    t.rows as f64,
+                    t.cols as f64,
+                    t.program as f64,
+                ])
+            })
+            .collect();
+        let programs = (0..self.progs.len())
+            .map(|p| num_arr(self.program(p).iter().map(|&v| v as f64)))
             .collect();
         obj(vec![
             ("version", Json::Num(1.0)),
@@ -323,21 +729,18 @@ impl ExecPlan {
         ])
     }
 
-    /// Parse and validate a plan document.
+    /// Parse and validate a plan document (version 1 or 2).
     pub fn from_json(doc: &Json) -> Result<ExecPlan> {
         let version = doc.get("version").as_usize().context("plan missing version")?;
-        ensure!(version == 1, "unsupported plan version {version}");
-        let k = doc.get("k").as_usize().context("plan missing k")?;
-        let dim = doc.get("dim").as_usize().context("plan missing dim")?;
-        ensure!(k >= 1 && dim >= 1, "plan has degenerate geometry");
-        let scheduled_tiles = doc
-            .get("scheduled_tiles")
-            .as_usize()
-            .context("plan missing scheduled_tiles")?;
-        let elided_tiles = doc
-            .get("elided_tiles")
-            .as_usize()
-            .context("plan missing elided_tiles")?;
+        match version {
+            1 => Self::from_json_v1(doc),
+            2 => Self::from_json_v2(doc),
+            v => bail!("unsupported plan version {v}"),
+        }
+    }
+
+    fn from_json_v1(doc: &Json) -> Result<ExecPlan> {
+        let (k, dim, scheduled_tiles, elided_tiles) = parse_header(doc)?;
         let mut programs = Vec::new();
         for (i, p) in doc
             .get("programs")
@@ -353,62 +756,92 @@ impl ExecPlan {
             }
             programs.push(data);
         }
-        let mut tiles = Vec::new();
-        for (i, t) in doc
-            .get("tiles")
-            .as_arr()
-            .context("plan missing tiles")?
-            .iter()
-            .enumerate()
-        {
-            let f = t.as_arr().with_context(|| format!("tile {i} not an array"))?;
-            ensure!(f.len() == 5, "tile {i} needs 5 fields, got {}", f.len());
-            let mut nums = [0usize; 5];
-            for (slot, v) in nums.iter_mut().zip(f.iter()) {
-                *slot = v.as_usize().with_context(|| format!("tile {i}: bad field"))?;
-            }
-            let spec = TileSpec {
-                row0: nums[0],
-                col0: nums[1],
-                rows: nums[2],
-                cols: nums[3],
-                program: nums[4],
-            };
-            if spec.rows == 0 || spec.cols == 0 || spec.rows > k || spec.cols > k {
-                bail!("tile {i} has extents {}x{} outside 1..={k}", spec.rows, spec.cols);
-            }
-            if spec.row0 + spec.rows > dim || spec.col0 + spec.cols > dim {
-                bail!("tile {i} exceeds the {dim}-unit matrix");
-            }
+        let tiles = parse_tiles(doc, k, dim)?;
+        for (i, t) in tiles.iter().enumerate() {
             let prog = programs
-                .get(spec.program)
-                .with_context(|| format!("tile {i} references missing program {}", spec.program))?;
-            if prog.len() != spec.rows * spec.cols {
+                .get(t.program)
+                .with_context(|| format!("tile {i} references missing program {}", t.program))?;
+            if prog.len() != t.rows * t.cols {
                 bail!(
                     "tile {i} is {}x{} but program {} has {} elements",
-                    spec.rows,
-                    spec.cols,
-                    spec.program,
+                    t.rows,
+                    t.cols,
+                    t.program,
                     prog.len()
                 );
             }
-            tiles.push(spec);
         }
-        ensure!(
-            tiles.len() + elided_tiles == scheduled_tiles,
-            "plan tile accounting is inconsistent: {} placed + {} elided != {} scheduled",
-            tiles.len(),
-            elided_tiles,
-            scheduled_tiles
-        );
-        Ok(ExecPlan {
-            k,
-            dim,
-            tiles,
-            programs,
-            scheduled_tiles,
-            elided_tiles,
-        })
+        check_accounting(tiles.len(), elided_tiles, scheduled_tiles)?;
+        Ok(ExecPlan::from_parts(k, dim, tiles, programs, scheduled_tiles, elided_tiles))
+    }
+
+    fn from_json_v2(doc: &Json) -> Result<ExecPlan> {
+        let (k, dim, scheduled_tiles, elided_tiles) = parse_header(doc)?;
+        let arena_vals = doc.get("arena").as_arr().context("plan missing arena")?;
+        let mut arena = Vec::with_capacity(arena_vals.len());
+        for v in arena_vals {
+            arena.push(v.as_f64().context("arena: non-number")? as f32);
+        }
+        let mut progs = Vec::new();
+        for (i, entry) in doc
+            .get("programs")
+            .as_arr()
+            .context("plan missing programs")?
+            .iter()
+            .enumerate()
+        {
+            let f = entry.as_arr().with_context(|| format!("program {i} not an array"))?;
+            ensure!(f.len() == 5, "program {i} needs 5 fields, got {}", f.len());
+            let mut nums = [0usize; 5];
+            for (slot, v) in nums.iter_mut().zip(f.iter()) {
+                *slot = v.as_usize().with_context(|| format!("program {i}: bad field"))?;
+            }
+            let [offset, rows, cols, nnz, kernel] = nums;
+            ensure!(
+                offset + rows * cols <= arena.len(),
+                "program {i} exceeds the {}-element arena",
+                arena.len()
+            );
+            let actual = arena[offset..offset + rows * cols]
+                .iter()
+                .filter(|v| **v != 0.0)
+                .count();
+            ensure!(
+                actual == nnz,
+                "program {i} metadata says {nnz} nnz but the arena holds {actual}"
+            );
+            let kernel = match kernel {
+                0 => KernelKind::Dense,
+                1 => KernelKind::Sparse,
+                other => bail!("program {i} has unknown kernel kind {other}"),
+            };
+            progs.push(ProgramMeta {
+                offset,
+                rows,
+                cols,
+                nnz: nnz as u32,
+                kernel,
+                sp_row: 0,
+                sp_val: 0,
+            });
+        }
+        let tiles = parse_tiles(doc, k, dim)?;
+        for (i, t) in tiles.iter().enumerate() {
+            let p = progs
+                .get(t.program)
+                .with_context(|| format!("tile {i} references missing program {}", t.program))?;
+            ensure!(
+                p.rows == t.rows && p.cols == t.cols,
+                "tile {i} is {}x{} but program {} is {}x{}",
+                t.rows,
+                t.cols,
+                t.program,
+                p.rows,
+                p.cols
+            );
+        }
+        check_accounting(tiles.len(), elided_tiles, scheduled_tiles)?;
+        Ok(ExecPlan::assemble(k, dim, tiles, arena, progs, scheduled_tiles, elided_tiles))
     }
 
     /// Write the plan artifact to disk.
@@ -427,20 +860,124 @@ impl ExecPlan {
     }
 }
 
+/// Stable-sort tiles by `row0` and derive the disjoint row bands. The
+/// stable sort keeps tiles that write the same rows in their original
+/// schedule order, so per-row accumulation order is unchanged.
+fn band_layout(tiles: &mut [TileSpec], progs: &[ProgramMeta]) -> Vec<Band> {
+    tiles.sort_by_key(|t| t.row0);
+    let mut bands: Vec<Band> = Vec::new();
+    for (i, t) in tiles.iter().enumerate() {
+        let t_nnz = progs[t.program].nnz as u64;
+        match bands.last_mut() {
+            Some(b) if t.row0 < b.row_end => {
+                b.row_end = b.row_end.max(t.row0 + t.rows);
+                b.tile1 = i + 1;
+                b.nnz += t_nnz;
+            }
+            _ => bands.push(Band {
+                row0: t.row0,
+                row_end: t.row0 + t.rows,
+                tile0: i,
+                tile1: i + 1,
+                nnz: t_nnz,
+            }),
+        }
+    }
+    bands
+}
+
+fn parse_header(doc: &Json) -> Result<(usize, usize, usize, usize)> {
+    let k = doc.get("k").as_usize().context("plan missing k")?;
+    let dim = doc.get("dim").as_usize().context("plan missing dim")?;
+    ensure!(k >= 1 && dim >= 1, "plan has degenerate geometry");
+    let scheduled = doc
+        .get("scheduled_tiles")
+        .as_usize()
+        .context("plan missing scheduled_tiles")?;
+    let elided = doc
+        .get("elided_tiles")
+        .as_usize()
+        .context("plan missing elided_tiles")?;
+    Ok((k, dim, scheduled, elided))
+}
+
+fn parse_tiles(doc: &Json, k: usize, dim: usize) -> Result<Vec<TileSpec>> {
+    let mut tiles = Vec::new();
+    for (i, t) in doc
+        .get("tiles")
+        .as_arr()
+        .context("plan missing tiles")?
+        .iter()
+        .enumerate()
+    {
+        let f = t.as_arr().with_context(|| format!("tile {i} not an array"))?;
+        ensure!(f.len() == 5, "tile {i} needs 5 fields, got {}", f.len());
+        let mut nums = [0usize; 5];
+        for (slot, v) in nums.iter_mut().zip(f.iter()) {
+            *slot = v.as_usize().with_context(|| format!("tile {i}: bad field"))?;
+        }
+        let spec = TileSpec {
+            row0: nums[0],
+            col0: nums[1],
+            rows: nums[2],
+            cols: nums[3],
+            program: nums[4],
+        };
+        if spec.rows == 0 || spec.cols == 0 || spec.rows > k || spec.cols > k {
+            bail!("tile {i} has extents {}x{} outside 1..={k}", spec.rows, spec.cols);
+        }
+        if spec.row0 + spec.rows > dim || spec.col0 + spec.cols > dim {
+            bail!("tile {i} exceeds the {dim}-unit matrix");
+        }
+        tiles.push(spec);
+    }
+    Ok(tiles)
+}
+
+fn check_accounting(placed: usize, elided: usize, scheduled: usize) -> Result<()> {
+    ensure!(
+        placed + elided == scheduled,
+        "plan tile accounting is inconsistent: {placed} placed + {elided} elided != {scheduled} scheduled"
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::crossbar::place;
+    use crate::engine::batch::BatchExecutor;
     use crate::graph::synth;
     use crate::reorder::{reorder, Reordering};
     use crate::scheme::{parse_actions, FillRule};
     use crate::util::propcheck::check;
+    use std::sync::Arc;
 
     fn qh882_setup() -> (Csr, GridSummary) {
         let m = synth::qh882_like(1);
         let r = reorder(&m, Reordering::CuthillMckee);
         let g = GridSummary::new(&r.matrix, 32);
         (r.matrix, g)
+    }
+
+    /// The seed scalar kernel, verbatim: tiles in schedule order, dense
+    /// row-dot over the program view. The optimized kernels must match it
+    /// bit for bit (finite inputs).
+    fn seed_reference(plan: &ExecPlan, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0f64; plan.dim];
+        for t in &plan.tiles {
+            let prog = plan.program(t.program);
+            for r in 0..t.rows {
+                let row = &prog[r * t.cols..r * t.cols + t.cols];
+                let xs = &x[t.col0..t.col0 + t.cols];
+                let mut acc = 0.0f64;
+                for (gv, xv) in row.iter().zip(xs.iter()) {
+                    acc += *gv as f64 * xv;
+                }
+                y[t.row0 + r] += acc;
+            }
+        }
+        y
     }
 
     #[test]
@@ -479,7 +1016,7 @@ mod tests {
         // every *placed* tile's clipped extents stay inside the matrix
         for t in &plan.tiles {
             assert!(t.row0 + t.rows <= 882 && t.col0 + t.cols <= 882);
-            assert_eq!(plan.programs[t.program].len(), t.rows * t.cols);
+            assert_eq!(plan.program(t.program).len(), t.rows * t.cols);
         }
         // scheduled (pre-elision) clipped area would equal 882²; placed
         // cells are a subset
@@ -500,7 +1037,7 @@ mod tests {
         };
         let plan = compile(&m, &g, &scheme).unwrap();
         assert_eq!(plan.tiles.len(), 3);
-        assert_eq!(plan.programs.len(), 1, "identical sub-graphs must share a program");
+        assert_eq!(plan.num_programs(), 1, "identical sub-graphs must share a program");
         assert!(plan.dedup_ratio() > 0.6);
         // and the shared program still computes correctly per tile position
         let x: Vec<f64> = (0..66).map(|i| (i as f64 * 0.31).cos()).collect();
@@ -509,6 +1046,70 @@ mod tests {
         for (a, b) in y.iter().zip(want.iter()) {
             assert!((a - b).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn band_layout_and_spans_are_disjoint_and_cover() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let bands = plan.bands();
+        assert!(!bands.is_empty());
+        let mut tile_cursor = 0usize;
+        let mut prev_end = 0usize;
+        for b in bands {
+            assert!(b.row0 >= prev_end, "bands overlap");
+            assert!(b.row_end > b.row0 && b.row_end <= plan.dim);
+            assert_eq!(b.tile0, tile_cursor, "bands must tile the schedule");
+            assert!(b.tile1 > b.tile0);
+            for t in &plan.tiles[b.tile0..b.tile1] {
+                assert!(t.row0 >= b.row0 && t.row0 + t.rows <= b.row_end);
+            }
+            tile_cursor = b.tile1;
+            prev_end = b.row_end;
+        }
+        assert_eq!(tile_cursor, plan.tiles.len());
+        for shards in [1usize, 2, 3, 8, 1000] {
+            let spans = plan.band_spans(shards);
+            assert!(!spans.is_empty() && spans.len() <= shards.max(1));
+            assert_eq!(spans[0].0, 0);
+            assert_eq!(spans.last().unwrap().1, plan.dim);
+            for w in spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "spans must be contiguous");
+            }
+            // every span boundary is a band start, so no band is split
+            for &(s, _) in &spans[1..] {
+                assert!(bands.iter().any(|b| b.row0 == s), "span start {s} off-band");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_selection_is_density_driven_and_exact() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        // the sparse 882-band leaves most surviving tiles nearly empty
+        let (dense, sparse) = plan.kernel_counts();
+        assert_eq!(dense + sparse, plan.num_programs());
+        assert!(sparse > 0, "a 0.99-sparse workload must select sparse kernels");
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 7) % 19) as f64 - 9.0).collect();
+        let want = seed_reference(&plan, &x);
+        assert_eq!(plan.mvm(&x), want, "auto kernels diverged from the seed loop");
+        let mut all_dense = plan.clone();
+        all_dense.rekernel(0.0);
+        assert_eq!(all_dense.kernel_counts().1, 0);
+        assert_eq!(all_dense.mvm(&x), want);
+        let mut all_sparse = plan.clone();
+        all_sparse.rekernel(f64::INFINITY);
+        assert_eq!(all_sparse.kernel_counts().0, 0);
+        assert_eq!(all_sparse.mvm(&x), want);
     }
 
     #[test]
@@ -524,6 +1125,24 @@ mod tests {
         let doc = plan.to_json();
         let back = ExecPlan::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
         assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn v1_artifact_reader_roundtrips() {
+        // the legacy nested-array format still loads, and re-deriving
+        // arena + kernels reproduces the compiled plan exactly
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let doc = plan.to_json_v1();
+        assert_eq!(doc.get("version").as_usize(), Some(1));
+        let back = ExecPlan::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(plan, back);
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 3) % 23) as f64 - 11.0).collect();
+        assert_eq!(plan.mvm(&x), back.mvm(&x));
     }
 
     #[test]
@@ -549,7 +1168,22 @@ mod tests {
     fn from_json_rejects_corrupt_plans() {
         for text in [
             "{}",
+            // future version
+            r#"{"version":3,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
+            // v2 without an arena
             r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
+            // v2 program metadata exceeding the arena
+            r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[1,0],"programs":[[0,2,2,1,0]]}"#,
+            // v2 nnz metadata inconsistent with the arena
+            r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[1,0,0,1],"programs":[[0,2,2,3,0]]}"#,
+            // v2 unknown kernel kind
+            r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[1,0,0,1],"programs":[[0,2,2,2,7]]}"#,
+            // v2 tile extents disagreeing with its program
+            r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,1,2,0]],"arena":[1,0,0,1],"programs":[[0,2,2,2,0]]}"#,
             // tile referencing a missing program
             r#"{"version":1,"k":2,"dim":4,"scheduled_tiles":1,"elided_tiles":0,
                 "tiles":[[0,0,2,2,0]],"programs":[]}"#,
@@ -607,7 +1241,7 @@ mod tests {
         assert_eq!(merged.tiles.len(), whole.tiles.len());
         assert_eq!(merged.scheduled_tiles, whole.scheduled_tiles);
         assert_eq!(merged.elided_tiles, whole.elided_tiles);
-        assert_eq!(merged.programs.len(), whole.programs.len(), "cross-part dedup");
+        assert_eq!(merged.num_programs(), whole.num_programs(), "cross-part dedup");
         let x: Vec<f64> = (0..g.dim).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
         assert_eq!(merged.mvm(&x), whole.mvm(&x));
         // dimension mismatches are rejected
@@ -649,6 +1283,67 @@ mod tests {
             for (i, (a, b)) in y.iter().zip(want.iter()).enumerate() {
                 if (a - b).abs() > 1e-9 {
                     return Err(format!("row {i}: plan {a} vs oracle {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kernels_sharding_and_batching_are_bit_identical_property() {
+        // The perf-layer acceptance property: across random matrices,
+        // schemes, kernel mixes, batch sizes, and worker counts, every
+        // optimized path reproduces the seed scalar loop bit for bit.
+        check("engine_kernels_bit_identical", 12, |rng| {
+            let m = synth::molecule_like(24 + rng.below(30) as usize, 90, rng.next_u64());
+            let r = reorder(&m, Reordering::CuthillMckee);
+            let grid = 2 + rng.below(5) as usize;
+            let g = GridSummary::new(&r.matrix, grid);
+            if g.n < 2 {
+                return Ok(());
+            }
+            let d: Vec<u8> = (0..g.n - 1).map(|_| rng.below(2) as u8).collect();
+            let f: Vec<usize> = (0..g.n - 1).map(|_| rng.below(4) as usize).collect();
+            let s = parse_actions(g.n, &d, &f, FillRule::Dynamic { grades: 4 });
+            let plan = compile(&r.matrix, &g, &s).map_err(|e| format!("{e:#}"))?;
+            let bsz = 1 + rng.below(9) as usize;
+            let xs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| (0..g.dim).map(|_| rng.uniform(-2.0, 2.0)).collect())
+                .collect();
+            let want: Vec<Vec<f64>> = xs.iter().map(|x| seed_reference(&plan, x)).collect();
+            // scalar mvm, forced-dense, forced-sparse
+            let mut dense = plan.clone();
+            dense.rekernel(0.0);
+            let mut sparse = plan.clone();
+            sparse.rekernel(f64::INFINITY);
+            for (x, w) in xs.iter().zip(want.iter()) {
+                if &plan.mvm(x) != w {
+                    return Err("auto-kernel mvm diverged from seed".into());
+                }
+                if &dense.mvm(x) != w {
+                    return Err("dense kernel diverged from seed".into());
+                }
+                if &sparse.mvm(x) != w {
+                    return Err("sparse kernel diverged from seed".into());
+                }
+            }
+            // multi-RHS kernel
+            let mut ys = Vec::new();
+            plan.mvm_batch_into(&xs, &mut ys);
+            if ys != want {
+                return Err("multi-RHS kernel diverged from seed".into());
+            }
+            // intra-request band sharding through the executor
+            let plan = Arc::new(plan);
+            for &workers in &[1usize, 2, 8] {
+                let exec = BatchExecutor::new(plan.clone(), workers);
+                let ys = exec.execute_batch_sharded(xs.clone());
+                if ys != want {
+                    return Err(format!("sharded execution at {workers} workers diverged"));
+                }
+                let ys = exec.execute_batch(xs.clone());
+                if ys != want {
+                    return Err(format!("scalar execution at {workers} workers diverged"));
                 }
             }
             Ok(())

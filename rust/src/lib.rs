@@ -39,14 +39,27 @@
 //!
 //! Training produces a mapping scheme; the [`engine`] subsystem turns it
 //! into production traffic capacity. A scheme compiles into an
-//! [`engine::ExecPlan`] (flat tile schedule, all-zero tiles elided,
-//! duplicate programmings shared, JSON-deployable), the plan's tiles are
-//! distributed over a simulated crossbar [`engine::Fleet`] for
-//! latency/energy accounting, and an [`engine::BatchExecutor`] worker pool
-//! serves batched MVM requests bit-identically to the
-//! [`crossbar::CrossbarArray::mvm`] oracle. The `serve-bench` CLI
-//! subcommand replays synthetic request traces against the engine and
-//! emits machine-readable throughput/latency reports (`BENCH_engine.json`).
+//! [`engine::ExecPlan`]: all-zero tiles elided, duplicate programmings
+//! shared in one contiguous f32 **program arena** (per-program offset,
+//! extents, compile-time nnz, kernel kind), the tile schedule
+//! stable-sorted into disjoint **row bands**, and per-program
+//! **density-adaptive kernels** — the dense row-dot kernel, or a compiled
+//! CSR-within-tile kernel below a density threshold. Plans ship as JSON
+//! artifacts (version 2 stores the arena layout; version 1 still loads).
+//! The plan's tiles are distributed over a simulated crossbar
+//! [`engine::Fleet`] for latency/energy accounting, and an
+//! [`engine::BatchExecutor`] worker pool serves batched MVM requests in
+//! two modes — scalar per-request fan-out, or row-band spans sharded
+//! across workers *within* a request batch with a multi-RHS kernel (one
+//! arena traversal per span per batch). Every mode is bit-identical to
+//! the [`crossbar::CrossbarArray::mvm`] oracle for any worker count and
+//! batch size: each output row is produced by one worker in one fixed
+//! band order, and the sparse kernel only skips exact-zero products. The
+//! `serve-bench` CLI subcommand replays synthetic request traces against
+//! the engine (named datasets or `--dataset rmat` synthetic graphs) and
+//! records the scalar baseline and optimized throughput side by side in
+//! `BENCH_engine.json` (`--assert-speedup` turns the comparison into a
+//! CI regression gate).
 //!
 //! ## Large-scale mapping
 //!

@@ -48,11 +48,14 @@ USAGE: autogmap <subcommand> [options]
   gen-data   [--out data]
   visualize  --dataset qm7|qh882|qh1484 [--mtx-path p] [--out figures]
   info
-  serve-bench [--dataset qm7|qh882|qh1484|batch|mtx --mtx-path p --grid N]
+  serve-bench [--dataset qm7|qh882|qh1484|batch|mtx|rmat --mtx-path p
+             --grid N --nodes N --degree N]
              [--scheme full|unit|oracle | --plan plan.json] [--save-plan p]
+             [--kernel auto|dense|sparse] [--exec both|scalar|sharded]
              [--banks N] [--policy rr|balanced] [--workers N]
              [--trace uniform|bursty|batch] [--batch N] [--requests N]
-             [--trace-seed N] [--bench-json BENCH_engine.json]
+             [--trace-seed N] [--assert-speedup F]
+             [--bench-json BENCH_engine.json]
   train-bench [--dataset qm7|qh882|qh1484 --controller NAME --fill kind
              --fill-arg N --epochs N --seed N]
              [--bench-json BENCH_train.json]
@@ -77,9 +80,16 @@ USAGE: autogmap <subcommand> [options]
   serve-bench example:
     autogmap serve-bench --dataset qh882 --banks 8 --trace bursty \\
         --requests 1024 --batch 64 --bench-json BENCH_engine.json
-  compiles the scheme into an ExecPlan (all-zero tiles elided), spreads it
-  over 8 simulated crossbar banks, replays the trace through the batch
-  executor, and reports throughput + p50/p99 vs the single-threaded oracle.
+  compiles the scheme into an arena ExecPlan (all-zero tiles elided,
+  density-adaptive dense/sparse kernels, row-banded schedule), spreads it
+  over 8 simulated crossbar banks, and replays the trace three ways: the
+  single-thread scalar baseline, the per-request worker pool, and the
+  optimized band-sharded multi-RHS mode — all bit-identical; the ledger
+  records scalar vs optimized nnz/s from the same run. --kernel forces a
+  kernel for A/B runs, --exec narrows the executor modes, and
+  --assert-speedup F fails the run if optimized < F x the scalar baseline
+  (the CI regression gate). At-scale synthetic serving:
+    autogmap serve-bench --dataset rmat --nodes 10000 --assert-speedup 2.0
 
   train-bench example:
     autogmap train-bench --dataset qm7 --epochs 100 \\
@@ -120,7 +130,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
         "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
         "requests", "trace-seed", "bench-json", "backend", "nodes", "degree", "overlap",
-        "rounds",
+        "rounds", "kernel", "exec", "assert-speedup",
     ];
     let flag_opts = ["verbose", "help"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -520,22 +530,39 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     use std::sync::Arc;
     use std::time::Instant;
 
-    let ds = dataset_from_args(args)?;
-    let grid = args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(match ds {
-        Dataset::Qm7 { .. } => 2,
-        Dataset::Batch { .. } => 22,
-        _ => 32,
-    });
-    let m = autogmap::coordinator::dataset::load_matrix(&ds)?;
+    // --- workload: a named dataset, or a synthetic R-MAT serving workload
+    // (--dataset rmat --nodes N --degree D) for at-scale kernel numbers
+    let ds_kind = args.get_or("dataset", "qm7").to_string();
     let reordering =
         Reordering::parse(args.get_or("reorder", "cm")).map_err(anyhow::Error::msg)?;
+    let (label, m, grid, batch_ds) = if ds_kind == "rmat" {
+        let nodes =
+            args.get_usize("nodes").map_err(anyhow::Error::msg)?.unwrap_or(10_000).max(64);
+        let degree = args.get_usize("degree").map_err(anyhow::Error::msg)?.unwrap_or(8).max(1);
+        let seed = args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(42);
+        let grid = args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(32).max(1);
+        let m = autogmap::graph::synth::rmat_like(nodes, 2 * (nodes * degree / 2), seed);
+        (format!("rmat{nodes}"), m, grid, None)
+    } else {
+        let ds = dataset_from_args(args)?;
+        let grid = args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(match ds {
+            Dataset::Qm7 { .. } => 2,
+            Dataset::Batch { .. } => 22,
+            _ => 32,
+        });
+        let m = autogmap::coordinator::dataset::load_matrix(&ds)?;
+        (ds.label(), m, grid, Some(ds))
+    };
     let r = autogmap::reorder::reorder(&m, reordering);
     let g = GridSummary::new(&r.matrix, grid);
 
     // --- plan: load a deployable artifact, or compile from a scheme (the
-    // latter also places the CrossbarArray oracle for the baseline loop)
+    // latter also places the CrossbarArray oracle for the baseline loop;
+    // skipped for rmat workloads — the oracle materializes every tile
+    // densely, and the plan-scalar rung is the baseline there)
     let scheme_name;
-    let (plan, oracle): (ExecPlan, Option<CrossbarArray>) = if let Some(p) = args.get("plan") {
+    let (mut plan, oracle): (ExecPlan, Option<CrossbarArray>) = if let Some(p) = args.get("plan")
+    {
         scheme_name = format!("plan:{p}");
         let plan = ExecPlan::load(Path::new(p))?;
         anyhow::ensure!(
@@ -560,9 +587,19 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         };
         scheme_name = kind.to_string();
         let plan = engine::compile(&r.matrix, &g, &scheme)?;
-        let arr = place(&r.matrix, &g, &scheme)?;
-        (plan, Some(arr))
+        let arr = if ds_kind == "rmat" { None } else { Some(place(&r.matrix, &g, &scheme)?) };
+        (plan, arr)
     };
+
+    // --- kernel mode: auto density-threshold selection (the compiled
+    // default), or force one kernel for A/B runs
+    let kernel = args.get_or("kernel", "auto").to_string();
+    match kernel.as_str() {
+        "auto" => {}
+        "dense" => plan.rekernel(0.0),
+        "sparse" => plan.rekernel(f64::INFINITY),
+        other => anyhow::bail!("unknown kernel {other:?} (auto|dense|sparse)"),
+    }
     if let Some(p) = args.get("save-plan") {
         plan.save(Path::new(p))?;
         println!("wrote plan artifact {p}");
@@ -584,8 +621,8 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     // so BENCH_engine.json stays comparable across traffic seeds.
     let trace_seed =
         args.get_u64("trace-seed").map_err(anyhow::Error::msg)?.unwrap_or(0x5eed);
-    let segments: Vec<(usize, usize)> = match &ds {
-        Dataset::Batch { count, .. } if *count > 0 => {
+    let segments: Vec<(usize, usize)> = match &batch_ds {
+        Some(Dataset::Batch { count, .. }) if *count > 0 => {
             // index segments of the supermatrix, one per sub-graph
             let sub = g.dim / *count;
             (0..*count)
@@ -596,22 +633,33 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     };
     let trace = engine::synth_trace(trace_kind, g.dim, requests, batch, &segments, trace_seed);
     let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(banks).max(1);
+    let exec_sel = args.get_or("exec", "both").to_string();
+    anyhow::ensure!(
+        matches!(exec_sel.as_str(), "both" | "scalar" | "sharded"),
+        "unknown exec mode {exec_sel:?} (scalar|sharded|both)"
+    );
 
+    let (kernel_dense, kernel_sparse) = plan.kernel_counts();
+    let mapped_nnz = plan.mapped_nnz();
     println!(
-        "serve-bench {}: dim {} grid {grid} (N={}), scheme {scheme_name}",
-        ds.label(),
+        "serve-bench {label}: dim {} grid {grid} (N={}), scheme {scheme_name}, kernel {kernel}",
         g.dim,
         g.n
     );
     println!(
-        "plan: {} scheduled tiles -> {} placed ({} elided, {:.1}% elision), {} unique programs ({:.1}% dedup), {} cells",
+        "plan: {} scheduled tiles -> {} placed ({} elided, {:.1}% elision), {} unique programs ({:.1}% dedup), {} cells, {} nnz",
         plan.scheduled_tiles,
         plan.tiles.len(),
         plan.elided_tiles,
         plan.elision_ratio() * 100.0,
-        plan.programs.len(),
+        plan.num_programs(),
         plan.dedup_ratio() * 100.0,
-        plan.cells()
+        plan.cells(),
+        mapped_nnz
+    );
+    println!(
+        "arena: {} row bands, kernels {kernel_dense} dense / {kernel_sparse} sparse",
+        plan.bands().len()
     );
     println!(
         "fleet: {} banks ({:?}), nnz imbalance {:.3}, modelled mvm latency {:.2} us, energy {:.2} nJ",
@@ -622,33 +670,86 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         fleet.mvm_energy_pj(&cost) / 1e3
     );
 
-    // --- replay the trace through the batch executor
+    // --- rung 1: the scalar per-request baseline (seed serving path),
+    // single-threaded — the in-run reference every optimized number in
+    // the ledger is compared against
+    let nnz_work = mapped_nnz as f64 * requests as f64;
+    let mut y = Vec::new();
+    plan.mvm_into(&trace[0][0], &mut y); // warmup
+    let t0 = Instant::now();
+    for x in trace.iter().flatten() {
+        plan.mvm_into(x, &mut y);
+        std::hint::black_box(y.first().copied());
+    }
+    let scalar_wall = t0.elapsed().as_secs_f64();
+    let scalar_rps = requests as f64 / scalar_wall;
+    let scalar_nnz_per_s = nnz_work / scalar_wall;
+    println!(
+        "scalar baseline: 1 thread, {requests} requests in {scalar_wall:.3}s -> {scalar_rps:.0} req/s ({scalar_nnz_per_s:.3e} nnz/s)"
+    );
+
+    // --- rungs 2-3: the executor modes over the same trace
     let plan = Arc::new(plan);
     let exec = BatchExecutor::new(plan.clone(), workers);
-    exec.recycle(exec.execute_batch(trace[0].clone())); // warmup, primes buffer pool
-    let mut latencies_ms: Vec<f64> = Vec::with_capacity(requests);
-    let t0 = Instant::now();
-    for batch_reqs in &trace {
-        let xs = batch_reqs.clone();
-        let tb = Instant::now();
-        let ys = exec.execute_batch(xs);
-        let dt_ms = tb.elapsed().as_secs_f64() * 1e3;
-        latencies_ms.extend(std::iter::repeat(dt_ms).take(ys.len()));
-        exec.recycle(ys);
+    let run_trace = |sharded: bool| -> (f64, f64, f64) {
+        let warm = if sharded {
+            exec.execute_batch_sharded(trace[0].clone())
+        } else {
+            exec.execute_batch(trace[0].clone())
+        };
+        exec.recycle(warm); // primes the buffer pool
+        let mut latencies_ms: Vec<f64> = Vec::with_capacity(requests);
+        let t0 = Instant::now();
+        for batch_reqs in &trace {
+            let tb = Instant::now();
+            let ys = if sharded {
+                exec.execute_batch_sharded(batch_reqs.clone())
+            } else {
+                exec.execute_batch(batch_reqs.clone())
+            };
+            let dt_ms = tb.elapsed().as_secs_f64() * 1e3;
+            latencies_ms.extend(std::iter::repeat(dt_ms).take(ys.len()));
+            exec.recycle(ys);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        (
+            wall,
+            bench::percentile(&latencies_ms, 50.0),
+            bench::percentile(&latencies_ms, 99.0),
+        )
+    };
+    let parallel_scalar = if exec_sel != "sharded" {
+        let (wall, p50, p99) = run_trace(false);
+        println!(
+            "engine scalar: {requests} requests / {} batches ({:?} trace) in {wall:.3}s -> {:.0} req/s, p50 {p50:.3} ms, p99 {p99:.3} ms ({workers} workers)",
+            trace.len(),
+            trace_kind,
+            requests as f64 / wall
+        );
+        Some((wall, p50, p99))
+    } else {
+        None
+    };
+    let sharded_res = if exec_sel != "scalar" {
+        let (wall, p50, p99) = run_trace(true);
+        println!(
+            "engine sharded multi-RHS: {requests} requests in {wall:.3}s -> {:.0} req/s, p50 {p50:.3} ms, p99 {p99:.3} ms ({workers} workers, {} spans)",
+            requests as f64 / wall,
+            plan.band_spans(workers).len()
+        );
+        Some((wall, p50, p99))
+    } else {
+        None
+    };
+    let (head_wall, p50, p99) =
+        sharded_res.or(parallel_scalar).expect("at least one executor mode runs");
+    let throughput = requests as f64 / head_wall;
+    if sharded_res.is_some() {
+        println!(
+            "speedup: optimized {:.2}x over the single-thread scalar baseline",
+            throughput / scalar_rps
+        );
     }
-    let wall = t0.elapsed().as_secs_f64();
-    let throughput = requests as f64 / wall;
-    let p50 = bench::percentile(&latencies_ms, 50.0);
-    let p99 = bench::percentile(&latencies_ms, 99.0);
-    println!(
-        "engine: {requests} requests / {} batches ({:?} trace) in {:.3}s -> {:.0} req/s, p50 {:.3} ms, p99 {:.3} ms ({workers} workers)",
-        trace.len(),
-        trace_kind,
-        wall,
-        throughput,
-        p50,
-        p99
-    );
 
     // --- single-threaded oracle loop over the same trace, plus a
     // correctness spot-check of the engine against it
@@ -673,18 +774,23 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
             throughput / rps
         );
         oracle_rps = Some(rps);
+    } else if ds_kind == "rmat" {
+        println!("oracle: skipped (rmat workload; the plan-scalar rung is the baseline)");
     } else {
         println!("oracle: skipped (plan loaded from disk; no scheme to place)");
     }
 
-    // --- machine-readable artifact for perf-trajectory tracking
+    // --- machine-readable artifact for perf-trajectory tracking: the
+    // scalar baseline and the optimized mode from the same run, always
     let out = args.get_or("bench-json", "BENCH_engine.json");
     let mut fields = vec![
         ("bench", Json::Str("engine_serve".into())),
-        ("dataset", Json::Str(ds.label())),
+        ("dataset", Json::Str(label)),
         ("dim", Json::Num(g.dim as f64)),
         ("grid", Json::Num(grid as f64)),
         ("scheme", Json::Str(scheme_name)),
+        ("kernel", Json::Str(kernel)),
+        ("exec", Json::Str(exec_sel)),
         ("trace", Json::Str(args.get_or("trace", "uniform").to_string())),
         ("requests", Json::Num(requests as f64)),
         ("nominal_batch", Json::Num(batch as f64)),
@@ -695,20 +801,52 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         ("placed_tiles", Json::Num(plan.tiles.len() as f64)),
         ("elision_ratio", Json::Num(plan.elision_ratio())),
         ("dedup_ratio", Json::Num(plan.dedup_ratio())),
+        ("bands", Json::Num(plan.bands().len() as f64)),
+        ("kernel_dense_programs", Json::Num(kernel_dense as f64)),
+        ("kernel_sparse_programs", Json::Num(kernel_sparse as f64)),
+        ("mapped_nnz", Json::Num(mapped_nnz as f64)),
         ("fleet_imbalance", Json::Num(fleet.imbalance())),
         ("fleet_latency_ns", Json::Num(fleet.mvm_latency_ns(&cost))),
         ("fleet_energy_pj", Json::Num(fleet.mvm_energy_pj(&cost))),
+        ("scalar_rps", Json::Num(scalar_rps)),
+        ("scalar_nnz_per_s", Json::Num(scalar_nnz_per_s)),
         ("throughput_rps", Json::Num(throughput)),
         ("p50_ms", Json::Num(p50)),
         ("p99_ms", Json::Num(p99)),
-        ("wall_s", Json::Num(wall)),
+        ("wall_s", Json::Num(head_wall)),
     ];
+    // the optimized-rung fields describe the sharded multi-RHS mode only;
+    // an --exec scalar run must not pass plain worker fan-out off as it
+    if let Some((wall, _, _)) = sharded_res {
+        fields.push(("optimized_nnz_per_s", Json::Num(nnz_work / wall)));
+        fields.push(("speedup_vs_scalar", Json::Num((requests as f64 / wall) / scalar_rps)));
+    }
+    if let Some((wall, _, _)) = parallel_scalar {
+        fields.push(("parallel_scalar_rps", Json::Num(requests as f64 / wall)));
+    }
     if let Some(rps) = oracle_rps {
         fields.push(("oracle_rps", Json::Num(rps)));
         fields.push(("speedup_vs_oracle", Json::Num(throughput / rps)));
     }
     bench::write_bench_json(Path::new(out), fields)?;
     println!("wrote {out}");
+
+    // --- optional in-run regression gate (CI): the optimized mode must
+    // clear the given multiple of the scalar baseline
+    if let Some(min) = args.get_f64("assert-speedup").map_err(anyhow::Error::msg)? {
+        let (wall, _, _) = match sharded_res {
+            Some(r) => r,
+            None => anyhow::bail!("--assert-speedup gates the sharded mode; drop --exec scalar"),
+        };
+        let optimized_rps = requests as f64 / wall;
+        let speedup = optimized_rps / scalar_rps;
+        anyhow::ensure!(
+            speedup >= min,
+            "optimized throughput {optimized_rps:.0} req/s is only {speedup:.2}x the scalar \
+             baseline {scalar_rps:.0} req/s (required {min:.2}x)"
+        );
+        println!("speedup gate passed: {speedup:.2}x >= {min:.2}x");
+    }
     Ok(())
 }
 

@@ -8,10 +8,18 @@
 //! the spill CSR — never both, never neither — so a composite MVM equals
 //! the dense oracle up to floating-point summation order, and *exactly*
 //! (bit-identical) whenever products round to nothing, e.g. adjacency
-//! weights with integer inputs. The [`CompositeExecutor`] parallelizes
-//! across requests only (one worker per request, plan order then spill
-//! row-order inside it), so results are bit-identical for any worker
-//! count.
+//! weights with integer inputs. The [`CompositeExecutor`] serves either
+//! per-request (one worker per request, plan band order then spill
+//! row-order) or band-sharded (disjoint row spans across workers within a
+//! request, each span running mapped tiles then its spill rows through the
+//! multi-RHS kernel); each output row is produced by one worker in one
+//! fixed order, so both modes are bit-identical for any worker count and
+//! batch size.
+//!
+//! Spill extraction builds per-grid-row *interval lists* of covered
+//! columns (sorted, merged) instead of a dense n×n covered bitmap, so its
+//! memory scales with the composite's rect count — not with the square of
+//! a 100k-node graph's grid.
 
 use crate::engine::batch::ServablePlan;
 use crate::engine::plan::{compile_rects, merge_plans, ExecPlan};
@@ -23,8 +31,8 @@ use anyhow::{anyhow, Result};
 /// digital remainder.
 #[derive(Clone, Debug)]
 pub struct CompositePlan {
-    /// merged tile schedule over the full matrix (window plans
-    /// concatenated in slice order, programs deduplicated across windows)
+    /// merged tile schedule over the full matrix (window plans merged in
+    /// slice order and band-sorted, programs deduplicated across windows)
     pub plan: ExecPlan,
     /// off-plan entries, served from sparse digital storage
     pub spill: Csr,
@@ -48,26 +56,45 @@ pub fn compile_composite(
     }
     let plan = merge_plans(&parts)?;
 
-    // covered-cell bitmap over the global grid, then the spill CSR: every
-    // entry whose grid cell is not covered by any mapped rect
+    // per-grid-row covered column intervals (sorted + merged), then the
+    // spill CSR: every entry whose grid cell no interval covers
     let n = g.n;
-    let mut covered = vec![false; n * n];
+    let mut intervals: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
     for s in &comp.slices {
         for r in s.rects() {
             for rr in r.r0..r.r1 {
-                covered[rr * n + r.c0..rr * n + r.c1].fill(true);
+                intervals[rr].push((r.c0 as u32, r.c1 as u32));
             }
         }
     }
+    for iv in &mut intervals {
+        iv.sort_unstable();
+        let mut merged: Vec<(u32, u32)> = Vec::with_capacity(iv.len().min(8));
+        for &(c0, c1) in iv.iter() {
+            match merged.last_mut() {
+                Some(last) if c0 <= last.1 => last.1 = last.1.max(c1),
+                _ => merged.push((c0, c1)),
+            }
+        }
+        *iv = merged;
+    }
+    let covered = |rr: usize, gc: usize| -> bool {
+        let iv = &intervals[rr];
+        let gc = gc as u32;
+        match iv.partition_point(|&(c0, _)| c0 <= gc) {
+            0 => false,
+            i => gc < iv[i - 1].1,
+        }
+    };
     let k = g.grid;
     let mut indptr = Vec::with_capacity(m.rows + 1);
     indptr.push(0usize);
     let mut indices = Vec::new();
     let mut data = Vec::new();
     for r in 0..m.rows {
-        let row_cells = (r / k) * n;
+        let grid_row = r / k;
         for (i, &c) in m.row(r).iter().enumerate() {
-            if !covered[row_cells + c / k] {
+            if !covered(grid_row, c / k) {
                 indices.push(c);
                 data.push(m.row_vals(r)[i]);
             }
@@ -89,11 +116,17 @@ pub fn compile_composite(
 }
 
 impl CompositePlan {
-    /// y = Ax: mapped tiles in plan order, then the spill in row-major CSR
-    /// order, accumulated into the same output buffer.
+    /// y = Ax: mapped tiles in plan (band) order, then the spill in
+    /// row-major CSR order, accumulated into the same output buffer.
     pub fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
         self.plan.mvm_into(x, y);
-        for r in 0..self.spill.rows {
+        self.spill_rows_into((0, self.spill.rows), x, y);
+    }
+
+    /// Accumulate spill rows [span.0, span.1) into `out`, whose index 0 is
+    /// matrix row span.0 (scalar CSR row-dot, column order).
+    fn spill_rows_into(&self, span: (usize, usize), x: &[f64], out: &mut [f64]) {
+        for r in span.0..span.1 {
             let cols = self.spill.row(r);
             if cols.is_empty() {
                 continue;
@@ -103,7 +136,7 @@ impl CompositePlan {
             for (&c, &v) in cols.iter().zip(vals.iter()) {
                 acc += v * x[c];
             }
-            y[r] += acc;
+            out[r - span.0] += acc;
         }
     }
 
@@ -114,10 +147,9 @@ impl CompositePlan {
         y
     }
 
-    /// Non-zeros served by crossbar tiles.
+    /// Non-zeros served by crossbar tiles (cached arena metadata).
     pub fn mapped_nnz(&self) -> u64 {
-        let pn = self.plan.program_nnz();
-        self.plan.tiles.iter().map(|t| pn[t.program]).sum()
+        self.plan.mapped_nnz()
     }
 
     /// Non-zeros served digitally.
@@ -134,11 +166,37 @@ impl ServablePlan for CompositePlan {
     fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
         CompositePlan::mvm_into(self, x, y)
     }
+
+    fn shard_spans(&self, shards: usize) -> Vec<(usize, usize)> {
+        // band boundaries of the merged plan; spill rows follow their
+        // span, so every output row still belongs to exactly one worker.
+        // Known limitation: spans are balanced on mapped-tile nnz only —
+        // a composite whose spill concentrates in one row region loads
+        // that span's worker heavier than the weights predict.
+        let dim = self.plan.dim;
+        if self.plan.bands().is_empty() && shards > 1 && dim > 0 && self.spill.nnz() > 0 {
+            // tile-less (spill-dominated) composite: bands offer no split
+            // points, but spill rows are independent — split [0, dim)
+            // into even chunks so the sharded mode still parallelizes
+            let shards = shards.min(dim);
+            return (0..shards)
+                .map(|s| (s * dim / shards, (s + 1) * dim / shards))
+                .collect();
+        }
+        self.plan.band_spans(shards)
+    }
+
+    fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        self.plan.mvm_span_batch(span, xs, outs);
+        for (x, out) in xs.iter().zip(outs.iter_mut()) {
+            self.spill_rows_into(span, x, out);
+        }
+    }
 }
 
 /// Request-parallel executor for a composite plan: the shared
 /// [`crate::engine::BatchExecutor`] machinery (pooled output buffers,
-/// request-order results, one worker per request so results are
+/// request-order results, scalar and band-sharded multi-RHS serving modes,
 /// bit-identical for any worker count) serving a [`CompositePlan`].
 pub type CompositeExecutor = crate::engine::BatchExecutor<CompositePlan>;
 
@@ -146,7 +204,8 @@ pub type CompositeExecutor = crate::engine::BatchExecutor<CompositePlan>;
 mod tests {
     use super::*;
     use crate::graph::synth;
-    use crate::scheme::{Scheme, WindowSlice};
+    use crate::scheme::{parse_actions, FillRule, Scheme, WindowSlice};
+    use crate::util::propcheck::check;
     use std::sync::Arc;
 
     fn two_window_composite(n: usize, cut: usize, win: usize) -> CompositeScheme {
@@ -189,7 +248,7 @@ mod tests {
     }
 
     #[test]
-    fn executor_is_bit_identical_across_worker_counts() {
+    fn executor_is_bit_identical_across_worker_counts_and_modes() {
         let m = synth::banded_like(60, 0.9, 2);
         let g = GridSummary::new(&m, 4); // n = 15
         let comp = two_window_composite(15, 8, 10);
@@ -205,6 +264,9 @@ mod tests {
             exec.recycle(ys);
             let ys2 = exec.execute_batch(xs.clone());
             assert_eq!(ys2, want, "workers {workers} with recycled buffers");
+            exec.recycle(ys2);
+            let ys3 = exec.execute_batch_sharded(xs.clone());
+            assert_eq!(ys3, want, "workers {workers} band-sharded");
         }
     }
 
@@ -219,11 +281,158 @@ mod tests {
     }
 
     #[test]
+    fn spill_only_composite_still_shards_and_serves_exactly() {
+        // every nnz far off-diagonal, unit-diagonal windows: all tiles
+        // elide, the whole matrix is spill — the sharded mode must still
+        // split rows across workers and answer exactly
+        let dim = 40usize;
+        let mut coo = crate::graph::Coo::new(dim, dim);
+        for i in 0..dim / 2 {
+            coo.push(i, dim - 1 - i, (i + 1) as f64);
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 4); // n = 10
+        let n = g.n;
+        let unit = |len: usize| Scheme {
+            diag_len: vec![1; len],
+            fill_len: vec![0; len - 1],
+        };
+        let comp = CompositeScheme {
+            n,
+            slices: vec![
+                WindowSlice {
+                    win_start: 0,
+                    win_end: 5,
+                    start: 0,
+                    end: 5,
+                    scheme: unit(5),
+                    cache_hit: false,
+                },
+                WindowSlice {
+                    win_start: 5,
+                    win_end: n,
+                    start: 5,
+                    end: n,
+                    scheme: unit(n - 5),
+                    cache_hit: false,
+                },
+            ],
+        };
+        let cp = compile_composite(&m, &g, &comp).unwrap();
+        assert_eq!(cp.plan.tiles.len(), 0, "anti-diagonal nnz must all elide");
+        assert_eq!(cp.spilled_nnz(), m.nnz() as u64);
+        let spans = ServablePlan::shard_spans(&cp, 4);
+        assert_eq!(spans.len(), 4, "spill-only composites still split rows");
+        assert_eq!(spans[0].0, 0);
+        assert_eq!(spans.last().unwrap().1, dim);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        let cp = Arc::new(cp);
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|s| (0..dim).map(|i| ((i + s) % 7) as f64 - 3.0).collect())
+            .collect();
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| m.spmv(x)).collect();
+        for workers in [1usize, 4] {
+            let exec = CompositeExecutor::new(cp.clone(), workers);
+            assert_eq!(exec.execute_batch(xs.clone()), want);
+            assert_eq!(exec.execute_batch_sharded(xs.clone()), want);
+        }
+    }
+
+    #[test]
     fn invalid_composite_is_rejected() {
         let m = synth::qm7_like(5828);
         let g = GridSummary::new(&m, 2); // n = 11
         let mut comp = two_window_composite(11, 6, 8);
         comp.slices[1].start = 7; // ownership gap
         assert!(compile_composite(&m, &g, &comp).is_err());
+    }
+
+    #[test]
+    fn composite_kernels_and_sharding_are_bit_identical_property() {
+        // Composite half of the perf-layer acceptance property: across
+        // random matrices, window layouts, per-window schemes, kernel
+        // mixes, batch sizes, and 1/2/8 workers, every serving path
+        // reproduces the scalar composite MVM bit for bit — mapped tiles
+        // (dense and sparse kernels) plus the spill CSR.
+        check("composite_kernels_bit_identical", 8, |rng| {
+            let dim = 40 + rng.below(50) as usize;
+            let m = synth::banded_like(dim, 0.88, 2 + rng.below(4) as usize);
+            let grid = 3 + rng.below(3) as usize;
+            let g = GridSummary::new(&m, grid);
+            let n = g.n;
+            if n < 4 {
+                return Ok(());
+            }
+            // random 2-3 slice composite with overlapping windows and a
+            // random scheme per window
+            let cuts = if n >= 6 && rng.below(2) == 1 {
+                let c1 = 1 + rng.below(n as u64 / 2) as usize;
+                let c2 = c1 + 1 + rng.below((n - c1 - 1) as u64) as usize;
+                vec![0, c1, c2, n]
+            } else {
+                vec![0, 1 + rng.below(n as u64 - 1) as usize, n]
+            };
+            let ov = rng.below(3) as usize;
+            let mut slices = Vec::new();
+            for w in cuts.windows(2) {
+                let (start, end) = (w[0], w[1]);
+                let win_start = start.saturating_sub(ov);
+                let win_end = (end + ov).min(n);
+                let len = win_end - win_start;
+                let scheme = if len >= 2 && rng.below(2) == 1 {
+                    let d: Vec<u8> = (0..len - 1).map(|_| rng.below(2) as u8).collect();
+                    let f: Vec<usize> = (0..len - 1).map(|_| rng.below(3) as usize).collect();
+                    parse_actions(len, &d, &f, FillRule::Dynamic { grades: 3 })
+                } else {
+                    Scheme { diag_len: vec![len], fill_len: vec![] }
+                };
+                slices.push(WindowSlice {
+                    win_start,
+                    win_end,
+                    start,
+                    end,
+                    scheme,
+                    cache_hit: false,
+                });
+            }
+            let comp = CompositeScheme { n, slices };
+            comp.validate(n)?;
+            let cp = compile_composite(&m, &g, &comp).map_err(|e| format!("{e:#}"))?;
+            if cp.mapped_nnz() + cp.spilled_nnz() != m.nnz() as u64 {
+                return Err("mapped + spilled != total nnz".into());
+            }
+            let bsz = 1 + rng.below(7) as usize;
+            let xs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect())
+                .collect();
+            let want: Vec<Vec<f64>> = xs.iter().map(|x| cp.mvm(x)).collect();
+            // forced kernel mixes agree exactly on the scalar path
+            let mut dense = cp.clone();
+            dense.plan.rekernel(0.0);
+            let mut sparse = cp.clone();
+            sparse.plan.rekernel(f64::INFINITY);
+            for ((x, w), i) in xs.iter().zip(want.iter()).zip(0..) {
+                if &dense.mvm(x) != w {
+                    return Err(format!("dense-kernel composite diverged on request {i}"));
+                }
+                if &sparse.mvm(x) != w {
+                    return Err(format!("sparse-kernel composite diverged on request {i}"));
+                }
+            }
+            // both executor modes at 1/2/8 workers
+            let cp = Arc::new(cp);
+            for &workers in &[1usize, 2, 8] {
+                let exec = CompositeExecutor::new(cp.clone(), workers);
+                if exec.execute_batch(xs.clone()) != want {
+                    return Err(format!("scalar mode diverged at {workers} workers"));
+                }
+                if exec.execute_batch_sharded(xs.clone()) != want {
+                    return Err(format!("sharded mode diverged at {workers} workers"));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -46,7 +46,48 @@ fn compiled_full_block_plan_elides_and_serves_exactly() {
                 assert!((a - b).abs() < 1e-9, "{a} vs {b}");
             }
         }
+        // the optimized band-sharded multi-RHS mode answers identically
+        let sharded = exec.execute_batch_sharded(batch);
+        assert_eq!(ys, sharded, "sharded mode must be bit-identical");
         exec.recycle(ys);
+        exec.recycle(sharded);
+    }
+}
+
+#[test]
+fn kernel_modes_and_artifacts_serve_identically_end_to_end() {
+    // compile → force each kernel mix → v2 artifact round-trip → serve:
+    // every path answers bit-identically to the auto-kernel plan.
+    let (m, g) = qh882_workload();
+    let scheme = Scheme {
+        diag_len: vec![g.n],
+        fill_len: vec![],
+    };
+    let plan = compile(&m, &g, &scheme).unwrap();
+    let (dense_progs, sparse_progs) = plan.kernel_counts();
+    assert_eq!(dense_progs + sparse_progs, plan.num_programs());
+    assert!(sparse_progs > 0, "qh882 full-block tiles are sparse-dominated");
+    let trace = synth_trace(TraceKind::Uniform, g.dim, 24, 6, &[(0, g.dim)], 3);
+    let want: Vec<Vec<Vec<f64>>> = trace
+        .iter()
+        .map(|batch| batch.iter().map(|x| plan.mvm(x)).collect())
+        .collect();
+    let dir = std::env::temp_dir().join("autogmap_it_engine_kernels");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("qh882_v2_plan.json");
+    plan.save(&path).unwrap();
+    let loaded = ExecPlan::load(&path).unwrap();
+    assert_eq!(plan, loaded);
+    let mut dense = plan.clone();
+    dense.rekernel(0.0);
+    let mut sparse = plan.clone();
+    sparse.rekernel(f64::INFINITY);
+    for variant in [loaded, dense, sparse] {
+        let exec = BatchExecutor::new(Arc::new(variant), 4);
+        for (batch, w) in trace.iter().zip(want.iter()) {
+            assert_eq!(&exec.execute_batch(batch.clone()), w);
+            assert_eq!(&exec.execute_batch_sharded(batch.clone()), w);
+        }
     }
 }
 
@@ -127,7 +168,7 @@ fn batch_graph_traffic_over_a_supermatrix_plan() {
     };
     let plan = compile(&m, &g, &scheme).unwrap();
     assert_eq!(plan.tiles.len(), 4);
-    assert_eq!(plan.programs.len(), 1, "identical sub-graphs must share programs");
+    assert_eq!(plan.num_programs(), 1, "identical sub-graphs must share programs");
 
     let arr = place(&m, &g, &scheme).unwrap();
     let segments: Vec<(usize, usize)> = (0..4).map(|i| (i * 22, (i + 1) * 22)).collect();

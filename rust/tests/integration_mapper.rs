@@ -238,6 +238,8 @@ fn composite_execution_matches_dense_oracle_on_10k_rmat() {
         let exec = CompositeExecutor::new(cplan.clone(), workers);
         let ys = exec.execute_batch(xs.clone());
         assert_eq!(ys, want, "batch execution at {workers} workers");
+        let sharded = exec.execute_batch_sharded(xs.clone());
+        assert_eq!(sharded, want, "band-sharded execution at {workers} workers");
     }
 }
 
