@@ -5,25 +5,27 @@
 //! matrix at grid 32 on the pure-Rust native backend, prints the training
 //! curves, compares the converged scheme against every baseline, and
 //! reports the crossbar deployment cost of the winning scheme. Part 2
-//! takes the same machinery to a 20k-node R-MAT graph through
-//! `mapper::map_graph`: windowed inference with the scheme cache, a
-//! stitched composite mapping, and a merged fleet-servable plan.
+//! takes the same machinery to a 20k-node R-MAT graph through the
+//! `api::DeploymentBuilder` facade — no hand-wired mapper→engine plumbing:
+//! one builder call runs windowed inference (reusing part 1's trained
+//! checkpoint), stitches the composite, compiles the fleet-servable plan,
+//! and the resulting deployment saves/reloads as a bundle that serves
+//! bit-identically.
 //!
 //! Run: `cargo run --release --example large_scale`
 //! (no artifacts needed; a few minutes — use AUTOGMAP_EPOCHS to override
 //! the epoch budget)
 
 use autogmap::agent::BackendKind;
+use autogmap::api::{Deployment, DeploymentBuilder, Source, Strategy};
 use autogmap::baselines;
 use autogmap::coordinator::config::{Dataset, ExperimentConfig};
 use autogmap::coordinator::{run_experiment, runner, RunnerOptions};
 use autogmap::crossbar::cost::CostModel;
 use autogmap::crossbar::place;
 use autogmap::crossbar::switch::SwitchCircuit;
-use autogmap::graph::{synth, GridSummary};
-use autogmap::mapper::{self, MapperConfig};
+use autogmap::graph::synth;
 use autogmap::reorder::Reordering;
-use autogmap::runtime::Manifest;
 use autogmap::scheme::{evaluate, eval::evaluate_rects, FillRule, RewardWeights};
 
 fn main() -> anyhow::Result<()> {
@@ -132,63 +134,62 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(diff < 1e-9, "deployed MVM mismatch: {diff}");
     println!("  deployed y=Ax verified exact (max|Δ| = {diff:.1e})");
 
-    // --- part 2: past the paper — 20k nodes through the mapper pipeline,
-    // reusing the controller trained above for the per-window inference
-    println!("\nscaling out: 20k-node R-MAT graph through mapper::map_graph …");
-    let big = synth::rmat_like(20_000, 120_000, 7);
-    let br = autogmap::reorder::reorder(&big, Reordering::ReverseCuthillMckee);
-    let bg = GridSummary::new(&br.matrix, 32);
-    let entry = Manifest::builtin().config("qh882_dyn6")?.clone();
-    // reuse the controller trained above: the qh882_dyn6 window shape
-    // (N=28 at grid 32) is exactly the mapper's window
+    // --- part 2: past the paper — a 20k-node R-MAT graph deployed through
+    // the api facade (no hand-wired mapper→engine plumbing), reusing the
+    // controller checkpoint trained above for the per-window inference
+    println!("\nscaling out: 20k-node R-MAT graph through api::DeploymentBuilder …");
     let ck = result.run_dir.join("checkpoint.json");
-    let params = match autogmap::agent::params::load_checkpoint(&ck, &entry) {
-        Ok((p, _, ck_epoch, _)) => {
-            println!("  reusing trained controller params (checkpoint epoch {ck_epoch})");
-            p
-        }
-        Err(_) => {
-            println!("  no checkpoint found; mapping with fresh-init params");
-            autogmap::agent::params::init_params(&entry, 7)
-        }
-    };
-    let mcfg = MapperConfig {
-        infer: mapper::InferContext {
-            entry,
-            params,
-            fill_rule: FillRule::Dynamic { grades: 6 },
-            weights: w,
-            rounds: 4,
-            seed: 7,
-        },
-        overlap: 4,
-        workers: 8,
-    };
-    let (comp, report) = mapper::map_graph(&bg, &mcfg)?;
-    let ce = comp.evaluate(&bg, 4);
+    let mut builder = DeploymentBuilder::new(
+        // qh882_dyn6's window shape (N=28 at grid 32) is the mapper window
+        Source::Rmat { nodes: 20_000, degree: 6, seed: 7 },
+        Strategy::Hierarchical { controller: "qh882_dyn6".into(), overlap: 4 },
+    )
+    .grid(32)
+    .seed(7)
+    .rounds(4)
+    .reward_a(cfg.reward_a)
+    .workers(8);
+    if ck.exists() {
+        println!("  reusing the trained controller checkpoint {}", ck.display());
+        builder = builder.checkpoint(ck);
+    } else {
+        println!("  no checkpoint found; deploying with fresh-init params");
+    }
+    let dep = builder.build()?;
+    let stats = dep.stats();
     println!(
-        "  {} windows ({} unique, cache hit rate {:.1}%) mapped in {:.2}s",
-        report.windows,
-        report.unique_windows,
-        report.cache_hit_rate * 100.0,
-        report.wall_seconds
+        "  deployment: {} plan, {} tiles / {} programs / {} bands, kernels {} dense / {} sparse",
+        dep.plan().kind(),
+        stats.tiles,
+        stats.programs,
+        stats.bands,
+        stats.kernel_dense,
+        stats.kernel_sparse
     );
     println!(
-        "  composite: area {:.5}, windowed coverage {:.3}, {} nnz spilled to digital COO ({} KiB)",
-        ce.area_ratio,
-        ce.coverage_windowed,
-        ce.spilled_nnz,
-        ce.spill_coo_bytes / 1024
+        "  serving {} mapped + {} spilled nnz over {} programmed cells ({} fleet banks)",
+        stats.mapped_nnz, stats.spilled_nnz, stats.area_cells, dep.fleet.banks
     );
-    let cplan = mapper::compile_composite(&br.matrix, &bg, &comp)?;
+    // exact serving in ORIGINAL node ids — the facade carries the RCM
+    // permutation, so callers never see the reordered space
+    let big = synth::rmat_like(20_000, 120_000, 7);
     let xb: Vec<f64> = (0..20_000).map(|i| ((i * 3) % 11) as f64 - 5.0).collect();
-    let yb = cplan.mvm(&xb);
-    let wantb = br.matrix.spmv(&xb);
-    anyhow::ensure!(yb == wantb, "composite MVM diverged from the dense oracle");
+    let yb = dep.mvm(&xb)?;
+    anyhow::ensure!(yb == big.spmv(&xb), "deployment MVM diverged from the dense oracle");
+    println!("  y=Ax bit-exact vs the dense oracle, in original node ids");
+
+    // checkpoint reuse through the bundle: pay the mapping cost once,
+    // reload in any process, serve bit-identically
+    let bundle = result.run_dir.join("deployment.json");
+    dep.save(&bundle)?;
+    let back = Deployment::load(&bundle)?;
+    anyhow::ensure!(back.stats() == stats, "reloaded bundle lost program stats");
+    anyhow::ensure!(back.mvm(&xb)? == yb, "reloaded bundle answered differently");
     println!(
-        "  merged plan: {} tiles, {} programs; y=Ax bit-exact vs the dense oracle",
-        cplan.plan.tiles.len(),
-        cplan.plan.num_programs()
+        "  bundle {} reloads and serves bit-identically (serve it: \
+         autogmap serve --bundle {})",
+        bundle.display(),
+        bundle.display()
     );
     Ok(())
 }

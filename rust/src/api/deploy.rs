@@ -1,0 +1,876 @@
+//! Build-once, serve-forever deployments: the facade that turns
+//! graph → reorder → map → compile → fleet hand-wiring into one builder
+//! call, and a versioned on-disk bundle so the mapping cost is paid once.
+//!
+//! [`DeploymentBuilder`] names a *source* (a MatrixMarket file, a synthetic
+//! R-MAT graph, or an in-memory CSR), a *strategy* (direct controller
+//! inference, the hierarchical window mapper, or the fixed-block
+//! baseline), and execution knobs (kernel selection, fleet banks and
+//! policy, worker count). [`DeploymentBuilder::build`] runs the whole
+//! pipeline and returns a [`Deployment`] owning the compiled plan (flat or
+//! composite, behind [`DeployedPlan`]), the fleet assignment, the
+//! reordering permutation, and provenance metadata.
+//!
+//! A deployment saves to a single self-contained JSON **bundle**
+//! ([`Deployment::save`] / [`Deployment::load`], format version
+//! [`BUNDLE_VERSION`]) that embeds the version-2 plan arena artifact, the
+//! composite's spill CSR when present, and the fleet/exec configuration —
+//! reloading is a pure load + execute path with no graph, controller, or
+//! training dependency, and it serves **bit-identically** to the in-memory
+//! deployment that produced it. Bundles are byte-deterministic for a fixed
+//! source and configuration.
+//!
+//! Serving happens in *original* node ids: the builder's reordering
+//! permutation rides along, [`Deployment::mvm`] applies x' = P x on the
+//! way in and y = Pᵀ y' on the way out (the switch-circuit contract), so
+//! callers never see the RCM order the crossbars were programmed in.
+
+use super::error::{Error, Result};
+use crate::agent::params::{init_params, load_checkpoint, Params};
+use crate::agent::validate_fill_rule;
+use crate::engine::{self, AssignPolicy, BatchExecutor, ExecPlan, Fleet, Servable, ServeStats};
+use crate::graph::sparse::perm;
+use crate::graph::{matrix_market, synth, Csr, GridSummary};
+use crate::mapper::{self, cache, infer, CompositePlan, MapperConfig};
+use crate::reorder::{reorder, Reordering};
+use crate::runtime::manifest::ControllerEntry;
+use crate::runtime::Manifest;
+use crate::scheme::{CompositeScheme, FillRule, RewardWeights, Scheme, WindowSlice};
+use crate::util::json::{num_arr, obj, Json};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// On-disk bundle format revision this build writes and reads.
+pub const BUNDLE_VERSION: usize = 1;
+
+/// Where the matrix comes from.
+#[derive(Clone, Debug)]
+pub enum Source {
+    /// A MatrixMarket `.mtx` file on disk.
+    MtxFile(PathBuf),
+    /// A deterministic synthetic R-MAT graph
+    /// ([`crate::graph::synth::rmat_like`] with `target_nnz = nodes ·
+    /// degree`, rounded to an even count).
+    Rmat { nodes: usize, degree: usize, seed: u64 },
+    /// An in-memory CSR the caller already holds.
+    Matrix { label: String, matrix: Csr },
+}
+
+/// How the matrix is mapped onto crossbars.
+#[derive(Clone, Debug)]
+pub enum Strategy {
+    /// One trained-controller inference over the whole grid — the paper's
+    /// native path. Requires the grid to fit inside the controller's
+    /// window; produces a flat [`ExecPlan`] with complete coverage.
+    Direct { controller: String },
+    /// The hierarchical window mapper ([`crate::mapper::map_graph`]):
+    /// overlapping controller windows, scheme cache, stitched composite
+    /// with digital spill — exact at any scale.
+    Hierarchical { controller: String, overlap: usize },
+    /// The fixed-block baseline: one diagonal block per `block` grid
+    /// cells, off-block nnz spilled digitally — exact, no controller.
+    FixedBlock { block: usize },
+}
+
+impl Strategy {
+    fn label(&self) -> String {
+        match self {
+            Strategy::Direct { controller } => format!("direct:{controller}"),
+            Strategy::Hierarchical { controller, overlap } => {
+                format!("hierarchical:{controller}:overlap{overlap}")
+            }
+            Strategy::FixedBlock { block } => format!("fixed:{block}"),
+        }
+    }
+}
+
+/// Kernel selection applied to the compiled plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// density-threshold selection (the compiled default)
+    Auto,
+    /// force the dense row-dot kernel everywhere
+    Dense,
+    /// force the compiled CSR-within-tile kernel everywhere
+    Sparse,
+}
+
+impl KernelChoice {
+    pub fn parse(s: &str) -> Result<KernelChoice> {
+        Ok(match s {
+            "auto" => KernelChoice::Auto,
+            "dense" => KernelChoice::Dense,
+            "sparse" => KernelChoice::Sparse,
+            other => {
+                return Err(Error::Validate(format!(
+                    "unknown kernel {other:?} (auto|dense|sparse)"
+                )))
+            }
+        })
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Dense => "dense",
+            KernelChoice::Sparse => "sparse",
+        }
+    }
+
+    fn apply(&self, plan: &mut ExecPlan) {
+        match self {
+            KernelChoice::Auto => {}
+            KernelChoice::Dense => plan.rekernel(0.0),
+            KernelChoice::Sparse => plan.rekernel(f64::INFINITY),
+        }
+    }
+}
+
+/// The compiled artifact a deployment serves: either the engine's flat
+/// plan or the mapper's composite. Both sides of the enum implement
+/// [`Servable`], and so does the enum itself — the executor and the serve
+/// loop never branch on the shape.
+#[derive(Clone, Debug)]
+pub enum DeployedPlan {
+    Flat(ExecPlan),
+    Composite(CompositePlan),
+}
+
+impl DeployedPlan {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DeployedPlan::Flat(_) => "flat",
+            DeployedPlan::Composite(_) => "composite",
+        }
+    }
+
+    /// The merged crossbar schedule (the whole plan for flat deployments).
+    pub fn exec_plan(&self) -> &ExecPlan {
+        match self {
+            DeployedPlan::Flat(p) => p,
+            DeployedPlan::Composite(c) => &c.plan,
+        }
+    }
+
+    fn exec_plan_mut(&mut self) -> &mut ExecPlan {
+        match self {
+            DeployedPlan::Flat(p) => p,
+            DeployedPlan::Composite(c) => &mut c.plan,
+        }
+    }
+}
+
+impl DeployedPlan {
+    /// The one Flat/Composite dispatch point: every [`Servable`] method
+    /// delegates through this accessor, so adding a trait method cannot
+    /// cross-wire enum arms.
+    fn inner(&self) -> &dyn Servable {
+        match self {
+            DeployedPlan::Flat(p) => p,
+            DeployedPlan::Composite(c) => c,
+        }
+    }
+}
+
+impl Servable for DeployedPlan {
+    fn dim(&self) -> usize {
+        self.inner().dim()
+    }
+
+    fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        self.inner().mvm_into(x, y)
+    }
+
+    fn shard_spans(&self, shards: usize) -> Vec<(usize, usize)> {
+        self.inner().shard_spans(shards)
+    }
+
+    fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]) {
+        self.inner().mvm_span_batch(span, xs, outs)
+    }
+
+    fn nnz(&self) -> u64 {
+        self.inner().nnz()
+    }
+
+    fn area_cells(&self) -> u64 {
+        self.inner().area_cells()
+    }
+
+    fn stats(&self) -> ServeStats {
+        self.inner().stats()
+    }
+}
+
+/// Where a deployment came from — recorded in the bundle so a reloaded
+/// artifact still answers "what is this".
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// source label, e.g. `rmat10000` or `mtx:data/qh882.mtx`
+    pub source: String,
+    /// strategy label, e.g. `hierarchical:qh882_dyn4:overlap4`
+    pub strategy: String,
+    /// matrix dimension D
+    pub dim: usize,
+    /// grid cell side K
+    pub grid: usize,
+    /// grid cells per side N
+    pub cells: usize,
+    /// total non-zeros of the source matrix
+    pub nnz: u64,
+    /// build seed (synthesis, parameter init, rollout streams)
+    pub seed: u64,
+    /// reordering label (`identity`|`cm`|`rcm`)
+    pub reordering: String,
+    /// kernel selection label (`auto`|`dense`|`sparse`)
+    pub kernel: String,
+}
+
+/// A built (or reloaded) deployment: compiled plan + fleet + permutation +
+/// provenance, ready to serve.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub provenance: Provenance,
+    plan: Arc<DeployedPlan>,
+    pub fleet: Fleet,
+    /// reordering permutation, perm[new] = old
+    perm: Vec<usize>,
+    /// default executor worker count (overridable per executor)
+    pub workers: usize,
+}
+
+/// Builder for [`Deployment`]: source + strategy, then optional knobs.
+#[derive(Clone, Debug)]
+pub struct DeploymentBuilder {
+    source: Source,
+    strategy: Strategy,
+    grid: usize,
+    reordering: Reordering,
+    seed: u64,
+    rounds: usize,
+    checkpoint: Option<PathBuf>,
+    kernel: KernelChoice,
+    banks: usize,
+    policy: AssignPolicy,
+    workers: usize,
+    reward_a: f64,
+}
+
+impl DeploymentBuilder {
+    pub fn new(source: Source, strategy: Strategy) -> DeploymentBuilder {
+        DeploymentBuilder {
+            source,
+            strategy,
+            grid: 32,
+            reordering: Reordering::ReverseCuthillMckee,
+            seed: 42,
+            rounds: 2,
+            checkpoint: None,
+            kernel: KernelChoice::Auto,
+            banks: 8,
+            policy: AssignPolicy::BalancedNnz,
+            workers: 8,
+            reward_a: 0.8,
+        }
+    }
+
+    /// Grid cell side K (default 32).
+    pub fn grid(mut self, grid: usize) -> Self {
+        self.grid = grid;
+        self
+    }
+
+    /// Bandwidth-reducing reordering (default reverse Cuthill-McKee).
+    pub fn reordering(mut self, r: Reordering) -> Self {
+        self.reordering = r;
+        self
+    }
+
+    /// Seed for synthesis, parameter init, and rollout streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Controller sampling rounds per window (0 = greedy + safety only).
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    /// Load trained controller parameters from a checkpoint instead of
+    /// fresh-initializing them.
+    pub fn checkpoint(mut self, ck: PathBuf) -> Self {
+        self.checkpoint = Some(ck);
+        self
+    }
+
+    /// Kernel selection for the compiled plan (default auto).
+    pub fn kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Simulated crossbar banks the fleet spreads tiles over (default 8).
+    pub fn banks(mut self, banks: usize) -> Self {
+        self.banks = banks;
+        self
+    }
+
+    /// Tile → bank assignment policy (default nnz-balanced).
+    pub fn policy(mut self, policy: AssignPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Default executor worker count (default 8); also the mapper's
+    /// inference parallelism during the build.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Reward scalarization weight `a` used to score candidate window
+    /// schemes during inference (default 0.8). Match the value the
+    /// controller was trained with.
+    pub fn reward_a(mut self, a: f64) -> Self {
+        self.reward_a = a;
+        self
+    }
+
+    fn controller_params(&self, controller: &str) -> Result<(ControllerEntry, Params)> {
+        let entry = Manifest::builtin()
+            .config(controller)
+            .map_err(|e| Error::Validate(format!("{e:#}")))?
+            .clone();
+        let params = match &self.checkpoint {
+            Some(ck) => {
+                load_checkpoint(ck, &entry)
+                    .map_err(|e| {
+                        Error::Validate(format!("loading checkpoint {}: {e:#}", ck.display()))
+                    })?
+                    .0
+            }
+            None => init_params(&entry, self.seed),
+        };
+        Ok((entry, params))
+    }
+
+    fn infer_context(&self, entry: ControllerEntry, params: Params) -> Result<infer::InferContext> {
+        let fill_rule = fill_rule_for(entry.fill_classes);
+        validate_fill_rule(&entry, &fill_rule)
+            .map_err(|e| Error::Validate(format!("{e:#}")))?;
+        Ok(infer::InferContext {
+            entry,
+            params,
+            fill_rule,
+            weights: RewardWeights::new(self.reward_a),
+            rounds: self.rounds,
+            seed: self.seed,
+        })
+    }
+
+    /// Run source → reorder → map → compile → fleet and assemble the
+    /// deployment.
+    pub fn build(self) -> Result<Deployment> {
+        if self.grid == 0 {
+            return Err(Error::Validate("grid cell side must be at least 1".into()));
+        }
+        let (label, m) = match &self.source {
+            Source::MtxFile(p) => {
+                let m = matrix_market::read(p).map_err(|e| match e {
+                    matrix_market::MtxError::Io(io) => {
+                        Error::Io(format!("reading {}: {io}", p.display()))
+                    }
+                    other => Error::Parse(format!("{}: {other}", p.display())),
+                })?;
+                (format!("mtx:{}", p.display()), m)
+            }
+            Source::Rmat { nodes, degree, seed } => {
+                let (nodes, degree) = (*nodes, (*degree).max(1));
+                if nodes < 2 {
+                    return Err(Error::Validate(format!(
+                        "rmat source needs at least 2 nodes, got {nodes}"
+                    )));
+                }
+                // stay well inside simple-graph capacity: the skewed
+                // R-MAT generator asserts (panics) on infeasible or
+                // near-clique targets, which must surface as a typed
+                // error at this boundary instead
+                if degree > (nodes - 1) / 2 {
+                    return Err(Error::Validate(format!(
+                        "rmat degree {degree} is too dense for {nodes} nodes                          (need degree <= {})",
+                        (nodes - 1) / 2
+                    )));
+                }
+                let target_nnz = 2 * (nodes * degree / 2);
+                (format!("rmat{nodes}"), synth::rmat_like(nodes, target_nnz, *seed))
+            }
+            Source::Matrix { label, matrix } => (label.clone(), matrix.clone()),
+        };
+        if m.rows != m.cols {
+            return Err(Error::Validate(format!(
+                "deployments need a square matrix, got {}x{}",
+                m.rows, m.cols
+            )));
+        }
+        if m.rows == 0 {
+            return Err(Error::Validate("matrix has no rows".into()));
+        }
+        let total_nnz = m.nnz() as u64;
+        let r = reorder(&m, self.reordering);
+        let g = GridSummary::new(&r.matrix, self.grid);
+
+        let mut plan = match &self.strategy {
+            Strategy::Direct { controller } => {
+                let (entry, params) = self.controller_params(controller)?;
+                if g.n > entry.n {
+                    return Err(Error::Validate(format!(
+                        "direct strategy: the {}-cell grid exceeds controller {:?}'s \
+                         {}-cell window; use Strategy::Hierarchical",
+                        g.n, controller, entry.n
+                    )));
+                }
+                let ctx = self.infer_context(entry, params)?;
+                let sig = cache::signature(&g);
+                let scheme = infer::map_window(&ctx, &g, sig.hash);
+                let p = engine::compile(&r.matrix, &g, &scheme)
+                    .map_err(|e| Error::Validate(format!("compiling direct scheme: {e:#}")))?;
+                if p.mapped_nnz() != total_nnz {
+                    return Err(Error::Validate(format!(
+                        "direct scheme lost coverage: mapped {} of {} nnz",
+                        p.mapped_nnz(),
+                        total_nnz
+                    )));
+                }
+                DeployedPlan::Flat(p)
+            }
+            Strategy::Hierarchical { controller, overlap } => {
+                let (entry, params) = self.controller_params(controller)?;
+                let cfg = MapperConfig {
+                    infer: self.infer_context(entry, params)?,
+                    overlap: *overlap,
+                    workers: self.workers.max(1),
+                };
+                let (comp, _report) = mapper::map_graph(&g, &cfg)
+                    .map_err(|e| Error::Validate(format!("mapping: {e:#}")))?;
+                let cp = mapper::compile_composite(&r.matrix, &g, &comp)
+                    .map_err(|e| Error::Validate(format!("compiling composite: {e:#}")))?;
+                DeployedPlan::Composite(cp)
+            }
+            Strategy::FixedBlock { block } => {
+                let block = (*block).clamp(1, g.n);
+                // one full diagonal block per `block` grid cells, each
+                // owning exactly its window — off-block nnz spills, so the
+                // baseline serves exactly like the learned strategies
+                let mut slices = Vec::new();
+                let mut start = 0usize;
+                while start < g.n {
+                    let end = (start + block).min(g.n);
+                    slices.push(WindowSlice {
+                        win_start: start,
+                        win_end: end,
+                        start,
+                        end,
+                        scheme: Scheme {
+                            diag_len: vec![end - start],
+                            fill_len: vec![],
+                        },
+                        cache_hit: false,
+                    });
+                    start = end;
+                }
+                let comp = CompositeScheme { n: g.n, slices };
+                let cp = mapper::compile_composite(&r.matrix, &g, &comp)
+                    .map_err(|e| Error::Validate(format!("compiling fixed blocks: {e:#}")))?;
+                DeployedPlan::Composite(cp)
+            }
+        };
+        if Servable::nnz(&plan) != total_nnz {
+            return Err(Error::Validate(format!(
+                "plan serves {} nnz but the matrix holds {total_nnz}",
+                Servable::nnz(&plan)
+            )));
+        }
+        self.kernel.apply(plan.exec_plan_mut());
+        let fleet = Fleet::assign(plan.exec_plan(), self.banks.max(1), self.policy)
+            .map_err(|e| Error::Validate(format!("fleet assignment: {e:#}")))?;
+        Ok(Deployment {
+            provenance: Provenance {
+                source: label,
+                strategy: self.strategy.label(),
+                dim: g.dim,
+                grid: self.grid,
+                cells: g.n,
+                nnz: total_nnz,
+                seed: self.seed,
+                reordering: reordering_label(self.reordering).into(),
+                kernel: self.kernel.label().into(),
+            },
+            plan: Arc::new(plan),
+            fleet,
+            perm: r.perm,
+            workers: self.workers.max(1),
+        })
+    }
+}
+
+/// Fill geometry implied by a controller's fill head.
+fn fill_rule_for(fill_classes: usize) -> FillRule {
+    match fill_classes {
+        0 => FillRule::None,
+        c => FillRule::Dynamic { grades: c.max(2) },
+    }
+}
+
+fn reordering_label(r: Reordering) -> &'static str {
+    match r {
+        Reordering::Identity => "identity",
+        Reordering::CuthillMckee => "cm",
+        Reordering::ReverseCuthillMckee => "rcm",
+    }
+}
+
+fn policy_label(p: AssignPolicy) -> &'static str {
+    match p {
+        AssignPolicy::RoundRobin => "rr",
+        AssignPolicy::BalancedNnz => "balanced",
+    }
+}
+
+impl Deployment {
+    /// The compiled plan this deployment serves.
+    pub fn plan(&self) -> &DeployedPlan {
+        &self.plan
+    }
+
+    /// Shared handle to the plan (what executors hold).
+    pub fn plan_arc(&self) -> Arc<DeployedPlan> {
+        self.plan.clone()
+    }
+
+    /// Program-level serving statistics of the compiled plan.
+    pub fn stats(&self) -> ServeStats {
+        self.plan.stats()
+    }
+
+    /// Spawn an executor over the deployment's plan. `workers == 0` uses
+    /// the deployment default.
+    pub fn executor(&self, workers: usize) -> BatchExecutor<DeployedPlan> {
+        let w = if workers == 0 { self.workers } else { workers };
+        BatchExecutor::new(self.plan.clone(), w.max(1))
+    }
+
+    /// The reordering permutation (perm[new] = old).
+    pub fn permutation(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// x' = P x: take a request from original node ids into the served
+    /// (reordered) order.
+    pub fn permute_in(&self, x: &[f64]) -> Vec<f64> {
+        perm::apply(&self.perm, x)
+    }
+
+    /// y = Pᵀ y': take a served response back to original node ids.
+    pub fn permute_out(&self, y: &[f64]) -> Vec<f64> {
+        perm::apply_inverse(&self.perm, y)
+    }
+
+    /// One exact MVM in original node ids (permute in, serve, permute
+    /// out). The batch path is [`crate::api::serve_loop`] /
+    /// [`Self::executor`].
+    pub fn mvm(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let dim = self.plan.dim();
+        if x.len() != dim {
+            return Err(Error::Validate(format!(
+                "request has {} elements, deployment expects {dim}",
+                x.len()
+            )));
+        }
+        Ok(self.permute_out(&self.plan.mvm(&self.permute_in(x))))
+    }
+
+    // ---- bundle (de)serialization ---------------------------------------
+
+    /// Serialize to the self-contained bundle document (format version
+    /// [`BUNDLE_VERSION`], embedding the version-2 plan arena artifact).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("bundle_version", Json::Num(BUNDLE_VERSION as f64)),
+            (
+                "provenance",
+                obj(vec![
+                    ("source", Json::Str(self.provenance.source.clone())),
+                    ("strategy", Json::Str(self.provenance.strategy.clone())),
+                    ("dim", Json::Num(self.provenance.dim as f64)),
+                    ("grid", Json::Num(self.provenance.grid as f64)),
+                    ("cells", Json::Num(self.provenance.cells as f64)),
+                    ("nnz", Json::Num(self.provenance.nnz as f64)),
+                    ("seed", Json::Num(self.provenance.seed as f64)),
+                    ("reordering", Json::Str(self.provenance.reordering.clone())),
+                    ("kernel", Json::Str(self.provenance.kernel.clone())),
+                ]),
+            ),
+            ("kind", Json::Str(self.plan.kind().into())),
+            ("plan", self.plan.exec_plan().to_json()),
+            ("perm", num_arr(self.perm.iter().map(|&p| p as f64))),
+            (
+                "fleet",
+                obj(vec![
+                    ("banks", Json::Num(self.fleet.banks as f64)),
+                    ("policy", Json::Str(policy_label(self.fleet.policy).into())),
+                ]),
+            ),
+            ("workers", Json::Num(self.workers as f64)),
+        ];
+        if let DeployedPlan::Composite(c) = &*self.plan {
+            fields.push(("spill", c.spill.to_json()));
+            fields.push((
+                "window_tiles",
+                num_arr(c.window_tiles.iter().map(|&t| t as f64)),
+            ));
+        }
+        obj(fields)
+    }
+
+    /// Parse and validate a bundle document.
+    pub fn from_json(doc: &Json) -> Result<Deployment> {
+        let version = doc
+            .get("bundle_version")
+            .as_usize()
+            .ok_or_else(|| Error::Parse("bundle missing bundle_version".into()))?;
+        if version != BUNDLE_VERSION {
+            return Err(Error::BundleVersion {
+                found: version,
+                supported: BUNDLE_VERSION,
+            });
+        }
+        let prov = doc.get("provenance");
+        let prov_str = |key: &str| -> Result<String> {
+            prov.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Validate(format!("bundle provenance missing {key}")))
+        };
+        let prov_num = |key: &str| -> Result<u64> {
+            prov.get(key)
+                .as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .ok_or_else(|| Error::Validate(format!("bundle provenance missing {key}")))
+        };
+        let provenance = Provenance {
+            source: prov_str("source")?,
+            strategy: prov_str("strategy")?,
+            dim: prov_num("dim")? as usize,
+            grid: prov_num("grid")? as usize,
+            cells: prov_num("cells")? as usize,
+            nnz: prov_num("nnz")?,
+            seed: prov_num("seed")?,
+            reordering: prov_str("reordering")?,
+            kernel: prov_str("kernel")?,
+        };
+
+        let exec_plan = ExecPlan::from_json(doc.get("plan"))
+            .map_err(|e| Error::Validate(format!("bundle plan: {e:#}")))?;
+        if exec_plan.dim != provenance.dim {
+            return Err(Error::Validate(format!(
+                "bundle plan is {}-dimensional but provenance says {}",
+                exec_plan.dim, provenance.dim
+            )));
+        }
+        let kind = doc
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| Error::Validate("bundle missing kind".into()))?;
+        let plan = match kind {
+            "flat" => DeployedPlan::Flat(exec_plan),
+            "composite" => {
+                let spill = Csr::from_json(doc.get("spill"))
+                    .map_err(|e| Error::Validate(format!("bundle spill: {e}")))?;
+                if spill.rows != exec_plan.dim || spill.cols != exec_plan.dim {
+                    return Err(Error::Validate(format!(
+                        "bundle spill is {}x{} but the plan is {}-dimensional",
+                        spill.rows, spill.cols, exec_plan.dim
+                    )));
+                }
+                let wt_arr = doc
+                    .get("window_tiles")
+                    .as_arr()
+                    .ok_or_else(|| Error::Validate("bundle missing window_tiles".into()))?;
+                let mut window_tiles = Vec::with_capacity(wt_arr.len());
+                for (i, v) in wt_arr.iter().enumerate() {
+                    window_tiles.push(v.as_usize().ok_or_else(|| {
+                        Error::Validate(format!("bundle window_tiles[{i}] not a count"))
+                    })?);
+                }
+                if window_tiles.iter().sum::<usize>() != exec_plan.tiles.len() {
+                    return Err(Error::Validate(format!(
+                        "bundle window_tiles account for {} tiles but the plan holds {}",
+                        window_tiles.iter().sum::<usize>(),
+                        exec_plan.tiles.len()
+                    )));
+                }
+                DeployedPlan::Composite(CompositePlan {
+                    plan: exec_plan,
+                    spill,
+                    window_tiles,
+                })
+            }
+            other => {
+                return Err(Error::Validate(format!(
+                    "unknown bundle kind {other:?} (flat|composite)"
+                )))
+            }
+        };
+        if Servable::nnz(&plan) != provenance.nnz {
+            return Err(Error::Validate(format!(
+                "bundle serves {} nnz but provenance records {}",
+                Servable::nnz(&plan),
+                provenance.nnz
+            )));
+        }
+
+        let perm_arr = doc
+            .get("perm")
+            .as_arr()
+            .ok_or_else(|| Error::Validate("bundle missing perm".into()))?;
+        let mut permutation = Vec::with_capacity(perm_arr.len());
+        for (i, v) in perm_arr.iter().enumerate() {
+            permutation.push(
+                v.as_usize()
+                    .ok_or_else(|| Error::Validate(format!("bundle perm[{i}] not an index")))?,
+            );
+        }
+        if permutation.len() != plan.dim() || !perm::is_permutation(&permutation) {
+            return Err(Error::Validate(format!(
+                "bundle perm is not a permutation of {} rows",
+                plan.dim()
+            )));
+        }
+
+        let fleet_doc = doc.get("fleet");
+        let banks = fleet_doc
+            .get("banks")
+            .as_usize()
+            .filter(|&b| b >= 1)
+            .ok_or_else(|| Error::Validate("bundle fleet needs at least one bank".into()))?;
+        let policy = AssignPolicy::parse(
+            fleet_doc
+                .get("policy")
+                .as_str()
+                .ok_or_else(|| Error::Validate("bundle fleet missing policy".into()))?,
+        )
+        .map_err(|e| Error::Validate(format!("{e:#}")))?;
+        let fleet = Fleet::assign(plan.exec_plan(), banks, policy)
+            .map_err(|e| Error::Validate(format!("bundle fleet assignment: {e:#}")))?;
+        let workers = doc.get("workers").as_usize().unwrap_or(1).max(1);
+
+        Ok(Deployment {
+            provenance,
+            plan: Arc::new(plan),
+            fleet,
+            perm: permutation,
+            workers,
+        })
+    }
+
+    /// Write the bundle to disk (compact JSON).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| Error::Io(format!("writing bundle {}: {e}", path.display())))
+    }
+
+    /// Load a bundle from disk — the pure load + execute path: no graph,
+    /// controller, or training dependency, bit-identical serving to the
+    /// deployment that was saved.
+    pub fn load(path: &Path) -> Result<Deployment> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Io(format!("reading bundle {}: {e}", path.display())))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::Parse(format!("bundle {}: {e}", path.display())))?;
+        Self::from_json(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qm7_source() -> Source {
+        Source::Matrix {
+            label: "qm7".into(),
+            matrix: synth::qm7_like(5828),
+        }
+    }
+
+    #[test]
+    fn fixed_block_deployment_serves_exactly_in_original_ids() {
+        let m = synth::qm7_like(5828);
+        let dep = DeploymentBuilder::new(qm7_source(), Strategy::FixedBlock { block: 2 })
+            .grid(2)
+            .banks(2)
+            .workers(2)
+            .build()
+            .unwrap();
+        assert_eq!(dep.provenance.dim, 22);
+        assert_eq!(dep.stats().total_nnz(), m.nnz() as u64);
+        let x: Vec<f64> = (0..22).map(|i| ((i * 5) % 7) as f64 - 3.0).collect();
+        // exact in ORIGINAL ids despite the RCM reordering inside
+        assert_eq!(dep.mvm(&x).unwrap(), m.spmv(&x));
+        // wrong-length requests are a typed validation error
+        assert!(matches!(dep.mvm(&[1.0, 2.0]), Err(Error::Validate(_))));
+    }
+
+    #[test]
+    fn direct_strategy_requires_a_fitting_window_and_is_complete() {
+        // qm7 at grid 2 -> n = 11, exactly qm7_dyn4's 11-cell window
+        let dep = DeploymentBuilder::new(
+            qm7_source(),
+            Strategy::Direct { controller: "qm7_dyn4".into() },
+        )
+        .grid(2)
+        .rounds(1)
+        .build()
+        .unwrap();
+        assert_eq!(dep.plan().kind(), "flat");
+        let m = synth::qm7_like(5828);
+        assert_eq!(dep.stats().mapped_nnz, m.nnz() as u64);
+        assert_eq!(dep.stats().spilled_nnz, 0);
+        let x: Vec<f64> = (0..22).map(|i| (i as f64 * 0.37).sin()).collect();
+        let y = dep.mvm(&x).unwrap();
+        let want = m.spmv(&x);
+        for (a, b) in y.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        // a grid larger than the controller window is rejected with advice
+        let err = DeploymentBuilder::new(
+            Source::Rmat { nodes: 2000, degree: 4, seed: 3 },
+            Strategy::Direct { controller: "qm7_dyn4".into() },
+        )
+        .grid(8)
+        .build()
+        .unwrap_err();
+        assert!(matches!(err, Error::Validate(_)));
+        assert!(err.to_string().contains("Hierarchical"));
+    }
+
+    #[test]
+    fn kernel_choices_change_the_mix_but_not_the_answers() {
+        let x: Vec<f64> = (0..22).map(|i| ((i * 3) % 13) as f64 - 6.0).collect();
+        let build = |k: KernelChoice| {
+            DeploymentBuilder::new(qm7_source(), Strategy::FixedBlock { block: 1 })
+                .grid(2)
+                .kernel(k)
+                .build()
+                .unwrap()
+        };
+        let dense = build(KernelChoice::Dense);
+        let sparse = build(KernelChoice::Sparse);
+        assert_eq!(dense.stats().kernel_sparse, 0);
+        assert_eq!(sparse.stats().kernel_dense, 0);
+        assert_eq!(dense.mvm(&x).unwrap(), sparse.mvm(&x).unwrap());
+        assert_eq!(KernelChoice::parse("sparse").unwrap(), KernelChoice::Sparse);
+        assert!(KernelChoice::parse("quantum").is_err());
+    }
+}

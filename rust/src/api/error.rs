@@ -1,0 +1,94 @@
+//! Typed errors for the deployment API boundary.
+//!
+//! Everything below `api` reports failures through `anyhow`-style context
+//! chains, which is right for a CLI that prints and exits. A serving
+//! facade needs more: the long-running `serve` loop must classify a
+//! failure (bad request vs. bad bundle vs. the disk going away) to decide
+//! whether to answer with a machine-readable NDJSON error object or to
+//! stop, and callers embedding [`crate::api::Deployment`] need to match on
+//! the cause without parsing strings. [`Error`] is that classification;
+//! [`Error::kind`] is the stable wire label the serve loop puts in
+//! `{"error":{"kind":...}}` responses.
+
+use std::fmt;
+
+/// What went wrong at the API boundary.
+#[derive(Debug)]
+pub enum Error {
+    /// Input that is not even well-formed: broken JSON, an unreadable
+    /// `.mtx` source file.
+    Parse(String),
+    /// Well-formed input that violates a semantic contract: a request
+    /// line with no `x` array or the wrong vector length, a non-square
+    /// matrix, a bundle whose pieces disagree.
+    Validate(String),
+    /// The operating system said no: file I/O on bundles, checkpoint
+    /// files, or the request/response streams.
+    Io(String),
+    /// A bundle written by a different (newer) format revision.
+    BundleVersion {
+        found: usize,
+        supported: usize,
+    },
+}
+
+/// `Result` specialized to the API boundary's typed [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Stable machine-readable label, used as the `kind` field of NDJSON
+    /// error responses.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::Parse(_) => "parse",
+            Error::Validate(_) => "validate",
+            Error::Io(_) => "io",
+            Error::BundleVersion { .. } => "bundle_version",
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Validate(m) => write!(f, "validation error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::BundleVersion { found, supported } => write!(
+                f,
+                "unsupported bundle version {found} (this build reads version {supported})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_messages_are_stable() {
+        assert_eq!(Error::Parse("x".into()).kind(), "parse");
+        assert_eq!(Error::Validate("x".into()).kind(), "validate");
+        assert_eq!(Error::Io("x".into()).kind(), "io");
+        let v = Error::BundleVersion { found: 9, supported: 1 };
+        assert_eq!(v.kind(), "bundle_version");
+        assert!(v.to_string().contains("version 9"));
+        assert!(Error::Parse("bad digit".into()).to_string().contains("bad digit"));
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(e.kind(), "io");
+        assert!(e.to_string().contains("gone"));
+    }
+}

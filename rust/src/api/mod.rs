@@ -1,0 +1,50 @@
+//! The public serving API: build a deployment once, save it as a bundle,
+//! reload it anywhere, serve it forever.
+//!
+//! Everything below this module is a pipeline stage (graph → reorder →
+//! map → compile → fleet → execute) that entry points used to wire by
+//! hand, in two parallel flavors — the engine's flat plans and the
+//! mapper's composites. This module is the single front door over both:
+//!
+//! - [`DeploymentBuilder`] — declare a [`Source`] (`.mtx` file, synthetic
+//!   R-MAT graph, in-memory CSR), a [`Strategy`] (direct controller /
+//!   hierarchical mapper / fixed-block baseline), and kernel/fleet/worker
+//!   knobs; `build()` runs the pipeline.
+//! - [`Deployment`] — owns the compiled [`DeployedPlan`] (flat or
+//!   composite, both behind the unified [`crate::engine::Servable`]
+//!   trait), the fleet assignment, the reordering permutation, and
+//!   [`Provenance`]. Serves in *original* node ids.
+//! - **Bundles** — [`Deployment::save`] / [`Deployment::load`] move a
+//!   deployment through one self-contained versioned JSON file
+//!   (embedding the v2 plan arena), so the mapping cost is paid once and
+//!   reload is a pure load + execute path that serves bit-identically.
+//! - [`serve_loop`] — the long-running NDJSON request/response loop the
+//!   `serve` CLI subcommand wraps around stdin/stdout, with typed
+//!   [`Error`]s surfaced as machine-readable error responses instead of
+//!   process exits.
+//!
+//! The 5-line flow:
+//!
+//! ```no_run
+//! use autogmap::api::{Deployment, DeploymentBuilder, Source, Strategy};
+//! # fn main() -> autogmap::api::Result<()> {
+//! let dep = DeploymentBuilder::new(
+//!     Source::Rmat { nodes: 10_000, degree: 8, seed: 42 },
+//!     Strategy::Hierarchical { controller: "qh882_dyn4".into(), overlap: 4 },
+//! ).build()?;
+//! dep.save(std::path::Path::new("bundle.json"))?;
+//! let served = Deployment::load(std::path::Path::new("bundle.json"))?;
+//! let y = served.mvm(&vec![1.0; 10_000])?; // or serve_loop / executor()
+//! # let _ = y; Ok(()) }
+//! ```
+
+pub mod deploy;
+pub mod error;
+pub mod serve;
+
+pub use deploy::{
+    DeployedPlan, Deployment, DeploymentBuilder, KernelChoice, Provenance, Source, Strategy,
+    BUNDLE_VERSION,
+};
+pub use error::{Error, Result};
+pub use serve::{serve_loop, ServeOptions, ServeReport};

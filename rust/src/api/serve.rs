@@ -1,0 +1,328 @@
+//! The long-running serve loop: NDJSON requests in, NDJSON responses and
+//! periodic stats out.
+//!
+//! One JSON object per input line:
+//!
+//! - `{"id": <any json>, "x": [f64; dim]}` — a single MVM request. The
+//!   response is `{"id": ..., "y": [...]}`.
+//! - `{"id": ..., "xs": [[f64; dim], ...]}` — an explicit batch, executed
+//!   as one dispatch; the response is `{"id": ..., "ys": [[...], ...]}`.
+//! - `{"flush": true}` — force the coalescing window to dispatch now.
+//!
+//! Single requests coalesce into executor batches of up to
+//! [`ServeOptions::batch_window`] requests (the window also flushes on an
+//! explicit batch, a `flush` command, and end of input), so a pipe of many
+//! one-line requests still gets multi-RHS batching. Responses are written
+//! in request order at each flush. The default window is 1 — every request
+//! answers immediately; coalescing is opt-in (`--batch-window N`) because
+//! a part-filled window waits for more input, which would deadlock an
+//! interactive client that blocks on the response before sending more.
+//!
+//! Bad input never kills the loop: a line that fails to parse or validate
+//! gets a machine-readable `{"id": ..., "error": {"kind": "parse" |
+//! "validate", "message": ...}}` response (kinds are
+//! [`crate::api::Error::kind`]) and serving continues. Only transport
+//! failures (the input or output stream dying) end the loop with an
+//! [`Error::Io`].
+//!
+//! Every [`ServeOptions::stats_every`] served requests — and always once
+//! at end of input — the loop emits `{"stats": {"served", "errors",
+//! "batches", "rps", "nnz_per_s", "shards", "workers", "wall_s"}}` so
+//! operators can watch throughput without parsing responses.
+
+use super::deploy::{DeployedPlan, Deployment};
+use super::error::{Error, Result};
+use crate::engine::{BatchExecutor, Servable};
+use crate::util::json::{num_arr, obj, Json};
+use std::io::{BufRead, Write};
+use std::time::Instant;
+
+/// Serve-loop configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// executor worker threads; 0 = the deployment's default
+    pub workers: usize,
+    /// max single requests coalesced into one executor dispatch
+    pub batch_window: usize,
+    /// emit a stats line every N served requests (0 = only at end of input)
+    pub stats_every: usize,
+    /// band-sharded multi-RHS serving (false = scalar per-request mode)
+    pub sharded: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            workers: 0,
+            batch_window: 1,
+            stats_every: 100,
+            sharded: true,
+        }
+    }
+}
+
+/// What a finished serve loop did.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeReport {
+    pub served: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub wall_seconds: f64,
+    pub rps: f64,
+    pub nnz_per_s: f64,
+}
+
+/// Run the serve loop over a deployment until `input` ends. Returns the
+/// aggregate report (also emitted as the final stats line on `out`).
+pub fn serve_loop<R: BufRead, W: Write>(
+    dep: &Deployment,
+    opts: &ServeOptions,
+    input: R,
+    out: &mut W,
+) -> Result<ServeReport> {
+    let exec = dep.executor(opts.workers);
+    let dim = dep.plan().dim();
+    let plan_nnz = dep.plan().nnz();
+    let shards = dep.plan().shard_spans(exec.workers()).len();
+    let window = opts.batch_window.max(1);
+
+    let mut pending_ids: Vec<Json> = Vec::new();
+    let mut pending_xs: Vec<Vec<f64>> = Vec::new();
+    let mut served = 0u64;
+    let mut errors = 0u64;
+    let mut batches = 0u64;
+    let mut next_stats = match opts.stats_every {
+        0 => u64::MAX,
+        n => n as u64,
+    };
+    let t0 = Instant::now();
+
+    let emit_stats = |out: &mut W, served: u64, errors: u64, batches: u64| -> Result<()> {
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = served as f64 / wall.max(1e-9);
+        let line = obj(vec![(
+            "stats",
+            obj(vec![
+                ("served", Json::Num(served as f64)),
+                ("errors", Json::Num(errors as f64)),
+                ("batches", Json::Num(batches as f64)),
+                ("rps", Json::Num(rps)),
+                ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("workers", Json::Num(exec.workers() as f64)),
+                ("wall_s", Json::Num(wall)),
+            ]),
+        )]);
+        writeln!(out, "{}", line.to_string())?;
+        out.flush()?;
+        Ok(())
+    };
+
+    for line in input.lines() {
+        let line = line.map_err(|e| Error::Io(format!("reading request stream: {e}")))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let doc = match Json::parse(trimmed) {
+            Ok(d) => d,
+            Err(e) => {
+                errors += 1;
+                write_error(out, Json::Null, "parse", &e.to_string())?;
+                continue;
+            }
+        };
+        let id = doc.get("id").clone();
+
+        if doc.get("flush").as_bool() == Some(true) {
+            flush_pending(
+                dep,
+                &exec,
+                opts.sharded,
+                &mut pending_ids,
+                &mut pending_xs,
+                &mut served,
+                &mut batches,
+                out,
+            )?;
+        } else if let Some(arr) = doc.get("xs").as_arr() {
+            // explicit batch: dispatch pending singles first so responses
+            // stay in request order, then run the batch as one dispatch
+            flush_pending(
+                dep,
+                &exec,
+                opts.sharded,
+                &mut pending_ids,
+                &mut pending_xs,
+                &mut served,
+                &mut batches,
+                out,
+            )?;
+            let mut xs = Vec::with_capacity(arr.len());
+            let mut bad = None;
+            for (i, xv) in arr.iter().enumerate() {
+                match parse_request_vec(xv, dim) {
+                    Ok(x) => xs.push(x),
+                    Err(msg) => {
+                        bad = Some(format!("xs[{i}]: {msg}"));
+                        break;
+                    }
+                }
+            }
+            if let Some(msg) = bad {
+                errors += 1;
+                write_error(out, id, "validate", &msg)?;
+                continue;
+            }
+            if xs.is_empty() {
+                errors += 1;
+                write_error(out, id, "validate", "xs is empty")?;
+                continue;
+            }
+            let n = xs.len() as u64;
+            let ys = execute_permuted(dep, &exec, xs, opts.sharded);
+            batches += 1;
+            served += n;
+            let ys_json = Json::Arr(ys.into_iter().map(num_arr).collect());
+            write_response(out, obj(vec![("id", id), ("ys", ys_json)]))?;
+            out.flush()?;
+        } else {
+            match parse_request_vec(doc.get("x"), dim) {
+                Ok(x) => {
+                    pending_ids.push(id);
+                    pending_xs.push(x);
+                    if pending_xs.len() >= window {
+                        flush_pending(
+                            dep,
+                            &exec,
+                            opts.sharded,
+                            &mut pending_ids,
+                            &mut pending_xs,
+                            &mut served,
+                            &mut batches,
+                            out,
+                        )?;
+                    }
+                }
+                Err(msg) => {
+                    errors += 1;
+                    write_error(out, id, "validate", &msg)?;
+                }
+            }
+        }
+
+        if served >= next_stats {
+            emit_stats(out, served, errors, batches)?;
+            next_stats = served + opts.stats_every.max(1) as u64;
+        }
+    }
+
+    flush_pending(
+        dep,
+        &exec,
+        opts.sharded,
+        &mut pending_ids,
+        &mut pending_xs,
+        &mut served,
+        &mut batches,
+        out,
+    )?;
+    emit_stats(out, served, errors, batches)?;
+
+    let wall = t0.elapsed().as_secs_f64();
+    let rps = served as f64 / wall.max(1e-9);
+    Ok(ServeReport {
+        served,
+        errors,
+        batches,
+        wall_seconds: wall,
+        rps,
+        nnz_per_s: rps * plan_nnz as f64,
+    })
+}
+
+/// Parse one request vector; message strings become `validate` responses.
+fn parse_request_vec(v: &Json, dim: usize) -> std::result::Result<Vec<f64>, String> {
+    let arr = v.as_arr().ok_or("request carries no \"x\" (or \"xs\") array")?;
+    if arr.len() != dim {
+        return Err(format!(
+            "request has {} elements, deployment expects {dim}",
+            arr.len()
+        ));
+    }
+    let mut x = Vec::with_capacity(dim);
+    for (i, e) in arr.iter().enumerate() {
+        let f = e.as_f64().ok_or_else(|| format!("x[{i}] is not a number"))?;
+        if !f.is_finite() {
+            return Err(format!("x[{i}] is not finite"));
+        }
+        x.push(f);
+    }
+    Ok(x)
+}
+
+/// Permute requests into served order, execute one batch, permute the
+/// answers back to original node ids, and recycle the executor buffers.
+fn execute_permuted(
+    dep: &Deployment,
+    exec: &BatchExecutor<DeployedPlan>,
+    xs: Vec<Vec<f64>>,
+    sharded: bool,
+) -> Vec<Vec<f64>> {
+    let permuted: Vec<Vec<f64>> = xs.iter().map(|x| dep.permute_in(x)).collect();
+    let ys = if sharded {
+        exec.execute_batch_sharded(permuted)
+    } else {
+        exec.execute_batch(permuted)
+    };
+    let outs: Vec<Vec<f64>> = ys.iter().map(|y| dep.permute_out(y)).collect();
+    exec.recycle(ys);
+    outs
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flush_pending<W: Write>(
+    dep: &Deployment,
+    exec: &BatchExecutor<DeployedPlan>,
+    sharded: bool,
+    ids: &mut Vec<Json>,
+    xs: &mut Vec<Vec<f64>>,
+    served: &mut u64,
+    batches: &mut u64,
+    out: &mut W,
+) -> Result<()> {
+    if xs.is_empty() {
+        return Ok(());
+    }
+    let reqs = std::mem::take(xs);
+    let ids_now = std::mem::take(ids);
+    let ys = execute_permuted(dep, exec, reqs, sharded);
+    *batches += 1;
+    *served += ys.len() as u64;
+    for (id, y) in ids_now.into_iter().zip(ys) {
+        write_response(out, obj(vec![("id", id), ("y", num_arr(y))]))?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn write_response<W: Write>(out: &mut W, doc: Json) -> Result<()> {
+    writeln!(out, "{}", doc.to_string())?;
+    Ok(())
+}
+
+fn write_error<W: Write>(out: &mut W, id: Json, kind: &str, message: &str) -> Result<()> {
+    let doc = obj(vec![
+        ("id", id),
+        (
+            "error",
+            obj(vec![
+                ("kind", Json::Str(kind.into())),
+                ("message", Json::Str(message.into())),
+            ]),
+        ),
+    ]);
+    writeln!(out, "{}", doc.to_string())?;
+    out.flush()?;
+    Ok(())
+}

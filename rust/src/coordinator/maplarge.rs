@@ -9,9 +9,9 @@ use crate::agent::params::{self, Params};
 use crate::agent::{TrainOptions, Trainer};
 use crate::baselines;
 use crate::crossbar::cost::CostModel;
-use crate::engine::{self, AssignPolicy, Fleet, TraceKind};
+use crate::engine::{self, AssignPolicy, BatchExecutor, Fleet, TraceKind};
 use crate::graph::{synth, GridSummary};
-use crate::mapper::{self, CompositeExecutor, MapperConfig};
+use crate::mapper::{self, MapperConfig};
 use crate::reorder::{reorder, Reordering};
 use crate::runtime::Manifest;
 use crate::scheme::{CompositeEval, FillRule, RewardWeights};
@@ -272,9 +272,11 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
         cplan.spilled_nnz()
     );
 
-    // serve a synthetic trace through the composite executor, in both
-    // modes: scalar per-request (the seed serving mode, the in-run
-    // baseline) and band-sharded multi-RHS (the optimized mode)
+    // serve a synthetic trace through the one generic executor (the same
+    // `BatchExecutor` that serves flat plans — composites go through the
+    // `Servable` trait), in both modes: scalar per-request (the seed
+    // serving mode, the in-run baseline) and band-sharded multi-RHS (the
+    // optimized mode)
     let trace = engine::synth_trace(
         TraceKind::Uniform,
         g.dim,
@@ -285,8 +287,24 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
     );
     let (kernel_dense, kernel_sparse) = cplan.plan.kernel_counts();
     let cplan = Arc::new(cplan);
-    let exec = CompositeExecutor::new(cplan.clone(), opts.workers.max(1));
-    exec.recycle(exec.execute_batch(trace[0].clone())); // warmup the buffer pool
+    let exec = BatchExecutor::new(cplan.clone(), opts.workers.max(1));
+    // ledger tripwire: before any throughput number is recorded, both
+    // executor modes must reproduce the scalar composite MVM bit for bit
+    // on the first trace batch — the generic-executor rewiring must not
+    // move a single ulp
+    let want: Vec<Vec<f64>> = trace[0].iter().map(|x| cplan.mvm(x)).collect();
+    let probe = exec.execute_batch(trace[0].clone());
+    ensure!(
+        probe == want,
+        "generic executor (scalar mode) diverged from the composite MVM"
+    );
+    exec.recycle(probe);
+    let probe = exec.execute_batch_sharded(trace[0].clone());
+    ensure!(
+        probe == want,
+        "generic executor (sharded mode) diverged from the composite MVM"
+    );
+    exec.recycle(probe); // doubles as buffer-pool warmup
     let t0 = Instant::now();
     for batch_reqs in &trace {
         let ys = exec.execute_batch(batch_reqs.clone());

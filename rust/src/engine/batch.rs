@@ -14,9 +14,9 @@
 //!   in band order. Parallelism is across requests only.
 //! - [`BatchExecutor::execute_batch_sharded`] — the optimized mode: the
 //!   plan's disjoint row bands are partitioned into nnz-balanced spans
-//!   ([`ServablePlan::shard_spans`]), each span goes to one worker, and
+//!   ([`Servable::shard_spans`]), each span goes to one worker, and
 //!   that worker serves **every** request's rows for its span with the
-//!   multi-RHS kernel ([`ServablePlan::mvm_span_batch`]) — one arena
+//!   multi-RHS kernel ([`Servable::mvm_span_batch`]) — one arena
 //!   traversal per span per batch instead of per request. Each output row
 //!   is written by exactly one worker in a fixed band order, so results
 //!   carry no scheduling nondeterminism.
@@ -30,14 +30,77 @@ use super::plan::ExecPlan;
 use crate::util::pool::WorkerPool;
 use std::sync::{Arc, Mutex};
 
-/// Anything the batch executor can serve: a compiled plan with a known
-/// input dimension, an in-place scalar MVM, and a span-sharded multi-RHS
-/// kernel. [`ExecPlan`] is the engine's own shape; the mapper's
-/// `CompositePlan` (merged window plans + digital spill) implements it
-/// too, so both serve through one executor.
-pub trait ServablePlan: Send + Sync + 'static {
+/// Program-level serving statistics every [`Servable`] reports — the
+/// numbers deployment tooling (bundles, the `serve` loop, bench ledgers)
+/// prints without knowing which plan shape it is holding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeStats {
+    /// matrix dimension D (request/response length)
+    pub dim: usize,
+    /// placed crossbar tiles in the schedule
+    pub tiles: usize,
+    /// deduplicated program buffers
+    pub programs: usize,
+    /// disjoint row bands of the schedule
+    pub bands: usize,
+    /// programs on the dense row-dot kernel
+    pub kernel_dense: usize,
+    /// programs on the compiled CSR-within-tile kernel
+    pub kernel_sparse: usize,
+    /// non-zeros served by crossbar tiles
+    pub mapped_nnz: u64,
+    /// non-zeros served from digital sparse storage (0 for flat plans)
+    pub spilled_nnz: u64,
+    /// programmed crossbar cells (clipped extents)
+    pub area_cells: u64,
+}
+
+impl ServeStats {
+    /// Total non-zeros one MVM touches (mapped + digital spill).
+    pub fn total_nnz(&self) -> u64 {
+        self.mapped_nnz + self.spilled_nnz
+    }
+}
+
+/// The unified serving API: anything a [`BatchExecutor`] (or the
+/// `api::Deployment` facade above it) can serve. One trait covers both
+/// plan shapes the repo produces — the engine's flat [`ExecPlan`] and the
+/// mapper's `CompositePlan` (merged window plans + digital spill) — so
+/// there is exactly one executor and one serving code path.
+///
+/// Contract: `mvm_batch_into`, `mvm_span_batch`, and every executor mode
+/// built on them must be **bit-identical** to the scalar [`Self::mvm_into`]
+/// loop for any worker count and batch size.
+pub trait Servable: Send + Sync + 'static {
+    /// Matrix dimension D: request and response vector length.
     fn dim(&self) -> usize;
+
+    /// Scalar MVM into a reusable output buffer (cleared + resized to
+    /// `dim()`): the reference serving path every other mode must match
+    /// bit for bit.
     fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>);
+
+    /// Allocating convenience wrapper around [`Self::mvm_into`].
+    fn mvm(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.mvm_into(x, &mut y);
+        y
+    }
+
+    /// Multi-RHS convenience over the full row range: `ys` is cleared and
+    /// resized to match `xs`; each `ys[b]` is bit-identical to
+    /// `mvm_into(&xs[b], ..)`.
+    fn mvm_batch_into(&self, xs: &[Vec<f64>], ys: &mut Vec<Vec<f64>>) {
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x.len(), self.dim(), "request {i} input length mismatch");
+        }
+        ys.resize_with(xs.len(), Vec::new);
+        for y in ys.iter_mut() {
+            y.clear();
+            y.resize(self.dim(), 0.0);
+        }
+        self.mvm_span_batch((0, self.dim()), xs, ys);
+    }
 
     /// Disjoint, ordered row spans covering [0, dim()) for intra-request
     /// sharding; the executor hands each span to one worker. Spans must
@@ -53,9 +116,23 @@ pub trait ServablePlan: Send + Sync + 'static {
     /// `xs[b]`. Must be bit-identical to [`Self::mvm_into`] restricted to
     /// those rows.
     fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]);
+
+    /// Total non-zeros one MVM touches (mapped + digital spill).
+    fn nnz(&self) -> u64;
+
+    /// Programmed crossbar cells (clipped extents).
+    fn area_cells(&self) -> u64;
+
+    /// Program-level serving statistics (tiles, programs, bands, kernel
+    /// mix, mapped/spilled nnz, area).
+    fn stats(&self) -> ServeStats;
 }
 
-impl ServablePlan for ExecPlan {
+/// Deprecated alias for [`Servable`] — the trait's pre-facade name. New
+/// code (and the `api` layer) should use `Servable`.
+pub use self::Servable as ServablePlan;
+
+impl Servable for ExecPlan {
     fn dim(&self) -> usize {
         self.dim
     }
@@ -71,16 +148,39 @@ impl ServablePlan for ExecPlan {
     fn mvm_span_batch(&self, span: (usize, usize), xs: &[Vec<f64>], outs: &mut [Vec<f64>]) {
         ExecPlan::mvm_span_batch(self, span, xs, outs)
     }
+
+    fn nnz(&self) -> u64 {
+        self.mapped_nnz()
+    }
+
+    fn area_cells(&self) -> u64 {
+        self.cells()
+    }
+
+    fn stats(&self) -> ServeStats {
+        let (kernel_dense, kernel_sparse) = self.kernel_counts();
+        ServeStats {
+            dim: self.dim,
+            tiles: self.tiles.len(),
+            programs: self.num_programs(),
+            bands: self.bands().len(),
+            kernel_dense,
+            kernel_sparse,
+            mapped_nnz: self.mapped_nnz(),
+            spilled_nnz: 0,
+            area_cells: self.cells(),
+        }
+    }
 }
 
 /// Thread-pool executor bound to one plan.
-pub struct BatchExecutor<P: ServablePlan = ExecPlan> {
+pub struct BatchExecutor<P: Servable = ExecPlan> {
     plan: Arc<P>,
     pool: WorkerPool,
     buffers: Arc<Mutex<Vec<Vec<f64>>>>,
 }
 
-impl<P: ServablePlan> BatchExecutor<P> {
+impl<P: Servable> BatchExecutor<P> {
     /// Spawn `workers` worker threads serving requests against `plan`.
     pub fn new(plan: Arc<P>, workers: usize) -> BatchExecutor<P> {
         BatchExecutor {

@@ -26,13 +26,17 @@
 //!    assignment (reading the arena's cached per-program nnz — no buffer
 //!    rescans), with per-bank energy/latency accounting built on
 //!    [`crate::crossbar::cost::CostModel`].
-//! 3. **[`batch`]** — serve request traffic: a std-thread worker pool
-//!    ([`BatchExecutor`]) with two modes, both bit-identical to the
-//!    [`crate::crossbar::CrossbarArray::mvm`] oracle for any worker count
-//!    and batch size — scalar per-request fan-out (the seed mode), and
-//!    the optimized mode that shards nnz-balanced row-band spans across
-//!    workers *within* a request batch, each span serving every request
-//!    through the multi-RHS kernel.
+//! 3. **[`batch`]** — serve request traffic: the one generic std-thread
+//!    worker pool ([`BatchExecutor`]) over the unified [`Servable`] trait
+//!    (implemented by [`ExecPlan`] and the mapper's `CompositePlan`
+//!    alike, and reporting [`ServeStats`]), with two modes, both
+//!    bit-identical to the [`crate::crossbar::CrossbarArray::mvm`] oracle
+//!    for any worker count and batch size — scalar per-request fan-out
+//!    (the seed mode), and the optimized mode that shards nnz-balanced
+//!    row-band spans across workers *within* a request batch, each span
+//!    serving every request through the multi-RHS kernel. The
+//!    `crate::api` facade wraps this stage into deployments: build once,
+//!    save a bundle, reload, serve (`deploy` / `serve` subcommands).
 //!
 //! The `serve-bench` CLI subcommand drives stages 1–3 against synthetic
 //! request traces (this module's [`synth_trace`]), reports the
@@ -45,7 +49,7 @@ pub mod batch;
 pub mod fleet;
 pub mod plan;
 
-pub use batch::{BatchExecutor, ServablePlan};
+pub use batch::{BatchExecutor, Servable, ServablePlan, ServeStats};
 pub use fleet::{AssignPolicy, BankLoad, Fleet};
 pub use plan::{
     compile, compile_rects, merge_plans, Band, ExecPlan, KernelKind, ProgramMeta, TileSpec,

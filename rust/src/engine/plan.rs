@@ -525,17 +525,10 @@ impl ExecPlan {
 
     /// Multi-RHS convenience over the full row range: `ys` is cleared and
     /// resized to match `xs`; each `ys[b]` is bit-identical to
-    /// `mvm_into(&xs[b], ..)`.
+    /// `mvm_into(&xs[b], ..)`. Delegates to the one shared implementation,
+    /// the [`crate::engine::Servable`] trait default.
     pub fn mvm_batch_into(&self, xs: &[Vec<f64>], ys: &mut Vec<Vec<f64>>) {
-        for (i, x) in xs.iter().enumerate() {
-            assert_eq!(x.len(), self.dim, "request {i} input length mismatch");
-        }
-        ys.resize_with(xs.len(), Vec::new);
-        for y in ys.iter_mut() {
-            y.clear();
-            y.resize(self.dim, 0.0);
-        }
-        self.mvm_span_batch((0, self.dim), xs, ys);
+        crate::engine::Servable::mvm_batch_into(self, xs, ys)
     }
 
     /// Partition the row bands into at most `shards` contiguous,

@@ -239,6 +239,81 @@ impl Csr {
         }
         n
     }
+
+    /// Serialize to a JSON object (`rows`, `cols`, `indptr`, `indices`,
+    /// `data`) for embedding in deployment bundles. Values round-trip
+    /// exactly: the writer emits shortest-round-trip decimal for every
+    /// finite f64.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{num_arr, obj, Json};
+        obj(vec![
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("indptr", num_arr(self.indptr.iter().map(|&v| v as f64))),
+            ("indices", num_arr(self.indices.iter().map(|&v| v as f64))),
+            ("data", num_arr(self.data.iter().copied())),
+        ])
+    }
+
+    /// Parse and structurally validate a [`Self::to_json`] document:
+    /// indptr must be a monotone length-`rows + 1` prefix ending at the
+    /// entry count, and every column index must be in range and strictly
+    /// increasing within its row.
+    pub fn from_json(doc: &crate::util::json::Json) -> Result<Csr, String> {
+        let rows = doc.get("rows").as_usize().ok_or("csr missing rows")?;
+        let cols = doc.get("cols").as_usize().ok_or("csr missing cols")?;
+        let read_usizes = |key: &str| -> Result<Vec<usize>, String> {
+            let arr = doc.get(key).as_arr().ok_or_else(|| format!("csr missing {key}"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                out.push(v.as_usize().ok_or_else(|| format!("csr {key}[{i}] not an index"))?);
+            }
+            Ok(out)
+        };
+        let indptr = read_usizes("indptr")?;
+        let indices = read_usizes("indices")?;
+        let data_arr = doc.get("data").as_arr().ok_or("csr missing data")?;
+        let mut data = Vec::with_capacity(data_arr.len());
+        for (i, v) in data_arr.iter().enumerate() {
+            data.push(v.as_f64().ok_or_else(|| format!("csr data[{i}] not a number"))?);
+        }
+        if indptr.len() != rows + 1 {
+            return Err(format!("csr indptr has {} entries, expected {}", indptr.len(), rows + 1));
+        }
+        if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
+            return Err("csr indptr does not span the entry arrays".into());
+        }
+        if indices.len() != data.len() {
+            return Err(format!(
+                "csr has {} indices but {} values",
+                indices.len(),
+                data.len()
+            ));
+        }
+        for w in indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("csr indptr is not monotone".into());
+            }
+        }
+        for r in 0..rows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for (i, &c) in row.iter().enumerate() {
+                if c >= cols {
+                    return Err(format!("csr row {r} column {c} out of range"));
+                }
+                if i > 0 && row[i - 1] >= c {
+                    return Err(format!("csr row {r} columns not strictly increasing"));
+                }
+            }
+        }
+        Ok(Csr {
+            rows,
+            cols,
+            indptr,
+            indices,
+            data,
+        })
+    }
 }
 
 /// Permutation helpers (Eqs. 4 and 6: x' = P x, y = Pᵀ y').

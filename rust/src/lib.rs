@@ -74,8 +74,37 @@
 //! plans into one fleet-servable schedule. The `map-large` CLI subcommand
 //! drives a 100k-node R-MAT graph end-to-end and emits
 //! `BENCH_mapper.json`.
+//!
+//! ## API tour: build → save → load → serve
+//!
+//! The [`api`] facade is the front door over all of the above. Flat plans
+//! and composites implement one [`engine::Servable`] trait, one generic
+//! [`engine::BatchExecutor`] serves both, and a deployment moves through a
+//! single self-contained bundle file:
+//!
+//! ```no_run
+//! use autogmap::api::{Deployment, DeploymentBuilder, Source, Strategy};
+//! # fn main() -> autogmap::api::Result<()> {
+//! let dep = DeploymentBuilder::new(
+//!     Source::Rmat { nodes: 10_000, degree: 8, seed: 42 },
+//!     Strategy::Hierarchical { controller: "qh882_dyn4".into(), overlap: 4 },
+//! ).build()?;                                               // map + compile once
+//! dep.save(std::path::Path::new("bundle.json"))?;           // pay the cost once
+//! let served = Deployment::load(std::path::Path::new("bundle.json"))?; // pure load
+//! let y = served.mvm(&vec![1.0; 10_000])?;                  // exact, original ids
+//! # let _ = y; Ok(()) }
+//! ```
+//!
+//! The `deploy` CLI subcommand is `build()` + `save()`; the long-running
+//! `serve` subcommand wraps [`api::serve_loop`] around a loaded bundle —
+//! NDJSON requests on stdin, responses plus periodic throughput stats on
+//! stdout. Constructing `BatchExecutor`s by hand (or the removed
+//! `CompositeExecutor` alias) is the deprecated path: new code should go
+//! through [`api::Deployment::executor`], which keeps the permutation,
+//! fleet, and provenance attached.
 
 pub mod agent;
+pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod crossbar;

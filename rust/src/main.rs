@@ -15,6 +15,11 @@
 //!   map-large  — hierarchical mapper pipeline: R-MAT graph → RCM →
 //!                windowed controller inference (scheme cache) → composite
 //!                plan → fleet-sharded serving (BENCH_mapper.json)
+//!   deploy     — build a deployment through the api facade (source +
+//!                strategy + kernel/fleet knobs) and save it as one
+//!                self-contained bundle JSON
+//!   serve      — load a bundle and serve NDJSON MVM requests from stdin
+//!                (responses + periodic stats on stdout) until EOF
 //!
 //! Every training command takes `--backend {native,pjrt,auto}`: `native`
 //! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
@@ -64,6 +69,15 @@ USAGE: autogmap <subcommand> [options]
              [--requests N] [--batch N] [--seed N]
              [--epochs N | --checkpoint ck.json]
              [--bench-json BENCH_mapper.json]
+  deploy     [--dataset qm7|qh882|qh1484|batch|mtx|rmat --mtx-path p
+             --nodes N --degree N --grid N --seed N]
+             [--strategy hier|direct|fixed] [--controller NAME]
+             [--block N] [--overlap N] [--rounds N] [--checkpoint ck.json]
+             [--kernel auto|dense|sparse] [--banks N] [--policy rr|balanced]
+             [--workers N] [--reward-a F] [--reorder identity|cm|rcm]
+             [--out bundle.json]
+  serve      --bundle bundle.json [--workers N] [--batch-window N]
+             [--stats-every N] [--exec sharded|scalar]
 
   global: --artifacts DIR (default: artifacts)
 
@@ -96,6 +110,26 @@ USAGE: autogmap <subcommand> [options]
         --bench-json BENCH_train.json
   times native epochs/sec and rollout episodes/sec at 1, 2, and 8 workers
   so the training perf trajectory is tracked like the engine's.
+
+  deploy + serve example (build once, serve forever):
+    autogmap deploy --dataset rmat --nodes 10000 --strategy hier \\
+        --controller qh882_dyn4 --out bundle.json
+    autogmap serve --bundle bundle.json --workers 8 --batch-window 32
+  `deploy` runs graph -> reorder -> map -> compile -> fleet through the
+  api facade and writes one self-contained bundle (the v2 plan arena, the
+  composite's digital spill, the reordering permutation, fleet + worker
+  config, provenance). `serve` reloads it in any process — no graph,
+  controller, or training dependency — and serves NDJSON requests from
+  stdin: {\"id\": 1, \"x\": [..dim floats..]} per line (or {\"id\": ..,
+  \"xs\": [[..], ..]} for an explicit batch), answers {\"id\": 1,
+  \"y\": [..]} in original node ids. Each request answers immediately by
+  default; pass --batch-window N to coalesce up to N single requests per
+  multi-RHS dispatch (a part-filled window waits for more input, so only
+  use it when piping a stream). Bad lines get {\"error\":
+  {\"kind\": \"parse\"|\"validate\", ..}} responses and the loop keeps
+  serving; every --stats-every requests (and at EOF) it prints
+  {\"stats\": {\"rps\", \"nnz_per_s\", \"shards\", ..}}. A reloaded
+  bundle serves bit-identically to the deployment that wrote it.
 
   map-large example (fresh checkout, no artifacts):
     autogmap map-large --nodes 100000 --workers 8
@@ -130,7 +164,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "checkpoint", "table", "figure", "artifacts", "coarse", "reorder", "log-every",
         "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
         "requests", "trace-seed", "bench-json", "backend", "nodes", "degree", "overlap",
-        "rounds", "kernel", "exec", "assert-speedup",
+        "rounds", "kernel", "exec", "assert-speedup", "strategy", "block", "bundle",
+        "batch-window", "stats-every",
     ];
     let flag_opts = ["verbose", "help"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -152,6 +187,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "train-bench" => cmd_train_bench(&args),
         "map-large" => cmd_map_large(&args),
+        "deploy" => cmd_deploy(&args),
+        "serve" => cmd_serve(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -484,6 +521,164 @@ fn cmd_map_large(args: &Args) -> anyhow::Result<()> {
         bench_json: PathBuf::from(args.get_or("bench-json", "BENCH_mapper.json")),
     };
     autogmap::coordinator::run_map_large(&opts)
+}
+
+/// `deploy`: build a deployment through the [`autogmap::api`] facade and
+/// save it as one self-contained bundle — `build()` + `save()` behind
+/// flags.
+fn cmd_deploy(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use autogmap::api::{DeploymentBuilder, KernelChoice, Source, Strategy};
+    use autogmap::engine::AssignPolicy;
+    use std::time::Instant;
+
+    let ds_kind = args.get_or("dataset", "rmat").to_string();
+    let seed = args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(42);
+    let source = match ds_kind.as_str() {
+        "rmat" => Source::Rmat {
+            nodes: args
+                .get_usize("nodes")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(10_000)
+                .max(64),
+            degree: args
+                .get_usize("degree")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(8)
+                .max(1),
+            seed,
+        },
+        "mtx" => Source::MtxFile(PathBuf::from(
+            args.get("mtx-path").context("--dataset mtx needs --mtx-path")?,
+        )),
+        _ => {
+            let ds = dataset_from_args(args)?;
+            Source::Matrix {
+                label: ds.label(),
+                matrix: autogmap::coordinator::dataset::load_matrix(&ds)?,
+            }
+        }
+    };
+    let grid = args
+        .get_usize("grid")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(if ds_kind == "qm7" { 2 } else { 32 })
+        .max(1);
+    let controller = args.get_or("controller", "qh882_dyn4").to_string();
+    let strategy = match args.get_or("strategy", "hier") {
+        "hier" | "hierarchical" => Strategy::Hierarchical {
+            controller,
+            overlap: args.get_usize("overlap").map_err(anyhow::Error::msg)?.unwrap_or(4),
+        },
+        "direct" => Strategy::Direct { controller },
+        "fixed" => Strategy::FixedBlock {
+            block: args.get_usize("block").map_err(anyhow::Error::msg)?.unwrap_or(1).max(1),
+        },
+        other => anyhow::bail!("unknown strategy {other:?} (hier|direct|fixed)"),
+    };
+    let mut builder = DeploymentBuilder::new(source, strategy)
+        .grid(grid)
+        .seed(seed)
+        .rounds(args.get_usize("rounds").map_err(anyhow::Error::msg)?.unwrap_or(2))
+        .kernel(KernelChoice::parse(args.get_or("kernel", "auto"))?)
+        .banks(args.get_usize("banks").map_err(anyhow::Error::msg)?.unwrap_or(8).max(1))
+        .policy(AssignPolicy::parse(args.get_or("policy", "balanced"))?)
+        .workers(args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(8).max(1))
+        .reward_a(args.get_f64("reward-a").map_err(anyhow::Error::msg)?.unwrap_or(0.8))
+        .reordering(Reordering::parse(args.get_or("reorder", "rcm")).map_err(anyhow::Error::msg)?);
+    if let Some(ck) = args.get("checkpoint") {
+        builder = builder.checkpoint(PathBuf::from(ck));
+    }
+
+    let t0 = Instant::now();
+    let dep = builder.build()?;
+    let s = dep.stats();
+    println!(
+        "deployed {} via {} in {:.2}s",
+        dep.provenance.source,
+        dep.provenance.strategy,
+        t0.elapsed().as_secs_f64()
+    );
+    println!(
+        "  plan: {} ({} tiles, {} programs, {} bands, kernels {} dense / {} sparse)",
+        dep.plan().kind(),
+        s.tiles,
+        s.programs,
+        s.bands,
+        s.kernel_dense,
+        s.kernel_sparse
+    );
+    println!(
+        "  serving: dim {}, {} mapped + {} spilled nnz, {} programmed cells",
+        s.dim, s.mapped_nnz, s.spilled_nnz, s.area_cells
+    );
+    println!(
+        "  fleet: {} banks ({:?}), imbalance {:.3}; default workers {}",
+        dep.fleet.banks,
+        dep.fleet.policy,
+        dep.fleet.imbalance(),
+        dep.workers
+    );
+    let out = PathBuf::from(args.get_or("out", "bundle.json"));
+    dep.save(&out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("wrote bundle {} ({} KiB)", out.display(), bytes / 1024);
+    println!("serve it with: autogmap serve --bundle {}", out.display());
+    Ok(())
+}
+
+/// `serve`: load a bundle and run the long-running NDJSON loop
+/// ([`autogmap::api::serve_loop`]) over stdin/stdout. The banner and the
+/// final summary go to stderr so stdout stays pure NDJSON.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use autogmap::api::{serve_loop, Deployment, ServeOptions};
+    use std::io::Write;
+
+    let bundle = args.get("bundle").context("serve needs --bundle <bundle.json>")?;
+    let dep = Deployment::load(Path::new(bundle))?;
+    let sharded = match args.get_or("exec", "sharded") {
+        "sharded" => true,
+        "scalar" => false,
+        other => anyhow::bail!("unknown exec mode {other:?} (scalar|sharded)"),
+    };
+    let opts = ServeOptions {
+        workers: args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(0),
+        batch_window: args
+            .get_usize("batch-window")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(1)
+            .max(1),
+        stats_every: args.get_usize("stats-every").map_err(anyhow::Error::msg)?.unwrap_or(100),
+        sharded,
+    };
+    let s = dep.stats();
+    eprintln!(
+        "serving {} ({}): dim {}, {} tiles / {} programs, {} mapped + {} spilled nnz — \
+         NDJSON requests on stdin",
+        dep.provenance.source,
+        dep.provenance.strategy,
+        s.dim,
+        s.tiles,
+        s.programs,
+        s.mapped_nnz,
+        s.spilled_nnz
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    let report = serve_loop(&dep, &opts, stdin.lock(), &mut out)?;
+    out.flush()?;
+    eprintln!(
+        "served {} requests ({} batches, {} errors) in {:.2}s — {:.0} req/s, {:.3e} nnz/s",
+        report.served,
+        report.batches,
+        report.errors,
+        report.wall_seconds,
+        report.rps,
+        report.nnz_per_s
+    );
+    Ok(())
 }
 
 fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {

@@ -8,20 +8,24 @@
 //! the spill CSR — never both, never neither — so a composite MVM equals
 //! the dense oracle up to floating-point summation order, and *exactly*
 //! (bit-identical) whenever products round to nothing, e.g. adjacency
-//! weights with integer inputs. The [`CompositeExecutor`] serves either
-//! per-request (one worker per request, plan band order then spill
-//! row-order) or band-sharded (disjoint row spans across workers within a
-//! request, each span running mapped tiles then its spill rows through the
-//! multi-RHS kernel); each output row is produced by one worker in one
-//! fixed order, so both modes are bit-identical for any worker count and
-//! batch size.
+//! weights with integer inputs. [`CompositePlan`] implements the unified
+//! [`crate::engine::Servable`] trait, so the one generic
+//! [`crate::engine::BatchExecutor`] serves it either per-request (one
+//! worker per request, plan band order then spill row-order) or
+//! band-sharded (disjoint row spans across workers within a request, each
+//! span running mapped tiles then its spill rows through the multi-RHS
+//! kernel); each output row is produced by one worker in one fixed order,
+//! so both modes are bit-identical for any worker count and batch size.
+//! (The pre-facade `CompositeExecutor` alias is gone — construct
+//! `BatchExecutor::new(plan, workers)` directly, or better, go through
+//! `crate::api::Deployment`.)
 //!
 //! Spill extraction builds per-grid-row *interval lists* of covered
 //! columns (sorted, merged) instead of a dense n×n covered bitmap, so its
 //! memory scales with the composite's rect count — not with the square of
 //! a 100k-node graph's grid.
 
-use crate::engine::batch::ServablePlan;
+use crate::engine::batch::{Servable, ServeStats};
 use crate::engine::plan::{compile_rects, merge_plans, ExecPlan};
 use crate::graph::{Csr, GridSummary};
 use crate::scheme::CompositeScheme;
@@ -158,7 +162,7 @@ impl CompositePlan {
     }
 }
 
-impl ServablePlan for CompositePlan {
+impl Servable for CompositePlan {
     fn dim(&self) -> usize {
         self.plan.dim
     }
@@ -192,17 +196,35 @@ impl ServablePlan for CompositePlan {
             self.spill_rows_into(span, x, out);
         }
     }
-}
 
-/// Request-parallel executor for a composite plan: the shared
-/// [`crate::engine::BatchExecutor`] machinery (pooled output buffers,
-/// request-order results, scalar and band-sharded multi-RHS serving modes,
-/// bit-identical for any worker count) serving a [`CompositePlan`].
-pub type CompositeExecutor = crate::engine::BatchExecutor<CompositePlan>;
+    fn nnz(&self) -> u64 {
+        self.mapped_nnz() + self.spilled_nnz()
+    }
+
+    fn area_cells(&self) -> u64 {
+        self.plan.cells()
+    }
+
+    fn stats(&self) -> ServeStats {
+        let (kernel_dense, kernel_sparse) = self.plan.kernel_counts();
+        ServeStats {
+            dim: self.plan.dim,
+            tiles: self.plan.tiles.len(),
+            programs: self.plan.num_programs(),
+            bands: self.plan.bands().len(),
+            kernel_dense,
+            kernel_sparse,
+            mapped_nnz: self.mapped_nnz(),
+            spilled_nnz: self.spilled_nnz(),
+            area_cells: self.plan.cells(),
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::BatchExecutor;
     use crate::graph::synth;
     use crate::scheme::{parse_actions, FillRule, Scheme, WindowSlice};
     use crate::util::propcheck::check;
@@ -258,7 +280,7 @@ mod tests {
             .collect();
         let want: Vec<Vec<f64>> = xs.iter().map(|x| cp.mvm(x)).collect();
         for workers in [1usize, 2, 8] {
-            let exec = CompositeExecutor::new(cp.clone(), workers);
+            let exec = BatchExecutor::new(cp.clone(), workers);
             let ys = exec.execute_batch(xs.clone());
             assert_eq!(ys, want, "workers {workers}");
             exec.recycle(ys);
@@ -321,7 +343,7 @@ mod tests {
         let cp = compile_composite(&m, &g, &comp).unwrap();
         assert_eq!(cp.plan.tiles.len(), 0, "anti-diagonal nnz must all elide");
         assert_eq!(cp.spilled_nnz(), m.nnz() as u64);
-        let spans = ServablePlan::shard_spans(&cp, 4);
+        let spans = Servable::shard_spans(&cp, 4);
         assert_eq!(spans.len(), 4, "spill-only composites still split rows");
         assert_eq!(spans[0].0, 0);
         assert_eq!(spans.last().unwrap().1, dim);
@@ -334,7 +356,7 @@ mod tests {
             .collect();
         let want: Vec<Vec<f64>> = xs.iter().map(|x| m.spmv(x)).collect();
         for workers in [1usize, 4] {
-            let exec = CompositeExecutor::new(cp.clone(), workers);
+            let exec = BatchExecutor::new(cp.clone(), workers);
             assert_eq!(exec.execute_batch(xs.clone()), want);
             assert_eq!(exec.execute_batch_sharded(xs.clone()), want);
         }
@@ -424,7 +446,7 @@ mod tests {
             // both executor modes at 1/2/8 workers
             let cp = Arc::new(cp);
             for &workers in &[1usize, 2, 8] {
-                let exec = CompositeExecutor::new(cp.clone(), workers);
+                let exec = BatchExecutor::new(cp.clone(), workers);
                 if exec.execute_batch(xs.clone()) != want {
                     return Err(format!("scalar mode diverged at {workers} workers"));
                 }

@@ -26,8 +26,10 @@
 //!    [`crate::engine::ExecPlan`], merge them
 //!    ([`crate::engine::merge_plans`]) into one schedule a
 //!    [`crate::engine::Fleet`] shards across banks, and serve exact
-//!    y = Ax (mapped tiles + spill) through the request-parallel
-//!    [`exec::CompositeExecutor`].
+//!    y = Ax (mapped tiles + spill): [`CompositePlan`] implements
+//!    [`crate::engine::Servable`], so the generic
+//!    [`crate::engine::BatchExecutor`] — and the `crate::api::Deployment`
+//!    facade above it — serve composites and flat plans identically.
 //!
 //! The `map-large` CLI subcommand drives the whole pipeline on a
 //! deterministic R-MAT graph ([`crate::graph::synth::rmat_like`]) and
@@ -44,7 +46,7 @@ pub mod exec;
 pub mod infer;
 pub mod window;
 
-pub use exec::{compile_composite, CompositeExecutor, CompositePlan};
+pub use exec::{compile_composite, CompositePlan};
 pub use infer::InferContext;
 
 use crate::graph::GridSummary;

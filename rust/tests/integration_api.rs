@@ -1,0 +1,400 @@
+//! Integration tests for the `api` facade: the unified `Servable` trait
+//! served by the one generic executor (bit-identical to the scalar oracle
+//! for both plan shapes), deployment bundles that round-trip save → load →
+//! serve without moving an ulp, the NDJSON serve loop with typed
+//! machine-readable errors, and the typed error surface of bundle loading.
+
+use autogmap::api::{
+    serve_loop, DeployedPlan, Deployment, DeploymentBuilder, Error, ServeOptions, Source, Strategy,
+};
+use autogmap::engine::{self, BatchExecutor, Servable};
+use autogmap::graph::{synth, GridSummary};
+use autogmap::mapper;
+use autogmap::reorder::{reorder, Reordering};
+use autogmap::scheme::{parse_actions, CompositeScheme, FillRule, Scheme, WindowSlice};
+use autogmap::util::json::{num_arr, obj, Json};
+use autogmap::util::propcheck::check;
+use std::io::Cursor;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The tentpole property: one generic executor serves BOTH `Servable`
+/// implementations — flat `ExecPlan`s and mapper `CompositePlan`s, here
+/// behind the same `DeployedPlan` enum a deployment holds — bit-identically
+/// to the scalar seed oracle (`Servable::mvm`) across schemes, batch
+/// sizes, both executor modes, and 1/2/8 workers.
+#[test]
+fn generic_executor_serves_both_plan_shapes_bit_identically_property() {
+    check("api_generic_executor_bit_identical", 6, |rng| {
+        let dim = 40 + rng.below(50) as usize;
+        let m = synth::banded_like(dim, 0.9, 1 + rng.below(5));
+        let r = reorder(&m, Reordering::CuthillMckee);
+        let grid = 3 + rng.below(3) as usize;
+        let g = GridSummary::new(&r.matrix, grid);
+        let n = g.n;
+        if n < 4 {
+            return Ok(());
+        }
+
+        // flat shape: a random diagonal+fill scheme compiled directly
+        let d: Vec<u8> = (0..n - 1).map(|_| rng.below(2) as u8).collect();
+        let f: Vec<usize> = (0..n - 1).map(|_| rng.below(3) as usize).collect();
+        let scheme = parse_actions(n, &d, &f, FillRule::Dynamic { grades: 3 });
+        let flat = DeployedPlan::Flat(
+            engine::compile(&r.matrix, &g, &scheme).map_err(|e| format!("{e:#}"))?,
+        );
+
+        // composite shape: two overlapping full-block windows with a cut
+        let cut = 1 + rng.below(n as u64 - 1) as usize;
+        let ov = rng.below(3) as usize;
+        let comp = CompositeScheme {
+            n,
+            slices: vec![
+                WindowSlice {
+                    win_start: 0,
+                    win_end: (cut + ov).min(n),
+                    start: 0,
+                    end: cut,
+                    scheme: Scheme {
+                        diag_len: vec![(cut + ov).min(n)],
+                        fill_len: vec![],
+                    },
+                    cache_hit: false,
+                },
+                WindowSlice {
+                    win_start: cut.saturating_sub(ov),
+                    win_end: n,
+                    start: cut,
+                    end: n,
+                    scheme: Scheme {
+                        diag_len: vec![n - cut.saturating_sub(ov)],
+                        fill_len: vec![],
+                    },
+                    cache_hit: false,
+                },
+            ],
+        };
+        let composite = DeployedPlan::Composite(
+            mapper::compile_composite(&r.matrix, &g, &comp).map_err(|e| format!("{e:#}"))?,
+        );
+
+        let bsz = 1 + rng.below(7) as usize;
+        let xs: Vec<Vec<f64>> = (0..bsz)
+            .map(|_| (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect())
+            .collect();
+        for (label, plan) in [("flat", flat), ("composite", composite)] {
+            // the seed scalar oracle: per-request Servable::mvm
+            let want: Vec<Vec<f64>> = xs.iter().map(|x| plan.mvm(x)).collect();
+            if plan.nnz() < plan.stats().mapped_nnz {
+                return Err(format!("{label}: nnz accounting shrank below mapped"));
+            }
+            let plan = Arc::new(plan);
+            for workers in [1usize, 2, 8] {
+                let exec = BatchExecutor::new(plan.clone(), workers);
+                if exec.execute_batch(xs.clone()) != want {
+                    return Err(format!("{label}: scalar mode diverged at {workers} workers"));
+                }
+                if exec.execute_batch_sharded(xs.clone()) != want {
+                    return Err(format!("{label}: sharded mode diverged at {workers} workers"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Bundle round-trip property: a saved deployment reloads with identical
+/// program stats, provenance, and fleet loads, serves bit-identically in
+/// original node ids, and the embedded plan artifact is the version-2
+/// arena format.
+#[test]
+fn bundle_roundtrip_matches_fresh_deployment_property() {
+    let dir = temp_dir("autogmap_api_bundle_roundtrip");
+    check("api_bundle_roundtrip", 4, |rng| {
+        let nodes = 400 + rng.below(400) as usize;
+        let degree = 3 + rng.below(3) as usize;
+        let seed = rng.next_u64();
+        let block = 1 + rng.below(3) as usize;
+        let dep = DeploymentBuilder::new(
+            Source::Rmat { nodes, degree, seed },
+            Strategy::FixedBlock { block },
+        )
+        .grid(8)
+        .seed(seed)
+        .banks(1 + rng.below(4) as usize)
+        .workers(2)
+        .build()
+        .map_err(|e| e.to_string())?;
+
+        let path = dir.join(format!("bundle_{nodes}_{block}.json"));
+        dep.save(&path).map_err(|e| e.to_string())?;
+        let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+        if doc.get("plan").get("version").as_usize() != Some(2) {
+            return Err("bundle must embed the v2 plan arena artifact".into());
+        }
+
+        let back = Deployment::load(&path).map_err(|e| e.to_string())?;
+        if back.stats() != dep.stats() {
+            return Err(format!("stats drifted: {:?} vs {:?}", back.stats(), dep.stats()));
+        }
+        if back.provenance != dep.provenance {
+            return Err("provenance drifted".into());
+        }
+        if back.fleet.loads != dep.fleet.loads || back.fleet.banks != dep.fleet.banks {
+            return Err("fleet assignment drifted".into());
+        }
+
+        // bit-identical serving in original node ids (integer inputs make
+        // every accumulation exact), against the source matrix itself
+        let m = synth::rmat_like(nodes, 2 * (nodes * degree / 2), seed);
+        let x: Vec<f64> = (0..nodes).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let fresh_y = dep.mvm(&x).map_err(|e| e.to_string())?;
+        if fresh_y != m.spmv(&x) {
+            return Err("fresh deployment is not exact vs the source matrix".into());
+        }
+        if back.mvm(&x).map_err(|e| e.to_string())? != fresh_y {
+            return Err("reloaded bundle answered differently".into());
+        }
+        // executor path over the loaded bundle, both modes
+        let xs: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..nodes).map(|i| ((i + s * 3) % 9) as f64 - 4.0).collect())
+            .collect();
+        let want: Vec<Vec<f64>> = xs
+            .iter()
+            .map(|x| dep.mvm(x).map_err(|e| e.to_string()))
+            .collect::<Result<_, _>>()?;
+        let exec = back.executor(3);
+        let perm_in: Vec<Vec<f64>> = xs.iter().map(|x| back.permute_in(x)).collect();
+        let ys = exec.execute_batch_sharded(perm_in.clone());
+        let got: Vec<Vec<f64>> = ys.iter().map(|y| back.permute_out(y)).collect();
+        if got != want {
+            return Err("loaded executor (sharded) diverged from the fresh deployment".into());
+        }
+        exec.recycle(ys);
+        let ys = exec.execute_batch(perm_in);
+        let got: Vec<Vec<f64>> = ys.iter().map(|y| back.permute_out(y)).collect();
+        if got != want {
+            return Err("loaded executor (scalar) diverged from the fresh deployment".into());
+        }
+        Ok(())
+    });
+}
+
+/// Both bundle kinds round-trip: a hierarchical (composite) deployment at
+/// beyond-window scale and a direct-controller (flat) deployment, each
+/// reloaded in-process and compared answer-for-answer and stat-for-stat.
+#[test]
+fn hierarchical_and_direct_bundles_reload_and_serve_identically() {
+    let dir = temp_dir("autogmap_api_bundle_kinds");
+
+    // hierarchical: 1500 nodes, qm7_dyn4 windows over a 188-cell grid
+    let dep = DeploymentBuilder::new(
+        Source::Rmat { nodes: 1500, degree: 4, seed: 11 },
+        Strategy::Hierarchical { controller: "qm7_dyn4".into(), overlap: 2 },
+    )
+    .grid(8)
+    .seed(11)
+    .rounds(1)
+    .workers(2)
+    .banks(4)
+    .build()
+    .unwrap();
+    assert_eq!(dep.plan().kind(), "composite");
+    let m = synth::rmat_like(1500, 2 * (1500 * 4 / 2), 11);
+    assert_eq!(dep.stats().total_nnz(), m.nnz() as u64, "exactness needs every nnz served");
+    let path = dir.join("hier.json");
+    dep.save(&path).unwrap();
+    let back = Deployment::load(&path).unwrap();
+    assert_eq!(back.stats(), dep.stats());
+    let x: Vec<f64> = (0..1500).map(|i| ((i * 13) % 17) as f64 - 8.0).collect();
+    let y = dep.mvm(&x).unwrap();
+    assert_eq!(y, m.spmv(&x), "hierarchical deployment must be exact");
+    assert_eq!(back.mvm(&x).unwrap(), y, "reloaded bundle must answer bit-identically");
+
+    // direct: the paper-scale path produces a flat bundle
+    let dep = DeploymentBuilder::new(
+        Source::Matrix { label: "qm7".into(), matrix: synth::qm7_like(5828) },
+        Strategy::Direct { controller: "qm7_dyn4".into() },
+    )
+    .grid(2)
+    .rounds(1)
+    .banks(2)
+    .workers(2)
+    .build()
+    .unwrap();
+    assert_eq!(dep.plan().kind(), "flat");
+    let path = dir.join("direct.json");
+    dep.save(&path).unwrap();
+    let back = Deployment::load(&path).unwrap();
+    assert_eq!(back.stats(), dep.stats());
+    assert_eq!(back.plan().kind(), "flat");
+    let m = synth::qm7_like(5828);
+    let x: Vec<f64> = (0..22).map(|i| ((i * 3) % 7) as f64 - 3.0).collect();
+    assert_eq!(dep.mvm(&x).unwrap(), m.spmv(&x));
+    assert_eq!(back.mvm(&x).unwrap(), dep.mvm(&x).unwrap());
+}
+
+/// The serve loop: NDJSON in, NDJSON out — singles coalesced into batch
+/// windows, explicit batches, flush commands, typed error responses that
+/// never kill the loop, and a final stats line with nonzero throughput.
+#[test]
+fn serve_loop_speaks_ndjson_with_typed_errors() {
+    let dep = DeploymentBuilder::new(
+        Source::Matrix { label: "qm7".into(), matrix: synth::qm7_like(5828) },
+        Strategy::FixedBlock { block: 2 },
+    )
+    .grid(2)
+    .workers(2)
+    .build()
+    .unwrap();
+    let dim = 22usize;
+    let xv = |s: usize| -> Vec<f64> { (0..dim).map(|i| ((i + s) % 5) as f64 - 2.0).collect() };
+    let line = |id: i64, x: &[f64]| {
+        obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("x", num_arr(x.iter().copied())),
+        ])
+        .to_string()
+    };
+
+    let mut input = String::new();
+    input.push_str(&line(1, &xv(1)));
+    input.push('\n');
+    input.push_str(&line(2, &xv(2)));
+    input.push('\n'); // window of 2 -> ids 1,2 flush here
+    input.push_str(&line(3, &xv(3)));
+    input.push('\n');
+    input.push_str("this is not json\n");
+    input.push_str(&line(4, &xv(4)[..5])); // wrong length -> validate error
+    input.push('\n');
+    // explicit batch (flushes pending id 3 first)
+    let batch = obj(vec![
+        ("id", Json::Num(5.0)),
+        (
+            "xs",
+            Json::Arr(vec![num_arr(xv(5)), num_arr(xv(6))]),
+        ),
+    ]);
+    input.push_str(&batch.to_string());
+    input.push('\n');
+    input.push_str(&line(6, &xv(7)));
+    input.push('\n');
+    input.push_str("{\"flush\":true}\n");
+
+    let opts = ServeOptions {
+        workers: 2,
+        batch_window: 2,
+        stats_every: 0,
+        sharded: true,
+    };
+    let mut out: Vec<u8> = Vec::new();
+    let report = serve_loop(&dep, &opts, Cursor::new(input), &mut out).unwrap();
+    assert_eq!(report.served, 6, "4 singles + 2 batched");
+    assert_eq!(report.errors, 2);
+    assert_eq!(report.batches, 4, "window, pending-before-batch, batch, flush");
+    assert!(report.rps > 0.0);
+    assert!(report.nnz_per_s > 0.0);
+
+    let text = String::from_utf8(out).unwrap();
+    let docs: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let parse_vec = |j: &Json| -> Vec<f64> {
+        j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
+    };
+    let mut answered = 0;
+    let mut error_kinds = Vec::new();
+    let mut stats_lines = 0;
+    for doc in &docs {
+        if doc.get("stats") != &Json::Null {
+            stats_lines += 1;
+            let s = doc.get("stats");
+            assert_eq!(s.get("served").as_usize(), Some(6));
+            assert_eq!(s.get("errors").as_usize(), Some(2));
+            assert!(s.get("rps").as_f64().unwrap() > 0.0);
+            assert!(s.get("nnz_per_s").as_f64().unwrap() > 0.0);
+            assert!(s.get("shards").as_usize().unwrap() >= 1);
+        } else if doc.get("error") != &Json::Null {
+            error_kinds.push(doc.get("error").get("kind").as_str().unwrap().to_string());
+        } else if doc.get("ys") != &Json::Null {
+            assert_eq!(doc.get("id").as_i64(), Some(5));
+            let ys = doc.get("ys").as_arr().unwrap();
+            assert_eq!(ys.len(), 2);
+            assert_eq!(parse_vec(&ys[0]), dep.mvm(&xv(5)).unwrap());
+            assert_eq!(parse_vec(&ys[1]), dep.mvm(&xv(6)).unwrap());
+            answered += 2;
+        } else {
+            let id = doc.get("id").as_i64().unwrap();
+            let want = match id {
+                1 => dep.mvm(&xv(1)).unwrap(),
+                2 => dep.mvm(&xv(2)).unwrap(),
+                3 => dep.mvm(&xv(3)).unwrap(),
+                6 => dep.mvm(&xv(7)).unwrap(),
+                other => panic!("unexpected response id {other}"),
+            };
+            assert_eq!(parse_vec(doc.get("y")), want, "response {id} drifted");
+            answered += 1;
+        }
+    }
+    assert_eq!(answered, 6);
+    assert_eq!(stats_lines, 1, "stats_every 0 -> final stats only");
+    assert_eq!(error_kinds, vec!["parse".to_string(), "validate".to_string()]);
+}
+
+/// Bundle loading reports typed, matchable errors instead of strings.
+#[test]
+fn bundle_load_reports_typed_errors() {
+    let dir = temp_dir("autogmap_api_typed_errors");
+
+    // missing file -> Io
+    match Deployment::load(&dir.join("nope.json")) {
+        Err(Error::Io(_)) => {}
+        other => panic!("expected Io, got {other:?}"),
+    }
+
+    // garbage bytes -> Parse
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "not json at all {{{").unwrap();
+    match Deployment::load(&garbage) {
+        Err(Error::Parse(_)) => {}
+        other => panic!("expected Parse, got {other:?}"),
+    }
+
+    // future format revision -> BundleVersion with the found number
+    let future = dir.join("future.json");
+    std::fs::write(&future, "{\"bundle_version\": 99}").unwrap();
+    match Deployment::load(&future) {
+        Err(Error::BundleVersion { found: 99, supported }) => {
+            assert_eq!(supported, autogmap::api::BUNDLE_VERSION)
+        }
+        other => panic!("expected BundleVersion, got {other:?}"),
+    }
+
+    // structurally broken bundle -> Validate (take a real bundle, corrupt
+    // its kind tag)
+    let dep = DeploymentBuilder::new(
+        Source::Matrix { label: "qm7".into(), matrix: synth::qm7_like(5828) },
+        Strategy::FixedBlock { block: 2 },
+    )
+    .grid(2)
+    .build()
+    .unwrap();
+    let good = dir.join("good.json");
+    dep.save(&good).unwrap();
+    let text = std::fs::read_to_string(&good).unwrap();
+    assert!(text.contains("\"kind\":\"composite\""));
+    let bad = dir.join("bad_kind.json");
+    std::fs::write(&bad, text.replace("\"kind\":\"composite\"", "\"kind\":\"weird\"")).unwrap();
+    match Deployment::load(&bad) {
+        Err(Error::Validate(msg)) => assert!(msg.contains("weird"), "{msg}"),
+        other => panic!("expected Validate, got {other:?}"),
+    }
+
+    // and the good one still loads
+    assert!(Deployment::load(&good).is_ok());
+}

@@ -7,8 +7,9 @@
 
 use autogmap::agent::params::init_params;
 use autogmap::baselines;
+use autogmap::engine::BatchExecutor;
 use autogmap::graph::{matrix_market, synth, Coo, Csr, GridSummary};
-use autogmap::mapper::{self, CompositeExecutor, MapperConfig};
+use autogmap::mapper::{self, MapperConfig};
 use autogmap::reorder::{reorder, Reordering};
 use autogmap::runtime::manifest::ControllerEntry;
 use autogmap::scheme::{evaluate, FillRule, RewardWeights};
@@ -235,7 +236,7 @@ fn composite_execution_matches_dense_oracle_on_10k_rmat() {
         "single composite MVM must equal the dense oracle bit-for-bit"
     );
     for workers in [1usize, 2, 8] {
-        let exec = CompositeExecutor::new(cplan.clone(), workers);
+        let exec = BatchExecutor::new(cplan.clone(), workers);
         let ys = exec.execute_batch(xs.clone());
         assert_eq!(ys, want, "batch execution at {workers} workers");
         let sharded = exec.execute_batch_sharded(xs.clone());
