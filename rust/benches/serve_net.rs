@@ -1,0 +1,75 @@
+//! serve_net bench: stands up the TCP serving tier on a loopback socket
+//! with two R-MAT tenants, drives concurrent clients through
+//! `run_net_bench` — every response is checked bit-identical against the
+//! served deployment's own `mvm`, with a live hot-swap mid-stream — and
+//! writes `BENCH_serve_net.json`.
+//!
+//! `AUTOGMAP_BENCH_FAST=1` shrinks the graphs and request counts for
+//! quick local runs.
+
+use autogmap::api::{DeploymentBuilder, Source, Strategy};
+use autogmap::net::{run_net_bench, NetBenchOptions};
+use std::path::{Path, PathBuf};
+
+fn bundle(dir: &Path, label: &str, nodes: usize, block: usize) -> PathBuf {
+    let path = dir.join(format!("{label}.json"));
+    let dep = DeploymentBuilder::new(
+        Source::Rmat {
+            nodes,
+            degree: 8,
+            seed: 42,
+        },
+        Strategy::FixedBlock { block },
+    )
+    .grid(32)
+    .workers(4)
+    .build()
+    .expect("build deployment");
+    dep.save(&path).expect("save bundle");
+    path
+}
+
+fn main() {
+    let fast = std::env::var("AUTOGMAP_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let nodes = if fast { 2_000 } else { 10_000 };
+    let requests = if fast { 40 } else { 200 };
+    let dir = std::env::temp_dir().join("autogmap_bench_serve_net");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+
+    eprintln!("serve_net: building three {nodes}-node R-MAT bundles under {}", dir.display());
+    let a = bundle(&dir, "graph_a", nodes, 2);
+    let b = bundle(&dir, "graph_b", nodes, 4);
+    // the swap target remaps the same graph with a different block size:
+    // a genuinely different plan that answers the same queries
+    let b_remap = bundle(&dir, "graph_b_remap", nodes, 8);
+
+    let opts = NetBenchOptions {
+        bundles: vec![("graphA".into(), a), ("graphB".into(), b)],
+        listen: "127.0.0.1:0".into(),
+        workers: 4,
+        queue_depth: 32,
+        sharded: true,
+        clients: 2,
+        requests,
+        swap: Some(("graphB".into(), b_remap)),
+        seed: 0x5eed,
+        bench_json: PathBuf::from("BENCH_serve_net.json"),
+    };
+    match run_net_bench(&opts) {
+        Ok(report) => {
+            println!(
+                "serve_net: served {} requests across {} tenants in {:.3} s \
+                 ({:.0} rps), hot-swap {}; ledger in BENCH_serve_net.json",
+                report.served,
+                report.tenants,
+                report.wall_s,
+                report.rps,
+                if report.swapped { "verified" } else { "skipped" },
+            );
+        }
+        Err(e) => {
+            eprintln!("serve_net bench FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! The request-dispatch core shared by every NDJSON transport.
+//!
+//! Both serving front ends — the single-bundle stdin loop
+//! ([`crate::api::serve_loop`]) and the multi-tenant TCP tier
+//! ([`crate::net`]) — speak the same wire dialect because they are built
+//! from the helpers in this module instead of hand-rolling parsing and
+//! formatting twice:
+//!
+//! - [`read_line_bounded`] — NDJSON framing with an upper bound on line
+//!   length, so a malicious or broken client cannot make the server buffer
+//!   an unbounded line. Oversized lines are *drained* (the connection
+//!   stays usable) and reported as [`BoundedLine::TooLong`].
+//! - [`parse_vec`] — request-vector validation with error messages that
+//!   name both the offered and the expected length.
+//! - [`execute_permuted`] — the one place a request batch crosses a
+//!   [`Deployment`]: permute into served order, execute on the bound
+//!   executor (sharded or scalar), permute back to original node ids, and
+//!   recycle the executor's output buffers.
+//! - [`error_obj`] / [`error_line`] — the *identical* machine-readable
+//!   error object both transports answer with:
+//!   `{"error": {"kind": <Error::kind()>, "message": ...}}`.
+//! - [`check_deadline`] — the `deadline_ms` admission gate: a request
+//!   whose budget expired before execution begins is rejected with a
+//!   typed [`Error::Deadline`], never silently served late.
+
+use super::deploy::{DeployedPlan, Deployment};
+use super::error::{Error, Result};
+use crate::engine::BatchExecutor;
+use crate::util::json::{obj, Json};
+use std::io::BufRead;
+use std::time::Instant;
+
+/// Default cap on one NDJSON request line (64 MiB) — roomy enough for a
+/// ~100k-dim explicit batch, small enough that a newline-free stream
+/// cannot exhaust memory.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 64 * 1024 * 1024;
+
+/// One framing step of a bounded NDJSON reader.
+#[derive(Debug, PartialEq, Eq)]
+pub enum BoundedLine {
+    /// A complete line (without its trailing newline).
+    Line(String),
+    /// The line exceeded `limit` bytes; the excess was drained up to and
+    /// including the next newline, so the stream is still line-aligned.
+    TooLong { limit: usize },
+    /// End of input.
+    Eof,
+}
+
+/// Read one `\n`-terminated line holding at most `limit` bytes. Unlike
+/// [`BufRead::read_line`], a line longer than `limit` does not grow the
+/// buffer past the cap: the remainder is consumed and discarded and the
+/// caller gets [`BoundedLine::TooLong`], leaving the reader positioned at
+/// the start of the next line.
+pub fn read_line_bounded<R: BufRead>(
+    input: &mut R,
+    limit: usize,
+) -> std::io::Result<BoundedLine> {
+    let mut acc: Vec<u8> = Vec::new();
+    let mut overflowed = false;
+    loop {
+        let chunk = input.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a part-read final line still counts as a line
+            return Ok(if overflowed {
+                BoundedLine::TooLong { limit }
+            } else if acc.is_empty() {
+                BoundedLine::Eof
+            } else {
+                BoundedLine::Line(String::from_utf8_lossy(&acc).into_owned())
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.map(|p| p + 1).unwrap_or(chunk.len());
+        if !overflowed {
+            let keep = take - usize::from(newline.is_some());
+            if acc.len() + keep > limit {
+                overflowed = true;
+                acc.clear();
+            } else {
+                acc.extend_from_slice(&chunk[..keep]);
+            }
+        }
+        input.consume(take);
+        if newline.is_some() {
+            return Ok(if overflowed {
+                BoundedLine::TooLong { limit }
+            } else {
+                BoundedLine::Line(String::from_utf8_lossy(&acc).into_owned())
+            });
+        }
+    }
+}
+
+/// Parse one request vector against the deployment dimension. The length
+/// mismatch message names *both* lengths so a client can see which side
+/// is wrong without replaying the request.
+pub fn parse_vec(v: &Json, dim: usize) -> Result<Vec<f64>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Validate("request carries no \"x\" (or \"xs\") array".into()))?;
+    if arr.len() != dim {
+        return Err(Error::Validate(format!(
+            "request has {} elements, deployment expects {dim}",
+            arr.len()
+        )));
+    }
+    let mut x = Vec::with_capacity(dim);
+    for (i, e) in arr.iter().enumerate() {
+        let f = e
+            .as_f64()
+            .ok_or_else(|| Error::Validate(format!("x[{i}] is not a number")))?;
+        if !f.is_finite() {
+            return Err(Error::Validate(format!("x[{i}] is not finite")));
+        }
+        x.push(f);
+    }
+    Ok(x)
+}
+
+/// Parse an explicit `"xs"` batch: every row validated by [`parse_vec`],
+/// errors prefixed with the offending row index, empty batches rejected.
+pub fn parse_batch(v: &Json, dim: usize) -> Result<Vec<Vec<f64>>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| Error::Validate("\"xs\" is not an array".into()))?;
+    if arr.is_empty() {
+        return Err(Error::Validate("xs is empty".into()));
+    }
+    let mut xs = Vec::with_capacity(arr.len());
+    for (i, xv) in arr.iter().enumerate() {
+        let x = parse_vec(xv, dim).map_err(|e| match e {
+            Error::Validate(msg) => Error::Validate(format!("xs[{i}]: {msg}")),
+            other => other,
+        })?;
+        xs.push(x);
+    }
+    Ok(xs)
+}
+
+/// Permute a request batch into served order, execute it on `exec`
+/// (sharded multi-RHS or scalar per-request mode), permute the answers
+/// back to original node ids, and recycle the executor buffers.
+pub fn execute_permuted(
+    dep: &Deployment,
+    exec: &BatchExecutor<DeployedPlan>,
+    xs: Vec<Vec<f64>>,
+    sharded: bool,
+) -> Vec<Vec<f64>> {
+    let permuted: Vec<Vec<f64>> = xs.iter().map(|x| dep.permute_in(x)).collect();
+    let ys = if sharded {
+        exec.execute_batch_sharded(permuted)
+    } else {
+        exec.execute_batch(permuted)
+    };
+    let outs: Vec<Vec<f64>> = ys.iter().map(|y| dep.permute_out(y)).collect();
+    exec.recycle(ys);
+    outs
+}
+
+/// The shared machine-readable error object: `{"kind": ..., "message":
+/// ...}` with the stable [`Error::kind`] label. Every transport embeds
+/// exactly this object under its `"error"` key, so error handling written
+/// against one front end works against the other.
+pub fn error_obj(err: &Error) -> Json {
+    obj(vec![
+        ("kind", Json::Str(err.kind().into())),
+        ("message", Json::Str(err.to_string())),
+    ])
+}
+
+/// A full error response line carrying the request correlation id.
+pub fn error_line(id: Json, err: &Error) -> Json {
+    obj(vec![("id", id), ("error", error_obj(err))])
+}
+
+/// Enforce a request's `deadline_ms` budget at the moment execution would
+/// begin. `arrival` is when the request line was read off the transport;
+/// a budget of 0 ms always expires (useful as a deterministic probe).
+pub fn check_deadline(arrival: Instant, deadline_ms: f64) -> Result<()> {
+    let elapsed_ms = arrival.elapsed().as_secs_f64() * 1e3;
+    if elapsed_ms >= deadline_ms {
+        return Err(Error::Deadline { elapsed_ms, deadline_ms });
+    }
+    Ok(())
+}
+
+/// Parse an optional `deadline_ms` field: absent means no deadline;
+/// present, it must be a finite non-negative number.
+pub fn parse_deadline(doc: &Json) -> Result<Option<f64>> {
+    match doc.get("deadline_ms") {
+        Json::Null => Ok(None),
+        v => {
+            let ms = v.as_f64().filter(|m| m.is_finite() && *m >= 0.0).ok_or_else(|| {
+                Error::Validate("deadline_ms must be a non-negative number".into())
+            })?;
+            Ok(Some(ms))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn bounded_reader_frames_drains_and_survives() {
+        let text = "short\n".to_string() + &"x".repeat(100) + "\nafter\nlast";
+        let mut r = Cursor::new(text);
+        assert_eq!(read_line_bounded(&mut r, 16).unwrap(), BoundedLine::Line("short".into()));
+        // the 100-byte line overflows the 16-byte cap but is fully drained
+        assert_eq!(read_line_bounded(&mut r, 16).unwrap(), BoundedLine::TooLong { limit: 16 });
+        assert_eq!(read_line_bounded(&mut r, 16).unwrap(), BoundedLine::Line("after".into()));
+        // a final line without a trailing newline still arrives
+        assert_eq!(read_line_bounded(&mut r, 16).unwrap(), BoundedLine::Line("last".into()));
+        assert_eq!(read_line_bounded(&mut r, 16).unwrap(), BoundedLine::Eof);
+    }
+
+    #[test]
+    fn bounded_reader_exact_limit_passes() {
+        let mut r = Cursor::new("abcd\n".to_string());
+        assert_eq!(read_line_bounded(&mut r, 4).unwrap(), BoundedLine::Line("abcd".into()));
+        let mut r = Cursor::new("abcde\n".to_string());
+        assert_eq!(read_line_bounded(&mut r, 4).unwrap(), BoundedLine::TooLong { limit: 4 });
+    }
+
+    #[test]
+    fn parse_vec_names_both_lengths() {
+        let doc = Json::parse("[1, 2, 3]").unwrap();
+        let err = parse_vec(&doc, 5).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains('3') && msg.contains('5'), "{msg}");
+        assert!(parse_vec(&doc, 3).is_ok());
+        let bad = Json::parse("[1, \"x\", 3]").unwrap();
+        assert!(parse_vec(&bad, 3).is_err());
+    }
+
+    #[test]
+    fn parse_batch_prefixes_row_index() {
+        let doc = Json::parse("[[1, 2], [1]]").unwrap();
+        let err = parse_batch(&doc, 2).unwrap_err();
+        assert!(err.to_string().contains("xs[1]"), "{err}");
+        assert!(parse_batch(&Json::parse("[]").unwrap(), 2).is_err());
+        assert_eq!(parse_batch(&Json::parse("[[1, 2]]").unwrap(), 2).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn deadline_zero_always_expires() {
+        let t = Instant::now();
+        match check_deadline(t, 0.0) {
+            Err(Error::Deadline { deadline_ms, .. }) => assert_eq!(deadline_ms, 0.0),
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        // a generous budget passes
+        assert!(check_deadline(Instant::now(), 60_000.0).is_ok());
+        // absent vs malformed deadline fields
+        assert_eq!(parse_deadline(&Json::parse("{}").unwrap()).unwrap(), None);
+        assert_eq!(
+            parse_deadline(&Json::parse("{\"deadline_ms\": 5}").unwrap()).unwrap(),
+            Some(5.0)
+        );
+        assert!(parse_deadline(&Json::parse("{\"deadline_ms\": -1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn error_objects_carry_stable_kinds() {
+        let e = Error::Busy { tenant: "a".into(), depth: 1 };
+        let o = error_obj(&e);
+        assert_eq!(o.get("kind").as_str(), Some("busy"));
+        assert!(o.get("message").as_str().unwrap().contains("depth limit"));
+        let line = error_line(Json::Num(7.0), &e);
+        assert_eq!(line.get("id").as_i64(), Some(7));
+        assert_eq!(line.get("error").get("kind").as_str(), Some("busy"));
+    }
+}

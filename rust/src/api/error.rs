@@ -30,6 +30,23 @@ pub enum Error {
         found: usize,
         supported: usize,
     },
+    /// Admission control said no: the tenant's bounded request queue is at
+    /// its depth limit. Retryable — the request was rejected *before* any
+    /// execution, so the client can back off and resend.
+    Busy {
+        /// deployment id whose queue is full
+        tenant: String,
+        /// the configured per-tenant queue depth that was hit
+        depth: usize,
+    },
+    /// The request carried a `deadline_ms` budget that expired before
+    /// execution began. Like [`Error::Busy`], nothing was executed.
+    Deadline {
+        /// milliseconds that elapsed between arrival and the admission check
+        elapsed_ms: f64,
+        /// the budget the request asked for
+        deadline_ms: f64,
+    },
 }
 
 /// `Result` specialized to the API boundary's typed [`Error`].
@@ -44,6 +61,8 @@ impl Error {
             Error::Validate(_) => "validate",
             Error::Io(_) => "io",
             Error::BundleVersion { .. } => "bundle_version",
+            Error::Busy { .. } => "busy",
+            Error::Deadline { .. } => "deadline",
         }
     }
 }
@@ -57,6 +76,15 @@ impl fmt::Display for Error {
             Error::BundleVersion { found, supported } => write!(
                 f,
                 "unsupported bundle version {found} (this build reads version {supported})"
+            ),
+            Error::Busy { tenant, depth } => write!(
+                f,
+                "tenant {tenant:?} is at its queue depth limit {depth}; retry later"
+            ),
+            Error::Deadline { elapsed_ms, deadline_ms } => write!(
+                f,
+                "deadline exceeded before execution: {elapsed_ms:.3} ms elapsed of a \
+                 {deadline_ms:.3} ms budget"
             ),
         }
     }
@@ -83,6 +111,13 @@ mod tests {
         assert_eq!(v.kind(), "bundle_version");
         assert!(v.to_string().contains("version 9"));
         assert!(Error::Parse("bad digit".into()).to_string().contains("bad digit"));
+        let b = Error::Busy { tenant: "graphA".into(), depth: 4 };
+        assert_eq!(b.kind(), "busy");
+        assert!(b.to_string().contains("graphA"));
+        assert!(b.to_string().contains('4'));
+        let d = Error::Deadline { elapsed_ms: 12.5, deadline_ms: 10.0 };
+        assert_eq!(d.kind(), "deadline");
+        assert!(d.to_string().contains("12.5"));
     }
 
     #[test]

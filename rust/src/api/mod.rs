@@ -22,6 +22,10 @@
 //!   `serve` CLI subcommand wraps around stdin/stdout, with typed
 //!   [`Error`]s surfaced as machine-readable error responses instead of
 //!   process exits.
+//! - [`dispatch`] — the transport-agnostic request-dispatch core (bounded
+//!   NDJSON framing, request validation, permuted execution, the shared
+//!   error wire format, deadline checks). Both `serve_loop` and the
+//!   multi-tenant TCP tier in [`crate::net`] are thin loops over it.
 //!
 //! The 5-line flow:
 //!
@@ -39,6 +43,7 @@
 //! ```
 
 pub mod deploy;
+pub mod dispatch;
 pub mod error;
 pub mod serve;
 

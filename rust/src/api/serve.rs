@@ -21,18 +21,26 @@
 //! Bad input never kills the loop: a line that fails to parse or validate
 //! gets a machine-readable `{"id": ..., "error": {"kind": "parse" |
 //! "validate", "message": ...}}` response (kinds are
-//! [`crate::api::Error::kind`]) and serving continues. Only transport
-//! failures (the input or output stream dying) end the loop with an
-//! [`Error::Io`].
+//! [`crate::api::Error::kind`]) and serving continues. Blank lines are
+//! skipped, and a line longer than [`ServeOptions::max_line_bytes`] is
+//! drained with a bounded read and answered with a `parse` error instead
+//! of buffering without limit. Only transport failures (the input or
+//! output stream dying) end the loop with an [`Error::Io`].
+//!
+//! The parsing, validation, execution, and error-formatting primitives
+//! live in [`crate::api::dispatch`], shared with the multi-tenant network
+//! tier ([`crate::net`]) — both transports answer with byte-identical
+//! error objects by construction.
 //!
 //! Every [`ServeOptions::stats_every`] served requests — and always once
 //! at end of input — the loop emits `{"stats": {"served", "errors",
 //! "batches", "rps", "nnz_per_s", "shards", "workers", "wall_s"}}` so
 //! operators can watch throughput without parsing responses.
 
-use super::deploy::{DeployedPlan, Deployment};
+use super::deploy::Deployment;
+use super::dispatch::{self, BoundedLine};
 use super::error::{Error, Result};
-use crate::engine::{BatchExecutor, Servable};
+use crate::engine::Servable;
 use crate::util::json::{num_arr, obj, Json};
 use std::io::{BufRead, Write};
 use std::time::Instant;
@@ -48,6 +56,9 @@ pub struct ServeOptions {
     pub stats_every: usize,
     /// band-sharded multi-RHS serving (false = scalar per-request mode)
     pub sharded: bool,
+    /// cap on one NDJSON request line; longer lines are drained and
+    /// rejected with a `parse` error
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServeOptions {
@@ -57,6 +68,7 @@ impl Default for ServeOptions {
             batch_window: 1,
             stats_every: 100,
             sharded: true,
+            max_line_bytes: dispatch::DEFAULT_MAX_LINE_BYTES,
         }
     }
 }
@@ -77,7 +89,7 @@ pub struct ServeReport {
 pub fn serve_loop<R: BufRead, W: Write>(
     dep: &Deployment,
     opts: &ServeOptions,
-    input: R,
+    mut input: R,
     out: &mut W,
 ) -> Result<ServeReport> {
     let exec = dep.executor(opts.workers);
@@ -85,6 +97,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
     let plan_nnz = dep.plan().nnz();
     let shards = dep.plan().shard_spans(exec.workers()).len();
     let window = opts.batch_window.max(1);
+    let max_line = opts.max_line_bytes.max(1);
 
     let mut pending_ids: Vec<Json> = Vec::new();
     let mut pending_xs: Vec<Vec<f64>> = Vec::new();
@@ -118,8 +131,18 @@ pub fn serve_loop<R: BufRead, W: Write>(
         Ok(())
     };
 
-    for line in input.lines() {
-        let line = line.map_err(|e| Error::Io(format!("reading request stream: {e}")))?;
+    loop {
+        let line = match read_framed(&mut input, max_line)? {
+            BoundedLine::Eof => break,
+            BoundedLine::TooLong { limit } => {
+                errors += 1;
+                let err =
+                    Error::Parse(format!("request line exceeds the {limit}-byte limit"));
+                write_error(out, Json::Null, &err)?;
+                continue;
+            }
+            BoundedLine::Line(l) => l,
+        };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -128,7 +151,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
             Ok(d) => d,
             Err(e) => {
                 errors += 1;
-                write_error(out, Json::Null, "parse", &e.to_string())?;
+                write_error(out, Json::Null, &Error::Parse(e.to_string()))?;
                 continue;
             }
         };
@@ -145,7 +168,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut batches,
                 out,
             )?;
-        } else if let Some(arr) = doc.get("xs").as_arr() {
+        } else if doc.get("xs") != &Json::Null {
             // explicit batch: dispatch pending singles first so responses
             // stay in request order, then run the batch as one dispatch
             flush_pending(
@@ -158,36 +181,23 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut batches,
                 out,
             )?;
-            let mut xs = Vec::with_capacity(arr.len());
-            let mut bad = None;
-            for (i, xv) in arr.iter().enumerate() {
-                match parse_request_vec(xv, dim) {
-                    Ok(x) => xs.push(x),
-                    Err(msg) => {
-                        bad = Some(format!("xs[{i}]: {msg}"));
-                        break;
-                    }
+            let xs = match dispatch::parse_batch(doc.get("xs"), dim) {
+                Ok(xs) => xs,
+                Err(e) => {
+                    errors += 1;
+                    write_error(out, id, &e)?;
+                    continue;
                 }
-            }
-            if let Some(msg) = bad {
-                errors += 1;
-                write_error(out, id, "validate", &msg)?;
-                continue;
-            }
-            if xs.is_empty() {
-                errors += 1;
-                write_error(out, id, "validate", "xs is empty")?;
-                continue;
-            }
+            };
             let n = xs.len() as u64;
-            let ys = execute_permuted(dep, &exec, xs, opts.sharded);
+            let ys = dispatch::execute_permuted(dep, &exec, xs, opts.sharded);
             batches += 1;
             served += n;
             let ys_json = Json::Arr(ys.into_iter().map(num_arr).collect());
             write_response(out, obj(vec![("id", id), ("ys", ys_json)]))?;
             out.flush()?;
         } else {
-            match parse_request_vec(doc.get("x"), dim) {
+            match dispatch::parse_vec(doc.get("x"), dim) {
                 Ok(x) => {
                     pending_ids.push(id);
                     pending_xs.push(x);
@@ -204,9 +214,9 @@ pub fn serve_loop<R: BufRead, W: Write>(
                         )?;
                     }
                 }
-                Err(msg) => {
+                Err(e) => {
                     errors += 1;
-                    write_error(out, id, "validate", &msg)?;
+                    write_error(out, id, &e)?;
                 }
             }
         }
@@ -241,49 +251,17 @@ pub fn serve_loop<R: BufRead, W: Write>(
     })
 }
 
-/// Parse one request vector; message strings become `validate` responses.
-fn parse_request_vec(v: &Json, dim: usize) -> std::result::Result<Vec<f64>, String> {
-    let arr = v.as_arr().ok_or("request carries no \"x\" (or \"xs\") array")?;
-    if arr.len() != dim {
-        return Err(format!(
-            "request has {} elements, deployment expects {dim}",
-            arr.len()
-        ));
-    }
-    let mut x = Vec::with_capacity(dim);
-    for (i, e) in arr.iter().enumerate() {
-        let f = e.as_f64().ok_or_else(|| format!("x[{i}] is not a number"))?;
-        if !f.is_finite() {
-            return Err(format!("x[{i}] is not finite"));
-        }
-        x.push(f);
-    }
-    Ok(x)
-}
-
-/// Permute requests into served order, execute one batch, permute the
-/// answers back to original node ids, and recycle the executor buffers.
-fn execute_permuted(
-    dep: &Deployment,
-    exec: &BatchExecutor<DeployedPlan>,
-    xs: Vec<Vec<f64>>,
-    sharded: bool,
-) -> Vec<Vec<f64>> {
-    let permuted: Vec<Vec<f64>> = xs.iter().map(|x| dep.permute_in(x)).collect();
-    let ys = if sharded {
-        exec.execute_batch_sharded(permuted)
-    } else {
-        exec.execute_batch(permuted)
-    };
-    let outs: Vec<Vec<f64>> = ys.iter().map(|y| dep.permute_out(y)).collect();
-    exec.recycle(ys);
-    outs
+/// One bounded framing step with transport failures mapped to the typed
+/// [`Error::Io`] that ends the loop.
+fn read_framed<R: BufRead>(input: &mut R, max_line: usize) -> Result<BoundedLine> {
+    dispatch::read_line_bounded(input, max_line)
+        .map_err(|e| Error::Io(format!("reading request stream: {e}")))
 }
 
 #[allow(clippy::too_many_arguments)]
 fn flush_pending<W: Write>(
     dep: &Deployment,
-    exec: &BatchExecutor<DeployedPlan>,
+    exec: &crate::engine::BatchExecutor<super::deploy::DeployedPlan>,
     sharded: bool,
     ids: &mut Vec<Json>,
     xs: &mut Vec<Vec<f64>>,
@@ -296,7 +274,7 @@ fn flush_pending<W: Write>(
     }
     let reqs = std::mem::take(xs);
     let ids_now = std::mem::take(ids);
-    let ys = execute_permuted(dep, exec, reqs, sharded);
+    let ys = dispatch::execute_permuted(dep, exec, reqs, sharded);
     *batches += 1;
     *served += ys.len() as u64;
     for (id, y) in ids_now.into_iter().zip(ys) {
@@ -311,18 +289,8 @@ fn write_response<W: Write>(out: &mut W, doc: Json) -> Result<()> {
     Ok(())
 }
 
-fn write_error<W: Write>(out: &mut W, id: Json, kind: &str, message: &str) -> Result<()> {
-    let doc = obj(vec![
-        ("id", id),
-        (
-            "error",
-            obj(vec![
-                ("kind", Json::Str(kind.into())),
-                ("message", Json::Str(message.into())),
-            ]),
-        ),
-    ]);
-    writeln!(out, "{}", doc.to_string())?;
+fn write_error<W: Write>(out: &mut W, id: Json, err: &Error) -> Result<()> {
+    writeln!(out, "{}", dispatch::error_line(id, err).to_string())?;
     out.flush()?;
     Ok(())
 }

@@ -174,24 +174,45 @@ impl Servable for ExecPlan {
 }
 
 /// Thread-pool executor bound to one plan.
+///
+/// The pool is held behind an `Arc` so several executors can share one set
+/// of worker threads: a multi-tenant registry ([`crate::net`]) builds one
+/// [`WorkerPool`] and binds every tenant's executor to it with
+/// [`BatchExecutor::with_pool`], so N tenants cost N plans but only one
+/// pool's worth of threads. [`WorkerPool::run`] is safe under concurrent
+/// callers (each call carries its own result sink), so tenants can execute
+/// simultaneously.
 pub struct BatchExecutor<P: Servable = ExecPlan> {
     plan: Arc<P>,
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     buffers: Arc<Mutex<Vec<Vec<f64>>>>,
 }
 
 impl<P: Servable> BatchExecutor<P> {
     /// Spawn `workers` worker threads serving requests against `plan`.
     pub fn new(plan: Arc<P>, workers: usize) -> BatchExecutor<P> {
+        BatchExecutor::with_pool(plan, Arc::new(WorkerPool::new(workers)))
+    }
+
+    /// Bind `plan` to an existing shared worker pool instead of spawning a
+    /// private one. Buffer pools stay per-executor (output buffer length is
+    /// plan-dimension-specific); only the threads are shared.
+    pub fn with_pool(plan: Arc<P>, pool: Arc<WorkerPool>) -> BatchExecutor<P> {
         BatchExecutor {
             plan,
-            pool: WorkerPool::new(workers),
+            pool,
             buffers: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// The executor's worker pool, for sharing with further executors via
+    /// [`BatchExecutor::with_pool`].
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     pub fn plan(&self) -> &P {
@@ -345,6 +366,31 @@ mod tests {
         let ys3 = exec.execute_batch_sharded(xs);
         assert_eq!(exec.pooled_buffers(), 0);
         assert_eq!(ys3.len(), 4);
+    }
+
+    #[test]
+    fn executors_share_one_worker_pool() {
+        let m = synth::qm7_like(5828);
+        let g = GridSummary::new(&m, 2);
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = Arc::new(compile(&m, &g, &scheme).unwrap());
+        let solo = BatchExecutor::new(plan.clone(), 3);
+        // a second executor rides on the first one's pool: same thread
+        // count, no new threads, and answers stay bit-identical
+        let shared = BatchExecutor::with_pool(plan, solo.pool().clone());
+        assert_eq!(shared.workers(), 3);
+        assert!(Arc::ptr_eq(solo.pool(), shared.pool()));
+        let xs: Vec<Vec<f64>> = (0..5).map(|i| vec![0.5 * i as f64; 22]).collect();
+        let a = solo.execute_batch(xs.clone());
+        let b = shared.execute_batch_sharded(xs);
+        assert_eq!(a, b, "shared-pool executor must be bit-identical");
+        // buffer pools are per-executor even when threads are shared
+        shared.recycle(b);
+        assert_eq!(solo.pooled_buffers(), 0);
+        assert_eq!(shared.pooled_buffers(), 5);
     }
 
     #[test]

@@ -102,6 +102,26 @@
 //! `CompositeExecutor` alias) is the deprecated path: new code should go
 //! through [`api::Deployment::executor`], which keeps the permutation,
 //! fleet, and provenance attached.
+//!
+//! ## Network serving
+//!
+//! The [`net`] subsystem scales the serving story from one bundle on
+//! stdin to many bundles behind a socket: a
+//! [`net::DeploymentRegistry`] holds N loaded deployments on one shared
+//! worker pool, and a [`net::NetServer`] speaks the same NDJSON dialect
+//! over TCP, routing each request by its `"tenant"` deployment id. Per
+//! tenant it adds bounded admission (typed `busy` rejections at the
+//! queue-depth limit), optional pre-execution deadlines (typed
+//! `deadline` rejections), live stats (`{"admin":"stats"}`), and
+//! zero-downtime bundle hot-swap
+//! (`{"admin":{"reload":{"id","bundle"}}}` — an atomic `Arc` swap;
+//! in-flight requests finish on the old plan). Socket answers stay
+//! bit-identical to [`api::Deployment::mvm`] per tenant, under
+//! concurrency and across a mid-stream swap; the `serve-net` CLI
+//! subcommand exposes it, and `serve-net --bench` self-checks that
+//! invariant under concurrent load (the CI `net-smoke` gate). Both
+//! transports share one request-dispatch core ([`api::dispatch`]), so
+//! error objects are byte-identical on stdin and socket.
 
 pub mod agent;
 pub mod api;
@@ -112,6 +132,7 @@ pub mod engine;
 pub mod gcn;
 pub mod graph;
 pub mod mapper;
+pub mod net;
 pub mod reorder;
 pub mod runtime;
 pub mod scheme;

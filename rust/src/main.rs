@@ -20,6 +20,9 @@
 //!                self-contained bundle JSON
 //!   serve      — load a bundle and serve NDJSON MVM requests from stdin
 //!                (responses + periodic stats on stdout) until EOF
+//!   serve-net  — multi-tenant TCP serving: N bundles behind one socket,
+//!                per-tenant admission control, stats, and live hot-swap
+//!                (--bench runs the self-checking concurrent load driver)
 //!
 //! Every training command takes `--backend {native,pjrt,auto}`: `native`
 //! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
@@ -77,7 +80,13 @@ USAGE: autogmap <subcommand> [options]
              [--workers N] [--reward-a F] [--reorder identity|cm|rcm]
              [--out bundle.json]
   serve      --bundle bundle.json [--workers N] [--batch-window N]
-             [--stats-every N] [--exec sharded|scalar]
+             [--stats-every N] [--exec sharded|scalar] [--max-line-bytes N]
+  serve-net  --bundles id=path[,id=path...] [--listen 127.0.0.1:7070]
+             [--workers N] [--queue-depth N] [--max-conns N]
+             [--max-line-bytes N] [--exec sharded|scalar]
+             [--bench] [--bench-clients N] [--bench-requests N]
+             [--bench-swap id=path] [--seed N]
+             [--bench-json BENCH_serve_net.json]
 
   global: --artifacts DIR (default: artifacts)
 
@@ -115,6 +124,27 @@ USAGE: autogmap <subcommand> [options]
     autogmap deploy --dataset rmat --nodes 10000 --strategy hier \\
         --controller qh882_dyn4 --out bundle.json
     autogmap serve --bundle bundle.json --workers 8 --batch-window 32
+  serve-net example (two graphs, one socket, live hot-swap):
+    autogmap deploy --dataset rmat --nodes 10000 --strategy hier \\
+        --controller qh882_dyn4 --out a.json
+    autogmap deploy --dataset rmat --nodes 10000 --strategy fixed \\
+        --block 4 --out b.json
+    autogmap serve-net --bundles graphA=a.json,graphB=b.json \\
+        --listen 127.0.0.1:7070 --workers 8 --queue-depth 32
+  speaks one JSON object per line over TCP: {\"tenant\": \"graphA\",
+  \"id\": 1, \"x\": [..]} answers {\"tenant\": \"graphA\", \"id\": 1,
+  \"y\": [..]}; {\"admin\": \"stats\"} returns per-tenant rps/queue/
+  rejection counters; {\"admin\": {\"reload\": {\"id\": \"graphA\",
+  \"bundle\": \"remapped.json\"}}} hot-swaps a tenant's bundle with zero
+  dropped requests (in-flight requests finish on the old plan). Requests
+  over a tenant's --queue-depth get typed {\"error\": {\"kind\":
+  \"busy\"}} rejections; a request's optional \"deadline_ms\" budget is
+  enforced before execution (kind \"deadline\"). `serve-net --bench`
+  starts the server in-process, drives --bench-clients concurrent
+  clients for --bench-requests requests each (optionally hot-swapping
+  --bench-swap id=path mid-stream), verifies every socket answer
+  bit-matches Deployment::mvm, and writes BENCH_serve_net.json.
+
   `deploy` runs graph -> reorder -> map -> compile -> fleet through the
   api facade and writes one self-contained bundle (the v2 plan arena, the
   composite's digital spill, the reordering permutation, fleet + worker
@@ -165,9 +195,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "scheme", "plan", "save-plan", "banks", "policy", "workers", "trace", "batch",
         "requests", "trace-seed", "bench-json", "backend", "nodes", "degree", "overlap",
         "rounds", "kernel", "exec", "assert-speedup", "strategy", "block", "bundle",
-        "batch-window", "stats-every",
+        "batch-window", "stats-every", "listen", "bundles", "queue-depth", "max-conns",
+        "max-line-bytes", "bench-clients", "bench-requests", "bench-swap",
     ];
-    let flag_opts = ["verbose", "help"];
+    let flag_opts = ["verbose", "help", "bench"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
         .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
     if args.flag("help") {
@@ -189,6 +220,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "map-large" => cmd_map_large(&args),
         "deploy" => cmd_deploy(&args),
         "serve" => cmd_serve(&args),
+        "serve-net" => cmd_serve_net(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -642,6 +674,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "scalar" => false,
         other => anyhow::bail!("unknown exec mode {other:?} (scalar|sharded)"),
     };
+    let defaults = ServeOptions::default();
     let opts = ServeOptions {
         workers: args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(0),
         batch_window: args
@@ -651,6 +684,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .max(1),
         stats_every: args.get_usize("stats-every").map_err(anyhow::Error::msg)?.unwrap_or(100),
         sharded,
+        max_line_bytes: args
+            .get_usize("max-line-bytes")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.max_line_bytes)
+            .max(1),
     };
     let s = dep.stats();
     eprintln!(
@@ -678,6 +716,131 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.rps,
         report.nnz_per_s
     );
+    Ok(())
+}
+
+/// Parse a `--bundles` / `--bench-swap` style `id=path[,id=path...]`
+/// list.
+fn parse_bundle_list(spec: &str) -> anyhow::Result<Vec<(String, PathBuf)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (id, path) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bundle spec {part:?} is not id=path"))?;
+        anyhow::ensure!(!id.trim().is_empty(), "bundle spec {part:?} has an empty id");
+        out.push((id.trim().to_string(), PathBuf::from(path.trim())));
+    }
+    anyhow::ensure!(!out.is_empty(), "bundle list {spec:?} names no bundles");
+    Ok(out)
+}
+
+/// `serve-net`: the multi-tenant TCP serving tier — load every
+/// `--bundles id=path` into a [`autogmap::net::DeploymentRegistry`] and
+/// serve NDJSON-over-socket until killed; or, with `--bench`, run the
+/// self-checking concurrent load driver and exit.
+fn cmd_serve_net(args: &Args) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use autogmap::net::{
+        run_net_bench, DeploymentRegistry, NetBenchOptions, NetOptions, NetServer,
+        RegistryOptions,
+    };
+    use std::sync::Arc;
+
+    let bundles =
+        parse_bundle_list(args.get("bundles").context("serve-net needs --bundles id=path,...")?)?;
+    let sharded = match args.get_or("exec", "sharded") {
+        "sharded" => true,
+        "scalar" => false,
+        other => anyhow::bail!("unknown exec mode {other:?} (scalar|sharded)"),
+    };
+    let workers = args.get_usize("workers").map_err(anyhow::Error::msg)?.unwrap_or(8).max(1);
+    let queue_depth =
+        args.get_usize("queue-depth").map_err(anyhow::Error::msg)?.unwrap_or(32).max(1);
+
+    if args.flag("bench") {
+        let swap = match args.get("bench-swap") {
+            Some(spec) => {
+                let mut list = parse_bundle_list(spec)?;
+                anyhow::ensure!(list.len() == 1, "--bench-swap takes exactly one id=path");
+                Some(list.remove(0))
+            }
+            None => None,
+        };
+        let defaults = NetBenchOptions::default();
+        let opts = NetBenchOptions {
+            bundles,
+            listen: args.get_or("listen", "127.0.0.1:0").to_string(),
+            workers,
+            queue_depth,
+            sharded,
+            clients: args
+                .get_usize("bench-clients")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(defaults.clients)
+                .max(1),
+            requests: args
+                .get_usize("bench-requests")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(defaults.requests)
+                .max(1),
+            swap,
+            seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(defaults.seed),
+            bench_json: PathBuf::from(args.get_or("bench-json", "BENCH_serve_net.json")),
+        };
+        let report = run_net_bench(&opts)?;
+        println!(
+            "serve-net bench: {} requests over {} tenants x {} clients in {:.2}s -> {:.0} req/s \
+             (hot-swap: {}); every answer bit-matched Deployment::mvm",
+            report.served,
+            report.tenants,
+            opts.clients,
+            report.wall_s,
+            report.rps,
+            if report.swapped { "yes" } else { "no" }
+        );
+        println!("wrote {}", opts.bench_json.display());
+        return Ok(());
+    }
+
+    let registry = Arc::new(DeploymentRegistry::new(&RegistryOptions {
+        workers,
+        queue_depth,
+        sharded,
+    }));
+    for (id, path) in &bundles {
+        let tenant = registry.load_bundle(id, path)?;
+        let entry = tenant.entry();
+        eprintln!(
+            "tenant {id}: dim {}, {} nnz, queue depth {} ({})",
+            entry.dim(),
+            entry.nnz(),
+            tenant.queue_depth(),
+            path.display()
+        );
+    }
+    let net_defaults = NetOptions::default();
+    let opts = NetOptions {
+        max_conns: args
+            .get_usize("max-conns")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(net_defaults.max_conns)
+            .max(1),
+        max_line_bytes: args
+            .get_usize("max-line-bytes")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(net_defaults.max_line_bytes)
+            .max(1),
+    };
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let server = NetServer::start(registry, listen, &opts)?;
+    eprintln!(
+        "serve-net listening on {} ({} workers, {} max conns) — NDJSON per line; \
+         {{\"admin\":\"stats\"}} for stats, ctrl-c to stop",
+        server.addr(),
+        workers,
+        opts.max_conns
+    );
+    server.join();
     Ok(())
 }
 

@@ -1,0 +1,308 @@
+//! The `serve-net --bench` driver: an end-to-end, self-checking load run
+//! against a real socket.
+//!
+//! It loads the given bundles into a [`DeploymentRegistry`], starts an
+//! in-process [`NetServer`], and drives N concurrent client threads over
+//! real TCP connections — each client round-robins the tenants and checks
+//! **every** response bit-exactly against `Deployment::mvm` on the same
+//! deployment the registry serves. With `--bench-swap`, client 0 issues an
+//! admin reload halfway through its stream; responses for the swapped
+//! tenant must then match the old *or* the new oracle (a re-mapped bundle
+//! of the same matrix is a different summation order, so the two
+//! generations are distinct bit patterns), and a post-swap probe on a
+//! fresh connection must match the new oracle exactly. Any dropped
+//! connection, error response, or mismatched float fails the run — this
+//! is the CI `net-smoke` gate as well as the perf ledger
+//! (`BENCH_serve_net.json`: per-tenant rps/nnz_per_s under concurrency).
+
+use super::registry::{DeploymentRegistry, RegistryOptions, TenantEntry};
+use super::server::{NetOptions, NetServer};
+use crate::api::{Deployment, Error, Result};
+use crate::util::bench::write_bench_json;
+use crate::util::json::{num_arr, obj, Json};
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration for one bench run.
+#[derive(Clone, Debug)]
+pub struct NetBenchOptions {
+    /// (deployment id, bundle path) pairs to register
+    pub bundles: Vec<(String, PathBuf)>,
+    /// listen address; `127.0.0.1:0` picks a free port
+    pub listen: String,
+    /// shared-pool worker threads
+    pub workers: usize,
+    /// per-tenant queue depth (keep >= clients so admission never rejects
+    /// the bench's own well-behaved traffic)
+    pub queue_depth: usize,
+    /// band-sharded execution
+    pub sharded: bool,
+    /// concurrent client connections
+    pub clients: usize,
+    /// requests per client
+    pub requests: usize,
+    /// mid-stream hot-swap: (tenant id, replacement bundle)
+    pub swap: Option<(String, PathBuf)>,
+    /// request-vector rng seed
+    pub seed: u64,
+    /// where to write the machine-readable ledger
+    pub bench_json: PathBuf,
+}
+
+impl Default for NetBenchOptions {
+    fn default() -> NetBenchOptions {
+        NetBenchOptions {
+            bundles: Vec::new(),
+            listen: "127.0.0.1:0".into(),
+            workers: 4,
+            queue_depth: 32,
+            sharded: true,
+            clients: 2,
+            requests: 200,
+            swap: None,
+            seed: 0x5eed,
+            bench_json: PathBuf::from("BENCH_serve_net.json"),
+        }
+    }
+}
+
+/// What a finished bench run measured. A report is only returned when
+/// every response was bit-identical to its oracle — mismatches are an
+/// `Err`, not a statistic.
+#[derive(Clone, Debug)]
+pub struct NetBenchReport {
+    pub served: u64,
+    pub tenants: usize,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub swapped: bool,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: SocketAddr) -> std::result::Result<Conn, String> {
+        let s = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let r = s.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        Ok(Conn {
+            reader: BufReader::new(r),
+            writer: BufWriter::new(s),
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> std::result::Result<Json, String> {
+        writeln!(self.writer, "{line}").map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request (dropped response)".into());
+        }
+        Json::parse(buf.trim()).map_err(|e| format!("bad response JSON: {e}"))
+    }
+}
+
+fn parse_y(resp: &Json) -> std::result::Result<Vec<f64>, String> {
+    if resp.get("error") != &Json::Null {
+        return Err(format!("error response: {}", resp.get("error").to_string()));
+    }
+    resp.get("y")
+        .as_arr()
+        .ok_or_else(|| format!("response carries no \"y\": {}", resp.to_string()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "non-numeric element in y".to_string()))
+        .collect()
+}
+
+/// Run the bench (see module docs). Returns the aggregate report and
+/// writes `BENCH_serve_net.json`; any correctness violation is an error.
+pub fn run_net_bench(opts: &NetBenchOptions) -> Result<NetBenchReport> {
+    if opts.bundles.is_empty() {
+        return Err(Error::Validate("bench needs at least one --bundles id=path".into()));
+    }
+    let registry = Arc::new(DeploymentRegistry::new(&RegistryOptions {
+        workers: opts.workers,
+        queue_depth: opts.queue_depth.max(opts.clients.max(1)),
+        sharded: opts.sharded,
+    }));
+    let mut oracles: BTreeMap<String, Arc<TenantEntry>> = BTreeMap::new();
+    for (id, path) in &opts.bundles {
+        registry.load_bundle(id, path)?;
+        oracles.insert(id.clone(), registry.get(id)?.entry());
+    }
+    // the swap target's oracle: the same bundle the admin reload will
+    // load, loaded here once (bundle loads are deterministic, so the two
+    // loads serve bit-identically)
+    let swap_oracle: Option<(String, Arc<Deployment>)> = match &opts.swap {
+        Some((id, path)) => {
+            if !oracles.contains_key(id) {
+                return Err(Error::Validate(format!(
+                    "--bench-swap tenant {id:?} is not among the --bundles ids"
+                )));
+            }
+            Some((id.clone(), Arc::new(Deployment::load(path)?)))
+        }
+        None => None,
+    };
+
+    let server = NetServer::start(registry.clone(), &opts.listen, &NetOptions::default())?;
+    let addr = server.addr();
+    let ids: Vec<String> = opts.bundles.iter().map(|b| b.0.clone()).collect();
+    let clients = opts.clients.max(1);
+    let requests = opts.requests.max(1);
+    let oracles = Arc::new(oracles);
+    let swap_oracle = Arc::new(swap_oracle);
+    let swap_req: Option<String> = opts.swap.as_ref().map(|(id, path)| {
+        obj(vec![(
+            "admin",
+            obj(vec![(
+                "reload",
+                obj(vec![
+                    ("id", Json::Str(id.clone())),
+                    ("bundle", Json::Str(path.display().to_string())),
+                ]),
+            )]),
+        )])
+        .to_string()
+    });
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let ids = ids.clone();
+        let oracles = oracles.clone();
+        let swap_oracle = swap_oracle.clone();
+        let swap_req = swap_req.clone();
+        let seed = opts.seed;
+        let handle = std::thread::spawn(move || -> std::result::Result<u64, String> {
+            let mut conn = Conn::connect(addr)?;
+            let mut rng = Pcg64::new(seed, c as u64);
+            let mut served = 0u64;
+            for r in 0..requests {
+                let tenant = &ids[(r + c) % ids.len()];
+                let entry = &oracles[tenant];
+                let x: Vec<f64> =
+                    (0..entry.dim()).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                let want_old = entry
+                    .deployment()
+                    .mvm(&x)
+                    .map_err(|e| format!("oracle mvm: {e}"))?;
+                let want_new = match swap_oracle.as_ref() {
+                    Some((sid, dep)) if sid == tenant => {
+                        Some(dep.mvm(&x).map_err(|e| format!("swap oracle mvm: {e}"))?)
+                    }
+                    _ => None,
+                };
+                let req = obj(vec![
+                    ("tenant", Json::Str(tenant.clone())),
+                    ("id", Json::Num(r as f64)),
+                    ("x", num_arr(x)),
+                ]);
+                let resp = conn.roundtrip(&req.to_string())?;
+                let got = parse_y(&resp).map_err(|e| format!("client {c} req {r}: {e}"))?;
+                let ok = got == want_old || want_new.as_deref() == Some(&got[..]);
+                if !ok {
+                    return Err(format!(
+                        "client {c} req {r} tenant {tenant}: response does not bit-match \
+                         either generation's Deployment::mvm"
+                    ));
+                }
+                served += 1;
+                // client 0 hot-swaps mid-stream
+                if c == 0 && r + 1 == (requests / 2).max(1) {
+                    if let Some(line) = &swap_req {
+                        let ack = conn.roundtrip(line)?;
+                        if ack.get("admin").as_str() != Some("reload") {
+                            return Err(format!("reload rejected: {}", ack.to_string()));
+                        }
+                        if ack.get("generation").as_i64().unwrap_or(0) < 2 {
+                            return Err("reload did not bump the generation".into());
+                        }
+                    }
+                }
+            }
+            Ok(served)
+        });
+        handles.push(handle);
+    }
+    let mut served_total = 0u64;
+    let mut failures: Vec<String> = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(Ok(n)) => served_total += n,
+            Ok(Err(e)) => failures.push(e),
+            Err(_) => failures.push("client thread panicked".into()),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    if !failures.is_empty() {
+        return Err(Error::Validate(format!(
+            "{} of {clients} clients failed; first: {}",
+            failures.len(),
+            failures[0]
+        )));
+    }
+
+    // post-swap probe: a *new* request must be served by the new
+    // generation, bit-identical to the reloaded bundle's own mvm
+    let mut probe = Conn::connect(addr).map_err(Error::Validate)?;
+    if let Some((sid, new_dep)) = swap_oracle.as_ref() {
+        let mut rng = Pcg64::new(opts.seed ^ 0x9e37_79b9_7f4a_7c15, 999);
+        let x: Vec<f64> =
+            (0..oracles[sid].dim()).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let req = obj(vec![
+            ("tenant", Json::Str(sid.clone())),
+            ("id", Json::Str("post-swap-probe".into())),
+            ("x", num_arr(x.clone())),
+        ]);
+        let resp = probe.roundtrip(&req.to_string()).map_err(Error::Validate)?;
+        let got = parse_y(&resp).map_err(Error::Validate)?;
+        let want = new_dep.mvm(&x)?;
+        if got != want {
+            return Err(Error::Validate(
+                "post-swap probe did not match the new generation's Deployment::mvm".into(),
+            ));
+        }
+        served_total += 1;
+    }
+    let stats = probe
+        .roundtrip(r#"{"admin":"stats"}"#)
+        .map_err(Error::Validate)?
+        .get("stats")
+        .clone();
+    drop(probe);
+
+    let report = NetBenchReport {
+        served: served_total,
+        tenants: ids.len(),
+        wall_s,
+        rps: served_total as f64 / wall_s.max(1e-9),
+        swapped: opts.swap.is_some(),
+    };
+    write_bench_json(
+        &opts.bench_json,
+        vec![
+            ("bench", Json::Str("serve_net".into())),
+            ("clients", Json::Num(clients as f64)),
+            ("requests_per_client", Json::Num(requests as f64)),
+            ("tenants", Json::Num(ids.len() as f64)),
+            ("workers", Json::Num(registry.workers() as f64)),
+            ("queue_depth", Json::Num(opts.queue_depth as f64)),
+            ("sharded", Json::Bool(opts.sharded)),
+            ("hot_swap", Json::Bool(report.swapped)),
+            ("served", Json::Num(report.served as f64)),
+            ("wall_s", Json::Num(report.wall_s)),
+            ("total_rps", Json::Num(report.rps)),
+            ("tenant_stats", stats),
+        ],
+    )?;
+    Ok(report)
+}

@@ -1,0 +1,73 @@
+//! Multi-tenant network serving tier: a TCP front end over a registry of
+//! deployed bundles, with admission control and live hot-swap.
+//!
+//! The stdin `serve` loop amortizes one graph's mapping cost over many
+//! `y = Ax` queries; this tier amortizes it over many *graphs and
+//! clients* at once. A [`DeploymentRegistry`] owns N loaded bundles, each
+//! serving behind one shared worker pool; a [`NetServer`] accepts TCP
+//! connections (one handler thread each, capped) and routes NDJSON
+//! requests by deployment id. The `serve-net` CLI subcommand wires the
+//! two together.
+//!
+//! # Wire protocol
+//!
+//! One JSON object per `\n`-terminated line, one response line per
+//! request line, on the same connection, in order. Blank lines are
+//! skipped; a line over the configured byte cap is drained and answered
+//! with a `parse` error (the connection stays usable). All error objects
+//! are exactly the stdin loop's dialect
+//! (`{"kind": <api::Error::kind()>, "message": ...}`) — both transports
+//! are built on [`crate::api::dispatch`].
+//!
+//! **Tenant requests** name a deployment id and carry one vector or an
+//! explicit batch, with an optional pre-execution deadline budget:
+//!
+//! ```text
+//! → {"tenant":"graphA","id":1,"x":[...dim floats...]}
+//! ← {"tenant":"graphA","id":1,"y":[...]}
+//! → {"tenant":"graphA","id":2,"xs":[[...],[...]],"deadline_ms":50}
+//! ← {"tenant":"graphA","id":2,"ys":[[...],[...]]}
+//! ← {"tenant":"graphA","id":3,"error":{"kind":"busy","message":...}}
+//! ```
+//!
+//! Rejections are always typed error *responses*, never dropped
+//! connections: `busy` when the tenant's bounded queue is at its depth
+//! limit (admission happens before any execution), `deadline` when the
+//! request's `deadline_ms` budget expired before execution began,
+//! `validate` for unknown tenants (the message names the deployed ids)
+//! and malformed vectors (length mismatches name both lengths).
+//!
+//! **Admin requests** query or mutate the registry:
+//!
+//! ```text
+//! → {"admin":"stats"}
+//! ← {"admin":"stats","stats":{"graphA":{"served":..,"rps":..,
+//!      "nnz_per_s":..,"inflight":..,"queue_depth":..,
+//!      "rejected_busy":..,"rejected_deadline":..,"generation":..},..}}
+//! → {"admin":{"reload":{"id":"graphA","bundle":"remapped.json"}}}
+//! ← {"admin":"reload","id":"graphA","generation":2,"dim":10000}
+//! ```
+//!
+//! `reload` is the live hot-swap: the bundle is loaded from disk outside
+//! any lock, then installed with an atomic `Arc` swap. In-flight requests
+//! finish on the generation they were admitted against; requests arriving
+//! after the ack are served by the new one. The serving invariant — every
+//! socket answer is bit-identical to [`crate::api::Deployment::mvm`] on
+//! the generation that served it — holds across the swap.
+//!
+//! # Pieces
+//!
+//! - [`DeploymentRegistry`] / [`Tenant`] / [`TenantEntry`] — ownership,
+//!   routing, admission, counters, hot-swap ([`registry`]).
+//! - [`NetServer`] / [`NetOptions`] — the accept loop and per-connection
+//!   handlers ([`server`]).
+//! - [`run_net_bench`] — the self-checking concurrent load driver behind
+//!   `serve-net --bench` and the CI `net-smoke` job ([`bench`]).
+
+pub mod bench;
+pub mod registry;
+pub mod server;
+
+pub use bench::{run_net_bench, NetBenchOptions, NetBenchReport};
+pub use registry::{AdmitGuard, DeploymentRegistry, RegistryOptions, Tenant, TenantEntry};
+pub use server::{NetOptions, NetServer, CONN_CAP_TENANT};

@@ -1,0 +1,486 @@
+//! The multi-tenant deployment registry: N loaded bundles behind one
+//! worker pool, with per-tenant admission control and live hot-swap.
+//!
+//! A [`DeploymentRegistry`] owns one [`Tenant`] per deployment id. Each
+//! tenant holds its *current* [`TenantEntry`] — the loaded
+//! [`Deployment`] plus a [`BatchExecutor`] bound to the registry-wide
+//! shared [`WorkerPool`] — behind an `RwLock<Arc<..>>`:
+//!
+//! - **Serving** clones the `Arc` out of the lock
+//!   ([`Tenant::entry`]) *before* executing, so a request always runs to
+//!   completion against one consistent plan no matter what the registry
+//!   does concurrently.
+//! - **Hot-swap** ([`DeploymentRegistry::reload`]) loads the new bundle
+//!   from disk *outside* any lock, then replaces the `Arc` under a brief
+//!   write lock. In-flight requests finish on the old entry (they hold
+//!   their own `Arc`); every request admitted after the swap sees the new
+//!   one. Nothing is dropped, nothing is answered by a half-installed
+//!   plan.
+//!
+//! Admission control is a bounded in-flight counter per tenant: a request
+//! [`Tenant::admit`]ted at the depth limit gets a typed
+//! [`Error::Busy`] *before* any execution, and the RAII [`AdmitGuard`]
+//! releases the slot however the request ends. All tenants share one
+//! worker pool (threads scale with the machine, not with the number of
+//! deployed graphs); per-tenant output-buffer pools stay private because
+//! buffer length is plan-dimension-specific.
+
+use crate::api::dispatch;
+use crate::api::{DeployedPlan, Deployment, Error, Result};
+use crate::engine::{BatchExecutor, Servable};
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// Registry-wide serving configuration.
+#[derive(Clone, Debug)]
+pub struct RegistryOptions {
+    /// worker threads in the shared pool (all tenants execute on it)
+    pub workers: usize,
+    /// per-tenant in-flight request cap; at the limit new requests get a
+    /// typed `busy` rejection
+    pub queue_depth: usize,
+    /// band-sharded multi-RHS execution (false = scalar per-request mode)
+    pub sharded: bool,
+}
+
+impl Default for RegistryOptions {
+    fn default() -> RegistryOptions {
+        RegistryOptions {
+            workers: 8,
+            queue_depth: 32,
+            sharded: true,
+        }
+    }
+}
+
+/// One immutable generation of a tenant: the deployment and the executor
+/// serving it. Swapped wholesale on reload; never mutated in place.
+pub struct TenantEntry {
+    deployment: Arc<Deployment>,
+    executor: BatchExecutor<DeployedPlan>,
+    generation: u64,
+    bundle: Option<PathBuf>,
+}
+
+impl TenantEntry {
+    /// The deployment this generation serves (also the bit-identity
+    /// oracle: socket answers must equal `deployment().mvm(x)`).
+    pub fn deployment(&self) -> &Arc<Deployment> {
+        &self.deployment
+    }
+
+    /// Request/response vector length.
+    pub fn dim(&self) -> usize {
+        self.deployment.plan().dim()
+    }
+
+    /// Non-zeros one MVM touches (throughput accounting).
+    pub fn nnz(&self) -> u64 {
+        self.deployment.plan().nnz()
+    }
+
+    /// Monotonic per-tenant generation counter; bumped by every reload.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The bundle file this generation was loaded from, if any.
+    pub fn bundle(&self) -> Option<&Path> {
+        self.bundle.as_deref()
+    }
+
+    /// Execute a request batch against this generation: permute in,
+    /// run on the shared pool, permute back to original node ids.
+    pub fn execute(&self, xs: Vec<Vec<f64>>, sharded: bool) -> Vec<Vec<f64>> {
+        dispatch::execute_permuted(&self.deployment, &self.executor, xs, sharded)
+    }
+}
+
+/// Per-tenant serving state: the current entry, the admission counter,
+/// and monotonic traffic counters (all atomics — stats never block
+/// serving).
+pub struct Tenant {
+    name: String,
+    queue_depth: usize,
+    current: RwLock<Arc<TenantEntry>>,
+    inflight: AtomicUsize,
+    served: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_deadline: AtomicU64,
+    served_nnz: AtomicU64,
+    t0: Instant,
+}
+
+/// RAII admission slot: dropping it (success or failure, panic included)
+/// releases the tenant's in-flight slot.
+pub struct AdmitGuard {
+    tenant: Arc<Tenant>,
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        self.tenant.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Tenant {
+    fn new(name: &str, queue_depth: usize, entry: Arc<TenantEntry>) -> Tenant {
+        Tenant {
+            name: name.to_string(),
+            queue_depth: queue_depth.max(1),
+            current: RwLock::new(entry),
+            inflight: AtomicUsize::new(0),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected_busy: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            served_nnz: AtomicU64::new(0),
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// Requests currently admitted and not yet finished.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Snapshot the current generation. Callers execute against the
+    /// returned `Arc` — a concurrent reload cannot pull the plan out from
+    /// under them.
+    pub fn entry(&self) -> Arc<TenantEntry> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Try to claim an in-flight slot. At the depth limit this is a typed
+    /// [`Error::Busy`] — the caller rejected the request before any work.
+    pub fn admit(self: &Arc<Tenant>) -> Result<AdmitGuard> {
+        let depth = self.queue_depth;
+        let claimed = self
+            .inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < depth).then_some(n + 1)
+            })
+            .is_ok();
+        if claimed {
+            Ok(AdmitGuard {
+                tenant: self.clone(),
+            })
+        } else {
+            Err(Error::Busy {
+                tenant: self.name.clone(),
+                depth,
+            })
+        }
+    }
+
+    /// Account a successfully served batch of `requests` MVMs.
+    pub fn record_served(&self, requests: u64, nnz_per_request: u64) {
+        self.served.fetch_add(requests, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.served_nnz.fetch_add(requests * nnz_per_request, Ordering::Relaxed);
+    }
+
+    /// Account a failed request under the right rejection counter.
+    pub fn record_failure(&self, err: &Error) {
+        let counter = match err {
+            Error::Busy { .. } => &self.rejected_busy,
+            Error::Deadline { .. } => &self.rejected_deadline,
+            _ => &self.errors,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Swap in a new generation built by `make` (which receives the next
+    /// generation number) under the tenant's write lock.
+    fn swap_with(&self, make: impl FnOnce(u64) -> Arc<TenantEntry>) -> Arc<TenantEntry> {
+        let mut cur = self.current.write().unwrap();
+        let entry = make(cur.generation + 1);
+        *cur = entry.clone();
+        entry
+    }
+
+    /// The per-tenant stats object the `{"admin":"stats"}` wire request
+    /// returns: traffic rates, queue state, rejection counts, generation.
+    pub fn stats_json(&self) -> Json {
+        let entry = self.entry();
+        let wall = self.t0.elapsed().as_secs_f64().max(1e-9);
+        let served = self.served.load(Ordering::Relaxed);
+        let mut map = BTreeMap::new();
+        map.insert("served".into(), Json::Num(served as f64));
+        map.insert(
+            "batches".into(),
+            Json::Num(self.batches.load(Ordering::Relaxed) as f64),
+        );
+        map.insert(
+            "errors".into(),
+            Json::Num(self.errors.load(Ordering::Relaxed) as f64),
+        );
+        map.insert(
+            "rejected_busy".into(),
+            Json::Num(self.rejected_busy.load(Ordering::Relaxed) as f64),
+        );
+        map.insert(
+            "rejected_deadline".into(),
+            Json::Num(self.rejected_deadline.load(Ordering::Relaxed) as f64),
+        );
+        map.insert("inflight".into(), Json::Num(self.inflight() as f64));
+        map.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        map.insert("generation".into(), Json::Num(entry.generation as f64));
+        map.insert("dim".into(), Json::Num(entry.dim() as f64));
+        map.insert("nnz".into(), Json::Num(entry.nnz() as f64));
+        map.insert("rps".into(), Json::Num(served as f64 / wall));
+        map.insert(
+            "nnz_per_s".into(),
+            Json::Num(self.served_nnz.load(Ordering::Relaxed) as f64 / wall),
+        );
+        map.insert("wall_s".into(), Json::Num(wall));
+        Json::Obj(map)
+    }
+}
+
+/// The registry: deployment-id → [`Tenant`], one shared worker pool.
+pub struct DeploymentRegistry {
+    tenants: RwLock<BTreeMap<String, Arc<Tenant>>>,
+    pool: Arc<WorkerPool>,
+    queue_depth: usize,
+    sharded: bool,
+}
+
+impl DeploymentRegistry {
+    pub fn new(opts: &RegistryOptions) -> DeploymentRegistry {
+        DeploymentRegistry {
+            tenants: RwLock::new(BTreeMap::new()),
+            pool: Arc::new(WorkerPool::new(opts.workers.max(1))),
+            queue_depth: opts.queue_depth.max(1),
+            sharded: opts.sharded,
+        }
+    }
+
+    /// Threads in the shared pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Whether tenants execute in the band-sharded multi-RHS mode.
+    pub fn sharded(&self) -> bool {
+        self.sharded
+    }
+
+    /// The shared pool (for binding further executors to it).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    fn make_entry(
+        &self,
+        dep: Deployment,
+        generation: u64,
+        bundle: Option<PathBuf>,
+    ) -> Arc<TenantEntry> {
+        let deployment = Arc::new(dep);
+        let executor = BatchExecutor::with_pool(deployment.plan_arc(), self.pool.clone());
+        Arc::new(TenantEntry {
+            deployment,
+            executor,
+            generation,
+            bundle,
+        })
+    }
+
+    /// Register (or wholesale replace, counters included) a tenant
+    /// serving `dep` under `id`. Prefer [`DeploymentRegistry::reload`] for
+    /// replacing a live tenant — it keeps the counters and bumps the
+    /// generation.
+    pub fn insert(&self, id: &str, dep: Deployment, bundle: Option<PathBuf>) -> Arc<Tenant> {
+        let entry = self.make_entry(dep, 1, bundle);
+        let tenant = Arc::new(Tenant::new(id, self.queue_depth, entry));
+        self.tenants.write().unwrap().insert(id.to_string(), tenant.clone());
+        tenant
+    }
+
+    /// Load a bundle file and register it under `id`.
+    pub fn load_bundle(&self, id: &str, path: &Path) -> Result<Arc<Tenant>> {
+        let dep = Deployment::load(path)?;
+        Ok(self.insert(id, dep, Some(path.to_path_buf())))
+    }
+
+    /// Look up a tenant; unknown ids get a validation error naming the
+    /// deployed tenants so clients can self-correct.
+    pub fn get(&self, id: &str) -> Result<Arc<Tenant>> {
+        let tenants = self.tenants.read().unwrap();
+        tenants.get(id).cloned().ok_or_else(|| {
+            let known: Vec<&str> = tenants.keys().map(|k| k.as_str()).collect();
+            Error::Validate(format!("unknown tenant {id:?}; deployed tenants: {known:?}"))
+        })
+    }
+
+    /// Registered deployment ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Hot-swap: load `path` from disk (outside every lock — a slow disk
+    /// never stalls serving), then atomically install it as `id`'s new
+    /// generation. An existing tenant keeps its counters and in-flight
+    /// requests (they finish on the old entry); an unknown `id` is
+    /// registered fresh. Returns the installed entry.
+    pub fn reload(&self, id: &str, path: &Path) -> Result<Arc<TenantEntry>> {
+        let dep = Deployment::load(path)?;
+        let existing = self.tenants.read().unwrap().get(id).cloned();
+        match existing {
+            Some(tenant) => Ok(tenant.swap_with(|generation| {
+                self.make_entry(dep, generation, Some(path.to_path_buf()))
+            })),
+            None => Ok(self.load_tenant_entry(id, dep, path)),
+        }
+    }
+
+    fn load_tenant_entry(&self, id: &str, dep: Deployment, path: &Path) -> Arc<TenantEntry> {
+        let tenant = self.insert(id, dep, Some(path.to_path_buf()));
+        tenant.entry()
+    }
+
+    /// Per-tenant stats keyed by deployment id — the `{"admin":"stats"}`
+    /// response body.
+    pub fn stats_json(&self) -> Json {
+        let tenants = self.tenants.read().unwrap();
+        let mut map = BTreeMap::new();
+        for (id, t) in tenants.iter() {
+            map.insert(id.clone(), t.stats_json());
+        }
+        Json::Obj(map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{DeploymentBuilder, Source, Strategy};
+    use crate::graph::synth;
+
+    fn small_dep(block: usize) -> Deployment {
+        DeploymentBuilder::new(
+            Source::Matrix {
+                label: "qm7".into(),
+                matrix: synth::qm7_like(5828),
+            },
+            Strategy::FixedBlock { block },
+        )
+        .grid(2)
+        .workers(2)
+        .build()
+        .unwrap()
+    }
+
+    fn small_registry(queue_depth: usize) -> DeploymentRegistry {
+        DeploymentRegistry::new(&RegistryOptions {
+            workers: 2,
+            queue_depth,
+            sharded: true,
+        })
+    }
+
+    #[test]
+    fn admission_is_bounded_and_raii_releases() {
+        let reg = small_registry(1);
+        reg.insert("g", small_dep(1), None);
+        let tenant = reg.get("g").unwrap();
+        let guard = tenant.admit().unwrap();
+        assert_eq!(tenant.inflight(), 1);
+        // depth 1: the second admit is a typed busy rejection
+        let err = tenant.admit().unwrap_err();
+        assert_eq!(err.kind(), "busy");
+        assert!(err.to_string().contains("\"g\""), "{err}");
+        tenant.record_failure(&err);
+        drop(guard);
+        assert_eq!(tenant.inflight(), 0);
+        // the slot is free again
+        let _g2 = tenant.admit().unwrap();
+        let stats = tenant.stats_json();
+        assert_eq!(stats.get("rejected_busy").as_i64(), Some(1));
+        assert_eq!(stats.get("queue_depth").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn unknown_tenant_error_names_known_ids() {
+        let reg = small_registry(4);
+        reg.insert("alpha", small_dep(1), None);
+        let err = reg.get("beta").unwrap_err();
+        assert_eq!(err.kind(), "validate");
+        let msg = err.to_string();
+        assert!(msg.contains("beta") && msg.contains("alpha"), "{msg}");
+        assert_eq!(reg.ids(), vec!["alpha".to_string()]);
+    }
+
+    #[test]
+    fn reload_swaps_generation_and_keeps_old_entries_alive() {
+        let dir = std::env::temp_dir().join(format!("autogmap_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = dir.join("swap.json");
+        small_dep(2).save(&bundle).unwrap();
+
+        let reg = small_registry(4);
+        reg.insert("g", small_dep(1), None);
+        let tenant = reg.get("g").unwrap();
+        let old = tenant.entry();
+        assert_eq!(old.generation(), 1);
+
+        let x: Vec<f64> = (0..old.dim()).map(|i| i as f64 * 0.25 - 2.0).collect();
+        let want_old = old.deployment().mvm(&x).unwrap();
+
+        let installed = reg.reload("g", &bundle).unwrap();
+        assert_eq!(installed.generation(), 2);
+        assert_eq!(tenant.entry().generation(), 2);
+        assert_eq!(installed.bundle(), Some(bundle.as_path()));
+
+        // the old generation still answers (in-flight requests finish on
+        // it), and both generations agree with their own oracles exactly
+        let ys_old = old.execute(vec![x.clone()], true);
+        assert_eq!(ys_old[0], want_old);
+        let want_new = installed.deployment().mvm(&x).unwrap();
+        let ys_new = tenant.entry().execute(vec![x.clone()], false);
+        assert_eq!(ys_new[0], want_new);
+
+        // reloading an unregistered id registers it
+        let t2 = reg.reload("h", &bundle).unwrap();
+        assert_eq!(t2.generation(), 1);
+        assert_eq!(reg.ids(), vec!["g".to_string(), "h".to_string()]);
+        let _ = std::fs::remove_file(&bundle);
+    }
+
+    #[test]
+    fn tenants_share_one_pool_and_stats_cover_all() {
+        let reg = small_registry(8);
+        reg.insert("a", small_dep(1), None);
+        reg.insert("b", small_dep(2), None);
+        assert_eq!(reg.workers(), 2);
+        let ea = reg.get("a").unwrap().entry();
+        let eb = reg.get("b").unwrap().entry();
+        let x: Vec<f64> = (0..ea.dim()).map(|i| (i % 7) as f64 - 3.0).collect();
+        let ya = ea.execute(vec![x.clone()], true);
+        let yb = eb.execute(vec![x.clone()], true);
+        assert_eq!(ya[0], ea.deployment().mvm(&x).unwrap());
+        assert_eq!(yb[0], eb.deployment().mvm(&x).unwrap());
+        reg.get("a").unwrap().record_served(1, ea.nnz());
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("a").get("served").as_i64(), Some(1));
+        assert_eq!(stats.get("b").get("served").as_i64(), Some(0));
+        assert!(stats.get("a").get("nnz_per_s").as_f64().unwrap() > 0.0);
+    }
+}

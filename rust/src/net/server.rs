@@ -1,0 +1,475 @@
+//! The TCP front end: NDJSON-over-socket serving against a
+//! [`DeploymentRegistry`].
+//!
+//! One accept loop, one handler thread per connection (bounded by
+//! [`NetOptions::max_conns`] — a connection over the cap is answered with
+//! a typed `busy` error line and closed, never silently dropped). Each
+//! handler reads bounded NDJSON lines ([`dispatch::read_line_bounded`])
+//! and answers every request on the same connection, in order. The
+//! request dialect and per-request handling are documented in
+//! [`crate::net`]; the error wire format is byte-identical to the stdin
+//! `serve` loop because both are built from [`crate::api::dispatch`].
+//!
+//! Request lifecycle inside a handler: read line (arrival timestamp) →
+//! parse → route (`admin` or tenant) → snapshot the tenant's current
+//! [`TenantEntry`] → validate vectors against that entry's dimension →
+//! admit (typed `busy` at the queue-depth limit) → deadline check (typed
+//! `deadline` if the budget expired before execution) → execute → answer.
+//! The entry snapshot makes hot-swap safe: a reload that lands mid-request
+//! does not affect that request, which finishes on the plan it validated
+//! against.
+
+use super::registry::{DeploymentRegistry, Tenant};
+use crate::api::dispatch::{self, BoundedLine};
+use crate::api::Error;
+use crate::util::json::{num_arr, obj, Json};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+/// Front-end configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    /// concurrent connection cap; connections over it are answered with a
+    /// `busy` error line and closed
+    pub max_conns: usize,
+    /// cap on one NDJSON request line; longer lines are drained and
+    /// rejected with a `parse` error (the connection stays usable)
+    pub max_line_bytes: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            max_conns: 64,
+            max_line_bytes: dispatch::DEFAULT_MAX_LINE_BYTES,
+        }
+    }
+}
+
+/// Sentinel "tenant" named in the busy rejection a connection over
+/// [`NetOptions::max_conns`] receives.
+pub const CONN_CAP_TENANT: &str = "<connections>";
+
+/// A running TCP server. Dropping it (or calling [`NetServer::stop`])
+/// shuts the accept loop down; [`NetServer::join`] instead blocks forever
+/// serving (the CLI path).
+pub struct NetServer {
+    registry: Arc<DeploymentRegistry>,
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+/// Decrements the live-connection counter when a handler ends, however it
+/// ends.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `127.0.0.1:7070`; port 0 picks a free port —
+    /// read it back from [`NetServer::addr`]) and start the accept loop.
+    pub fn start(
+        registry: Arc<DeploymentRegistry>,
+        listen: &str,
+        opts: &NetOptions,
+    ) -> crate::api::Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Io(format!("binding {listen}: {e}")))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Io(format!("resolving bound address: {e}")))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(AtomicUsize::new(0));
+        let max_conns = opts.max_conns.max(1);
+        let max_line = opts.max_line_bytes.max(1);
+        let reg = registry.clone();
+        let stop = shutdown.clone();
+        let accept = thread::Builder::new()
+            .name("net-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    let admitted = conns
+                        .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                            (n < max_conns).then_some(n + 1)
+                        })
+                        .is_ok();
+                    if !admitted {
+                        // typed rejection, not a silent close
+                        let err = Error::Busy {
+                            tenant: CONN_CAP_TENANT.into(),
+                            depth: max_conns,
+                        };
+                        let mut w = BufWriter::new(&stream);
+                        let _ = writeln!(w, "{}", error_response(None, Json::Null, &err).to_string());
+                        let _ = w.flush();
+                        continue;
+                    }
+                    let reg = reg.clone();
+                    let guard = ConnGuard(conns.clone());
+                    // if the spawn fails the closure (and guard) drop,
+                    // releasing the connection slot
+                    let _ = thread::Builder::new().name("net-conn".into()).spawn(move || {
+                        let _guard = guard;
+                        handle_conn(stream, &reg, max_line);
+                    });
+                }
+            })
+            .map_err(|e| Error::Io(format!("spawning accept thread: {e}")))?;
+        Ok(NetServer {
+            registry,
+            addr,
+            shutdown,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves `:0` listens).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn registry(&self) -> &Arc<DeploymentRegistry> {
+        &self.registry
+    }
+
+    /// Stop accepting and join the accept loop. Live connections drain on
+    /// their own handler threads.
+    pub fn stop(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.shutdown.store(true, Ordering::Release);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block on the accept loop forever (the `serve-net` CLI path).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Per-connection loop: bounded framing, one answer per non-blank line.
+fn handle_conn(stream: TcpStream, registry: &DeploymentRegistry, max_line: usize) {
+    let read = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut input = BufReader::new(read);
+    let mut out = BufWriter::new(stream);
+    loop {
+        let step = match dispatch::read_line_bounded(&mut input, max_line) {
+            Ok(s) => s,
+            Err(_) => break, // transport died
+        };
+        let arrival = Instant::now();
+        let line = match step {
+            BoundedLine::Eof => break,
+            BoundedLine::TooLong { limit } => {
+                let err = Error::Parse(format!("request line exceeds the {limit}-byte limit"));
+                if respond(&mut out, &error_response(None, Json::Null, &err)).is_err() {
+                    break;
+                }
+                continue;
+            }
+            BoundedLine::Line(l) => l,
+        };
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue; // blank lines are keep-alives, not errors
+        }
+        let reply = handle_line(registry, trimmed, arrival);
+        if respond(&mut out, &reply).is_err() {
+            break;
+        }
+    }
+}
+
+fn respond<W: Write>(out: &mut W, doc: &Json) -> std::io::Result<()> {
+    writeln!(out, "{}", doc.to_string())?;
+    out.flush()
+}
+
+/// Route one parsed-or-not request line to an answer document.
+fn handle_line(registry: &DeploymentRegistry, line: &str, arrival: Instant) -> Json {
+    let doc = match Json::parse(line) {
+        Ok(d) => d,
+        Err(e) => return error_response(None, Json::Null, &Error::Parse(e.to_string())),
+    };
+    if doc.get("admin") != &Json::Null {
+        return handle_admin(registry, &doc);
+    }
+    let id = doc.get("id").clone();
+    let tenant_id = match doc.get("tenant").as_str() {
+        Some(t) => t.to_string(),
+        None => {
+            return error_response(
+                None,
+                id,
+                &Error::Validate("request names no \"tenant\" deployment id".into()),
+            )
+        }
+    };
+    match serve_request(registry, &tenant_id, &doc, arrival) {
+        Ok((key, payload)) => obj(vec![
+            ("tenant", Json::Str(tenant_id)),
+            ("id", id),
+            (key, payload),
+        ]),
+        Err(e) => error_response(Some(&tenant_id), id, &e),
+    }
+}
+
+/// One tenant request end to end; counters are updated on every path.
+fn serve_request(
+    registry: &DeploymentRegistry,
+    tenant_id: &str,
+    doc: &Json,
+    arrival: Instant,
+) -> crate::api::Result<(&'static str, Json)> {
+    let tenant: Arc<Tenant> = registry.get(tenant_id)?;
+    let outcome = (|| {
+        // snapshot the generation first: everything below (validation,
+        // execution, accounting) is against this one consistent entry
+        let entry = tenant.entry();
+        let dim = entry.dim();
+        let deadline = dispatch::parse_deadline(doc)?;
+        let batched = doc.get("xs") != &Json::Null;
+        let xs = if batched {
+            dispatch::parse_batch(doc.get("xs"), dim)?
+        } else {
+            vec![dispatch::parse_vec(doc.get("x"), dim)?]
+        };
+        let _slot = tenant.admit()?;
+        if let Some(ms) = deadline {
+            dispatch::check_deadline(arrival, ms)?;
+        }
+        let n = xs.len() as u64;
+        let mut ys = entry.execute(xs, registry.sharded());
+        tenant.record_served(n, entry.nnz());
+        Ok(if batched {
+            ("ys", Json::Arr(ys.into_iter().map(num_arr).collect()))
+        } else {
+            ("y", num_arr(ys.pop().expect("one request, one answer")))
+        })
+    })();
+    if let Err(e) = &outcome {
+        tenant.record_failure(e);
+    }
+    outcome
+}
+
+/// Admin requests: `{"admin":"stats"}` and
+/// `{"admin":{"reload":{"id":...,"bundle":...}}}`.
+fn handle_admin(registry: &DeploymentRegistry, doc: &Json) -> Json {
+    let admin = doc.get("admin");
+    if admin.as_str() == Some("stats") {
+        return obj(vec![
+            ("admin", Json::Str("stats".into())),
+            ("stats", registry.stats_json()),
+        ]);
+    }
+    let reload = admin.get("reload");
+    if reload != &Json::Null {
+        let id = match reload.get("id").as_str() {
+            Some(s) => s.to_string(),
+            None => {
+                return error_response(
+                    None,
+                    Json::Null,
+                    &Error::Validate("reload names no \"id\"".into()),
+                )
+            }
+        };
+        let bundle = match reload.get("bundle").as_str() {
+            Some(s) => s.to_string(),
+            None => {
+                return error_response(
+                    Some(&id),
+                    Json::Null,
+                    &Error::Validate("reload names no \"bundle\" path".into()),
+                )
+            }
+        };
+        return match registry.reload(&id, Path::new(&bundle)) {
+            Ok(entry) => obj(vec![
+                ("admin", Json::Str("reload".into())),
+                ("id", Json::Str(id)),
+                ("generation", Json::Num(entry.generation() as f64)),
+                ("dim", Json::Num(entry.dim() as f64)),
+            ]),
+            Err(e) => error_response(Some(&id), Json::Null, &e),
+        };
+    }
+    error_response(
+        None,
+        Json::Null,
+        &Error::Validate(
+            "unknown admin request; use \"stats\" or {\"reload\":{\"id\":..,\"bundle\":..}}".into(),
+        ),
+    )
+}
+
+/// The shared error line ([`dispatch::error_line`]) with the tenant echo
+/// the socket dialect adds when the tenant is known.
+fn error_response(tenant: Option<&str>, id: Json, err: &Error) -> Json {
+    let mut line = dispatch::error_line(id, err);
+    if let (Some(t), Json::Obj(map)) = (tenant, &mut line) {
+        map.insert("tenant".into(), Json::Str(t.into()));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{DeploymentBuilder, Source, Strategy};
+    use crate::graph::synth;
+    use crate::net::RegistryOptions;
+
+    fn registry_with_tenant(queue_depth: usize) -> DeploymentRegistry {
+        let reg = DeploymentRegistry::new(&RegistryOptions {
+            workers: 2,
+            queue_depth,
+            sharded: true,
+        });
+        let dep = DeploymentBuilder::new(
+            Source::Matrix {
+                label: "qm7".into(),
+                matrix: synth::qm7_like(5828),
+            },
+            Strategy::FixedBlock { block: 1 },
+        )
+        .grid(2)
+        .build()
+        .unwrap();
+        reg.insert("g", dep, None);
+        reg
+    }
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn routes_requests_and_echoes_tenant_and_id() {
+        let reg = registry_with_tenant(4);
+        let dim = reg.get("g").unwrap().entry().dim();
+        let x: Vec<f64> = (0..dim).map(|i| i as f64 * 0.5 - 4.0).collect();
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(7.0)),
+            ("x", num_arr(x.clone())),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("tenant").as_str(), Some("g"));
+        assert_eq!(resp.get("id").as_i64(), Some(7));
+        let want = reg.get("g").unwrap().entry().deployment().mvm(&x).unwrap();
+        let got: Vec<f64> =
+            resp.get("y").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, want, "socket answer must equal Deployment::mvm");
+    }
+
+    #[test]
+    fn unknown_and_missing_tenant_are_typed_validate_errors() {
+        let reg = registry_with_tenant(4);
+        let resp = handle_line(&reg, r#"{"tenant":"nope","id":1,"x":[1.0]}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        let msg = resp.get("error").get("message").as_str().unwrap();
+        assert!(msg.contains("nope") && msg.contains('g'), "{msg}");
+        let resp = handle_line(&reg, r#"{"id":1,"x":[1.0]}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        // bad JSON is a parse error, not a dead connection
+        let resp = handle_line(&reg, "{nope", now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("parse"));
+    }
+
+    #[test]
+    fn deadline_zero_is_rejected_before_execution() {
+        let reg = registry_with_tenant(4);
+        let dim = reg.get("g").unwrap().entry().dim();
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(1.0)),
+            ("deadline_ms", Json::Num(0.0)),
+            ("x", num_arr(vec![0.5; dim])),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("deadline"));
+        let stats = reg.get("g").unwrap().stats_json();
+        assert_eq!(stats.get("rejected_deadline").as_i64(), Some(1));
+        assert_eq!(stats.get("served").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn admin_stats_and_reload_validation() {
+        let reg = registry_with_tenant(4);
+        let resp = handle_line(&reg, r#"{"admin":"stats"}"#, now());
+        assert_eq!(resp.get("admin").as_str(), Some("stats"));
+        assert_eq!(resp.get("stats").get("g").get("served").as_i64(), Some(0));
+        // malformed admin requests are typed errors
+        let resp = handle_line(&reg, r#"{"admin":{"reload":{"id":"g"}}}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        let resp = handle_line(&reg, r#"{"admin":"nonsense"}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        // a reload pointing at a missing bundle is an io error, not a crash
+        let resp = handle_line(
+            &reg,
+            r#"{"admin":{"reload":{"id":"g","bundle":"/nonexistent/b.json"}}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("io"));
+    }
+
+    #[test]
+    fn batch_requests_answer_with_ys() {
+        let reg = registry_with_tenant(4);
+        let dim = reg.get("g").unwrap().entry().dim();
+        let xs: Vec<Vec<f64>> = (0..3).map(|s| vec![s as f64 - 1.0; dim]).collect();
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(2.0)),
+            ("xs", Json::Arr(xs.iter().cloned().map(num_arr).collect())),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        let ys = resp.get("ys").as_arr().unwrap();
+        assert_eq!(ys.len(), 3);
+        let dep = reg.get("g").unwrap().entry();
+        for (x, y) in xs.iter().zip(ys) {
+            let want = dep.deployment().mvm(x).unwrap();
+            let got: Vec<f64> = y.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+            assert_eq!(got, want);
+        }
+        let stats = reg.get("g").unwrap().stats_json();
+        assert_eq!(stats.get("served").as_i64(), Some(3));
+        assert_eq!(stats.get("batches").as_i64(), Some(1));
+    }
+}

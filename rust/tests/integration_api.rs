@@ -293,6 +293,7 @@ fn serve_loop_speaks_ndjson_with_typed_errors() {
         batch_window: 2,
         stats_every: 0,
         sharded: true,
+        ..ServeOptions::default()
     };
     let mut out: Vec<u8> = Vec::new();
     let report = serve_loop(&dep, &opts, Cursor::new(input), &mut out).unwrap();

@@ -1,0 +1,408 @@
+//! Socket-level integration tests for the multi-tenant network serving
+//! tier: the load-bearing invariant (answers through the socket are
+//! bit-identical to direct `Deployment::mvm`, per tenant, under
+//! concurrency and across a live hot-swap), typed busy/deadline
+//! rejections, NDJSON robustness, and stdin/socket error-format parity.
+
+use autogmap::api::{serve_loop, Deployment, DeploymentBuilder, ServeOptions, Source, Strategy};
+use autogmap::graph::synth;
+use autogmap::net::{DeploymentRegistry, NetOptions, NetServer, RegistryOptions};
+use autogmap::util::json::{num_arr, obj, Json};
+use autogmap::util::propcheck::check;
+use autogmap::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, BufWriter, Cursor, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A small deployment over a 200-node R-MAT graph. The same `seed` gives
+/// the same matrix, so two calls with different `block` are two distinct
+/// mappings of one graph — exactly what a hot-swap installs.
+fn small_dep(label: &str, seed: u64, block: usize) -> Deployment {
+    DeploymentBuilder::new(
+        Source::Matrix {
+            label: label.into(),
+            matrix: synth::rmat_like(200, 800, seed),
+        },
+        Strategy::FixedBlock { block },
+    )
+    .grid(8)
+    .workers(2)
+    .build()
+    .unwrap()
+}
+
+fn registry(workers: usize, queue_depth: usize, sharded: bool) -> Arc<DeploymentRegistry> {
+    Arc::new(DeploymentRegistry::new(&RegistryOptions {
+        workers,
+        queue_depth,
+        sharded,
+    }))
+}
+
+/// A blocking NDJSON test client over a real TCP connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Result<Client, String> {
+        let s = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let r = s.try_clone().map_err(|e| format!("clone: {e}"))?;
+        Ok(Client {
+            reader: BufReader::new(r),
+            writer: BufWriter::new(s),
+        })
+    }
+
+    fn send(&mut self, line: &str) -> Result<(), String> {
+        writeln!(self.writer, "{line}").map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))
+    }
+
+    fn recv(&mut self) -> Result<Option<Json>, String> {
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Ok(None);
+        }
+        Json::parse(buf.trim()).map(Some).map_err(|e| format!("bad response: {e}"))
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json, String> {
+        self.send(line)?;
+        self.recv()?.ok_or_else(|| "connection closed mid-request".into())
+    }
+}
+
+fn req_line(tenant: &str, id: u64, x: &[f64]) -> String {
+    obj(vec![
+        ("tenant", Json::Str(tenant.into())),
+        ("id", Json::Num(id as f64)),
+        ("x", num_arr(x.to_vec())),
+    ])
+    .to_string()
+}
+
+fn parse_y(resp: &Json) -> Result<Vec<f64>, String> {
+    if resp.get("error") != &Json::Null {
+        return Err(format!("error response: {}", resp.to_string()));
+    }
+    resp.get("y")
+        .as_arr()
+        .ok_or_else(|| format!("no y in {}", resp.to_string()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "non-numeric y element".to_string()))
+        .collect()
+}
+
+/// The tentpole property: at 1, 2, and 8 workers, with 3 concurrent
+/// clients interleaving 2 tenants over one socket, every answer is
+/// bit-identical to `Deployment::mvm` on the very deployment the registry
+/// serves — in both executor modes.
+#[test]
+fn socket_answers_bit_match_direct_mvm_property() {
+    check("net_socket_matches_mvm", 2, |rng| {
+        let sharded = rng.below(2) == 0;
+        for &workers in &[1usize, 2, 8] {
+            let reg = registry(workers, 16, sharded);
+            reg.insert("graphA", small_dep("graphA", 7, 1), None);
+            reg.insert("graphB", small_dep("graphB", 11, 2), None);
+            let server = NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default())
+                .map_err(|e| e.to_string())?;
+            let addr = server.addr();
+            let mut handles = Vec::new();
+            for c in 0..3u64 {
+                let seed = rng.next_u64();
+                let reg = reg.clone();
+                handles.push(std::thread::spawn(move || -> Result<(), String> {
+                    let mut conn = Client::connect(addr)?;
+                    let mut rng = Pcg64::new(seed, c);
+                    for r in 0..8u64 {
+                        let tenant = if rng.below(2) == 0 { "graphA" } else { "graphB" };
+                        let entry = reg.get(tenant).map_err(|e| e.to_string())?.entry();
+                        let x: Vec<f64> =
+                            (0..entry.dim()).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                        let want =
+                            entry.deployment().mvm(&x).map_err(|e| e.to_string())?;
+                        let resp = conn.roundtrip(&req_line(tenant, r, &x))?;
+                        if resp.get("tenant").as_str() != Some(tenant) {
+                            return Err(format!("tenant echo lost: {}", resp.to_string()));
+                        }
+                        let got = parse_y(&resp)?;
+                        if got != want {
+                            return Err(format!(
+                                "workers {workers} client {c} req {r} tenant {tenant}: \
+                                 socket answer != Deployment::mvm"
+                            ));
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| "client thread panicked".to_string())??;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Hot-swap under load: two clients stream requests while one of them
+/// reloads the tenant's bundle mid-stream. Every response must bit-match
+/// the old or the new generation's own `mvm` (nothing dropped, nothing
+/// half-swapped), and every post-swap request must match the new one.
+#[test]
+fn hot_swap_under_load_drops_and_mismatches_nothing() {
+    let dir = temp_dir("autogmap_net_swap");
+    let bundle = dir.join("remapped.json");
+    small_dep("g", 13, 4).save(&bundle).unwrap();
+    let new_oracle = Arc::new(Deployment::load(&bundle).unwrap());
+
+    let reg = registry(2, 16, true);
+    reg.insert("g", small_dep("g", 13, 1), None);
+    let old_entry = reg.get("g").unwrap().entry();
+    assert_eq!(old_entry.generation(), 1);
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default()).unwrap();
+    let addr = server.addr();
+    let swap_line = obj(vec![(
+        "admin",
+        obj(vec![(
+            "reload",
+            obj(vec![
+                ("id", Json::Str("g".into())),
+                ("bundle", Json::Str(bundle.display().to_string())),
+            ]),
+        )]),
+    )])
+    .to_string();
+
+    let requests_per_client = 40u64;
+    let mut handles = Vec::new();
+    for c in 0..2u64 {
+        let old_entry = old_entry.clone();
+        let new_oracle = new_oracle.clone();
+        let swap_line = swap_line.clone();
+        handles.push(std::thread::spawn(move || -> Result<u64, String> {
+            let mut conn = Client::connect(addr)?;
+            let mut rng = Pcg64::new(0xabcd, c);
+            let mut served = 0u64;
+            for r in 0..requests_per_client {
+                let x: Vec<f64> =
+                    (0..old_entry.dim()).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let want_old = old_entry.deployment().mvm(&x).map_err(|e| e.to_string())?;
+                let want_new = new_oracle.mvm(&x).map_err(|e| e.to_string())?;
+                let got = parse_y(&conn.roundtrip(&req_line("g", r, &x))?)?;
+                if got != want_old && got != want_new {
+                    return Err(format!(
+                        "client {c} req {r}: answer matches neither generation"
+                    ));
+                }
+                served += 1;
+                if c == 0 && r == requests_per_client / 2 {
+                    let ack = conn.roundtrip(&swap_line)?;
+                    if ack.get("admin").as_str() != Some("reload") {
+                        return Err(format!("swap rejected: {}", ack.to_string()));
+                    }
+                    if ack.get("generation").as_i64() != Some(2) {
+                        return Err(format!("generation not bumped: {}", ack.to_string()));
+                    }
+                }
+            }
+            Ok(served)
+        }));
+    }
+    let total: u64 = handles
+        .into_iter()
+        .map(|h| h.join().expect("client panicked").expect("client failed"))
+        .sum();
+    assert_eq!(total, 2 * requests_per_client, "zero dropped responses under swap");
+
+    // the registry now serves generation 2, and new requests bit-match
+    // the reloaded bundle's own mvm
+    let entry = reg.get("g").unwrap().entry();
+    assert_eq!(entry.generation(), 2);
+    let mut conn = Client::connect(addr).unwrap();
+    let x: Vec<f64> = (0..entry.dim()).map(|i| (i as f64 * 0.37).sin()).collect();
+    let got = parse_y(&conn.roundtrip(&req_line("g", 999, &x)).unwrap()).unwrap();
+    assert_eq!(got, new_oracle.mvm(&x).unwrap(), "post-swap requests serve the new plan");
+    // in-flight-era entries stayed alive and still answer on the old plan
+    assert_eq!(
+        old_entry.execute(vec![x.clone()], true)[0],
+        old_entry.deployment().mvm(&x).unwrap()
+    );
+    let stats = conn.roundtrip(r#"{"admin":"stats"}"#).unwrap();
+    let g = stats.get("stats").get("g").clone();
+    assert_eq!(g.get("served").as_i64(), Some(2 * requests_per_client as i64 + 1));
+    assert_eq!(g.get("generation").as_i64(), Some(2));
+    assert_eq!(g.get("errors").as_i64(), Some(0));
+}
+
+/// Busy and deadline rejections at queue depth 1 are machine-readable
+/// typed error responses on a connection that keeps serving — never
+/// connection drops.
+#[test]
+fn busy_and_deadline_rejections_are_typed_not_drops() {
+    let reg = registry(2, 1, true);
+    reg.insert("g", small_dep("g", 17, 1), None);
+    let tenant = reg.get("g").unwrap();
+    let dim = tenant.entry().dim();
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default()).unwrap();
+    let mut conn = Client::connect(server.addr()).unwrap();
+    let x = vec![0.5f64; dim];
+
+    // hold the tenant's only admission slot through the shared registry
+    // handle, then a wire request must get a typed busy rejection
+    let slot = tenant.admit().unwrap();
+    let resp = conn.roundtrip(&req_line("g", 1, &x)).unwrap();
+    assert_eq!(resp.get("error").get("kind").as_str(), Some("busy"));
+    assert_eq!(resp.get("tenant").as_str(), Some("g"));
+    let msg = resp.get("error").get("message").as_str().unwrap();
+    assert!(msg.contains("depth limit 1"), "{msg}");
+    drop(slot);
+
+    // the same connection serves normally once the slot frees
+    let resp = conn.roundtrip(&req_line("g", 2, &x)).unwrap();
+    assert_eq!(resp.get("error"), &Json::Null);
+    assert_eq!(
+        parse_y(&resp).unwrap(),
+        tenant.entry().deployment().mvm(&x).unwrap()
+    );
+
+    // an already-expired deadline budget is rejected before execution
+    let req = obj(vec![
+        ("tenant", Json::Str("g".into())),
+        ("id", Json::Num(3.0)),
+        ("deadline_ms", Json::Num(0.0)),
+        ("x", num_arr(x.clone())),
+    ]);
+    let resp = conn.roundtrip(&req.to_string()).unwrap();
+    assert_eq!(resp.get("error").get("kind").as_str(), Some("deadline"));
+
+    let stats = conn.roundtrip(r#"{"admin":"stats"}"#).unwrap();
+    let g = stats.get("stats").get("g").clone();
+    assert_eq!(g.get("rejected_busy").as_i64(), Some(1));
+    assert_eq!(g.get("rejected_deadline").as_i64(), Some(1));
+    assert_eq!(g.get("served").as_i64(), Some(1));
+    assert_eq!(g.get("inflight").as_i64(), Some(0), "RAII released every slot");
+}
+
+/// NDJSON robustness on the socket, and byte-identical error objects
+/// between the stdin serve loop and the TCP tier (both are built on the
+/// same dispatch core).
+#[test]
+fn wire_robustness_and_error_parity_with_stdin_loop() {
+    let reg = registry(2, 8, true);
+    reg.insert("g", small_dep("g", 7, 1), None);
+    let entry = reg.get("g").unwrap().entry();
+    let dim = entry.dim();
+    let opts = NetOptions {
+        max_conns: 8,
+        max_line_bytes: 2048,
+    };
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &opts).unwrap();
+    let mut conn = Client::connect(server.addr()).unwrap();
+    let x = vec![0.25f64; dim];
+
+    // blank lines are skipped, not Parse errors: the next response
+    // belongs to the next real request
+    conn.send("").unwrap();
+    conn.send("   ").unwrap();
+    let resp = conn.roundtrip(&req_line("g", 9, &x)).unwrap();
+    assert_eq!(resp.get("id").as_i64(), Some(9));
+    assert!(parse_y(&resp).is_ok());
+
+    // a length mismatch names both lengths
+    let resp = conn.roundtrip(&req_line("g", 1, &[1.0, 2.0, 3.0])).unwrap();
+    assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+    let msg = resp.get("error").get("message").as_str().unwrap().to_string();
+    assert!(msg.contains('3') && msg.contains(&dim.to_string()), "{msg}");
+
+    // ... and the error object is byte-identical to the stdin loop's for
+    // the same deployment and the same bad request
+    let socket_err = resp.get("error").clone();
+    let stdin_input = r#"{"id":1,"x":[1,2,3]}"#.to_string() + "\n";
+    let mut stdin_out: Vec<u8> = Vec::new();
+    serve_loop(
+        entry.deployment(),
+        &ServeOptions::default(),
+        Cursor::new(stdin_input),
+        &mut stdin_out,
+    )
+    .unwrap();
+    let first = String::from_utf8(stdin_out).unwrap().lines().next().unwrap().to_string();
+    let stdin_err = Json::parse(&first).unwrap().get("error").clone();
+    assert_eq!(socket_err, stdin_err, "both transports share one error wire format");
+
+    // an oversized line is drained and rejected with a bounded read; the
+    // connection keeps working
+    let resp = conn.roundtrip(&"x".repeat(4000)).unwrap();
+    assert_eq!(resp.get("error").get("kind").as_str(), Some("parse"));
+    assert!(resp.get("error").get("message").as_str().unwrap().contains("2048"));
+    let resp = conn.roundtrip(&req_line("g", 10, &x)).unwrap();
+    assert_eq!(parse_y(&resp).unwrap(), entry.deployment().mvm(&x).unwrap());
+
+    // unknown tenants are typed validate errors naming the deployed ids
+    let resp = conn.roundtrip(&req_line("nope", 1, &x)).unwrap();
+    assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+    let msg = resp.get("error").get("message").as_str().unwrap();
+    assert!(msg.contains("nope") && msg.contains("\"g\""), "{msg}");
+
+    // explicit batches answer with ys, bit-identical per row
+    let xs: Vec<Vec<f64>> = (0..3).map(|s| vec![s as f64 * 0.5 - 0.5; dim]).collect();
+    let req = obj(vec![
+        ("tenant", Json::Str("g".into())),
+        ("id", Json::Num(11.0)),
+        ("xs", Json::Arr(xs.iter().cloned().map(num_arr).collect())),
+    ]);
+    let resp = conn.roundtrip(&req.to_string()).unwrap();
+    let ys = resp.get("ys").as_arr().unwrap();
+    assert_eq!(ys.len(), 3);
+    for (xi, yi) in xs.iter().zip(ys) {
+        let got: Vec<f64> =
+            yi.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, entry.deployment().mvm(xi).unwrap());
+    }
+}
+
+/// A connection over the `--max-conns` cap gets a typed busy line and a
+/// clean close — not a silent drop.
+#[test]
+fn connection_cap_rejects_with_typed_busy() {
+    let reg = registry(1, 4, true);
+    reg.insert("g", small_dep("g", 19, 1), None);
+    let dim = reg.get("g").unwrap().entry().dim();
+    let opts = NetOptions {
+        max_conns: 1,
+        max_line_bytes: 1 << 20,
+    };
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &opts).unwrap();
+
+    // first connection is admitted and serves (the roundtrip guarantees
+    // the accept loop has processed it before we open the second)
+    let mut first = Client::connect(server.addr()).unwrap();
+    let x = vec![1.0f64; dim];
+    assert!(parse_y(&first.roundtrip(&req_line("g", 1, &x)).unwrap()).is_ok());
+
+    // second connection: one busy line, then EOF
+    let mut second = Client::connect(server.addr()).unwrap();
+    let line = second.recv().unwrap().expect("rejection line, not a silent drop");
+    assert_eq!(line.get("error").get("kind").as_str(), Some("busy"));
+    assert!(line
+        .get("error")
+        .get("message")
+        .as_str()
+        .unwrap()
+        .contains("<connections>"));
+    assert!(second.recv().unwrap().is_none(), "rejected connection closes cleanly");
+
+    // the admitted connection is unaffected
+    assert!(parse_y(&first.roundtrip(&req_line("g", 2, &x)).unwrap()).is_ok());
+}
