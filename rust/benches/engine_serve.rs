@@ -2,9 +2,12 @@
 //!
 //! Rungs per workload, separating each win:
 //!   oracle_mvm     — CrossbarArray::mvm, every tile walked (the seed path)
+//!   plan_scalar    — compiled ExecPlan, the seed's scalar row-dot loop
+//!                    (elision + dedup, no vectorization)
 //!   plan_dense     — compiled ExecPlan, dense kernels forced (elision only)
-//!   plan_mvm       — compiled ExecPlan, density-adaptive kernels
-//!                    (elision × sparse CSR-within-tile kernels)
+//!   plan_mvm       — compiled ExecPlan, density-adaptive vectorized
+//!                    kernels (elision × lane-unrolled dense bodies ×
+//!                    pattern-deduped sparse CSR-within-tile kernels)
 //!   plan_batchN    — multi-RHS kernel, single thread: one arena traversal
 //!                    serves the whole batch
 //!   scalarN_wW     — BatchExecutor scalar mode, W workers over N requests
@@ -38,15 +41,22 @@ fn main() {
         let plan = compile(&r.matrix, &g, &scheme).unwrap();
         let (dense_k, sparse_k) = plan.kernel_counts();
         println!(
-            "{name}: {} tiles scheduled, {} placed ({:.1}% elided), {} bands, kernels {dense_k}d/{sparse_k}s",
+            "{name}: {} tiles scheduled, {} placed ({:.1}% elided), {} bands, kernels {dense_k}d/{sparse_k}s, {} row patterns ({} dedup hits)",
             plan.scheduled_tiles,
             plan.tiles.len(),
             plan.elision_ratio() * 100.0,
-            plan.bands().len()
+            plan.bands().len(),
+            plan.num_patterns(),
+            plan.pattern_dedup_hits()
         );
         let x: Vec<f64> = (0..g.dim).map(|i| (i as f64 * 0.1).sin()).collect();
         b.bench(&format!("oracle_mvm/{name} ({} tiles)", arr.tiles.len()), || {
             black_box(arr.mvm(&x))
+        });
+        let mut y_scalar = Vec::new();
+        b.bench(&format!("plan_scalar/{name} ({} tiles)", plan.tiles.len()), || {
+            plan.mvm_scalar_into(&x, &mut y_scalar);
+            black_box(y_scalar.first().copied())
         });
         let mut dense_plan = plan.clone();
         dense_plan.rekernel(0.0);

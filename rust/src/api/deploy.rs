@@ -13,12 +13,15 @@
 //!
 //! A deployment saves to a single self-contained JSON **bundle**
 //! ([`Deployment::save`] / [`Deployment::load`], format version
-//! [`BUNDLE_VERSION`]) that embeds the version-2 plan arena artifact, the
-//! composite's spill CSR when present, and the fleet/exec configuration —
-//! reloading is a pure load + execute path with no graph, controller, or
-//! training dependency, and it serves **bit-identically** to the in-memory
-//! deployment that produced it. Bundles are byte-deterministic for a fixed
-//! source and configuration.
+//! [`BUNDLE_VERSION`]) that embeds the version-3 plan arena artifact (lane
+//! alignment + the shared row-pattern table), the composite's spill CSR
+//! when present, and the fleet/exec configuration — reloading is a pure
+//! load + execute path with no graph, controller, or training dependency,
+//! and it serves **bit-identically** to the in-memory deployment that
+//! produced it. Bundles are byte-deterministic for a fixed source and
+//! configuration. Bundle versions 1..=[`BUNDLE_VERSION`] all load: a v1
+//! bundle's embedded v2 plan gains the pattern table and alignment on the
+//! way in (see [`ExecPlan::from_json`]).
 //!
 //! Serving happens in *original* node ids: the builder's reordering
 //! permutation rides along, [`Deployment::mvm`] applies x' = P x on the
@@ -40,8 +43,10 @@ use crate::util::json::{num_arr, obj, Json};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-/// On-disk bundle format revision this build writes and reads.
-pub const BUNDLE_VERSION: usize = 1;
+/// On-disk bundle format revision this build writes. Readers accept every
+/// revision in `1..=BUNDLE_VERSION` (version 2 switched the embedded plan
+/// artifact from v2 to v3 — lane-aligned arena + shared pattern table).
+pub const BUNDLE_VERSION: usize = 2;
 
 /// Where the matrix comes from.
 #[derive(Clone, Debug)]
@@ -250,6 +255,7 @@ pub struct DeploymentBuilder {
     rounds: usize,
     checkpoint: Option<PathBuf>,
     kernel: KernelChoice,
+    dense_threshold: Option<f64>,
     banks: usize,
     policy: AssignPolicy,
     workers: usize,
@@ -267,6 +273,7 @@ impl DeploymentBuilder {
             rounds: 2,
             checkpoint: None,
             kernel: KernelChoice::Auto,
+            dense_threshold: None,
             banks: 8,
             policy: AssignPolicy::BalancedNnz,
             workers: 8,
@@ -308,6 +315,16 @@ impl DeploymentBuilder {
     /// Kernel selection for the compiled plan (default auto).
     pub fn kernel(mut self, kernel: KernelChoice) -> Self {
         self.kernel = kernel;
+        self
+    }
+
+    /// Density threshold for auto kernel selection: programs strictly
+    /// below it run the compiled CSR-within-tile kernel, the rest the
+    /// dense row-dot kernel (default
+    /// [`crate::engine::plan::DEFAULT_SPARSE_THRESHOLD`]). Ignored when
+    /// [`Self::kernel`] forces a kind — an explicit choice wins.
+    pub fn dense_threshold(mut self, threshold: f64) -> Self {
+        self.dense_threshold = Some(threshold);
         self
     }
 
@@ -493,6 +510,9 @@ impl DeploymentBuilder {
             )));
         }
         self.kernel.apply(plan.exec_plan_mut());
+        if let (KernelChoice::Auto, Some(t)) = (self.kernel, self.dense_threshold) {
+            plan.exec_plan_mut().rekernel(t);
+        }
         let fleet = Fleet::assign(plan.exec_plan(), self.banks.max(1), self.policy)
             .map_err(|e| Error::Validate(format!("fleet assignment: {e:#}")))?;
         Ok(Deployment {
@@ -594,7 +614,7 @@ impl Deployment {
     // ---- bundle (de)serialization ---------------------------------------
 
     /// Serialize to the self-contained bundle document (format version
-    /// [`BUNDLE_VERSION`], embedding the version-2 plan arena artifact).
+    /// [`BUNDLE_VERSION`], embedding the version-3 plan arena artifact).
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
             ("bundle_version", Json::Num(BUNDLE_VERSION as f64)),
@@ -640,7 +660,7 @@ impl Deployment {
             .get("bundle_version")
             .as_usize()
             .ok_or_else(|| Error::Parse("bundle missing bundle_version".into()))?;
-        if version != BUNDLE_VERSION {
+        if !(1..=BUNDLE_VERSION).contains(&version) {
             return Err(Error::BundleVersion {
                 found: version,
                 supported: BUNDLE_VERSION,
@@ -853,6 +873,52 @@ mod tests {
         .unwrap_err();
         assert!(matches!(err, Error::Validate(_)));
         assert!(err.to_string().contains("Hierarchical"));
+    }
+
+    #[test]
+    fn old_bundle_versions_load_and_future_ones_are_rejected() {
+        let dep = DeploymentBuilder::new(qm7_source(), Strategy::FixedBlock { block: 2 })
+            .grid(2)
+            .build()
+            .unwrap();
+        let x: Vec<f64> = (0..22).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let want = dep.mvm(&x).unwrap();
+        // a v1 bundle: the old header over the old embedded v2 plan
+        // artifact — must load, backfilling pattern table + alignment
+        let mut doc = dep.to_json();
+        if let Json::Obj(map) = &mut doc {
+            map.insert("bundle_version".into(), Json::Num(1.0));
+            map.insert("plan".into(), dep.plan().exec_plan().to_json_v2());
+        } else {
+            panic!("bundle must serialize to an object");
+        }
+        let v1 = Deployment::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(v1.mvm(&x).unwrap(), want, "v1 bundle must serve bit-identically");
+        assert_eq!(v1.plan().exec_plan(), dep.plan().exec_plan());
+        // a future revision is a typed bundle_version error
+        if let Json::Obj(map) = &mut doc {
+            map.insert("bundle_version".into(), Json::Num((BUNDLE_VERSION + 1) as f64));
+        }
+        let err = Deployment::from_json(&doc).unwrap_err();
+        assert!(matches!(err, Error::BundleVersion { .. }));
+        assert_eq!(err.kind(), "bundle_version");
+    }
+
+    #[test]
+    fn dense_threshold_tunes_the_auto_mix_but_not_the_answers() {
+        let x: Vec<f64> = (0..22).map(|i| ((i * 3) % 13) as f64 - 6.0).collect();
+        let build = |b: DeploymentBuilder| b.grid(2).build().unwrap();
+        let mk = || DeploymentBuilder::new(qm7_source(), Strategy::FixedBlock { block: 1 });
+        // threshold above every density -> all sparse; zero -> all dense
+        let lo = build(mk().dense_threshold(0.0));
+        let hi = build(mk().dense_threshold(1.1));
+        assert_eq!(lo.stats().kernel_sparse, 0);
+        assert_eq!(hi.stats().kernel_dense, 0);
+        assert_eq!(lo.mvm(&x).unwrap(), hi.mvm(&x).unwrap());
+        // an explicit kernel choice wins over the threshold
+        let forced = build(mk().kernel(KernelChoice::Sparse).dense_threshold(0.0));
+        assert_eq!(forced.stats().kernel_dense, 0);
+        assert_eq!(forced.mvm(&x).unwrap(), lo.mvm(&x).unwrap());
     }
 
     #[test]

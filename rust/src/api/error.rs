@@ -75,7 +75,7 @@ impl fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::BundleVersion { found, supported } => write!(
                 f,
-                "unsupported bundle version {found} (this build reads version {supported})"
+                "unsupported bundle version {found} (this build reads versions 1..={supported})"
             ),
             Error::Busy { tenant, depth } => write!(
                 f,

@@ -16,7 +16,7 @@
 //!   [`Provenance`]. Serves in *original* node ids.
 //! - **Bundles** — [`Deployment::save`] / [`Deployment::load`] move a
 //!   deployment through one self-contained versioned JSON file
-//!   (embedding the v2 plan arena), so the mapping cost is paid once and
+//!   (embedding the v3 plan arena), so the mapping cost is paid once and
 //!   reload is a pure load + execute path that serves bit-identically.
 //! - [`serve_loop`] — the long-running NDJSON request/response loop the
 //!   `serve` CLI subcommand wraps around stdin/stdout, with typed

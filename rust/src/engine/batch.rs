@@ -47,6 +47,14 @@ pub struct ServeStats {
     pub kernel_dense: usize,
     /// programs on the compiled CSR-within-tile kernel
     pub kernel_sparse: usize,
+    /// non-zeros served per MVM through the dense kernel (per-tile sums)
+    pub nnz_dense: u64,
+    /// non-zeros served per MVM through the sparse kernel (per-tile sums)
+    pub nnz_sparse: u64,
+    /// deduplicated sparse row patterns (compiled kernel bodies)
+    pub patterns: usize,
+    /// sparse programs served by a pattern another program interned first
+    pub pattern_dedup_hits: usize,
     /// non-zeros served by crossbar tiles
     pub mapped_nnz: u64,
     /// non-zeros served from digital sparse storage (0 for flat plans)
@@ -159,6 +167,7 @@ impl Servable for ExecPlan {
 
     fn stats(&self) -> ServeStats {
         let (kernel_dense, kernel_sparse) = self.kernel_counts();
+        let (nnz_dense, nnz_sparse) = self.kernel_nnz();
         ServeStats {
             dim: self.dim,
             tiles: self.tiles.len(),
@@ -166,6 +175,10 @@ impl Servable for ExecPlan {
             bands: self.bands().len(),
             kernel_dense,
             kernel_sparse,
+            nnz_dense,
+            nnz_sparse,
+            patterns: self.num_patterns(),
+            pattern_dedup_hits: self.pattern_dedup_hits(),
             mapped_nnz: self.mapped_nnz(),
             spilled_nnz: 0,
             area_cells: self.cells(),

@@ -20,7 +20,31 @@
 //!    CSR-within-tile below [`plan::DEFAULT_SPARSE_THRESHOLD`]), a
 //!    **multi-RHS kernel** ([`ExecPlan::mvm_span_batch`]) that serves a
 //!    whole batch per arena traversal, and JSON (de)serialization
-//!    (version 2 artifacts; version 1 still loads).
+//!    (version 3 artifacts; versions 1 and 2 still load, gaining the
+//!    pattern table and lane alignment on the way in).
+//!
+//! ## Kernel architecture
+//!
+//! The serving hot path is explicitly laid out for SIMD without ever
+//! reassociating an f64 accumulation (the bit-identity contract):
+//!
+//! - **Lane alignment** — program offsets are padded at compile time so
+//!    every dense program body starts on a [`LANE`]-wide f32 boundary
+//!    (8 × 4 B = one 32-byte vector row); artifact readers repack old
+//!    arenas onto the same boundaries on load.
+//! - **Independent-chain unrolling** — the vectorized kernels unroll 4
+//!    wide across *independent* accumulators only: 4 output rows per step
+//!    in the single-RHS dense kernel, 4 requests per step in the
+//!    multi-RHS dense/sparse kernels, and 4 pipelined gather products
+//!    folded in scalar order in the single-RHS sparse kernel. One row's
+//!    column sum is never split, so every path stays bit-identical to the
+//!    preserved scalar loop ([`ExecPlan::mvm_scalar_into`]).
+//! - **Row-pattern table** — sparse programs with identical row-pointer +
+//!    column-index structure share one [`PatternMeta`] kernel body
+//!    (FNV-hashed signatures, exact-compare collision chains — the
+//!    mapper's window-signature cache idiom); only values stay
+//!    per-program. The table ships in the v3 artifact and is re-derived
+//!    and cross-checked on load.
 //! 2. **[`fleet`]** — distribute the plan's tiles over N simulated
 //!    crossbar banks ([`Fleet`]): round-robin or nnz-load-balanced
 //!    assignment (reading the arena's cached per-program nnz — no buffer
@@ -52,7 +76,8 @@ pub mod plan;
 pub use batch::{BatchExecutor, Servable, ServablePlan, ServeStats};
 pub use fleet::{AssignPolicy, BankLoad, Fleet};
 pub use plan::{
-    compile, compile_rects, merge_plans, Band, ExecPlan, KernelKind, ProgramMeta, TileSpec,
+    compile, compile_rects, merge_plans, Band, ExecPlan, KernelKind, PatternMeta, ProgramMeta,
+    TileSpec, LANE,
 };
 
 use crate::util::rng::Pcg64;

@@ -17,7 +17,14 @@
 //! - **program arena**: all program buffers live in one contiguous f32
 //!   arena ([`ProgramMeta`] records offset, extents, a compile-time nnz
 //!   count, and the selected kernel), so an MVM streams one allocation
-//!   instead of chasing a `Vec<Vec<f32>>`;
+//!   instead of chasing a `Vec<Vec<f32>>`. Program offsets are padded at
+//!   compile time so every body starts on a [`LANE`]-wide f32 boundary —
+//!   the vectorized kernels' unrolled loads never straddle a lane;
+//! - **row-pattern dedup**: sparse programs whose non-zeros sit in the
+//!   same positions (identical row-pointer + column-index signature,
+//!   FNV-hashed like the mapper's window-signature cache) share one
+//!   [`PatternMeta`] entry in the plan's pattern table — one compiled
+//!   kernel body serves many programs, only the values stay per-program;
 //! - **row bands**: the tile schedule is stable-sorted by `row0` into
 //!   disjoint [`Band`]s. Tiles in one band write one output row range, so
 //!   bands shard across workers *within* a request with no write
@@ -31,9 +38,10 @@
 //!   Y-panel = tile × X-panel, so one traversal of the arena serves a
 //!   whole batch of requests;
 //! - **JSON serialization**: plans save/load as standalone artifacts
-//!   (version 2: arena + per-program metadata; the version 1 nested-array
-//!   format still loads), so a mapping trained once deploys without
-//!   re-running placement.
+//!   (version 3: arena + per-program metadata + the shared pattern table;
+//!   version 2 artifacts load with the pattern table and alignment
+//!   backfilled, and the version 1 nested-array format still loads), so a
+//!   mapping trained once deploys without re-running placement.
 //!
 //! Exactness contract: for finite inputs every kernel is **bit-identical**
 //! to the seed scalar tile-at-a-time loop (and therefore to
@@ -41,7 +49,13 @@
 //! exact-zero products (adding ±0.0 never changes a finite accumulator),
 //! the multi-RHS kernel runs each (row, request) accumulation in the same
 //! scalar column order, and band sharding assigns each output row to
-//! exactly one worker with a fixed intra-band tile order.
+//! exactly one worker with a fixed intra-band tile order. The vectorized
+//! kernels keep the contract by unrolling only across *independent*
+//! accumulation chains — output rows within a tile, or requests within a
+//! batch — never by splitting one row's column sum into partial
+//! accumulators (f64 addition does not reassociate). The pre-unroll
+//! scalar loop survives verbatim as [`ExecPlan::mvm_scalar_into`], the
+//! in-tree oracle and serve-bench baseline rung.
 
 use crate::graph::{Csr, GridSummary};
 use crate::scheme::{GridRect, Scheme};
@@ -53,6 +67,16 @@ use std::path::Path;
 /// Programs whose density (nnz / rows·cols) is strictly below this execute
 /// through the compiled CSR-within-tile kernel.
 pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.25;
+
+/// f32 lanes per vector register the kernels are unrolled for (8 × 4 B =
+/// one 32-byte row). Program offsets are padded to multiples of this at
+/// compile time, so every dense program body starts on a lane boundary.
+pub const LANE: usize = 8;
+
+/// Requests / output rows processed per unrolled kernel step. Each chain
+/// keeps its own accumulator, so the per-chain f64 addition order is
+/// exactly the scalar kernel's.
+const UNROLL: usize = 4;
 
 /// One scheduled tile: geometry plus a reference into the deduplicated
 /// program table.
@@ -89,11 +113,33 @@ pub struct ProgramMeta {
     /// non-zeros in the buffer, counted once at compile time
     pub nnz: u32,
     pub kernel: KernelKind,
-    /// base into the sparse row-pointer arena (valid when `kernel` is
-    /// [`KernelKind::Sparse`]; this program owns `rows + 1` entries)
-    sp_row: usize,
-    /// base into the sparse col/val arenas
+    /// index into the plan's shared pattern table (valid when `kernel` is
+    /// [`KernelKind::Sparse`]; many programs may share one pattern)
+    pattern: usize,
+    /// base of this program's values in the sparse value arena
     sp_val: usize,
+}
+
+impl ProgramMeta {
+    /// Index of the shared row pattern this sparse program executes
+    /// through (0 for dense programs, which have no pattern).
+    pub fn pattern(&self) -> usize {
+        self.pattern
+    }
+}
+
+/// One deduplicated sparse row pattern: the row-pointer + column-index
+/// structure shared by every sparse program whose non-zeros sit in the
+/// same positions. Values stay per-program; the pattern is the compiled
+/// kernel body.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatternMeta {
+    /// base into the shared row-pointer arena (`rows + 1` entries)
+    pub rowptr: usize,
+    /// base into the shared column-index arena (`nnz` entries)
+    pub cols: usize,
+    pub rows: usize,
+    pub nnz: u32,
 }
 
 /// A maximal run of tiles writing one disjoint output row range. Bands are
@@ -129,14 +175,17 @@ pub struct ExecPlan {
     pub scheduled_tiles: usize,
     /// all-zero tiles dropped from the schedule
     pub elided_tiles: usize,
-    /// contiguous dense program storage; `progs[p]` slices into it
+    /// contiguous dense program storage (LANE-aligned offsets);
+    /// `progs[p]` slices into it
     arena: Vec<f32>,
     progs: Vec<ProgramMeta>,
-    /// CSR-within-tile arenas for sparse-kernel programs: per program
-    /// `rows + 1` row pointers (relative to its `sp_val` base) and the
-    /// column-ordered (col, val) entries
-    sp_rowptr: Vec<u32>,
-    sp_cols: Vec<u32>,
+    /// shared row-pattern table for sparse-kernel programs: per pattern
+    /// `rows + 1` relative row pointers and the column-ordered indices;
+    /// programs with identical structure share one entry
+    patterns: Vec<PatternMeta>,
+    pat_rowptr: Vec<u32>,
+    pat_cols: Vec<u32>,
+    /// per-program sparse values, column-ordered to match the pattern
     sp_vals: Vec<f32>,
     bands: Vec<Band>,
 }
@@ -324,19 +373,22 @@ impl ExecPlan {
                 }
             }
         }
-        let mut arena = Vec::with_capacity(programs.iter().map(|p| p.len()).sum());
+        let payload: usize = programs.iter().map(|p| p.len()).sum();
+        let mut arena = Vec::with_capacity(payload + programs.len() * LANE);
         let mut progs = Vec::with_capacity(programs.len());
         for (i, p) in programs.into_iter().enumerate() {
             let (rows, cols) =
                 extents[i].unwrap_or((if p.is_empty() { 0 } else { 1 }, p.len()));
             let nnz = p.iter().filter(|v| **v != 0.0).count() as u32;
+            // pad so every program body starts on a lane boundary
+            arena.resize(arena.len().next_multiple_of(LANE), 0.0);
             progs.push(ProgramMeta {
                 offset: arena.len(),
                 rows,
                 cols,
                 nnz,
                 kernel: KernelKind::Dense,
-                sp_row: 0,
+                pattern: 0,
                 sp_val: 0,
             });
             arena.extend_from_slice(&p);
@@ -348,7 +400,8 @@ impl ExecPlan {
 
     /// The invariant-establishing constructor tail shared by compile and
     /// the artifact readers: band-sort the schedule, build the bands, and
-    /// derive the sparse arenas from the programs' current kernel flags.
+    /// derive the pattern table and value arena from the programs'
+    /// current kernel flags.
     fn assemble(
         k: usize,
         dim: usize,
@@ -367,8 +420,9 @@ impl ExecPlan {
             elided_tiles,
             arena,
             progs,
-            sp_rowptr: Vec::new(),
-            sp_cols: Vec::new(),
+            patterns: Vec::new(),
+            pat_rowptr: Vec::new(),
+            pat_cols: Vec::new(),
             sp_vals: Vec::new(),
             bands,
         };
@@ -393,50 +447,123 @@ impl ExecPlan {
         self.rebuild_sparse();
     }
 
-    /// Rebuild the sparse arenas from the current kernel flags (compile
-    /// and the v2 artifact reader both end here, so a loaded plan is
-    /// field-identical to the plan that was saved).
+    /// Rebuild the shared pattern table and value arena from the current
+    /// kernel flags (compile and every artifact reader end here, so a
+    /// loaded plan is field-identical to the plan that was saved). Sparse
+    /// programs with the same row-pointer + column-index structure are
+    /// interned into one [`PatternMeta`] — FNV-hashed with exact-compare
+    /// collision chains, the mapper's window-signature cache idiom — so
+    /// one kernel body serves every program sharing the pattern.
     fn rebuild_sparse(&mut self) {
-        self.sp_rowptr.clear();
-        self.sp_cols.clear();
+        self.patterns.clear();
+        self.pat_rowptr.clear();
+        self.pat_cols.clear();
         self.sp_vals.clear();
+        let mut index: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut rowptr: Vec<u32> = Vec::new();
+        let mut cols: Vec<u32> = Vec::new();
         for p in &mut self.progs {
             if p.kernel != KernelKind::Sparse {
-                p.sp_row = 0;
+                p.pattern = 0;
                 p.sp_val = 0;
                 continue;
             }
-            p.sp_row = self.sp_rowptr.len();
+            rowptr.clear();
+            cols.clear();
             p.sp_val = self.sp_vals.len();
             let data = &self.arena[p.offset..p.offset + p.rows * p.cols];
             let mut count = 0u32;
-            self.sp_rowptr.push(0);
+            rowptr.push(0);
             for row in data.chunks_exact(p.cols.max(1)) {
                 for (c, &v) in row.iter().enumerate() {
                     if v != 0.0 {
-                        self.sp_cols.push(c as u32);
+                        cols.push(c as u32);
                         self.sp_vals.push(v);
                         count += 1;
                     }
                 }
-                self.sp_rowptr.push(count);
+                rowptr.push(count);
             }
+            let hash = pattern_fnv(p.rows, &rowptr, &cols);
+            let chain = index.entry(hash).or_default();
+            let (patterns, pat_rowptr, pat_cols) =
+                (&self.patterns, &self.pat_rowptr, &self.pat_cols);
+            let found = chain.iter().copied().find(|&i| {
+                let pat = &patterns[i];
+                pat.rows == p.rows
+                    && pat.nnz as usize == cols.len()
+                    && pat_rowptr[pat.rowptr..pat.rowptr + pat.rows + 1] == rowptr[..]
+                    && pat_cols[pat.cols..pat.cols + pat.nnz as usize] == cols[..]
+            });
+            p.pattern = match found {
+                Some(i) => i,
+                None => {
+                    let i = self.patterns.len();
+                    chain.push(i);
+                    self.patterns.push(PatternMeta {
+                        rowptr: self.pat_rowptr.len(),
+                        cols: self.pat_cols.len(),
+                        rows: p.rows,
+                        nnz: cols.len() as u32,
+                    });
+                    self.pat_rowptr.extend_from_slice(&rowptr);
+                    self.pat_cols.extend_from_slice(&cols);
+                    i
+                }
+            };
         }
     }
 
-    /// y' = A'x' over the scheduled tiles, writing into a reusable output
-    /// buffer (cleared and resized to `dim`). Per-row accumulation order
-    /// matches [`crate::crossbar::CrossbarArray::mvm`].
+    /// y' = A'x' over the scheduled tiles through the vectorized kernels,
+    /// writing into a reusable output buffer (cleared and resized to
+    /// `dim`). Per-row accumulation order matches
+    /// [`crate::crossbar::CrossbarArray::mvm`] bit for bit.
     pub fn mvm_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.dim, "input vector length mismatch");
         y.clear();
         y.resize(self.dim, 0.0);
-        self.accumulate_tiles(x, y);
+        for t in &self.tiles {
+            match self.progs[t.program].kernel {
+                KernelKind::Dense => self.tile_dense(t, x, y),
+                KernelKind::Sparse => self.tile_sparse(t, x, y),
+            }
+        }
     }
 
-    /// Scalar kernel core: run the whole schedule, accumulating into `out`
-    /// (length `dim`), dispatching each tile's compiled kernel.
-    fn accumulate_tiles(&self, x: &[f64], out: &mut [f64]) {
+    /// y' = A'x' through the pre-vectorization *scalar* kernels — the
+    /// seed row-dot / CSR-within-tile loop kept verbatim as the in-tree
+    /// bit-identity oracle and the serve-bench baseline rung.
+    pub fn mvm_scalar_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.dim, "input vector length mismatch");
+        y.clear();
+        y.resize(self.dim, 0.0);
+        self.accumulate_tiles_scalar(x, y);
+    }
+
+    /// Run only the tiles whose program executes through `kind`,
+    /// accumulating into `y` (cleared and resized to `dim`) — the
+    /// roofline ledger's per-kernel timing hook. Summing both kinds'
+    /// outputs reproduces [`Self::mvm_into`] up to f64 addition order
+    /// across kinds; this is a measurement tool, not a serving path.
+    pub fn mvm_kind_into(&self, kind: KernelKind, x: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.dim, "input vector length mismatch");
+        y.clear();
+        y.resize(self.dim, 0.0);
+        for t in &self.tiles {
+            if self.progs[t.program].kernel != kind {
+                continue;
+            }
+            match kind {
+                KernelKind::Dense => self.tile_dense(t, x, y),
+                KernelKind::Sparse => self.tile_sparse(t, x, y),
+            }
+        }
+    }
+
+    /// Scalar kernel core (the seed loop, verbatim): run the whole
+    /// schedule, accumulating into `out` (length `dim`), dispatching each
+    /// tile's compiled kernel.
+    fn accumulate_tiles_scalar(&self, x: &[f64], out: &mut [f64]) {
         for t in &self.tiles {
             let p = &self.progs[t.program];
             let xs = &x[t.col0..t.col0 + t.cols];
@@ -452,10 +579,11 @@ impl ExecPlan {
                     }
                 }
                 KernelKind::Sparse => {
-                    let rp = &self.sp_rowptr[p.sp_row..p.sp_row + t.rows + 1];
+                    let pat = &self.patterns[p.pattern];
+                    let rp = &self.pat_rowptr[pat.rowptr..pat.rowptr + t.rows + 1];
                     for (r, w) in rp.windows(2).enumerate() {
                         let (s, e) = (w[0] as usize, w[1] as usize);
-                        let cols = &self.sp_cols[p.sp_val + s..p.sp_val + e];
+                        let cols = &self.pat_cols[pat.cols + s..pat.cols + e];
                         let vals = &self.sp_vals[p.sp_val + s..p.sp_val + e];
                         let mut acc = 0.0f64;
                         for (c, v) in cols.iter().zip(vals.iter()) {
@@ -465,6 +593,79 @@ impl ExecPlan {
                     }
                 }
             }
+        }
+    }
+
+    /// Vectorized dense kernel for one tile: [`UNROLL`] output rows per
+    /// step, each with its own accumulator walking columns in the scalar
+    /// order, sharing one streamed load of x — the lane-aligned program
+    /// rows autovectorize, and the bits match the scalar kernel exactly.
+    #[inline]
+    fn tile_dense(&self, t: &TileSpec, x: &[f64], out: &mut [f64]) {
+        let p = &self.progs[t.program];
+        let prog = &self.arena[p.offset..p.offset + t.rows * t.cols];
+        let xs = &x[t.col0..t.col0 + t.cols];
+        let cols = t.cols;
+        let mut r = 0usize;
+        while r + UNROLL <= t.rows {
+            let r0 = &prog[r * cols..(r + 1) * cols];
+            let r1 = &prog[(r + 1) * cols..(r + 2) * cols];
+            let r2 = &prog[(r + 2) * cols..(r + 3) * cols];
+            let r3 = &prog[(r + 3) * cols..(r + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for (c, &xv) in xs.iter().enumerate() {
+                a0 += r0[c] as f64 * xv;
+                a1 += r1[c] as f64 * xv;
+                a2 += r2[c] as f64 * xv;
+                a3 += r3[c] as f64 * xv;
+            }
+            out[t.row0 + r] += a0;
+            out[t.row0 + r + 1] += a1;
+            out[t.row0 + r + 2] += a2;
+            out[t.row0 + r + 3] += a3;
+            r += UNROLL;
+        }
+        for (rr, row) in prog.chunks_exact(cols).enumerate().skip(r) {
+            let mut acc = 0.0f64;
+            for (gv, xv) in row.iter().zip(xs.iter()) {
+                acc += *gv as f64 * xv;
+            }
+            out[t.row0 + rr] += acc;
+        }
+    }
+
+    /// Vectorized sparse kernel for one tile: the [`UNROLL`] products of
+    /// each step may evaluate in any order, but the adds fold into the
+    /// single accumulator in the scalar kernel's strict sequence, so the
+    /// bits are unchanged while the gather loads pipeline.
+    #[inline]
+    fn tile_sparse(&self, t: &TileSpec, x: &[f64], out: &mut [f64]) {
+        let p = &self.progs[t.program];
+        let pat = &self.patterns[p.pattern];
+        let rp = &self.pat_rowptr[pat.rowptr..pat.rowptr + t.rows + 1];
+        let xs = &x[t.col0..t.col0 + t.cols];
+        for (r, w) in rp.windows(2).enumerate() {
+            let (s, e) = (w[0] as usize, w[1] as usize);
+            let cols = &self.pat_cols[pat.cols + s..pat.cols + e];
+            let vals = &self.sp_vals[p.sp_val + s..p.sp_val + e];
+            let n = cols.len();
+            let mut acc = 0.0f64;
+            let mut i = 0usize;
+            while i + UNROLL <= n {
+                let p0 = vals[i] as f64 * xs[cols[i] as usize];
+                let p1 = vals[i + 1] as f64 * xs[cols[i + 1] as usize];
+                let p2 = vals[i + 2] as f64 * xs[cols[i + 2] as usize];
+                let p3 = vals[i + 3] as f64 * xs[cols[i + 3] as usize];
+                acc += p0;
+                acc += p1;
+                acc += p2;
+                acc += p3;
+                i += UNROLL;
+            }
+            for (v, c) in vals[i..].iter().zip(cols[i..].iter()) {
+                acc += *v as f64 * xs[*c as usize];
+            }
+            out[t.row0 + r] += acc;
         }
     }
 
@@ -491,7 +692,32 @@ impl ExecPlan {
                         let prog = &self.arena[p.offset..p.offset + t.rows * t.cols];
                         for (r, row) in prog.chunks_exact(t.cols).enumerate() {
                             let orow = t.row0 - span.0 + r;
-                            for (x, out) in xs.iter().zip(outs.iter_mut()) {
+                            // UNROLL requests per step: one streamed pass
+                            // over the program row feeds four independent
+                            // accumulators, each in the scalar column
+                            // order (bit-identical per request)
+                            let mut b = 0usize;
+                            while b + UNROLL <= xs.len() {
+                                let x0 = &xs[b][t.col0..t.col0 + t.cols];
+                                let x1 = &xs[b + 1][t.col0..t.col0 + t.cols];
+                                let x2 = &xs[b + 2][t.col0..t.col0 + t.cols];
+                                let x3 = &xs[b + 3][t.col0..t.col0 + t.cols];
+                                let (mut a0, mut a1, mut a2, mut a3) =
+                                    (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                                for (c, &gv) in row.iter().enumerate() {
+                                    let g = gv as f64;
+                                    a0 += g * x0[c];
+                                    a1 += g * x1[c];
+                                    a2 += g * x2[c];
+                                    a3 += g * x3[c];
+                                }
+                                outs[b][orow] += a0;
+                                outs[b + 1][orow] += a1;
+                                outs[b + 2][orow] += a2;
+                                outs[b + 3][orow] += a3;
+                                b += UNROLL;
+                            }
+                            for (x, out) in xs[b..].iter().zip(outs[b..].iter_mut()) {
                                 let xv = &x[t.col0..t.col0 + t.cols];
                                 let mut acc = 0.0f64;
                                 for (gv, xs_v) in row.iter().zip(xv.iter()) {
@@ -502,13 +728,36 @@ impl ExecPlan {
                         }
                     }
                     KernelKind::Sparse => {
-                        let rp = &self.sp_rowptr[p.sp_row..p.sp_row + t.rows + 1];
+                        let pat = &self.patterns[p.pattern];
+                        let rp = &self.pat_rowptr[pat.rowptr..pat.rowptr + t.rows + 1];
                         for (r, w) in rp.windows(2).enumerate() {
                             let (s, e) = (w[0] as usize, w[1] as usize);
-                            let cols = &self.sp_cols[p.sp_val + s..p.sp_val + e];
+                            let cols = &self.pat_cols[pat.cols + s..pat.cols + e];
                             let vals = &self.sp_vals[p.sp_val + s..p.sp_val + e];
                             let orow = t.row0 - span.0 + r;
-                            for (x, out) in xs.iter().zip(outs.iter_mut()) {
+                            let mut b = 0usize;
+                            while b + UNROLL <= xs.len() {
+                                let x0 = &xs[b][t.col0..];
+                                let x1 = &xs[b + 1][t.col0..];
+                                let x2 = &xs[b + 2][t.col0..];
+                                let x3 = &xs[b + 3][t.col0..];
+                                let (mut a0, mut a1, mut a2, mut a3) =
+                                    (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                                for (c, v) in cols.iter().zip(vals.iter()) {
+                                    let g = *v as f64;
+                                    let ci = *c as usize;
+                                    a0 += g * x0[ci];
+                                    a1 += g * x1[ci];
+                                    a2 += g * x2[ci];
+                                    a3 += g * x3[ci];
+                                }
+                                outs[b][orow] += a0;
+                                outs[b + 1][orow] += a1;
+                                outs[b + 2][orow] += a2;
+                                outs[b + 3][orow] += a3;
+                                b += UNROLL;
+                            }
+                            for (x, out) in xs[b..].iter().zip(outs[b..].iter_mut()) {
                                 let xv = &x[t.col0..];
                                 let mut acc = 0.0f64;
                                 for (c, v) in cols.iter().zip(vals.iter()) {
@@ -637,6 +886,73 @@ impl ExecPlan {
         (self.progs.len() - sparse, sparse)
     }
 
+    /// Number of deduplicated sparse row patterns (compiled kernel
+    /// bodies) in the shared pattern table.
+    pub fn num_patterns(&self) -> usize {
+        self.patterns.len()
+    }
+
+    /// Sparse programs served by a pattern another program interned
+    /// first — the cross-program row-pattern dedup win.
+    pub fn pattern_dedup_hits(&self) -> usize {
+        let sparse = self
+            .progs
+            .iter()
+            .filter(|p| p.kernel == KernelKind::Sparse)
+            .count();
+        sparse - self.patterns.len()
+    }
+
+    /// Shared-pattern table entry `i`.
+    pub fn pattern_meta(&self, i: usize) -> &PatternMeta {
+        &self.patterns[i]
+    }
+
+    /// (dense, sparse) non-zeros served per MVM under the current kernel
+    /// mix — per-tile sums, so shared programs count once per
+    /// referencing tile.
+    pub fn kernel_nnz(&self) -> (u64, u64) {
+        let (mut dense, mut sparse) = (0u64, 0u64);
+        for t in &self.tiles {
+            let p = &self.progs[t.program];
+            match p.kernel {
+                KernelKind::Dense => dense += p.nnz as u64,
+                KernelKind::Sparse => sparse += p.nnz as u64,
+            }
+        }
+        (dense, sparse)
+    }
+
+    /// (dense, sparse) arena bytes touched per MVM: a dense tile streams
+    /// its full rows·cols f32 body; a sparse tile streams the pattern's
+    /// `rows + 1` row pointers and `nnz` column indices plus the
+    /// program's `nnz` values (4 bytes each). The roofline ledger's
+    /// bandwidth denominator.
+    pub fn kernel_bytes(&self) -> (u64, u64) {
+        let (mut dense, mut sparse) = (0u64, 0u64);
+        for t in &self.tiles {
+            let p = &self.progs[t.program];
+            match p.kernel {
+                KernelKind::Dense => dense += (t.rows * t.cols * 4) as u64,
+                KernelKind::Sparse => {
+                    sparse += ((t.rows + 1) * 4) as u64 + p.nnz as u64 * 8;
+                }
+            }
+        }
+        (dense, sparse)
+    }
+
+    /// Total f32 cells in the arena, alignment padding included.
+    pub fn arena_len(&self) -> usize {
+        self.arena.len()
+    }
+
+    /// Zero cells inserted so every program starts on a [`LANE`]
+    /// boundary (arena length minus program payload).
+    pub fn arena_padding(&self) -> usize {
+        self.arena.len() - self.progs.iter().map(|p| p.rows * p.cols).sum::<usize>()
+    }
+
     /// The disjoint, ordered row bands of the schedule.
     pub fn bands(&self) -> &[Band] {
         &self.bands
@@ -644,12 +960,8 @@ impl ExecPlan {
 
     // ---- serialization ---------------------------------------------------
 
-    /// Serialize to the deployable JSON artifact format (version 2: one
-    /// flat arena plus per-program `[offset, rows, cols, nnz, kernel]`
-    /// metadata).
-    pub fn to_json(&self) -> Json {
-        let tiles = self
-            .tiles
+    fn tiles_json(&self) -> Vec<Json> {
+        self.tiles
             .iter()
             .map(|t| {
                 // flat [row0, col0, rows, cols, program] keeps the artifact
@@ -662,7 +974,64 @@ impl ExecPlan {
                     t.program as f64,
                 ])
             })
+            .collect()
+    }
+
+    /// Serialize to the deployable JSON artifact format (version 3: the
+    /// lane-padded arena, per-program
+    /// `[offset, rows, cols, nnz, kernel, pattern]` metadata, and the
+    /// shared row-pattern table). Readers re-derive the table from the
+    /// arena and reject artifacts where the two disagree.
+    pub fn to_json(&self) -> Json {
+        let progs = self
+            .progs
+            .iter()
+            .map(|p| {
+                num_arr([
+                    p.offset as f64,
+                    p.rows as f64,
+                    p.cols as f64,
+                    p.nnz as f64,
+                    match p.kernel {
+                        KernelKind::Dense => 0.0,
+                        KernelKind::Sparse => 1.0,
+                    },
+                    p.pattern as f64,
+                ])
+            })
             .collect();
+        let patterns = self
+            .patterns
+            .iter()
+            .map(|pat| {
+                num_arr([
+                    pat.rowptr as f64,
+                    pat.cols as f64,
+                    pat.rows as f64,
+                    pat.nnz as f64,
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::Num(3.0)),
+            ("k", Json::Num(self.k as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("lane", Json::Num(LANE as f64)),
+            ("scheduled_tiles", Json::Num(self.scheduled_tiles as f64)),
+            ("elided_tiles", Json::Num(self.elided_tiles as f64)),
+            ("tiles", Json::Arr(self.tiles_json())),
+            ("arena", num_arr(self.arena.iter().map(|&v| v as f64))),
+            ("programs", Json::Arr(progs)),
+            ("patterns", Json::Arr(patterns)),
+            ("pattern_rowptr", num_arr(self.pat_rowptr.iter().map(|&v| v as f64))),
+            ("pattern_cols", num_arr(self.pat_cols.iter().map(|&v| v as f64))),
+        ])
+    }
+
+    /// Serialize to the version-2 format (flat arena plus 5-field program
+    /// metadata, no pattern table) — kept for compatibility testing and
+    /// rollback to pre-pattern readers.
+    pub fn to_json_v2(&self) -> Json {
         let progs = self
             .progs
             .iter()
@@ -685,7 +1054,7 @@ impl ExecPlan {
             ("dim", Json::Num(self.dim as f64)),
             ("scheduled_tiles", Json::Num(self.scheduled_tiles as f64)),
             ("elided_tiles", Json::Num(self.elided_tiles as f64)),
-            ("tiles", Json::Arr(tiles)),
+            ("tiles", Json::Arr(self.tiles_json())),
             ("arena", num_arr(self.arena.iter().map(|&v| v as f64))),
             ("programs", Json::Arr(progs)),
         ])
@@ -695,19 +1064,6 @@ impl ExecPlan {
     /// arrays, no kernel metadata) — kept for compatibility testing and
     /// rollback to pre-arena readers.
     pub fn to_json_v1(&self) -> Json {
-        let tiles = self
-            .tiles
-            .iter()
-            .map(|t| {
-                num_arr([
-                    t.row0 as f64,
-                    t.col0 as f64,
-                    t.rows as f64,
-                    t.cols as f64,
-                    t.program as f64,
-                ])
-            })
-            .collect();
         let programs = (0..self.progs.len())
             .map(|p| num_arr(self.program(p).iter().map(|&v| v as f64)))
             .collect();
@@ -717,17 +1073,23 @@ impl ExecPlan {
             ("dim", Json::Num(self.dim as f64)),
             ("scheduled_tiles", Json::Num(self.scheduled_tiles as f64)),
             ("elided_tiles", Json::Num(self.elided_tiles as f64)),
-            ("tiles", Json::Arr(tiles)),
+            ("tiles", Json::Arr(self.tiles_json())),
             ("programs", Json::Arr(programs)),
         ])
     }
 
-    /// Parse and validate a plan document (version 1 or 2).
+    /// Parse and validate a plan document (version 1, 2, or 3). Pre-v3
+    /// artifacts load with the pattern table and lane alignment
+    /// backfilled: program bodies are repacked onto [`LANE`] boundaries
+    /// (saved kernel flags preserved) and the pattern table re-derived
+    /// from the arena, so an old artifact gains the full vectorized path
+    /// on load.
     pub fn from_json(doc: &Json) -> Result<ExecPlan> {
         let version = doc.get("version").as_usize().context("plan missing version")?;
         match version {
             1 => Self::from_json_v1(doc),
             2 => Self::from_json_v2(doc),
+            3 => Self::from_json_v3(doc),
             v => bail!("unsupported plan version {v}"),
         }
     }
@@ -814,27 +1176,135 @@ impl ExecPlan {
                 cols,
                 nnz: nnz as u32,
                 kernel,
-                sp_row: 0,
+                pattern: 0,
                 sp_val: 0,
             });
         }
         let tiles = parse_tiles(doc, k, dim)?;
-        for (i, t) in tiles.iter().enumerate() {
-            let p = progs
-                .get(t.program)
-                .with_context(|| format!("tile {i} references missing program {}", t.program))?;
+        check_tile_programs(&tiles, &progs)?;
+        check_accounting(tiles.len(), elided_tiles, scheduled_tiles)?;
+        // v2 artifacts predate alignment padding: repack program bodies
+        // onto lane boundaries, preserving each saved kernel flag
+        // (from_parts would re-select at the default threshold); assemble
+        // backfills the pattern table from the arena.
+        let packed = repack_aligned(&arena, &mut progs);
+        Ok(ExecPlan::assemble(k, dim, tiles, packed, progs, scheduled_tiles, elided_tiles))
+    }
+
+    fn from_json_v3(doc: &Json) -> Result<ExecPlan> {
+        let (k, dim, scheduled_tiles, elided_tiles) = parse_header(doc)?;
+        let lane = doc.get("lane").as_usize().context("plan missing lane")?;
+        ensure!(lane >= 1, "plan has degenerate lane width");
+        let arena_vals = doc.get("arena").as_arr().context("plan missing arena")?;
+        let mut arena = Vec::with_capacity(arena_vals.len());
+        for v in arena_vals {
+            arena.push(v.as_f64().context("arena: non-number")? as f32);
+        }
+        let pat_rowptr = parse_u32_arr(doc, "pattern_rowptr")?;
+        let pat_cols = parse_u32_arr(doc, "pattern_cols")?;
+        let mut patterns = Vec::new();
+        for (i, entry) in doc
+            .get("patterns")
+            .as_arr()
+            .context("plan missing patterns")?
+            .iter()
+            .enumerate()
+        {
+            let f = entry.as_arr().with_context(|| format!("pattern {i} not an array"))?;
+            ensure!(f.len() == 4, "pattern {i} needs 4 fields, got {}", f.len());
+            let mut nums = [0usize; 4];
+            for (slot, v) in nums.iter_mut().zip(f.iter()) {
+                *slot = v.as_usize().with_context(|| format!("pattern {i}: bad field"))?;
+            }
+            let [rowptr, cols, rows, nnz] = nums;
             ensure!(
-                p.rows == t.rows && p.cols == t.cols,
-                "tile {i} is {}x{} but program {} is {}x{}",
-                t.rows,
-                t.cols,
-                t.program,
-                p.rows,
-                p.cols
+                rowptr + rows + 1 <= pat_rowptr.len() && cols + nnz <= pat_cols.len(),
+                "pattern {i} exceeds the pattern arenas"
+            );
+            patterns.push(PatternMeta {
+                rowptr,
+                cols,
+                rows,
+                nnz: nnz as u32,
+            });
+        }
+        let mut progs = Vec::new();
+        let mut saved_patterns = Vec::new();
+        for (i, entry) in doc
+            .get("programs")
+            .as_arr()
+            .context("plan missing programs")?
+            .iter()
+            .enumerate()
+        {
+            let f = entry.as_arr().with_context(|| format!("program {i} not an array"))?;
+            ensure!(f.len() == 6, "program {i} needs 6 fields, got {}", f.len());
+            let mut nums = [0usize; 6];
+            for (slot, v) in nums.iter_mut().zip(f.iter()) {
+                *slot = v.as_usize().with_context(|| format!("program {i}: bad field"))?;
+            }
+            let [offset, rows, cols, nnz, kernel, pattern] = nums;
+            ensure!(
+                offset + rows * cols <= arena.len(),
+                "program {i} exceeds the {}-element arena",
+                arena.len()
+            );
+            let actual = arena[offset..offset + rows * cols]
+                .iter()
+                .filter(|v| **v != 0.0)
+                .count();
+            ensure!(
+                actual == nnz,
+                "program {i} metadata says {nnz} nnz but the arena holds {actual}"
+            );
+            let kernel = match kernel {
+                0 => KernelKind::Dense,
+                1 => KernelKind::Sparse,
+                other => bail!("program {i} has unknown kernel kind {other}"),
+            };
+            match kernel {
+                KernelKind::Sparse => ensure!(
+                    pattern < patterns.len(),
+                    "program {i} references missing pattern {pattern}"
+                ),
+                KernelKind::Dense => {
+                    ensure!(pattern == 0, "dense program {i} carries pattern {pattern}")
+                }
+            }
+            saved_patterns.push(pattern);
+            progs.push(ProgramMeta {
+                offset,
+                rows,
+                cols,
+                nnz: nnz as u32,
+                kernel,
+                pattern: 0,
+                sp_val: 0,
+            });
+        }
+        let tiles = parse_tiles(doc, k, dim)?;
+        check_tile_programs(&tiles, &progs)?;
+        check_accounting(tiles.len(), elided_tiles, scheduled_tiles)?;
+        // repack with the *current* lane width (forward-compatible with
+        // artifacts written under a different LANE), then validate the
+        // serialized pattern table against the arena-derived one — the
+        // table is an integrity record, never trusted as-is
+        let packed = repack_aligned(&arena, &mut progs);
+        let plan = ExecPlan::assemble(k, dim, tiles, packed, progs, scheduled_tiles, elided_tiles);
+        ensure!(
+            plan.patterns == patterns
+                && plan.pat_rowptr == pat_rowptr
+                && plan.pat_cols == pat_cols,
+            "pattern table mismatch: artifact disagrees with the arena-derived table"
+        );
+        for (i, (&saved, p)) in saved_patterns.iter().zip(plan.progs.iter()).enumerate() {
+            ensure!(
+                saved == p.pattern,
+                "pattern table mismatch: program {i} says pattern {saved}, derived {}",
+                p.pattern
             );
         }
-        check_accounting(tiles.len(), elided_tiles, scheduled_tiles)?;
-        Ok(ExecPlan::assemble(k, dim, tiles, arena, progs, scheduled_tiles, elided_tiles))
+        Ok(plan)
     }
 
     /// Write the plan artifact to disk.
@@ -877,6 +1347,77 @@ fn band_layout(tiles: &mut [TileSpec], progs: &[ProgramMeta]) -> Vec<Band> {
         }
     }
     bands
+}
+
+/// Repack program bodies into a fresh arena with every offset padded to a
+/// [`LANE`] boundary, updating offsets in place. Artifact readers route
+/// through this, so pre-padding (v1/v2) artifacts gain the alignment
+/// invariant on load; for an already-aligned arena it reproduces the
+/// input byte for byte.
+fn repack_aligned(arena: &[f32], progs: &mut [ProgramMeta]) -> Vec<f32> {
+    let mut packed = Vec::with_capacity(arena.len() + progs.len() * LANE);
+    for p in progs {
+        let data = &arena[p.offset..p.offset + p.rows * p.cols];
+        packed.resize(packed.len().next_multiple_of(LANE), 0.0);
+        p.offset = packed.len();
+        packed.extend_from_slice(data);
+    }
+    packed
+}
+
+/// FNV-1a over a row pattern (row count, relative row pointers, column
+/// indices) — the same hash the mapper's window-signature cache uses.
+fn pattern_fnv(rows: usize, rowptr: &[u32], cols: &[u32]) -> u64 {
+    fn eat(mut hash: u64, word: u64) -> u64 {
+        for b in word.to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        hash
+    }
+    let mut hash = 0xcbf2_9ce4_8422_2325u64;
+    hash = eat(hash, rows as u64);
+    for &v in rowptr {
+        hash = eat(hash, v as u64);
+    }
+    for &v in cols {
+        hash = eat(hash, v as u64);
+    }
+    hash
+}
+
+/// Every tile must reference an in-range program whose extents agree with
+/// the tile's (shared by the v2 and v3 readers).
+fn check_tile_programs(tiles: &[TileSpec], progs: &[ProgramMeta]) -> Result<()> {
+    for (i, t) in tiles.iter().enumerate() {
+        let p = progs
+            .get(t.program)
+            .with_context(|| format!("tile {i} references missing program {}", t.program))?;
+        ensure!(
+            p.rows == t.rows && p.cols == t.cols,
+            "tile {i} is {}x{} but program {} is {}x{}",
+            t.rows,
+            t.cols,
+            t.program,
+            p.rows,
+            p.cols
+        );
+    }
+    Ok(())
+}
+
+fn parse_u32_arr(doc: &Json, field: &str) -> Result<Vec<u32>> {
+    let vals = doc
+        .get(field)
+        .as_arr()
+        .with_context(|| format!("plan missing {field}"))?;
+    let mut out = Vec::with_capacity(vals.len());
+    for v in vals {
+        let n = v.as_usize().with_context(|| format!("{field}: bad entry"))?;
+        ensure!(n <= u32::MAX as usize, "{field}: entry {n} overflows u32");
+        out.push(n as u32);
+    }
+    Ok(out)
 }
 
 fn parse_header(doc: &Json) -> Result<(usize, usize, usize, usize)> {
@@ -1139,6 +1680,202 @@ mod tests {
     }
 
     #[test]
+    fn v2_artifact_reader_roundtrips_and_backfills() {
+        // a v2 artifact written by this build round-trips exactly …
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let mut plan = compile(&m, &g, &scheme).unwrap();
+        plan.rekernel(f64::INFINITY); // forced flags must survive the trip
+        let doc = plan.to_json_v2();
+        assert_eq!(doc.get("version").as_usize(), Some(2));
+        let back = ExecPlan::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(plan, back);
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 5) % 29) as f64 - 14.0).collect();
+        assert_eq!(plan.mvm(&x), back.mvm(&x));
+        // … and a pre-padding artifact (programs packed back to back, as
+        // the old writer emitted) loads with alignment and the pattern
+        // table backfilled, kernel flags preserved
+        let text = r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":2,"elided_tiles":0,
+            "tiles":[[0,0,2,2,0],[2,2,2,2,1]],"arena":[1,2,0,1,5,0,0,3],
+            "programs":[[0,2,2,3,0],[4,2,2,2,1]]}"#;
+        let old = ExecPlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        for p in 0..old.num_programs() {
+            assert_eq!(old.program_meta(p).offset % LANE, 0, "program {p} unaligned");
+        }
+        // density 0.5 would re-select dense at the default threshold; the
+        // saved sparse flag must win
+        assert_eq!(old.kernel_counts(), (1, 1));
+        assert_eq!(old.num_patterns(), 1, "one sparse program, one pattern");
+        assert_eq!(old.mvm(&[1.0, 2.0, 3.0, 4.0]), vec![5.0, 2.0, 15.0, 12.0]);
+        // cross-version: v3(v2(plan)) still equals the plan
+        let v3 = old.to_json();
+        let back = ExecPlan::from_json(&Json::parse(&v3.to_string()).unwrap()).unwrap();
+        assert_eq!(old, back);
+    }
+
+    #[test]
+    fn programs_start_on_lane_boundaries() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let aligned = |p: &ExecPlan| {
+            (0..p.num_programs()).all(|i| p.program_meta(i).offset % LANE == 0)
+        };
+        assert!(aligned(&plan), "compile must pad offsets to lanes");
+        assert!(plan.arena_padding() < plan.num_programs().max(1) * LANE);
+        let payload: usize = (0..plan.num_programs()).map(|i| plan.program(i).len()).sum();
+        assert_eq!(plan.arena_len(), plan.arena_padding() + payload);
+        let mut sparse = plan.clone();
+        sparse.rekernel(f64::INFINITY);
+        assert!(aligned(&sparse), "rekernel must not disturb the arena");
+        let doc = plan.to_json_v1();
+        let v1 = ExecPlan::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert!(aligned(&v1), "v1 reader must backfill alignment");
+    }
+
+    #[test]
+    fn row_pattern_dedup_shares_kernel_bodies() {
+        // two 4×4 diagonal blocks with the same sparsity pattern but
+        // different values: program dedup cannot share them, pattern
+        // dedup must
+        let mut coo = crate::graph::Coo::new(8, 8);
+        for (b, scale) in [(0usize, 1.0f64), (4, 10.0)] {
+            coo.push(b, b, scale);
+            coo.push(b + 2, b + 1, 2.0 * scale);
+            coo.push(b + 3, b + 3, 3.0 * scale);
+        }
+        let m = coo.to_csr();
+        let g = GridSummary::new(&m, 4);
+        let scheme = Scheme {
+            diag_len: vec![1, 1],
+            fill_len: vec![0],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        assert_eq!(plan.num_programs(), 2, "distinct values must stay distinct programs");
+        assert_eq!(plan.kernel_counts(), (0, 2), "3/16 density selects sparse");
+        assert_eq!(plan.num_patterns(), 1, "identical row patterns must share one body");
+        assert_eq!(plan.pattern_dedup_hits(), 1);
+        let pat = plan.pattern_meta(0);
+        assert_eq!((pat.rows, pat.nnz), (4, 3));
+        let x: Vec<f64> = (0..8).map(|i| i as f64 + 1.0).collect();
+        let want = m.spmv(&x);
+        assert_eq!(plan.mvm(&x), want, "shared pattern, per-program values");
+        // forcing dense clears the table; sparse rebuilds it identically
+        let mut dense = plan.clone();
+        dense.rekernel(0.0);
+        assert_eq!(dense.num_patterns(), 0);
+        assert_eq!(dense.pattern_dedup_hits(), 0);
+        dense.rekernel(f64::INFINITY);
+        assert_eq!(dense.num_patterns(), 1);
+        assert_eq!(dense.pattern_dedup_hits(), 1);
+        assert_eq!(dense.mvm(&x), want);
+    }
+
+    #[test]
+    fn kind_filtered_mvm_partitions_the_schedule() {
+        let (m, g) = qh882_setup();
+        let scheme = Scheme {
+            diag_len: vec![g.n],
+            fill_len: vec![],
+        };
+        let plan = compile(&m, &g, &scheme).unwrap();
+        let x: Vec<f64> = (0..g.dim).map(|i| ((i * 11) % 31) as f64 - 15.0).collect();
+        let (mut yd, mut ys) = (Vec::new(), Vec::new());
+        plan.mvm_kind_into(KernelKind::Dense, &x, &mut yd);
+        plan.mvm_kind_into(KernelKind::Sparse, &x, &mut ys);
+        let y = plan.mvm(&x);
+        for i in 0..plan.dim {
+            assert!(
+                (yd[i] + ys[i] - y[i]).abs() < 1e-9,
+                "row {i}: kind split {} + {} vs {}",
+                yd[i],
+                ys[i],
+                y[i]
+            );
+        }
+        let (dn, sn) = plan.kernel_nnz();
+        assert_eq!(dn + sn, plan.mapped_nnz(), "per-kind nnz must partition the total");
+        let (dense_k, sparse_k) = plan.kernel_counts();
+        let (db, sb) = plan.kernel_bytes();
+        assert_eq!(db > 0, dense_k > 0, "dense bytes track dense programs");
+        assert_eq!(sb > 0, sparse_k > 0, "sparse bytes track sparse programs");
+        assert!(db + sb > 0, "a non-empty schedule touches arena bytes");
+    }
+
+    #[test]
+    fn odd_geometry_kernels_stay_bit_identical_property() {
+        // unaligned/odd-sized programs: rows and cols away from any lane
+        // or unroll multiple, single-element tiles (grid 1), all-zero
+        // rows inside surviving tiles, empty matrices — every path must
+        // still reproduce the seed scalar loop bit for bit at 1/2/8
+        // workers in both exec modes.
+        check("engine_odd_geometry_bit_identical", 10, |rng| {
+            let dims = [1usize, 2, 3, 5, 7, 9, 13, 17];
+            let dim = dims[rng.below(dims.len() as u64) as usize];
+            let grid = 1 + rng.below(7) as usize;
+            let mut coo = crate::graph::Coo::new(dim, dim);
+            let entries = rng.below((dim * dim) as u64 + 1) as usize;
+            for _ in 0..entries {
+                coo.push(
+                    rng.below(dim as u64) as usize,
+                    rng.below(dim as u64) as usize,
+                    rng.uniform(-2.0, 2.0),
+                );
+            }
+            let m = coo.to_csr();
+            let g = GridSummary::new(&m, grid);
+            let scheme = Scheme {
+                diag_len: vec![g.n],
+                fill_len: vec![],
+            };
+            let plan = compile(&m, &g, &scheme).map_err(|e| format!("{e:#}"))?;
+            let bsz = 1 + rng.below(9) as usize;
+            let xs: Vec<Vec<f64>> = (0..bsz)
+                .map(|_| (0..dim).map(|_| rng.uniform(-3.0, 3.0)).collect())
+                .collect();
+            let want: Vec<Vec<f64>> = xs.iter().map(|x| seed_reference(&plan, x)).collect();
+            let mut dense = plan.clone();
+            dense.rekernel(0.0);
+            let mut sparse = plan.clone();
+            sparse.rekernel(f64::INFINITY);
+            let mut y = Vec::new();
+            for (x, w) in xs.iter().zip(want.iter()) {
+                plan.mvm_scalar_into(x, &mut y);
+                if &y != w {
+                    return Err("scalar kernel diverged from seed".into());
+                }
+                if &plan.mvm(x) != w || &dense.mvm(x) != w || &sparse.mvm(x) != w {
+                    return Err("vectorized kernel diverged from seed".into());
+                }
+            }
+            let mut ys = Vec::new();
+            plan.mvm_batch_into(&xs, &mut ys);
+            if ys != want {
+                return Err("multi-RHS kernel diverged from seed".into());
+            }
+            for variant in [plan, sparse] {
+                let variant = Arc::new(variant);
+                for &workers in &[1usize, 2, 8] {
+                    let exec = BatchExecutor::new(variant.clone(), workers);
+                    if exec.execute_batch_sharded(xs.clone()) != want {
+                        return Err(format!("sharded mode at {workers} workers diverged"));
+                    }
+                    if exec.execute_batch(xs.clone()) != want {
+                        return Err(format!("scalar mode at {workers} workers diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn save_load_roundtrip_on_disk() {
         let sub = synth::qm7_like(5828);
         let g = GridSummary::new(&sub, 2);
@@ -1162,7 +1899,30 @@ mod tests {
         for text in [
             "{}",
             // future version
-            r#"{"version":3,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
+            r#"{"version":4,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
+            // v3 without a lane width
+            r#"{"version":3,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],
+                "arena":[],"programs":[],"patterns":[],"pattern_rowptr":[],"pattern_cols":[]}"#,
+            // v3 program referencing a missing pattern
+            r#"{"version":3,"k":2,"dim":4,"lane":8,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[0,1,0,0],"programs":[[0,2,2,1,1,3]],
+                "patterns":[[0,0,2,1]],"pattern_rowptr":[0,1,1],"pattern_cols":[1]}"#,
+            // v3 dense program carrying a pattern index
+            r#"{"version":3,"k":2,"dim":4,"lane":8,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[0,1,0,0],"programs":[[0,2,2,1,0,1]],
+                "patterns":[[0,0,2,1]],"pattern_rowptr":[0,1,1],"pattern_cols":[1]}"#,
+            // v3 pattern table disagreeing with the arena (wrong column)
+            r#"{"version":3,"k":2,"dim":4,"lane":8,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[0,1,0,0],"programs":[[0,2,2,1,1,0]],
+                "patterns":[[0,0,2,1]],"pattern_rowptr":[0,1,1],"pattern_cols":[0]}"#,
+            // v3 pattern metadata exceeding the pattern arenas
+            r#"{"version":3,"k":2,"dim":4,"lane":8,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[0,1,0,0],"programs":[[0,2,2,1,1,0]],
+                "patterns":[[0,0,2,1]],"pattern_rowptr":[0,1],"pattern_cols":[1]}"#,
+            // v3 5-field (v2-shaped) program metadata
+            r#"{"version":3,"k":2,"dim":4,"lane":8,"scheduled_tiles":1,"elided_tiles":0,
+                "tiles":[[0,0,2,2,0]],"arena":[0,1,0,0],"programs":[[0,2,2,1,1]],
+                "patterns":[[0,0,2,1]],"pattern_rowptr":[0,1,1],"pattern_cols":[1]}"#,
             // v2 without an arena
             r#"{"version":2,"k":2,"dim":4,"scheduled_tiles":0,"elided_tiles":0,"tiles":[],"programs":[]}"#,
             // v2 program metadata exceeding the arena
@@ -1235,6 +1995,8 @@ mod tests {
         assert_eq!(merged.scheduled_tiles, whole.scheduled_tiles);
         assert_eq!(merged.elided_tiles, whole.elided_tiles);
         assert_eq!(merged.num_programs(), whole.num_programs(), "cross-part dedup");
+        assert_eq!(merged.num_patterns(), whole.num_patterns(), "cross-part pattern dedup");
+        assert_eq!(merged.pattern_dedup_hits(), whole.pattern_dedup_hits());
         let x: Vec<f64> = (0..g.dim).map(|i| ((i * 7) % 13) as f64 - 6.0).collect();
         assert_eq!(merged.mvm(&x), whole.mvm(&x));
         // dimension mismatches are rejected
@@ -1309,7 +2071,12 @@ mod tests {
             dense.rekernel(0.0);
             let mut sparse = plan.clone();
             sparse.rekernel(f64::INFINITY);
+            let mut scalar_y = Vec::new();
             for (x, w) in xs.iter().zip(want.iter()) {
+                plan.mvm_scalar_into(x, &mut scalar_y);
+                if &scalar_y != w {
+                    return Err("preserved scalar kernel diverged from seed".into());
+                }
                 if &plan.mvm(x) != w {
                     return Err("auto-kernel mvm diverged from seed".into());
                 }

@@ -44,22 +44,37 @@
 //! extents, compile-time nnz, kernel kind), the tile schedule
 //! stable-sorted into disjoint **row bands**, and per-program
 //! **density-adaptive kernels** — the dense row-dot kernel, or a compiled
-//! CSR-within-tile kernel below a density threshold. Plans ship as JSON
-//! artifacts (version 2 stores the arena layout; version 1 still loads).
-//! The plan's tiles are distributed over a simulated crossbar
-//! [`engine::Fleet`] for latency/energy accounting, and an
+//! CSR-within-tile kernel below a density threshold (retunable at load
+//! time via `--dense-threshold`). Plans ship as JSON artifacts (version 3
+//! adds the shared row-pattern table and the lane width; versions 1 and 2
+//! still load — the loader backfills the pattern table and recomputes the
+//! lane alignment). The plan's tiles are distributed over a simulated
+//! crossbar [`engine::Fleet`] for latency/energy accounting, and an
 //! [`engine::BatchExecutor`] worker pool serves batched MVM requests in
 //! two modes — scalar per-request fan-out, or row-band spans sharded
 //! across workers *within* a request batch with a multi-RHS kernel (one
-//! arena traversal per span per batch). Every mode is bit-identical to
-//! the [`crossbar::CrossbarArray::mvm`] oracle for any worker count and
-//! batch size: each output row is produced by one worker in one fixed
-//! band order, and the sparse kernel only skips exact-zero products. The
+//! arena traversal per span per batch).
+//!
+//! **The hot path is vectorized.** Every dense program body starts on an
+//! [`engine::LANE`]-cell arena boundary (padding inserted at compile
+//! time), and the kernels unroll 4-wide over *independent accumulation
+//! chains only* — four output rows per step in the dense kernel, four
+//! requests per step in the multi-RHS kernels, four pipelined gather
+//! products folded in program order in the sparse kernel — so f64
+//! addition order never changes. Sparse programs with identical
+//! column-index signatures (FNV-hashed, exact-compared) share one
+//! compiled **row pattern**: one index body serves many programs, private
+//! values stay per-program. Every mode is bit-identical to the
+//! [`crossbar::CrossbarArray::mvm`] oracle for any worker count and batch
+//! size: each output row is produced by one worker in one fixed band
+//! order, and the sparse kernel only skips exact-zero products. The
 //! `serve-bench` CLI subcommand replays synthetic request traces against
 //! the engine (named datasets or `--dataset rmat` synthetic graphs) and
-//! records the scalar baseline and optimized throughput side by side in
-//! `BENCH_engine.json` (`--assert-speedup` turns the comparison into a
-//! CI regression gate).
+//! records the scalar baseline, the single-thread vectorized kernels, the
+//! optimized executor throughput, and a per-kernel roofline breakdown
+//! (dense/sparse nnz/s, arena bytes, pattern-dedup hit rate) side by side
+//! in `BENCH_engine.json` (`--assert-speedup` turns the vectorized-vs-
+//! scalar comparison into a CI regression gate).
 //!
 //! ## Large-scale mapping
 //!

@@ -207,6 +207,7 @@ impl Servable for CompositePlan {
 
     fn stats(&self) -> ServeStats {
         let (kernel_dense, kernel_sparse) = self.plan.kernel_counts();
+        let (nnz_dense, nnz_sparse) = self.plan.kernel_nnz();
         ServeStats {
             dim: self.plan.dim,
             tiles: self.plan.tiles.len(),
@@ -214,6 +215,10 @@ impl Servable for CompositePlan {
             bands: self.plan.bands().len(),
             kernel_dense,
             kernel_sparse,
+            nnz_dense,
+            nnz_sparse,
+            patterns: self.plan.num_patterns(),
+            pattern_dedup_hits: self.plan.pattern_dedup_hits(),
             mapped_nnz: self.mapped_nnz(),
             spilled_nnz: self.spilled_nnz(),
             area_cells: self.plan.cells(),
@@ -263,6 +268,12 @@ mod tests {
         // conservation: mapped + spilled = total
         assert_eq!(cp.mapped_nnz() + cp.spilled_nnz(), m.nnz() as u64);
         assert!(cp.spilled_nnz() > 0, "band entries cross the cut");
+        // per-kernel counters partition the mapped side and survive the
+        // cross-window merge
+        let s = Servable::stats(&cp);
+        assert_eq!(s.nnz_dense + s.nnz_sparse, cp.mapped_nnz());
+        assert_eq!(s.kernel_dense + s.kernel_sparse, s.programs);
+        assert_eq!(s.patterns + s.pattern_dedup_hits, s.kernel_sparse);
         // integer inputs: adjacency products and partial sums are exact,
         // so any accumulation order gives the bit-identical dense answer
         let x: Vec<f64> = (0..90).map(|i| ((i * 11) % 23) as f64 - 11.0).collect();

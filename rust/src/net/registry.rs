@@ -216,9 +216,13 @@ impl Tenant {
     }
 
     /// The per-tenant stats object the `{"admin":"stats"}` wire request
-    /// returns: traffic rates, queue state, rejection counts, generation.
+    /// returns: traffic rates, queue state, rejection counts, generation,
+    /// and the current generation's kernel mix (dense/sparse program
+    /// counts, per-kernel nnz, pattern-dedup hits) so operators can see
+    /// what a reload did to the serving hot path.
     pub fn stats_json(&self) -> Json {
         let entry = self.entry();
+        let kernels = entry.deployment().stats();
         let wall = self.t0.elapsed().as_secs_f64().max(1e-9);
         let served = self.served.load(Ordering::Relaxed);
         let mut map = BTreeMap::new();
@@ -244,6 +248,23 @@ impl Tenant {
         map.insert("generation".into(), Json::Num(entry.generation as f64));
         map.insert("dim".into(), Json::Num(entry.dim() as f64));
         map.insert("nnz".into(), Json::Num(entry.nnz() as f64));
+        map.insert("mapped_nnz".into(), Json::Num(kernels.mapped_nnz as f64));
+        map.insert("spilled_nnz".into(), Json::Num(kernels.spilled_nnz as f64));
+        map.insert(
+            "kernel_dense".into(),
+            Json::Num(kernels.kernel_dense as f64),
+        );
+        map.insert(
+            "kernel_sparse".into(),
+            Json::Num(kernels.kernel_sparse as f64),
+        );
+        map.insert("nnz_dense".into(), Json::Num(kernels.nnz_dense as f64));
+        map.insert("nnz_sparse".into(), Json::Num(kernels.nnz_sparse as f64));
+        map.insert("row_patterns".into(), Json::Num(kernels.patterns as f64));
+        map.insert(
+            "pattern_dedup_hits".into(),
+            Json::Num(kernels.pattern_dedup_hits as f64),
+        );
         map.insert("rps".into(), Json::Num(served as f64 / wall));
         map.insert(
             "nnz_per_s".into(),
@@ -482,5 +503,28 @@ mod tests {
         assert_eq!(stats.get("a").get("served").as_i64(), Some(1));
         assert_eq!(stats.get("b").get("served").as_i64(), Some(0));
         assert!(stats.get("a").get("nnz_per_s").as_f64().unwrap() > 0.0);
+        // the kernel-mix ledger is internally consistent per tenant
+        for id in ["a", "b"] {
+            let t = stats.get(id);
+            let dense = t.get("kernel_dense").as_i64().unwrap();
+            let sparse = t.get("kernel_sparse").as_i64().unwrap();
+            assert!(dense + sparse > 0, "tenant {id} reports no kernels");
+            assert_eq!(
+                t.get("nnz_dense").as_i64().unwrap() + t.get("nnz_sparse").as_i64().unwrap(),
+                t.get("mapped_nnz").as_i64().unwrap(),
+                "tenant {id}: per-kernel nnz must partition the mapped nnz"
+            );
+            assert_eq!(
+                t.get("mapped_nnz").as_i64().unwrap() + t.get("spilled_nnz").as_i64().unwrap(),
+                t.get("nnz").as_i64().unwrap(),
+                "tenant {id}: mapped + spilled must equal the total nnz"
+            );
+            assert_eq!(
+                t.get("row_patterns").as_i64().unwrap()
+                    + t.get("pattern_dedup_hits").as_i64().unwrap(),
+                sparse,
+                "tenant {id}: every sparse program is either a pattern owner or a dedup hit"
+            );
+        }
     }
 }
