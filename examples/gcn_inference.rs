@@ -1,190 +1,125 @@
-//! End-to-end driver: spectral GCN inference through mapped crossbars.
+//! End-to-end driver: spectral GCN inference through a mapped deployment.
 //!
 //! This is the workload the paper's §III motivates (Eq. 1): the GCN's
 //! normalized adjacency Â is the sparse matrix mapped onto crossbars. The
-//! pipeline exercised here is the full stack:
+//! pipeline exercised here is the production stack end to end:
 //!
-//!   synth graph → CM reorder (Eq. 3) → RL-trained mapping scheme →
-//!   crossbar tile placement → per-layer propagation with the switch
-//!   circuit (x'=Px in, y=Pᵀy' out, Eqs. 4-6)
+//!   synth R-MAT graph → Â = D̂^{-1/2}(A+I)D̂^{-1/2} → api facade
+//!   (RCM reorder → fixed-block mapping → compiled plan arena) →
+//!   multi-layer GCN forward, one multi-RHS batch per layer
 //!
-//! computed twice: through the host crossbar simulator AND — when an
-//! `artifacts/` directory exists — through the AOT `mvm_qm7` artifact (the
-//! L1 Pallas block_mvm kernel via PJRT). Both are verified against the
-//! dense oracle, and latency/throughput + the crossbar cost model are
-//! reported.
+//! and then demonstrates the point of the `algo` layer: the *same* mapped
+//! asset answers PageRank and BFS without reprogramming a single cell —
+//! the crossbar always computes y = Âx, and each algorithm's semiring
+//! lives in the digital post-step.
+//!
+//! Every path is verified: GCN features against the dense per-layer
+//! oracle (≤ 1e-5), BFS levels bit-identical to the queue reference, and
+//! PageRank against the host-CSR run of the same iteration loop.
 //!
 //! Run: `cargo run --release --example gcn_inference`
-//! (fresh checkout: trains on the native backend and skips the PJRT
-//! section; `make artifacts` enables the AOT path end-to-end)
+//! (pure native path — no artifacts, controller, or training required)
 
-use autogmap::coordinator::config::{Dataset, ExperimentConfig};
-use autogmap::coordinator::{run_experiment, RunnerOptions};
-use autogmap::crossbar::cost::CostModel;
-use autogmap::crossbar::switch::SwitchCircuit;
-use autogmap::crossbar::{place, CrossbarArray};
-use autogmap::gcn::{max_abs_diff, normalized_adjacency, GcnLayer};
-use autogmap::graph::GridSummary;
-use autogmap::reorder::{reorder, Reordering};
-use autogmap::runtime::{literal, Runtime};
-use autogmap::scheme::FillRule;
+use autogmap::algo::{
+    bfs, bfs_reference, gcn_forward, max_abs_diff, normalized_adjacency, pagerank, BfsOptions,
+    CsrEngine, DeploymentEngine, GcnLayer, PageRankOptions,
+};
+use autogmap::api::{DeploymentBuilder, Source, Strategy};
+use autogmap::engine::Servable;
+use autogmap::graph::synth;
 use autogmap::util::rng::Pcg64;
 use std::time::Instant;
 
-/// Run one y' = A'x' pass through the AOT block_mvm artifact.
-fn mvm_via_artifact(
-    rt: &Runtime,
-    arr: &CrossbarArray,
-    nb: usize,
-    nr: usize,
-    xp: &[f64],
-) -> anyhow::Result<Vec<f64>> {
-    let manifest = rt.manifest()?;
-    let entry = manifest.mvm_entry("mvm_qm7")?;
-    anyhow::ensure!(entry.k == arr.k && entry.nb == nb && entry.nr == nr);
-    let exe = rt.load(&entry.artifact)?;
-    let k = arr.k;
-    anyhow::ensure!(arr.tiles.len() <= nb, "scheme needs more tiles than the artifact holds");
-    let mut tiles = vec![0.0f32; nb * k * k];
-    let mut x_tiles = vec![0.0f32; nb * k];
-    let mut onehot = vec![0.0f32; nb * nr];
-    for (i, t) in arr.tiles.iter().enumerate() {
-        tiles[i * k * k..(i + 1) * k * k].copy_from_slice(&t.g);
-        for j in 0..k.min(arr.dim - t.col0) {
-            x_tiles[i * k + j] = xp[t.col0 + j] as f32;
-        }
-        onehot[i * nr + t.row0 / k] = 1.0;
-    }
-    let outs = exe.run(&[
-        literal::lit_f32(&tiles, &[nb as i64, k as i64, k as i64])?,
-        literal::lit_f32(&x_tiles, &[nb as i64, k as i64])?,
-        literal::lit_f32(&onehot, &[nb as i64, nr as i64])?,
-    ])?;
-    let seg = outs[0].to_vec::<f32>()?; // [NR, K]
-    Ok(seg.iter().take(arr.dim).map(|&v| v as f64).collect())
-}
-
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-
-    // --- build the GCN workload on the molecule graph
-    let a = autogmap::graph::synth::qm7_like(5828);
+    // --- the GCN workload: a 1000-node R-MAT graph's normalized adjacency
+    let nodes = 1000;
+    let a = synth::rmat_like(nodes, nodes * 8, 42);
     let a_norm = normalized_adjacency(&a);
-    let r = reorder(&a_norm, Reordering::CuthillMckee);
-    let grid = GridSummary::new(&r.matrix, 2);
-    let sw = SwitchCircuit::new(r.perm.clone());
-
-    // --- train a mapping scheme for Â (the paper's core contribution)
-    let cfg = ExperimentConfig {
-        name: "gcn_map".into(),
-        dataset: Dataset::Qm7 { seed: 5828 }, // same sparsity pattern as Â minus self-loops
-        grid: 2,
-        reordering: Reordering::CuthillMckee,
-        controller: "qm7_dyn4".into(),
-        fill_rule: FillRule::Dynamic { grades: 4 },
-        reward_a: 0.8,
-        lr: 0.015,
-        ent_coef: 0.002,
-        baseline_decay: 0.95,
-        epochs: 2500,
-        seed: 7,
-        log_every: 0,
-    };
-    // Â has the same off-diagonal pattern as A plus the diagonal, which the
-    // diagonal blocks always cover — but train on Â's own grid to be exact.
-    // The default `auto` backend trains through PJRT when artifacts exist
-    // and on the pure-Rust native backend otherwise.
-    let result = run_experiment(Some(&rt), &cfg, &RunnerOptions::default())?;
-    let mut best = result.best.expect("no complete-coverage scheme").scheme;
-    // re-validate on Â's grid (self-loops only add diagonal cells)
-    let eval = autogmap::scheme::evaluate(&best, &grid, cfg.weights());
-    if eval.coverage_ratio < 1.0 {
-        println!("scheme misses Â's self-loops; falling back to full block");
-        best = autogmap::scheme::Scheme { diag_len: vec![grid.n], fill_len: vec![] };
-    }
-    let eval = autogmap::scheme::evaluate(&best, &grid, cfg.weights());
     println!(
-        "mapping scheme for Â: diag {:?}, coverage {:.3}, area {:.3}",
-        best.diag_sizes_units(&grid),
-        eval.coverage_ratio,
-        eval.area_ratio
+        "graph: {nodes} nodes, {} nnz; Â (self-loops added): {} nnz",
+        a.nnz(),
+        a_norm.nnz()
     );
 
-    // --- place on crossbars
-    let arr = place(&r.matrix, &grid, &best)?;
-    let cost = CostModel::default().estimate(&arr, sw.crossover_count());
-    println!(
-        "placed {} tiles of {}×{} ({} cells, {:.1} nJ/pass, {:.1} µs/pass, {} row segments)",
-        cost.tiles,
-        arr.k,
-        arr.k,
-        cost.cells,
-        cost.energy_pj / 1e3,
-        cost.latency_ns / 1e3,
-        cost.row_segments
-    );
-
-    // --- two-layer GCN inference
-    let n = a.rows;
-    let (f_in, f_hidden, f_out) = (8, 16, 4);
-    let layer1 = GcnLayer::random(f_in, f_hidden, true, 1);
-    let layer2 = GcnLayer::random(f_hidden, f_out, false, 2);
-    let mut rng = Pcg64::seed_from_u64(3);
-    let z0: Vec<f64> = (0..n * f_in).map(|_| rng.uniform(-1.0, 1.0)).collect();
-
-    // dense oracle
+    // --- map Â once through the api facade (fresh-checkout native path:
+    // fixed-block strategy needs no trained controller)
     let t0 = Instant::now();
-    let dense = layer2.forward_dense(&a_norm, &layer1.forward_dense(&a_norm, &z0));
+    let dep = DeploymentBuilder::new(
+        Source::Matrix { label: "gcn_rmat1k".into(), matrix: a_norm.clone() },
+        Strategy::FixedBlock { block: 4 },
+    )
+    .grid(16)
+    .workers(4)
+    .build()?;
+    println!(
+        "mapped in {:.2}s: dim {}, plan nnz {}, {} area cells",
+        t0.elapsed().as_secs_f64(),
+        dep.plan().dim(),
+        dep.plan().nnz(),
+        dep.plan().area_cells()
+    );
+    let exec = dep.executor(0);
+    let engine = DeploymentEngine::new(&dep, &exec, true);
+
+    // --- two-layer GCN forward: one multi-RHS engine batch per layer
+    let (f_in, f_hidden, f_out) = (8, 16, 4);
+    let layers = vec![
+        GcnLayer::random(f_in, f_hidden, true, 1),
+        GcnLayer::random(f_hidden, f_out, false, 2),
+    ];
+    let mut rng = Pcg64::seed_from_u64(3);
+    let z0: Vec<f64> = (0..nodes * f_in).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    let t0 = Instant::now();
+    let dense = layers[1].forward_dense(&a_norm, &layers[0].forward_dense(&a_norm, &z0));
     let dense_time = t0.elapsed();
 
-    // crossbar simulator path
-    let t0 = Instant::now();
-    let h1 = layer1.forward_crossbar(&arr, &sw, &z0)?;
-    let xbar = layer2.forward_crossbar(&arr, &sw, &h1)?;
-    let sim_time = t0.elapsed();
-    let diff = max_abs_diff(&dense, &xbar);
+    let (mapped, trace) = gcn_forward(&engine, &z0, &layers)?;
+    let diff = max_abs_diff(&dense, &mapped);
     println!(
-        "\ncrossbar-sim 2-layer GCN: max|Δ| vs dense = {diff:.2e}  \
-         (dense {dense_time:?}, sim {sim_time:?})"
+        "\n2-layer GCN ({f_in}→{f_hidden}→{f_out}): max|Δ| vs dense oracle = {diff:.2e}  \
+         (dense {dense_time:?}, mapped {:.3}s, {} MVMs, {:.2e} nnz/s)",
+        trace.wall_s,
+        trace.mvms,
+        trace.nnz_per_s()
     );
-    anyhow::ensure!(diff < 1e-6, "crossbar GCN diverged from dense oracle");
+    anyhow::ensure!(diff <= 1e-5, "mapped GCN diverged from the dense oracle: {diff:e}");
 
-    // AOT Pallas-kernel path for one representative propagation column
-    // (needs built artifacts; a fresh checkout stops at the verified
-    // crossbar-simulator path above)
-    let manifest = match rt.manifest() {
-        Ok(m) => m,
-        Err(_) => {
-            println!(
-                "\nno artifacts manifest — skipping the AOT block_mvm path \
-                 (run `make artifacts` to enable it)"
-            );
-            println!("\nend-to-end OK: scheme → tiles → switch circuit → GCN verified (host sim)");
-            return Ok(());
-        }
-    };
-    let mv = manifest.mvm_entry("mvm_qm7")?;
-    let col: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
-    let xp = sw.forward(&col);
-    let t0 = Instant::now();
-    let mut iters = 0;
-    let mut yp = Vec::new();
-    while t0.elapsed().as_millis() < 300 {
-        yp = mvm_via_artifact(&rt, &arr, mv.nb, mv.nr, &xp)?;
-        iters += 1;
-    }
-    let per_call = t0.elapsed().as_secs_f64() / iters as f64;
-    let y = sw.inverse(&yp);
-    let want = a_norm.spmv(&col);
-    let diff = max_abs_diff(&y, &want);
+    // --- the same mapped asset, different algorithms: the semiring is a
+    // digital post-step, the programmed arena never changes
+
+    // BFS levels must be bit-identical to the queue-based reference
+    let (levels, bfs_trace) = bfs(&engine, &BfsOptions { source: 0, max_levels: 0 })?;
+    anyhow::ensure!(
+        levels == bfs_reference(&a_norm, 0),
+        "mapped BFS diverged from the queue reference"
+    );
+    let reached = levels.iter().filter(|&&l| l >= 0).count();
     println!(
-        "AOT block_mvm artifact (PJRT, L1 Pallas): max|Δ| vs dense = {diff:.2e}, \
-         {:.2} ms/pass ({iters} calls), {:.1} propagations/s",
-        per_call * 1e3,
-        1.0 / per_call
+        "BFS from node 0: {reached}/{nodes} reached in {} levels, bit-identical to the \
+         queue reference ({} MVMs)",
+        bfs_trace.iterations,
+        bfs_trace.mvms
     );
-    anyhow::ensure!(diff < 1e-4, "AOT crossbar path diverged");
 
-    println!("\nend-to-end OK: scheme → tiles → switch circuit → GCN verified on all paths");
+    // PageRank: same iteration loop on the mapped engine and the host CSR
+    let pr_opts = PageRankOptions::default();
+    let (ranks, pr_trace) = pagerank(&engine, &pr_opts)?;
+    let (ranks_ref, _) = pagerank(&CsrEngine(&a_norm), &pr_opts)?;
+    let pr_diff = max_abs_diff(&ranks, &ranks_ref);
+    anyhow::ensure!(pr_diff <= 1e-8, "mapped PageRank diverged from the CSR run: {pr_diff:e}");
+    let mass: f64 = ranks.iter().sum();
+    println!(
+        "PageRank: converged {} in {} iterations (final residual {:.2e}), mass {mass:.12}, \
+         max|Δ| vs CSR run = {pr_diff:.2e}",
+        pr_trace.converged,
+        pr_trace.iterations,
+        pr_trace.residuals.last().copied().unwrap_or(0.0)
+    );
+
+    println!(
+        "\nend-to-end OK: one mapped bundle answered GCN, BFS, and PageRank — \
+         semirings in the post-step, arena untouched"
+    );
     Ok(())
 }

@@ -1,0 +1,289 @@
+//! The `algo-bench` driver: every algorithm, on a flat engine plan and a
+//! hierarchical composite, at several worker counts — self-checked and
+//! ledgered.
+//!
+//! One deterministic R-MAT graph is mapped twice: once as a **flat**
+//! [`crate::engine::ExecPlan`] (a full-diagonal scheme compiled directly,
+//! served through [`PlanEngine`]), and once as a **composite**
+//! fixed-block deployment built through the [`crate::api`] facade (served
+//! through [`DeploymentEngine`], i.e. with the RCM permutation applied on
+//! the way in and out). For each plan × worker count the driver runs
+//! PageRank (fixed iteration count, so iters/s is comparable across
+//! configs), BFS, SSSP, and a two-layer GCN forward, and **fails the run**
+//! unless every answer agrees with the host-CSR references — BFS levels
+//! and SSSP distances bit-exactly (queue-based [`bfs_reference`] /
+//! Dijkstra [`sssp_reference`]), PageRank within 1e-8 and GCN within 1e-5
+//! of the [`CsrEngine`] runs at identical iteration counts.
+//!
+//! The ledger (`BENCH_algo.json`) nests per-algorithm [`AlgoTrace`]
+//! objects as `plans.<flat|composite>.workers_<w>.<algorithm>` so CI can
+//! grep iterations, residuals, and amortized nnz/s per configuration.
+//! `AUTOGMAP_BENCH_FAST=1` shrinks the graph for smoke runs.
+
+use super::gcn::{gcn_forward, max_abs_diff, GcnLayer};
+use super::pagerank::{pagerank, PageRankOptions};
+use super::traverse::{bfs, bfs_reference, sssp, sssp_reference, BfsOptions, SsspOptions};
+use super::{CsrEngine, DeploymentEngine, MvmEngine, PlanEngine};
+use crate::api::{DeploymentBuilder, Error, Result, Source, Strategy};
+use crate::engine;
+use crate::graph::{synth, GridSummary};
+use crate::scheme::Scheme;
+use crate::util::bench::write_bench_json;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration for one `algo-bench` run.
+#[derive(Clone, Debug)]
+pub struct AlgoBenchOptions {
+    /// R-MAT node count (`AUTOGMAP_BENCH_FAST=1` caps it at 2000)
+    pub nodes: usize,
+    /// average degree; `target_nnz = nodes · degree` rounded even
+    pub degree: usize,
+    /// grid cell side for both mappings
+    pub grid: usize,
+    /// fixed-block size (in grid cells) for the composite mapping
+    pub block: usize,
+    /// graph + feature rng seed
+    pub seed: u64,
+    /// worker counts to sweep (the ISSUE gate runs 1/2/8)
+    pub workers: Vec<usize>,
+    /// band-sharded execution
+    pub sharded: bool,
+    /// PageRank sweeps per run (fixed-iteration mode, `tol = 0`)
+    pub pagerank_iters: usize,
+    /// where to write the machine-readable ledger
+    pub bench_json: PathBuf,
+}
+
+impl Default for AlgoBenchOptions {
+    fn default() -> AlgoBenchOptions {
+        AlgoBenchOptions {
+            nodes: 10_000,
+            degree: 8,
+            grid: 32,
+            block: 4,
+            seed: 0x5eed,
+            workers: vec![1, 2, 8],
+            sharded: true,
+            pagerank_iters: 20,
+            bench_json: PathBuf::from("BENCH_algo.json"),
+        }
+    }
+}
+
+/// Host-CSR reference answers every mapped configuration must reproduce.
+struct References {
+    pagerank: Vec<f64>,
+    bfs: Vec<i64>,
+    sssp: Vec<f64>,
+    gcn: Vec<f64>,
+}
+
+/// Run all four algorithms on `eng`, check each against the references,
+/// and return the per-algorithm trace ledger for this configuration.
+fn run_suite<E: MvmEngine>(
+    eng: &E,
+    label: &str,
+    refs: &References,
+    pr_opts: &PageRankOptions,
+    x: &[f64],
+    layers: &[GcnLayer],
+) -> Result<Json> {
+    let (pr, pr_trace) = pagerank(eng, pr_opts)?;
+    let pr_err = max_abs_diff(&pr, &refs.pagerank);
+    if pr_err > 1e-8 {
+        return Err(Error::Validate(format!(
+            "{label}: pagerank diverges from the CSR reference by {pr_err:e} (> 1e-8)"
+        )));
+    }
+    let (levels, bfs_trace) = bfs(eng, &BfsOptions { source: 0, max_levels: 0 })?;
+    if levels != refs.bfs {
+        return Err(Error::Validate(format!(
+            "{label}: bfs levels are not bit-identical to the queue reference"
+        )));
+    }
+    let (dist, sssp_trace) = sssp(eng, &SsspOptions { source: 0, max_iters: 0, chunk: 0 })?;
+    if dist != refs.sssp {
+        return Err(Error::Validate(format!(
+            "{label}: sssp distances are not bit-identical to the Dijkstra reference"
+        )));
+    }
+    let (feat, gcn_trace) = gcn_forward(eng, x, layers)?;
+    let gcn_err = max_abs_diff(&feat, &refs.gcn);
+    if gcn_err > 1e-5 {
+        return Err(Error::Validate(format!(
+            "{label}: gcn features diverge from the dense oracle by {gcn_err:e} (> 1e-5)"
+        )));
+    }
+    Ok(obj(vec![
+        ("pagerank", pr_trace.to_json()),
+        ("bfs", bfs_trace.to_json()),
+        ("sssp", sssp_trace.to_json()),
+        ("gcn", gcn_trace.to_json()),
+        ("pagerank_max_abs_err", Json::Num(pr_err)),
+        ("gcn_max_abs_err", Json::Num(gcn_err)),
+        ("bfs_exact", Json::Bool(true)),
+        ("sssp_exact", Json::Bool(true)),
+    ]))
+}
+
+/// Run the bench (see module docs). Returns the full ledger object (also
+/// written to `bench_json`); any reference disagreement is an error.
+pub fn run_algo_bench(opts: &AlgoBenchOptions) -> Result<Json> {
+    let fast = std::env::var("AUTOGMAP_BENCH_FAST").is_ok_and(|v| v == "1");
+    let nodes = if fast { opts.nodes.min(2000) } else { opts.nodes }.max(16);
+    let target_nnz = ((nodes * opts.degree.max(1)) / 2).max(1) * 2;
+    let grid = opts.grid.max(1);
+    let t0 = Instant::now();
+
+    let m = synth::rmat_like(nodes, target_nnz, opts.seed);
+    let oracle = CsrEngine(&m);
+
+    // reference answers, one per algorithm, on the host CSR
+    let pr_opts = PageRankOptions {
+        damping: 0.85,
+        tol: 0.0,
+        max_iters: opts.pagerank_iters.max(1),
+    };
+    let (pr_ref, _) = pagerank(&oracle, &pr_opts)?;
+    let bfs_ref = bfs_reference(&m, 0);
+    let sssp_ref = sssp_reference(&m, 0);
+    let layers = vec![
+        GcnLayer::random(8, 16, true, opts.seed),
+        GcnLayer::random(16, 4, false, opts.seed + 1),
+    ];
+    let mut rng = Pcg64::new(opts.seed, 7);
+    let x: Vec<f64> = (0..nodes * 8).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let (gcn_ref, _) = gcn_forward(&oracle, &x, &layers)?;
+    let refs = References {
+        pagerank: pr_ref,
+        bfs: bfs_ref,
+        sssp: sssp_ref,
+        gcn: gcn_ref,
+    };
+
+    // flat plan: a full-diagonal scheme compiled straight to an ExecPlan
+    // (complete coverage — no controller window limit at this scale)
+    let g = GridSummary::new(&m, grid);
+    let scheme = Scheme {
+        diag_len: vec![g.n],
+        fill_len: vec![],
+    };
+    let flat = Arc::new(
+        engine::compile(&m, &g, &scheme)
+            .map_err(|e| Error::Validate(format!("algo-bench flat compile: {e}")))?,
+    );
+
+    // composite plan: the facade's fixed-block mapping of the same matrix
+    let dep = DeploymentBuilder::new(
+        Source::Matrix {
+            label: format!("rmat{nodes}"),
+            matrix: m.clone(),
+        },
+        Strategy::FixedBlock {
+            block: opts.block.max(1),
+        },
+    )
+    .grid(grid)
+    .seed(opts.seed)
+    .build()?;
+
+    let workers: Vec<usize> = if opts.workers.is_empty() {
+        vec![1, 2, 8]
+    } else {
+        opts.workers.iter().map(|&w| w.max(1)).collect()
+    };
+    let mut flat_rows: Vec<(String, Json)> = Vec::new();
+    let mut composite_rows: Vec<(String, Json)> = Vec::new();
+    for &w in &workers {
+        let eng = PlanEngine::new(flat.clone(), w, opts.sharded);
+        let label = format!("flat/workers_{w}");
+        flat_rows.push((
+            format!("workers_{w}"),
+            run_suite(&eng, &label, &refs, &pr_opts, &x, &layers)?,
+        ));
+
+        let exec = dep.executor(w);
+        let eng = DeploymentEngine::new(&dep, &exec, opts.sharded);
+        let label = format!("composite/workers_{w}");
+        composite_rows.push((
+            format!("workers_{w}"),
+            run_suite(&eng, &label, &refs, &pr_opts, &x, &layers)?,
+        ));
+    }
+    let nest = |rows: Vec<(String, Json)>| {
+        Json::Obj(rows.into_iter().collect())
+    };
+
+    let fields = vec![
+        ("bench", Json::Str("algo".into())),
+        ("nodes", Json::Num(nodes as f64)),
+        ("nnz", Json::Num(m.nnz() as f64)),
+        ("degree", Json::Num(opts.degree as f64)),
+        ("grid", Json::Num(grid as f64)),
+        ("block", Json::Num(opts.block.max(1) as f64)),
+        ("seed", Json::Num(opts.seed as f64)),
+        ("sharded", Json::Bool(opts.sharded)),
+        ("pagerank_iters", Json::Num(pr_opts.max_iters as f64)),
+        (
+            "workers",
+            Json::Arr(workers.iter().map(|&w| Json::Num(w as f64)).collect()),
+        ),
+        (
+            "plans",
+            obj(vec![
+                ("flat", nest(flat_rows)),
+                ("composite", nest(composite_rows)),
+            ]),
+        ),
+        ("wall_s", Json::Num(t0.elapsed().as_secs_f64())),
+    ];
+    let ledger = obj(fields.iter().map(|(k, v)| (*k, v.clone())).collect());
+    write_bench_json(&opts.bench_json, fields)?;
+    Ok(ledger)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts(name: &str) -> AlgoBenchOptions {
+        AlgoBenchOptions {
+            nodes: 120,
+            degree: 6,
+            grid: 8,
+            block: 2,
+            seed: 0xa160,
+            workers: vec![1, 2],
+            sharded: true,
+            pagerank_iters: 8,
+            bench_json: std::env::temp_dir().join(name),
+        }
+    }
+
+    #[test]
+    fn bench_self_checks_and_ledgers_both_plans() {
+        let opts = tiny_opts("BENCH_algo_test.json");
+        let ledger = run_algo_bench(&opts).unwrap();
+        assert_eq!(ledger.get("bench").as_str(), Some("algo"));
+        for plan in ["flat", "composite"] {
+            for w in ["workers_1", "workers_2"] {
+                let cfg = ledger.get("plans").get(plan).get(w);
+                assert_eq!(
+                    cfg.get("pagerank").get("iterations").as_i64(),
+                    Some(8),
+                    "{plan}/{w} ran the fixed pagerank iteration count"
+                );
+                assert_eq!(cfg.get("bfs_exact").as_bool(), Some(true));
+                assert!(cfg.get("sssp").get("nnz_per_s").as_f64().unwrap() > 0.0);
+                assert!(cfg.get("gcn_max_abs_err").as_f64().unwrap() <= 1e-5);
+            }
+        }
+        let written = std::fs::read_to_string(&opts.bench_json).unwrap();
+        assert!(written.contains("\"plans\""));
+        std::fs::remove_file(&opts.bench_json).ok();
+    }
+}

@@ -1,0 +1,304 @@
+//! Whole graph algorithms as iterative loops over a mapped [`Servable`] —
+//! the layer that turns a programmed crossbar arena from a one-trick
+//! `y = Ax` answerer into an asset amortized across traversals.
+//!
+//! GraphR (PAPERS.md) observes that the classic vertex programs are all
+//! the *same* inner loop — a sparse matrix–vector product over a suitable
+//! semiring — iterated to a fixed point. This module runs exactly that
+//! loop against any [`Servable`] (flat engine plan or hierarchical
+//! composite, via the [`MvmEngine`] adapters below), keeping the
+//! programmed arena untouched: the crossbar always computes the plain
+//! (+, ×) product, and the semiring reduction happens digitally in the
+//! post-step.
+//!
+//! | algorithm | iterate | crossbar op | post-step (semiring) |
+//! |-----------|---------|-------------|----------------------|
+//! | [`pagerank`] | rank vector `p` | `y = A · D⁻¹p` | `p' = d·y + (d·dangling + 1−d)/n`, L1 residual |
+//! | [`bfs`] | frontier indicator `f` | `y = A · f` | or–and: `y_i ≠ 0` ∧ unvisited ⇒ level `k+1` |
+//! | [`sssp`] | frontier basis batch `e_j` | `A · e_j` (column extraction) | min–plus: `dist_i = min(dist_i, dist_j + w_ij)` |
+//! | [`gcn`](gcn::gcn_forward) | feature matrix `Z` | one multi-RHS batch `A · (Z Wₗ)` per layer | dense GEMM `Z Wₗ` + ReLU |
+//!
+//! BFS and SSSP rely on a *no-cancellation* precondition: edge weights
+//! must be positive so a nonzero matrix entry can never sum to zero in
+//! the (+, ×) product (every graph this repo synthesizes has positive
+//! weights). Under it, the or–and / min–plus post-steps reconstruct the
+//! boolean and tropical semirings exactly, so both traversals are
+//! bit-identical to their queue-based references.
+//!
+//! Every run reports an [`AlgoTrace`] — iteration count, residual curve
+//! (L1 residuals for PageRank, per-level discovery counts for BFS/SSSP,
+//! per-layer activation magnitude for GCN), MVMs issued, and amortized
+//! nnz/s — and the serving tiers aggregate per-algorithm [`AlgoCounters`].
+//!
+//! The wire surface lives in [`crate::api::dispatch`] (request kinds
+//! `{"pagerank":{...}}`, `{"bfs":{...}}`, `{"sssp":{...}}`,
+//! `{"gcn":{...}}`, answered identically by stdin `serve` and the TCP
+//! tier); `algo-bench` drives all four against flat and composite plans
+//! and writes the BENCH_algo.json ledger.
+
+use crate::api::deploy::{DeployedPlan, Deployment};
+use crate::api::dispatch;
+use crate::engine::{BatchExecutor, Servable};
+use crate::graph::Csr;
+use crate::util::json::{num_arr, obj, Json};
+
+pub mod bench;
+pub mod gcn;
+pub mod pagerank;
+pub mod traverse;
+
+pub use bench::{run_algo_bench, AlgoBenchOptions};
+pub use gcn::{gcn_forward, max_abs_diff, normalized_adjacency, GcnLayer};
+pub use pagerank::{pagerank, PageRankOptions};
+pub use traverse::{bfs, bfs_reference, sssp, sssp_reference, BfsOptions, SsspOptions};
+
+/// The one capability every algorithm iterates over: a batched MVM with a
+/// known dimension and per-MVM nnz cost. Three adapters cover the repo's
+/// serving shapes — [`DeploymentEngine`] (a facade deployment serving in
+/// original node ids), [`PlanEngine`] (a bare [`Servable`] plan on its own
+/// executor), and [`CsrEngine`] (the host CSR oracle the property tests
+/// compare against).
+pub trait MvmEngine {
+    /// Matrix dimension (request/response vector length).
+    fn dim(&self) -> usize;
+
+    /// Non-zeros one MVM touches — the unit of amortized-throughput
+    /// accounting in [`AlgoTrace`].
+    fn nnz(&self) -> u64;
+
+    /// Execute a request batch; outputs in request order.
+    fn mvm_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>>;
+
+    /// Single-request convenience over [`MvmEngine::mvm_batch`].
+    fn mvm_one(&self, x: Vec<f64>) -> Vec<f64> {
+        self.mvm_batch(vec![x]).pop().expect("batch of one answers one")
+    }
+}
+
+/// [`MvmEngine`] over an [`crate::api::Deployment`] facade: requests are
+/// permuted into served order, executed (sharded or scalar), and permuted
+/// back — algorithms always see original node ids.
+pub struct DeploymentEngine<'a> {
+    dep: &'a Deployment,
+    exec: &'a BatchExecutor<DeployedPlan>,
+    sharded: bool,
+}
+
+impl<'a> DeploymentEngine<'a> {
+    pub fn new(
+        dep: &'a Deployment,
+        exec: &'a BatchExecutor<DeployedPlan>,
+        sharded: bool,
+    ) -> DeploymentEngine<'a> {
+        DeploymentEngine { dep, exec, sharded }
+    }
+}
+
+impl MvmEngine for DeploymentEngine<'_> {
+    fn dim(&self) -> usize {
+        self.dep.plan().dim()
+    }
+
+    fn nnz(&self) -> u64 {
+        self.dep.plan().nnz()
+    }
+
+    fn mvm_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        dispatch::execute_permuted(self.dep, self.exec, xs, self.sharded)
+    }
+}
+
+/// [`MvmEngine`] over a bare [`Servable`] plan with its own executor — the
+/// path `algo-bench` uses for flat engine plans that never went through
+/// the deployment facade (no permutation around the plan).
+pub struct PlanEngine<P: Servable> {
+    exec: BatchExecutor<P>,
+    sharded: bool,
+}
+
+impl<P: Servable> PlanEngine<P> {
+    pub fn new(plan: std::sync::Arc<P>, workers: usize, sharded: bool) -> PlanEngine<P> {
+        PlanEngine {
+            exec: BatchExecutor::new(plan, workers),
+            sharded,
+        }
+    }
+}
+
+impl<P: Servable> MvmEngine for PlanEngine<P> {
+    fn dim(&self) -> usize {
+        self.exec.plan().dim()
+    }
+
+    fn nnz(&self) -> u64 {
+        self.exec.plan().nnz()
+    }
+
+    fn mvm_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        if self.sharded {
+            self.exec.execute_batch_sharded(xs)
+        } else {
+            self.exec.execute_batch(xs)
+        }
+    }
+}
+
+/// [`MvmEngine`] over a host CSR matrix — the straightforward oracle every
+/// mapped run is property-tested against.
+pub struct CsrEngine<'a>(pub &'a Csr);
+
+impl MvmEngine for CsrEngine<'_> {
+    fn dim(&self) -> usize {
+        self.0.rows
+    }
+
+    fn nnz(&self) -> u64 {
+        self.0.nnz() as u64
+    }
+
+    fn mvm_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.0.spmv(x)).collect()
+    }
+}
+
+/// What one algorithm run did: the convergence story and the amortized
+/// throughput over the mapped structure.
+#[derive(Clone, Debug)]
+pub struct AlgoTrace {
+    /// stable algorithm label ("pagerank" | "bfs" | "sssp" | "gcn")
+    pub algorithm: &'static str,
+    /// iterations executed (levels for BFS, relaxation rounds for SSSP,
+    /// layers for GCN)
+    pub iterations: usize,
+    /// whether the run reached its fixed point (PageRank in
+    /// fixed-iteration mode reports `false` by construction)
+    pub converged: bool,
+    /// per-iteration residual curve: L1 rank residuals (PageRank),
+    /// newly-discovered node counts (BFS/SSSP), max-abs layer activation
+    /// (GCN)
+    pub residuals: Vec<f64>,
+    /// MVMs issued against the engine
+    pub mvms: u64,
+    /// total non-zeros those MVMs touched (`mvms × engine.nnz()`)
+    pub nnz_total: u64,
+    /// wall-clock seconds for the whole run
+    pub wall_s: f64,
+}
+
+impl AlgoTrace {
+    /// Amortized non-zeros per second over the whole run.
+    pub fn nnz_per_s(&self) -> f64 {
+        self.nnz_total as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Iterations per second over the whole run.
+    pub fn iters_per_s(&self) -> f64 {
+        self.iterations as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// The wire/ledger form embedded in responses and BENCH_algo.json.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("algorithm", Json::Str(self.algorithm.into())),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("residuals", num_arr(self.residuals.iter().copied())),
+            ("mvms", Json::Num(self.mvms as f64)),
+            ("nnz_total", Json::Num(self.nnz_total as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("nnz_per_s", Json::Num(self.nnz_per_s())),
+            ("iters_per_s", Json::Num(self.iters_per_s())),
+        ])
+    }
+}
+
+/// Per-algorithm request counters the serving tiers aggregate — surfaced
+/// in the stdin loop's stats line ([`crate::api::ServeReport`]) and in
+/// the TCP tier's per-tenant `{"admin":"stats"}` object.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AlgoCounters {
+    pub pagerank: u64,
+    pub bfs: u64,
+    pub sssp: u64,
+    pub gcn: u64,
+    /// MVMs those runs issued (each algorithm request fans out into many)
+    pub mvms: u64,
+}
+
+impl AlgoCounters {
+    /// Account one finished run of `key`, which issued `mvms` MVMs.
+    pub fn record(&mut self, key: &str, mvms: u64) {
+        match key {
+            "pagerank" => self.pagerank += 1,
+            "bfs" => self.bfs += 1,
+            "sssp" => self.sssp += 1,
+            "gcn" => self.gcn += 1,
+            other => debug_assert!(false, "unknown algorithm key {other:?}"),
+        }
+        self.mvms += mvms;
+    }
+
+    /// Algorithm requests served, all kinds.
+    pub fn total(&self) -> u64 {
+        self.pagerank + self.bfs + self.sssp + self.gcn
+    }
+
+    /// The nested `"algo"` stats object both serving tiers emit.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("pagerank", Json::Num(self.pagerank as f64)),
+            ("bfs", Json::Num(self.bfs as f64)),
+            ("sssp", Json::Num(self.sssp as f64)),
+            ("gcn", Json::Num(self.gcn as f64)),
+            ("mvms", Json::Num(self.mvms as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synth;
+
+    #[test]
+    fn csr_engine_matches_spmv_and_counts() {
+        let a = synth::qm7_like(5828);
+        let eng = CsrEngine(&a);
+        assert_eq!(eng.dim(), a.rows);
+        assert_eq!(eng.nnz(), a.nnz() as u64);
+        let x: Vec<f64> = (0..a.rows).map(|i| i as f64 * 0.5 - 3.0).collect();
+        assert_eq!(eng.mvm_one(x.clone()), a.spmv(&x));
+    }
+
+    #[test]
+    fn counters_record_and_total() {
+        let mut c = AlgoCounters::default();
+        c.record("pagerank", 21);
+        c.record("bfs", 5);
+        c.record("bfs", 7);
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.mvms, 33);
+        let j = c.to_json();
+        assert_eq!(j.get("bfs").as_i64(), Some(2));
+        assert_eq!(j.get("mvms").as_i64(), Some(33));
+    }
+
+    #[test]
+    fn trace_json_carries_throughput_fields() {
+        let t = AlgoTrace {
+            algorithm: "pagerank",
+            iterations: 4,
+            converged: true,
+            residuals: vec![0.5, 0.25],
+            mvms: 5,
+            nnz_total: 500,
+            wall_s: 2.0,
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("algorithm").as_str(), Some("pagerank"));
+        assert_eq!(j.get("iterations").as_i64(), Some(4));
+        assert_eq!(j.get("nnz_per_s").as_f64(), Some(250.0));
+        assert_eq!(j.get("iters_per_s").as_f64(), Some(2.0));
+        assert_eq!(j.get("residuals").as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,320 @@
+//! BFS and SSSP as semiring-style iterated SpMV — the GraphR traversal
+//! pair, run with the programmed arena untouched.
+//!
+//! The crossbar only ever computes the plain (+, ×) product; the semiring
+//! lives in the digital post-step:
+//!
+//! - **BFS (boolean or–and)** — the iterate is the indicator vector of
+//!   the current frontier. `y = A·f` lights every neighbor of the
+//!   frontier (no-cancellation: positive weights cannot sum to zero), and
+//!   the post-step assigns level `k+1` to lit, unvisited nodes, which
+//!   become the next frontier. One MVM per level.
+//! - **SSSP (tropical min–plus)** — a synchronous frontier Bellman–Ford.
+//!   Each round batches the basis vectors `e_j` of the frontier through
+//!   the engine; `A·e_j` is exactly column `j` (each output element is a
+//!   single product `w·1`, so the extraction is float-exact), and the
+//!   post-step relaxes `dist_i = min(dist_i, dist_j + w_ij)`. Candidates
+//!   are computed from a snapshot of `dist` taken at the start of the
+//!   round, so the result is independent of the chunk order the frontier
+//!   is batched in; nodes whose distance improved form the next frontier.
+//!   Both this loop and Dijkstra minimize the identical set of
+//!   left-accumulated floating-point path sums, so on non-negative
+//!   weights the two agree *exactly*, not just within tolerance.
+//!
+//! Both traversals terminate when the frontier empties. Hitting the
+//! iteration cap with a non-empty frontier is a typed
+//! [`Error::NoConverge`] — a partial answer is never reported as a
+//! complete one.
+
+use super::{AlgoTrace, MvmEngine};
+use crate::api::error::{Error, Result};
+use crate::graph::Csr;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Instant;
+
+/// BFS knobs; the defaults are the wire defaults of `{"bfs":{...}}`.
+#[derive(Clone, Copy, Debug)]
+pub struct BfsOptions {
+    /// start node (original id)
+    pub source: usize,
+    /// level cap; 0 = the graph dimension (can never trip)
+    pub max_levels: usize,
+}
+
+/// SSSP knobs; the defaults are the wire defaults of `{"sssp":{...}}`.
+#[derive(Clone, Copy, Debug)]
+pub struct SsspOptions {
+    /// start node (original id)
+    pub source: usize,
+    /// relaxation-round cap; 0 = the graph dimension
+    pub max_iters: usize,
+    /// frontier basis vectors batched per engine dispatch; 0 = 64
+    pub chunk: usize,
+}
+
+fn check_source(name: &str, source: usize, n: usize) -> Result<()> {
+    if source >= n {
+        return Err(Error::Validate(format!(
+            "{name}.source must be a node id below the dimension {n}; got {source}"
+        )));
+    }
+    Ok(())
+}
+
+/// Level-synchronous BFS from `opts.source`. Returns per-node levels
+/// (`-1` = unreachable) and the run's [`AlgoTrace`]; the residual curve
+/// is the per-level count of newly discovered nodes.
+pub fn bfs<E: MvmEngine>(engine: &E, opts: &BfsOptions) -> Result<(Vec<i64>, AlgoTrace)> {
+    let n = engine.dim();
+    check_source("bfs", opts.source, n)?;
+    let cap = if opts.max_levels == 0 { n } else { opts.max_levels };
+    let t0 = Instant::now();
+
+    let mut levels = vec![-1i64; n];
+    levels[opts.source] = 0;
+    let mut frontier = vec![0.0; n];
+    frontier[opts.source] = 1.0;
+    let mut frontier_size = 1usize;
+    let mut residuals = Vec::new();
+    let mut mvms = 0u64;
+    let mut level = 0usize;
+
+    while frontier_size > 0 {
+        if level >= cap {
+            return Err(Error::NoConverge {
+                algorithm: "bfs",
+                iterations: level,
+                residual: frontier_size as f64,
+            });
+        }
+        let y = engine.mvm_one(frontier);
+        mvms += 1;
+        level += 1;
+        let mut next = vec![0.0; n];
+        let mut discovered = 0usize;
+        for i in 0..n {
+            if y[i] != 0.0 && levels[i] < 0 {
+                levels[i] = level as i64;
+                next[i] = 1.0;
+                discovered += 1;
+            }
+        }
+        residuals.push(discovered as f64);
+        frontier = next;
+        frontier_size = discovered;
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let trace = AlgoTrace {
+        algorithm: "bfs",
+        iterations: level,
+        converged: true,
+        residuals,
+        mvms,
+        nnz_total: mvms * engine.nnz(),
+        wall_s,
+    };
+    Ok((levels, trace))
+}
+
+/// Queue-based BFS reference (plain [`VecDeque`] level traversal) the
+/// SpMV formulation must match exactly.
+pub fn bfs_reference(a: &Csr, source: usize) -> Vec<i64> {
+    let mut levels = vec![-1i64; a.rows];
+    levels[source] = 0;
+    let mut queue = VecDeque::from([source]);
+    while let Some(u) = queue.pop_front() {
+        for &v in a.row(u) {
+            if levels[v] < 0 {
+                levels[v] = levels[u] + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    levels
+}
+
+/// Synchronous frontier Bellman–Ford SSSP from `opts.source`. Returns
+/// per-node distances (`f64::INFINITY` = unreachable) and the run's
+/// [`AlgoTrace`]; the residual curve is the per-round count of improved
+/// nodes. Requires positive edge weights (the no-cancellation
+/// precondition; also what makes the Dijkstra comparison exact).
+pub fn sssp<E: MvmEngine>(engine: &E, opts: &SsspOptions) -> Result<(Vec<f64>, AlgoTrace)> {
+    let n = engine.dim();
+    check_source("sssp", opts.source, n)?;
+    let cap = if opts.max_iters == 0 { n } else { opts.max_iters };
+    let chunk = if opts.chunk == 0 { 64 } else { opts.chunk };
+    let t0 = Instant::now();
+
+    let mut dist = vec![f64::INFINITY; n];
+    dist[opts.source] = 0.0;
+    let mut frontier = vec![opts.source];
+    let mut residuals = Vec::new();
+    let mut mvms = 0u64;
+    let mut rounds = 0usize;
+
+    while !frontier.is_empty() {
+        if rounds >= cap {
+            return Err(Error::NoConverge {
+                algorithm: "sssp",
+                iterations: rounds,
+                residual: frontier.len() as f64,
+            });
+        }
+        // relax against the round-start snapshot so the answer does not
+        // depend on how the frontier is chunked into batches
+        let dist_prev = dist.clone();
+        let mut improved = vec![false; n];
+        for part in frontier.chunks(chunk) {
+            let xs: Vec<Vec<f64>> = part
+                .iter()
+                .map(|&j| {
+                    let mut e = vec![0.0; n];
+                    e[j] = 1.0;
+                    e
+                })
+                .collect();
+            let cols = engine.mvm_batch(xs);
+            mvms += part.len() as u64;
+            for (&j, col) in part.iter().zip(&cols) {
+                for (i, &w) in col.iter().enumerate() {
+                    if w != 0.0 {
+                        let cand = dist_prev[j] + w;
+                        if cand < dist[i] {
+                            dist[i] = cand;
+                            improved[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+        frontier = (0..n).filter(|&i| improved[i]).collect();
+        residuals.push(frontier.len() as f64);
+        rounds += 1;
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    let trace = AlgoTrace {
+        algorithm: "sssp",
+        iterations: rounds,
+        converged: true,
+        residuals,
+        mvms,
+        nnz_total: mvms * engine.nnz(),
+        wall_s,
+    };
+    Ok((dist, trace))
+}
+
+/// Binary-heap Dijkstra reference the min–plus formulation must match
+/// exactly on non-negative weights.
+pub fn sssp_reference(a: &Csr, source: usize) -> Vec<f64> {
+    #[derive(PartialEq)]
+    struct Entry(f64, usize);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, other: &Entry) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, other: &Entry) -> std::cmp::Ordering {
+            // reversed: BinaryHeap is a max-heap, we want the min distance
+            other.0.total_cmp(&self.0)
+        }
+    }
+
+    let mut dist = vec![f64::INFINITY; a.rows];
+    dist[source] = 0.0;
+    let mut heap = BinaryHeap::from([Entry(0.0, source)]);
+    while let Some(Entry(d, u)) = heap.pop() {
+        if d > dist[u] {
+            continue; // stale entry
+        }
+        for (idx, &v) in a.row(u).iter().enumerate() {
+            let cand = d + a.row_vals(u)[idx];
+            if cand < dist[v] {
+                dist[v] = cand;
+                heap.push(Entry(cand, v));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::CsrEngine;
+    use crate::graph::{synth, Coo};
+
+    #[test]
+    fn bfs_matches_queue_reference_exactly() {
+        let a = synth::rmat_like(300, 1200, 11);
+        let (levels, trace) = bfs(&CsrEngine(&a), &BfsOptions { source: 0, max_levels: 0 }).unwrap();
+        assert_eq!(levels, bfs_reference(&a, 0));
+        assert!(trace.converged);
+        assert_eq!(trace.mvms as usize, trace.iterations);
+        // discovery counts sum to the reached set (minus the source)
+        let reached = levels.iter().filter(|&&l| l >= 0).count();
+        let discovered: f64 = trace.residuals.iter().sum();
+        assert_eq!(discovered as usize + 1, reached);
+    }
+
+    #[test]
+    fn sssp_matches_dijkstra_exactly_on_weighted_graph() {
+        // weights are multiples of 0.25 — exactly representable in f32,
+        // so the mapped arena path stays float-exact too
+        let base = synth::rmat_like(200, 800, 3);
+        let mut coo = Coo::new(base.rows, base.cols);
+        for r in 0..base.rows {
+            for &c in base.row(r) {
+                if r < c {
+                    coo.push_sym(r, c, (1 + (r + c) % 7) as f64 * 0.25);
+                }
+            }
+        }
+        let a = coo.to_csr();
+        for chunk in [1, 5, 64] {
+            let opts = SsspOptions { source: 0, max_iters: 0, chunk };
+            let (dist, trace) = sssp(&CsrEngine(&a), &opts).unwrap();
+            assert_eq!(dist, sssp_reference(&a, 0), "chunk {chunk}");
+            assert!(trace.converged);
+        }
+    }
+
+    #[test]
+    fn unreachable_nodes_stay_infinite_and_unleveled() {
+        let mut coo = Coo::new(4, 4);
+        coo.push_sym(0, 1, 1.0);
+        coo.push_sym(2, 3, 1.0);
+        let a = coo.to_csr();
+        let (levels, _) = bfs(&CsrEngine(&a), &BfsOptions { source: 0, max_levels: 0 }).unwrap();
+        assert_eq!(levels, vec![0, 1, -1, -1]);
+        let (dist, _) =
+            sssp(&CsrEngine(&a), &SsspOptions { source: 0, max_iters: 0, chunk: 0 }).unwrap();
+        assert_eq!(dist[1], 1.0);
+        assert!(dist[2].is_infinite() && dist[3].is_infinite());
+    }
+
+    #[test]
+    fn caps_trip_as_typed_no_converge() {
+        let a = synth::rmat_like(300, 1200, 11);
+        let err = bfs(&CsrEngine(&a), &BfsOptions { source: 0, max_levels: 1 }).unwrap_err();
+        assert_eq!(err.kind(), "no_converge");
+        assert!(err.to_string().contains("bfs"), "{err}");
+        let err = sssp(&CsrEngine(&a), &SsspOptions { source: 0, max_iters: 1, chunk: 0 })
+            .unwrap_err();
+        assert_eq!(err.kind(), "no_converge");
+    }
+
+    #[test]
+    fn bad_source_names_the_field() {
+        let a = synth::qm7_like(5828);
+        let err = bfs(&CsrEngine(&a), &BfsOptions { source: 99, max_levels: 0 }).unwrap_err();
+        assert!(err.to_string().contains("bfs.source"), "{err}");
+        let err = sssp(&CsrEngine(&a), &SsspOptions { source: 99, max_iters: 0, chunk: 0 })
+            .unwrap_err();
+        assert!(err.to_string().contains("sssp.source"), "{err}");
+    }
+}

@@ -25,8 +25,12 @@
 
 use super::deploy::{DeployedPlan, Deployment};
 use super::error::{Error, Result};
+use crate::algo::{
+    bfs, gcn_forward, pagerank, sssp, AlgoTrace, BfsOptions, DeploymentEngine, GcnLayer,
+    MvmEngine, PageRankOptions, SsspOptions,
+};
 use crate::engine::BatchExecutor;
-use crate::util::json::{obj, Json};
+use crate::util::json::{num_arr, obj, Json};
 use std::io::BufRead;
 use std::time::Instant;
 
@@ -199,6 +203,244 @@ pub fn parse_deadline(doc: &Json) -> Result<Option<f64>> {
     }
 }
 
+/// A parsed graph-algorithm request — the four whole-algorithm kinds
+/// (`{"pagerank":{...}}`, `{"bfs":{...}}`, `{"sssp":{...}}`,
+/// `{"gcn":{...}}`) both transports answer via [`run_algo`].
+#[derive(Clone, Debug)]
+pub enum AlgoRequest {
+    PageRank(PageRankOptions),
+    Bfs(BfsOptions),
+    Sssp(SsspOptions),
+    Gcn {
+        /// input features, row-major `[dim, layers[0].in_dim]`
+        x: Vec<f64>,
+        layers: Vec<GcnLayer>,
+    },
+}
+
+impl AlgoRequest {
+    /// The request key, also the response payload key and the stats
+    /// counter label.
+    pub fn key(&self) -> &'static str {
+        match self {
+            AlgoRequest::PageRank(_) => "pagerank",
+            AlgoRequest::Bfs(_) => "bfs",
+            AlgoRequest::Sssp(_) => "sssp",
+            AlgoRequest::Gcn { .. } => "gcn",
+        }
+    }
+}
+
+/// A finished algorithm run in wire form: the payload to answer under
+/// [`AlgoAnswer::key`], plus the MVM count for throughput accounting.
+pub struct AlgoAnswer {
+    pub key: &'static str,
+    pub payload: Json,
+    pub mvms: u64,
+}
+
+fn algo_body<'a>(doc: &'a Json, key: &str) -> Result<&'a Json> {
+    let body = doc.get(key);
+    if body.as_obj().is_none() {
+        return Err(Error::Validate(format!("{key} request body must be an object")));
+    }
+    Ok(body)
+}
+
+fn field_f64(body: &Json, algo: &str, field: &str, default: f64) -> Result<f64> {
+    match body.get(field) {
+        Json::Null => Ok(default),
+        v => v.as_f64().ok_or_else(|| {
+            Error::Validate(format!("{algo}.{field} must be a number"))
+        }),
+    }
+}
+
+fn field_usize(body: &Json, algo: &str, field: &str, default: Option<usize>) -> Result<usize> {
+    match (body.get(field), default) {
+        (Json::Null, Some(d)) => Ok(d),
+        (Json::Null, None) => Err(Error::Validate(format!(
+            "{algo} request names no \"{field}\""
+        ))),
+        (v, _) => v.as_usize().ok_or_else(|| {
+            Error::Validate(format!("{algo}.{field} must be a non-negative integer"))
+        }),
+    }
+}
+
+fn parse_gcn(body: &Json, dim: usize) -> Result<AlgoRequest> {
+    let rows = body
+        .get("x")
+        .as_arr()
+        .ok_or_else(|| Error::Validate("gcn.x must be an array of per-node feature rows".into()))?;
+    if rows.len() != dim {
+        return Err(Error::Validate(format!(
+            "gcn.x has {} rows, deployment expects {dim}",
+            rows.len()
+        )));
+    }
+    let width = rows[0].as_arr().map(|r| r.len()).unwrap_or(0);
+    if width == 0 {
+        return Err(Error::Validate("gcn.x rows must be non-empty number arrays".into()));
+    }
+    let mut x = Vec::with_capacity(dim * width);
+    for (r, row) in rows.iter().enumerate() {
+        let vals = parse_vec(row, width).map_err(|e| match e {
+            Error::Validate(msg) => Error::Validate(format!("gcn.x[{r}]: {msg}")),
+            other => other,
+        })?;
+        x.extend(vals);
+    }
+    let specs = body
+        .get("layers")
+        .as_arr()
+        .ok_or_else(|| Error::Validate("gcn.layers must be an array of layer objects".into()))?;
+    if specs.is_empty() {
+        return Err(Error::Validate("gcn.layers must name at least one layer".into()));
+    }
+    let mut layers = Vec::with_capacity(specs.len());
+    let mut in_dim = width;
+    for (k, spec) in specs.iter().enumerate() {
+        let algo = format!("gcn.layers[{k}]");
+        if spec.as_obj().is_none() {
+            return Err(Error::Validate(format!("{algo} must be an object")));
+        }
+        let out_dim = field_usize(spec, &algo, "out_dim", None)?;
+        if out_dim == 0 {
+            return Err(Error::Validate(format!("{algo}.out_dim must be at least 1")));
+        }
+        let relu = match spec.get("relu") {
+            Json::Null => true,
+            v => v.as_bool().ok_or_else(|| {
+                Error::Validate(format!("{algo}.relu must be a boolean"))
+            })?,
+        };
+        let seed = field_usize(spec, &algo, "seed", Some(k))? as u64;
+        // weights are derived deterministically from the seed, so both
+        // transports (and every worker count) answer identically
+        layers.push(GcnLayer::random(in_dim, out_dim, relu, seed));
+        in_dim = out_dim;
+    }
+    Ok(AlgoRequest::Gcn { x, layers })
+}
+
+/// Recognize and validate an algorithm request. `Ok(None)` means the
+/// document carries none of the four algorithm keys (the caller falls
+/// through to plain `x`/`xs` handling); a present-but-malformed body is a
+/// typed [`Error::Validate`] naming the offending field.
+pub fn parse_algo(doc: &Json, dim: usize) -> Result<Option<AlgoRequest>> {
+    let present: Vec<&str> = ["pagerank", "bfs", "sssp", "gcn"]
+        .into_iter()
+        .filter(|k| doc.get(k) != &Json::Null)
+        .collect();
+    let key = match present.as_slice() {
+        [] => return Ok(None),
+        [k] => *k,
+        many => {
+            return Err(Error::Validate(format!(
+                "request carries more than one algorithm key: {many:?}"
+            )))
+        }
+    };
+    let body = algo_body(doc, key)?;
+    let req = match key {
+        "pagerank" => {
+            let d = PageRankOptions::default();
+            let opts = PageRankOptions {
+                damping: field_f64(body, "pagerank", "damping", d.damping)?,
+                tol: field_f64(body, "pagerank", "tol", d.tol)?,
+                max_iters: field_usize(body, "pagerank", "max_iters", Some(d.max_iters))?,
+            };
+            opts.validate()?;
+            AlgoRequest::PageRank(opts)
+        }
+        "bfs" => AlgoRequest::Bfs(BfsOptions {
+            source: field_usize(body, "bfs", "source", None)?,
+            max_levels: field_usize(body, "bfs", "max_levels", Some(0))?,
+        }),
+        "sssp" => AlgoRequest::Sssp(SsspOptions {
+            source: field_usize(body, "sssp", "source", None)?,
+            max_iters: field_usize(body, "sssp", "max_iters", Some(0))?,
+            chunk: field_usize(body, "sssp", "chunk", Some(0))?,
+        }),
+        _ => parse_gcn(body, dim)?,
+    };
+    if let AlgoRequest::Bfs(BfsOptions { source, .. })
+    | AlgoRequest::Sssp(SsspOptions { source, .. }) = req
+    {
+        if source >= dim {
+            return Err(Error::Validate(format!(
+                "{key}.source must be a node id below the dimension {dim}; got {source}"
+            )));
+        }
+    }
+    Ok(Some(req))
+}
+
+/// Run a parsed algorithm request on any [`MvmEngine`] and shape the wire
+/// payload. `-1` stands in for "unreachable" on the wire (`-1` level,
+/// `-1.0` distance) since NDJSON has no infinity literal.
+pub fn run_algo_on<E: MvmEngine>(engine: &E, req: &AlgoRequest) -> Result<AlgoAnswer> {
+    let (key, payload, trace): (&'static str, Vec<(&str, Json)>, AlgoTrace) = match req {
+        AlgoRequest::PageRank(opts) => {
+            let (scores, trace) = pagerank(engine, opts)?;
+            ("pagerank", vec![("scores", num_arr(scores))], trace)
+        }
+        AlgoRequest::Bfs(opts) => {
+            let (levels, trace) = bfs(engine, opts)?;
+            let reached = levels.iter().filter(|&&l| l >= 0).count();
+            (
+                "bfs",
+                vec![
+                    ("levels", num_arr(levels.iter().map(|&l| l as f64))),
+                    ("reached", Json::Num(reached as f64)),
+                ],
+                trace,
+            )
+        }
+        AlgoRequest::Sssp(opts) => {
+            let (dist, trace) = sssp(engine, opts)?;
+            let reached = dist.iter().filter(|d| d.is_finite()).count();
+            (
+                "sssp",
+                vec![
+                    (
+                        "dist",
+                        num_arr(dist.iter().map(|&d| if d.is_finite() { d } else { -1.0 })),
+                    ),
+                    ("reached", Json::Num(reached as f64)),
+                ],
+                trace,
+            )
+        }
+        AlgoRequest::Gcn { x, layers } => {
+            let (z, trace) = gcn_forward(engine, x, layers)?;
+            let out = layers.last().expect("validated non-empty").out_dim;
+            let rows: Vec<Json> = z
+                .chunks(out)
+                .map(|row| num_arr(row.iter().copied()))
+                .collect();
+            ("gcn", vec![("features", Json::Arr(rows))], trace)
+        }
+    };
+    let mvms = trace.mvms;
+    let mut fields = payload;
+    fields.push(("trace", trace.to_json()));
+    Ok(AlgoAnswer { key, payload: obj(fields), mvms })
+}
+
+/// [`run_algo_on`] against a deployment facade: the engine permutes
+/// requests into served order and answers in original node ids, so
+/// algorithm semantics are identical across plan shapes and transports.
+pub fn run_algo(
+    dep: &Deployment,
+    exec: &BatchExecutor<DeployedPlan>,
+    sharded: bool,
+    req: &AlgoRequest,
+) -> Result<AlgoAnswer> {
+    run_algo_on(&DeploymentEngine::new(dep, exec, sharded), req)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +503,74 @@ mod tests {
             Some(5.0)
         );
         assert!(parse_deadline(&Json::parse("{\"deadline_ms\": -1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn parse_algo_recognizes_kinds_and_defaults() {
+        let doc = Json::parse(r#"{"id":1,"x":[1,2,3]}"#).unwrap();
+        assert!(parse_algo(&doc, 3).unwrap().is_none());
+
+        let doc = Json::parse(r#"{"pagerank":{}}"#).unwrap();
+        match parse_algo(&doc, 8).unwrap().unwrap() {
+            AlgoRequest::PageRank(o) => {
+                assert_eq!(o.damping, 0.85);
+                assert_eq!(o.max_iters, PageRankOptions::default().max_iters);
+            }
+            other => panic!("expected pagerank, got {other:?}"),
+        }
+
+        let doc = Json::parse(r#"{"bfs":{"source":2}}"#).unwrap();
+        match parse_algo(&doc, 8).unwrap().unwrap() {
+            AlgoRequest::Bfs(o) => {
+                assert_eq!(o.source, 2);
+                assert_eq!(o.max_levels, 0);
+            }
+            other => panic!("expected bfs, got {other:?}"),
+        }
+
+        let doc = Json::parse(r#"{"sssp":{"source":1,"chunk":8}}"#).unwrap();
+        match parse_algo(&doc, 8).unwrap().unwrap() {
+            AlgoRequest::Sssp(o) => assert_eq!(o.chunk, 8),
+            other => panic!("expected sssp, got {other:?}"),
+        }
+
+        let doc = Json::parse(
+            r#"{"gcn":{"x":[[1,2],[3,4]],"layers":[{"out_dim":3},{"out_dim":1,"relu":false}]}}"#,
+        )
+        .unwrap();
+        match parse_algo(&doc, 2).unwrap().unwrap() {
+            AlgoRequest::Gcn { x, layers } => {
+                assert_eq!(x, vec![1.0, 2.0, 3.0, 4.0]);
+                assert_eq!(layers.len(), 2);
+                assert_eq!(layers[0].in_dim, 2);
+                assert_eq!(layers[0].out_dim, 3);
+                assert_eq!(layers[1].in_dim, 3);
+                assert!(!layers[1].relu);
+            }
+            other => panic!("expected gcn, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_algo_errors_name_the_field() {
+        let cases = [
+            (r#"{"pagerank":{"damping":2.0}}"#, "pagerank.damping"),
+            (r#"{"pagerank":{"max_iters":"x"}}"#, "pagerank.max_iters"),
+            (r#"{"bfs":{}}"#, "\"source\""),
+            (r#"{"bfs":{"source":99}}"#, "bfs.source"),
+            (r#"{"sssp":{"source":-1}}"#, "sssp.source"),
+            (r#"{"gcn":{"x":[[1],[2]],"layers":[]}}"#, "gcn.layers"),
+            (r#"{"gcn":{"x":[[1]],"layers":[{"out_dim":2}]}}"#, "gcn.x"),
+            (r#"{"gcn":{"x":[[1],["y"]],"layers":[{"out_dim":2}]}}"#, "gcn.x[1]"),
+            (r#"{"pagerank":{},"bfs":{"source":0}}"#, "more than one"),
+            (r#"{"bfs":7}"#, "must be an object"),
+        ];
+        for (line, needle) in cases {
+            let doc = Json::parse(line).unwrap();
+            let err = parse_algo(&doc, 2).unwrap_err();
+            assert_eq!(err.kind(), "validate", "{line}");
+            assert!(err.to_string().contains(needle), "{line}: {err}");
+        }
     }
 
     #[test]

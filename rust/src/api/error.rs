@@ -47,6 +47,18 @@ pub enum Error {
         /// the budget the request asked for
         deadline_ms: f64,
     },
+    /// An iterative algorithm run ([`crate::algo`]) exhausted its
+    /// iteration cap before reaching its fixed point. The partial answer
+    /// is discarded — a traversal that stopped early would silently
+    /// report unreachable nodes, so the failure is typed instead.
+    NoConverge {
+        /// stable algorithm label ("pagerank" | "bfs" | "sssp")
+        algorithm: &'static str,
+        /// iterations executed before giving up
+        iterations: usize,
+        /// the last residual (L1 rank delta, or remaining frontier size)
+        residual: f64,
+    },
 }
 
 /// `Result` specialized to the API boundary's typed [`Error`].
@@ -63,6 +75,7 @@ impl Error {
             Error::BundleVersion { .. } => "bundle_version",
             Error::Busy { .. } => "busy",
             Error::Deadline { .. } => "deadline",
+            Error::NoConverge { .. } => "no_converge",
         }
     }
 }
@@ -85,6 +98,11 @@ impl fmt::Display for Error {
                 f,
                 "deadline exceeded before execution: {elapsed_ms:.3} ms elapsed of a \
                  {deadline_ms:.3} ms budget"
+            ),
+            Error::NoConverge { algorithm, iterations, residual } => write!(
+                f,
+                "{algorithm} did not converge within {iterations} iterations \
+                 (residual {residual:e}); raise max_iters or loosen tol"
             ),
         }
     }
@@ -118,6 +136,11 @@ mod tests {
         let d = Error::Deadline { elapsed_ms: 12.5, deadline_ms: 10.0 };
         assert_eq!(d.kind(), "deadline");
         assert!(d.to_string().contains("12.5"));
+        let nc = Error::NoConverge { algorithm: "pagerank", iterations: 100, residual: 2.5e-4 };
+        assert_eq!(nc.kind(), "no_converge");
+        let msg = nc.to_string();
+        assert!(msg.contains("pagerank") && msg.contains("100"), "{msg}");
+        assert!(msg.contains("2.5e-4") || msg.contains("2.5e-04"), "{msg}");
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //!   response is `{"id": ..., "y": [...]}`.
 //! - `{"id": ..., "xs": [[f64; dim], ...]}` — an explicit batch, executed
 //!   as one dispatch; the response is `{"id": ..., "ys": [[...], ...]}`.
+//! - `{"id": ..., "pagerank": {...}}` / `{"bfs": {...}}` / `{"sssp":
+//!   {...}}` / `{"gcn": {...}}` — whole graph-algorithm runs
+//!   ([`crate::algo`]) answered as `{"id": ..., "<kind>": {..., "trace":
+//!   {...}}}`; parameters and payloads are documented in
+//!   [`crate::api::dispatch::parse_algo`] and mirrored by the TCP tier.
 //! - `{"flush": true}` — force the coalescing window to dispatch now.
 //!
 //! Single requests coalesce into executor batches of up to
@@ -34,12 +39,15 @@
 //!
 //! Every [`ServeOptions::stats_every`] served requests — and always once
 //! at end of input — the loop emits `{"stats": {"served", "errors",
-//! "batches", "rps", "nnz_per_s", "shards", "workers", "wall_s"}}` so
-//! operators can watch throughput without parsing responses.
+//! "batches", "rps", "nnz_per_s", "shards", "workers", "wall_s", "algo":
+//! {"pagerank", "bfs", "sssp", "gcn", "mvms"}}}` so operators can watch
+//! throughput (including the per-algorithm request mix) without parsing
+//! responses.
 
 use super::deploy::Deployment;
 use super::dispatch::{self, BoundedLine};
 use super::error::{Error, Result};
+use crate::algo::AlgoCounters;
 use crate::engine::Servable;
 use crate::util::json::{num_arr, obj, Json};
 use std::io::{BufRead, Write};
@@ -82,6 +90,9 @@ pub struct ServeReport {
     pub wall_seconds: f64,
     pub rps: f64,
     pub nnz_per_s: f64,
+    /// graph-algorithm requests served, by kind (an algorithm run counts
+    /// once in `served` however many MVMs it issued)
+    pub algo: AlgoCounters,
 }
 
 /// Run the serve loop over a deployment until `input` ends. Returns the
@@ -104,32 +115,35 @@ pub fn serve_loop<R: BufRead, W: Write>(
     let mut served = 0u64;
     let mut errors = 0u64;
     let mut batches = 0u64;
+    let mut algo = AlgoCounters::default();
     let mut next_stats = match opts.stats_every {
         0 => u64::MAX,
         n => n as u64,
     };
     let t0 = Instant::now();
 
-    let emit_stats = |out: &mut W, served: u64, errors: u64, batches: u64| -> Result<()> {
-        let wall = t0.elapsed().as_secs_f64();
-        let rps = served as f64 / wall.max(1e-9);
-        let line = obj(vec![(
-            "stats",
-            obj(vec![
-                ("served", Json::Num(served as f64)),
-                ("errors", Json::Num(errors as f64)),
-                ("batches", Json::Num(batches as f64)),
-                ("rps", Json::Num(rps)),
-                ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
-                ("shards", Json::Num(shards as f64)),
-                ("workers", Json::Num(exec.workers() as f64)),
-                ("wall_s", Json::Num(wall)),
-            ]),
-        )]);
-        writeln!(out, "{}", line.to_string())?;
-        out.flush()?;
-        Ok(())
-    };
+    let emit_stats =
+        |out: &mut W, served: u64, errors: u64, batches: u64, algo: &AlgoCounters| -> Result<()> {
+            let wall = t0.elapsed().as_secs_f64();
+            let rps = served as f64 / wall.max(1e-9);
+            let line = obj(vec![(
+                "stats",
+                obj(vec![
+                    ("served", Json::Num(served as f64)),
+                    ("errors", Json::Num(errors as f64)),
+                    ("batches", Json::Num(batches as f64)),
+                    ("rps", Json::Num(rps)),
+                    ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
+                    ("shards", Json::Num(shards as f64)),
+                    ("workers", Json::Num(exec.workers() as f64)),
+                    ("wall_s", Json::Num(wall)),
+                    ("algo", algo.to_json()),
+                ]),
+            )]);
+            writeln!(out, "{}", line.to_string())?;
+            out.flush()?;
+            Ok(())
+        };
 
     loop {
         let line = match read_framed(&mut input, max_line)? {
@@ -168,6 +182,39 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut batches,
                 out,
             )?;
+        } else if let Some(req) = match dispatch::parse_algo(&doc, dim) {
+            Ok(r) => r,
+            Err(e) => {
+                errors += 1;
+                write_error(out, id, &e)?;
+                continue;
+            }
+        } {
+            // a whole-algorithm run: dispatch pending singles first so
+            // responses stay in request order, then iterate to completion
+            flush_pending(
+                dep,
+                &exec,
+                opts.sharded,
+                &mut pending_ids,
+                &mut pending_xs,
+                &mut served,
+                &mut batches,
+                out,
+            )?;
+            match dispatch::run_algo(dep, &exec, opts.sharded, &req) {
+                Ok(ans) => {
+                    algo.record(ans.key, ans.mvms);
+                    served += 1;
+                    batches += 1;
+                    write_response(out, obj(vec![("id", id), (ans.key, ans.payload)]))?;
+                    out.flush()?;
+                }
+                Err(e) => {
+                    errors += 1;
+                    write_error(out, id, &e)?;
+                }
+            }
         } else if doc.get("xs") != &Json::Null {
             // explicit batch: dispatch pending singles first so responses
             // stay in request order, then run the batch as one dispatch
@@ -222,7 +269,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         }
 
         if served >= next_stats {
-            emit_stats(out, served, errors, batches)?;
+            emit_stats(out, served, errors, batches, &algo)?;
             next_stats = served + opts.stats_every.max(1) as u64;
         }
     }
@@ -237,7 +284,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         &mut batches,
         out,
     )?;
-    emit_stats(out, served, errors, batches)?;
+    emit_stats(out, served, errors, batches, &algo)?;
 
     let wall = t0.elapsed().as_secs_f64();
     let rps = served as f64 / wall.max(1e-9);
@@ -248,6 +295,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         wall_seconds: wall,
         rps,
         nnz_per_s: rps * plan_nnz as f64,
+        algo,
     })
 }
 

@@ -1,190 +1,109 @@
-//! Spectral GCN workload (Eq. 1) — the motivating application the paper
-//! opens §III with:
+//! Deprecated home of the GCN workload — the implementation moved to
+//! [`crate::algo::gcn`], where the multi-layer forward pass runs over any
+//! [`crate::engine::Servable`] through the [`crate::algo::MvmEngine`]
+//! adapters and is served end-to-end as the `{"gcn":{...}}` request kind.
 //!
-//!   Z_{l+1} = σ( D̂^{-1/2} Â D̂^{-1/2} Z_l W_l ),   Â = A + I
-//!
-//! The normalized adjacency is the sparse matrix mapped onto crossbars;
-//! feature propagation is a batch of MVMs through the mapped tiles, with
-//! the switch circuit applying P / Pᵀ around the array. The dense path is
-//! the correctness oracle; `examples/gcn_inference.rs` runs both and
-//! reports agreement + crossbar cost.
+//! This module keeps the old paths alive for one deprecation cycle:
+//! [`GcnLayer`], [`normalized_adjacency`], and [`max_abs_diff`] re-export
+//! the moved items, and [`forward_crossbar`] preserves the original
+//! pre-engine demonstration path — a raw [`crate::crossbar::CrossbarArray`]
+//! with the switch circuit applying P / Pᵀ around the array (Eqs. 4–6).
+//! New code should use [`crate::algo::gcn::gcn_forward`] over a mapped
+//! plan; `examples/gcn_inference.rs` shows the replacement end to end.
 
 use crate::crossbar::switch::SwitchCircuit;
 use crate::crossbar::CrossbarArray;
-use crate::graph::{Coo, Csr};
-use crate::util::rng::Pcg64;
+use crate::graph::Csr;
 use anyhow::{ensure, Result};
 
-/// Symmetric-normalized adjacency with self-loops: D̂^{-1/2}(A+I)D̂^{-1/2}.
+/// Moved to [`crate::algo::gcn::GcnLayer`].
+#[deprecated(note = "moved to crate::algo::gcn::GcnLayer")]
+pub type GcnLayer = crate::algo::gcn::GcnLayer;
+
+/// Moved to [`crate::algo::gcn::normalized_adjacency`].
+#[deprecated(note = "moved to crate::algo::gcn::normalized_adjacency")]
 pub fn normalized_adjacency(a: &Csr) -> Csr {
-    assert_eq!(a.rows, a.cols, "GCN adjacency must be square");
-    let n = a.rows;
-    // Â = A + I
-    let mut coo = Coo::new(n, n);
-    for r in 0..n {
-        for (i, &c) in a.row(r).iter().enumerate() {
-            if r != c {
-                coo.push(r, c, a.row_vals(r)[i]);
-            }
-        }
-        coo.push(r, r, a.get(r, r) + 1.0);
-    }
-    let ahat = coo.to_csr();
-    // degrees
-    let deg: Vec<f64> = (0..n).map(|r| ahat.row_vals(r).iter().sum()).collect();
-    let dinv_sqrt: Vec<f64> = deg
-        .iter()
-        .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
-        .collect();
-    let mut out = Coo::new(n, n);
-    for r in 0..n {
-        for (i, &c) in ahat.row(r).iter().enumerate() {
-            out.push(r, c, dinv_sqrt[r] * ahat.row_vals(r)[i] * dinv_sqrt[c]);
-        }
-    }
-    out.to_csr()
+    crate::algo::gcn::normalized_adjacency(a)
 }
 
-/// One GCN layer's dense weights, row-major [in_dim, out_dim].
-#[derive(Clone, Debug)]
-pub struct GcnLayer {
-    pub in_dim: usize,
-    pub out_dim: usize,
-    pub w: Vec<f64>,
-    pub relu: bool,
-}
-
-impl GcnLayer {
-    pub fn random(in_dim: usize, out_dim: usize, relu: bool, seed: u64) -> GcnLayer {
-        let mut rng = Pcg64::seed_from_u64(seed ^ 0x6763_6e5f_7731_0001);
-        let scale = (2.0 / in_dim as f64).sqrt();
-        GcnLayer {
-            in_dim,
-            out_dim,
-            w: (0..in_dim * out_dim)
-                .map(|_| rng.normal() * scale)
-                .collect(),
-            relu,
-        }
-    }
-
-    /// Z W (node-feature transform), Z row-major [n, in_dim].
-    fn transform(&self, z: &[f64], n: usize) -> Vec<f64> {
-        let mut out = vec![0.0; n * self.out_dim];
-        for r in 0..n {
-            for i in 0..self.in_dim {
-                let zv = z[r * self.in_dim + i];
-                if zv == 0.0 {
-                    continue;
-                }
-                let wrow = &self.w[i * self.out_dim..(i + 1) * self.out_dim];
-                for (o, wv) in out[r * self.out_dim..(r + 1) * self.out_dim]
-                    .iter_mut()
-                    .zip(wrow)
-                {
-                    *o += zv * wv;
-                }
-            }
-        }
-        out
-    }
-
-    fn activate(&self, x: &mut [f64]) {
-        if self.relu {
-            for v in x.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
-    }
-
-    /// Dense oracle: σ(A_norm (Z W)).
-    pub fn forward_dense(&self, a_norm: &Csr, z: &[f64]) -> Vec<f64> {
-        let n = a_norm.rows;
-        assert_eq!(z.len(), n * self.in_dim);
-        let zw = self.transform(z, n);
-        // propagate each output column through the sparse matrix
-        let mut out = vec![0.0; n * self.out_dim];
-        let mut col = vec![0.0; n];
-        for o in 0..self.out_dim {
-            for r in 0..n {
-                col[r] = zw[r * self.out_dim + o];
-            }
-            let prop = a_norm.spmv(&col);
-            for r in 0..n {
-                out[r * self.out_dim + o] = prop[r];
-            }
-        }
-        self.activate(&mut out);
-        out
-    }
-
-    /// Crossbar path: σ(Pᵀ(A'(P(Z W)))) per feature column, where `arr`
-    /// holds A' = P A_norm Pᵀ and `sw` is the switch circuit for P.
-    pub fn forward_crossbar(
-        &self,
-        arr: &CrossbarArray,
-        sw: &SwitchCircuit,
-        z: &[f64],
-    ) -> Result<Vec<f64>> {
-        let n = arr.dim;
-        ensure!(sw.len() == n, "switch/array size mismatch");
-        ensure!(z.len() == n * self.in_dim, "feature matrix shape mismatch");
-        let zw = self.transform(z, n);
-        let mut out = vec![0.0; n * self.out_dim];
-        let mut col = vec![0.0; n];
-        for o in 0..self.out_dim {
-            for r in 0..n {
-                col[r] = zw[r * self.out_dim + o];
-            }
-            let xp = sw.forward(&col); // x' = P x   (Eq. 4)
-            let yp = arr.mvm(&xp); //      y' = A' x' (crossbar pass)
-            let y = sw.inverse(&yp); //    y = Pᵀ y'  (Eq. 6)
-            for r in 0..n {
-                out[r * self.out_dim + o] = y[r];
-            }
-        }
-        self.activate(&mut out);
-        Ok(out)
-    }
-}
-
-/// Max absolute elementwise difference — agreement metric for the example.
+/// Moved to [`crate::algo::gcn::max_abs_diff`].
+#[deprecated(note = "moved to crate::algo::gcn::max_abs_diff")]
 pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
-    a.iter()
-        .zip(b.iter())
-        .map(|(x, y)| (x - y).abs())
-        .fold(0.0, f64::max)
+    crate::algo::gcn::max_abs_diff(a, b)
+}
+
+/// One layer through a raw placed array: σ(Pᵀ(A'(P(Z W)))) per feature
+/// column, where `arr` holds A' = P A_norm Pᵀ and `sw` is the switch
+/// circuit for P. This was `GcnLayer::forward_crossbar` before the move;
+/// the engine path ([`crate::algo::gcn::gcn_forward`] over a compiled
+/// plan) supersedes it — one multi-RHS batch per layer instead of one
+/// array pass per feature column.
+#[deprecated(note = "use crate::algo::gcn::gcn_forward over a mapped plan")]
+pub fn forward_crossbar(
+    layer: &crate::algo::gcn::GcnLayer,
+    arr: &CrossbarArray,
+    sw: &SwitchCircuit,
+    z: &[f64],
+) -> Result<Vec<f64>> {
+    let n = arr.dim;
+    ensure!(sw.len() == n, "switch/array size mismatch");
+    ensure!(z.len() == n * layer.in_dim, "feature matrix shape mismatch");
+    // Z W on the host (weights are dense), one switched array pass per
+    // output column
+    let mut zw = vec![0.0; n * layer.out_dim];
+    for r in 0..n {
+        for i in 0..layer.in_dim {
+            let zv = z[r * layer.in_dim + i];
+            if zv == 0.0 {
+                continue;
+            }
+            let wrow = &layer.w[i * layer.out_dim..(i + 1) * layer.out_dim];
+            for (o, wv) in zw[r * layer.out_dim..(r + 1) * layer.out_dim]
+                .iter_mut()
+                .zip(wrow)
+            {
+                *o += zv * wv;
+            }
+        }
+    }
+    let mut out = vec![0.0; n * layer.out_dim];
+    let mut col = vec![0.0; n];
+    for o in 0..layer.out_dim {
+        for r in 0..n {
+            col[r] = zw[r * layer.out_dim + o];
+        }
+        let xp = sw.forward(&col); // x' = P x   (Eq. 4)
+        let yp = arr.mvm(&xp); //      y' = A' x' (crossbar pass)
+        let y = sw.inverse(&yp); //    y = Pᵀ y'  (Eq. 6)
+        for r in 0..n {
+            out[r * layer.out_dim + o] = y[r];
+        }
+    }
+    if layer.relu {
+        for v in out.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::algo::gcn::GcnLayer;
     use crate::crossbar::place;
     use crate::graph::{synth, GridSummary};
     use crate::reorder::{reorder, Reordering};
     use crate::scheme::Scheme;
-
-    #[test]
-    fn normalization_rows_bounded() {
-        let a = synth::qm7_like(5828);
-        let nrm = normalized_adjacency(&a);
-        assert_eq!(nrm.nnz(), a.nnz() + a.rows); // self loops added
-        // spectral norm of sym-normalized adjacency is <= 1; cheap proxy:
-        // every entry within (0, 1]
-        for r in 0..nrm.rows {
-            for &v in nrm.row_vals(r) {
-                assert!(v > 0.0 && v <= 1.0 + 1e-12);
-            }
-        }
-        assert!(nrm.is_symmetric());
-    }
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn crossbar_path_matches_dense_on_complete_coverage() {
         let a = synth::qm7_like(5828);
-        let nrm = normalized_adjacency(&a);
+        let nrm = crate::algo::gcn::normalized_adjacency(&a);
         let r = reorder(&nrm, Reordering::CuthillMckee);
         let g = GridSummary::new(&r.matrix, 2);
         let scheme = Scheme { diag_len: vec![g.n], fill_len: vec![] };
@@ -194,24 +113,18 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(2);
         let z: Vec<f64> = (0..22 * 6).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let dense = layer.forward_dense(&nrm, &z);
-        let xbar = layer.forward_crossbar(&arr, &sw, &z).unwrap();
-        let diff = max_abs_diff(&dense, &xbar);
+        let xbar = forward_crossbar(&layer, &arr, &sw, &z).unwrap();
+        let diff = crate::algo::gcn::max_abs_diff(&dense, &xbar);
         assert!(diff < 1e-6, "dense vs crossbar diff {diff}");
     }
 
     #[test]
-    fn relu_applied() {
+    fn deprecated_reexports_answer_like_the_moved_items() {
         let a = synth::qm7_like(5828);
-        let nrm = normalized_adjacency(&a);
-        let layer = GcnLayer::random(3, 3, true, 7);
-        let mut rng = Pcg64::seed_from_u64(3);
-        let z: Vec<f64> = (0..22 * 3).map(|_| rng.uniform(-2.0, 2.0)).collect();
-        let out = layer.forward_dense(&nrm, &z);
-        assert!(out.iter().all(|&v| v >= 0.0));
-        let lin = GcnLayer { relu: false, ..layer };
-        let out2 = lin.forward_dense(&nrm, &z);
-        assert!(out2.iter().any(|&v| v < 0.0));
+        assert_eq!(
+            normalized_adjacency(&a).to_dense(),
+            crate::algo::gcn::normalized_adjacency(&a).to_dense()
+        );
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[0.5, 4.0]), 2.0);
     }
-
-    use crate::util::rng::Pcg64;
 }

@@ -137,8 +137,31 @@
 //! invariant under concurrent load (the CI `net-smoke` gate). Both
 //! transports share one request-dispatch core ([`api::dispatch`]), so
 //! error objects are byte-identical on stdin and socket.
+//!
+//! ## Graph algorithms
+//!
+//! The [`algo`] subsystem turns a mapped matrix from a `y = Ax` answerer
+//! into an asset amortized across whole algorithms — the GraphR-style
+//! iterated-SpMV formulations of **PageRank** (damped power iteration,
+//! L1-residual convergence), **BFS** and **SSSP** (boolean and min–plus
+//! semirings applied in the digital post-step; the programmed arena is
+//! untouched), and the **multi-layer GCN forward** (one multi-RHS batch
+//! per layer through the span kernel, dense weight GEMM + ReLU between
+//! layers). Algorithms run over any [`engine::Servable`] via the
+//! [`algo::MvmEngine`] adapters, report an [`algo::AlgoTrace`]
+//! (iterations, residual curve, amortized nnz/s), and are served
+//! end-to-end: the request kinds `{"pagerank":{...}}`, `{"bfs":{...}}`,
+//! `{"sssp":{...}}`, `{"gcn":{...}}` are answered identically by the
+//! stdin `serve` loop and the TCP tier (typed `no_converge` errors
+//! included), per-algorithm counters surface in both stats surfaces, and
+//! the `algo-bench` CLI subcommand ledgers iterations/s and amortized
+//! nnz/s per algorithm on flat vs composite plans in `BENCH_algo.json`.
+//! BFS/SSSP answers are bit-identical to queue-based references;
+//! PageRank/GCN match dense CSR oracles within 1e-5 at identical
+//! iteration counts (`tests/integration_algo.rs`).
 
 pub mod agent;
+pub mod algo;
 pub mod api;
 pub mod baselines;
 pub mod coordinator;

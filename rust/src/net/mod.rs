@@ -37,13 +37,40 @@
 //! `validate` for unknown tenants (the message names the deployed ids)
 //! and malformed vectors (length mismatches name both lengths).
 //!
+//! **Algorithm requests** run a whole iterative graph algorithm
+//! ([`crate::algo`]) against a tenant's mapped plan — the request kinds,
+//! parameters (and their defaults), payloads, and the embedded `trace`
+//! object are exactly the stdin loop's, documented in
+//! [`crate::api::dispatch::parse_algo`]:
+//!
+//! ```text
+//! → {"tenant":"graphA","id":4,"pagerank":{"damping":0.85,"tol":1e-9}}
+//! ← {"tenant":"graphA","id":4,"pagerank":{"scores":[...],"trace":{...}}}
+//! → {"tenant":"graphA","id":5,"bfs":{"source":0}}
+//! ← {"tenant":"graphA","id":5,"bfs":{"levels":[...],"reached":..,"trace":{...}}}
+//! → {"tenant":"graphA","id":6,"sssp":{"source":0,"chunk":64}}
+//! ← {"tenant":"graphA","id":6,"sssp":{"dist":[...],"reached":..,"trace":{...}}}
+//! → {"tenant":"graphA","id":7,"gcn":{"x":[[...],...],"layers":[{"out_dim":16}]}}
+//! ← {"tenant":"graphA","id":7,"gcn":{"features":[[...],...],"trace":{...}}}
+//! ```
+//!
+//! An algorithm run holds one admission slot for its whole iteration
+//! loop and counts once in `served`; `-1` encodes "unreachable" on the
+//! wire (BFS level, SSSP distance). A run that exhausts its iteration
+//! cap without meeting its tolerance is a typed `no_converge` error
+//! whose message reports the iterations and final residual; bad
+//! parameters are `validate` errors naming the offending field. Both
+//! objects are byte-identical to the stdin loop's for the same request.
+//!
 //! **Admin requests** query or mutate the registry:
 //!
 //! ```text
 //! → {"admin":"stats"}
 //! ← {"admin":"stats","stats":{"graphA":{"served":..,"rps":..,
 //!      "nnz_per_s":..,"inflight":..,"queue_depth":..,
-//!      "rejected_busy":..,"rejected_deadline":..,"generation":..},..}}
+//!      "rejected_busy":..,"rejected_deadline":..,"generation":..,
+//!      "wall_s":..,"uptime_s":..,
+//!      "algo":{"pagerank":..,"bfs":..,"sssp":..,"gcn":..,"mvms":..}},..}}
 //! → {"admin":{"reload":{"id":"graphA","bundle":"remapped.json"}}}
 //! ← {"admin":"reload","id":"graphA","generation":2,"dim":10000}
 //! ```
@@ -53,7 +80,11 @@
 //! finish on the generation they were admitted against; requests arriving
 //! after the ack are served by the new one. The serving invariant — every
 //! socket answer is bit-identical to [`crate::api::Deployment::mvm`] on
-//! the generation that served it — holds across the swap.
+//! the generation that served it — holds across the swap. A reload also
+//! restarts the tenant's rate window: `rps` and `nnz_per_s` in `stats`
+//! are normalized by the *current generation's* uptime (its `wall_s`),
+//! while `served`, `uptime_s`, and the `algo` counters stay cumulative
+//! across generations.
 //!
 //! # Pieces
 //!

@@ -25,7 +25,7 @@
 //! deployed graphs); per-tenant output-buffer pools stay private because
 //! buffer length is plan-dimension-specific.
 
-use crate::api::dispatch;
+use crate::api::dispatch::{self, AlgoAnswer, AlgoRequest};
 use crate::api::{DeployedPlan, Deployment, Error, Result};
 use crate::engine::{BatchExecutor, Servable};
 use crate::util::json::Json;
@@ -65,6 +65,11 @@ pub struct TenantEntry {
     executor: BatchExecutor<DeployedPlan>,
     generation: u64,
     bundle: Option<PathBuf>,
+    /// monotonic clock captured when this generation was installed in the
+    /// registry — the base of the uptime-normalized rates in
+    /// [`Tenant::stats_json`], so a hot-swapped tenant's `rps` reflects
+    /// the generation actually serving, not a stale lifetime average
+    installed: Instant,
 }
 
 impl TenantEntry {
@@ -94,10 +99,21 @@ impl TenantEntry {
         self.bundle.as_deref()
     }
 
+    /// When this generation was installed (monotonic).
+    pub fn installed(&self) -> Instant {
+        self.installed
+    }
+
     /// Execute a request batch against this generation: permute in,
     /// run on the shared pool, permute back to original node ids.
     pub fn execute(&self, xs: Vec<Vec<f64>>, sharded: bool) -> Vec<Vec<f64>> {
         dispatch::execute_permuted(&self.deployment, &self.executor, xs, sharded)
+    }
+
+    /// Run a whole graph-algorithm request ([`crate::algo`]) against this
+    /// generation, iterating MVMs on the shared pool.
+    pub fn run_algo(&self, req: &AlgoRequest, sharded: bool) -> Result<AlgoAnswer> {
+        dispatch::run_algo(&self.deployment, &self.executor, sharded, req)
     }
 }
 
@@ -115,6 +131,16 @@ pub struct Tenant {
     rejected_busy: AtomicU64,
     rejected_deadline: AtomicU64,
     served_nnz: AtomicU64,
+    // per-generation rate window: reset on every hot-swap so `rps` and
+    // `nnz_per_s` are normalized by the *current* generation's uptime
+    gen_served: AtomicU64,
+    gen_served_nnz: AtomicU64,
+    // per-algorithm request counters (cumulative across generations)
+    algo_pagerank: AtomicU64,
+    algo_bfs: AtomicU64,
+    algo_sssp: AtomicU64,
+    algo_gcn: AtomicU64,
+    algo_mvms: AtomicU64,
     t0: Instant,
 }
 
@@ -143,6 +169,13 @@ impl Tenant {
             rejected_busy: AtomicU64::new(0),
             rejected_deadline: AtomicU64::new(0),
             served_nnz: AtomicU64::new(0),
+            gen_served: AtomicU64::new(0),
+            gen_served_nnz: AtomicU64::new(0),
+            algo_pagerank: AtomicU64::new(0),
+            algo_bfs: AtomicU64::new(0),
+            algo_sssp: AtomicU64::new(0),
+            algo_gcn: AtomicU64::new(0),
+            algo_mvms: AtomicU64::new(0),
             t0: Instant::now(),
         }
     }
@@ -189,11 +222,28 @@ impl Tenant {
         }
     }
 
-    /// Account a successfully served batch of `requests` MVMs.
+    /// Account a successfully served batch of `requests` MVMs (both the
+    /// lifetime counters and the current generation's rate window).
     pub fn record_served(&self, requests: u64, nnz_per_request: u64) {
         self.served.fetch_add(requests, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.served_nnz.fetch_add(requests * nnz_per_request, Ordering::Relaxed);
+        self.gen_served.fetch_add(requests, Ordering::Relaxed);
+        self.gen_served_nnz.fetch_add(requests * nnz_per_request, Ordering::Relaxed);
+    }
+
+    /// Account one finished graph-algorithm run of kind `key`, which
+    /// issued `mvms` MVMs against the arena.
+    pub fn record_algo(&self, key: &str, mvms: u64) {
+        let counter = match key {
+            "pagerank" => &self.algo_pagerank,
+            "bfs" => &self.algo_bfs,
+            "sssp" => &self.algo_sssp,
+            "gcn" => &self.algo_gcn,
+            _ => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.algo_mvms.fetch_add(mvms, Ordering::Relaxed);
     }
 
     /// Account a failed request under the right rejection counter.
@@ -207,23 +257,35 @@ impl Tenant {
     }
 
     /// Swap in a new generation built by `make` (which receives the next
-    /// generation number) under the tenant's write lock.
+    /// generation number) under the tenant's write lock. The lifetime
+    /// counters survive; the per-generation rate window restarts so the
+    /// new generation is not credited with the old one's traffic.
     fn swap_with(&self, make: impl FnOnce(u64) -> Arc<TenantEntry>) -> Arc<TenantEntry> {
         let mut cur = self.current.write().unwrap();
         let entry = make(cur.generation + 1);
         *cur = entry.clone();
+        self.gen_served.store(0, Ordering::Relaxed);
+        self.gen_served_nnz.store(0, Ordering::Relaxed);
         entry
     }
 
     /// The per-tenant stats object the `{"admin":"stats"}` wire request
     /// returns: traffic rates, queue state, rejection counts, generation,
-    /// and the current generation's kernel mix (dense/sparse program
-    /// counts, per-kernel nnz, pattern-dedup hits) so operators can see
-    /// what a reload did to the serving hot path.
+    /// the per-algorithm request mix, and the current generation's kernel
+    /// mix (dense/sparse program counts, per-kernel nnz, pattern-dedup
+    /// hits) so operators can see what a reload did to the serving hot
+    /// path.
+    ///
+    /// `rps` / `nnz_per_s` are normalized by `wall_s`, the *current
+    /// generation's* uptime (monotonic clock captured when the entry was
+    /// installed), over traffic served by that generation alone — a
+    /// hot-swapped tenant never reports a rate diluted or inflated by a
+    /// predecessor's history. `served`, `batches`, and `uptime_s` stay
+    /// cumulative over the tenant's lifetime.
     pub fn stats_json(&self) -> Json {
         let entry = self.entry();
         let kernels = entry.deployment().stats();
-        let wall = self.t0.elapsed().as_secs_f64().max(1e-9);
+        let wall = entry.installed().elapsed().as_secs_f64().max(1e-9);
         let served = self.served.load(Ordering::Relaxed);
         let mut map = BTreeMap::new();
         map.insert("served".into(), Json::Num(served as f64));
@@ -265,12 +327,29 @@ impl Tenant {
             "pattern_dedup_hits".into(),
             Json::Num(kernels.pattern_dedup_hits as f64),
         );
-        map.insert("rps".into(), Json::Num(served as f64 / wall));
+        map.insert(
+            "rps".into(),
+            Json::Num(self.gen_served.load(Ordering::Relaxed) as f64 / wall),
+        );
         map.insert(
             "nnz_per_s".into(),
-            Json::Num(self.served_nnz.load(Ordering::Relaxed) as f64 / wall),
+            Json::Num(self.gen_served_nnz.load(Ordering::Relaxed) as f64 / wall),
         );
         map.insert("wall_s".into(), Json::Num(wall));
+        map.insert(
+            "uptime_s".into(),
+            Json::Num(self.t0.elapsed().as_secs_f64().max(1e-9)),
+        );
+        let mut algo = BTreeMap::new();
+        algo.insert(
+            "pagerank".into(),
+            Json::Num(self.algo_pagerank.load(Ordering::Relaxed) as f64),
+        );
+        algo.insert("bfs".into(), Json::Num(self.algo_bfs.load(Ordering::Relaxed) as f64));
+        algo.insert("sssp".into(), Json::Num(self.algo_sssp.load(Ordering::Relaxed) as f64));
+        algo.insert("gcn".into(), Json::Num(self.algo_gcn.load(Ordering::Relaxed) as f64));
+        algo.insert("mvms".into(), Json::Num(self.algo_mvms.load(Ordering::Relaxed) as f64));
+        map.insert("algo".into(), Json::Obj(algo));
         Json::Obj(map)
     }
 }
@@ -321,6 +400,7 @@ impl DeploymentRegistry {
             executor,
             generation,
             bundle,
+            installed: Instant::now(),
         })
     }
 
@@ -482,6 +562,44 @@ mod tests {
         let t2 = reg.reload("h", &bundle).unwrap();
         assert_eq!(t2.generation(), 1);
         assert_eq!(reg.ids(), vec!["g".to_string(), "h".to_string()]);
+        let _ = std::fs::remove_file(&bundle);
+    }
+
+    #[test]
+    fn reload_resets_the_rate_window_but_keeps_lifetime_counters() {
+        let dir = std::env::temp_dir().join(format!("autogmap_regwin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = dir.join("swap.json");
+        small_dep(2).save(&bundle).unwrap();
+
+        let reg = small_registry(4);
+        reg.insert("g", small_dep(1), None);
+        let tenant = reg.get("g").unwrap();
+        tenant.record_served(40, tenant.entry().nnz());
+        tenant.record_algo("pagerank", 21);
+        let before = tenant.stats_json();
+        assert!(before.get("rps").as_f64().unwrap() > 0.0);
+        assert_eq!(before.get("algo").get("pagerank").as_i64(), Some(1));
+        assert_eq!(before.get("algo").get("mvms").as_i64(), Some(21));
+
+        reg.reload("g", &bundle).unwrap();
+        let after = tenant.stats_json();
+        // lifetime counters survive the swap; the rate window does not
+        assert_eq!(after.get("served").as_i64(), Some(40));
+        assert_eq!(after.get("generation").as_i64(), Some(2));
+        assert_eq!(after.get("rps").as_f64(), Some(0.0), "fresh generation has served nothing");
+        assert_eq!(after.get("nnz_per_s").as_f64(), Some(0.0));
+        assert!(
+            after.get("wall_s").as_f64().unwrap() < after.get("uptime_s").as_f64().unwrap(),
+            "the rate window is the generation's uptime, not the tenant's"
+        );
+        assert_eq!(after.get("algo").get("pagerank").as_i64(), Some(1));
+
+        // traffic after the swap is normalized by the new window alone
+        tenant.record_served(5, tenant.entry().nnz());
+        let s2 = tenant.stats_json();
+        assert!(s2.get("rps").as_f64().unwrap() > 0.0);
+        assert_eq!(s2.get("served").as_i64(), Some(45));
         let _ = std::fs::remove_file(&bundle);
     }
 

@@ -262,6 +262,19 @@ fn serve_request(
         let entry = tenant.entry();
         let dim = entry.dim();
         let deadline = dispatch::parse_deadline(doc)?;
+        if let Some(req) = dispatch::parse_algo(doc, dim)? {
+            // a whole-algorithm run occupies one admission slot for its
+            // entire iterative lifetime — deliberate: queue depth bounds
+            // arena pressure, not request count
+            let _slot = tenant.admit()?;
+            if let Some(ms) = deadline {
+                dispatch::check_deadline(arrival, ms)?;
+            }
+            let ans = entry.run_algo(&req, registry.sharded())?;
+            tenant.record_algo(ans.key, ans.mvms);
+            tenant.record_served(1, ans.mvms * entry.nnz());
+            return Ok((ans.key, ans.payload));
+        }
         let batched = doc.get("xs") != &Json::Null;
         let xs = if batched {
             dispatch::parse_batch(doc.get("xs"), dim)?
@@ -447,6 +460,53 @@ mod tests {
             now(),
         );
         assert_eq!(resp.get("error").get("kind").as_str(), Some("io"));
+    }
+
+    #[test]
+    fn algo_requests_answer_over_the_socket_dialect() {
+        let reg = registry_with_tenant(4);
+        let dim = reg.get("g").unwrap().entry().dim();
+        let resp = handle_line(
+            &reg,
+            r#"{"tenant":"g","id":3,"pagerank":{"tol":1e-10,"max_iters":500}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("tenant").as_str(), Some("g"));
+        assert_eq!(resp.get("id").as_i64(), Some(3));
+        let pr = resp.get("pagerank");
+        let mass: f64 =
+            pr.get("scores").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).sum();
+        assert!((mass - 1.0).abs() < 1e-9, "rank mass {mass}");
+        assert_eq!(pr.get("trace").get("algorithm").as_str(), Some("pagerank"));
+        assert_eq!(pr.get("trace").get("converged").as_bool(), Some(true));
+
+        let resp = handle_line(&reg, r#"{"tenant":"g","id":4,"bfs":{"source":0}}"#, now());
+        assert_eq!(resp.get("bfs").get("levels").as_arr().unwrap().len(), dim);
+
+        // the admin stats surface reports the per-algorithm request mix
+        let stats = handle_line(&reg, r#"{"admin":"stats"}"#, now());
+        let algo = stats.get("stats").get("g").get("algo");
+        assert_eq!(algo.get("pagerank").as_i64(), Some(1));
+        assert_eq!(algo.get("bfs").as_i64(), Some(1));
+        assert_eq!(algo.get("sssp").as_i64(), Some(0));
+        assert!(algo.get("mvms").as_i64().unwrap() > 0);
+
+        // algorithm failures are typed error answers, not dead connections
+        let resp = handle_line(
+            &reg,
+            r#"{"tenant":"g","id":5,"pagerank":{"tol":1e-15,"max_iters":1}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("no_converge"));
+        let resp = handle_line(&reg, r#"{"tenant":"g","id":6,"bfs":{"source":9999}}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        // an algorithm run respects the deadline admission gate
+        let resp = handle_line(
+            &reg,
+            r#"{"tenant":"g","id":7,"deadline_ms":0,"bfs":{"source":0}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("deadline"));
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Integration tests for the graph-algorithm layer: PageRank invariants
+//! (mass conservation every sweep, worker-count determinism, CSR-oracle
+//! agreement at identical iteration counts), BFS/SSSP bit-exactness
+//! against queue/Dijkstra references on random R-MAT graphs, the GCN
+//! forward within 1e-5 of the dense oracle — on flat and composite plans,
+//! in both executor modes — and the NDJSON wire surface through the stdin
+//! serve loop (payloads, traces, typed errors, per-algorithm stats).
+
+use autogmap::algo::{
+    bfs, bfs_reference, gcn_forward, max_abs_diff, normalized_adjacency, pagerank, sssp,
+    sssp_reference, BfsOptions, CsrEngine, DeploymentEngine, GcnLayer, PageRankOptions,
+    PlanEngine, SsspOptions,
+};
+use autogmap::api::{serve_loop, Deployment, DeploymentBuilder, ServeOptions, Source, Strategy};
+use autogmap::engine::{self, ExecPlan};
+use autogmap::graph::{synth, Csr, GridSummary};
+use autogmap::scheme::Scheme;
+use autogmap::util::json::Json;
+use autogmap::util::propcheck::check;
+use autogmap::util::rng::Pcg64;
+use std::io::Cursor;
+use std::sync::Arc;
+
+/// A fixed-block composite deployment over `m` — the facade path with the
+/// RCM permutation applied around every request.
+fn composite(m: &Csr, block: usize, grid: usize) -> Deployment {
+    DeploymentBuilder::new(
+        Source::Matrix { label: "algo_test".into(), matrix: m.clone() },
+        Strategy::FixedBlock { block },
+    )
+    .grid(grid)
+    .workers(2)
+    .build()
+    .unwrap()
+}
+
+/// A flat full-coverage `ExecPlan` over `m` on its own executor — no
+/// permutation, no facade.
+fn flat_engine(m: &Csr, grid: usize, workers: usize, sharded: bool) -> PlanEngine<ExecPlan> {
+    let g = GridSummary::new(m, grid);
+    let scheme = Scheme { diag_len: vec![g.n], fill_len: vec![] };
+    let plan = engine::compile(m, &g, &scheme).unwrap();
+    PlanEngine::new(Arc::new(plan), workers, sharded)
+}
+
+/// PageRank on a mapped plan: probability mass is conserved at every
+/// sweep count, ranks are bit-identical across 1/2/8 workers and both
+/// executor modes, and agree with the host-CSR run of the same loop to
+/// 1e-8 at identical iteration counts.
+#[test]
+fn pagerank_conserves_mass_and_is_worker_deterministic_property() {
+    check("algo_pagerank_invariants", 4, |rng| {
+        let n = 60 + rng.below(60) as usize;
+        let target = n * (3 + rng.below(3) as usize) / 2 * 2;
+        let m = synth::rmat_like(n, target, 0x9a9e + rng.below(1 << 20));
+        let dep = composite(&m, 1 + rng.below(3) as usize, 8);
+
+        // tol = 0 runs exactly k sweeps; Σp must stay 1 after every k
+        for k in [1usize, 3, 7] {
+            let opts = PageRankOptions { damping: 0.85, tol: 0.0, max_iters: k };
+            let exec = dep.executor(2);
+            let eng = DeploymentEngine::new(&dep, &exec, true);
+            let (p, trace) = pagerank(&eng, &opts).map_err(|e| e.to_string())?;
+            if trace.iterations != k {
+                return Err(format!("expected {k} sweeps, trace says {}", trace.iterations));
+            }
+            let mass: f64 = p.iter().sum();
+            if (mass - 1.0).abs() > 1e-9 {
+                return Err(format!("mass {mass} after {k} sweeps"));
+            }
+        }
+
+        let opts = PageRankOptions { damping: 0.85, tol: 0.0, max_iters: 15 };
+        let (want, _) = pagerank(&CsrEngine(&m), &opts).map_err(|e| e.to_string())?;
+        let mut first: Option<Vec<f64>> = None;
+        for workers in [1usize, 2, 8] {
+            for sharded in [true, false] {
+                let exec = dep.executor(workers);
+                let eng = DeploymentEngine::new(&dep, &exec, sharded);
+                let (p, _) = pagerank(&eng, &opts).map_err(|e| e.to_string())?;
+                let d = max_abs_diff(&p, &want);
+                if d > 1e-8 {
+                    return Err(format!(
+                        "workers {workers} sharded {sharded}: mapped ranks diverge from \
+                         the CSR run by {d:e}"
+                    ));
+                }
+                match &first {
+                    None => first = Some(p),
+                    Some(f) => {
+                        if *f != p {
+                            return Err(format!(
+                                "ranks depend on the executor config (workers {workers}, \
+                                 sharded {sharded})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// BFS levels and SSSP distances from mapped plans are bit-identical to
+/// the queue/Dijkstra references, for random sources, every chunking,
+/// both plan shapes, both executor modes, and 1/8 workers.
+#[test]
+fn traversals_match_queue_references_exactly_property() {
+    check("algo_traversals_bit_exact", 4, |rng| {
+        let n = 50 + rng.below(70) as usize;
+        let target = n * 3 / 2 * 2;
+        let m = synth::rmat_like(n, target, 0xb0b + rng.below(1 << 20));
+        let dep = composite(&m, 2, 8);
+        let flat = flat_engine(&m, 8, 2, true);
+
+        for _ in 0..3 {
+            let src = rng.below(n as u64) as usize;
+            let want_bfs = bfs_reference(&m, src);
+            let want_sssp = sssp_reference(&m, src);
+            let chunk = [0usize, 1, 5][rng.below(3) as usize];
+
+            for workers in [1usize, 8] {
+                for sharded in [true, false] {
+                    let exec = dep.executor(workers);
+                    let eng = DeploymentEngine::new(&dep, &exec, sharded);
+                    let (lv, _) = bfs(&eng, &BfsOptions { source: src, max_levels: 0 })
+                        .map_err(|e| e.to_string())?;
+                    if lv != want_bfs {
+                        return Err(format!(
+                            "bfs(src {src}, workers {workers}, sharded {sharded}) is not \
+                             bit-identical to the queue reference"
+                        ));
+                    }
+                    let (d, _) = sssp(&eng, &SsspOptions { source: src, max_iters: 0, chunk })
+                        .map_err(|e| e.to_string())?;
+                    if d != want_sssp {
+                        return Err(format!(
+                            "sssp(src {src}, chunk {chunk}, workers {workers}, sharded \
+                             {sharded}) is not bit-identical to Dijkstra"
+                        ));
+                    }
+                }
+            }
+
+            let (lv, _) = bfs(&flat, &BfsOptions { source: src, max_levels: 0 })
+                .map_err(|e| e.to_string())?;
+            if lv != want_bfs {
+                return Err(format!("flat-plan bfs(src {src}) diverged from the reference"));
+            }
+            let (d, _) = sssp(&flat, &SsspOptions { source: src, max_iters: 0, chunk })
+                .map_err(|e| e.to_string())?;
+            if d != want_sssp {
+                return Err(format!("flat-plan sssp(src {src}) diverged from Dijkstra"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The multi-layer GCN forward: bit-near the chained dense oracle on the
+/// host CSR, and within 1e-5 on both mapped plan shapes (the normalized
+/// adjacency's values exercise the f32 program arena) at every worker
+/// count and both executor modes.
+#[test]
+fn gcn_forward_matches_dense_oracle_on_both_plan_shapes() {
+    let a = synth::rmat_like(120, 480, 9);
+    let nrm = normalized_adjacency(&a);
+    let layers = vec![
+        GcnLayer::random(6, 8, true, 1),
+        GcnLayer::random(8, 3, false, 2),
+    ];
+    let mut rng = Pcg64::seed_from_u64(5);
+    let x: Vec<f64> = (0..120 * 6).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let want = layers[1].forward_dense(&nrm, &layers[0].forward_dense(&nrm, &x));
+
+    // the iterated form over the host CSR is the same float program as
+    // the chained dense oracle
+    let (host, trace) = gcn_forward(&CsrEngine(&nrm), &x, &layers).unwrap();
+    assert!(max_abs_diff(&host, &want) <= 1e-12);
+    assert_eq!(trace.iterations, 2, "one iteration per layer");
+    assert_eq!(trace.mvms, 8 + 3, "one MVM per output column per layer");
+    assert_eq!(trace.residuals.len(), 2);
+
+    let dep = composite(&nrm, 2, 8);
+    for workers in [1usize, 2, 8] {
+        for sharded in [true, false] {
+            let exec = dep.executor(workers);
+            let eng = DeploymentEngine::new(&dep, &exec, sharded);
+            let (got, _) = gcn_forward(&eng, &x, &layers).unwrap();
+            let d = max_abs_diff(&got, &want);
+            assert!(
+                d <= 1e-5,
+                "composite gcn (workers {workers}, sharded {sharded}) off by {d:e}"
+            );
+        }
+    }
+    let flat = flat_engine(&nrm, 8, 2, true);
+    let (got, _) = gcn_forward(&flat, &x, &layers).unwrap();
+    let d = max_abs_diff(&got, &want);
+    assert!(d <= 1e-5, "flat gcn off by {d:e}");
+}
+
+/// The stdin serve loop answers all four request kinds with payloads and
+/// embedded traces that match direct library runs, rejects bad
+/// parameters and non-convergence with typed errors that never kill the
+/// loop, and reports the per-algorithm mix in the stats line and the
+/// final report.
+#[test]
+fn serve_loop_answers_algo_requests_with_traces_and_stats() {
+    let m = synth::rmat_like(60, 240, 3);
+    let dep = composite(&m, 2, 8);
+    let n = 60usize;
+
+    let mut input = String::new();
+    input.push_str(r#"{"id":1,"pagerank":{"damping":0.85,"tol":1e-10,"max_iters":500}}"#);
+    input.push('\n');
+    input.push_str(r#"{"id":2,"bfs":{"source":0}}"#);
+    input.push('\n');
+    input.push_str(r#"{"id":3,"sssp":{"source":0,"chunk":5}}"#);
+    input.push('\n');
+    // gcn: 2 features per node, one 3-wide relu layer (seed defaults to
+    // the layer index, matching GcnLayer::random(2, 3, true, 0))
+    let x_rows: Vec<Json> = (0..n)
+        .map(|r| Json::Arr(vec![Json::Num(r as f64 * 0.01), Json::Num(1.0 - r as f64 * 0.02)]))
+        .collect();
+    input.push_str(
+        &format!(
+            r#"{{"id":4,"gcn":{{"x":{},"layers":[{{"out_dim":3}}]}}}}"#,
+            Json::Arr(x_rows).to_string()
+        ),
+    );
+    input.push('\n');
+    // typed failures: bad parameter, then guaranteed non-convergence
+    input.push_str(r#"{"id":5,"pagerank":{"damping":1.5}}"#);
+    input.push('\n');
+    input.push_str(r#"{"id":6,"pagerank":{"tol":0.000001,"max_iters":1}}"#);
+    input.push('\n');
+
+    let opts = ServeOptions { workers: 2, stats_every: 0, ..ServeOptions::default() };
+    let mut out: Vec<u8> = Vec::new();
+    let report = serve_loop(&dep, &opts, Cursor::new(input), &mut out).unwrap();
+    assert_eq!(report.served, 4);
+    assert_eq!(report.errors, 2);
+    assert_eq!(report.algo.pagerank, 1);
+    assert_eq!(report.algo.bfs, 1);
+    assert_eq!(report.algo.sssp, 1);
+    assert_eq!(report.algo.gcn, 1);
+    assert!(report.algo.mvms > 3, "algorithm runs fan out into many MVMs");
+
+    let text = String::from_utf8(out).unwrap();
+    let docs: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    fn by_id(docs: &[Json], id: i64) -> &Json {
+        docs.iter()
+            .find(|d| d.get("id").as_i64() == Some(id))
+            .unwrap_or_else(|| panic!("no response for id {id}"))
+    }
+
+    // pagerank: scores sum to 1, trace converged, matches the direct run
+    let pr = by_id(&docs, 1).get("pagerank");
+    let scores: Vec<f64> =
+        pr.get("scores").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    assert_eq!(scores.len(), n);
+    let mass: f64 = scores.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-9, "wire scores carry mass {mass}");
+    assert_eq!(pr.get("trace").get("converged").as_bool(), Some(true));
+    {
+        let exec = dep.executor(2);
+        let eng = DeploymentEngine::new(&dep, &exec, true);
+        let opts = PageRankOptions { damping: 0.85, tol: 1e-10, max_iters: 500 };
+        let (direct, _) = pagerank(&eng, &opts).unwrap();
+        assert_eq!(scores, direct, "wire run and library run are the same floats");
+    }
+
+    // bfs: levels bit-identical to the queue reference
+    let lv: Vec<i64> = by_id(&docs, 2)
+        .get("bfs")
+        .get("levels")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap())
+        .collect();
+    assert_eq!(lv, bfs_reference(&m, 0));
+    let reached = by_id(&docs, 2).get("bfs").get("reached").as_i64().unwrap();
+    assert_eq!(reached, lv.iter().filter(|&&l| l >= 0).count() as i64);
+
+    // sssp: -1 encodes unreachable; finite entries match Dijkstra exactly
+    let wire_dist: Vec<f64> = by_id(&docs, 3)
+        .get("sssp")
+        .get("dist")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let want: Vec<f64> = sssp_reference(&m, 0)
+        .into_iter()
+        .map(|d| if d.is_finite() { d } else { -1.0 })
+        .collect();
+    assert_eq!(wire_dist, want);
+
+    // gcn: one 3-wide layer over the served matrix, verified against the
+    // same deterministic layer construction
+    let feats = by_id(&docs, 4).get("gcn").get("features").as_arr().unwrap();
+    assert_eq!(feats.len(), n);
+    let got: Vec<f64> = feats
+        .iter()
+        .flat_map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()))
+        .collect();
+    let x_flat: Vec<f64> = (0..n)
+        .flat_map(|r| [r as f64 * 0.01, 1.0 - r as f64 * 0.02])
+        .collect();
+    let layer = GcnLayer::random(2, 3, true, 0);
+    let want = layer.forward_dense(&m, &x_flat);
+    assert!(max_abs_diff(&got, &want) <= 1e-5);
+
+    // typed failures name the field / report the residual
+    let bad = by_id(&docs, 5).get("error");
+    assert_eq!(bad.get("kind").as_str(), Some("validate"));
+    assert!(bad.get("message").as_str().unwrap().contains("pagerank.damping"));
+    let nc = by_id(&docs, 6).get("error");
+    assert_eq!(nc.get("kind").as_str(), Some("no_converge"));
+    let msg = nc.get("message").as_str().unwrap();
+    assert!(msg.contains("pagerank") && msg.contains("max_iters"), "{msg}");
+
+    // the stats line carries the per-algorithm mix
+    let stats = docs.iter().rev().find(|d| d.get("stats") != &Json::Null).unwrap().get("stats");
+    assert_eq!(stats.get("algo").get("pagerank").as_i64(), Some(1));
+    assert_eq!(stats.get("algo").get("gcn").as_i64(), Some(1));
+    assert_eq!(stats.get("served").as_i64(), Some(4));
+    assert_eq!(stats.get("errors").as_i64(), Some(2));
+}

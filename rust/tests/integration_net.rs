@@ -4,6 +4,9 @@
 //! concurrency and across a live hot-swap), typed busy/deadline
 //! rejections, NDJSON robustness, and stdin/socket error-format parity.
 
+use autogmap::algo::{
+    bfs_reference, max_abs_diff, pagerank, sssp_reference, CsrEngine, PageRankOptions,
+};
 use autogmap::api::{serve_loop, Deployment, DeploymentBuilder, ServeOptions, Source, Strategy};
 use autogmap::graph::synth;
 use autogmap::net::{DeploymentRegistry, NetOptions, NetServer, RegistryOptions};
@@ -370,6 +373,143 @@ fn wire_robustness_and_error_parity_with_stdin_loop() {
             yi.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
         assert_eq!(got, entry.deployment().mvm(xi).unwrap());
     }
+}
+
+/// Algorithm-request error objects — bad parameters and non-convergence —
+/// are byte-identical between the stdin serve loop and the TCP tier for
+/// the same deployment and the same request body.
+#[test]
+fn algo_error_objects_are_byte_identical_across_transports() {
+    let reg = registry(2, 8, true);
+    reg.insert("g", small_dep("g", 29, 1), None);
+    let entry = reg.get("g").unwrap().entry();
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default()).unwrap();
+    let mut conn = Client::connect(server.addr()).unwrap();
+
+    // both failure shapes: a validate error naming the wire field, and a
+    // typed no_converge whose message embeds the (deterministic) residual
+    let bodies = [
+        (r#"{"pagerank":{"damping":1.5}}"#, "validate"),
+        (r#"{"pagerank":{"tol":0.000001,"max_iters":1}}"#, "no_converge"),
+    ];
+    for (body, kind) in bodies {
+        let socket_req = format!(r#"{{"tenant":"g","id":1,{}"#, &body[1..]);
+        let resp = conn.roundtrip(&socket_req).unwrap();
+        assert_eq!(resp.get("error").get("kind").as_str(), Some(kind), "{body}");
+        let socket_err = resp.get("error").clone();
+
+        let stdin_input = format!("{{\"id\":1,{}\n", &body[1..]);
+        let mut stdin_out: Vec<u8> = Vec::new();
+        serve_loop(
+            entry.deployment(),
+            &ServeOptions::default(),
+            Cursor::new(stdin_input),
+            &mut stdin_out,
+        )
+        .unwrap();
+        let first =
+            String::from_utf8(stdin_out).unwrap().lines().next().unwrap().to_string();
+        let stdin_err = Json::parse(&first).unwrap().get("error").clone();
+        assert_eq!(socket_err, stdin_err, "transports disagree for {body}");
+    }
+
+    // the validate message names the field; no_converge names the knobs
+    // that would fix it
+    let resp = conn.roundtrip(r#"{"tenant":"g","id":2,"pagerank":{"damping":1.5}}"#).unwrap();
+    let msg = resp.get("error").get("message").as_str().unwrap();
+    assert!(msg.contains("pagerank.damping"), "{msg}");
+}
+
+/// Algorithm requests across a mid-stream hot-swap: the same graph
+/// remapped at a different block size keeps answering PageRank, BFS, and
+/// SSSP correctly against the host-CSR oracles, on the same connection,
+/// before and after the reload — the algorithm layer is plan-shape
+/// agnostic even while the plan changes under it.
+#[test]
+fn algo_requests_stay_oracle_correct_across_hot_swap() {
+    let dir = temp_dir("autogmap_net_algo_swap");
+    let bundle = dir.join("algo_remapped.json");
+    small_dep("g", 23, 4).save(&bundle).unwrap();
+
+    // host-CSR oracles on the very graph both generations map
+    let m = synth::rmat_like(200, 800, 23);
+    let want_bfs: Vec<f64> = bfs_reference(&m, 0).into_iter().map(|l| l as f64).collect();
+    let want_sssp: Vec<f64> = sssp_reference(&m, 0)
+        .into_iter()
+        .map(|d| if d.is_finite() { d } else { -1.0 })
+        .collect();
+    let (want_pr, _) = pagerank(&CsrEngine(&m), &PageRankOptions::default()).unwrap();
+
+    let reg = registry(2, 8, true);
+    reg.insert("g", small_dep("g", 23, 1), None);
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default()).unwrap();
+    let mut conn = Client::connect(server.addr()).unwrap();
+
+    let verify = |conn: &mut Client, round: &str| {
+        let resp = conn.roundtrip(r#"{"tenant":"g","id":1,"pagerank":{}}"#).unwrap();
+        let scores: Vec<f64> = resp
+            .get("pagerank")
+            .get("scores")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let d = max_abs_diff(&scores, &want_pr);
+        assert!(d <= 1e-8, "{round}: pagerank off the CSR oracle by {d:e}");
+        assert_eq!(
+            resp.get("pagerank").get("trace").get("converged").as_bool(),
+            Some(true),
+            "{round}"
+        );
+        let resp = conn.roundtrip(r#"{"tenant":"g","id":2,"bfs":{"source":0}}"#).unwrap();
+        let lv: Vec<f64> = resp
+            .get("bfs")
+            .get("levels")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(lv, want_bfs, "{round}: BFS levels not bit-identical");
+        let resp = conn.roundtrip(r#"{"tenant":"g","id":3,"sssp":{"source":0}}"#).unwrap();
+        let dist: Vec<f64> = resp
+            .get("sssp")
+            .get("dist")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(dist, want_sssp, "{round}: SSSP distances not bit-identical");
+    };
+
+    verify(&mut conn, "generation 1 (block 1)");
+
+    let swap_line = obj(vec![(
+        "admin",
+        obj(vec![(
+            "reload",
+            obj(vec![
+                ("id", Json::Str("g".into())),
+                ("bundle", Json::Str(bundle.display().to_string())),
+            ]),
+        )]),
+    )])
+    .to_string();
+    let ack = conn.roundtrip(&swap_line).unwrap();
+    assert_eq!(ack.get("generation").as_i64(), Some(2));
+
+    verify(&mut conn, "generation 2 (block 4)");
+
+    // per-tenant algo counters are cumulative across generations
+    let stats = conn.roundtrip(r#"{"admin":"stats"}"#).unwrap();
+    let algo = stats.get("stats").get("g").get("algo").clone();
+    assert_eq!(algo.get("pagerank").as_i64(), Some(2));
+    assert_eq!(algo.get("bfs").as_i64(), Some(2));
+    assert_eq!(algo.get("sssp").as_i64(), Some(2));
+    assert_eq!(algo.get("gcn").as_i64(), Some(0));
+    assert!(algo.get("mvms").as_i64().unwrap() > 6, "algo runs fan out into many MVMs");
 }
 
 /// A connection over the `--max-conns` cap gets a typed busy line and a
