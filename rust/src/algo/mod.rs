@@ -82,6 +82,7 @@ pub struct DeploymentEngine<'a> {
     dep: &'a Deployment,
     exec: &'a BatchExecutor<DeployedPlan>,
     sharded: bool,
+    degraded: std::cell::Cell<bool>,
 }
 
 impl<'a> DeploymentEngine<'a> {
@@ -90,7 +91,19 @@ impl<'a> DeploymentEngine<'a> {
         exec: &'a BatchExecutor<DeployedPlan>,
         sharded: bool,
     ) -> DeploymentEngine<'a> {
-        DeploymentEngine { dep, exec, sharded }
+        DeploymentEngine {
+            dep,
+            exec,
+            sharded,
+            degraded: std::cell::Cell::new(false),
+        }
+    }
+
+    /// Whether any batch this engine has executed was served under a
+    /// degraded fault epoch (digital-fallback rows in play). Algorithm
+    /// answers surface this as `"degraded": true` on the wire.
+    pub fn degraded(&self) -> bool {
+        self.degraded.get()
     }
 }
 
@@ -104,7 +117,11 @@ impl MvmEngine for DeploymentEngine<'_> {
     }
 
     fn mvm_batch(&self, xs: Vec<Vec<f64>>) -> Vec<Vec<f64>> {
-        dispatch::execute_permuted(self.dep, self.exec, xs, self.sharded)
+        let (ys, degraded) = dispatch::execute_verified(self.dep, self.exec, xs, self.sharded);
+        if degraded {
+            self.degraded.set(true);
+        }
+        ys
     }
 }
 

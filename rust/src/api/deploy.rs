@@ -157,7 +157,7 @@ impl DeployedPlan {
         }
     }
 
-    fn exec_plan_mut(&mut self) -> &mut ExecPlan {
+    pub(crate) fn exec_plan_mut(&mut self) -> &mut ExecPlan {
         match self {
             DeployedPlan::Flat(p) => p,
             DeployedPlan::Composite(c) => &mut c.plan,
@@ -242,6 +242,10 @@ pub struct Deployment {
     perm: Vec<usize>,
     /// default executor worker count (overridable per executor)
     pub workers: usize,
+    /// armed fault-tolerance harness (inject → detect → quarantine →
+    /// repair); `None` until [`Deployment::arm_fault_harness`]. Shared via
+    /// `Arc` so clones of the deployment observe the same fault state.
+    fault: Option<Arc<crate::fault::FaultHarness>>,
 }
 
 /// Builder for [`Deployment`]: source + strategy, then optional knobs.
@@ -531,6 +535,7 @@ impl DeploymentBuilder {
             fleet,
             perm: r.perm,
             workers: self.workers.max(1),
+            fault: None,
         })
     }
 }
@@ -569,9 +574,39 @@ impl Deployment {
         self.plan.clone()
     }
 
-    /// Program-level serving statistics of the compiled plan.
+    /// Program-level serving statistics of the compiled plan. When a
+    /// fault harness is armed its live health counters are overlaid on the
+    /// otherwise all-zero `health` block.
     pub fn stats(&self) -> ServeStats {
-        self.plan.stats()
+        let mut s = self.plan.stats();
+        if let Some(h) = &self.fault {
+            s.health = h.health();
+        }
+        s
+    }
+
+    /// Arm a fault-tolerance harness on this deployment: snapshot the
+    /// healthy program image, compute per-program ABFT column checksums
+    /// and the exact digital reference, and route served MVMs through
+    /// checksum verification (see [`crate::fault`]). Returns the shared
+    /// harness handle (injection/repair control surface). Clones of the
+    /// deployment made *after* arming share the same harness.
+    pub fn arm_fault_harness(
+        &mut self,
+        opts: crate::fault::FaultOptions,
+    ) -> Arc<crate::fault::FaultHarness> {
+        let h = Arc::new(crate::fault::FaultHarness::new(
+            self.plan.clone(),
+            &self.fleet,
+            opts,
+        ));
+        self.fault = Some(h.clone());
+        h
+    }
+
+    /// The armed fault harness, if any.
+    pub fn fault_harness(&self) -> Option<&Arc<crate::fault::FaultHarness>> {
+        self.fault.as_ref()
     }
 
     /// Spawn an executor over the deployment's plan. `workers == 0` uses
@@ -609,6 +644,25 @@ impl Deployment {
             )));
         }
         Ok(self.permute_out(&self.plan.mvm(&self.permute_in(x))))
+    }
+
+    /// One exact MVM in original node ids through the *digital reference*
+    /// (the host-CSR oracle an armed fault harness carries) instead of the
+    /// crossbar arena. Falls back to [`Self::mvm`] when no harness is
+    /// armed. Chaos harnesses use this as the ground truth that degraded
+    /// answers must match bit for bit.
+    pub fn mvm_oracle(&self, x: &[f64]) -> Result<Vec<f64>> {
+        let Some(h) = &self.fault else {
+            return self.mvm(x);
+        };
+        let dim = self.plan.dim();
+        if x.len() != dim {
+            return Err(Error::Validate(format!(
+                "request has {} elements, deployment expects {dim}",
+                x.len()
+            )));
+        }
+        Ok(self.permute_out(&h.reference_mvm(&self.permute_in(x))))
     }
 
     // ---- bundle (de)serialization ---------------------------------------
@@ -792,6 +846,7 @@ impl Deployment {
             fleet,
             perm: permutation,
             workers,
+            fault: None,
         })
     }
 

@@ -162,6 +162,66 @@ pub fn execute_permuted(
     outs
 }
 
+/// [`execute_permuted`] through the deployment's fault harness when one
+/// is armed: every output is ABFT-checksum-verified, quarantined rows are
+/// answered by the digital reference, and the returned flag reports
+/// whether this batch was served under a degraded epoch (the transports
+/// surface it as `"degraded": true`). Unarmed deployments take the plain
+/// path and are never degraded.
+pub fn execute_verified(
+    dep: &Deployment,
+    exec: &BatchExecutor<DeployedPlan>,
+    xs: Vec<Vec<f64>>,
+    sharded: bool,
+) -> (Vec<Vec<f64>>, bool) {
+    match dep.fault_harness() {
+        Some(h) => h.serve_permuted(dep, exec, xs, sharded),
+        None => (execute_permuted(dep, exec, xs, sharded), false),
+    }
+}
+
+/// Run `f` behind a panic boundary: a panic anywhere inside (a worker
+/// job panic re-raised by the pool, a poisoned request, a plain bug)
+/// becomes a typed [`Error::Internal`] carrying the panic message, so a
+/// transport can answer the request machine-readably and keep serving
+/// instead of tearing down the connection or the process.
+pub fn catch_internal<T>(f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(out) => out,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "request execution panicked".to_string()
+            };
+            Err(Error::Internal(msg))
+        }
+    }
+}
+
+/// The shared fault-health object both stats surfaces (the stdin stats
+/// line and the TCP tier's `{"admin":"stats"}`) embed under `"health"`
+/// when a fault harness is armed.
+pub fn health_json(h: &crate::engine::FaultHealth) -> Json {
+    obj(vec![
+        ("armed", Json::Bool(h.armed)),
+        ("degraded", Json::Bool(h.degraded)),
+        ("generation", Json::Num(h.generation as f64)),
+        ("faulty_cells", Json::Num(h.faulty_cells as f64)),
+        ("quarantined_programs", Json::Num(h.quarantined_programs as f64)),
+        ("quarantined_rows", Json::Num(h.quarantined_rows as f64)),
+        ("failed_banks", Json::Num(h.failed_banks as f64)),
+        ("verify_checks", Json::Num(h.verify_checks as f64)),
+        ("verify_detections", Json::Num(h.verify_detections as f64)),
+        ("scrubs", Json::Num(h.scrubs as f64)),
+        ("scrub_detections", Json::Num(h.scrub_detections as f64)),
+        ("repairs", Json::Num(h.repairs as f64)),
+        ("degraded_served", Json::Num(h.degraded_served as f64)),
+    ])
+}
+
 /// The shared machine-readable error object: `{"kind": ..., "message":
 /// ...}` with the stable [`Error::kind`] label. Every transport embeds
 /// exactly this object under its `"error"` key, so error handling written
@@ -237,6 +297,9 @@ pub struct AlgoAnswer {
     pub key: &'static str,
     pub payload: Json,
     pub mvms: u64,
+    /// true when any MVM of the run executed under a degraded fault epoch
+    /// (the response line then carries `"degraded": true`)
+    pub degraded: bool,
 }
 
 fn algo_body<'a>(doc: &'a Json, key: &str) -> Result<&'a Json> {
@@ -426,7 +489,7 @@ pub fn run_algo_on<E: MvmEngine>(engine: &E, req: &AlgoRequest) -> Result<AlgoAn
     let mvms = trace.mvms;
     let mut fields = payload;
     fields.push(("trace", trace.to_json()));
-    Ok(AlgoAnswer { key, payload: obj(fields), mvms })
+    Ok(AlgoAnswer { key, payload: obj(fields), mvms, degraded: false })
 }
 
 /// [`run_algo_on`] against a deployment facade: the engine permutes
@@ -438,7 +501,10 @@ pub fn run_algo(
     sharded: bool,
     req: &AlgoRequest,
 ) -> Result<AlgoAnswer> {
-    run_algo_on(&DeploymentEngine::new(dep, exec, sharded), req)
+    let engine = DeploymentEngine::new(dep, exec, sharded);
+    let mut ans = run_algo_on(&engine, req)?;
+    ans.degraded = engine.degraded();
+    Ok(ans)
 }
 
 #[cfg(test)]

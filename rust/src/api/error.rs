@@ -59,6 +59,21 @@ pub enum Error {
         /// the last residual (L1 rank delta, or remaining frontier size)
         residual: f64,
     },
+    /// A connection sat idle past the server's read-timeout budget, so a
+    /// stalled or half-open client cannot pin a connection slot under the
+    /// `--max-conns` cap forever. One typed error line is written before
+    /// the server closes the connection; nothing the client already sent
+    /// is lost — every complete request line was answered first.
+    Timeout {
+        /// the configured idle budget that was exhausted
+        idle_ms: u64,
+    },
+    /// The request itself panicked inside the execution path (a worker
+    /// pool job, a kernel, a verification hook). The panic is caught at
+    /// the request boundary and answered as a typed error with the
+    /// request id echoed — one poisoned request must not take down the
+    /// tenant or the serve process.
+    Internal(String),
 }
 
 /// `Result` specialized to the API boundary's typed [`Error`].
@@ -76,6 +91,8 @@ impl Error {
             Error::Busy { .. } => "busy",
             Error::Deadline { .. } => "deadline",
             Error::NoConverge { .. } => "no_converge",
+            Error::Timeout { .. } => "timeout",
+            Error::Internal(_) => "internal",
         }
     }
 }
@@ -104,6 +121,11 @@ impl fmt::Display for Error {
                 "{algorithm} did not converge within {iterations} iterations \
                  (residual {residual:e}); raise max_iters or loosen tol"
             ),
+            Error::Timeout { idle_ms } => write!(
+                f,
+                "connection idle past the {idle_ms} ms read-timeout budget; closing"
+            ),
+            Error::Internal(m) => write!(f, "internal error: {m}"),
         }
     }
 }
@@ -141,6 +163,12 @@ mod tests {
         let msg = nc.to_string();
         assert!(msg.contains("pagerank") && msg.contains("100"), "{msg}");
         assert!(msg.contains("2.5e-4") || msg.contains("2.5e-04"), "{msg}");
+        let t = Error::Timeout { idle_ms: 250 };
+        assert_eq!(t.kind(), "timeout");
+        assert!(t.to_string().contains("250"));
+        let i = Error::Internal("worker panicked: boom".into());
+        assert_eq!(i.kind(), "internal");
+        assert!(i.to_string().contains("boom"));
     }
 
     #[test]

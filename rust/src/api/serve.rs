@@ -29,8 +29,16 @@
 //! [`crate::api::Error::kind`]) and serving continues. Blank lines are
 //! skipped, and a line longer than [`ServeOptions::max_line_bytes`] is
 //! drained with a bounded read and answered with a `parse` error instead
-//! of buffering without limit. Only transport failures (the input or
-//! output stream dying) end the loop with an [`Error::Io`].
+//! of buffering without limit. Execution runs behind a panic boundary
+//! ([`crate::api::dispatch::catch_internal`]): a worker-pool panic is
+//! answered as a typed `internal` error echoing the request id(s), and
+//! the loop keeps serving. Only transport failures (the input or output
+//! stream dying) end the loop with an [`Error::Io`].
+//!
+//! When the deployment carries an armed fault harness
+//! ([`crate::fault::FaultHarness`]), every MVM is checksum-verified and
+//! any response served under a degraded epoch carries `"degraded": true`;
+//! the stats line gains a `"health"` object mirroring the TCP tier's.
 //!
 //! The parsing, validation, execution, and error-formatting primitives
 //! live in [`crate::api::dispatch`], shared with the multi-tenant network
@@ -126,20 +134,21 @@ pub fn serve_loop<R: BufRead, W: Write>(
         |out: &mut W, served: u64, errors: u64, batches: u64, algo: &AlgoCounters| -> Result<()> {
             let wall = t0.elapsed().as_secs_f64();
             let rps = served as f64 / wall.max(1e-9);
-            let line = obj(vec![(
-                "stats",
-                obj(vec![
-                    ("served", Json::Num(served as f64)),
-                    ("errors", Json::Num(errors as f64)),
-                    ("batches", Json::Num(batches as f64)),
-                    ("rps", Json::Num(rps)),
-                    ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
-                    ("shards", Json::Num(shards as f64)),
-                    ("workers", Json::Num(exec.workers() as f64)),
-                    ("wall_s", Json::Num(wall)),
-                    ("algo", algo.to_json()),
-                ]),
-            )]);
+            let mut fields = vec![
+                ("served", Json::Num(served as f64)),
+                ("errors", Json::Num(errors as f64)),
+                ("batches", Json::Num(batches as f64)),
+                ("rps", Json::Num(rps)),
+                ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("workers", Json::Num(exec.workers() as f64)),
+                ("wall_s", Json::Num(wall)),
+                ("algo", algo.to_json()),
+            ];
+            if let Some(h) = dep.fault_harness() {
+                fields.push(("health", dispatch::health_json(&h.health())));
+            }
+            let line = obj(vec![("stats", obj(fields))]);
             writeln!(out, "{}", line.to_string())?;
             out.flush()?;
             Ok(())
@@ -179,6 +188,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
+                &mut errors,
                 &mut batches,
                 out,
             )?;
@@ -199,15 +209,20 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
+                &mut errors,
                 &mut batches,
                 out,
             )?;
-            match dispatch::run_algo(dep, &exec, opts.sharded, &req) {
+            match dispatch::catch_internal(|| dispatch::run_algo(dep, &exec, opts.sharded, &req)) {
                 Ok(ans) => {
                     algo.record(ans.key, ans.mvms);
                     served += 1;
                     batches += 1;
-                    write_response(out, obj(vec![("id", id), (ans.key, ans.payload)]))?;
+                    let mut fields = vec![("id", id), (ans.key, ans.payload)];
+                    if ans.degraded {
+                        fields.push(("degraded", Json::Bool(true)));
+                    }
+                    write_response(out, obj(fields))?;
                     out.flush()?;
                 }
                 Err(e) => {
@@ -225,6 +240,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
+                &mut errors,
                 &mut batches,
                 out,
             )?;
@@ -237,12 +253,25 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 }
             };
             let n = xs.len() as u64;
-            let ys = dispatch::execute_permuted(dep, &exec, xs, opts.sharded);
-            batches += 1;
-            served += n;
-            let ys_json = Json::Arr(ys.into_iter().map(num_arr).collect());
-            write_response(out, obj(vec![("id", id), ("ys", ys_json)]))?;
-            out.flush()?;
+            match dispatch::catch_internal(|| {
+                Ok(dispatch::execute_verified(dep, &exec, xs, opts.sharded))
+            }) {
+                Ok((ys, degraded)) => {
+                    batches += 1;
+                    served += n;
+                    let ys_json = Json::Arr(ys.into_iter().map(num_arr).collect());
+                    let mut fields = vec![("id", id), ("ys", ys_json)];
+                    if degraded {
+                        fields.push(("degraded", Json::Bool(true)));
+                    }
+                    write_response(out, obj(fields))?;
+                    out.flush()?;
+                }
+                Err(e) => {
+                    errors += 1;
+                    write_error(out, id, &e)?;
+                }
+            }
         } else {
             match dispatch::parse_vec(doc.get("x"), dim) {
                 Ok(x) => {
@@ -256,6 +285,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                             &mut pending_ids,
                             &mut pending_xs,
                             &mut served,
+                            &mut errors,
                             &mut batches,
                             out,
                         )?;
@@ -281,6 +311,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         &mut pending_ids,
         &mut pending_xs,
         &mut served,
+        &mut errors,
         &mut batches,
         out,
     )?;
@@ -314,6 +345,7 @@ fn flush_pending<W: Write>(
     ids: &mut Vec<Json>,
     xs: &mut Vec<Vec<f64>>,
     served: &mut u64,
+    errors: &mut u64,
     batches: &mut u64,
     out: &mut W,
 ) -> Result<()> {
@@ -322,11 +354,26 @@ fn flush_pending<W: Write>(
     }
     let reqs = std::mem::take(xs);
     let ids_now = std::mem::take(ids);
-    let ys = dispatch::execute_permuted(dep, exec, reqs, sharded);
-    *batches += 1;
-    *served += ys.len() as u64;
-    for (id, y) in ids_now.into_iter().zip(ys) {
-        write_response(out, obj(vec![("id", id), ("y", num_arr(y))]))?;
+    match dispatch::catch_internal(|| Ok(dispatch::execute_verified(dep, exec, reqs, sharded))) {
+        Ok((ys, degraded)) => {
+            *batches += 1;
+            *served += ys.len() as u64;
+            for (id, y) in ids_now.into_iter().zip(ys) {
+                let mut fields = vec![("id", id), ("y", num_arr(y))];
+                if degraded {
+                    fields.push(("degraded", Json::Bool(true)));
+                }
+                write_response(out, obj(fields))?;
+            }
+        }
+        Err(e) => {
+            // the panic boundary: every coalesced request gets a typed
+            // `internal` error echoing its own id, and the loop lives on
+            *errors += ids_now.len() as u64;
+            for id in ids_now {
+                write_response(out, dispatch::error_line(id, &e))?;
+            }
+        }
     }
     out.flush()?;
     Ok(())

@@ -12,6 +12,15 @@
 //!   the standard log-normal-ish small-σ device model;
 //! - [`stuck_at_faults`]: a fraction of cells stuck at zero conductance
 //!   (SA0 defects).
+//!
+//! These operate on the training-side [`CrossbarArray`] and answer "how
+//! much does the mapping's numerics degrade?". The *serving-side*
+//! counterpart is [`crate::fault`]: the same device-fault taxonomy
+//! (stuck-at-zero/one, conductance drift, whole-bank outage, see
+//! [`crate::fault::FaultKind`]) injected into a deployed plan's program
+//! arena per bank assignment — with ABFT checksum detection, quarantine,
+//! exact digital fallback, and re-programming repair layered on top
+//! rather than measured degradation.
 
 use super::CrossbarArray;
 use crate::util::rng::Pcg64;

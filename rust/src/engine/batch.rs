@@ -30,6 +30,43 @@ use super::plan::ExecPlan;
 use crate::util::pool::WorkerPool;
 use std::sync::{Arc, Mutex};
 
+/// Fault-tolerance health counters carried inside [`ServeStats`].
+///
+/// Plans themselves report the all-zero default (a bare plan has no fault
+/// harness); `crate::api::Deployment::stats` overlays the live numbers
+/// from its armed [`crate::fault::FaultHarness`], and the net tier's
+/// `{"admin":"stats"}` response serializes them so operators can watch the
+/// inject → detect → quarantine → repair lifecycle from the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultHealth {
+    /// a fault harness is armed on this deployment
+    pub armed: bool,
+    /// serving in degraded mode (quarantined rows answered digitally)
+    pub degraded: bool,
+    /// arena cells currently differing from the healthy program image
+    pub faulty_cells: u64,
+    /// programs quarantined off the crossbar path
+    pub quarantined_programs: usize,
+    /// output rows served by the exact digital fallback while degraded
+    pub quarantined_rows: usize,
+    /// banks retired from the assignment after localization
+    pub failed_banks: usize,
+    /// ABFT checksum verifications performed
+    pub verify_checks: u64,
+    /// verifications that tripped (corruption detected at serve time)
+    pub verify_detections: u64,
+    /// periodic scrub probes executed
+    pub scrubs: u64,
+    /// scrub probes that detected corruption
+    pub scrub_detections: u64,
+    /// completed repair cycles (re-program + atomic swap back in)
+    pub repairs: u64,
+    /// responses served while a degraded epoch was current
+    pub degraded_served: u64,
+    /// fault-epoch generation number (bumps on inject/detect/repair)
+    pub generation: u64,
+}
+
 /// Program-level serving statistics every [`Servable`] reports — the
 /// numbers deployment tooling (bundles, the `serve` loop, bench ledgers)
 /// prints without knowing which plan shape it is holding.
@@ -61,6 +98,8 @@ pub struct ServeStats {
     pub spilled_nnz: u64,
     /// programmed crossbar cells (clipped extents)
     pub area_cells: u64,
+    /// fault-tolerance health counters (all-zero unless a harness is armed)
+    pub health: FaultHealth,
 }
 
 impl ServeStats {
@@ -182,6 +221,7 @@ impl Servable for ExecPlan {
             mapped_nnz: self.mapped_nnz(),
             spilled_nnz: 0,
             area_cells: self.cells(),
+            health: FaultHealth::default(),
         }
     }
 }

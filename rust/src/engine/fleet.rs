@@ -67,14 +67,40 @@ pub struct Fleet {
 impl Fleet {
     /// Distribute a plan's tiles over `banks` banks.
     pub fn assign(plan: &ExecPlan, banks: usize, policy: AssignPolicy) -> Result<Fleet> {
+        Fleet::assign_excluding(plan, banks, policy, &vec![false; banks.max(1)])
+    }
+
+    /// Distribute a plan's tiles over the *healthy* subset of `banks`
+    /// banks: any bank with `failed[b] == true` receives no tiles. This
+    /// is the fault-repair path ([`crate::fault`]) — re-programming a
+    /// deployment around banks the scrub/verify loop has retired — and
+    /// the all-healthy case is exactly [`Fleet::assign`] (RoundRobin
+    /// walks the healthy banks in order; BalancedNnz runs LPT over
+    /// them).
+    pub fn assign_excluding(
+        plan: &ExecPlan,
+        banks: usize,
+        policy: AssignPolicy,
+        failed: &[bool],
+    ) -> Result<Fleet> {
         ensure!(banks >= 1, "fleet needs at least one bank");
+        ensure!(
+            failed.len() == banks,
+            "failed-bank mask covers {} banks, fleet has {banks}",
+            failed.len()
+        );
+        let healthy: Vec<usize> = (0..banks).filter(|&b| !failed[b]).collect();
+        ensure!(
+            !healthy.is_empty(),
+            "no healthy banks left to re-program onto ({banks} banks, all failed)"
+        );
         let prog_nnz = plan.program_nnz();
         let tile_nnz = |i: usize| prog_nnz[plan.tiles[i].program];
         let mut assignment = vec![0usize; plan.tiles.len()];
         match policy {
             AssignPolicy::RoundRobin => {
                 for (i, slot) in assignment.iter_mut().enumerate() {
-                    *slot = i % banks;
+                    *slot = healthy[i % healthy.len()];
                 }
             }
             AssignPolicy::BalancedNnz => {
@@ -82,8 +108,8 @@ impl Fleet {
                 order.sort_by_key(|&i| std::cmp::Reverse(tile_nnz(i)));
                 let mut load = vec![0u64; banks];
                 for i in order {
-                    let mut bank = 0usize;
-                    for b in 1..banks {
+                    let mut bank = healthy[0];
+                    for &b in &healthy[1..] {
                         if load[b] < load[bank] {
                             bank = b;
                         }
@@ -219,6 +245,28 @@ mod tests {
         let e1 = one.mvm_energy_pj(&cost);
         let e8 = eight.mvm_energy_pj(&cost);
         assert!((e1 - e8).abs() < 1e-6 * e1.max(1.0));
+    }
+
+    #[test]
+    fn excluding_failed_banks_reassigns_onto_healthy_ones() {
+        let plan = qh882_plan();
+        for policy in [AssignPolicy::RoundRobin, AssignPolicy::BalancedNnz] {
+            // no exclusions -> exactly the plain assignment
+            let plain = Fleet::assign(&plan, 4, policy).unwrap();
+            let none = Fleet::assign_excluding(&plan, 4, policy, &[false; 4]).unwrap();
+            assert_eq!(plain.assignment, none.assignment);
+            // retire bank 1: it must end up with zero tiles, coverage holds
+            let failed = [false, true, false, false];
+            let fleet = Fleet::assign_excluding(&plan, 4, policy, &failed).unwrap();
+            assert!(fleet.assignment.iter().all(|&b| b != 1));
+            assert_eq!(fleet.loads[1], BankLoad::default());
+            let tiles: usize = fleet.loads.iter().map(|l| l.tiles).sum();
+            assert_eq!(tiles, plan.tiles.len());
+        }
+        // a mask that retires every bank is a typed failure
+        assert!(Fleet::assign_excluding(&plan, 2, AssignPolicy::RoundRobin, &[true, true]).is_err());
+        // a mask of the wrong width is rejected
+        assert!(Fleet::assign_excluding(&plan, 2, AssignPolicy::RoundRobin, &[false]).is_err());
     }
 
     #[test]

@@ -447,6 +447,52 @@ impl ExecPlan {
         self.rebuild_sparse();
     }
 
+    /// Mutate the dense arena cells of the named programs through `f`
+    /// (called per cell as `f(program, row, col, current)` in
+    /// program-order, row-major — deterministic for a seeded caller) and
+    /// re-establish the plan invariants afterwards: per-program nnz is
+    /// recounted and the shared sparse pattern table / value arena is
+    /// rebuilt, so both kernels serve the *mutated* values (a cell stuck
+    /// at zero disappears from the sparse pattern; a cell stuck high
+    /// joins it). Returns the number of cells whose stored bits actually
+    /// changed.
+    ///
+    /// This is the device-fault injection point ([`crate::fault`]): the
+    /// arena is the programmed crossbar state, so mutating a program
+    /// corrupts every tile that references it — exactly the blast radius
+    /// of a failing physical bank under program dedup. Band nnz weights
+    /// are deliberately left at their compile-time values (they only
+    /// steer shard balancing, and a fault model must not rebalance work
+    /// around the corruption it injects).
+    pub fn mutate_program_cells<F>(&mut self, programs: &[usize], mut f: F) -> u64
+    where
+        F: FnMut(usize, usize, usize, f32) -> f32,
+    {
+        let mut changed = 0u64;
+        for &p in programs {
+            let (offset, rows, cols) = {
+                let m = &self.progs[p];
+                (m.offset, m.rows, m.cols)
+            };
+            let slice = &mut self.arena[offset..offset + rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    let old = slice[r * cols + c];
+                    let new = f(p, r, c, old);
+                    if new.to_bits() != old.to_bits() {
+                        slice[r * cols + c] = new;
+                        changed += 1;
+                    }
+                }
+            }
+            self.progs[p].nnz = slice.iter().filter(|v| **v != 0.0).count() as u32;
+        }
+        if changed > 0 {
+            self.rebuild_sparse();
+        }
+        changed
+    }
+
     /// Rebuild the shared pattern table and value arena from the current
     /// kernel flags (compile and every artifact reader end here, so a
     /// loaded plan is field-identical to the plan that was saved). Sparse

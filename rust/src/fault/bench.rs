@@ -1,0 +1,574 @@
+//! The `fault-bench` chaos driver: inject device faults mid-stream under
+//! concurrent socket clients and prove the serving stack never returns a
+//! wrong answer.
+//!
+//! The run builds an R-MAT deployment, registers it in a fault-armed
+//! [`DeploymentRegistry`], starts an in-process [`NetServer`], and drives
+//! three phases of concurrent TCP clients:
+//!
+//! 1. **Pre-fault**: every response must bit-match `Deployment::mvm` on
+//!    the healthy plan (the zero-fault contract), measuring baseline
+//!    nnz/s throughput.
+//! 2. **Chaos**: once the clients are streaming, a control connection
+//!    issues `{"admin":{"inject":..}}` to corrupt one bank, then keeps
+//!    probing until the harness detects and degrades (detection latency).
+//!    Every element of every response in this phase — including the
+//!    window between injection and detection — must carry either the
+//!    healthy plan's bits or the host-CSR oracle's bits
+//!    ([`crate::api::Deployment::mvm_oracle`]). Anything else is an
+//!    escaped wrong answer and fails the run; `escaped_wrong_answers` in
+//!    the ledger is therefore 0 by construction or the bench errors. The
+//!    control thread also asserts that **every** program the injection
+//!    corrupted ends up quarantined (100% detection coverage).
+//! 3. **Post-repair**: the control connection issues
+//!    `{"admin":{"repair":..}}` (repair latency), then the clients run
+//!    again; responses must be undegraded and bit-identical to the
+//!    healthy plan, and throughput is compared against phase 1
+//!    (`recovery_ratio`).
+//!
+//! The ledger lands in `BENCH_fault.json`; the CI `fault-smoke` job greps
+//! it for the detection/repair/recovery fields.
+
+use crate::api::{Deployment, DeploymentBuilder, Error, Result, Source, Strategy};
+use crate::fault::{FaultHarness, FaultOptions};
+use crate::graph::synth;
+use crate::net::{DeploymentRegistry, NetOptions, NetServer, RegistryOptions};
+use crate::util::bench::write_bench_json;
+use crate::util::json::{num_arr, obj, Json};
+use crate::util::rng::Pcg64;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The tenant id the bench registers its deployment under.
+const TENANT: &str = "g";
+
+/// Configuration for one chaos run.
+#[derive(Clone, Debug)]
+pub struct FaultBenchOptions {
+    /// R-MAT node count (`AUTOGMAP_BENCH_FAST=1` caps it at 2000)
+    pub nodes: usize,
+    /// average edges per node (nnz ≈ nodes × degree)
+    pub degree: usize,
+    /// grid summary resolution the mapper works at
+    pub grid: usize,
+    /// crossbar banks the fleet spreads tiles over (≥ 2 so repair has a
+    /// healthy bank to re-program onto)
+    pub banks: usize,
+    /// shared-pool worker threads
+    pub workers: usize,
+    /// per-tenant admission queue depth
+    pub queue_depth: usize,
+    /// concurrent client connections (floored at 2 — the fault must land
+    /// mid-stream under real concurrency)
+    pub clients: usize,
+    /// requests per client per phase
+    pub requests: usize,
+    /// which bank the injected fault hits
+    pub fault_bank: usize,
+    /// fault kind: `stuck0`, `stuck1`, `drift`, or `outage`
+    pub fault_kind: String,
+    /// kind-specific rate (cell fraction for stuck-at, sigma for drift)
+    pub fault_rate: f64,
+    /// fault-model rng seed
+    pub fault_seed: u64,
+    /// scrub cadence forwarded to [`FaultOptions`]
+    pub scrub_every: u64,
+    /// request-vector rng seed
+    pub seed: u64,
+    /// listen address; `127.0.0.1:0` picks a free port
+    pub listen: String,
+    /// where to write the machine-readable ledger
+    pub bench_json: PathBuf,
+    /// fail the run when post-repair throughput drops below 90% of the
+    /// pre-fault baseline (off by default: wall-clock ratios are noisy on
+    /// shared CI machines; the ledger records the ratio regardless)
+    pub assert_recovery: bool,
+}
+
+impl Default for FaultBenchOptions {
+    fn default() -> FaultBenchOptions {
+        FaultBenchOptions {
+            nodes: 2000,
+            degree: 8,
+            grid: 32,
+            banks: 4,
+            workers: 4,
+            queue_depth: 32,
+            clients: 2,
+            requests: 120,
+            fault_bank: 0,
+            fault_kind: "outage".into(),
+            fault_rate: 0.05,
+            fault_seed: 0xfa017,
+            scrub_every: 256,
+            seed: 0x5eed,
+            listen: "127.0.0.1:0".into(),
+            bench_json: PathBuf::from("BENCH_fault.json"),
+            assert_recovery: false,
+        }
+    }
+}
+
+/// What a finished chaos run measured. A report is only returned when
+/// every response survived the plan-or-oracle bit check — an escaped
+/// wrong answer is an `Err`, not a statistic.
+#[derive(Clone, Debug)]
+pub struct FaultBenchReport {
+    pub served: u64,
+    pub degraded_responses: u64,
+    pub injected_cells: u64,
+    pub detection_ms: f64,
+    pub repair_ms: f64,
+    pub pre_fault_nnz_per_s: f64,
+    pub degraded_nnz_per_s: f64,
+    pub post_repair_nnz_per_s: f64,
+    pub recovery_ratio: f64,
+    pub wall_s: f64,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    fn connect(addr: SocketAddr) -> std::result::Result<Conn, String> {
+        let s = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let r = s.try_clone().map_err(|e| format!("clone stream: {e}"))?;
+        Ok(Conn {
+            reader: BufReader::new(r),
+            writer: BufWriter::new(s),
+        })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> std::result::Result<Json, String> {
+        writeln!(self.writer, "{line}").map_err(|e| format!("send: {e}"))?;
+        self.writer.flush().map_err(|e| format!("flush: {e}"))?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request (dropped response)".into());
+        }
+        Json::parse(buf.trim()).map_err(|e| format!("bad response JSON: {e}"))
+    }
+}
+
+/// Pull `y` and the `degraded` flag out of a response, or say why not.
+fn parse_answer(resp: &Json) -> std::result::Result<(Vec<f64>, bool), String> {
+    if resp.get("error") != &Json::Null {
+        return Err(format!("error response: {}", resp.get("error").to_string()));
+    }
+    let y: Vec<f64> = resp
+        .get("y")
+        .as_arr()
+        .ok_or_else(|| format!("response carries no \"y\": {}", resp.to_string()))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "non-numeric element in y".to_string()))
+        .collect::<std::result::Result<_, _>>()?;
+    Ok((y, resp.get("degraded").as_bool() == Some(true)))
+}
+
+/// The plan-or-oracle bit check: under faults, every element must carry
+/// either the healthy plan's bits or the host-CSR oracle's bits. In
+/// `strict` mode (healthy phases) the whole vector must bit-match the
+/// plan and the response must not be flagged degraded.
+fn check_answer(
+    got: &[f64],
+    degraded: bool,
+    want: &[f64],
+    oracle: &[f64],
+    strict: bool,
+) -> std::result::Result<(), String> {
+    if strict {
+        if degraded {
+            return Err("response flagged degraded in a healthy phase".into());
+        }
+        if got != want {
+            return Err("response does not bit-match the healthy Deployment::mvm".into());
+        }
+        return Ok(());
+    }
+    if got.len() != want.len() {
+        return Err(format!("answer length {} != dim {}", got.len(), want.len()));
+    }
+    for (i, &g) in got.iter().enumerate() {
+        if g.to_bits() != want[i].to_bits() && g.to_bits() != oracle[i].to_bits() {
+            return Err(format!(
+                "ESCAPED WRONG ANSWER at row {i}: {g} is neither the plan's {} nor \
+                 the oracle's {}",
+                want[i], oracle[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// One phase of concurrent clients: `clients` connections, `requests`
+/// verified MVMs each. Returns (served, degraded responses, wall seconds).
+fn run_phase(
+    addr: SocketAddr,
+    dep: &Arc<Deployment>,
+    clients: usize,
+    requests: usize,
+    seed: u64,
+    strict: bool,
+    tag: &'static str,
+) -> Result<(u64, u64, f64)> {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let dep = dep.clone();
+        let handle = std::thread::spawn(move || -> std::result::Result<(u64, u64), String> {
+            let dim = dep.provenance.dim;
+            let mut conn = Conn::connect(addr)?;
+            let mut rng = Pcg64::new(seed, c as u64);
+            let mut served = 0u64;
+            let mut degraded_seen = 0u64;
+            for r in 0..requests {
+                let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+                let want = dep.mvm(&x).map_err(|e| format!("plan oracle mvm: {e}"))?;
+                let oracle =
+                    dep.mvm_oracle(&x).map_err(|e| format!("digital oracle mvm: {e}"))?;
+                let req = obj(vec![
+                    ("tenant", Json::Str(TENANT.into())),
+                    ("id", Json::Num(r as f64)),
+                    ("x", num_arr(x)),
+                ]);
+                let resp = conn.roundtrip(&req.to_string())?;
+                let (got, degraded) =
+                    parse_answer(&resp).map_err(|e| format!("{tag} client {c} req {r}: {e}"))?;
+                check_answer(&got, degraded, &want, &oracle, strict)
+                    .map_err(|e| format!("{tag} client {c} req {r}: {e}"))?;
+                served += 1;
+                degraded_seen += degraded as u64;
+            }
+            Ok((served, degraded_seen))
+        });
+        handles.push(handle);
+    }
+    let mut served = 0u64;
+    let mut degraded = 0u64;
+    let mut failures: Vec<String> = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(Ok((s, d))) => {
+                served += s;
+                degraded += d;
+            }
+            Ok(Err(e)) => failures.push(e),
+            Err(_) => failures.push(format!("{tag} client thread panicked")),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(Error::Validate(format!(
+            "{} of {clients} {tag} clients failed; first: {}",
+            failures.len(),
+            failures[0]
+        )));
+    }
+    Ok((served, degraded, t0.elapsed().as_secs_f64()))
+}
+
+/// Run the chaos bench (see module docs). Returns the aggregate report
+/// and writes `BENCH_fault.json`; any correctness violation — an escaped
+/// wrong answer, a missed program, a failed repair — is an error.
+pub fn run_fault_bench(opts: &FaultBenchOptions) -> Result<FaultBenchReport> {
+    let fast = std::env::var("AUTOGMAP_BENCH_FAST").is_ok_and(|v| v == "1");
+    let nodes = if fast { opts.nodes.min(2000) } else { opts.nodes }.max(16);
+    let target_nnz = ((nodes * opts.degree.max(1)) / 2).max(1) * 2;
+    let clients = opts.clients.max(2);
+    let requests = opts.requests.max(1);
+    if opts.banks < 2 {
+        return Err(Error::Validate(
+            "fault-bench needs --banks >= 2 so repair has a healthy bank left".into(),
+        ));
+    }
+    let t0 = Instant::now();
+
+    let matrix = synth::rmat_like(nodes, target_nnz, opts.seed);
+    let built = DeploymentBuilder::new(
+        Source::Matrix {
+            label: format!("rmat{nodes}"),
+            matrix,
+        },
+        Strategy::FixedBlock { block: 2 },
+    )
+    .grid(opts.grid.max(2))
+    .banks(opts.banks)
+    .workers(opts.workers)
+    .build()?;
+
+    let registry = Arc::new(DeploymentRegistry::new(&RegistryOptions {
+        workers: opts.workers,
+        queue_depth: opts.queue_depth.max(clients + 1),
+        sharded: true,
+        fault: Some(FaultOptions {
+            scrub_every: opts.scrub_every,
+            ..FaultOptions::default()
+        }),
+    }));
+    registry.insert(TENANT, built, None);
+    let entry = registry.get(TENANT)?.entry();
+    let dep: Arc<Deployment> = entry.deployment().clone();
+    let harness: Arc<FaultHarness> = entry
+        .fault_harness()
+        .cloned()
+        .ok_or_else(|| Error::Validate("registry did not arm the fault harness".into()))?;
+    let nnz = entry.nnz();
+    let dim = entry.dim();
+
+    let server = NetServer::start(registry.clone(), &opts.listen, &NetOptions::default())?;
+    let addr = server.addr();
+
+    // phase 1 — pre-fault baseline: strict bit-identity, no degradation
+    let (served_pre, _, wall_pre) =
+        run_phase(addr, &dep, clients, requests, opts.seed, true, "pre-fault")?;
+    let pre_nnz_per_s = served_pre as f64 * nnz as f64 / wall_pre.max(1e-9);
+
+    // phase 2 — chaos: clients stream while the control connection
+    // injects and then watches for detection
+    let mut control = Conn::connect(addr).map_err(Error::Validate)?;
+    let chaos_seed = opts.seed ^ 0x6368_616f_73; // distinct request vectors
+    let dep2 = dep.clone();
+    let chaos = std::thread::spawn(move || {
+        run_phase(addr, &dep2, clients, requests, chaos_seed, false, "chaos")
+    });
+
+    let inject_line = obj(vec![(
+        "admin",
+        obj(vec![(
+            "inject",
+            obj(vec![
+                ("id", Json::Str(TENANT.into())),
+                ("bank", Json::Num(opts.fault_bank as f64)),
+                ("kind", Json::Str(opts.fault_kind.clone())),
+                ("rate", Json::Num(opts.fault_rate)),
+                ("seed", Json::Num(opts.fault_seed as f64)),
+            ]),
+        )]),
+    )])
+    .to_string();
+    let t_inject = Instant::now();
+    let ack = control.roundtrip(&inject_line).map_err(Error::Validate)?;
+    if ack.get("admin").as_str() != Some("inject") {
+        return Err(Error::Validate(format!(
+            "inject rejected: {}",
+            ack.to_string()
+        )));
+    }
+    let injected_cells = ack.get("cells_changed").as_i64().unwrap_or(0).max(0) as u64;
+    let injected_programs: Vec<usize> = ack
+        .get("programs")
+        .as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_i64()).map(|p| p as usize).collect())
+        .unwrap_or_default();
+    if injected_cells == 0 || injected_programs.is_empty() {
+        return Err(Error::Validate(format!(
+            "fault on bank {} corrupted nothing (kind {}, rate {}); pick a mapped bank \
+             or a higher rate",
+            opts.fault_bank, opts.fault_kind, opts.fault_rate
+        )));
+    }
+
+    // detection: the control connection keeps serving verified probes (so
+    // detection cannot starve even if the chaos clients finish early) and
+    // polls admin stats until the harness reports itself degraded
+    let mut probe_rng = Pcg64::new(opts.seed ^ 0x6465_7465_6374, 0xc0);
+    let detection_ms = loop {
+        let x: Vec<f64> = (0..dim).map(|_| probe_rng.uniform(-2.0, 2.0)).collect();
+        let want = dep.mvm(&x)?;
+        let oracle = dep.mvm_oracle(&x)?;
+        let req = obj(vec![
+            ("tenant", Json::Str(TENANT.into())),
+            ("id", Json::Str("detect-probe".into())),
+            ("x", num_arr(x)),
+        ]);
+        let resp = control.roundtrip(&req.to_string()).map_err(Error::Validate)?;
+        let (got, degraded) = parse_answer(&resp).map_err(Error::Validate)?;
+        check_answer(&got, degraded, &want, &oracle, false).map_err(Error::Validate)?;
+        let stats = control
+            .roundtrip(r#"{"admin":"stats"}"#)
+            .map_err(Error::Validate)?;
+        let health = stats.get("stats").get(TENANT).get("health").clone();
+        if health.get("degraded").as_bool() == Some(true) {
+            break t_inject.elapsed().as_secs_f64() * 1e3;
+        }
+        if t_inject.elapsed() > Duration::from_secs(30) {
+            return Err(Error::Validate(
+                "fault was never detected within 30s of injection".into(),
+            ));
+        }
+    };
+
+    // 100% detection coverage: every program the injection corrupted must
+    // be quarantined (the harness may legitimately quarantine more — all
+    // programs on the failed bank's tiles)
+    let quarantined = harness.current_epoch().quarantined_programs.clone();
+    let missed: Vec<usize> = injected_programs
+        .iter()
+        .copied()
+        .filter(|p| !quarantined.contains(p))
+        .collect();
+    if !missed.is_empty() {
+        return Err(Error::Validate(format!(
+            "detection missed {} of {} corrupted programs: {missed:?}",
+            missed.len(),
+            injected_programs.len()
+        )));
+    }
+
+    let (served_chaos, degraded_responses, wall_chaos) = chaos
+        .join()
+        .map_err(|_| Error::Validate("chaos phase driver panicked".into()))??;
+    let degraded_nnz_per_s = served_chaos as f64 * nnz as f64 / wall_chaos.max(1e-9);
+
+    // repair: re-program onto healthy banks, then prove restored identity
+    let repair_line = obj(vec![(
+        "admin",
+        obj(vec![("repair", obj(vec![("id", Json::Str(TENANT.into()))]))]),
+    )])
+    .to_string();
+    let t_repair = Instant::now();
+    let ack = control.roundtrip(&repair_line).map_err(Error::Validate)?;
+    let repair_ms = t_repair.elapsed().as_secs_f64() * 1e3;
+    if ack.get("admin").as_str() != Some("repair") {
+        return Err(Error::Validate(format!(
+            "repair rejected: {}",
+            ack.to_string()
+        )));
+    }
+    let generation = ack.get("generation").as_i64().unwrap_or(0).max(0) as u64;
+    drop(control);
+
+    // phase 3 — post-repair: strict again, and throughput should recover
+    let (served_post, _, wall_post) = run_phase(
+        addr,
+        &dep,
+        clients,
+        requests,
+        opts.seed ^ 0x7265_7061_6972,
+        true,
+        "post-repair",
+    )?;
+    let post_nnz_per_s = served_post as f64 * nnz as f64 / wall_post.max(1e-9);
+    let recovery_ratio = post_nnz_per_s / pre_nnz_per_s.max(1e-9);
+    if opts.assert_recovery && recovery_ratio < 0.9 {
+        return Err(Error::Validate(format!(
+            "post-repair throughput recovered only {:.1}% of the pre-fault baseline",
+            recovery_ratio * 100.0
+        )));
+    }
+
+    let report = FaultBenchReport {
+        served: served_pre + served_chaos + served_post,
+        degraded_responses,
+        injected_cells,
+        detection_ms,
+        repair_ms,
+        pre_fault_nnz_per_s: pre_nnz_per_s,
+        degraded_nnz_per_s,
+        post_repair_nnz_per_s: post_nnz_per_s,
+        recovery_ratio,
+        wall_s: t0.elapsed().as_secs_f64(),
+    };
+    let health = harness.health();
+    write_bench_json(
+        &opts.bench_json,
+        vec![
+            ("bench", Json::Str("fault".into())),
+            ("nodes", Json::Num(nodes as f64)),
+            ("nnz", Json::Num(nnz as f64)),
+            ("banks", Json::Num(opts.banks as f64)),
+            ("workers", Json::Num(registry.workers() as f64)),
+            ("clients", Json::Num(clients as f64)),
+            ("requests_per_client", Json::Num(requests as f64)),
+            (
+                "fault",
+                obj(vec![
+                    ("bank", Json::Num(opts.fault_bank as f64)),
+                    ("kind", Json::Str(opts.fault_kind.clone())),
+                    ("rate", Json::Num(opts.fault_rate)),
+                    ("seed", Json::Num(opts.fault_seed as f64)),
+                ]),
+            ),
+            ("scrub_every", Json::Num(opts.scrub_every as f64)),
+            ("injected_cells", Json::Num(report.injected_cells as f64)),
+            ("injected_programs", Json::Num(injected_programs.len() as f64)),
+            ("quarantined_programs", Json::Num(quarantined.len() as f64)),
+            ("detected_all_programs", Json::Bool(true)),
+            ("detection_ms", Json::Num(report.detection_ms)),
+            ("repair_ms", Json::Num(report.repair_ms)),
+            ("generation", Json::Num(generation as f64)),
+            (
+                "degraded_responses",
+                Json::Num(report.degraded_responses as f64),
+            ),
+            ("escaped_wrong_answers", Json::Num(0.0)),
+            ("pre_fault_nnz_per_s", Json::Num(report.pre_fault_nnz_per_s)),
+            ("degraded_nnz_per_s", Json::Num(report.degraded_nnz_per_s)),
+            (
+                "post_repair_nnz_per_s",
+                Json::Num(report.post_repair_nnz_per_s),
+            ),
+            ("recovery_ratio", Json::Num(report.recovery_ratio)),
+            ("served", Json::Num(report.served as f64)),
+            ("wall_s", Json::Num(report.wall_s)),
+            ("health", crate::api::dispatch::health_json(&health)),
+        ],
+    )?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_run_detects_repairs_and_escapes_nothing() {
+        let dir = std::env::temp_dir().join("autogmap_fault_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = FaultBenchOptions {
+            nodes: 300,
+            degree: 6,
+            grid: 8,
+            banks: 3,
+            workers: 2,
+            clients: 2,
+            requests: 40,
+            fault_kind: "stuck0".into(),
+            fault_rate: 0.4,
+            bench_json: dir.join("BENCH_fault.json"),
+            ..FaultBenchOptions::default()
+        };
+        let report = run_fault_bench(&opts).unwrap();
+        // three phases of 2 clients × 40 requests; the control probes are
+        // not counted in `served`
+        assert_eq!(report.served, 2 * 40 * 3);
+        assert!(report.injected_cells > 0);
+        assert!(report.detection_ms >= 0.0);
+        assert!(report.repair_ms >= 0.0);
+        assert!(report.pre_fault_nnz_per_s > 0.0);
+        assert!(report.post_repair_nnz_per_s > 0.0);
+        let ledger = std::fs::read_to_string(&opts.bench_json).unwrap();
+        let doc = Json::parse(&ledger).unwrap();
+        assert_eq!(doc.get("bench").as_str(), Some("fault"));
+        assert_eq!(doc.get("escaped_wrong_answers").as_i64(), Some(0));
+        assert_eq!(doc.get("detected_all_programs").as_bool(), Some(true));
+        assert_eq!(doc.get("health").get("repairs").as_i64(), Some(1));
+        assert_eq!(doc.get("health").get("degraded").as_bool(), Some(false));
+        assert!(doc.get("recovery_ratio").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_bank_fleets_are_rejected_up_front() {
+        let opts = FaultBenchOptions {
+            banks: 1,
+            ..FaultBenchOptions::default()
+        };
+        let err = run_fault_bench(&opts).unwrap_err();
+        assert_eq!(err.kind(), "validate");
+    }
+}

@@ -1,0 +1,768 @@
+//! The fault harness: healthy-image snapshot, epoch state machine, ABFT
+//! verification, scrub probes, quarantine, and repair. See the module doc
+//! of [`crate::fault`] for the lifecycle; this file is the mechanism.
+
+use super::{FaultKind, FaultOptions, FaultSpec};
+use crate::api::deploy::{DeployedPlan, Deployment};
+use crate::api::error::{Error, Result};
+use crate::engine::{AssignPolicy, BatchExecutor, ExecPlan, FaultHealth, Fleet};
+use crate::graph::{Coo, Csr};
+use crate::util::rng::Pcg64;
+use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One generation of fault state. Epochs are immutable once installed;
+/// every state transition (inject, quarantine, repair) builds a fresh
+/// epoch and swaps the `Arc` — a serving batch snapshots one epoch and
+/// finishes on it, exactly like the net tier's bundle hot-swap.
+#[derive(Clone, Debug)]
+pub struct FaultEpoch {
+    /// monotone generation counter (bumps on inject/detect/repair)
+    pub generation: u64,
+    /// the plan this epoch serves: the healthy image, or a corrupted
+    /// clone of it after an injection
+    pub plan: Arc<DeployedPlan>,
+    /// rows answered by the digital reference instead of the arena
+    pub quarantined_rows: Vec<bool>,
+    /// count of `true` entries in `quarantined_rows`
+    pub quarantined_row_count: usize,
+    /// programs whose arena bytes differ from the healthy image *and*
+    /// have been detected (localized) — injection alone leaves this unchanged
+    pub quarantined_programs: BTreeSet<usize>,
+    /// banks retired from the assignment (stay retired across repair)
+    pub failed_banks: Vec<bool>,
+    /// arena cells currently differing from the healthy image
+    pub faulty_cells: u64,
+    /// serving in degraded mode (some rows on the digital fallback)
+    pub degraded: bool,
+}
+
+/// What one [`FaultHarness::inject`] did. `cells_changed` and `programs`
+/// are *cumulative*: the total corruption currently present relative to
+/// the healthy image (a second injection reports the union), which is the
+/// ground truth a chaos harness checks detection coverage against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InjectReport {
+    /// epoch generation after the injection
+    pub generation: u64,
+    /// arena cells whose bits differ from the healthy image
+    pub cells_changed: u64,
+    /// programs containing at least one differing cell
+    pub programs: Vec<usize>,
+}
+
+/// The armed fault-tolerance state attached to a
+/// [`crate::api::Deployment`]: the healthy program image, the digital
+/// reference matrix and its column checksums, per-bank probe references,
+/// the live tile→bank assignment, the current [`FaultEpoch`], and the
+/// lifecycle counters. All serving-path state is lock-light: one `RwLock`
+/// read per batch for the epoch snapshot; injection, localization, and
+/// repair serialize on `inject_lock`.
+#[derive(Debug)]
+pub struct FaultHarness {
+    dim: usize,
+    banks: usize,
+    policy: AssignPolicy,
+    /// the healthy plan — the image repair swaps back in (pointer-equal
+    /// to the deployment's own plan, which keeps the fast path fast)
+    healthy: Arc<DeployedPlan>,
+    /// full served-order matrix rebuilt from the healthy arena (f32 cells
+    /// widened exactly to f64) plus the composite's digital spill: both
+    /// the quarantine fallback and the chaos harness's host-CSR oracle
+    reference: Csr,
+    /// ABFT column checksums of `reference`: `cs_j = Σ_i A_ij`
+    col_checksum: Vec<f64>,
+    /// live tile→bank assignment (repair re-derives it excluding failed
+    /// banks)
+    assignment: RwLock<Vec<usize>>,
+    /// the fixed known vector scrub probes push through every bank
+    probe: Vec<f64>,
+    /// healthy per-bank probe outputs under the current assignment
+    probe_ref: RwLock<Vec<Vec<f64>>>,
+    epoch: RwLock<Arc<FaultEpoch>>,
+    opts: FaultOptions,
+    /// serializes inject / localize / repair (state transitions)
+    inject_lock: Mutex<()>,
+    served: AtomicU64,
+    verify_checks: AtomicU64,
+    verify_detections: AtomicU64,
+    scrubs: AtomicU64,
+    scrub_detections: AtomicU64,
+    repairs: AtomicU64,
+    degraded_served: AtomicU64,
+    /// test hook: panic on the next served batch (exercises the typed
+    /// `internal` error boundary without a real bug)
+    poison_next: AtomicBool,
+}
+
+impl FaultHarness {
+    /// Snapshot `plan` as the healthy image and precompute the detection
+    /// state (reference matrix, column checksums, per-bank probe
+    /// references under `fleet`'s assignment).
+    pub fn new(plan: Arc<DeployedPlan>, fleet: &Fleet, opts: FaultOptions) -> FaultHarness {
+        let dim = plan.exec_plan().dim;
+        let exec = plan.exec_plan();
+        let mut coo = Coo::new(dim, dim);
+        for t in &exec.tiles {
+            let prog = exec.program(t.program);
+            for r in 0..t.rows {
+                for c in 0..t.cols {
+                    let v = prog[r * t.cols + c];
+                    if v != 0.0 {
+                        coo.push(t.row0 + r, t.col0 + c, v as f64);
+                    }
+                }
+            }
+        }
+        if let DeployedPlan::Composite(cp) = &*plan {
+            for r in 0..cp.spill.rows {
+                for (i, &c) in cp.spill.row(r).iter().enumerate() {
+                    coo.push(r, c, cp.spill.row_vals(r)[i]);
+                }
+            }
+        }
+        let reference = coo.to_csr();
+        let mut col_checksum = vec![0.0f64; dim];
+        for r in 0..dim {
+            for (i, &c) in reference.row(r).iter().enumerate() {
+                col_checksum[c] += reference.row_vals(r)[i];
+            }
+        }
+        let mut rng = Pcg64::new(0x7363_7275_6270_726f, 0x6265); // "scrubpro","be"
+        let probe: Vec<f64> = (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let harness = FaultHarness {
+            dim,
+            banks: fleet.banks,
+            policy: fleet.policy,
+            epoch: RwLock::new(Arc::new(FaultEpoch {
+                generation: 0,
+                plan: plan.clone(),
+                quarantined_rows: vec![false; dim],
+                quarantined_row_count: 0,
+                quarantined_programs: BTreeSet::new(),
+                failed_banks: vec![false; fleet.banks],
+                faulty_cells: 0,
+                degraded: false,
+            })),
+            healthy: plan,
+            reference,
+            col_checksum,
+            assignment: RwLock::new(fleet.assignment.clone()),
+            probe,
+            probe_ref: RwLock::new(Vec::new()),
+            opts,
+            inject_lock: Mutex::new(()),
+            served: AtomicU64::new(0),
+            verify_checks: AtomicU64::new(0),
+            verify_detections: AtomicU64::new(0),
+            scrubs: AtomicU64::new(0),
+            scrub_detections: AtomicU64::new(0),
+            repairs: AtomicU64::new(0),
+            degraded_served: AtomicU64::new(0),
+            poison_next: AtomicBool::new(false),
+        };
+        let refs = {
+            let a = harness.assignment.read().unwrap();
+            (0..harness.banks)
+                .map(|b| harness.bank_probe(harness.healthy.exec_plan(), &a, b))
+                .collect()
+        };
+        *harness.probe_ref.write().unwrap() = refs;
+        harness
+    }
+
+    /// The current epoch (a consistent snapshot — batches finish on the
+    /// epoch they started with).
+    pub fn current_epoch(&self) -> Arc<FaultEpoch> {
+        self.epoch.read().unwrap().clone()
+    }
+
+    /// Current epoch generation.
+    pub fn generation(&self) -> u64 {
+        self.current_epoch().generation
+    }
+
+    /// The digital reference matrix (served order) — the host-CSR oracle.
+    pub fn reference(&self) -> &Csr {
+        &self.reference
+    }
+
+    /// One exact MVM (served order) through the digital reference.
+    pub fn reference_mvm(&self, x: &[f64]) -> Vec<f64> {
+        self.reference.spmv(x)
+    }
+
+    /// Live tile→bank assignment (changes on repair).
+    pub fn assignment(&self) -> Vec<usize> {
+        self.assignment.read().unwrap().clone()
+    }
+
+    /// Harness configuration.
+    pub fn options(&self) -> &FaultOptions {
+        &self.opts
+    }
+
+    /// Live health counters (the `health` block of
+    /// [`crate::engine::ServeStats`]).
+    pub fn health(&self) -> FaultHealth {
+        let e = self.current_epoch();
+        FaultHealth {
+            armed: true,
+            degraded: e.degraded,
+            faulty_cells: e.faulty_cells,
+            quarantined_programs: e.quarantined_programs.len(),
+            quarantined_rows: e.quarantined_row_count,
+            failed_banks: e.failed_banks.iter().filter(|b| **b).count(),
+            verify_checks: self.verify_checks.load(Ordering::Relaxed),
+            verify_detections: self.verify_detections.load(Ordering::Relaxed),
+            scrubs: self.scrubs.load(Ordering::Relaxed),
+            scrub_detections: self.scrub_detections.load(Ordering::Relaxed),
+            repairs: self.repairs.load(Ordering::Relaxed),
+            degraded_served: self.degraded_served.load(Ordering::Relaxed),
+            generation: e.generation,
+        }
+    }
+
+    /// Mark the next served batch to panic inside the execution path — a
+    /// deterministic stand-in for a poisoned request, caught at the
+    /// request boundary and answered as a typed `internal` error.
+    pub fn poison_next_request(&self) {
+        self.poison_next.store(true, Ordering::SeqCst);
+    }
+
+    // ---- inject ---------------------------------------------------------
+
+    /// Corrupt the programs currently mapped to `spec.bank` per the fault
+    /// model, deterministically in `spec.seed`. Installs a new epoch
+    /// carrying the corrupted plan; quarantine state is deliberately left
+    /// unchanged — injection is silent, detection has to find it.
+    pub fn inject(&self, spec: &FaultSpec) -> Result<InjectReport> {
+        let _g = self.inject_lock.lock().unwrap();
+        if spec.bank >= self.banks {
+            return Err(Error::Validate(format!(
+                "fault bank {} out of range (fleet has {} banks)",
+                spec.bank, self.banks
+            )));
+        }
+        let cur = self.current_epoch();
+        let assignment = self.assignment.read().unwrap().clone();
+        let targets: Vec<usize> = {
+            let tiles = &cur.plan.exec_plan().tiles;
+            let mut set = BTreeSet::new();
+            for (i, t) in tiles.iter().enumerate() {
+                if assignment[i] == spec.bank {
+                    set.insert(t.program);
+                }
+            }
+            set.into_iter().collect()
+        };
+        if targets.is_empty() {
+            return Ok(InjectReport {
+                generation: cur.generation,
+                cells_changed: cur.faulty_cells,
+                programs: cur.quarantined_programs.iter().copied().collect(),
+            });
+        }
+        let mut plan: DeployedPlan = (*cur.plan).clone();
+        // stuck-at-one level: the healthy program's max-abs cell (a fully
+        // "on" device), 1.0 for an all-zero program
+        let stuck: HashMap<usize, f32> = targets
+            .iter()
+            .map(|&p| {
+                let m = self
+                    .healthy
+                    .exec_plan()
+                    .program(p)
+                    .iter()
+                    .fold(0.0f32, |m, v| m.max(v.abs()));
+                (p, if m > 0.0 { m } else { 1.0 })
+            })
+            .collect();
+        let mut rng = Pcg64::new(spec.seed ^ 0x6465_765f_666c_7400, spec.bank as u64); // "dev_flt"
+        let kind = spec.kind;
+        plan.exec_plan_mut().mutate_program_cells(&targets, |p, _r, _c, v| match kind {
+            FaultKind::StuckZero { rate } => {
+                if rng.bool(rate) {
+                    0.0
+                } else {
+                    v
+                }
+            }
+            FaultKind::StuckOne { rate } => {
+                if rng.bool(rate) {
+                    stuck[&p]
+                } else {
+                    v
+                }
+            }
+            FaultKind::Drift { sigma, ticks } => {
+                let mut f = 1.0f64;
+                for _ in 0..ticks {
+                    f *= 1.0 + sigma * rng.normal();
+                }
+                if v == 0.0 {
+                    v
+                } else {
+                    (v as f64 * f) as f32
+                }
+            }
+            FaultKind::Outage => 0.0,
+        });
+        // ground truth by construction: bit-diff against the healthy
+        // image (a draw that hit an already-zero cell changed nothing)
+        let (cells, progs) = self.diff_programs(plan.exec_plan());
+        let next = FaultEpoch {
+            generation: cur.generation + 1,
+            plan: Arc::new(plan),
+            quarantined_rows: cur.quarantined_rows.clone(),
+            quarantined_row_count: cur.quarantined_row_count,
+            quarantined_programs: cur.quarantined_programs.clone(),
+            failed_banks: cur.failed_banks.clone(),
+            faulty_cells: cells,
+            degraded: cur.degraded,
+        };
+        let generation = next.generation;
+        *self.epoch.write().unwrap() = Arc::new(next);
+        Ok(InjectReport {
+            generation,
+            cells_changed: cells,
+            programs: progs.into_iter().collect(),
+        })
+    }
+
+    // ---- serve + verify -------------------------------------------------
+
+    /// The armed serving path: permute a request batch into served order,
+    /// execute it on the current epoch's plan, answer quarantined rows
+    /// from the digital reference, verify every output against the ABFT
+    /// column checksums (recomputing any tripped answer exactly), permute
+    /// back, and run the scrub cadence. Returns the answers in original
+    /// node ids plus the degraded flag for this batch.
+    ///
+    /// On a healthy epoch this is byte-for-byte the unarmed
+    /// `execute_permuted` path (same executor, same recycled buffers)
+    /// plus one checksum dot per request.
+    pub fn serve_permuted(
+        &self,
+        dep: &Deployment,
+        exec: &BatchExecutor<DeployedPlan>,
+        xs: Vec<Vec<f64>>,
+        sharded: bool,
+    ) -> (Vec<Vec<f64>>, bool) {
+        if self.poison_next.swap(false, Ordering::SeqCst) {
+            panic!("fault harness: request poisoned by poison_next_request");
+        }
+        let epoch = self.current_epoch();
+        let permuted: Vec<Vec<f64>> = xs.iter().map(|x| dep.permute_in(x)).collect();
+        let n = permuted.len() as u64;
+        let fast = Arc::ptr_eq(&epoch.plan, &self.healthy);
+        let tmp;
+        let run: &BatchExecutor<DeployedPlan> = if fast {
+            exec
+        } else {
+            // corrupted epoch: a throwaway executor over the epoch's plan
+            // on the caller's worker pool (threads shared, buffers not)
+            tmp = BatchExecutor::with_pool(epoch.plan.clone(), exec.pool().clone());
+            &tmp
+        };
+        let kept = permuted.clone();
+        let mut ys = if sharded {
+            run.execute_batch_sharded(permuted)
+        } else {
+            run.execute_batch(permuted)
+        };
+        let mut trips = 0u64;
+        for (x, y) in kept.iter().zip(ys.iter_mut()) {
+            if epoch.quarantined_row_count > 0 {
+                for (r, q) in epoch.quarantined_rows.iter().enumerate() {
+                    if *q {
+                        y[r] = self.row_dot(r, x);
+                    }
+                }
+            }
+            if !self.verify(x, y) {
+                trips += 1;
+                // detected corruption the quarantine does not cover yet:
+                // answer this request exactly from the reference
+                *y = self.reference.spmv(x);
+            }
+        }
+        let outs: Vec<Vec<f64>> = ys.iter().map(|y| dep.permute_out(y)).collect();
+        run.recycle(ys);
+        self.verify_checks.fetch_add(n, Ordering::Relaxed);
+        if trips > 0 {
+            self.verify_detections.fetch_add(trips, Ordering::Relaxed);
+            self.localize_and_quarantine();
+        }
+        let degraded = epoch.degraded || trips > 0;
+        if degraded {
+            self.degraded_served.fetch_add(n, Ordering::Relaxed);
+        }
+        let before = self.served.fetch_add(n, Ordering::Relaxed);
+        let se = self.opts.scrub_every;
+        if se > 0 && before / se != (before + n) / se {
+            self.scrub();
+        }
+        (outs, degraded)
+    }
+
+    /// One ABFT verification: `Σ_r y_r` against `Σ_j cs_j·x_j`, tolerance
+    /// scaled by the magnitude actually summed.
+    fn verify(&self, x: &[f64], y: &[f64]) -> bool {
+        let mut pred = 0.0f64;
+        let mut scale = 0.0f64;
+        for (cs, xv) in self.col_checksum.iter().zip(x) {
+            let t = cs * xv;
+            pred += t;
+            scale += t.abs();
+        }
+        let mut act = 0.0f64;
+        for v in y {
+            act += v;
+            scale += v.abs();
+        }
+        (act - pred).abs() <= self.opts.tol_scale * (scale + 1.0)
+    }
+
+    /// One exact reference row-dot (bit-identical to [`Csr::spmv`]'s
+    /// per-row accumulation) — the digital fallback for quarantined rows.
+    fn row_dot(&self, r: usize, x: &[f64]) -> f64 {
+        let cols = self.reference.row(r);
+        let vals = self.reference.row_vals(r);
+        let mut acc = 0.0f64;
+        for (&c, &v) in cols.iter().zip(vals.iter()) {
+            acc += v * x[c];
+        }
+        acc
+    }
+
+    // ---- detect ---------------------------------------------------------
+
+    /// Push the known probe vector through every surviving bank of the
+    /// current epoch's plan and compare against the healthy references
+    /// bit-exactly. On a mismatch, localize and quarantine. Returns true
+    /// when the scrub found corruption that was not already quarantined.
+    pub fn scrub(&self) -> bool {
+        self.scrubs.fetch_add(1, Ordering::Relaxed);
+        let epoch = self.current_epoch();
+        let plan = epoch.plan.exec_plan();
+        let assignment = self.assignment.read().unwrap().clone();
+        let mismatch = {
+            let refs = self.probe_ref.read().unwrap();
+            (0..self.banks).any(|b| {
+                !epoch.failed_banks[b] && self.bank_probe(plan, &assignment, b) != refs[b]
+            })
+        };
+        if !mismatch {
+            return false;
+        }
+        self.scrub_detections.fetch_add(1, Ordering::Relaxed);
+        self.localize_and_quarantine();
+        true
+    }
+
+    /// Bank `bank`'s contribution to `A·probe` under `assignment`:
+    /// per-tile dense row dots in tile order, accumulated into a
+    /// dim-length output. Deterministic, so healthy state compares
+    /// bit-exactly across calls.
+    fn bank_probe(&self, plan: &ExecPlan, assignment: &[usize], bank: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.dim];
+        for (i, t) in plan.tiles.iter().enumerate() {
+            if assignment[i] != bank {
+                continue;
+            }
+            let prog = plan.program(t.program);
+            for r in 0..t.rows {
+                let mut acc = 0.0f64;
+                for c in 0..t.cols {
+                    acc += prog[r * t.cols + c] as f64 * self.probe[t.col0 + c];
+                }
+                out[t.row0 + r] += acc;
+            }
+        }
+        out
+    }
+
+    /// Bit-diff a plan's arena against the healthy image: total differing
+    /// cells and the set of programs containing any.
+    fn diff_programs(&self, plan: &ExecPlan) -> (u64, BTreeSet<usize>) {
+        let healthy = self.healthy.exec_plan();
+        let mut cells = 0u64;
+        let mut progs = BTreeSet::new();
+        for p in 0..healthy.num_programs() {
+            let diff = healthy
+                .program(p)
+                .iter()
+                .zip(plan.program(p).iter())
+                .filter(|(a, b)| a.to_bits() != b.to_bits())
+                .count() as u64;
+            if diff > 0 {
+                cells += diff;
+                progs.insert(p);
+            }
+        }
+        (cells, progs)
+    }
+
+    /// Localize corruption exactly (arena bit-diff per program), mark
+    /// every row of every tile referencing a corrupted program for the
+    /// digital fallback, retire the banks those tiles sit on, and install
+    /// the degraded epoch. No-op when the diff adds nothing beyond the
+    /// current quarantine.
+    fn localize_and_quarantine(&self) {
+        let _g = self.inject_lock.lock().unwrap();
+        let cur = self.current_epoch();
+        let (cells, progs) = self.diff_programs(cur.plan.exec_plan());
+        if progs.is_empty() {
+            return;
+        }
+        let known = progs.iter().all(|p| cur.quarantined_programs.contains(p));
+        if known && cells == cur.faulty_cells && cur.degraded {
+            return;
+        }
+        let plan = cur.plan.exec_plan();
+        let mut rows = vec![false; self.dim];
+        let mut failed = cur.failed_banks.clone();
+        {
+            let assignment = self.assignment.read().unwrap();
+            for (i, t) in plan.tiles.iter().enumerate() {
+                if progs.contains(&t.program) {
+                    for q in rows.iter_mut().skip(t.row0).take(t.rows) {
+                        *q = true;
+                    }
+                    failed[assignment[i]] = true;
+                }
+            }
+        }
+        let count = rows.iter().filter(|q| **q).count();
+        let next = FaultEpoch {
+            generation: cur.generation + 1,
+            plan: cur.plan.clone(),
+            quarantined_rows: rows,
+            quarantined_row_count: count,
+            quarantined_programs: progs,
+            failed_banks: failed,
+            faulty_cells: cells,
+            degraded: true,
+        };
+        *self.epoch.write().unwrap() = Arc::new(next);
+    }
+
+    // ---- repair ---------------------------------------------------------
+
+    /// Re-program onto healthy banks and swap the healthy image back in:
+    /// re-derive the tile→bank assignment excluding every failed bank,
+    /// recompute the per-bank probe references, and install a clean epoch
+    /// whose plan is pointer-equal to the deployment's own (restoring the
+    /// fast path). Failed banks stay retired. Returns the new generation.
+    pub fn repair(&self) -> Result<u64> {
+        let _g = self.inject_lock.lock().unwrap();
+        let cur = self.current_epoch();
+        let fleet = Fleet::assign_excluding(
+            self.healthy.exec_plan(),
+            self.banks,
+            self.policy,
+            &cur.failed_banks,
+        )
+        .map_err(|e| Error::Validate(format!("repair: {e:#}")))?;
+        let refs: Vec<Vec<f64>> = (0..self.banks)
+            .map(|b| self.bank_probe(self.healthy.exec_plan(), &fleet.assignment, b))
+            .collect();
+        *self.assignment.write().unwrap() = fleet.assignment;
+        *self.probe_ref.write().unwrap() = refs;
+        let next = FaultEpoch {
+            generation: cur.generation + 1,
+            plan: self.healthy.clone(),
+            quarantined_rows: vec![false; self.dim],
+            quarantined_row_count: 0,
+            quarantined_programs: BTreeSet::new(),
+            failed_banks: cur.failed_banks.clone(),
+            faulty_cells: 0,
+            degraded: false,
+        };
+        let generation = next.generation;
+        *self.epoch.write().unwrap() = Arc::new(next);
+        self.repairs.fetch_add(1, Ordering::Relaxed);
+        Ok(generation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{DeploymentBuilder, Source, Strategy};
+    use crate::graph::synth;
+
+    fn armed_deployment(banks: usize) -> Deployment {
+        let mut dep = DeploymentBuilder::new(
+            Source::Matrix {
+                label: "qm7".into(),
+                matrix: synth::qm7_like(5828),
+            },
+            Strategy::FixedBlock { block: 2 },
+        )
+        .grid(2)
+        .banks(banks)
+        .workers(2)
+        .build()
+        .unwrap();
+        dep.arm_fault_harness(FaultOptions::default());
+        dep
+    }
+
+    fn requests(dim: usize, n: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|s| (0..dim).map(|i| ((i * 7 + s * 3) % 13) as f64 - 6.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn reference_matches_the_healthy_plan_oracle() {
+        let dep = armed_deployment(2);
+        let h = dep.fault_harness().unwrap().clone();
+        let dim = dep.provenance.dim;
+        for x in requests(dim, 3) {
+            let via_plan = dep.mvm(&x).unwrap();
+            let via_ref = dep.mvm_oracle(&x).unwrap();
+            for (a, b) in via_plan.iter().zip(via_ref.iter()) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+        }
+        assert_eq!(h.generation(), 0);
+        assert!(!h.health().degraded);
+        assert!(h.health().armed);
+    }
+
+    #[test]
+    fn inject_detect_quarantine_repair_lifecycle() {
+        let dep = armed_deployment(2);
+        let h = dep.fault_harness().unwrap().clone();
+        let dim = dep.provenance.dim;
+        let exec = dep.executor(2);
+        let xs = requests(dim, 4);
+        let want: Vec<Vec<f64>> = xs.iter().map(|x| dep.mvm(x).unwrap()).collect();
+        let oracle: Vec<Vec<f64>> = xs.iter().map(|x| dep.mvm_oracle(x).unwrap()).collect();
+
+        // healthy epoch: bit-identical to the plain deployment answer
+        let (ys, degraded) = h.serve_permuted(&dep, &exec, xs.clone(), true);
+        assert!(!degraded);
+        assert_eq!(ys, want);
+
+        // inject a stuck-at-zero burst on bank 0 — silent until served
+        let report = h
+            .inject(&FaultSpec {
+                bank: 0,
+                kind: FaultKind::StuckZero { rate: 0.7 },
+                seed: 11,
+            })
+            .unwrap();
+        assert!(report.cells_changed > 0, "injection must corrupt cells");
+        assert!(!h.current_epoch().degraded, "injection alone must stay silent");
+
+        // first served batch detects, recomputes exactly, quarantines
+        let (ys, degraded) = h.serve_permuted(&dep, &exec, xs.clone(), true);
+        assert!(degraded);
+        for ((y, w), o) in ys.iter().zip(want.iter()).zip(oracle.iter()) {
+            for ((a, b), c) in y.iter().zip(w.iter()).zip(o.iter()) {
+                assert!(
+                    a.to_bits() == b.to_bits() || a.to_bits() == c.to_bits(),
+                    "degraded answer must match plan or oracle bit-exactly: {a} vs {b}/{c}"
+                );
+            }
+        }
+        let e = h.current_epoch();
+        assert!(e.degraded);
+        assert_eq!(
+            e.quarantined_programs.iter().copied().collect::<Vec<_>>(),
+            report.programs,
+            "every corrupted program must be detected"
+        );
+        assert!(h.health().verify_detections > 0);
+
+        // degraded serving stays oracle-exact on quarantined rows
+        let (ys, degraded) = h.serve_permuted(&dep, &exec, xs.clone(), false);
+        assert!(degraded);
+        for ((y, w), o) in ys.iter().zip(want.iter()).zip(oracle.iter()) {
+            for ((a, b), c) in y.iter().zip(w.iter()).zip(o.iter()) {
+                assert!(a.to_bits() == b.to_bits() || a.to_bits() == c.to_bits());
+            }
+        }
+
+        // repair: healthy image back, failed bank retired, fast path restored
+        let gen = h.repair().unwrap();
+        assert!(gen > e.generation);
+        let e = h.current_epoch();
+        assert!(!e.degraded);
+        assert_eq!(e.quarantined_row_count, 0);
+        assert!(e.failed_banks.iter().any(|b| *b));
+        assert!(h.assignment().iter().all(|&b| !e.failed_banks[b]));
+        let (ys, degraded) = h.serve_permuted(&dep, &exec, xs, true);
+        assert!(!degraded);
+        assert_eq!(ys, want, "post-repair serving must be bit-identical again");
+        assert_eq!(h.health().repairs, 1);
+    }
+
+    #[test]
+    fn scrub_detects_silent_corruption() {
+        let dep = armed_deployment(2);
+        let h = dep.fault_harness().unwrap().clone();
+        h.inject(&FaultSpec {
+            bank: 1,
+            kind: FaultKind::Outage,
+            seed: 3,
+        })
+        .unwrap();
+        // no traffic has exercised the fault; the probe finds it
+        assert!(h.scrub(), "scrub must detect the outage");
+        let e = h.current_epoch();
+        assert!(e.degraded);
+        assert!(e.failed_banks.iter().any(|b| *b));
+        assert_eq!(h.health().scrub_detections, 1);
+        // a second scrub adds nothing new
+        assert!(!h.scrub());
+        assert_eq!(h.health().scrub_detections, 1);
+    }
+
+    #[test]
+    fn injecting_every_bank_then_repair_fails_cleanly() {
+        let dep = armed_deployment(2);
+        let h = dep.fault_harness().unwrap().clone();
+        for bank in 0..2 {
+            h.inject(&FaultSpec {
+                bank,
+                kind: FaultKind::Outage,
+                seed: bank as u64,
+            })
+            .unwrap();
+            h.scrub();
+        }
+        let e = h.current_epoch();
+        assert!(e.failed_banks.iter().all(|b| *b), "both banks must be retired");
+        // nowhere left to re-program: a typed error, not a panic
+        let err = h.repair().unwrap_err();
+        assert_eq!(err.kind(), "validate");
+        // degraded serving still answers exactly from the reference
+        let exec = dep.executor(1);
+        let xs = requests(dep.provenance.dim, 2);
+        let oracle: Vec<Vec<f64>> = xs.iter().map(|x| dep.mvm_oracle(x).unwrap()).collect();
+        let (ys, degraded) = h.serve_permuted(&dep, &exec, xs, true);
+        assert!(degraded);
+        assert_eq!(ys, oracle);
+    }
+
+    #[test]
+    fn out_of_range_bank_is_a_typed_error() {
+        let dep = armed_deployment(2);
+        let h = dep.fault_harness().unwrap();
+        let err = h
+            .inject(&FaultSpec {
+                bank: 9,
+                kind: FaultKind::Outage,
+                seed: 0,
+            })
+            .unwrap_err();
+        assert_eq!(err.kind(), "validate");
+        assert!(err.to_string().contains('9'));
+    }
+}

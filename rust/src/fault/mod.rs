@@ -1,0 +1,196 @@
+//! Device-fault injection, ABFT output verification, and self-healing
+//! repair for the serving stack.
+//!
+//! The paper's premise is that memristive crossbars are an *imperfect*
+//! substrate — limited tile sizes, quantization, device variation — yet
+//! the serving tiers below this module assume the programmed arena is
+//! flawless. GraphR (PAPERS.md) treats ReRAM reliability as a first-class
+//! design input; this subsystem makes it one here, as a full
+//! **inject → detect → quarantine → repair** lifecycle over the existing
+//! deployment machinery:
+//!
+//! 1. **Inject** ([`FaultHarness::inject`]) — a deterministic, seedable
+//!    device-fault model applied at the fleet/bank level. A [`FaultSpec`]
+//!    names a bank, a [`FaultKind`], and a seed; the harness clones the
+//!    current program image and corrupts *exactly the programs mapped to
+//!    the afflicted bank* (per the fleet's tile→bank assignment — a
+//!    deduplicated program serving tiles on several banks has a blast
+//!    radius covering all of them). Kinds: stuck-at-zero and stuck-at-one
+//!    cells at a per-cell rate, per-bank conductance drift (a
+//!    multiplicative Gaussian walk, one factor per "wear" tick), and
+//!    whole-bank outage (every mapped cell reads zero). Injection is
+//!    *silent*: it swaps in a new generation-numbered [`FaultEpoch`]
+//!    carrying the corrupted plan but does not tell the detectors.
+//! 2. **Detect** — two independent detectors, both built on state
+//!    computed at arm time from the healthy image:
+//!    - *ABFT checksum verification* (every served MVM): per-column
+//!      checksums `cs_j = Σ_i A_ij` folded once at arm time; a served
+//!      output must satisfy `Σ_r y_r ≈ Σ_j cs_j·x_j` within a
+//!      scale-relative tolerance ([`FaultOptions::tol_scale`]). One extra
+//!      dot product per request — amortized across the multi-RHS batch
+//!      path. A corrupted cell that the request actually exercises
+//!      perturbs the identity by the full fault magnitude, orders of
+//!      magnitude above float-summation noise, so the false-negative
+//!      window is the measure-zero set of inputs that cancel the fault
+//!      exactly (e.g. `x = 0`, where the corrupted answer is still
+//!      correct).
+//!    - *Scrub probe* ([`FaultHarness::scrub`], every
+//!      [`FaultOptions::scrub_every`] served requests): a fixed
+//!      pseudorandom known vector pushed through each bank's tiles and
+//!      compared bit-exactly against the healthy per-bank reference —
+//!      proactive detection for corruption that request traffic has not
+//!      exercised.
+//! 3. **Quarantine** — on any detection the harness diffs the corrupted
+//!    arena against the healthy image (bit-exact, per program), marks
+//!    every row of every tile referencing a corrupted program, and swaps
+//!    in a degraded epoch. Quarantined rows are served by the *digital
+//!    reference* (the host-CSR spill-path fallback reconstructed at arm
+//!    time), so answers stay **bit-identical to the host oracle while
+//!    degraded**; unquarantined rows still come off the (healthy part of
+//!    the) arena. Responses served under a degraded epoch carry
+//!    `"degraded": true` on both transports.
+//! 4. **Repair** ([`FaultHarness::repair`]) — re-assign the healthy
+//!    plan's tiles over the surviving banks
+//!    ([`crate::engine::Fleet::assign_excluding`] — failed banks stay
+//!    retired), recompute the per-bank probe references, and atomically
+//!    swap the healthy program image back in (an `Arc` swap,
+//!    generation-numbered like the net tier's bundle hot-swap; in-flight
+//!    batches finish on the epoch they started with). The net tier
+//!    exposes this as `{"admin":{"repair":{"id":...}}}`, so repair runs
+//!    asynchronously on one connection while others keep serving
+//!    degraded.
+//!
+//! Health counters surface in [`crate::engine::batch::FaultHealth`]
+//! (inside every [`crate::engine::ServeStats`] via
+//! [`crate::api::Deployment::stats`]) and on the wire in
+//! `{"admin":"stats"}`. The `fault-bench` chaos harness ([`bench`])
+//! injects mid-stream under concurrent TCP clients, oracle-checks every
+//! response, and ledgers detection latency, repair latency, and
+//! degraded-mode throughput into `BENCH_fault.json`.
+//!
+//! The zero-fault contract: an armed harness that never sees an injection
+//! serves **bit-identically** to the unarmed path (same executor, same
+//! buffers, same numbers) — verification only reads outputs, and the
+//! quarantine/fallback machinery only engages after a detection.
+
+pub mod bench;
+mod harness;
+
+pub use bench::{run_fault_bench, FaultBenchOptions};
+pub use harness::{FaultEpoch, FaultHarness, InjectReport};
+
+use crate::api::error::{Error, Result};
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultOptions {
+    /// run a scrub probe every N served requests (0 disables periodic
+    /// scrubbing; [`FaultHarness::scrub`] can still be called directly)
+    pub scrub_every: u64,
+    /// scale-relative checksum tolerance: a verification trips when
+    /// `|Σy − Σcs·x| > tol_scale · (Σ|cs·x| + Σ|y| + 1)`. The default
+    /// (1e-9) sits ~2 orders above worst-case f64 summation noise at this
+    /// repo's matrix sizes and ~9 below any single-cell fault magnitude.
+    pub tol_scale: f64,
+}
+
+impl Default for FaultOptions {
+    fn default() -> FaultOptions {
+        FaultOptions {
+            scrub_every: 256,
+            tol_scale: 1e-9,
+        }
+    }
+}
+
+/// One seedable device-fault mode (see [`crate::crossbar::program`] for
+/// the array-level cousins these mirror at the serving layer).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// each cell sticks to zero conductance with probability `rate`
+    StuckZero { rate: f64 },
+    /// each cell sticks to the program's max-abs level with probability
+    /// `rate` (unprogrammed cells can stick too — a shorted device)
+    StuckOne { rate: f64 },
+    /// multiplicative conductance drift: every programmed cell is scaled
+    /// by `Π (1 + sigma·ξ)` over `ticks` wear steps, `ξ ~ N(0,1)`
+    Drift { sigma: f64, ticks: u32 },
+    /// whole-bank outage: every mapped cell reads zero
+    Outage,
+}
+
+impl FaultKind {
+    /// Parse the wire/CLI form: a kind label plus one magnitude knob
+    /// (`rate` for stuck-at kinds, drift sigma for `drift`, ignored for
+    /// `outage`).
+    pub fn parse(kind: &str, rate: f64) -> Result<FaultKind> {
+        if !(0.0..=1.0).contains(&rate) && matches!(kind, "stuck0" | "stuck1") {
+            return Err(Error::Validate(format!(
+                "stuck-at rate must be in [0, 1], got {rate}"
+            )));
+        }
+        Ok(match kind {
+            "stuck0" | "stuck-zero" => FaultKind::StuckZero { rate },
+            "stuck1" | "stuck-one" => FaultKind::StuckOne { rate },
+            "drift" => FaultKind::Drift { sigma: rate, ticks: 4 },
+            "outage" => FaultKind::Outage,
+            other => {
+                return Err(Error::Validate(format!(
+                    "unknown fault kind {other:?} (stuck0|stuck1|drift|outage)"
+                )))
+            }
+        })
+    }
+
+    /// Stable ledger/wire label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::StuckZero { .. } => "stuck0",
+            FaultKind::StuckOne { .. } => "stuck1",
+            FaultKind::Drift { .. } => "drift",
+            FaultKind::Outage => "outage",
+        }
+    }
+}
+
+/// One injection order: which bank, which failure mode, which seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// afflicted bank (index into the fleet's assignment)
+    pub bank: usize,
+    pub kind: FaultKind,
+    /// fault-model seed — identical specs corrupt identical cells
+    pub seed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_kinds_parse_and_label() {
+        assert_eq!(
+            FaultKind::parse("stuck0", 0.25).unwrap(),
+            FaultKind::StuckZero { rate: 0.25 }
+        );
+        assert_eq!(
+            FaultKind::parse("stuck1", 0.1).unwrap().label(),
+            "stuck1"
+        );
+        assert_eq!(
+            FaultKind::parse("drift", 0.05).unwrap(),
+            FaultKind::Drift { sigma: 0.05, ticks: 4 }
+        );
+        assert_eq!(FaultKind::parse("outage", 0.0).unwrap(), FaultKind::Outage);
+        assert!(FaultKind::parse("melt", 0.5).is_err());
+        let err = FaultKind::parse("stuck0", 1.5).unwrap_err();
+        assert_eq!(err.kind(), "validate");
+    }
+
+    #[test]
+    fn default_options_are_sane() {
+        let o = FaultOptions::default();
+        assert_eq!(o.scrub_every, 256);
+        assert!(o.tol_scale > 0.0 && o.tol_scale < 1e-6);
+    }
+}

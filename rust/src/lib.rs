@@ -159,6 +159,32 @@
 //! BFS/SSSP answers are bit-identical to queue-based references;
 //! PageRank/GCN match dense CSR oracles within 1e-5 at identical
 //! iteration counts (`tests/integration_algo.rs`).
+//!
+//! ## Fault tolerance
+//!
+//! The [`fault`] subsystem accepts that the programmed arena is an
+//! *imperfect analog substrate* and makes the serving stack survive it:
+//! a deterministic, seedable device-fault model ([`fault::FaultKind`] —
+//! stuck-at-zero / stuck-at-one cells, per-bank conductance drift,
+//! whole-bank outage) injected at the fleet/bank level so faults corrupt
+//! exactly the programs mapped to the afflicted bank; ABFT column
+//! checksums folded at arm time and verified against every served MVM
+//! (one extra dot per request), plus a periodic known-vector scrub probe
+//! per bank; and a self-healing repair loop — detected corruption is
+//! localized by bit-diff against the healthy image, the afflicted rows
+//! are quarantined onto a digital CSR fallback (answers stay
+//! **bit-identical to the host oracle while degraded**, and responses
+//! carry `"degraded": true` on both transports), and repair re-programs
+//! the healthy image onto surviving banks behind an atomic
+//! generation-numbered epoch swap ([`fault::FaultHarness::repair`],
+//! `{"admin":{"repair":{"id"}}}` on the wire). Health counters ride
+//! along in every [`engine::ServeStats`]. When no fault has been
+//! injected, an armed harness serves bit-identically to the unarmed
+//! path. The `fault-bench` chaos harness injects mid-stream under
+//! concurrent TCP clients, oracle-checks every response (zero wrong
+//! answers may escape), and ledgers detection latency, repair latency,
+//! and degraded throughput into `BENCH_fault.json` (the CI `fault-smoke`
+//! gate).
 
 pub mod agent;
 pub mod algo;
@@ -167,6 +193,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod crossbar;
 pub mod engine;
+pub mod fault;
 pub mod gcn;
 pub mod graph;
 pub mod mapper;

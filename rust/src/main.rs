@@ -26,6 +26,9 @@
 //!   algo-bench — run PageRank/BFS/SSSP/GCN over a mapped R-MAT graph on
 //!                flat and composite plans at several worker counts,
 //!                self-checked against CSR references (BENCH_algo.json)
+//!   fault-bench — chaos harness: inject a device fault mid-stream under
+//!                concurrent clients, assert zero wrong answers escape,
+//!                ledger detection/repair latency (BENCH_fault.json)
 //!
 //! Every training command takes `--backend {native,pjrt,auto}`: `native`
 //! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
@@ -86,15 +89,24 @@ USAGE: autogmap <subcommand> [options]
              [--out bundle.json]
   serve      --bundle bundle.json [--workers N] [--batch-window N]
              [--stats-every N] [--exec sharded|scalar] [--max-line-bytes N]
+             [--fault-harness] [--scrub-every N]
   serve-net  --bundles id=path[,id=path...] [--listen 127.0.0.1:7070]
              [--workers N] [--queue-depth N] [--max-conns N]
              [--max-line-bytes N] [--exec sharded|scalar]
+             [--fault-harness] [--scrub-every N] [--read-timeout-ms N]
+             [--grace-ms N]
              [--bench] [--bench-clients N] [--bench-requests N]
              [--bench-swap id=path] [--seed N]
              [--bench-json BENCH_serve_net.json]
   algo-bench [--nodes N] [--degree N] [--grid N] [--block N] [--seed N]
              [--workers N] [--exec sharded|scalar] [--pagerank-iters N]
              [--bench-json BENCH_algo.json]
+  fault-bench [--nodes N] [--degree N] [--grid N] [--banks N] [--workers N]
+             [--queue-depth N] [--clients N] [--requests N]
+             [--fault-bank N] [--fault-kind stuck0|stuck1|drift|outage]
+             [--fault-rate F] [--fault-seed N] [--scrub-every N]
+             [--seed N] [--listen 127.0.0.1:0] [--assert-recovery]
+             [--bench-json BENCH_fault.json]
 
   global: --artifacts DIR (default: artifacts)
 
@@ -186,6 +198,24 @@ USAGE: autogmap <subcommand> [options]
   algorithm trace (iterations, residual curve, MVMs, iters/s, amortized
   nnz/s) for every plan x worker configuration.
 
+  fault-bench example (fresh checkout, no artifacts):
+    autogmap fault-bench --nodes 10000 --banks 4 --clients 2
+  builds a fault-armed R-MAT deployment behind a real socket, measures a
+  pre-fault baseline (every answer must bit-match Deployment::mvm), then
+  injects --fault-kind on --fault-bank mid-stream while --clients
+  concurrent connections keep hammering. Every response — including the
+  window between injection and detection — is checked element-wise
+  against the healthy plan and the host-CSR oracle; anything else fails
+  the run, so BENCH_fault.json's escaped_wrong_answers is 0 whenever the
+  bench exits 0. The ledger records detection latency (inject -> harness
+  degraded), repair latency ({\"admin\":{\"repair\":..}}), degraded vs
+  pre-fault vs post-repair nnz/s, and the recovery_ratio
+  (--assert-recovery fails the run below 0.9). The same fault surface is
+  live on any fault-armed server: serve / serve-net --fault-harness arm
+  per-deployment ABFT column checksums (one extra dot per request), a
+  scrub probe every --scrub-every requests, quarantine-on-detect with
+  exact digital fallback, and {\"admin\":{\"inject\"|\"repair\":..}}.
+
   map-large example (fresh checkout, no artifacts):
     autogmap map-large --nodes 100000 --workers 8
   synthesizes a 100k-node R-MAT graph, RCM-reorders it, slices the banded
@@ -223,8 +253,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "bundle",
         "batch-window", "stats-every", "listen", "bundles", "queue-depth", "max-conns",
         "max-line-bytes", "bench-clients", "bench-requests", "bench-swap", "pagerank-iters",
+        "clients", "fault-bank", "fault-kind", "fault-rate", "fault-seed", "scrub-every",
+        "read-timeout-ms", "grace-ms",
     ];
-    let flag_opts = ["verbose", "help", "bench"];
+    let flag_opts = ["verbose", "help", "bench", "fault-harness", "assert-recovery"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
         .map_err(|e| anyhow::anyhow!("{e}\n\n{USAGE}"))?;
     if args.flag("help") {
@@ -248,6 +280,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "serve-net" => cmd_serve_net(&args),
         "algo-bench" => cmd_algo_bench(&args),
+        "fault-bench" => cmd_fault_bench(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -701,7 +734,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use std::io::Write;
 
     let bundle = args.get("bundle").context("serve needs --bundle <bundle.json>")?;
-    let dep = Deployment::load(Path::new(bundle))?;
+    let mut dep = Deployment::load(Path::new(bundle))?;
+    if args.flag("fault-harness") {
+        let fopts = autogmap::fault::FaultOptions {
+            scrub_every: args
+                .get_u64("scrub-every")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(autogmap::fault::FaultOptions::default().scrub_every),
+            ..autogmap::fault::FaultOptions::default()
+        };
+        dep.arm_fault_harness(fopts);
+        eprintln!(
+            "fault harness armed: ABFT column checksums per request, scrub every {} requests",
+            fopts.scrub_every
+        );
+    }
     let sharded = match args.get_or("exec", "sharded") {
         "sharded" => true,
         "scalar" => false,
@@ -835,19 +882,32 @@ fn cmd_serve_net(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
 
+    let fault = if args.flag("fault-harness") {
+        Some(autogmap::fault::FaultOptions {
+            scrub_every: args
+                .get_u64("scrub-every")
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(autogmap::fault::FaultOptions::default().scrub_every),
+            ..autogmap::fault::FaultOptions::default()
+        })
+    } else {
+        None
+    };
     let registry = Arc::new(DeploymentRegistry::new(&RegistryOptions {
         workers,
         queue_depth,
         sharded,
+        fault,
     }));
     for (id, path) in &bundles {
         let tenant = registry.load_bundle(id, path)?;
         let entry = tenant.entry();
         eprintln!(
-            "tenant {id}: dim {}, {} nnz, queue depth {} ({})",
+            "tenant {id}: dim {}, {} nnz, queue depth {}{} ({})",
             entry.dim(),
             entry.nnz(),
             tenant.queue_depth(),
+            if entry.fault_harness().is_some() { ", fault harness armed" } else { "" },
             path.display()
         );
     }
@@ -863,18 +923,78 @@ fn cmd_serve_net(args: &Args) -> anyhow::Result<()> {
             .map_err(anyhow::Error::msg)?
             .unwrap_or(net_defaults.max_line_bytes)
             .max(1),
+        read_timeout_ms: args
+            .get_u64("read-timeout-ms")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(net_defaults.read_timeout_ms),
     };
+    let grace_ms = args.get_u64("grace-ms").map_err(anyhow::Error::msg)?.unwrap_or(5000);
     let listen = args.get_or("listen", "127.0.0.1:7070");
-    let server = NetServer::start(registry, listen, &opts)?;
+    let mut server = NetServer::start(registry.clone(), listen, &opts)?;
     eprintln!(
         "serve-net listening on {} ({} workers, {} max conns) — NDJSON per line; \
-         {{\"admin\":\"stats\"}} for stats, ctrl-c to stop",
+         {{\"admin\":\"stats\"}} for stats, SIGTERM/ctrl-c for graceful shutdown",
         server.addr(),
         workers,
         opts.max_conns
     );
-    server.join();
+    if install_shutdown_signals() {
+        // graceful path: sleep until SIGTERM/SIGINT, then stop accepting,
+        // drain in-flight requests, print a final stats line, exit 0
+        while !shutdown_requested() {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        eprintln!("serve-net: shutdown signal received, draining ({grace_ms}ms grace)");
+        let drained = server.shutdown_graceful(std::time::Duration::from_millis(grace_ms));
+        println!(
+            "{}",
+            autogmap::util::json::obj(vec![(
+                "stats",
+                registry.stats_json()
+            )])
+            .to_string()
+        );
+        eprintln!(
+            "serve-net: {} — exiting",
+            if drained { "all connections drained" } else { "grace expired with connections open" }
+        );
+    } else {
+        // no signal support on this platform: block on the accept loop
+        server.join();
+    }
     Ok(())
+}
+
+static SHUTDOWN_FLAG: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+fn shutdown_requested() -> bool {
+    SHUTDOWN_FLAG.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Route SIGTERM and SIGINT into [`SHUTDOWN_FLAG`] so `serve-net` can
+/// drain gracefully. Uses the libc `signal` entry point directly (std
+/// already links libc on unix); returns false on platforms without it,
+/// where the caller falls back to blocking forever.
+#[cfg(unix)]
+fn install_shutdown_signals() -> bool {
+    extern "C" fn on_shutdown_signal(_sig: i32) {
+        SHUTDOWN_FLAG.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_shutdown_signal as usize);
+        signal(SIGTERM, on_shutdown_signal as usize);
+    }
+    true
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_signals() -> bool {
+    false
 }
 
 fn cmd_algo_bench(args: &Args) -> anyhow::Result<()> {
@@ -923,6 +1043,79 @@ fn cmd_algo_bench(args: &Args) -> anyhow::Result<()> {
     println!(
         "all answers matched the CSR references (bfs/sssp bit-exact, pagerank <= 1e-8, \
          gcn <= 1e-5)"
+    );
+    println!("wrote {}", opts.bench_json.display());
+    Ok(())
+}
+
+/// `fault-bench`: the chaos harness ([`autogmap::fault::run_fault_bench`])
+/// — fault-armed R-MAT serving behind a real socket, mid-stream injection
+/// under concurrent clients, every response oracle-checked.
+fn cmd_fault_bench(args: &Args) -> anyhow::Result<()> {
+    use autogmap::fault::{run_fault_bench, FaultBenchOptions};
+
+    let defaults = FaultBenchOptions::default();
+    let opts = FaultBenchOptions {
+        nodes: args.get_usize("nodes").map_err(anyhow::Error::msg)?.unwrap_or(defaults.nodes),
+        degree: args.get_usize("degree").map_err(anyhow::Error::msg)?.unwrap_or(defaults.degree),
+        grid: args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(defaults.grid),
+        banks: args.get_usize("banks").map_err(anyhow::Error::msg)?.unwrap_or(defaults.banks),
+        workers: args
+            .get_usize("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.workers)
+            .max(1),
+        queue_depth: args
+            .get_usize("queue-depth")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.queue_depth)
+            .max(1),
+        clients: args
+            .get_usize("clients")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.clients),
+        requests: args
+            .get_usize("requests")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.requests)
+            .max(1),
+        fault_bank: args
+            .get_usize("fault-bank")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.fault_bank),
+        fault_kind: args.get_or("fault-kind", &defaults.fault_kind).to_string(),
+        fault_rate: args
+            .get_f64("fault-rate")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.fault_rate),
+        fault_seed: args
+            .get_u64("fault-seed")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.fault_seed),
+        scrub_every: args
+            .get_u64("scrub-every")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.scrub_every),
+        seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(defaults.seed),
+        listen: args.get_or("listen", &defaults.listen).to_string(),
+        bench_json: PathBuf::from(args.get_or("bench-json", "BENCH_fault.json")),
+        assert_recovery: args.flag("assert-recovery"),
+    };
+    let report = run_fault_bench(&opts)?;
+    println!(
+        "fault-bench: {} requests served across 3 phases, {} degraded, 0 wrong answers \
+         escaped ({} cells injected on bank {})",
+        report.served, report.degraded_responses, report.injected_cells, opts.fault_bank
+    );
+    println!(
+        "  detection {:.1}ms, repair {:.1}ms; nnz/s pre {:.3e} -> degraded {:.3e} -> \
+         post-repair {:.3e} (recovery {:.0}%)",
+        report.detection_ms,
+        report.repair_ms,
+        report.pre_fault_nnz_per_s,
+        report.degraded_nnz_per_s,
+        report.post_repair_nnz_per_s,
+        report.recovery_ratio * 100.0
     );
     println!("wrote {}", opts.bench_json.display());
     Ok(())

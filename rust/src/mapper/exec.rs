@@ -222,6 +222,7 @@ impl Servable for CompositePlan {
             mapped_nnz: self.mapped_nnz(),
             spilled_nnz: self.spilled_nnz(),
             area_cells: self.plan.cells(),
+            health: Default::default(),
         }
     }
 }

@@ -132,6 +132,7 @@ pub fn run_net_bench(opts: &NetBenchOptions) -> Result<NetBenchReport> {
         workers: opts.workers,
         queue_depth: opts.queue_depth.max(opts.clients.max(1)),
         sharded: opts.sharded,
+        fault: None,
     }));
     let mut oracles: BTreeMap<String, Arc<TenantEntry>> = BTreeMap::new();
     for (id, path) in &opts.bundles {

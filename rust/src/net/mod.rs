@@ -73,7 +73,45 @@
 //!      "algo":{"pagerank":..,"bfs":..,"sssp":..,"gcn":..,"mvms":..}},..}}
 //! → {"admin":{"reload":{"id":"graphA","bundle":"remapped.json"}}}
 //! ← {"admin":"reload","id":"graphA","generation":2,"dim":10000}
+//! → {"admin":{"inject":{"id":"graphA","bank":0,"kind":"stuck0",
+//!      "rate":0.05,"seed":7}}}
+//! ← {"admin":"inject","id":"graphA","generation":1,"cells_changed":..,
+//!      "programs":[..]}
+//! → {"admin":{"repair":{"id":"graphA"}}}
+//! ← {"admin":"repair","id":"graphA","generation":2}
 //! ```
+//!
+//! # Fault tolerance on the wire
+//!
+//! When the registry arms a fault harness ([`RegistryOptions::fault`],
+//! CLI `serve-net --fault-harness`), three surfaces change — all
+//! backwards-compatible additions:
+//!
+//! - **`degraded` responses.** A tenant answer computed while the
+//!   harness is (or just became) degraded carries `"degraded":true`
+//!   alongside `y`/`ys`/the algorithm payload. The answer is still
+//!   exact — quarantined rows are served by the digital host-CSR
+//!   reference — the flag only says the analog arena did not produce it
+//!   alone. Healthy answers omit the key entirely.
+//! - **`health` in stats.** Each fault-armed tenant's stats object gains
+//!   a `"health"` block: `armed`, `degraded`, `generation` (fault-epoch
+//!   counter, not the hot-swap generation), `faulty_cells`,
+//!   `quarantined_programs`, `quarantined_rows`, `failed_banks`,
+//!   `verify_checks`, `verify_detections`, `scrubs`, `scrub_detections`,
+//!   `repairs`, `degraded_served` ([`crate::api::dispatch::health_json`]).
+//! - **`inject` / `repair` admin verbs.** `inject` corrupts one bank of
+//!   the named tenant under the deterministic device-fault model
+//!   ([`crate::fault::FaultKind`]: `stuck0`, `stuck1`, `drift`,
+//!   `outage`; `rate` defaults to 0.05, `seed` to 0) and acks with what
+//!   it corrupted — detection is deliberately left to the serving-path
+//!   checksums and scrub probes. `repair` re-programs quarantined work
+//!   onto healthy banks and acks with the fresh fault-epoch generation.
+//!   Both are `validate` errors when the tenant has no armed harness.
+//!
+//! A connection idle past `serve-net --read-timeout-ms` is answered with
+//! a typed `timeout` error line and closed; a request that panics the
+//! execution path is answered with a typed `internal` error echoing the
+//! request id, and the connection keeps serving.
 //!
 //! `reload` is the live hot-swap: the bundle is loaded from disk outside
 //! any lock, then installed with an atomic `Arc` swap. In-flight requests
@@ -94,6 +132,9 @@
 //!   handlers ([`server`]).
 //! - [`run_net_bench`] — the self-checking concurrent load driver behind
 //!   `serve-net --bench` and the CI `net-smoke` job ([`bench`]).
+//! - [`crate::fault::run_fault_bench`] — the chaos driver behind
+//!   `fault-bench` and the CI `fault-smoke` job: mid-stream injection
+//!   under concurrent clients, every response oracle-checked.
 
 pub mod bench;
 pub mod registry;

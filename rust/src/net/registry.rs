@@ -46,6 +46,10 @@ pub struct RegistryOptions {
     pub queue_depth: usize,
     /// band-sharded multi-RHS execution (false = scalar per-request mode)
     pub sharded: bool,
+    /// arm a fault harness ([`crate::fault::FaultHarness`]) on every
+    /// loaded deployment — each generation (initial load and every
+    /// hot-swap) gets its own harness over its own healthy image
+    pub fault: Option<crate::fault::FaultOptions>,
 }
 
 impl Default for RegistryOptions {
@@ -54,6 +58,7 @@ impl Default for RegistryOptions {
             workers: 8,
             queue_depth: 32,
             sharded: true,
+            fault: None,
         }
     }
 }
@@ -105,9 +110,16 @@ impl TenantEntry {
     }
 
     /// Execute a request batch against this generation: permute in,
-    /// run on the shared pool, permute back to original node ids.
-    pub fn execute(&self, xs: Vec<Vec<f64>>, sharded: bool) -> Vec<Vec<f64>> {
-        dispatch::execute_permuted(&self.deployment, &self.executor, xs, sharded)
+    /// run on the shared pool (through the fault harness's verified path
+    /// when one is armed), permute back to original node ids. The flag
+    /// reports whether the batch was served under a degraded fault epoch.
+    pub fn execute(&self, xs: Vec<Vec<f64>>, sharded: bool) -> (Vec<Vec<f64>>, bool) {
+        dispatch::execute_verified(&self.deployment, &self.executor, xs, sharded)
+    }
+
+    /// The armed fault harness of this generation's deployment, if any.
+    pub fn fault_harness(&self) -> Option<&Arc<crate::fault::FaultHarness>> {
+        self.deployment.fault_harness()
     }
 
     /// Run a whole graph-algorithm request ([`crate::algo`]) against this
@@ -340,6 +352,9 @@ impl Tenant {
             "uptime_s".into(),
             Json::Num(self.t0.elapsed().as_secs_f64().max(1e-9)),
         );
+        if kernels.health.armed {
+            map.insert("health".into(), dispatch::health_json(&kernels.health));
+        }
         let mut algo = BTreeMap::new();
         algo.insert(
             "pagerank".into(),
@@ -360,6 +375,7 @@ pub struct DeploymentRegistry {
     pool: Arc<WorkerPool>,
     queue_depth: usize,
     sharded: bool,
+    fault: Option<crate::fault::FaultOptions>,
 }
 
 impl DeploymentRegistry {
@@ -369,6 +385,7 @@ impl DeploymentRegistry {
             pool: Arc::new(WorkerPool::new(opts.workers.max(1))),
             queue_depth: opts.queue_depth.max(1),
             sharded: opts.sharded,
+            fault: opts.fault,
         }
     }
 
@@ -389,10 +406,15 @@ impl DeploymentRegistry {
 
     fn make_entry(
         &self,
-        dep: Deployment,
+        mut dep: Deployment,
         generation: u64,
         bundle: Option<PathBuf>,
     ) -> Arc<TenantEntry> {
+        // every generation — initial load and every hot-swap — arms its
+        // own harness over its own healthy image
+        if let Some(fopts) = self.fault {
+            dep.arm_fault_harness(fopts);
+        }
         let deployment = Arc::new(dep);
         let executor = BatchExecutor::with_pool(deployment.plan_arc(), self.pool.clone());
         Arc::new(TenantEntry {
@@ -494,6 +516,7 @@ mod tests {
             workers: 2,
             queue_depth,
             sharded: true,
+            fault: None,
         })
     }
 
@@ -552,10 +575,11 @@ mod tests {
 
         // the old generation still answers (in-flight requests finish on
         // it), and both generations agree with their own oracles exactly
-        let ys_old = old.execute(vec![x.clone()], true);
+        let (ys_old, degraded) = old.execute(vec![x.clone()], true);
         assert_eq!(ys_old[0], want_old);
+        assert!(!degraded);
         let want_new = installed.deployment().mvm(&x).unwrap();
-        let ys_new = tenant.entry().execute(vec![x.clone()], false);
+        let (ys_new, _) = tenant.entry().execute(vec![x.clone()], false);
         assert_eq!(ys_new[0], want_new);
 
         // reloading an unregistered id registers it
@@ -612,8 +636,8 @@ mod tests {
         let ea = reg.get("a").unwrap().entry();
         let eb = reg.get("b").unwrap().entry();
         let x: Vec<f64> = (0..ea.dim()).map(|i| (i % 7) as f64 - 3.0).collect();
-        let ya = ea.execute(vec![x.clone()], true);
-        let yb = eb.execute(vec![x.clone()], true);
+        let (ya, _) = ea.execute(vec![x.clone()], true);
+        let (yb, _) = eb.execute(vec![x.clone()], true);
         assert_eq!(ya[0], ea.deployment().mvm(&x).unwrap());
         assert_eq!(yb[0], eb.deployment().mvm(&x).unwrap());
         reg.get("a").unwrap().record_served(1, ea.nnz());
@@ -644,5 +668,65 @@ mod tests {
                 "tenant {id}: every sparse program is either a pattern owner or a dedup hit"
             );
         }
+    }
+
+    #[test]
+    fn fault_armed_registry_serves_verified_and_reports_health() {
+        use crate::fault::{FaultKind, FaultOptions, FaultSpec};
+        let reg = DeploymentRegistry::new(&RegistryOptions {
+            workers: 2,
+            queue_depth: 8,
+            sharded: true,
+            fault: Some(FaultOptions::default()),
+        });
+        let dep = DeploymentBuilder::new(
+            Source::Matrix {
+                label: "qm7".into(),
+                matrix: synth::qm7_like(5828),
+            },
+            Strategy::FixedBlock { block: 2 },
+        )
+        .grid(2)
+        .banks(2)
+        .workers(2)
+        .build()
+        .unwrap();
+        reg.insert("g", dep, None);
+        let entry = reg.get("g").unwrap().entry();
+        let h = entry.fault_harness().expect("registry must arm the harness").clone();
+        let x: Vec<f64> = (0..entry.dim()).map(|i| (i % 5) as f64 - 2.0).collect();
+        let want = entry.deployment().mvm(&x).unwrap();
+        let oracle = entry.deployment().mvm_oracle(&x).unwrap();
+
+        // healthy: verified path is bit-identical, not degraded
+        let (ys, degraded) = entry.execute(vec![x.clone()], true);
+        assert_eq!(ys[0], want);
+        assert!(!degraded);
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("g").get("health").get("armed").as_bool(), Some(true));
+        assert_eq!(stats.get("g").get("health").get("degraded").as_bool(), Some(false));
+
+        // corrupt a bank: the next answer is detected, exact, and flagged
+        h.inject(&FaultSpec { bank: 0, kind: FaultKind::Outage, seed: 7 }).unwrap();
+        let (ys, degraded) = entry.execute(vec![x.clone()], true);
+        assert!(degraded);
+        for ((a, b), c) in ys[0].iter().zip(want.iter()).zip(oracle.iter()) {
+            assert!(a.to_bits() == b.to_bits() || a.to_bits() == c.to_bits());
+        }
+        let stats = reg.stats_json();
+        let health = stats.get("g").get("health").clone();
+        assert_eq!(health.get("degraded").as_bool(), Some(true));
+        assert!(health.get("verify_detections").as_i64().unwrap() > 0);
+        assert!(health.get("quarantined_rows").as_i64().unwrap() > 0);
+
+        // repair restores exact healthy serving
+        h.repair().unwrap();
+        let (ys, degraded) = entry.execute(vec![x], true);
+        assert_eq!(ys[0], want);
+        assert!(!degraded);
+        assert_eq!(
+            reg.stats_json().get("g").get("health").get("repairs").as_i64(),
+            Some(1)
+        );
     }
 }

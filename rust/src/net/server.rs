@@ -22,6 +22,7 @@
 use super::registry::{DeploymentRegistry, Tenant};
 use crate::api::dispatch::{self, BoundedLine};
 use crate::api::Error;
+use crate::fault::{FaultKind, FaultSpec};
 use crate::util::json::{num_arr, obj, Json};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -29,7 +30,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Front-end configuration.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +41,10 @@ pub struct NetOptions {
     /// cap on one NDJSON request line; longer lines are drained and
     /// rejected with a `parse` error (the connection stays usable)
     pub max_line_bytes: usize,
+    /// per-connection read-timeout budget in milliseconds; a connection
+    /// idle past it is answered with a typed `timeout` error line and
+    /// closed. 0 disables the timeout (connections may idle forever).
+    pub read_timeout_ms: u64,
 }
 
 impl Default for NetOptions {
@@ -47,6 +52,7 @@ impl Default for NetOptions {
         NetOptions {
             max_conns: 64,
             max_line_bytes: dispatch::DEFAULT_MAX_LINE_BYTES,
+            read_timeout_ms: 0,
         }
     }
 }
@@ -62,6 +68,12 @@ pub struct NetServer {
     registry: Arc<DeploymentRegistry>,
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    /// when set, connection handlers finish the request they are on and
+    /// close instead of reading another line — the graceful-drain half of
+    /// [`NetServer::shutdown_graceful`]
+    draining: Arc<AtomicBool>,
+    /// live connection count (shared with the accept loop's cap check)
+    conns: Arc<AtomicUsize>,
     accept: Option<JoinHandle<()>>,
 }
 
@@ -89,11 +101,15 @@ impl NetServer {
             .local_addr()
             .map_err(|e| Error::Io(format!("resolving bound address: {e}")))?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(AtomicUsize::new(0));
         let max_conns = opts.max_conns.max(1);
         let max_line = opts.max_line_bytes.max(1);
+        let read_timeout_ms = opts.read_timeout_ms;
         let reg = registry.clone();
         let stop = shutdown.clone();
+        let drain = draining.clone();
+        let live = conns.clone();
         let accept = thread::Builder::new()
             .name("net-accept".into())
             .spawn(move || {
@@ -105,7 +121,7 @@ impl NetServer {
                         Ok(s) => s,
                         Err(_) => continue,
                     };
-                    let admitted = conns
+                    let admitted = live
                         .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
                             (n < max_conns).then_some(n + 1)
                         })
@@ -122,12 +138,13 @@ impl NetServer {
                         continue;
                     }
                     let reg = reg.clone();
-                    let guard = ConnGuard(conns.clone());
+                    let guard = ConnGuard(live.clone());
+                    let drain = drain.clone();
                     // if the spawn fails the closure (and guard) drop,
                     // releasing the connection slot
                     let _ = thread::Builder::new().name("net-conn".into()).spawn(move || {
                         let _guard = guard;
-                        handle_conn(stream, &reg, max_line);
+                        handle_conn(stream, &reg, max_line, read_timeout_ms, &drain);
                     });
                 }
             })
@@ -136,6 +153,8 @@ impl NetServer {
             registry,
             addr,
             shutdown,
+            draining,
+            conns,
             accept: Some(accept),
         })
     }
@@ -169,6 +188,32 @@ impl NetServer {
             let _ = h.join();
         }
     }
+
+    /// Live connection count.
+    pub fn connections(&self) -> usize {
+        self.conns.load(Ordering::Acquire)
+    }
+
+    /// Graceful shutdown: stop accepting new connections, let every
+    /// handler finish the request it is serving (handlers close instead
+    /// of reading another line), and wait up to `grace` for the live
+    /// connection count to reach zero. No in-flight request is dropped —
+    /// a request already being executed when the drain starts still gets
+    /// its response. Returns true when fully drained, false when the
+    /// grace budget expired with connections still open (the process may
+    /// exit anyway; those connections were idle or stuck).
+    pub fn shutdown_graceful(&mut self, grace: Duration) -> bool {
+        self.draining.store(true, Ordering::Release);
+        self.stop();
+        let deadline = Instant::now() + grace;
+        while self.conns.load(Ordering::Acquire) > 0 {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
 }
 
 impl Drop for NetServer {
@@ -178,7 +223,20 @@ impl Drop for NetServer {
 }
 
 /// Per-connection loop: bounded framing, one answer per non-blank line.
-fn handle_conn(stream: TcpStream, registry: &DeploymentRegistry, max_line: usize) {
+/// With a read timeout configured, an idle connection is answered with a
+/// typed `timeout` error line and closed; when `draining` is set the
+/// handler finishes the request it is on and closes instead of reading
+/// another.
+fn handle_conn(
+    stream: TcpStream,
+    registry: &DeploymentRegistry,
+    max_line: usize,
+    read_timeout_ms: u64,
+    draining: &AtomicBool,
+) {
+    if read_timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(read_timeout_ms)));
+    }
     let read = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -186,8 +244,22 @@ fn handle_conn(stream: TcpStream, registry: &DeploymentRegistry, max_line: usize
     let mut input = BufReader::new(read);
     let mut out = BufWriter::new(stream);
     loop {
+        if draining.load(Ordering::Acquire) {
+            break;
+        }
         let step = match dispatch::read_line_bounded(&mut input, max_line) {
             Ok(s) => s,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // idle past the read-timeout budget: say why, then close
+                let err = Error::Timeout { idle_ms: read_timeout_ms };
+                let _ = respond(&mut out, &error_response(None, Json::Null, &err));
+                break;
+            }
             Err(_) => break, // transport died
         };
         let arrival = Instant::now();
@@ -239,22 +311,31 @@ fn handle_line(registry: &DeploymentRegistry, line: &str, arrival: Instant) -> J
         }
     };
     match serve_request(registry, &tenant_id, &doc, arrival) {
-        Ok((key, payload)) => obj(vec![
-            ("tenant", Json::Str(tenant_id)),
-            ("id", id),
-            (key, payload),
-        ]),
+        Ok((key, payload, degraded)) => {
+            let mut fields = vec![
+                ("tenant", Json::Str(tenant_id)),
+                ("id", id),
+                (key, payload),
+            ];
+            if degraded {
+                fields.push(("degraded", Json::Bool(true)));
+            }
+            obj(fields)
+        }
         Err(e) => error_response(Some(&tenant_id), id, &e),
     }
 }
 
 /// One tenant request end to end; counters are updated on every path.
+/// Execution runs behind [`dispatch::catch_internal`], so a worker-pool
+/// panic becomes a typed `internal` error echoing the request id (the
+/// caller attaches it) and the connection keeps serving.
 fn serve_request(
     registry: &DeploymentRegistry,
     tenant_id: &str,
     doc: &Json,
     arrival: Instant,
-) -> crate::api::Result<(&'static str, Json)> {
+) -> crate::api::Result<(&'static str, Json, bool)> {
     let tenant: Arc<Tenant> = registry.get(tenant_id)?;
     let outcome = (|| {
         // snapshot the generation first: everything below (validation,
@@ -270,10 +351,11 @@ fn serve_request(
             if let Some(ms) = deadline {
                 dispatch::check_deadline(arrival, ms)?;
             }
-            let ans = entry.run_algo(&req, registry.sharded())?;
+            let ans =
+                dispatch::catch_internal(|| entry.run_algo(&req, registry.sharded()))?;
             tenant.record_algo(ans.key, ans.mvms);
             tenant.record_served(1, ans.mvms * entry.nnz());
-            return Ok((ans.key, ans.payload));
+            return Ok((ans.key, ans.payload, ans.degraded));
         }
         let batched = doc.get("xs") != &Json::Null;
         let xs = if batched {
@@ -286,12 +368,13 @@ fn serve_request(
             dispatch::check_deadline(arrival, ms)?;
         }
         let n = xs.len() as u64;
-        let mut ys = entry.execute(xs, registry.sharded());
+        let (mut ys, degraded) =
+            dispatch::catch_internal(|| Ok(entry.execute(xs, registry.sharded())))?;
         tenant.record_served(n, entry.nnz());
         Ok(if batched {
-            ("ys", Json::Arr(ys.into_iter().map(num_arr).collect()))
+            ("ys", Json::Arr(ys.into_iter().map(num_arr).collect()), degraded)
         } else {
-            ("y", num_arr(ys.pop().expect("one request, one answer")))
+            ("y", num_arr(ys.pop().expect("one request, one answer")), degraded)
         })
     })();
     if let Err(e) = &outcome {
@@ -342,13 +425,117 @@ fn handle_admin(registry: &DeploymentRegistry, doc: &Json) -> Json {
             Err(e) => error_response(Some(&id), Json::Null, &e),
         };
     }
+    let inject = admin.get("inject");
+    if inject != &Json::Null {
+        let id = match inject.get("id").as_str() {
+            Some(s) => s.to_string(),
+            None => {
+                return error_response(
+                    None,
+                    Json::Null,
+                    &Error::Validate("inject names no \"id\"".into()),
+                )
+            }
+        };
+        return match inject_fault(registry, &id, inject) {
+            Ok(report) => obj(vec![
+                ("admin", Json::Str("inject".into())),
+                ("id", Json::Str(id)),
+                ("generation", Json::Num(report.generation as f64)),
+                ("cells_changed", Json::Num(report.cells_changed as f64)),
+                (
+                    "programs",
+                    Json::Arr(
+                        report
+                            .programs
+                            .iter()
+                            .map(|&p| Json::Num(p as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Err(e) => error_response(Some(&id), Json::Null, &e),
+        };
+    }
+    let repair = admin.get("repair");
+    if repair != &Json::Null {
+        let id = match repair.get("id").as_str() {
+            Some(s) => s.to_string(),
+            None => {
+                return error_response(
+                    None,
+                    Json::Null,
+                    &Error::Validate("repair names no \"id\"".into()),
+                )
+            }
+        };
+        return match repair_tenant(registry, &id) {
+            Ok(generation) => obj(vec![
+                ("admin", Json::Str("repair".into())),
+                ("id", Json::Str(id)),
+                ("generation", Json::Num(generation as f64)),
+            ]),
+            Err(e) => error_response(Some(&id), Json::Null, &e),
+        };
+    }
     error_response(
         None,
         Json::Null,
         &Error::Validate(
-            "unknown admin request; use \"stats\" or {\"reload\":{\"id\":..,\"bundle\":..}}".into(),
+            "unknown admin request; use \"stats\", {\"reload\":{\"id\":..,\"bundle\":..}}, \
+             {\"inject\":{\"id\":..,\"bank\":..,\"kind\":..}}, or {\"repair\":{\"id\":..}}"
+                .into(),
         ),
     )
+}
+
+/// `{"admin":{"inject":..}}`: corrupt one bank of a fault-armed tenant.
+/// The injection is silent — detection is the harness's job — so the
+/// reply only describes what was corrupted, not what was noticed.
+fn inject_fault(
+    registry: &DeploymentRegistry,
+    id: &str,
+    spec: &Json,
+) -> crate::api::Result<crate::fault::InjectReport> {
+    let tenant = registry.get(id)?;
+    let entry = tenant.entry();
+    let harness = match entry.fault_harness() {
+        Some(h) => h.clone(),
+        None => {
+            return Err(Error::Validate(
+                "no armed fault harness; start serve-net with --fault-harness".into(),
+            ))
+        }
+    };
+    let bank = match spec.get("bank").as_f64() {
+        Some(b) if b >= 0.0 => b as usize,
+        _ => return Err(Error::Validate("inject names no \"bank\"".into())),
+    };
+    let kind = spec
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| Error::Validate("inject names no \"kind\"".into()))?;
+    let rate = spec.get("rate").as_f64().unwrap_or(0.05);
+    let seed = spec.get("seed").as_f64().unwrap_or(0.0) as u64;
+    let kind = FaultKind::parse(kind, rate)?;
+    harness.inject(&FaultSpec { bank, kind, seed })
+}
+
+/// `{"admin":{"repair":..}}`: re-program a fault-armed tenant's quarantined
+/// work onto healthy banks and return the fresh epoch generation.
+fn repair_tenant(registry: &DeploymentRegistry, id: &str) -> crate::api::Result<u64> {
+    let tenant = registry.get(id)?;
+    let entry = tenant.entry();
+    let harness = match entry.fault_harness() {
+        Some(h) => h.clone(),
+        None => {
+            return Err(Error::Validate(
+                "no armed fault harness; start serve-net with --fault-harness".into(),
+            ))
+        }
+    };
+    harness.repair()?;
+    Ok(harness.generation())
 }
 
 /// The shared error line ([`dispatch::error_line`]) with the tenant echo
@@ -369,10 +556,18 @@ mod tests {
     use crate::net::RegistryOptions;
 
     fn registry_with_tenant(queue_depth: usize) -> DeploymentRegistry {
+        registry_with_options(queue_depth, None)
+    }
+
+    fn registry_with_options(
+        queue_depth: usize,
+        fault: Option<crate::fault::FaultOptions>,
+    ) -> DeploymentRegistry {
         let reg = DeploymentRegistry::new(&RegistryOptions {
             workers: 2,
             queue_depth,
             sharded: true,
+            fault,
         });
         let dep = DeploymentBuilder::new(
             Source::Matrix {
@@ -531,5 +726,131 @@ mod tests {
         let stats = reg.get("g").unwrap().stats_json();
         assert_eq!(stats.get("served").as_i64(), Some(3));
         assert_eq!(stats.get("batches").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn admin_inject_without_harness_is_a_validate_error() {
+        let reg = registry_with_tenant(4);
+        let resp = handle_line(
+            &reg,
+            r#"{"admin":{"inject":{"id":"g","bank":0,"kind":"outage"}}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+        let msg = resp.get("error").get("message").as_str().unwrap();
+        assert!(msg.contains("--fault-harness"), "{msg}");
+        // same for repair: both admin verbs require an armed harness
+        let resp = handle_line(&reg, r#"{"admin":{"repair":{"id":"g"}}}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+    }
+
+    #[test]
+    fn panic_inside_execution_is_a_typed_internal_error() {
+        let reg =
+            registry_with_options(4, Some(crate::fault::FaultOptions::default()));
+        let entry = reg.get("g").unwrap().entry();
+        let dim = entry.dim();
+        entry.fault_harness().unwrap().poison_next_request();
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(41.0)),
+            ("x", num_arr(vec![1.0; dim])),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("internal"));
+        assert_eq!(resp.get("id").as_i64(), Some(41), "request id must echo back");
+        // the poison is one-shot: the connection (and pool) keep serving
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(42.0)),
+            ("x", num_arr(vec![1.0; dim])),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("id").as_i64(), Some(42));
+        assert!(resp.get("y").as_arr().is_some(), "next request must succeed");
+    }
+
+    #[test]
+    fn inject_detect_repair_over_the_admin_dialect() {
+        let reg =
+            registry_with_options(4, Some(crate::fault::FaultOptions::default()));
+        let entry = reg.get("g").unwrap().entry();
+        let dim = entry.dim();
+        let x: Vec<f64> = (0..dim).map(|i| (i % 13) as f64 * 0.25 - 1.5).collect();
+        let healthy = entry.deployment().mvm(&x).unwrap();
+        let oracle = entry.deployment().mvm_oracle(&x).unwrap();
+
+        // a healthy fault-armed tenant serves bit-identically, undegraded
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(1.0)),
+            ("x", num_arr(x.clone())),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("degraded"), &Json::Null);
+        let got: Vec<f64> =
+            resp.get("y").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, healthy);
+
+        // corrupt a whole bank through the admin surface
+        let resp = handle_line(
+            &reg,
+            r#"{"admin":{"inject":{"id":"g","bank":0,"kind":"outage","seed":9}}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("admin").as_str(), Some("inject"));
+        assert!(resp.get("cells_changed").as_i64().unwrap() > 0);
+        assert!(!resp.get("programs").as_arr().unwrap().is_empty());
+
+        // the next request detects, degrades, and every element is either
+        // the healthy-plan bits or the host-CSR oracle bits — never garbage
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(2.0)),
+            ("x", num_arr(x.clone())),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("degraded").as_bool(), Some(true));
+        let got: Vec<f64> =
+            resp.get("y").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        for (i, &g) in got.iter().enumerate() {
+            assert!(
+                g == healthy[i] || g == oracle[i],
+                "row {i}: {g} is neither plan {} nor oracle {}",
+                healthy[i],
+                oracle[i]
+            );
+        }
+
+        // out-of-range banks are typed errors, not crashes
+        let resp = handle_line(
+            &reg,
+            r#"{"admin":{"inject":{"id":"g","bank":999,"kind":"outage"}}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+
+        // repair re-programs onto healthy banks and restores bit-identity
+        let resp = handle_line(&reg, r#"{"admin":{"repair":{"id":"g"}}}"#, now());
+        assert_eq!(resp.get("admin").as_str(), Some("repair"));
+        assert!(resp.get("generation").as_i64().unwrap() > 0);
+        let req = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(3.0)),
+            ("x", num_arr(x.clone())),
+        ]);
+        let resp = handle_line(&reg, &req.to_string(), now());
+        assert_eq!(resp.get("degraded"), &Json::Null);
+        let got: Vec<f64> =
+            resp.get("y").as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(got, healthy, "repaired tenant must serve healthy bits again");
+
+        // stats now carry the health block with the full episode recorded
+        let stats = handle_line(&reg, r#"{"admin":"stats"}"#, now());
+        let health = stats.get("stats").get("g").get("health");
+        assert_eq!(health.get("armed").as_bool(), Some(true));
+        assert_eq!(health.get("degraded").as_bool(), Some(false));
+        assert!(health.get("verify_detections").as_i64().unwrap() >= 1);
+        assert_eq!(health.get("repairs").as_i64(), Some(1));
     }
 }

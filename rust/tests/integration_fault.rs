@@ -1,0 +1,259 @@
+//! Integration tests for the fault subsystem through the public API
+//! facade: the zero-fault bit-identity contract (an armed harness that
+//! never sees an injection serves exactly the unarmed path's bits — flat
+//! and composite plans, 1/2/8 workers, both executor modes), and the
+//! serving guarantee under stuck-at faults (every checksum-verified
+//! answer is bit-identical to the healthy plan or to the host-CSR
+//! oracle — wrong answers never escape, detection quarantines every
+//! corrupted program, repair restores healthy serving).
+
+use autogmap::api::dispatch::execute_verified;
+use autogmap::api::{Deployment, DeploymentBuilder, Source, Strategy};
+use autogmap::fault::{FaultKind, FaultOptions, FaultSpec};
+use autogmap::graph::synth;
+use autogmap::util::propcheck::check;
+use autogmap::util::rng::Pcg64;
+
+/// The paper's native flat path: one direct controller inference over the
+/// QM7-like grid (23 nodes at cell side 2 fit qm7_dyn4's window).
+fn flat_dep(banks: usize) -> Deployment {
+    DeploymentBuilder::new(
+        Source::Matrix {
+            label: "qm7".into(),
+            matrix: synth::qm7_like(5828),
+        },
+        Strategy::Direct {
+            controller: "qm7_dyn4".into(),
+        },
+    )
+    .grid(2)
+    .rounds(1)
+    .banks(banks)
+    .build()
+    .unwrap()
+}
+
+/// The composite path: a 200-node R-MAT graph under the fixed-block
+/// baseline (diagonal blocks on the arena, off-block nnz in the digital
+/// spill).
+fn composite_dep(seed: u64, banks: usize) -> Deployment {
+    DeploymentBuilder::new(
+        Source::Matrix {
+            label: "rmat200".into(),
+            matrix: synth::rmat_like(200, 800, seed),
+        },
+        Strategy::FixedBlock { block: 2 },
+    )
+    .grid(8)
+    .banks(banks)
+    .build()
+    .unwrap()
+}
+
+fn batch(rng: &mut Pcg64, dim: usize, n: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect())
+        .collect()
+}
+
+/// The zero-fault contract as a property: arming the harness (without any
+/// injection) changes no served bit relative to the unarmed path or to
+/// `Deployment::mvm`, on flat and composite plans, at 1/2/8 workers, in
+/// both executor modes — and no response is flagged degraded.
+#[test]
+fn zero_fault_harness_serves_bit_identically_to_the_unarmed_path() {
+    check("fault_zero_fault_bit_identity", 2, |rng| {
+        let sharded = rng.below(2) == 0;
+        for flat in [true, false] {
+            let mut dep = if flat {
+                flat_dep(4)
+            } else {
+                composite_dep(7 + rng.below(3), 4)
+            };
+            let dim = dep.provenance.dim;
+            let mut vrng = Pcg64::new(rng.next_u64(), 0x2e);
+            let xs = batch(&mut vrng, dim, 5);
+            let want: Vec<Vec<f64>> = xs
+                .iter()
+                .map(|x| dep.mvm(x).map_err(|e| e.to_string()))
+                .collect::<Result<_, _>>()?;
+
+            // the unarmed dispatch path first, then the armed one: both
+            // must reproduce Deployment::mvm bit-for-bit
+            for armed in [false, true] {
+                if armed {
+                    dep.arm_fault_harness(FaultOptions {
+                        scrub_every: 2,
+                        ..FaultOptions::default()
+                    });
+                }
+                for &workers in &[1usize, 2, 8] {
+                    let exec = dep.executor(workers);
+                    let (got, degraded) = execute_verified(&dep, &exec, xs.clone(), sharded);
+                    if degraded {
+                        return Err(format!(
+                            "flat={flat} armed={armed} workers={workers}: \
+                             zero-fault serving flagged degraded"
+                        ));
+                    }
+                    if got != want {
+                        return Err(format!(
+                            "flat={flat} armed={armed} workers={workers} sharded={sharded}: \
+                             answers are not bit-identical to Deployment::mvm"
+                        ));
+                    }
+                }
+            }
+
+            // the armed path verified and scrubbed but detected nothing
+            let h = dep.fault_harness().expect("armed above").clone();
+            let health = h.health();
+            if !health.armed || health.degraded {
+                return Err(format!("flat={flat}: bad health state {health:?}"));
+            }
+            if health.verify_checks < 15 {
+                return Err(format!(
+                    "flat={flat}: expected >=15 ABFT checks, saw {}",
+                    health.verify_checks
+                ));
+            }
+            if health.scrubs == 0 {
+                return Err(format!("flat={flat}: periodic scrub never ran"));
+            }
+            if health.verify_detections != 0 || health.scrub_detections != 0 {
+                return Err(format!(
+                    "flat={flat}: phantom detection on a healthy arena ({health:?})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Under stuck-at faults, every served element must bit-match either the
+/// healthy plan or the host-CSR oracle — a wrong answer escaping the
+/// checksum is a test failure. Detection quarantines 100% of the injected
+/// programs, and repair restores undegraded bit-exact serving. Runs the
+/// whole lifecycle twice: stuck-at-zero on a flat plan, stuck-at-one on a
+/// composite.
+#[test]
+fn stuck_at_faults_never_escape_a_wrong_answer() {
+    let cases: [(&str, Deployment, FaultKind); 2] = [
+        (
+            "flat/stuck0",
+            flat_dep(2),
+            FaultKind::StuckZero { rate: 0.5 },
+        ),
+        (
+            "composite/stuck1",
+            composite_dep(11, 4),
+            FaultKind::StuckOne { rate: 0.5 },
+        ),
+    ];
+    for (tag, mut dep, kind) in cases {
+        let h = dep.arm_fault_harness(FaultOptions {
+            scrub_every: 0, // this test exercises the per-request ABFT path
+            ..FaultOptions::default()
+        });
+        let exec = dep.executor(2);
+        let dim = dep.provenance.dim;
+        let mut rng = Pcg64::new(0xfa57, 0xb0);
+
+        let report = h
+            .inject(&FaultSpec { bank: 0, kind, seed: 9 })
+            .unwrap_or_else(|e| panic!("{tag}: inject failed: {e}"));
+        assert!(report.cells_changed > 0, "{tag}: injection corrupted nothing");
+        assert!(!report.programs.is_empty(), "{tag}: no program on bank 0");
+
+        let mut degraded_seen = 0u32;
+        for r in 0..20 {
+            let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let want = dep.mvm(&x).unwrap();
+            let oracle = dep.mvm_oracle(&x).unwrap();
+            let (ys, degraded) = execute_verified(&dep, &exec, vec![x], true);
+            if degraded {
+                degraded_seen += 1;
+            }
+            for (i, g) in ys[0].iter().enumerate() {
+                assert!(
+                    g.to_bits() == want[i].to_bits() || g.to_bits() == oracle[i].to_bits(),
+                    "{tag}: req {r} row {i}: ESCAPED WRONG ANSWER \
+                     (got {g}, plan {}, oracle {})",
+                    want[i],
+                    oracle[i]
+                );
+            }
+        }
+        assert!(degraded_seen > 0, "{tag}: corruption was never detected");
+
+        let health = h.health();
+        assert!(health.degraded, "{tag}: detection did not degrade the epoch");
+        assert!(health.verify_detections >= 1, "{tag}: no ABFT detection counted");
+        assert!(health.quarantined_rows > 0, "{tag}: nothing quarantined");
+        let epoch = h.current_epoch();
+        for p in &report.programs {
+            assert!(
+                epoch.quarantined_programs.contains(p),
+                "{tag}: injected program {p} escaped quarantine"
+            );
+        }
+
+        // repair: healthy bits come back, the degraded flag goes away
+        let generation = h.repair().unwrap_or_else(|e| panic!("{tag}: repair failed: {e}"));
+        assert!(generation >= 2, "{tag}: repair did not bump the fault epoch");
+        let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let want = dep.mvm(&x).unwrap();
+        let (ys, degraded) = execute_verified(&dep, &exec, vec![x], true);
+        assert!(!degraded, "{tag}: still degraded after repair");
+        assert_eq!(ys[0], want, "{tag}: post-repair serving is not bit-exact");
+        let health = h.health();
+        assert!(!health.degraded, "{tag}");
+        assert_eq!(health.repairs, 1, "{tag}");
+        assert_eq!(health.quarantined_rows, 0, "{tag}");
+    }
+}
+
+/// The scrub probe is the proactive detector: corruption that request
+/// traffic has not touched yet is found by the periodic known-vector
+/// probe, quarantined, and the very next request already serves exactly.
+#[test]
+fn scrub_probe_detects_silent_corruption_without_traffic() {
+    let mut dep = composite_dep(13, 3);
+    let h = dep.arm_fault_harness(FaultOptions::default());
+    let exec = dep.executor(1);
+    let dim = dep.provenance.dim;
+
+    let report = h
+        .inject(&FaultSpec {
+            bank: 1,
+            kind: FaultKind::Outage,
+            seed: 0,
+        })
+        .unwrap();
+    assert!(report.cells_changed > 0);
+    assert!(!h.health().degraded, "injection must be silent until a detector runs");
+
+    assert!(h.scrub(), "scrub missed a whole-bank outage");
+    let health = h.health();
+    assert!(health.degraded);
+    assert!(health.scrub_detections >= 1);
+    let epoch = h.current_epoch();
+    for p in &report.programs {
+        assert!(epoch.quarantined_programs.contains(p), "program {p} escaped the scrub");
+    }
+
+    // with the quarantine in place, a request through the degraded epoch
+    // is answered plan-or-oracle exactly
+    let mut rng = Pcg64::new(0x5c4b, 2);
+    let x: Vec<f64> = (0..dim).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let want = dep.mvm(&x).unwrap();
+    let oracle = dep.mvm_oracle(&x).unwrap();
+    let (ys, degraded) = execute_verified(&dep, &exec, vec![x], false);
+    assert!(degraded, "degraded epoch must flag its responses");
+    for (i, g) in ys[0].iter().enumerate() {
+        assert!(
+            g.to_bits() == want[i].to_bits() || g.to_bits() == oracle[i].to_bits(),
+            "row {i}: wrong answer under quarantine"
+        );
+    }
+}

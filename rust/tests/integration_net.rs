@@ -46,6 +46,7 @@ fn registry(workers: usize, queue_depth: usize, sharded: bool) -> Arc<Deployment
         workers,
         queue_depth,
         sharded,
+        fault: None,
     }))
 }
 
@@ -238,7 +239,7 @@ fn hot_swap_under_load_drops_and_mismatches_nothing() {
     assert_eq!(got, new_oracle.mvm(&x).unwrap(), "post-swap requests serve the new plan");
     // in-flight-era entries stayed alive and still answer on the old plan
     assert_eq!(
-        old_entry.execute(vec![x.clone()], true)[0],
+        old_entry.execute(vec![x.clone()], true).0[0],
         old_entry.deployment().mvm(&x).unwrap()
     );
     let stats = conn.roundtrip(r#"{"admin":"stats"}"#).unwrap();
@@ -309,6 +310,7 @@ fn wire_robustness_and_error_parity_with_stdin_loop() {
     let opts = NetOptions {
         max_conns: 8,
         max_line_bytes: 2048,
+        ..NetOptions::default()
     };
     let server = NetServer::start(reg.clone(), "127.0.0.1:0", &opts).unwrap();
     let mut conn = Client::connect(server.addr()).unwrap();
@@ -522,6 +524,7 @@ fn connection_cap_rejects_with_typed_busy() {
     let opts = NetOptions {
         max_conns: 1,
         max_line_bytes: 1 << 20,
+        ..NetOptions::default()
     };
     let server = NetServer::start(reg.clone(), "127.0.0.1:0", &opts).unwrap();
 
@@ -545,4 +548,76 @@ fn connection_cap_rejects_with_typed_busy() {
 
     // the admitted connection is unaffected
     assert!(parse_y(&first.roundtrip(&req_line("g", 2, &x)).unwrap()).is_ok());
+}
+
+/// A connection idle past `--read-timeout-ms` is answered with a typed
+/// `timeout` error line and closed — never a silent drop. An active
+/// connection is unaffected.
+#[test]
+fn idle_connections_time_out_with_a_typed_error_line() {
+    let reg = registry(1, 4, true);
+    reg.insert("g", small_dep("g", 31, 1), None);
+    let dim = reg.get("g").unwrap().entry().dim();
+    let opts = NetOptions {
+        read_timeout_ms: 150,
+        ..NetOptions::default()
+    };
+    let server = NetServer::start(reg.clone(), "127.0.0.1:0", &opts).unwrap();
+    let mut conn = Client::connect(server.addr()).unwrap();
+
+    // active traffic inside the budget serves normally
+    let x = vec![0.5f64; dim];
+    assert!(parse_y(&conn.roundtrip(&req_line("g", 1, &x)).unwrap()).is_ok());
+
+    // then go idle: the server says why before closing
+    let line = conn.recv().unwrap().expect("timeout line, not a silent drop");
+    assert_eq!(line.get("error").get("kind").as_str(), Some("timeout"));
+    let msg = line.get("error").get("message").as_str().unwrap();
+    assert!(msg.contains("150"), "timeout message names the budget: {msg}");
+    assert!(conn.recv().unwrap().is_none(), "timed-out connection closes cleanly");
+}
+
+/// Graceful shutdown answers the request it is serving before closing:
+/// a client whose batch is in flight when the drain starts still gets its
+/// full, bit-exact response, and the server reports a complete drain.
+#[test]
+fn graceful_shutdown_answers_in_flight_requests_before_closing() {
+    let reg = registry(2, 8, true);
+    reg.insert("g", small_dep("g", 37, 1), None);
+    let entry = reg.get("g").unwrap().entry();
+    let dim = entry.dim();
+    let mut server =
+        NetServer::start(reg.clone(), "127.0.0.1:0", &NetOptions::default()).unwrap();
+    let addr = server.addr();
+
+    let xs: Vec<Vec<f64>> = (0..64).map(|s| vec![(s as f64 * 0.1).sin(); dim]).collect();
+    let want: Vec<Vec<f64>> =
+        xs.iter().map(|x| entry.deployment().mvm(x).unwrap()).collect();
+    let req = obj(vec![
+        ("tenant", Json::Str("g".into())),
+        ("id", Json::Num(1.0)),
+        ("xs", Json::Arr(xs.iter().cloned().map(num_arr).collect())),
+    ])
+    .to_string();
+    let h = std::thread::spawn(move || -> Result<Json, String> {
+        let mut conn = Client::connect(addr)?;
+        conn.roundtrip(&req)
+    });
+    // let the batch get in flight, then drain while it (possibly still)
+    // executes — the handler must finish and answer before closing
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let drained = server.shutdown_graceful(std::time::Duration::from_secs(10));
+    let resp = h
+        .join()
+        .expect("client panicked")
+        .expect("in-flight request was dropped by the drain");
+    let ys = resp.get("ys").as_arr().unwrap();
+    assert_eq!(ys.len(), want.len(), "partial response escaped the drain");
+    for (yi, wi) in ys.iter().zip(&want) {
+        let got: Vec<f64> =
+            yi.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(&got, wi, "drained answer must stay bit-exact");
+    }
+    assert!(drained, "drain must complete within the grace budget");
+    assert_eq!(server.connections(), 0, "no handler left after the drain");
 }
