@@ -541,7 +541,7 @@ impl DeploymentBuilder {
 }
 
 /// Fill geometry implied by a controller's fill head.
-fn fill_rule_for(fill_classes: usize) -> FillRule {
+pub(crate) fn fill_rule_for(fill_classes: usize) -> FillRule {
     match fill_classes {
         0 => FillRule::None,
         c => FillRule::Dynamic { grades: c.max(2) },
@@ -567,6 +567,34 @@ impl Deployment {
     /// The compiled plan this deployment serves.
     pub fn plan(&self) -> &DeployedPlan {
         &self.plan
+    }
+
+    /// The same deployment serving a replacement plan of identical
+    /// dimension: the reordering permutation, worker default, and
+    /// provenance (nnz refreshed) carry over, the fleet is re-assigned for
+    /// the new tile schedule, and any armed fault harness is dropped (it
+    /// indexes the old plan's arena). This is the remap-swap primitive of
+    /// [`crate::delta`].
+    pub fn with_swapped_plan(&self, plan: DeployedPlan) -> Result<Deployment> {
+        if plan.dim() != self.plan.dim() {
+            return Err(Error::Validate(format!(
+                "replacement plan serves dimension {}, deployment expects {}",
+                plan.dim(),
+                self.plan.dim()
+            )));
+        }
+        let fleet = Fleet::assign(plan.exec_plan(), self.fleet.banks.max(1), self.fleet.policy)
+            .map_err(|e| Error::Validate(format!("fleet assignment: {e:#}")))?;
+        let mut provenance = self.provenance.clone();
+        provenance.nnz = Servable::nnz(&plan);
+        Ok(Deployment {
+            provenance,
+            plan: Arc::new(plan),
+            fleet,
+            perm: self.perm.clone(),
+            workers: self.workers,
+            fault: None,
+        })
     }
 
     /// Shared handle to the plan (what executors hold).

@@ -222,6 +222,18 @@ pub fn health_json(h: &crate::engine::FaultHealth) -> Json {
     ])
 }
 
+/// The shared `"delta"` stats object both stats surfaces (the stdin
+/// stats line and the TCP tier's `{"admin":"stats"}`) embed once a
+/// dynamic-graph delta engine is attached.
+pub fn delta_stats_json(eng: &crate::delta::DeltaEngine) -> Json {
+    obj(vec![
+        ("updates", Json::Num(eng.updates_total() as f64)),
+        ("pending", Json::Num(eng.pending() as f64)),
+        ("remaps", Json::Num(eng.remaps_total() as f64)),
+        ("generation", Json::Num(eng.generation() as f64)),
+    ])
+}
+
 /// The shared machine-readable error object: `{"kind": ..., "message":
 /// ...}` with the stable [`Error::kind`] label. Every transport embeds
 /// exactly this object under its `"error"` key, so error handling written
@@ -261,6 +273,64 @@ pub fn parse_deadline(doc: &Json) -> Result<Option<f64>> {
             Ok(Some(ms))
         }
     }
+}
+
+/// A parsed dynamic-graph update request: `{"update":{"edges":[[r,c,w],
+/// ...]}}`. Node ids are original (pre-reordering); `w == 0` deletes the
+/// edge. Both transports hand the parsed batch to
+/// [`crate::delta::DeltaEngine::apply`].
+#[derive(Clone, Debug)]
+pub struct UpdateRequest {
+    pub edges: Vec<crate::delta::EdgeUpdate>,
+}
+
+/// Recognize and validate an update request. `Ok(None)` means the
+/// document carries no `"update"` key; a present-but-malformed body is a
+/// typed [`Error::Validate`] naming the offending edge. Range checks
+/// against the live graph happen in the delta engine, which also knows
+/// `dim` — this parser only enforces wire shape and finiteness.
+pub fn parse_update(doc: &Json) -> Result<Option<UpdateRequest>> {
+    let body = doc.get("update");
+    if body == &Json::Null {
+        return Ok(None);
+    }
+    if body.as_obj().is_none() {
+        return Err(Error::Validate("update request body must be an object".into()));
+    }
+    let arr = body
+        .get("edges")
+        .as_arr()
+        .ok_or_else(|| Error::Validate("update.edges must be an array of [row, col, weight] triples".into()))?;
+    if arr.is_empty() {
+        return Err(Error::Validate("update.edges is empty".into()));
+    }
+    let mut edges = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let triple = e.as_arr().filter(|t| t.len() == 3).ok_or_else(|| {
+            Error::Validate(format!("update.edges[{i}] must be a [row, col, weight] triple"))
+        })?;
+        let row = triple[0].as_usize().ok_or_else(|| {
+            Error::Validate(format!("update.edges[{i}] row must be a non-negative integer"))
+        })?;
+        let col = triple[1].as_usize().ok_or_else(|| {
+            Error::Validate(format!("update.edges[{i}] col must be a non-negative integer"))
+        })?;
+        let weight = triple[2].as_f64().filter(|w| w.is_finite()).ok_or_else(|| {
+            Error::Validate(format!("update.edges[{i}] weight must be a finite number"))
+        })?;
+        edges.push(crate::delta::EdgeUpdate { row, col, weight });
+    }
+    Ok(Some(UpdateRequest { edges }))
+}
+
+/// The shared update-acknowledgement object both transports answer with
+/// under their `"update"` key.
+pub fn update_ack_obj(ack: &crate::delta::UpdateAck) -> Json {
+    obj(vec![
+        ("applied", Json::Num(ack.applied as f64)),
+        ("pending", Json::Num(ack.pending as f64)),
+        ("generation", Json::Num(ack.generation as f64)),
+    ])
 }
 
 /// A parsed graph-algorithm request — the four whole-algorithm kinds
@@ -634,6 +704,35 @@ mod tests {
         for (line, needle) in cases {
             let doc = Json::parse(line).unwrap();
             let err = parse_algo(&doc, 2).unwrap_err();
+            assert_eq!(err.kind(), "validate", "{line}");
+            assert!(err.to_string().contains(needle), "{line}: {err}");
+        }
+    }
+
+    #[test]
+    fn parse_update_validates_edge_triples() {
+        let doc = Json::parse(r#"{"x":[1,2]}"#).unwrap();
+        assert!(parse_update(&doc).unwrap().is_none());
+
+        let doc = Json::parse(r#"{"update":{"edges":[[0,5,1.5],[3,3,0]]}}"#).unwrap();
+        let req = parse_update(&doc).unwrap().unwrap();
+        assert_eq!(req.edges.len(), 2);
+        assert_eq!(req.edges[0].row, 0);
+        assert_eq!(req.edges[0].col, 5);
+        assert_eq!(req.edges[0].weight, 1.5);
+        assert_eq!(req.edges[1].weight, 0.0, "zero weight = delete");
+
+        let cases = [
+            (r#"{"update":7}"#, "must be an object"),
+            (r#"{"update":{}}"#, "update.edges"),
+            (r#"{"update":{"edges":[]}}"#, "empty"),
+            (r#"{"update":{"edges":[[1,2]]}}"#, "update.edges[0]"),
+            (r#"{"update":{"edges":[[0,1,2],[-1,0,1]]}}"#, "update.edges[1]"),
+            (r#"{"update":{"edges":[[0,"a",1]]}}"#, "update.edges[0] col"),
+        ];
+        for (line, needle) in cases {
+            let doc = Json::parse(line).unwrap();
+            let err = parse_update(&doc).unwrap_err();
             assert_eq!(err.kind(), "validate", "{line}");
             assert!(err.to_string().contains(needle), "{line}: {err}");
         }

@@ -12,6 +12,17 @@
 //!   ([`crate::algo`]) answered as `{"id": ..., "<kind>": {..., "trace":
 //!   {...}}}`; parameters and payloads are documented in
 //!   [`crate::api::dispatch::parse_algo`] and mirrored by the TCP tier.
+//! - `{"id": ..., "update": {"edges": [[r, c, w], ...]}}` — dynamic-graph
+//!   edge mutations ([`crate::delta`]; `w == 0` deletes). The first update
+//!   attaches a [`crate::delta::DeltaEngine`] over the deployment; from
+//!   then on every MVM answer is `y = (A ± Δ)x` over the mutated graph,
+//!   and with [`ServeOptions::remap_after`] > 0 the engine folds the
+//!   accumulated delta into a freshly mapped plan every N updates. The
+//!   response is `{"id": ..., "update": {"applied", "pending",
+//!   "generation"}}`. Two delta-mode caveats: MVMs bypass the ABFT fault
+//!   harness (the overlay path has no checksum column), and
+//!   whole-algorithm runs execute on the last *folded* plan — edge
+//!   updates still pending the next remap are not visible to them.
 //! - `{"flush": true}` — force the coalescing window to dispatch now.
 //!
 //! Single requests coalesce into executor batches of up to
@@ -56,9 +67,12 @@ use super::deploy::Deployment;
 use super::dispatch::{self, BoundedLine};
 use super::error::{Error, Result};
 use crate::algo::AlgoCounters;
-use crate::engine::Servable;
+use crate::delta::DeltaEngine;
+use crate::engine::{BatchExecutor, Servable};
 use crate::util::json::{num_arr, obj, Json};
+use crate::util::pool::WorkerPool;
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Serve-loop configuration.
@@ -75,6 +89,10 @@ pub struct ServeOptions {
     /// cap on one NDJSON request line; longer lines are drained and
     /// rejected with a `parse` error
     pub max_line_bytes: usize,
+    /// auto-fold the dynamic-graph delta into a fresh plan after this
+    /// many accumulated edge updates (0 = only on explicit request; only
+    /// meaningful once an `update` request attached the delta engine)
+    pub remap_after: usize,
 }
 
 impl Default for ServeOptions {
@@ -85,6 +103,7 @@ impl Default for ServeOptions {
             stats_every: 100,
             sharded: true,
             max_line_bytes: dispatch::DEFAULT_MAX_LINE_BYTES,
+            remap_after: 0,
         }
     }
 }
@@ -129,30 +148,41 @@ pub fn serve_loop<R: BufRead, W: Write>(
         n => n as u64,
     };
     let t0 = Instant::now();
+    // attached by the first `update` request; from then on MVMs serve the
+    // mutated graph exactly (plan + overlay)
+    let mut delta: Option<Arc<DeltaEngine>> = None;
 
-    let emit_stats =
-        |out: &mut W, served: u64, errors: u64, batches: u64, algo: &AlgoCounters| -> Result<()> {
-            let wall = t0.elapsed().as_secs_f64();
-            let rps = served as f64 / wall.max(1e-9);
-            let mut fields = vec![
-                ("served", Json::Num(served as f64)),
-                ("errors", Json::Num(errors as f64)),
-                ("batches", Json::Num(batches as f64)),
-                ("rps", Json::Num(rps)),
-                ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
-                ("shards", Json::Num(shards as f64)),
-                ("workers", Json::Num(exec.workers() as f64)),
-                ("wall_s", Json::Num(wall)),
-                ("algo", algo.to_json()),
-            ];
-            if let Some(h) = dep.fault_harness() {
-                fields.push(("health", dispatch::health_json(&h.health())));
-            }
-            let line = obj(vec![("stats", obj(fields))]);
-            writeln!(out, "{}", line.to_string())?;
-            out.flush()?;
-            Ok(())
-        };
+    let emit_stats = |out: &mut W,
+                      served: u64,
+                      errors: u64,
+                      batches: u64,
+                      algo: &AlgoCounters,
+                      delta: Option<&DeltaEngine>|
+     -> Result<()> {
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = served as f64 / wall.max(1e-9);
+        let mut fields = vec![
+            ("served", Json::Num(served as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("batches", Json::Num(batches as f64)),
+            ("rps", Json::Num(rps)),
+            ("nnz_per_s", Json::Num(rps * plan_nnz as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("workers", Json::Num(exec.workers() as f64)),
+            ("wall_s", Json::Num(wall)),
+            ("algo", algo.to_json()),
+        ];
+        if let Some(h) = dep.fault_harness() {
+            fields.push(("health", dispatch::health_json(&h.health())));
+        }
+        if let Some(eng) = delta {
+            fields.push(("delta", dispatch::delta_stats_json(eng)));
+        }
+        let line = obj(vec![("stats", obj(fields))]);
+        writeln!(out, "{}", line.to_string())?;
+        out.flush()?;
+        Ok(())
+    };
 
     loop {
         let line = match read_framed(&mut input, max_line)? {
@@ -185,6 +215,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 dep,
                 &exec,
                 opts.sharded,
+                delta.as_deref(),
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
@@ -192,6 +223,76 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut batches,
                 out,
             )?;
+        } else if let Some(req) = match dispatch::parse_update(&doc) {
+            Ok(r) => r,
+            Err(e) => {
+                errors += 1;
+                write_error(out, id, &e)?;
+                continue;
+            }
+        } {
+            // dispatch pending singles first: their answers reflect the
+            // graph as it stood when they were accepted
+            flush_pending(
+                dep,
+                &exec,
+                opts.sharded,
+                delta.as_deref(),
+                &mut pending_ids,
+                &mut pending_xs,
+                &mut served,
+                &mut errors,
+                &mut batches,
+                out,
+            )?;
+            let eng = match &delta {
+                Some(eng) => eng.clone(),
+                None => {
+                    // first update: attach the delta engine (reconstructs
+                    // the host base CSR and warms the scheme cache)
+                    let pool = Arc::new(WorkerPool::new(exec.workers().max(1)));
+                    match dispatch::catch_internal(|| DeltaEngine::attach(dep.clone(), pool)) {
+                        Ok(eng) => {
+                            delta = Some(eng.clone());
+                            eng
+                        }
+                        Err(e) => {
+                            errors += 1;
+                            write_error(out, id, &e)?;
+                            continue;
+                        }
+                    }
+                }
+            };
+            match eng.apply(&req.edges) {
+                Ok(mut ack) => {
+                    served += 1;
+                    if opts.remap_after > 0
+                        && eng.updates_since_remap() >= opts.remap_after as u64
+                    {
+                        match dispatch::catch_internal(|| eng.remap()) {
+                            Ok(_) => {
+                                ack.pending = eng.pending();
+                                ack.generation = eng.generation();
+                            }
+                            Err(e) => {
+                                errors += 1;
+                                write_error(out, id, &e)?;
+                                continue;
+                            }
+                        }
+                    }
+                    write_response(
+                        out,
+                        obj(vec![("id", id), ("update", dispatch::update_ack_obj(&ack))]),
+                    )?;
+                    out.flush()?;
+                }
+                Err(e) => {
+                    errors += 1;
+                    write_error(out, id, &e)?;
+                }
+            }
         } else if let Some(req) = match dispatch::parse_algo(&doc, dim) {
             Ok(r) => r,
             Err(e) => {
@@ -206,6 +307,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 dep,
                 &exec,
                 opts.sharded,
+                delta.as_deref(),
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
@@ -213,7 +315,20 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 &mut batches,
                 out,
             )?;
-            match dispatch::catch_internal(|| dispatch::run_algo(dep, &exec, opts.sharded, &req)) {
+            // in delta mode, run against the engine's current (folded)
+            // deployment — generation-correct across remap swaps, though
+            // overlay entries still pending the next remap are not seen
+            let answer = match delta.as_deref() {
+                Some(eng) => {
+                    let snap = eng.deployment();
+                    let ex = BatchExecutor::with_pool(snap.plan_arc(), eng.pool.clone());
+                    dispatch::catch_internal(|| dispatch::run_algo(&snap, &ex, opts.sharded, &req))
+                }
+                None => {
+                    dispatch::catch_internal(|| dispatch::run_algo(dep, &exec, opts.sharded, &req))
+                }
+            };
+            match answer {
                 Ok(ans) => {
                     algo.record(ans.key, ans.mvms);
                     served += 1;
@@ -237,6 +352,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 dep,
                 &exec,
                 opts.sharded,
+                delta.as_deref(),
                 &mut pending_ids,
                 &mut pending_xs,
                 &mut served,
@@ -253,9 +369,15 @@ pub fn serve_loop<R: BufRead, W: Write>(
                 }
             };
             let n = xs.len() as u64;
-            match dispatch::catch_internal(|| {
-                Ok(dispatch::execute_verified(dep, &exec, xs, opts.sharded))
-            }) {
+            let result = match delta.as_deref() {
+                Some(eng) => {
+                    dispatch::catch_internal(|| Ok((eng.execute(&xs, opts.sharded)?, false)))
+                }
+                None => dispatch::catch_internal(|| {
+                    Ok(dispatch::execute_verified(dep, &exec, xs, opts.sharded))
+                }),
+            };
+            match result {
                 Ok((ys, degraded)) => {
                     batches += 1;
                     served += n;
@@ -282,6 +404,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
                             dep,
                             &exec,
                             opts.sharded,
+                            delta.as_deref(),
                             &mut pending_ids,
                             &mut pending_xs,
                             &mut served,
@@ -299,7 +422,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         }
 
         if served >= next_stats {
-            emit_stats(out, served, errors, batches, &algo)?;
+            emit_stats(out, served, errors, batches, &algo, delta.as_deref())?;
             next_stats = served + opts.stats_every.max(1) as u64;
         }
     }
@@ -308,6 +431,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         dep,
         &exec,
         opts.sharded,
+        delta.as_deref(),
         &mut pending_ids,
         &mut pending_xs,
         &mut served,
@@ -315,7 +439,7 @@ pub fn serve_loop<R: BufRead, W: Write>(
         &mut batches,
         out,
     )?;
-    emit_stats(out, served, errors, batches, &algo)?;
+    emit_stats(out, served, errors, batches, &algo, delta.as_deref())?;
 
     let wall = t0.elapsed().as_secs_f64();
     let rps = served as f64 / wall.max(1e-9);
@@ -342,6 +466,7 @@ fn flush_pending<W: Write>(
     dep: &Deployment,
     exec: &crate::engine::BatchExecutor<super::deploy::DeployedPlan>,
     sharded: bool,
+    delta: Option<&DeltaEngine>,
     ids: &mut Vec<Json>,
     xs: &mut Vec<Vec<f64>>,
     served: &mut u64,
@@ -354,7 +479,15 @@ fn flush_pending<W: Write>(
     }
     let reqs = std::mem::take(xs);
     let ids_now = std::mem::take(ids);
-    match dispatch::catch_internal(|| Ok(dispatch::execute_verified(dep, exec, reqs, sharded))) {
+    let result = match delta {
+        // delta mode: the engine serves the mutated graph (plan + overlay)
+        // on its own generation-current executor
+        Some(eng) => dispatch::catch_internal(|| Ok((eng.execute(&reqs, sharded)?, false))),
+        None => {
+            dispatch::catch_internal(|| Ok(dispatch::execute_verified(dep, exec, reqs, sharded)))
+        }
+    };
+    match result {
         Ok((ys, degraded)) => {
             *batches += 1;
             *served += ys.len() as u64;

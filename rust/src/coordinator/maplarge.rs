@@ -83,6 +83,7 @@ struct ScaleResult {
     window_cells: usize,
     windows: usize,
     unique_windows: usize,
+    cache_entries: usize,
     cache_hit_rate: f64,
     /// mapping throughput per worker count in `WORKER_COUNTS` order
     mapped_nnz_per_s: [f64; 3],
@@ -232,6 +233,7 @@ fn map_scale(
             window_cells: entry.n,
             windows: report.windows,
             unique_windows: report.unique_windows,
+            cache_entries: report.cache_entries,
             cache_hit_rate: report.cache_hit_rate,
             mapped_nnz_per_s,
         },
@@ -366,6 +368,7 @@ pub fn run_map_large(opts: &MapLargeOptions) -> Result<()> {
         ("window_cells", Json::Num(scale.window_cells as f64)),
         ("windows", Json::Num(scale.windows as f64)),
         ("unique_windows", Json::Num(scale.unique_windows as f64)),
+        ("cache_entries", Json::Num(scale.cache_entries as f64)),
         ("cache_hit_rate", Json::Num(scale.cache_hit_rate)),
         ("mapped_nnz_per_s_w1", Json::Num(scale.mapped_nnz_per_s[0])),
         ("mapped_nnz_per_s_w2", Json::Num(scale.mapped_nnz_per_s[1])),
@@ -457,6 +460,9 @@ mod tests {
         let base = doc.get("baseline_area_ratio").as_f64().unwrap();
         assert!(area < base, "area {area} must beat baseline {base}");
         assert!(doc.get("cache_hit_rate").as_f64().unwrap() >= 0.0);
+        let entries = doc.get("cache_entries").as_f64().unwrap();
+        let unique = doc.get("unique_windows").as_f64().unwrap();
+        assert!(entries >= 1.0 && entries == unique, "fresh-cache run: entries {entries} == unique {unique}");
         assert!(doc.get("mapped_nnz_per_s_w1").as_f64().unwrap() > 0.0);
     }
 }

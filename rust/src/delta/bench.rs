@@ -1,0 +1,386 @@
+//! The `delta-bench` driver: concurrent edge updaters and queriers
+//! against one [`DeltaEngine`], every served answer checked bit-for-bit
+//! against a mutating host-CSR oracle, plus an incremental-vs-full remap
+//! latency comparison on the same folded matrix.
+//!
+//! The run builds a deterministic R-MAT deployment (integer weights, so
+//! the repo's exactness convention applies), attaches a delta engine, and
+//! drives two thread groups under one wall clock:
+//!
+//! - **updaters** mutate edges confined to a `span` fraction of the
+//!   served (reordered) row range — the locality assumption the
+//!   incremental remap exploits — keeping an original-id oracle matrix in
+//!   lockstep under a write lock; updater 0 triggers one mid-stream
+//!   [`DeltaEngine::remap`] at its halfway point, so the swap happens
+//!   under live traffic;
+//! - **queriers** issue exact MVMs (scalar and batched, both executor
+//!   modes) and compare every element against the oracle under a read
+//!   lock. Any mismatch fails the run — `"mismatches": 0` in the ledger
+//!   is a checked invariant, not an observation.
+//!
+//! After traffic drains, one more confined update batch lands and the
+//! same folded matrix is remapped twice: incrementally (persistent warm
+//! cache — untouched windows are scheme-cache hits and skip controller
+//! inference) and fully (fresh cache — every unique window pays again).
+//! The ledger (`BENCH_delta.json`) records update/s, query/s, both remap
+//! latencies, and `remap_speedup_vs_full`; the CI `delta-smoke` job
+//! asserts the speedup stays ≥ 2 on the default 10k-node graph.
+
+use super::{DeltaEngine, EdgeUpdate, RemapReport, RowStore};
+use crate::api::deploy::{DeploymentBuilder, Source, Strategy};
+use crate::api::error::{Error, Result};
+use crate::graph::synth;
+use crate::util::bench::write_bench_json;
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+use crate::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Instant;
+
+/// Configuration for one dynamic-graph bench run.
+#[derive(Clone, Debug)]
+pub struct DeltaBenchOptions {
+    /// R-MAT node count (`AUTOGMAP_BENCH_FAST=1` caps it at 1200)
+    pub nodes: usize,
+    /// average edges per node (nnz ≈ nodes × degree)
+    pub degree: usize,
+    /// grid summary resolution the mapper works at
+    pub grid: usize,
+    /// controller the hierarchical mapper infers with
+    pub controller: String,
+    /// window overlap in grid cells
+    pub overlap: usize,
+    /// crossbar banks the fleet spreads tiles over
+    pub banks: usize,
+    /// shared-pool worker threads (mapper inference + batch execution)
+    pub workers: usize,
+    /// concurrent updater threads (floored at 1)
+    pub updaters: usize,
+    /// concurrent querier threads (floored at 1)
+    pub queriers: usize,
+    /// update batches per updater
+    pub updates: usize,
+    /// edges per update batch
+    pub batch: usize,
+    /// queries per querier
+    pub queries: usize,
+    /// fraction of the served row range updates are confined to — the
+    /// window-locality the incremental remap exploits (clamped to
+    /// [1 row, everything])
+    pub span: f64,
+    /// rng seed (graph, update, and query streams derive from it)
+    pub seed: u64,
+    /// where to write the machine-readable ledger
+    pub bench_json: PathBuf,
+}
+
+impl Default for DeltaBenchOptions {
+    fn default() -> DeltaBenchOptions {
+        DeltaBenchOptions {
+            nodes: 10_000,
+            degree: 8,
+            grid: 32,
+            controller: "qh882_dyn4".into(),
+            overlap: 4,
+            banks: 4,
+            workers: 4,
+            updaters: 2,
+            queriers: 2,
+            updates: 40,
+            batch: 8,
+            queries: 60,
+            span: 0.05,
+            seed: 0xde17a,
+            bench_json: PathBuf::from("BENCH_delta.json"),
+        }
+    }
+}
+
+/// What a finished run measured. A report is only returned when every
+/// served answer bit-matched the oracle; a mismatch is an `Err` (after
+/// the ledger is written, so CI can still inspect the artifact).
+#[derive(Clone, Debug)]
+pub struct DeltaBenchReport {
+    pub nodes: usize,
+    pub nnz: u64,
+    pub updates_applied: u64,
+    pub queries_served: u64,
+    pub mismatches: u64,
+    pub update_per_s: f64,
+    pub query_per_s: f64,
+    pub remap_incremental: RemapReport,
+    pub remap_full: RemapReport,
+    pub remap_speedup_vs_full: f64,
+}
+
+/// Oracle state shared between updaters and queriers: the mutated matrix
+/// in original node ids. Updaters hold the write lock across
+/// {engine.apply + oracle mutate} so queriers always compare against a
+/// consistent pair.
+struct Oracle {
+    truth: RowStore,
+}
+
+impl Oracle {
+    fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0f64; x.len()];
+        for (r, row) in self.truth.rows.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for (&c, &v) in row {
+                acc += v * x[c];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+fn integer_vec(rng: &mut Pcg64, dim: usize) -> Vec<f64> {
+    (0..dim).map(|_| (rng.below(7) as f64) - 3.0).collect()
+}
+
+/// Random confined update batch: served positions in `[0, lim)` mapped
+/// through the permutation to the original ids the engine's wire surface
+/// speaks. Integer weights in `0..=5`; 0 deletes.
+fn confined_batch(
+    rng: &mut Pcg64,
+    perm: &[usize],
+    lim: usize,
+    batch: usize,
+) -> Vec<EdgeUpdate> {
+    (0..batch)
+        .map(|_| {
+            let rs = rng.below(lim as u64) as usize;
+            let cs = rng.below(lim as u64) as usize;
+            EdgeUpdate {
+                row: perm[rs],
+                col: perm[cs],
+                weight: rng.below(6) as f64,
+            }
+        })
+        .collect()
+}
+
+/// Run the bench and write `BENCH_delta.json`.
+pub fn run_delta_bench(opts: &DeltaBenchOptions) -> Result<DeltaBenchReport> {
+    let fast = std::env::var("AUTOGMAP_BENCH_FAST").is_ok_and(|v| v == "1");
+    let nodes = if fast { opts.nodes.min(1200) } else { opts.nodes }.max(16);
+    let degree = opts.degree.clamp(1, (nodes - 1) / 2);
+    let updaters = opts.updaters.max(1);
+    let queriers = opts.queriers.max(1);
+
+    // the bench owns the matrix so the oracle sees the same bits the
+    // deployment mapped (weights are all 1.0 — integer-exact)
+    let target_nnz = 2 * (nodes * degree / 2);
+    let m = synth::rmat_like(nodes, target_nnz, opts.seed);
+    let dep = DeploymentBuilder::new(
+        Source::Matrix { label: format!("delta-rmat{nodes}"), matrix: m.clone() },
+        Strategy::Hierarchical { controller: opts.controller.clone(), overlap: opts.overlap },
+    )
+    .grid(opts.grid.max(1))
+    .banks(opts.banks.max(1))
+    .workers(opts.workers.max(1))
+    .seed(opts.seed)
+    .build()?;
+    let dim = nodes;
+    let perm = dep.permutation().to_vec();
+    let lim = ((dim as f64 * opts.span).ceil() as usize).clamp(1, dim);
+
+    let pool = Arc::new(WorkerPool::new(opts.workers.max(1)));
+    let engine = DeltaEngine::attach(dep, pool)?;
+    let oracle = Arc::new(RwLock::new(Oracle { truth: RowStore::from_csr(&m) }));
+
+    let applied = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let mismatches = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for u in 0..updaters {
+            let engine = &engine;
+            let oracle = &oracle;
+            let applied = &applied;
+            let perm = &perm;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(opts.seed, 0x0b5_0000 + u as u64);
+                for round in 0..opts.updates {
+                    // updater 0 folds the plan mid-stream: the swap must be
+                    // invisible to concurrent queriers
+                    if u == 0 && round == opts.updates / 2 {
+                        engine.remap().expect("mid-stream remap");
+                    }
+                    let edges = confined_batch(&mut rng, perm, lim, opts.batch.max(1));
+                    let mut o = oracle.write().unwrap();
+                    engine.apply(&edges).expect("update batch");
+                    for e in &edges {
+                        o.truth.set(e.row, e.col, e.weight);
+                    }
+                    drop(o);
+                    applied.fetch_add(edges.len() as u64, Ordering::Relaxed);
+                }
+            });
+        }
+        for q in 0..queriers {
+            let engine = &engine;
+            let oracle = &oracle;
+            let served = &served;
+            let mismatches = &mismatches;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(opts.seed, 0x4e7_0000 + q as u64);
+                for round in 0..opts.queries {
+                    let x = integer_vec(&mut rng, dim);
+                    let o = oracle.read().unwrap();
+                    let want = o.spmv(&x);
+                    // rotate serving modes: scalar, batched, batched-sharded
+                    let got = match round % 3 {
+                        0 => engine.mvm(&x).expect("query"),
+                        r => engine
+                            .execute(std::slice::from_ref(&x), r == 2)
+                            .expect("batch query")
+                            .remove(0),
+                    };
+                    drop(o);
+                    if got != want {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let updates_applied = applied.load(Ordering::Relaxed);
+    let queries_served = served.load(Ordering::Relaxed);
+    let bad = mismatches.load(Ordering::Relaxed);
+
+    // one more confined batch, then remap the SAME folded matrix twice:
+    // warm persistent cache vs fresh cache
+    {
+        let mut rng = Pcg64::new(opts.seed, 0xf01d);
+        let edges = confined_batch(&mut rng, &perm, lim, opts.batch.max(1) * 4);
+        let mut o = oracle.write().unwrap();
+        engine.apply(&edges)?;
+        for e in &edges {
+            o.truth.set(e.row, e.col, e.weight);
+        }
+    }
+    let inc = engine.remap()?;
+    let full = engine.remap_full()?;
+    let speedup = full.wall_seconds / inc.wall_seconds.max(1e-9);
+
+    // post-remap answers must still match the oracle exactly
+    let mut post_bad = 0u64;
+    {
+        let mut rng = Pcg64::new(opts.seed, 0xaf7e6);
+        let o = oracle.read().unwrap();
+        for _ in 0..4 {
+            let x = integer_vec(&mut rng, dim);
+            if engine.mvm(&x)? != o.spmv(&x) {
+                post_bad += 1;
+            }
+        }
+    }
+    let bad = bad + post_bad;
+
+    let report = DeltaBenchReport {
+        nodes,
+        nnz: inc.nnz,
+        updates_applied,
+        queries_served,
+        mismatches: bad,
+        update_per_s: updates_applied as f64 / elapsed,
+        query_per_s: queries_served as f64 / elapsed,
+        remap_incremental: inc.clone(),
+        remap_full: full.clone(),
+        remap_speedup_vs_full: speedup,
+    };
+    write_bench_json(
+        &opts.bench_json,
+        vec![
+            ("bench", Json::Str("delta".into())),
+            ("nodes", Json::Num(nodes as f64)),
+            ("nnz", Json::Num(report.nnz as f64)),
+            ("updaters", Json::Num(updaters as f64)),
+            ("queriers", Json::Num(queriers as f64)),
+            ("span", Json::Num(opts.span)),
+            ("updates_applied", Json::Num(updates_applied as f64)),
+            ("queries_served", Json::Num(queries_served as f64)),
+            ("mismatches", Json::Num(bad as f64)),
+            ("update_per_s", Json::Num(report.update_per_s)),
+            ("query_per_s", Json::Num(report.query_per_s)),
+            ("remap_incremental_s", Json::Num(inc.wall_seconds)),
+            ("remap_full_s", Json::Num(full.wall_seconds)),
+            ("remap_speedup_vs_full", Json::Num(speedup)),
+            ("windows", Json::Num(inc.windows as f64)),
+            ("reused_windows", Json::Num(inc.reused_windows as f64)),
+            ("cache_entries", Json::Num(inc.cache_entries as f64)),
+            ("cache_hit_rate", Json::Num(inc.cache_hit_rate)),
+            ("generation", Json::Num(full.generation as f64)),
+        ],
+    )
+    .map_err(|e| Error::Io(format!("writing {}: {e}", opts.bench_json.display())))?;
+    if bad > 0 {
+        return Err(Error::Internal(format!(
+            "{bad} served answers diverged from the host-CSR oracle"
+        )));
+    }
+    if inc.reused_windows == 0 && inc.windows > 1 {
+        return Err(Error::Internal(format!(
+            "incremental remap reused no window schemes across {} windows — \
+             the persistent cache is not warming",
+            inc.windows
+        )));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_delta_bench_is_exact_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("delta_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = DeltaBenchOptions {
+            nodes: 700,
+            degree: 4,
+            grid: 8,
+            controller: "qm7_dyn4".into(),
+            overlap: 2,
+            banks: 2,
+            workers: 2,
+            updaters: 2,
+            queriers: 2,
+            updates: 6,
+            batch: 4,
+            queries: 9,
+            span: 0.08,
+            seed: 77,
+            bench_json: dir.join("BENCH_delta.json"),
+        };
+        let report = run_delta_bench(&opts).unwrap();
+        assert_eq!(report.mismatches, 0);
+        assert_eq!(report.updates_applied, 2 * 6 * 4);
+        assert_eq!(report.queries_served, 2 * 9);
+        assert!(report.update_per_s > 0.0);
+        assert!(report.query_per_s > 0.0);
+        // mid-stream remap + incremental + full
+        assert_eq!(report.remap_full.generation, 3);
+        assert!(report.remap_incremental.windows >= 1);
+        let doc = std::fs::read_to_string(&opts.bench_json).unwrap();
+        for key in [
+            "\"mismatches\"",
+            "\"update_per_s\"",
+            "\"query_per_s\"",
+            "\"remap_incremental_s\"",
+            "\"remap_full_s\"",
+            "\"remap_speedup_vs_full\"",
+            "\"reused_windows\"",
+        ] {
+            assert!(doc.contains(key), "ledger missing {key}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,620 @@
+//! Dynamic-graph serving: exact edge updates over a live deployment, plus
+//! incremental windowed remap with an atomic generation-numbered swap.
+//!
+//! Every deployed graph eventually mutates; this subsystem lets a
+//! [`crate::api::Deployment`] keep serving exact answers while it does.
+//! Three pieces:
+//!
+//! 1. **Exact overlay serving** — edge inserts/deletes/reweights
+//!    ([`EdgeUpdate`], `weight == 0` deletes) accumulate in a
+//!    [`DeltaOverlay`]: a sorted per-row delta served on the digital spill
+//!    path. The programmed crossbar arena is *never* touched between
+//!    remaps — an update into an already-mapped cell becomes a correction
+//!    entry (`new − programmed`), an insert into an unmapped cell a plain
+//!    overlay entry, a delete a negative correction. Served answers are
+//!    `y = (A ± Δ)x`, bit-identical (under the repo's integer-valued
+//!    exactness convention) to a fresh host-CSR oracle of the mutated
+//!    graph.
+//! 2. **Incremental windowed remap** — [`DeltaEngine::remap`] folds the
+//!    overlay into a freshly mapped plan. The mutated matrix is
+//!    re-windowed and every window's occupancy signature interned into a
+//!    *persistent* [`crate::mapper::cache::SchemeCache`] (warmed with one
+//!    mapping pass at attach), so windows the deltas never touched are
+//!    cache hits by construction and skip controller inference entirely —
+//!    only mutated windows pay. The recompiled composite swaps in behind
+//!    an atomic generation bump: in-flight requests finish on the old
+//!    plan + overlay, new requests see the folded plan with a drained
+//!    overlay (updates that landed mid-build are carried over, never
+//!    lost).
+//! 3. **Wire + policy surface** — `{"update":{"edges":[[r,c,w],...]}}` and
+//!    `{"admin":{"remap":{"id":...}}}` are parsed by the shared
+//!    [`crate::api::dispatch`] core, so the stdin `serve` loop and the TCP
+//!    tier answer them identically; `--remap-after N` auto-folds after N
+//!    accumulated updates; delta counters ride
+//!    [`crate::engine::ServeStats`] and `{"admin":"stats"}`; and the
+//!    `delta-bench` CLI ([`bench`]) drives concurrent updaters + queriers
+//!    against a mutating host-CSR oracle and ledgers update/s, query/s,
+//!    and incremental-vs-full remap latency into `BENCH_delta.json`.
+//!
+//! Locking: queries hold a read lock for the duration of one (batch)
+//! execution, updates and the remap swap take the write lock briefly, and
+//! remap *building* (the expensive mapping) runs outside both under its
+//! own serialization mutex — the harness never stops serving to remap.
+//! Updates arrive in original node ids and are translated through the
+//! deployment's reordering permutation; the RCM order itself is fixed at
+//! deploy time, so heavy churn can erode bandedness until a full
+//! re-deploy re-reorders (see ROADMAP).
+
+pub mod bench;
+pub mod remap;
+
+pub use bench::{run_delta_bench, DeltaBenchOptions};
+pub use remap::RemapReport;
+
+use crate::api::deploy::{DeployedPlan, Deployment};
+use crate::api::error::{Error, Result};
+use crate::engine::{BatchExecutor, Servable, ServeStats};
+use crate::graph::{Coo, Csr};
+use crate::mapper::cache::SchemeCache;
+use crate::util::pool::WorkerPool;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One edge mutation in *original* node ids. `weight` is the edge's new
+/// value — an insert or reweight; `weight == 0.0` deletes the edge.
+/// Updates are applied as given (directed); symmetric graphs send both
+/// `(r, c)` and `(c, r)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeUpdate {
+    pub row: usize,
+    pub col: usize,
+    pub weight: f64,
+}
+
+/// Acknowledgement for one applied update batch.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateAck {
+    /// edges applied from this request
+    pub applied: usize,
+    /// overlay entries now pending the next remap
+    pub pending: usize,
+    /// plan generation the update landed on
+    pub generation: u64,
+}
+
+/// Sorted COO delta between the mutated graph and the plan's programmed
+/// base, served on the digital spill path. Rows iterate in ascending
+/// order; within a row, columns ascend — exactly the composite spill's
+/// shape, so the overlay stage keeps the per-row single-accumulator
+/// contract the bit-identity tests rely on.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaOverlay {
+    rows: BTreeMap<usize, BTreeMap<usize, f64>>,
+    entries: usize,
+}
+
+impl DeltaOverlay {
+    /// Live delta entries (cells where the mutated graph differs from the
+    /// programmed base).
+    pub fn len(&self) -> usize {
+        self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries == 0
+    }
+
+    /// Current delta at `(r, c)` (0 when the cell matches the base).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.rows
+            .get(&r)
+            .and_then(|cols| cols.get(&c))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Set the delta at `(r, c)`; an exact-zero delta removes the entry
+    /// (the cell reverted to its programmed value).
+    pub fn set(&mut self, r: usize, c: usize, delta: f64) {
+        if delta == 0.0 {
+            if let Some(cols) = self.rows.get_mut(&r) {
+                if cols.remove(&c).is_some() {
+                    self.entries -= 1;
+                }
+                if cols.is_empty() {
+                    self.rows.remove(&r);
+                }
+            }
+        } else if self.rows.entry(r).or_default().insert(c, delta).is_none() {
+            self.entries += 1;
+        }
+    }
+
+    /// Overlay stage of one served MVM, in served (reordered) coordinates:
+    /// per occupied row, one accumulator over the columns in ascending
+    /// order, folded into `y[r]` with a single add — the same shape as the
+    /// composite spill stage it rides next to.
+    pub fn apply_into(&self, x: &[f64], y: &mut [f64]) {
+        for (&r, cols) in &self.rows {
+            let mut acc = 0.0f64;
+            for (&c, &v) in cols {
+                acc += v * x[c];
+            }
+            y[r] += acc;
+        }
+    }
+}
+
+/// Mutable row-major truth store for the current mutated matrix (served
+/// order). `Csr` is immutable by design; this is the delta layer's
+/// editable twin, converted back to a `Csr` at every remap snapshot.
+#[derive(Clone, Debug)]
+struct RowStore {
+    rows: Vec<BTreeMap<usize, f64>>,
+}
+
+impl RowStore {
+    fn from_csr(m: &Csr) -> RowStore {
+        let mut rows = vec![BTreeMap::new(); m.rows];
+        for (r, row) in rows.iter_mut().enumerate() {
+            for (i, &c) in m.row(r).iter().enumerate() {
+                row.insert(c, m.row_vals(r)[i]);
+            }
+        }
+        RowStore { rows }
+    }
+
+    fn get(&self, r: usize, c: usize) -> f64 {
+        self.rows[r].get(&c).copied().unwrap_or(0.0)
+    }
+
+    fn set(&mut self, r: usize, c: usize, w: f64) {
+        if w == 0.0 {
+            self.rows[r].remove(&c);
+        } else {
+            self.rows[r].insert(c, w);
+        }
+    }
+
+    fn to_csr(&self) -> Csr {
+        let n = self.rows.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for row in &self.rows {
+            for (&c, &v) in row {
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            rows: n,
+            cols: n,
+            indptr,
+            indices,
+            data,
+        }
+    }
+}
+
+/// Reconstruct the exact host CSR a compiled plan serves — programmed
+/// tiles plus the composite's digital spill — in the plan's own
+/// (reordered) coordinates. This is the fault harness's digital-reference
+/// construction reused as the delta base: overlay entries are corrections
+/// against exactly this matrix.
+pub fn plan_host_csr(plan: &DeployedPlan) -> Csr {
+    let exec = plan.exec_plan();
+    let dim = exec.dim;
+    let mut coo = Coo::new(dim, dim);
+    for t in &exec.tiles {
+        let prog = exec.program(t.program);
+        for r in 0..t.rows {
+            for c in 0..t.cols {
+                let v = prog[r * t.cols + c];
+                if v != 0.0 {
+                    coo.push(t.row0 + r, t.col0 + c, v as f64);
+                }
+            }
+        }
+    }
+    if let DeployedPlan::Composite(cp) = plan {
+        for r in 0..cp.spill.rows {
+            for (i, &c) in cp.spill.row(r).iter().enumerate() {
+                coo.push(r, c, cp.spill.row_vals(r)[i]);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Epoch state behind the engine's read/write lock: everything a query
+/// needs to answer exactly, swapped as a unit at remap time.
+struct DeltaShared {
+    /// bumps on every remap swap
+    generation: u64,
+    deployment: Arc<Deployment>,
+    executor: BatchExecutor<DeployedPlan>,
+    /// the matrix the plan's tiles + spill serve (served order)
+    base: Arc<Csr>,
+    /// truth − base, served on the overlay stage
+    overlay: DeltaOverlay,
+    /// the current mutated matrix (served order)
+    truth: RowStore,
+    /// served positions touched since `base` was snapshotted; the remap
+    /// swap replays the tail that landed while the new plan was building
+    log: Vec<(usize, usize)>,
+    updates_since_remap: u64,
+}
+
+/// The dynamic-graph serving engine around one deployment: applies edge
+/// updates exactly ([`DeltaEngine::apply`]), serves `y = (A ± Δ)x`
+/// ([`DeltaEngine::mvm`] / [`DeltaEngine::execute`]), and folds the delta
+/// into a freshly mapped plan behind an atomic generation swap
+/// ([`DeltaEngine::remap`]).
+pub struct DeltaEngine {
+    shared: RwLock<DeltaShared>,
+    /// serializes remaps; serving and updates continue under `shared`
+    pub(crate) remap_lock: Mutex<()>,
+    pub(crate) strategy: remap::RemapStrategy,
+    pub(crate) grid: usize,
+    pub(crate) workers: usize,
+    pub(crate) pool: Arc<WorkerPool>,
+    /// persistent scheme cache: survives across remaps so untouched
+    /// windows stay cache hits (grows monotonically; one entry per unique
+    /// occupancy signature ever seen)
+    pub(crate) cache: Mutex<SchemeCache>,
+    /// original → served node id
+    inv_perm: Vec<usize>,
+    dim: usize,
+    updates_total: AtomicU64,
+    remaps_total: AtomicU64,
+    last_remap: Mutex<Option<RemapReport>>,
+}
+
+impl DeltaEngine {
+    /// Wrap a deployment for dynamic serving. Reconstructs the host base
+    /// CSR from the compiled plan, derives the remap strategy from the
+    /// deployment's provenance, and warms the persistent scheme cache with
+    /// one mapping pass over the base matrix — so even the *first*
+    /// incremental remap skips inference for untouched windows.
+    pub fn attach(dep: Deployment, pool: Arc<WorkerPool>) -> Result<Arc<DeltaEngine>> {
+        let strategy = remap::RemapStrategy::from_provenance(&dep.provenance)?;
+        let dim = dep.plan().dim();
+        let grid = dep.provenance.grid.max(1);
+        let base = plan_host_csr(dep.plan());
+        if base.nnz() as u64 != Servable::nnz(dep.plan()) {
+            return Err(Error::Internal(format!(
+                "plan reconstruction lost nnz: host CSR holds {}, plan serves {}",
+                base.nnz(),
+                Servable::nnz(dep.plan())
+            )));
+        }
+        let truth = RowStore::from_csr(&base);
+        let perm = dep.permutation().to_vec();
+        let mut inv_perm = vec![0usize; perm.len()];
+        for (new, &old) in perm.iter().enumerate() {
+            inv_perm[old] = new;
+        }
+        let workers = pool.workers();
+        let mut cache = SchemeCache::new();
+        strategy.warm(&base, grid, workers, &mut cache)?;
+        let deployment = Arc::new(dep);
+        let executor = BatchExecutor::with_pool(deployment.plan_arc(), pool.clone());
+        Ok(Arc::new(DeltaEngine {
+            shared: RwLock::new(DeltaShared {
+                generation: 0,
+                deployment,
+                executor,
+                base: Arc::new(base),
+                overlay: DeltaOverlay::default(),
+                truth,
+                log: Vec::new(),
+                updates_since_remap: 0,
+            }),
+            remap_lock: Mutex::new(()),
+            strategy,
+            grid,
+            workers,
+            pool,
+            cache: Mutex::new(cache),
+            inv_perm,
+            dim,
+            updates_total: AtomicU64::new(0),
+            remaps_total: AtomicU64::new(0),
+            last_remap: Mutex::new(None),
+        }))
+    }
+
+    /// Apply one batch of edge updates (original node ids) to the live
+    /// graph: the truth store mutates, and each touched cell's overlay
+    /// entry becomes `new − programmed_base` — so the very next query
+    /// already serves the mutated graph exactly. The programmed arena is
+    /// untouched.
+    pub fn apply(&self, edges: &[EdgeUpdate]) -> Result<UpdateAck> {
+        for (i, e) in edges.iter().enumerate() {
+            if e.row >= self.dim || e.col >= self.dim {
+                return Err(Error::Validate(format!(
+                    "update.edges[{i}] targets ({}, {}) outside the {}-node graph",
+                    e.row, e.col, self.dim
+                )));
+            }
+            if !e.weight.is_finite() {
+                return Err(Error::Validate(format!(
+                    "update.edges[{i}] weight must be finite, got {}",
+                    e.weight
+                )));
+            }
+        }
+        let mut s = self.shared.write().unwrap();
+        for e in edges {
+            let r = self.inv_perm[e.row];
+            let c = self.inv_perm[e.col];
+            s.truth.set(r, c, e.weight);
+            let d = e.weight - s.base.get(r, c);
+            s.overlay.set(r, c, d);
+            s.log.push((r, c));
+        }
+        s.updates_since_remap += edges.len() as u64;
+        self.updates_total
+            .fetch_add(edges.len() as u64, Ordering::Relaxed);
+        Ok(UpdateAck {
+            applied: edges.len(),
+            pending: s.overlay.len(),
+            generation: s.generation,
+        })
+    }
+
+    /// One exact MVM over the mutated graph, in original node ids:
+    /// permute in, plan (tiles + spill), overlay, permute out.
+    pub fn mvm(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.dim {
+            return Err(Error::Validate(format!(
+                "request has {} elements, deployment expects {}",
+                x.len(),
+                self.dim
+            )));
+        }
+        let s = self.shared.read().unwrap();
+        let xp = s.deployment.permute_in(x);
+        let mut y = s.deployment.plan().mvm(&xp);
+        s.overlay.apply_into(&xp, &mut y);
+        Ok(s.deployment.permute_out(&y))
+    }
+
+    /// Batched exact MVMs over the mutated graph (original node ids),
+    /// through the engine's executor in either mode. The overlay stage is
+    /// applied per request after the plan stage, before permuting out.
+    pub fn execute(&self, xs: &[Vec<f64>], sharded: bool) -> Result<Vec<Vec<f64>>> {
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != self.dim {
+                return Err(Error::Validate(format!(
+                    "request {i} has {} elements, deployment expects {}",
+                    x.len(),
+                    self.dim
+                )));
+            }
+        }
+        let s = self.shared.read().unwrap();
+        let xps: Vec<Vec<f64>> = xs.iter().map(|x| s.deployment.permute_in(x)).collect();
+        let mut ys = if sharded {
+            s.executor.execute_batch_sharded(xps.clone())
+        } else {
+            s.executor.execute_batch(xps.clone())
+        };
+        if !s.overlay.is_empty() {
+            for (xp, y) in xps.iter().zip(ys.iter_mut()) {
+                s.overlay.apply_into(xp, y);
+            }
+        }
+        Ok(ys.iter().map(|y| s.deployment.permute_out(y)).collect())
+    }
+
+    /// Matrix dimension (request/response length, original ids).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Current plan generation (bumps on every remap swap).
+    pub fn generation(&self) -> u64 {
+        self.shared.read().unwrap().generation
+    }
+
+    /// Overlay entries pending the next remap.
+    pub fn pending(&self) -> usize {
+        self.shared.read().unwrap().overlay.len()
+    }
+
+    /// Edge updates applied since attach.
+    pub fn updates_total(&self) -> u64 {
+        self.updates_total.load(Ordering::Relaxed)
+    }
+
+    /// Remaps folded since attach.
+    pub fn remaps_total(&self) -> u64 {
+        self.remaps_total.load(Ordering::Relaxed)
+    }
+
+    /// Edge updates applied since the last remap snapshot (what
+    /// `--remap-after N` compares against).
+    pub fn updates_since_remap(&self) -> u64 {
+        self.shared.read().unwrap().updates_since_remap
+    }
+
+    /// Snapshot of the current deployment (plan generation the caller
+    /// observed; stays serviceable after a concurrent swap).
+    pub fn deployment(&self) -> Arc<Deployment> {
+        self.shared.read().unwrap().deployment.clone()
+    }
+
+    /// The most recent remap's report, if any.
+    pub fn last_remap(&self) -> Option<RemapReport> {
+        self.last_remap.lock().unwrap().clone()
+    }
+
+    /// Plan statistics with the live delta counters overlaid.
+    pub fn stats(&self) -> ServeStats {
+        let s = self.shared.read().unwrap();
+        let mut st = s.deployment.stats();
+        st.delta_updates = self.updates_total.load(Ordering::Relaxed);
+        st.delta_pending = s.overlay.len();
+        st.delta_remaps = self.remaps_total.load(Ordering::Relaxed);
+        st
+    }
+
+    fn record_remap(&self, report: &RemapReport) {
+        self.remaps_total.fetch_add(1, Ordering::Relaxed);
+        *self.last_remap.lock().unwrap() = Some(report.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::deploy::{DeploymentBuilder, Source, Strategy};
+    use crate::graph::synth;
+
+    fn integer_banded(dim: usize, band: usize, seed: u64) -> Csr {
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(seed);
+        let mut coo = Coo::new(dim, dim);
+        for i in 0..dim {
+            coo.push(i, i, 1.0 + rng.below(4) as f64);
+            for d in 1..=band {
+                if i + d < dim && rng.below(3) > 0 {
+                    coo.push_sym(i, i + d, 1.0 + rng.below(4) as f64);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    fn fixed_block_deployment(dim: usize, seed: u64) -> Deployment {
+        DeploymentBuilder::new(
+            Source::Matrix {
+                label: format!("delta-test-{dim}"),
+                matrix: integer_banded(dim, 3, seed),
+            },
+            Strategy::FixedBlock { block: 2 },
+        )
+        .grid(8)
+        .banks(2)
+        .workers(2)
+        .build()
+        .unwrap()
+    }
+
+    #[test]
+    fn overlay_set_get_and_apply_match_a_dense_delta() {
+        let mut ov = DeltaOverlay::default();
+        assert!(ov.is_empty());
+        ov.set(1, 2, 3.0);
+        ov.set(1, 0, -1.0);
+        ov.set(3, 3, 2.0);
+        assert_eq!(ov.len(), 3);
+        assert_eq!(ov.get(1, 2), 3.0);
+        ov.set(1, 2, 0.0); // reverted to base -> entry drops
+        assert_eq!(ov.len(), 2);
+        assert_eq!(ov.get(1, 2), 0.0);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = vec![0.0; 4];
+        ov.apply_into(&x, &mut y);
+        assert_eq!(y, vec![0.0, -1.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn row_store_roundtrips_and_mutates() {
+        let m = integer_banded(24, 2, 7);
+        let mut rs = RowStore::from_csr(&m);
+        assert_eq!(rs.to_csr(), m);
+        rs.set(0, 5, 9.0);
+        assert_eq!(rs.get(0, 5), 9.0);
+        rs.set(0, 5, 0.0);
+        assert_eq!(rs.to_csr(), m);
+    }
+
+    #[test]
+    fn plan_host_csr_reconstructs_the_served_matrix() {
+        let dep = fixed_block_deployment(40, 11);
+        let host = plan_host_csr(dep.plan());
+        assert_eq!(host.nnz() as u64, Servable::nnz(dep.plan()));
+        // the reconstruction must serve identically to the plan
+        let x: Vec<f64> = (0..40).map(|i| ((i % 5) as f64) - 2.0).collect();
+        assert_eq!(host.spmv(&x), dep.plan().mvm(&x));
+    }
+
+    #[test]
+    fn updates_serve_exactly_against_a_mutated_oracle() {
+        let dim = 40;
+        let dep = fixed_block_deployment(dim, 3);
+        let mut oracle = RowStore::from_csr(&integer_banded(dim, 3, 3));
+        let pool = Arc::new(WorkerPool::new(2));
+        let eng = DeltaEngine::attach(dep, pool).unwrap();
+        let edges = [
+            EdgeUpdate { row: 0, col: 39, weight: 2.0 },  // far insert (spill side)
+            EdgeUpdate { row: 5, col: 6, weight: 7.0 },   // reweight a mapped cell
+            EdgeUpdate { row: 10, col: 10, weight: 0.0 }, // delete the diagonal
+        ];
+        let ack = eng.apply(&edges).unwrap();
+        assert_eq!(ack.applied, 3);
+        assert!(ack.pending >= 1);
+        for e in &edges {
+            oracle.set(e.row, e.col, e.weight);
+        }
+        let want_m = oracle.to_csr();
+        let x: Vec<f64> = (0..dim).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let want = want_m.spmv(&x);
+        assert_eq!(eng.mvm(&x).unwrap(), want);
+        for sharded in [false, true] {
+            let ys = eng.execute(&[x.clone(), x.clone()], sharded).unwrap();
+            assert_eq!(ys[0], want);
+            assert_eq!(ys[1], want);
+        }
+        // reverting every edge to its base value drains the overlay
+        let base_m = integer_banded(dim, 3, 3);
+        let revert: Vec<EdgeUpdate> = edges
+            .iter()
+            .map(|e| EdgeUpdate {
+                row: e.row,
+                col: e.col,
+                weight: base_m.get(e.row, e.col),
+            })
+            .collect();
+        eng.apply(&revert).unwrap();
+        assert_eq!(eng.pending(), 0);
+        assert_eq!(eng.mvm(&x).unwrap(), base_m.spmv(&x));
+    }
+
+    #[test]
+    fn out_of_range_and_non_finite_updates_are_rejected() {
+        let dep = fixed_block_deployment(24, 5);
+        let pool = Arc::new(WorkerPool::new(1));
+        let eng = DeltaEngine::attach(dep, pool).unwrap();
+        let bad = eng.apply(&[EdgeUpdate { row: 24, col: 0, weight: 1.0 }]);
+        assert!(bad.unwrap_err().to_string().contains("outside"));
+        let nan = eng.apply(&[EdgeUpdate { row: 0, col: 0, weight: f64::NAN }]);
+        assert!(nan.unwrap_err().to_string().contains("finite"));
+        assert_eq!(eng.updates_total(), 0, "rejected batches apply nothing");
+    }
+
+    #[test]
+    fn stats_carry_delta_counters() {
+        let dep = fixed_block_deployment(24, 9);
+        let pool = Arc::new(WorkerPool::new(1));
+        let eng = DeltaEngine::attach(dep, pool).unwrap();
+        eng.apply(&[EdgeUpdate { row: 0, col: 23, weight: 1.0 }]).unwrap();
+        let st = eng.stats();
+        assert_eq!(st.delta_updates, 1);
+        assert_eq!(st.delta_pending, 1);
+        assert_eq!(st.delta_remaps, 0);
+    }
+
+    #[test]
+    fn rmat_like_is_available_for_bench_shapes() {
+        // the bench synthesizes via the same helper deploy uses
+        let m = synth::rmat_like(300, 1200, 1);
+        assert_eq!(m.rows, 300);
+        assert!(m.nnz() > 0);
+    }
+}

@@ -1,0 +1,432 @@
+//! Incremental windowed remap: fold the accumulated delta into a freshly
+//! mapped plan, re-inferring only the windows the updates touched.
+//!
+//! The lever is the engine's *persistent* scheme cache: the mutated
+//! matrix is re-windowed exactly like a fresh deployment, but every
+//! window whose occupancy signature survived the updates is already
+//! interned — [`crate::mapper::map_graph_with_cache`] answers it without
+//! touching the controller. With updates confined to a few windows, an
+//! incremental remap pays inference for those windows only while a full
+//! remap (fresh cache — what [`DeltaEngine::remap_full`] measures) pays
+//! for every unique signature again.
+//!
+//! The swap is atomic and generation-numbered, mirroring the fault
+//! harness's repair epochs: the expensive mapping runs on a snapshot
+//! outside the serving lock, then the new plan + executor + drained
+//! overlay replace the old under one brief write lock. Updates that
+//! landed while the new plan was building are replayed from the edge-log
+//! tail against the new base, so no mutation is ever lost.
+
+use super::{DeltaEngine, DeltaOverlay};
+use crate::agent::params::init_params;
+use crate::api::deploy::{fill_rule_for, DeployedPlan, Provenance};
+use crate::api::error::{Error, Result};
+use crate::engine::{BatchExecutor, Servable};
+use crate::graph::{Csr, GridSummary};
+use crate::mapper::cache::SchemeCache;
+use crate::mapper::{compile_composite, InferContext, MapperConfig};
+use crate::runtime::Manifest;
+use crate::scheme::{CompositeScheme, RewardWeights, Scheme, WindowSlice};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Default controller sampling rounds for remap inference. Provenance
+/// does not record the deploy-time value; what matters for stability is
+/// that every remap of one engine infers identically, which a fixed
+/// default guarantees.
+const REMAP_ROUNDS: usize = 2;
+
+/// How a remap re-maps the mutated matrix, derived from the deployment's
+/// provenance strategy label.
+pub(crate) enum RemapStrategy {
+    /// The hierarchical window mapper against the persistent scheme
+    /// cache. Also used for `direct:` deployments (with zero overlap): a
+    /// grid that fits one controller window stays a single window, but
+    /// the result compiles as a composite, so a flat deployment becomes
+    /// composite after its first remap.
+    Windowed { ctx: InferContext, overlap: usize },
+    /// The fixed-block baseline: rebuild the diagonal block slices, no
+    /// inference (every remap is trivially "all windows reused").
+    Fixed { block: usize },
+}
+
+/// Per-remap mapping statistics, normalized across strategies.
+pub(crate) struct MapRunStats {
+    pub windows: usize,
+    pub cache_hits: usize,
+    pub cache_entries: usize,
+    pub cache_hit_rate: f64,
+}
+
+fn infer_context(controller: &str, seed: u64) -> Result<InferContext> {
+    let entry = Manifest::builtin()
+        .config(controller)
+        .map_err(|e| Error::Validate(format!("{e:#}")))?
+        .clone();
+    let params = init_params(&entry, seed);
+    let fill_rule = fill_rule_for(entry.fill_classes);
+    Ok(InferContext {
+        entry,
+        params,
+        fill_rule,
+        weights: RewardWeights::new(0.8),
+        rounds: REMAP_ROUNDS,
+        seed,
+    })
+}
+
+impl RemapStrategy {
+    /// Derive the remap strategy from a deployment's recorded strategy
+    /// label (`hierarchical:{controller}:overlap{N}`,
+    /// `direct:{controller}`, or `fixed:{N}`).
+    pub(crate) fn from_provenance(p: &Provenance) -> Result<RemapStrategy> {
+        let label = p.strategy.as_str();
+        if let Some(rest) = label.strip_prefix("hierarchical:") {
+            let (controller, overlap) = rest.rsplit_once(":overlap").ok_or_else(|| {
+                Error::Validate(format!("malformed hierarchical strategy label {label:?}"))
+            })?;
+            let overlap: usize = overlap.parse().map_err(|_| {
+                Error::Validate(format!("malformed overlap in strategy label {label:?}"))
+            })?;
+            Ok(RemapStrategy::Windowed { ctx: infer_context(controller, p.seed)?, overlap })
+        } else if let Some(controller) = label.strip_prefix("direct:") {
+            Ok(RemapStrategy::Windowed { ctx: infer_context(controller, p.seed)?, overlap: 0 })
+        } else if let Some(block) = label.strip_prefix("fixed:") {
+            let block: usize = block.parse().map_err(|_| {
+                Error::Validate(format!("malformed block in strategy label {label:?}"))
+            })?;
+            Ok(RemapStrategy::Fixed { block })
+        } else {
+            Err(Error::Validate(format!(
+                "deployment strategy {label:?} has no remap path"
+            )))
+        }
+    }
+
+    /// Map a (snapshot) matrix into a servable plan against the given
+    /// scheme cache.
+    pub(crate) fn map(
+        &self,
+        m: &Csr,
+        g: &GridSummary,
+        workers: usize,
+        cache: &mut SchemeCache,
+    ) -> Result<(DeployedPlan, MapRunStats)> {
+        match self {
+            RemapStrategy::Windowed { ctx, overlap } => {
+                let cfg = MapperConfig {
+                    infer: ctx.clone(),
+                    overlap: *overlap,
+                    workers: workers.max(1),
+                };
+                let (comp, report) = crate::mapper::map_graph_with_cache(g, &cfg, cache)
+                    .map_err(|e| Error::Validate(format!("remap mapping: {e:#}")))?;
+                let cp = compile_composite(m, g, &comp)
+                    .map_err(|e| Error::Validate(format!("remap compile: {e:#}")))?;
+                Ok((
+                    DeployedPlan::Composite(cp),
+                    MapRunStats {
+                        windows: report.windows,
+                        cache_hits: report.cache_hits,
+                        cache_entries: report.cache_entries,
+                        cache_hit_rate: report.cache_hit_rate,
+                    },
+                ))
+            }
+            RemapStrategy::Fixed { block } => {
+                let block = (*block).clamp(1, g.n);
+                let mut slices = Vec::new();
+                let mut start = 0usize;
+                while start < g.n {
+                    let end = (start + block).min(g.n);
+                    slices.push(WindowSlice {
+                        win_start: start,
+                        win_end: end,
+                        start,
+                        end,
+                        scheme: Scheme { diag_len: vec![end - start], fill_len: vec![] },
+                        cache_hit: false,
+                    });
+                    start = end;
+                }
+                let windows = slices.len();
+                let comp = CompositeScheme { n: g.n, slices };
+                let cp = compile_composite(m, g, &comp)
+                    .map_err(|e| Error::Validate(format!("remap compile: {e:#}")))?;
+                Ok((
+                    DeployedPlan::Composite(cp),
+                    MapRunStats {
+                        windows,
+                        cache_hits: windows,
+                        cache_entries: cache.unique(),
+                        cache_hit_rate: 1.0,
+                    },
+                ))
+            }
+        }
+    }
+
+    /// Prime the persistent cache with one mapping pass over the base
+    /// matrix (no compile), so the *first* incremental remap already hits
+    /// for untouched windows. A no-op for the fixed baseline.
+    pub(crate) fn warm(
+        &self,
+        base: &Csr,
+        grid: usize,
+        workers: usize,
+        cache: &mut SchemeCache,
+    ) -> Result<()> {
+        if let RemapStrategy::Windowed { ctx, overlap } = self {
+            let g = GridSummary::new(base, grid.max(1));
+            let cfg = MapperConfig {
+                infer: ctx.clone(),
+                overlap: *overlap,
+                workers: workers.max(1),
+            };
+            crate::mapper::map_graph_with_cache(&g, &cfg, cache)
+                .map_err(|e| Error::Validate(format!("warming scheme cache: {e:#}")))?;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one remap: what was mapped, what the cache saved, and what
+/// the swap carried over.
+#[derive(Clone, Debug)]
+pub struct RemapReport {
+    /// plan generation after the swap
+    pub generation: u64,
+    /// true for [`DeltaEngine::remap_full`] (fresh cache, every window
+    /// re-inferred)
+    pub full: bool,
+    /// windows mapped this remap
+    pub windows: usize,
+    /// windows answered from the scheme cache without inference
+    pub reused_windows: usize,
+    /// persistent-cache entries after the remap
+    pub cache_entries: usize,
+    /// `reused_windows / windows`
+    pub cache_hit_rate: f64,
+    /// overlay entries carried over (updates that landed mid-build)
+    pub carried_updates: usize,
+    /// nnz of the folded base matrix
+    pub nnz: u64,
+    pub wall_seconds: f64,
+}
+
+impl DeltaEngine {
+    /// Fold the accumulated delta into a freshly mapped plan using the
+    /// persistent scheme cache: windows the updates never touched are
+    /// cache hits and skip inference. Serving continues on the old plan
+    /// throughout the build; the swap is one brief write lock.
+    pub fn remap(&self) -> Result<RemapReport> {
+        self.remap_inner(false)
+    }
+
+    /// [`DeltaEngine::remap`] with a fresh throwaway cache — every unique
+    /// window pays inference again. Same resulting plan quality; exists
+    /// as the baseline the bench compares incremental latency against.
+    pub fn remap_full(&self) -> Result<RemapReport> {
+        self.remap_inner(true)
+    }
+
+    fn remap_inner(&self, full: bool) -> Result<RemapReport> {
+        // one remap at a time; serving and updates continue under `shared`
+        let _serialize = self.remap_lock.lock().unwrap();
+        let t0 = Instant::now();
+        let (snapshot, log_mark) = {
+            let s = self.shared.read().unwrap();
+            (s.truth.to_csr(), s.log.len())
+        };
+        let g = GridSummary::new(&snapshot, self.grid.max(1));
+        let (plan, stats) = if full {
+            let mut fresh = SchemeCache::new();
+            self.strategy.map(&snapshot, &g, self.workers, &mut fresh)?
+        } else {
+            let mut cache = self.cache.lock().unwrap();
+            self.strategy.map(&snapshot, &g, self.workers, &mut cache)?
+        };
+        if Servable::nnz(&plan) != snapshot.nnz() as u64 {
+            return Err(Error::Internal(format!(
+                "remapped plan serves {} nnz but the folded matrix holds {}",
+                Servable::nnz(&plan),
+                snapshot.nnz()
+            )));
+        }
+        let mut s = self.shared.write().unwrap();
+        let dep = Arc::new(s.deployment.with_swapped_plan(plan)?);
+        let executor = BatchExecutor::with_pool(dep.plan_arc(), self.pool.clone());
+        let base = Arc::new(snapshot);
+        // replay updates that landed while the new plan was building: the
+        // log tail, re-diffed against the new base
+        let carried: Vec<(usize, usize)> = s.log[log_mark..].to_vec();
+        let mut overlay = DeltaOverlay::default();
+        for &(r, c) in &carried {
+            overlay.set(r, c, s.truth.get(r, c) - base.get(r, c));
+        }
+        s.generation += 1;
+        s.deployment = dep;
+        s.executor = executor;
+        s.base = base;
+        s.overlay = overlay;
+        s.log = carried;
+        s.updates_since_remap = s.log.len() as u64;
+        let report = RemapReport {
+            generation: s.generation,
+            full,
+            windows: stats.windows,
+            reused_windows: stats.cache_hits,
+            cache_entries: stats.cache_entries,
+            cache_hit_rate: stats.cache_hit_rate,
+            carried_updates: s.overlay.len(),
+            nnz: s.base.nnz() as u64,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        };
+        drop(s);
+        self.record_remap(&report);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::deploy::{Deployment, DeploymentBuilder, Source, Strategy};
+    use crate::delta::EdgeUpdate;
+    use crate::graph::Coo;
+    use crate::util::pool::WorkerPool;
+
+    fn integer_banded(dim: usize, band: usize, seed: u64) -> Csr {
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(seed);
+        let mut coo = Coo::new(dim, dim);
+        for i in 0..dim {
+            coo.push(i, i, 1.0 + rng.below(4) as f64);
+            for d in 1..=band {
+                if i + d < dim && rng.below(3) > 0 {
+                    coo.push_sym(i, i + d, 1.0 + rng.below(4) as f64);
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    fn deploy(m: Csr, strategy: Strategy, grid: usize) -> Deployment {
+        DeploymentBuilder::new(
+            Source::Matrix { label: "remap-test".into(), matrix: m },
+            strategy,
+        )
+        .grid(grid)
+        .banks(2)
+        .workers(2)
+        .build()
+        .unwrap()
+    }
+
+    #[test]
+    fn strategy_labels_parse_and_unknown_labels_are_rejected() {
+        let mut p = Provenance {
+            source: "t".into(),
+            strategy: "hierarchical:qm7_dyn4:overlap3".into(),
+            dim: 10,
+            grid: 4,
+            cells: 3,
+            nnz: 5,
+            seed: 9,
+            reordering: "rcm".into(),
+            kernel: "auto".into(),
+        };
+        match RemapStrategy::from_provenance(&p).unwrap() {
+            RemapStrategy::Windowed { ctx, overlap } => {
+                assert_eq!(ctx.entry.name, "qm7_dyn4");
+                assert_eq!(overlap, 3);
+                assert_eq!(ctx.seed, 9);
+            }
+            _ => panic!("expected windowed"),
+        }
+        p.strategy = "direct:qh882_dyn4".into();
+        match RemapStrategy::from_provenance(&p).unwrap() {
+            RemapStrategy::Windowed { ctx, overlap } => {
+                assert_eq!(ctx.entry.name, "qh882_dyn4");
+                assert_eq!(overlap, 0);
+            }
+            _ => panic!("expected windowed"),
+        }
+        p.strategy = "fixed:3".into();
+        match RemapStrategy::from_provenance(&p).unwrap() {
+            RemapStrategy::Fixed { block } => assert_eq!(block, 3),
+            _ => panic!("expected fixed"),
+        }
+        p.strategy = "fixed:x".into();
+        assert!(RemapStrategy::from_provenance(&p).is_err());
+        p.strategy = "mystery:1".into();
+        assert!(RemapStrategy::from_provenance(&p).is_err());
+        p.strategy = "hierarchical:qm7_dyn4".into();
+        assert!(RemapStrategy::from_provenance(&p).is_err());
+    }
+
+    #[test]
+    fn fixed_remap_folds_the_overlay_and_keeps_serving_exactly() {
+        let dim = 48;
+        let m = integer_banded(dim, 3, 21);
+        let dep = deploy(m.clone(), Strategy::FixedBlock { block: 2 }, 8);
+        let pool = Arc::new(WorkerPool::new(2));
+        let eng = DeltaEngine::attach(dep, pool).unwrap();
+        let edges = [
+            EdgeUpdate { row: 2, col: 45, weight: 3.0 },
+            EdgeUpdate { row: 7, col: 8, weight: 5.0 },
+            EdgeUpdate { row: 11, col: 11, weight: 0.0 },
+        ];
+        eng.apply(&edges).unwrap();
+        assert!(eng.pending() > 0);
+        let report = eng.remap().unwrap();
+        assert_eq!(report.generation, 1);
+        assert!(!report.full);
+        assert_eq!(report.carried_updates, 0, "no concurrent traffic");
+        assert_eq!(eng.pending(), 0, "overlay folded into the plan");
+        assert_eq!(eng.generation(), 1);
+        assert_eq!(eng.remaps_total(), 1);
+
+        // post-remap answers match a from-scratch deployment of the
+        // mutated matrix, bit for bit
+        let mut truth = super::super::RowStore::from_csr(&m);
+        for e in &edges {
+            truth.set(e.row, e.col, e.weight);
+        }
+        let fresh = deploy(truth.to_csr(), Strategy::FixedBlock { block: 2 }, 8);
+        let x: Vec<f64> = (0..dim).map(|i| ((i % 9) as f64) - 4.0).collect();
+        let want = fresh.mvm(&x).unwrap();
+        assert_eq!(eng.mvm(&x).unwrap(), want);
+        for sharded in [false, true] {
+            assert_eq!(eng.execute(&[x.clone()], sharded).unwrap()[0], want);
+        }
+    }
+
+    #[test]
+    fn windowed_remap_reuses_untouched_window_schemes() {
+        let dim = 260;
+        let m = integer_banded(dim, 2, 5);
+        let dep = deploy(
+            m,
+            Strategy::Hierarchical { controller: "qm7_dyn4".into(), overlap: 2 },
+            4, // 65 grid cells -> several 11-cell windows
+        );
+        let pool = Arc::new(WorkerPool::new(2));
+        let eng = DeltaEngine::attach(dep, pool).unwrap();
+        // touch a single far-corner cell: at most a couple of windows'
+        // signatures change
+        eng.apply(&[EdgeUpdate { row: 0, col: 1, weight: 9.0 }]).unwrap();
+        let inc = eng.remap().unwrap();
+        assert!(inc.windows > 3, "expected several windows, got {}", inc.windows);
+        assert!(
+            inc.reused_windows > 0,
+            "warm cache must reuse untouched windows: {inc:?}"
+        );
+        let full = eng.remap_full().unwrap();
+        assert_eq!(full.generation, 2);
+        assert_eq!(full.windows, inc.windows, "same matrix, same windowing");
+        // serving stays exact across both swaps
+        let x: Vec<f64> = (0..dim).map(|i| ((i % 5) as f64) - 2.0).collect();
+        let dep2 = eng.deployment();
+        assert_eq!(eng.mvm(&x).unwrap(), dep2.mvm(&x).unwrap());
+    }
+}

@@ -100,6 +100,12 @@ pub struct ServeStats {
     pub area_cells: u64,
     /// fault-tolerance health counters (all-zero unless a harness is armed)
     pub health: FaultHealth,
+    /// edge updates applied since deploy (0 unless a delta engine is live)
+    pub delta_updates: u64,
+    /// overlay entries pending the next remap (0 unless a delta engine is live)
+    pub delta_pending: usize,
+    /// incremental remaps folded into the plan (0 unless a delta engine is live)
+    pub delta_remaps: u64,
 }
 
 impl ServeStats {
@@ -175,10 +181,6 @@ pub trait Servable: Send + Sync + 'static {
     fn stats(&self) -> ServeStats;
 }
 
-/// Deprecated alias for [`Servable`] — the trait's pre-facade name. New
-/// code (and the `api` layer) should use `Servable`.
-pub use self::Servable as ServablePlan;
-
 impl Servable for ExecPlan {
     fn dim(&self) -> usize {
         self.dim
@@ -222,6 +224,9 @@ impl Servable for ExecPlan {
             spilled_nnz: 0,
             area_cells: self.cells(),
             health: FaultHealth::default(),
+            delta_updates: 0,
+            delta_pending: 0,
+            delta_remaps: 0,
         }
     }
 }

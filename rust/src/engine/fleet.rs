@@ -270,6 +270,93 @@ mod tests {
     }
 
     #[test]
+    fn assign_excluding_properties_hold_on_random_fleets() {
+        // random plans × random bank counts × random exclusion masks, both
+        // policies: every tile lands on exactly one healthy bank, retired
+        // banks stay empty, and BalancedNnz keeps the LPT greedy bound on
+        // its own weights (per-tile nnz, floored at 1).
+        crate::util::propcheck::check("fleet_assign_excluding", 24, |rng| {
+            let dim = 48 + rng.below(120) as usize;
+            let band = 1 + rng.below(6) as usize;
+            let m = synth::banded_like(dim, 0.9, band);
+            let g = GridSummary::new(&m, 8);
+            // random diagonal partition -> many tiles of varying nnz
+            let mut diag = Vec::new();
+            let mut left = g.n;
+            while left > 0 {
+                let b = (1 + rng.below(4) as usize).min(left);
+                diag.push(b);
+                left -= b;
+            }
+            let scheme = Scheme { diag_len: diag, fill_len: vec![] };
+            let plan = compile(&m, &g, &scheme).map_err(|e| e.to_string())?;
+            let banks = 1 + rng.below(8) as usize;
+            let mut failed = vec![false; banks];
+            for f in failed.iter_mut() {
+                *f = rng.below(3) == 0;
+            }
+            if failed.iter().all(|&f| f) {
+                failed[rng.below(banks as u64) as usize] = false;
+            }
+            let healthy: Vec<usize> = (0..banks).filter(|&b| !failed[b]).collect();
+            let prog_nnz = plan.program_nnz();
+            let weight = |i: usize| prog_nnz[plan.tiles[i].program].max(1);
+            for policy in [AssignPolicy::RoundRobin, AssignPolicy::BalancedNnz] {
+                let fleet = Fleet::assign_excluding(&plan, banks, policy, &failed)
+                    .map_err(|e| e.to_string())?;
+                if fleet.assignment.len() != plan.tiles.len() {
+                    return Err(format!(
+                        "{policy:?}: {} assignments for {} tiles",
+                        fleet.assignment.len(),
+                        plan.tiles.len()
+                    ));
+                }
+                if let Some(&b) = fleet.assignment.iter().find(|&&b| failed[b]) {
+                    return Err(format!("{policy:?}: tile landed on retired bank {b}"));
+                }
+                let tiles: usize = fleet.loads.iter().map(|l| l.tiles).sum();
+                if tiles != plan.tiles.len() {
+                    return Err(format!(
+                        "{policy:?}: loads count {tiles} tiles, plan has {}",
+                        plan.tiles.len()
+                    ));
+                }
+                for &b in &healthy {
+                    let want: u64 = fleet
+                        .assignment
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &bank)| bank == b)
+                        .map(|(i, _)| prog_nnz[plan.tiles[i].program])
+                        .sum();
+                    if fleet.loads[b].nnz != want {
+                        return Err(format!(
+                            "{policy:?}: bank {b} load {} != assigned nnz {want}",
+                            fleet.loads[b].nnz
+                        ));
+                    }
+                }
+                if policy == AssignPolicy::BalancedNnz && !plan.tiles.is_empty() {
+                    let mut wload = vec![0u64; banks];
+                    for (i, &b) in fleet.assignment.iter().enumerate() {
+                        wload[b] += weight(i);
+                    }
+                    let total: u64 = (0..plan.tiles.len()).map(weight).sum();
+                    let heaviest = (0..plan.tiles.len()).map(weight).max().unwrap();
+                    let mean = total as f64 / healthy.len() as f64;
+                    let max = healthy.iter().map(|&b| wload[b]).max().unwrap();
+                    if (max as f64) > mean + heaviest as f64 + 1e-9 {
+                        return Err(format!(
+                            "balance bound broken: max {max} > mean {mean} + heaviest {heaviest}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn policy_parsing() {
         assert_eq!(AssignPolicy::parse("rr").unwrap(), AssignPolicy::RoundRobin);
         assert_eq!(

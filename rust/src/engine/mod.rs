@@ -73,7 +73,7 @@ pub mod batch;
 pub mod fleet;
 pub mod plan;
 
-pub use batch::{BatchExecutor, FaultHealth, Servable, ServablePlan, ServeStats};
+pub use batch::{BatchExecutor, FaultHealth, Servable, ServeStats};
 pub use fleet::{AssignPolicy, BankLoad, Fleet};
 pub use plan::{
     compile, compile_rects, merge_plans, Band, ExecPlan, KernelKind, PatternMeta, ProgramMeta,

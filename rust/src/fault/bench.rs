@@ -309,6 +309,7 @@ pub fn run_fault_bench(opts: &FaultBenchOptions) -> Result<FaultBenchReport> {
             scrub_every: opts.scrub_every,
             ..FaultOptions::default()
         }),
+        remap_after: 0,
     }));
     registry.insert(TENANT, built, None);
     let entry = registry.get(TENANT)?.entry();

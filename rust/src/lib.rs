@@ -185,6 +185,34 @@
 //! answers may escape), and ledgers detection latency, repair latency,
 //! and degraded throughput into `BENCH_fault.json` (the CI `fault-smoke`
 //! gate).
+//!
+//! ## Dynamic graphs
+//!
+//! The [`delta`] subsystem lets a *live* deployment accept edge inserts,
+//! deletes, and reweights without remapping from scratch — the missing
+//! piece between the paper's static mapping pipeline and a serving
+//! system whose graph changes under it. A [`delta::DeltaEngine`]
+//! attaches to any [`api::Deployment`] and layers an exact digital
+//! overlay (same shape as the composite spill path) over the programmed
+//! arena: every MVM answers `y = (A ± Δ)x` bit-identically to a host-CSR
+//! oracle of the *mutated* graph while the arena itself stays untouched.
+//! When the overlay grows stale, [`delta::DeltaEngine::remap`] folds it
+//! back into crossbar form *incrementally*: the graph is re-windowed,
+//! but only delta-touched windows rerun controller inference — the
+//! engine's persistent [`mapper::cache::SchemeCache`] serves every
+//! untouched window by construction — and the new plan swaps in behind a
+//! generation number while queries keep serving (updates landing
+//! mid-remap are replayed onto the new base, never lost). The wire
+//! surface is identical on the stdin `serve` loop and the TCP tier:
+//! `{"update":{"edges":[[r,c,w],...]}}` lines (weight 0 deletes),
+//! `{"admin":{"remap":..}}`, `--remap-after N` auto-folding, and delta
+//! counters in every stats object. The `delta-bench` CLI subcommand
+//! races concurrent updaters against queriers on a 10k-node R-MAT graph,
+//! checks every answer against a mutating oracle, and ledgers update/s,
+//! query/s, and incremental-vs-full remap latency into `BENCH_delta.json`
+//! (the CI `delta-smoke` gate asserts zero mismatches and an incremental
+//! speedup). Random interleaved update/query/remap streams are
+//! propchecked bit-exact in `tests/integration_delta.rs`.
 
 pub mod agent;
 pub mod algo;
@@ -192,9 +220,9 @@ pub mod api;
 pub mod baselines;
 pub mod coordinator;
 pub mod crossbar;
+pub mod delta;
 pub mod engine;
 pub mod fault;
-pub mod gcn;
 pub mod graph;
 pub mod mapper;
 pub mod net;

@@ -29,6 +29,10 @@
 //!   fault-bench — chaos harness: inject a device fault mid-stream under
 //!                concurrent clients, assert zero wrong answers escape,
 //!                ledger detection/repair latency (BENCH_fault.json)
+//!   delta-bench — dynamic-graph harness: concurrent edge updaters and
+//!                queriers against a live deployment, every answer checked
+//!                vs a mutating host-CSR oracle, incremental vs full remap
+//!                latency (BENCH_delta.json)
 //!
 //! Every training command takes `--backend {native,pjrt,auto}`: `native`
 //! is the pure-Rust trainer (sampling + BPTT + Adam, no artifacts
@@ -89,12 +93,12 @@ USAGE: autogmap <subcommand> [options]
              [--out bundle.json]
   serve      --bundle bundle.json [--workers N] [--batch-window N]
              [--stats-every N] [--exec sharded|scalar] [--max-line-bytes N]
-             [--fault-harness] [--scrub-every N]
+             [--fault-harness] [--scrub-every N] [--remap-after N]
   serve-net  --bundles id=path[,id=path...] [--listen 127.0.0.1:7070]
              [--workers N] [--queue-depth N] [--max-conns N]
              [--max-line-bytes N] [--exec sharded|scalar]
              [--fault-harness] [--scrub-every N] [--read-timeout-ms N]
-             [--grace-ms N]
+             [--grace-ms N] [--remap-after N]
              [--bench] [--bench-clients N] [--bench-requests N]
              [--bench-swap id=path] [--seed N]
              [--bench-json BENCH_serve_net.json]
@@ -107,6 +111,11 @@ USAGE: autogmap <subcommand> [options]
              [--fault-rate F] [--fault-seed N] [--scrub-every N]
              [--seed N] [--listen 127.0.0.1:0] [--assert-recovery]
              [--bench-json BENCH_fault.json]
+  delta-bench [--nodes N] [--degree N] [--grid N] [--controller NAME]
+             [--overlap N] [--banks N] [--workers N]
+             [--updaters N] [--queriers N] [--updates N] [--batch N]
+             [--queries N] [--span F] [--seed N]
+             [--bench-json BENCH_delta.json]
 
   global: --artifacts DIR (default: artifacts)
 
@@ -216,6 +225,23 @@ USAGE: autogmap <subcommand> [options]
   scrub probe every --scrub-every requests, quarantine-on-detect with
   exact digital fallback, and {\"admin\":{\"inject\"|\"repair\":..}}.
 
+  delta-bench example (fresh checkout, no artifacts):
+    autogmap delta-bench --nodes 10000 --updaters 2 --queriers 2
+  deploys a 10k-node R-MAT graph and mutates it live: --updaters threads
+  stream {\"update\":{\"edges\":[[r,c,w],..]}} batches (weight 0 deletes
+  an edge) while --queriers threads keep issuing MVMs, every answer
+  checked bit-exactly against a host-CSR oracle of the mutated graph.
+  Mid-stream and again after the traffic it folds the pending overlay
+  with an incremental windowed remap — only delta-touched windows rerun
+  controller inference, the persistent scheme cache serves the rest —
+  and times that against a from-scratch full remap of the same graph.
+  BENCH_delta.json records update/s, query/s, mismatches (always 0 when
+  the bench exits 0), cache hit stats, and remap_speedup_vs_full. The
+  same dynamic surface is live on any server: serve and serve-net accept
+  {\"update\":{\"edges\":..}} request lines and
+  {\"admin\":{\"remap\":{\"id\":..}}}; --remap-after N folds the overlay
+  automatically every N updates.
+
   map-large example (fresh checkout, no artifacts):
     autogmap map-large --nodes 100000 --workers 8
   synthesizes a 100k-node R-MAT graph, RCM-reorders it, slices the banded
@@ -254,7 +280,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "batch-window", "stats-every", "listen", "bundles", "queue-depth", "max-conns",
         "max-line-bytes", "bench-clients", "bench-requests", "bench-swap", "pagerank-iters",
         "clients", "fault-bank", "fault-kind", "fault-rate", "fault-seed", "scrub-every",
-        "read-timeout-ms", "grace-ms",
+        "read-timeout-ms", "grace-ms", "remap-after", "updaters", "queriers", "updates",
+        "queries", "span",
     ];
     let flag_opts = ["verbose", "help", "bench", "fault-harness", "assert-recovery"];
     let args = Args::parse(argv, &value_opts, &flag_opts, true)
@@ -281,6 +308,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve-net" => cmd_serve_net(&args),
         "algo-bench" => cmd_algo_bench(&args),
         "fault-bench" => cmd_fault_bench(&args),
+        "delta-bench" => cmd_delta_bench(&args),
         other => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
 }
@@ -769,6 +797,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .map_err(anyhow::Error::msg)?
             .unwrap_or(defaults.max_line_bytes)
             .max(1),
+        remap_after: args
+            .get_usize("remap-after")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.remap_after),
     };
     let s = dep.stats();
     eprintln!(
@@ -898,6 +930,10 @@ fn cmd_serve_net(args: &Args) -> anyhow::Result<()> {
         queue_depth,
         sharded,
         fault,
+        remap_after: args
+            .get_usize("remap-after")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(0),
     }));
     for (id, path) in &bundles {
         let tenant = registry.load_bundle(id, path)?;
@@ -1116,6 +1152,87 @@ fn cmd_fault_bench(args: &Args) -> anyhow::Result<()> {
         report.degraded_nnz_per_s,
         report.post_repair_nnz_per_s,
         report.recovery_ratio * 100.0
+    );
+    println!("wrote {}", opts.bench_json.display());
+    Ok(())
+}
+
+/// `delta-bench`: the dynamic-graph harness
+/// ([`autogmap::delta::run_delta_bench`]) — concurrent edge updaters and
+/// queriers against a live deployment, every answer checked against a
+/// mutating host-CSR oracle, incremental vs full remap latency.
+fn cmd_delta_bench(args: &Args) -> anyhow::Result<()> {
+    use autogmap::delta::{run_delta_bench, DeltaBenchOptions};
+
+    let defaults = DeltaBenchOptions::default();
+    let opts = DeltaBenchOptions {
+        nodes: args.get_usize("nodes").map_err(anyhow::Error::msg)?.unwrap_or(defaults.nodes),
+        degree: args.get_usize("degree").map_err(anyhow::Error::msg)?.unwrap_or(defaults.degree),
+        grid: args.get_usize("grid").map_err(anyhow::Error::msg)?.unwrap_or(defaults.grid),
+        controller: args.get_or("controller", &defaults.controller).to_string(),
+        overlap: args
+            .get_usize("overlap")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.overlap),
+        banks: args
+            .get_usize("banks")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.banks)
+            .max(1),
+        workers: args
+            .get_usize("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.workers)
+            .max(1),
+        updaters: args
+            .get_usize("updaters")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.updaters)
+            .max(1),
+        queriers: args
+            .get_usize("queriers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.queriers)
+            .max(1),
+        updates: args
+            .get_usize("updates")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.updates)
+            .max(1),
+        batch: args
+            .get_usize("batch")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.batch)
+            .max(1),
+        queries: args
+            .get_usize("queries")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.queries)
+            .max(1),
+        span: args.get_f64("span").map_err(anyhow::Error::msg)?.unwrap_or(defaults.span),
+        seed: args.get_u64("seed").map_err(anyhow::Error::msg)?.unwrap_or(defaults.seed),
+        bench_json: PathBuf::from(args.get_or("bench-json", "BENCH_delta.json")),
+    };
+    let report = run_delta_bench(&opts)?;
+    println!(
+        "delta-bench: {} updates applied and {} queries served against a {}-node graph \
+         ({} nnz), 0 mismatches — {:.0} updates/s, {:.0} queries/s",
+        report.updates_applied,
+        report.queries_served,
+        report.nodes,
+        report.nnz,
+        report.update_per_s,
+        report.query_per_s
+    );
+    println!(
+        "  incremental remap {:.3}s ({} of {} windows re-inferred, cache hit rate {:.2}) vs \
+         full remap {:.3}s -> {:.2}x faster",
+        report.remap_incremental.wall_seconds,
+        report.remap_incremental.windows - report.remap_incremental.reused_windows,
+        report.remap_incremental.windows,
+        report.remap_incremental.cache_hit_rate,
+        report.remap_full.wall_seconds,
+        report.remap_speedup_vs_full
     );
     println!("wrote {}", opts.bench_json.display());
     Ok(())

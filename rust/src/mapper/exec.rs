@@ -223,6 +223,9 @@ impl Servable for CompositePlan {
             spilled_nnz: self.spilled_nnz(),
             area_cells: self.plan.cells(),
             health: Default::default(),
+            delta_updates: 0,
+            delta_pending: 0,
+            delta_remaps: 0,
         }
     }
 }

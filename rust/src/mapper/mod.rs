@@ -71,7 +71,14 @@ pub struct MapperConfig {
 #[derive(Clone, Copy, Debug)]
 pub struct MapReport {
     pub windows: usize,
+    /// distinct window signatures this run touched
     pub unique_windows: usize,
+    /// total entries in the scheme cache after the run (== `unique_windows`
+    /// for a fresh cache; grows monotonically for a persistent one)
+    pub cache_entries: usize,
+    /// windows of this run answered from the cache without inference
+    pub cache_hits: usize,
+    /// fraction of this run's windows answered from the cache
     pub cache_hit_rate: f64,
     pub wall_seconds: f64,
 }
@@ -82,6 +89,21 @@ pub struct MapReport {
 /// (the mapper itself never touches the matrix — everything it needs is in
 /// the grid summary).
 pub fn map_graph(g: &GridSummary, cfg: &MapperConfig) -> Result<(CompositeScheme, MapReport)> {
+    let mut cache = cache::SchemeCache::new();
+    map_graph_with_cache(g, cfg, &mut cache)
+}
+
+/// [`map_graph`] against a caller-owned [`cache::SchemeCache`] that
+/// survives across calls — the incremental-remap lever: windows whose
+/// occupancy signature is already interned (from a previous mapping of a
+/// mostly-unchanged matrix) are cache hits by construction and skip
+/// inference entirely. The report's `cache_hit_rate` counts only *this*
+/// run's windows, so a warm cache shows up as a high per-run hit rate.
+pub fn map_graph_with_cache(
+    g: &GridSummary,
+    cfg: &MapperConfig,
+    cache: &mut cache::SchemeCache,
+) -> Result<(CompositeScheme, MapReport)> {
     crate::agent::validate_fill_rule(&cfg.infer.entry, &cfg.infer.fill_rule)?;
     ensure!(cfg.infer.entry.n >= 2, "controller needs at least 2 grid cells");
     let t0 = Instant::now();
@@ -91,7 +113,6 @@ pub fn map_graph(g: &GridSummary, cfg: &MapperConfig) -> Result<(CompositeScheme
     let cuts = window::choose_cuts(g, &spans);
 
     // 2. signatures, interned: inference runs once per unique pattern
-    let mut cache = cache::SchemeCache::new();
     let mut locals = Vec::with_capacity(spans.len());
     let mut entry_ids = Vec::with_capacity(spans.len());
     let mut sig_hashes = Vec::with_capacity(spans.len());
@@ -142,12 +163,22 @@ pub fn map_graph(g: &GridSummary, cfg: &MapperConfig) -> Result<(CompositeScheme
     let comp = CompositeScheme { n: g.n, slices };
     comp.validate(g.n)
         .map_err(|e| anyhow::anyhow!("mapper produced an invalid composite: {e}"))?;
+    let mut distinct = entry_ids.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let run_hits = hits.iter().filter(|h| **h).count();
     Ok((
         comp,
         MapReport {
             windows: spans.len(),
-            unique_windows: cache.unique(),
-            cache_hit_rate: cache.hit_rate(),
+            unique_windows: distinct.len(),
+            cache_entries: cache.unique(),
+            cache_hits: run_hits,
+            cache_hit_rate: if spans.is_empty() {
+                0.0
+            } else {
+                run_hits as f64 / spans.len() as f64
+            },
             wall_seconds: t0.elapsed().as_secs_f64(),
         },
     ))

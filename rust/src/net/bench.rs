@@ -133,6 +133,7 @@ pub fn run_net_bench(opts: &NetBenchOptions) -> Result<NetBenchReport> {
         queue_depth: opts.queue_depth.max(opts.clients.max(1)),
         sharded: opts.sharded,
         fault: None,
+        remap_after: 0,
     }));
     let mut oracles: BTreeMap<String, Arc<TenantEntry>> = BTreeMap::new();
     for (id, path) in &opts.bundles {

@@ -62,6 +62,29 @@
 //! parameters are `validate` errors naming the offending field. Both
 //! objects are byte-identical to the stdin loop's for the same request.
 //!
+//! **Update requests** mutate a tenant's graph live ([`crate::delta`]):
+//! each edge triple is `[row, col, weight]` in original node ids, weight
+//! `0` deletes the edge, a weight on an existing edge reweights it. The
+//! first update attaches a delta engine over the tenant's current
+//! generation; afterwards every `x`/`xs` answer is served as
+//! `y = (A ± Δ)x` — base plan plus the exact pending overlay — so
+//! updates are visible to the very next query:
+//!
+//! ```text
+//! → {"tenant":"graphA","id":8,"update":{"edges":[[3,9,1.5],[3,4,0]]}}
+//! ← {"tenant":"graphA","id":8,"update":{"applied":2,"pending":2,
+//!      "generation":0}}
+//! ```
+//!
+//! `pending` counts overlay entries not yet folded into the arena;
+//! `generation` is the delta engine's remap counter. With `serve-net
+//! --remap-after N`, the update that reaches N pending updates folds the
+//! overlay automatically before acking (the ack then reports the fresh
+//! generation and `pending: 0`). Delta-mode caveats: MVMs served through
+//! the overlay bypass an armed fault harness, and algorithm requests run
+//! on the last *folded* plan (pending overlay edges become visible to
+//! them after the next remap).
+//!
 //! **Admin requests** query or mutate the registry:
 //!
 //! ```text
@@ -73,6 +96,10 @@
 //!      "algo":{"pagerank":..,"bfs":..,"sssp":..,"gcn":..,"mvms":..}},..}}
 //! → {"admin":{"reload":{"id":"graphA","bundle":"remapped.json"}}}
 //! ← {"admin":"reload","id":"graphA","generation":2,"dim":10000}
+//! → {"admin":{"remap":{"id":"graphA"}}}
+//! ← {"admin":"remap","id":"graphA","generation":2,"windows":13,
+//!      "reused_windows":11,"cache_hit_rate":0.85,"carried_updates":4,
+//!      "wall_s":0.4}
 //! → {"admin":{"inject":{"id":"graphA","bank":0,"kind":"stuck0",
 //!      "rate":0.05,"seed":7}}}
 //! ← {"admin":"inject","id":"graphA","generation":1,"cells_changed":..,
@@ -80,6 +107,16 @@
 //! → {"admin":{"repair":{"id":"graphA"}}}
 //! ← {"admin":"repair","id":"graphA","generation":2}
 //! ```
+//!
+//! `remap` folds a dynamic tenant's pending updates into a fresh arena:
+//! only delta-touched windows rerun controller inference (the engine's
+//! persistent scheme cache serves the untouched ones — `reused_windows`
+//! of `windows` in the ack), and the folded deployment is installed as
+//! the tenant's next generation exactly like a bundle reload (rate
+//! window restarts, in-flight requests finish on the old entry). A
+//! fault-armed registry re-arms a fresh harness over the folded arena.
+//! Each dynamic tenant's stats object also gains a `"delta"` block:
+//! `updates`, `pending`, `remaps`, `generation`.
 //!
 //! # Fault tolerance on the wire
 //!
@@ -135,6 +172,9 @@
 //! - [`crate::fault::run_fault_bench`] — the chaos driver behind
 //!   `fault-bench` and the CI `fault-smoke` job: mid-stream injection
 //!   under concurrent clients, every response oracle-checked.
+//! - [`crate::delta::run_delta_bench`] — the dynamic-graph driver behind
+//!   `delta-bench` and the CI `delta-smoke` job: concurrent updaters and
+//!   queriers, every answer checked against a mutating host-CSR oracle.
 
 pub mod bench;
 pub mod registry;

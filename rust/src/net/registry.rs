@@ -27,6 +27,7 @@
 
 use crate::api::dispatch::{self, AlgoAnswer, AlgoRequest};
 use crate::api::{DeployedPlan, Deployment, Error, Result};
+use crate::delta::{DeltaEngine, RemapReport};
 use crate::engine::{BatchExecutor, Servable};
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
@@ -50,6 +51,11 @@ pub struct RegistryOptions {
     /// loaded deployment — each generation (initial load and every
     /// hot-swap) gets its own harness over its own healthy image
     pub fault: Option<crate::fault::FaultOptions>,
+    /// auto-remap threshold for dynamic tenants: after this many edge
+    /// updates since the last remap, the next update folds the overlay
+    /// into a fresh arena generation. 0 disables auto-remap (updates
+    /// accumulate in the overlay until `{"admin":{"remap":..}}`).
+    pub remap_after: usize,
 }
 
 impl Default for RegistryOptions {
@@ -59,6 +65,7 @@ impl Default for RegistryOptions {
             queue_depth: 32,
             sharded: true,
             fault: None,
+            remap_after: 0,
         }
     }
 }
@@ -153,6 +160,11 @@ pub struct Tenant {
     algo_sssp: AtomicU64,
     algo_gcn: AtomicU64,
     algo_mvms: AtomicU64,
+    /// the tenant's dynamic-graph engine ([`crate::delta`]), attached
+    /// lazily by the first `update` request and dropped by a bundle
+    /// reload (a reload replaces the graph wholesale, so pending overlay
+    /// state against the old graph is meaningless)
+    delta: RwLock<Option<Arc<DeltaEngine>>>,
     t0: Instant,
 }
 
@@ -188,8 +200,17 @@ impl Tenant {
             algo_sssp: AtomicU64::new(0),
             algo_gcn: AtomicU64::new(0),
             algo_mvms: AtomicU64::new(0),
+            delta: RwLock::new(None),
             t0: Instant::now(),
         }
+    }
+
+    /// The attached dynamic-graph engine, if any `update` request has
+    /// attached one. Requests against a delta tenant must execute through
+    /// the engine (it serves base + overlay); the entry alone would
+    /// silently drop pending updates.
+    pub fn delta(&self) -> Option<Arc<DeltaEngine>> {
+        self.delta.read().unwrap().clone()
     }
 
     pub fn name(&self) -> &str {
@@ -355,6 +376,9 @@ impl Tenant {
         if kernels.health.armed {
             map.insert("health".into(), dispatch::health_json(&kernels.health));
         }
+        if let Some(eng) = self.delta() {
+            map.insert("delta".into(), dispatch::delta_stats_json(&eng));
+        }
         let mut algo = BTreeMap::new();
         algo.insert(
             "pagerank".into(),
@@ -376,6 +400,7 @@ pub struct DeploymentRegistry {
     queue_depth: usize,
     sharded: bool,
     fault: Option<crate::fault::FaultOptions>,
+    remap_after: usize,
 }
 
 impl DeploymentRegistry {
@@ -386,6 +411,7 @@ impl DeploymentRegistry {
             queue_depth: opts.queue_depth.max(1),
             sharded: opts.sharded,
             fault: opts.fault,
+            remap_after: opts.remap_after,
         }
     }
 
@@ -402,6 +428,51 @@ impl DeploymentRegistry {
     /// The shared pool (for binding further executors to it).
     pub fn pool(&self) -> &Arc<WorkerPool> {
         &self.pool
+    }
+
+    /// Auto-remap threshold ([`RegistryOptions::remap_after`]; 0 = manual
+    /// remap only).
+    pub fn remap_after(&self) -> usize {
+        self.remap_after
+    }
+
+    /// The tenant's dynamic-graph engine, attaching one over the current
+    /// generation on first use. The attach (which reconstructs the host
+    /// CSR and warms the scheme cache) runs under the tenant's delta
+    /// write lock, so concurrent first updates attach exactly once;
+    /// serving reads are unaffected (they take the lock only to clone the
+    /// `Arc` out).
+    pub fn delta_engine(&self, id: &str) -> Result<Arc<DeltaEngine>> {
+        let tenant = self.get(id)?;
+        if let Some(eng) = tenant.delta() {
+            return Ok(eng);
+        }
+        let mut slot = tenant.delta.write().unwrap();
+        if let Some(eng) = slot.clone() {
+            return Ok(eng); // another update attached while we waited
+        }
+        let entry = tenant.entry();
+        let eng = DeltaEngine::attach((**entry.deployment()).clone(), self.pool.clone())?;
+        *slot = Some(eng.clone());
+        Ok(eng)
+    }
+
+    /// Fold a dynamic tenant's pending updates into a fresh arena
+    /// generation: incremental remap on the delta engine, then install
+    /// the folded deployment as the tenant's next [`TenantEntry`] (so
+    /// algorithm requests and the stats surface see the new plan, and the
+    /// per-generation rate window restarts — remap is a generation bump
+    /// exactly like a bundle reload). A tenant with no attached engine
+    /// gets one attached first, so `remap` on a never-updated tenant is a
+    /// cheap no-op fold.
+    pub fn remap(&self, id: &str) -> Result<(Arc<TenantEntry>, RemapReport)> {
+        let tenant = self.get(id)?;
+        let eng = self.delta_engine(id)?;
+        let report = eng.remap()?;
+        let bundle = tenant.entry().bundle().map(|p| p.to_path_buf());
+        let dep = (*eng.deployment()).clone();
+        let entry = tenant.swap_with(|generation| self.make_entry(dep, generation, bundle));
+        Ok((entry, report))
     }
 
     fn make_entry(
@@ -467,9 +538,16 @@ impl DeploymentRegistry {
         let dep = Deployment::load(path)?;
         let existing = self.tenants.read().unwrap().get(id).cloned();
         match existing {
-            Some(tenant) => Ok(tenant.swap_with(|generation| {
-                self.make_entry(dep, generation, Some(path.to_path_buf()))
-            })),
+            Some(tenant) => {
+                let entry = tenant.swap_with(|generation| {
+                    self.make_entry(dep, generation, Some(path.to_path_buf()))
+                });
+                // a reload replaces the graph wholesale: drop the delta
+                // engine (and any pending overlay against the old graph);
+                // the next update re-attaches over the new generation
+                tenant.delta.write().unwrap().take();
+                Ok(entry)
+            }
             None => Ok(self.load_tenant_entry(id, dep, path)),
         }
     }
@@ -517,6 +595,7 @@ mod tests {
             queue_depth,
             sharded: true,
             fault: None,
+            remap_after: 0,
         })
     }
 
@@ -671,6 +750,51 @@ mod tests {
     }
 
     #[test]
+    fn delta_engine_attaches_once_folds_on_remap_and_drops_on_reload() {
+        let reg = small_registry(4);
+        reg.insert("g", small_dep(2), None);
+        let tenant = reg.get("g").unwrap();
+        assert!(tenant.delta().is_none(), "no engine before the first update");
+
+        let eng = reg.delta_engine("g").unwrap();
+        let again = reg.delta_engine("g").unwrap();
+        assert!(Arc::ptr_eq(&eng, &again), "lazy attach must be one-shot");
+
+        let dim = eng.dim();
+        let x: Vec<f64> = (0..dim).map(|i| (i % 9) as f64 * 0.5 - 2.0).collect();
+        let before = tenant.entry().deployment().mvm(&x).unwrap();
+        let ack = eng
+            .apply(&[crate::delta::EdgeUpdate { row: 0, col: dim - 1, weight: 2.0 }])
+            .unwrap();
+        assert_eq!(ack.pending, 1);
+        let stats = tenant.stats_json();
+        assert_eq!(stats.get("delta").get("pending").as_i64(), Some(1));
+        assert_eq!(stats.get("delta").get("updates").as_i64(), Some(1));
+
+        // remap folds the overlay and bumps the tenant generation exactly
+        // like a bundle reload does
+        let (entry, report) = reg.remap("g").unwrap();
+        assert_eq!(entry.generation(), 2);
+        assert_eq!(tenant.entry().generation(), 2);
+        assert_eq!(report.generation, 1);
+        assert_eq!(eng.pending(), 0);
+        let want = entry.deployment().mvm(&x).unwrap();
+        assert_eq!(eng.mvm(&x).unwrap(), want, "entry and engine serve the same folded plan");
+        assert_ne!(want, before, "the folded plan must carry the update");
+
+        // a bundle reload replaces the graph wholesale: the engine (and
+        // any pending overlay) is dropped, to be re-attached on demand
+        let dir =
+            std::env::temp_dir().join(format!("autogmap_regdelta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = dir.join("swap.json");
+        small_dep(1).save(&bundle).unwrap();
+        reg.reload("g", &bundle).unwrap();
+        assert!(tenant.delta().is_none(), "reload must drop the delta engine");
+        let _ = std::fs::remove_file(&bundle);
+    }
+
+    #[test]
     fn fault_armed_registry_serves_verified_and_reports_health() {
         use crate::fault::{FaultKind, FaultOptions, FaultSpec};
         let reg = DeploymentRegistry::new(&RegistryOptions {
@@ -678,6 +802,7 @@ mod tests {
             queue_depth: 8,
             sharded: true,
             fault: Some(FaultOptions::default()),
+            remap_after: 0,
         });
         let dep = DeploymentBuilder::new(
             Source::Matrix {

@@ -343,6 +343,26 @@ fn serve_request(
         let entry = tenant.entry();
         let dim = entry.dim();
         let deadline = dispatch::parse_deadline(doc)?;
+        if let Some(req) = dispatch::parse_update(doc)? {
+            // dynamic-graph edge updates ([`crate::delta`]): the first one
+            // attaches a delta engine over the tenant's current
+            // generation; afterwards every x/xs request routes through the
+            // engine so pending updates are always visible
+            let _slot = tenant.admit()?;
+            if let Some(ms) = deadline {
+                dispatch::check_deadline(arrival, ms)?;
+            }
+            let eng = registry.delta_engine(tenant_id)?;
+            let mut ack = dispatch::catch_internal(|| eng.apply(&req.edges))?;
+            if registry.remap_after() > 0
+                && eng.updates_since_remap() >= registry.remap_after() as u64
+            {
+                dispatch::catch_internal(|| registry.remap(tenant_id).map(|_| ()))?;
+                ack.pending = eng.pending();
+                ack.generation = eng.generation();
+            }
+            return Ok(("update", dispatch::update_ack_obj(&ack), false));
+        }
         if let Some(req) = dispatch::parse_algo(doc, dim)? {
             // a whole-algorithm run occupies one admission slot for its
             // entire iterative lifetime — deliberate: queue depth bounds
@@ -368,8 +388,12 @@ fn serve_request(
             dispatch::check_deadline(arrival, ms)?;
         }
         let n = xs.len() as u64;
-        let (mut ys, degraded) =
-            dispatch::catch_internal(|| Ok(entry.execute(xs, registry.sharded())))?;
+        let (mut ys, degraded) = match tenant.delta() {
+            // a delta tenant serves base + pending overlay through its
+            // engine (which bypasses the fault harness — see crate::delta)
+            Some(eng) => (dispatch::catch_internal(|| eng.execute(&xs, registry.sharded()))?, false),
+            None => dispatch::catch_internal(|| Ok(entry.execute(xs, registry.sharded())))?,
+        };
         tenant.record_served(n, entry.nnz());
         Ok(if batched {
             ("ys", Json::Arr(ys.into_iter().map(num_arr).collect()), degraded)
@@ -383,8 +407,11 @@ fn serve_request(
     outcome
 }
 
-/// Admin requests: `{"admin":"stats"}` and
-/// `{"admin":{"reload":{"id":...,"bundle":...}}}`.
+/// Admin requests: `{"admin":"stats"}`,
+/// `{"admin":{"reload":{"id":...,"bundle":...}}}`,
+/// `{"admin":{"inject":...}}` / `{"admin":{"repair":...}}`, and
+/// `{"admin":{"remap":{"id":...}}}` (fold a dynamic tenant's pending
+/// updates into a fresh arena generation).
 fn handle_admin(registry: &DeploymentRegistry, doc: &Json) -> Json {
     let admin = doc.get("admin");
     if admin.as_str() == Some("stats") {
@@ -421,6 +448,32 @@ fn handle_admin(registry: &DeploymentRegistry, doc: &Json) -> Json {
                 ("id", Json::Str(id)),
                 ("generation", Json::Num(entry.generation() as f64)),
                 ("dim", Json::Num(entry.dim() as f64)),
+            ]),
+            Err(e) => error_response(Some(&id), Json::Null, &e),
+        };
+    }
+    let remap = admin.get("remap");
+    if remap != &Json::Null {
+        let id = match remap.get("id").as_str() {
+            Some(s) => s.to_string(),
+            None => {
+                return error_response(
+                    None,
+                    Json::Null,
+                    &Error::Validate("remap names no \"id\"".into()),
+                )
+            }
+        };
+        return match registry.remap(&id) {
+            Ok((entry, report)) => obj(vec![
+                ("admin", Json::Str("remap".into())),
+                ("id", Json::Str(id)),
+                ("generation", Json::Num(entry.generation() as f64)),
+                ("windows", Json::Num(report.windows as f64)),
+                ("reused_windows", Json::Num(report.reused_windows as f64)),
+                ("cache_hit_rate", Json::Num(report.cache_hit_rate)),
+                ("carried_updates", Json::Num(report.carried_updates as f64)),
+                ("wall_s", Json::Num(report.wall_seconds)),
             ]),
             Err(e) => error_response(Some(&id), Json::Null, &e),
         };
@@ -483,7 +536,8 @@ fn handle_admin(registry: &DeploymentRegistry, doc: &Json) -> Json {
         Json::Null,
         &Error::Validate(
             "unknown admin request; use \"stats\", {\"reload\":{\"id\":..,\"bundle\":..}}, \
-             {\"inject\":{\"id\":..,\"bank\":..,\"kind\":..}}, or {\"repair\":{\"id\":..}}"
+             {\"remap\":{\"id\":..}}, {\"inject\":{\"id\":..,\"bank\":..,\"kind\":..}}, \
+             or {\"repair\":{\"id\":..}}"
                 .into(),
         ),
     )
@@ -568,6 +622,7 @@ mod tests {
             queue_depth,
             sharded: true,
             fault,
+            remap_after: 0,
         });
         let dep = DeploymentBuilder::new(
             Source::Matrix {
@@ -726,6 +781,79 @@ mod tests {
         let stats = reg.get("g").unwrap().stats_json();
         assert_eq!(stats.get("served").as_i64(), Some(3));
         assert_eq!(stats.get("batches").as_i64(), Some(1));
+    }
+
+    #[test]
+    fn update_and_remap_over_the_socket_dialect() {
+        let reg = registry_with_tenant(4);
+        let dim = reg.get("g").unwrap().entry().dim();
+        let x: Vec<f64> = (0..dim).map(|i| (i % 11) as f64 * 0.5 - 2.0).collect();
+        let query = obj(vec![
+            ("tenant", Json::Str("g".into())),
+            ("id", Json::Num(9.0)),
+            ("x", num_arr(x.clone())),
+        ]);
+        let before: Vec<f64> = handle_line(&reg, &query.to_string(), now())
+            .get("y")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+
+        // malformed update bodies are typed validate errors
+        let resp =
+            handle_line(&reg, r#"{"tenant":"g","id":1,"update":{"edges":[]}}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
+
+        // one edge update attaches the engine and acks the pending count
+        let resp = handle_line(
+            &reg,
+            r#"{"tenant":"g","id":2,"update":{"edges":[[0,1,1000.5]]}}"#,
+            now(),
+        );
+        assert_eq!(resp.get("tenant").as_str(), Some("g"));
+        assert_eq!(resp.get("update").get("applied").as_i64(), Some(1));
+        assert_eq!(resp.get("update").get("pending").as_i64(), Some(1));
+        assert_eq!(resp.get("update").get("generation").as_i64(), Some(0));
+
+        // queries now route through the overlay: the answer shifts
+        let shifted: Vec<f64> = handle_line(&reg, &query.to_string(), now())
+            .get("y")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_ne!(shifted, before, "a pending update must be visible to queries");
+
+        // the stats surface exposes the per-tenant delta block
+        let stats = handle_line(&reg, r#"{"admin":"stats"}"#, now());
+        let delta = stats.get("stats").get("g").get("delta");
+        assert_eq!(delta.get("pending").as_i64(), Some(1));
+        assert_eq!(delta.get("updates").as_i64(), Some(1));
+
+        // admin remap folds the overlay into a fresh tenant generation
+        let resp = handle_line(&reg, r#"{"admin":{"remap":{"id":"g"}}}"#, now());
+        assert_eq!(resp.get("admin").as_str(), Some("remap"));
+        assert_eq!(resp.get("generation").as_i64(), Some(2));
+        assert!(resp.get("windows").as_i64().unwrap() >= 1);
+        assert_eq!(resp.get("carried_updates").as_i64(), Some(1));
+
+        // post-fold the wire answer equals the new entry's own oracle bits
+        let after: Vec<f64> = handle_line(&reg, &query.to_string(), now())
+            .get("y")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let want = reg.get("g").unwrap().entry().deployment().mvm(&x).unwrap();
+        assert_eq!(after, want, "folded plan must serve its own oracle exactly");
+
+        // malformed remap requests are typed errors
+        let resp = handle_line(&reg, r#"{"admin":{"remap":{}}}"#, now());
+        assert_eq!(resp.get("error").get("kind").as_str(), Some("validate"));
     }
 
     #[test]

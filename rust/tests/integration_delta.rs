@@ -1,0 +1,310 @@
+//! Acceptance propchecks for the dynamic-graph delta subsystem
+//! (`autogmap::delta`): random interleaved insert/delete/reweight/query
+//! streams against flat and composite plans, 1/2/8 workers, both executor
+//! modes, across at least one mid-stream remap — every served answer
+//! bit-identical to a fresh host-CSR oracle of the mutated graph, and
+//! post-remap serving bit-identical to a from-scratch deployment of the
+//! same mutated matrix.
+//!
+//! All matrices, mutations, and query vectors are integer-valued, so every
+//! f64 partial sum is exact and order-independent — comparisons are `==`,
+//! never epsilon.
+
+use autogmap::api::{DeploymentBuilder, Source, Strategy};
+use autogmap::delta::{DeltaEngine, EdgeUpdate};
+use autogmap::graph::{Coo, Csr};
+use autogmap::util::pool::WorkerPool;
+use autogmap::util::propcheck::check;
+use autogmap::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Random symmetric integer-weight banded matrix (always a nonzero
+/// diagonal, so RCM and the grid summary see every node).
+fn integer_banded(rng: &mut Pcg64, dim: usize, band: usize) -> Csr {
+    let mut coo = Coo::new(dim, dim);
+    for i in 0..dim {
+        coo.push(i, i, 1.0 + rng.below(4) as f64);
+        for d in 1..=band {
+            if i + d < dim && rng.below(3) > 0 {
+                coo.push_sym(i, i + d, 1.0 + rng.below(4) as f64);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// The test's own mutable truth for the mutated graph, kept in *original*
+/// node ids — deliberately independent of the engine's internal stores.
+/// Snapshotting to a fresh `Csr` and running `spmv` is the "fresh
+/// host-CSR oracle" the acceptance criteria name.
+struct Oracle {
+    rows: Vec<BTreeMap<usize, f64>>,
+}
+
+impl Oracle {
+    fn from_csr(m: &Csr) -> Oracle {
+        let mut rows = vec![BTreeMap::new(); m.rows];
+        for (r, row) in rows.iter_mut().enumerate() {
+            for (i, &c) in m.row(r).iter().enumerate() {
+                row.insert(c, m.row_vals(r)[i]);
+            }
+        }
+        Oracle { rows }
+    }
+
+    fn set(&mut self, r: usize, c: usize, w: f64) {
+        if w == 0.0 {
+            self.rows[r].remove(&c);
+        } else {
+            self.rows[r].insert(c, w);
+        }
+    }
+
+    fn to_csr(&self) -> Csr {
+        let n = self.rows.len();
+        let mut coo = Coo::new(n, n);
+        for (r, row) in self.rows.iter().enumerate() {
+            for (&c, &v) in row {
+                coo.push(r, c, v);
+            }
+        }
+        coo.to_csr()
+    }
+}
+
+fn deploy(
+    m: Csr,
+    strategy: Strategy,
+    grid: usize,
+    workers: usize,
+) -> Result<autogmap::api::Deployment, String> {
+    DeploymentBuilder::new(
+        Source::Matrix { label: "delta-prop".into(), matrix: m },
+        strategy,
+    )
+    .grid(grid)
+    .banks(2)
+    .workers(workers)
+    .build()
+    .map_err(|e| format!("deploy: {e:#}"))
+}
+
+/// One random mutation batch: inserts, reweights, and deletes (weight 0)
+/// at uniform positions, all integer-valued.
+fn random_updates(rng: &mut Pcg64, dim: usize, count: usize) -> Vec<EdgeUpdate> {
+    (0..count)
+        .map(|_| EdgeUpdate {
+            row: rng.below(dim as u64) as usize,
+            col: rng.below(dim as u64) as usize,
+            weight: rng.below(5) as f64, // 0 deletes, 1..=4 insert/reweight
+        })
+        .collect()
+}
+
+fn integer_vec(rng: &mut Pcg64, dim: usize) -> Vec<f64> {
+    (0..dim).map(|_| rng.below(9) as f64 - 4.0).collect()
+}
+
+/// Drive one interleaved update/query stream against a fresh engine:
+/// every single and batched answer (in the given executor mode) must
+/// equal a fresh host-CSR oracle of the mutated graph, before, across,
+/// and after a mid-stream remap.
+fn drive_stream(
+    rng: &mut Pcg64,
+    m: Csr,
+    strategy: Strategy,
+    grid: usize,
+    workers: usize,
+    sharded: bool,
+) -> Result<(), String> {
+    let dim = m.rows;
+    let dep = deploy(m.clone(), strategy, grid, workers)?;
+    let pool = Arc::new(WorkerPool::new(workers));
+    let eng = DeltaEngine::attach(dep, pool).map_err(|e| format!("attach: {e}"))?;
+    let mut oracle = Oracle::from_csr(&m);
+
+    let steps = 6;
+    let remap_at = 2 + rng.below(2) as usize;
+    for step in 0..steps {
+        let edges = random_updates(rng, dim, 1 + rng.below(6) as usize);
+        let ack = eng
+            .apply(&edges)
+            .map_err(|e| format!("step {step}: apply: {e}"))?;
+        if ack.applied != edges.len() {
+            return Err(format!(
+                "step {step}: ack.applied {} != batch size {}",
+                ack.applied,
+                edges.len()
+            ));
+        }
+        for e in &edges {
+            oracle.set(e.row, e.col, e.weight);
+        }
+
+        if step == remap_at {
+            let gen_before = eng.generation();
+            let report = eng.remap().map_err(|e| format!("step {step}: remap: {e}"))?;
+            if report.generation != gen_before + 1 {
+                return Err(format!(
+                    "step {step}: remap generation {} after {gen_before}",
+                    report.generation
+                ));
+            }
+            if eng.pending() != 0 {
+                return Err(format!(
+                    "step {step}: {} overlay entries survived the fold",
+                    eng.pending()
+                ));
+            }
+        }
+
+        // fresh host-CSR oracle of the mutated graph, rebuilt from scratch
+        let truth = oracle.to_csr();
+        let x = integer_vec(rng, dim);
+        let want = truth.spmv(&x);
+        let got = eng.mvm(&x).map_err(|e| format!("step {step}: mvm: {e}"))?;
+        if got != want {
+            return Err(format!(
+                "step {step}: mvm diverged from the mutated-graph oracle (gen {})",
+                eng.generation()
+            ));
+        }
+        let xs: Vec<Vec<f64>> = (0..3).map(|_| integer_vec(rng, dim)).collect();
+        let wants: Vec<Vec<f64>> = xs.iter().map(|x| truth.spmv(x)).collect();
+        let ys = eng
+            .execute(&xs, sharded)
+            .map_err(|e| format!("step {step}: execute: {e}"))?;
+        if ys != wants {
+            return Err(format!(
+                "step {step}: batched execute (sharded={sharded}, workers={workers}) \
+                 diverged from the mutated-graph oracle"
+            ));
+        }
+    }
+
+    // a final fold, then one more exact answer on the drained engine
+    eng.remap().map_err(|e| format!("final remap: {e}"))?;
+    if eng.pending() != 0 {
+        return Err("final remap left overlay entries".into());
+    }
+    let truth = oracle.to_csr();
+    let x = integer_vec(rng, dim);
+    if eng.mvm(&x).map_err(|e| format!("post-remap mvm: {e}"))? != truth.spmv(&x) {
+        return Err("post-remap mvm diverged from the mutated-graph oracle".into());
+    }
+    if eng.remaps_total() != 2 {
+        return Err(format!("expected 2 remaps, counted {}", eng.remaps_total()));
+    }
+    Ok(())
+}
+
+#[test]
+fn fixed_block_streams_match_the_oracle_at_1_2_and_8_workers() {
+    check("delta_fixed_block_stream", 3, |rng| {
+        let dim = 64;
+        for (i, &workers) in [1usize, 2, 8].iter().enumerate() {
+            let m = integer_banded(rng, dim, 3);
+            let sharded = i % 2 == 0;
+            drive_stream(rng, m, Strategy::FixedBlock { block: 2 }, 8, workers, sharded)
+                .map_err(|e| format!("workers {workers}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn direct_flat_plan_streams_match_the_oracle_and_go_composite_on_remap() {
+    check("delta_direct_stream", 2, |rng| {
+        // 80 nodes at grid 8 -> 10 cells, inside qm7_dyn4's 11-cell
+        // window: builds the flat direct plan; the first remap recompiles
+        // it as a (single-window) composite — both shapes must serve
+        // exactly.
+        let dim = 80;
+        for &(workers, sharded) in &[(1usize, false), (8usize, true)] {
+            let m = integer_banded(rng, dim, 2);
+            drive_stream(
+                rng,
+                m,
+                Strategy::Direct { controller: "qm7_dyn4".into() },
+                8,
+                workers,
+                sharded,
+            )
+            .map_err(|e| format!("workers {workers}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchical_streams_match_the_oracle_across_windowed_remaps() {
+    check("delta_hierarchical_stream", 2, |rng| {
+        // 160 nodes at grid 4 -> 40 cells -> several overlapping
+        // 11-cell controller windows per remap.
+        let dim = 160;
+        for &(workers, sharded) in &[(2usize, true), (8usize, false)] {
+            let m = integer_banded(rng, dim, 2);
+            drive_stream(
+                rng,
+                m,
+                Strategy::Hierarchical { controller: "qm7_dyn4".into(), overlap: 2 },
+                4,
+                workers,
+                sharded,
+            )
+            .map_err(|e| format!("workers {workers}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn post_remap_serving_matches_a_from_scratch_deployment() {
+    check("delta_from_scratch_remap", 3, |rng| {
+        let dim = 96;
+        let m = integer_banded(rng, dim, 3);
+        let strategies: [(Strategy, usize); 2] = [
+            (Strategy::FixedBlock { block: 2 }, 8),
+            (Strategy::Hierarchical { controller: "qm7_dyn4".into(), overlap: 2 }, 4),
+        ];
+        for (strategy, grid) in strategies {
+            let dep = deploy(m.clone(), strategy.clone(), grid, 2)?;
+            let pool = Arc::new(WorkerPool::new(2));
+            let eng = DeltaEngine::attach(dep, pool).map_err(|e| format!("attach: {e}"))?;
+            let mut oracle = Oracle::from_csr(&m);
+            let edges = random_updates(rng, dim, 12);
+            eng.apply(&edges).map_err(|e| format!("apply: {e}"))?;
+            for e in &edges {
+                oracle.set(e.row, e.col, e.weight);
+            }
+            eng.remap().map_err(|e| format!("remap: {e}"))?;
+
+            // a brand-new deployment of the mutated matrix must serve
+            // identically to the folded engine (integer-exact sums make
+            // this independent of window/scheme arrangement)
+            let mutated = oracle.to_csr();
+            let fresh = deploy(mutated.clone(), strategy, grid, 2)?;
+            let x = integer_vec(rng, dim);
+            let want = fresh.mvm(&x).map_err(|e| format!("fresh mvm: {e}"))?;
+            if want != mutated.spmv(&x) {
+                return Err("fresh deployment diverged from its own matrix".into());
+            }
+            if eng.mvm(&x).map_err(|e| format!("engine mvm: {e}"))? != want {
+                return Err("post-remap engine diverged from a from-scratch deployment".into());
+            }
+            for sharded in [false, true] {
+                let ys = eng
+                    .execute(&[x.clone()], sharded)
+                    .map_err(|e| format!("execute: {e}"))?;
+                if ys[0] != want {
+                    return Err(format!(
+                        "post-remap batched answer (sharded={sharded}) diverged \
+                         from a from-scratch deployment"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

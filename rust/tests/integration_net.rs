@@ -47,6 +47,7 @@ fn registry(workers: usize, queue_depth: usize, sharded: bool) -> Arc<Deployment
         queue_depth,
         sharded,
         fault: None,
+        remap_after: 0,
     }))
 }
 
